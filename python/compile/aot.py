@@ -1,0 +1,131 @@
+"""AOT lowering: JAX/Pallas models → HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Artifacts (one per dataset configuration, shapes static):
+
+    sketch_<dataset>.hlo.txt        — the hashing pipeline
+    hamming_<dataset>.hlo.txt       — the vertical Hamming scan
+    meta.json                       — shape/dtype registry for the runtime
+
+Run via ``make artifacts`` (no-op when inputs are unchanged):
+
+    cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Dataset configurations (Table I of the paper; D is the synthetic
+# generator dimensionality — see DESIGN.md §5).
+DATASETS = {
+    "review": dict(b=2, l=16, d=4096, kind="minhash"),
+    "cp": dict(b=2, l=32, d=4096, kind="minhash"),
+    "sift": dict(b=4, l=32, d=128, kind="cws"),
+    "gist": dict(b=8, l=64, d=384, kind="cws"),
+}
+
+# Static batch sizes: the runtime pads the final batch.
+SKETCH_BATCH = 2048
+SCAN_BATCH = 65536
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_sketch(name: str, cfg: dict) -> tuple[str, dict]:
+    n, d, l, b = SKETCH_BATCH, cfg["d"], cfg["l"], cfg["b"]
+    x = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    if cfg["kind"] == "minhash":
+        h = jax.ShapeDtypeStruct((l, d), jnp.int32)
+        fn = functools.partial(model.minhash_sketch, b=b)
+        lowered = jax.jit(fn).lower(x, h)
+        params = ["x:f32", "h:i32"]
+    else:
+        p = jax.ShapeDtypeStruct((l, d), jnp.float32)
+        fn = functools.partial(model.cws_sketch, b=b)
+        lowered = jax.jit(fn).lower(x, p, p, p)
+        params = ["x:f32", "r:f32", "logc:f32", "beta:f32"]
+    meta = dict(
+        name=f"sketch_{name}",
+        kind=f"sketch_{cfg['kind']}",
+        dataset=name,
+        batch=n,
+        d=d,
+        l=l,
+        b=b,
+        params=params,
+        out=f"i32[{n},{l}]",
+    )
+    return to_hlo_text(lowered), meta
+
+
+def lower_hamming(name: str, cfg: dict) -> tuple[str, dict]:
+    n, l, b = SCAN_BATCH, cfg["l"], cfg["b"]
+    w = (l + 31) // 32
+    planes = jax.ShapeDtypeStruct((b, n, w), jnp.int32)
+    q = jax.ShapeDtypeStruct((b, w), jnp.int32)
+    lowered = jax.jit(model.hamming_scan_model).lower(planes, q)
+    meta = dict(
+        name=f"hamming_{name}",
+        kind="hamming_scan",
+        dataset=name,
+        batch=n,
+        l=l,
+        b=b,
+        w=w,
+        params=["planes:i32", "q:i32"],
+        out=f"i32[{n}]",
+    )
+    return to_hlo_text(lowered), meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated dataset subset (debug)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = list(DATASETS) if args.only is None else args.only.split(",")
+    artifacts = []
+    for name in names:
+        cfg = DATASETS[name]
+        for lower in (lower_sketch, lower_hamming):
+            text, meta = lower(name, cfg)
+            path = os.path.join(args.out, f"{meta['name']}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            meta["file"] = f"{meta['name']}.hlo.txt"
+            artifacts.append(meta)
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "meta.json"), "w") as f:
+        json.dump({"artifacts": artifacts, "sketch_batch": SKETCH_BATCH,
+                   "scan_batch": SCAN_BATCH}, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'meta.json')}")
+
+
+if __name__ == "__main__":
+    main()

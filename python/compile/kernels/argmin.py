@@ -1,0 +1,183 @@
+"""Layer-1 Pallas kernel: tiled masked (arg)min reduction.
+
+The compute hot-spot of both similarity-preserving hashes:
+
+* b-bit minhash — ``min_j  H[l, j]``  over active set elements ``j``;
+* 0-bit CWS    — ``argmin_j a[l, j]`` over active dimensions ``j``,
+  with the CWS score prelude fused into the kernel.
+
+Kernel shape: for a batch ``X`` of ``N`` items over ``D`` dimensions and
+``L`` independent hashes, the grid is ``(N/bn, L/bl, D/bd)`` with the
+reduction axis ``D`` innermost. Each step loads an ``(bn, bd)`` tile of
+item data and a ``(bl, bd)`` tile of hash parameters into VMEM, forms the
+``(bn, bl, bd)`` score block, and folds it into running ``(bn, bl)``
+min / argmin carried in the output refs across grid steps (grid-carried
+accumulation — the standard Pallas reduction pattern).
+
+TPU adaptation (DESIGN.md §4): tiles are sized for VMEM (default blocks
+use ~2 MiB); the work is VPU-elementwise + reduction (no MXU); the
+HBM→VMEM schedule that a CUDA implementation would express with
+threadblocks is the BlockSpec index maps below. On this testbed kernels
+run with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); numerics are identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes (see DESIGN.md §Perf for the VMEM budget).
+BN = 256  # items per tile
+BL = 8  # hashes per tile
+BD = 512  # reduction-axis tile
+
+# int32 "+inf" for the minhash domain (hash values are in [0, 2^31)).
+# Plain Python values: Pallas kernels may not capture traced constants.
+I32_INF = 2**31 - 1
+F32_INF = float("inf")
+
+
+def _minhash_kernel(x_ref, h_ref, min_ref):
+    """One grid step of the minhash reduction.
+
+    x_ref:   (BN, BD) f32   — 0/1 activity of the item's set elements
+    h_ref:   (BL, BD) i32   — hash values for BL hash functions
+    min_ref: (BN, BL) i32   — running minima (grid-carried)
+    """
+    first = pl.program_id(2) == 0
+
+    x = x_ref[...]  # (BN, BD)
+    h = h_ref[...]  # (BL, BD)
+    active = x > 0.0
+    # scores (BN, BL, BD): hash value where active, +inf otherwise
+    scores = jnp.where(active[:, None, :], h[None, :, :], jnp.int32(I32_INF))
+    tile_min = jnp.min(scores, axis=2)  # (BN, BL)
+
+    prev = jnp.where(first, jnp.int32(I32_INF), min_ref[...])
+    min_ref[...] = jnp.minimum(prev, tile_min)
+
+
+def _cws_kernel(lnx_ref, active_ref, r_ref, logc_ref, beta_ref, min_ref, arg_ref):
+    """One grid step of the fused CWS score + argmin reduction.
+
+    lnx_ref:    (BN, BD) f32 — ln(x) (0 where inactive)
+    active_ref: (BN, BD) f32 — 1.0 where x > 0
+    r/logc/beta:(BL, BD) f32 — CWS parameter tiles
+    min_ref:    (BN, BL) f32 — running min scores (carried)
+    arg_ref:    (BN, BL) i32 — running argmin global indices (carried)
+    """
+    d_step = pl.program_id(2)
+    first = d_step == 0
+
+    lnx = lnx_ref[...]
+    active = active_ref[...] > 0.0
+    r = r_ref[...]
+    logc = logc_ref[...]
+    beta = beta_ref[...]
+
+    # CWS prelude (fused — never materialized at (N, L, D) in HBM):
+    #   t    = floor(ln x / r + beta)
+    #   ln a = ln c - r * (t + 1 - beta)
+    t = jnp.floor(lnx[:, None, :] / r[None, :, :] + beta[None, :, :])
+    ln_a = logc[None, :, :] - r[None, :, :] * (t + 1.0 - beta[None, :, :])
+    scores = jnp.where(active[:, None, :], ln_a, jnp.float32(F32_INF))  # (BN, BL, BD)
+
+    local_arg = jnp.argmin(scores, axis=2).astype(jnp.int32)  # first on ties
+    local_min = jnp.min(scores, axis=2)
+    global_arg = local_arg + d_step * scores.shape[2]
+
+    prev_min = jnp.where(first, jnp.float32(F32_INF), min_ref[...])
+    prev_arg = jnp.where(first, jnp.int32(0), arg_ref[...])
+    better = local_min < prev_min  # strict: earlier d-tile wins ties
+    min_ref[...] = jnp.where(better, local_min, prev_min)
+    arg_ref[...] = jnp.where(better, global_arg, prev_arg)
+
+
+def _pad_to(x, axis, multiple, value):
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def minhash_min(x, h, *, interpret=True):
+    """Masked min of ``h`` over active elements of each row of ``x``.
+
+    x: f32[N, D] (0/1), h: i32[L, D] → i32[N, L]; rows with no active
+    element yield ``I32_INF`` (callers mask to the all-ones character).
+    """
+    n, d = x.shape
+    l, d2 = h.shape
+    assert d == d2, (d, d2)
+    bn, bl, bd = min(BN, n), min(BL, l), min(BD, d)
+    xp = _pad_to(_pad_to(x, 0, bn, 0.0), 1, bd, 0.0)
+    hp = _pad_to(_pad_to(h, 0, bl, I32_INF), 1, bd, I32_INF)
+    np_, dp = xp.shape
+    lp = hp.shape[0]
+    grid = (np_ // bn, lp // bl, dp // bd)
+    out = pl.pallas_call(
+        _minhash_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bl, bd), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bn, bl), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, lp), jnp.int32),
+        interpret=interpret,
+    )(xp, hp)
+    return out[:n, :l]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cws_argmin(x, r, logc, beta, *, interpret=True):
+    """Fused 0-bit-CWS score + argmin over active dimensions.
+
+    x: f32[N, D] (weights >= 0); r/logc/beta: f32[L, D] → i32[N, L]
+    (argmin index; all-zero rows yield 0).
+    """
+    n, d = x.shape
+    l, d2 = r.shape
+    assert d == d2
+    bn, bl, bd = min(BN, n), min(BL, l), min(BD, d)
+
+    active = (x > 0.0).astype(jnp.float32)
+    lnx = jnp.log(jnp.where(x > 0.0, x, 1.0))
+
+    xp = _pad_to(_pad_to(lnx, 0, bn, 0.0), 1, bd, 0.0)
+    ap = _pad_to(_pad_to(active, 0, bn, 0.0), 1, bd, 0.0)
+    rp = _pad_to(_pad_to(r, 0, bl, 1.0), 1, bd, 1.0)
+    cp = _pad_to(_pad_to(logc, 0, bl, 0.0), 1, bd, 0.0)
+    bp = _pad_to(_pad_to(beta, 0, bl, 0.0), 1, bd, 0.0)
+    np_, dp = xp.shape
+    lp = rp.shape[0]
+    grid = (np_ // bn, lp // bl, dp // bd)
+    _, arg = pl.pallas_call(
+        _cws_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bl, bd), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bl, bd), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bl, bd), lambda i, j, k: (j, k)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, bl), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bn, bl), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, lp), jnp.float32),
+            jax.ShapeDtypeStruct((np_, lp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xp, ap, rp, cp, bp)
+    return arg[:n, :l]

@@ -1,0 +1,59 @@
+"""Layer-1 Pallas kernel: vertical-format batched Hamming scan.
+
+The accelerator-side counterpart of the engine's verification / linear-scan
+path (§V-C of the paper): the database is stored as ``b`` bit-planes of
+``W = ceil(L/32)`` int32 words per sketch; the distance to a query is
+
+    popcount( OR_k ( plane[k] XOR q[k] ) )
+
+summed over the W words. One grid step loads a ``(BN, W)`` tile per plane,
+XORs against the broadcast query words, OR-folds the planes, popcounts.
+Pure VPU work; tiles sized for VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 4096  # sketches per tile
+
+
+def _hamming_kernel(planes_ref, q_ref, out_ref):
+    """planes_ref: (b, BN, W) i32; q_ref: (b, W) i32; out_ref: (BN,) i32."""
+    planes = planes_ref[...]
+    q = q_ref[...]
+    x = planes ^ q[:, None, :]  # (b, BN, W)
+    folded = jnp.bitwise_or.reduce(x, axis=0)  # (BN, W)
+    counts = jax.lax.population_count(folded)  # (BN, W)
+    out_ref[...] = jnp.sum(counts, axis=1, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hamming_scan(planes, q, *, interpret=True):
+    """Distances of every sketch to the query.
+
+    planes: i32[b, N, W] (vertical database), q: i32[b, W] → i32[N].
+    """
+    b, n, w = planes.shape
+    assert q.shape == (b, w), (q.shape, (b, w))
+    bn = min(BN, n)
+    rem = (-n) % bn
+    if rem:
+        planes = jnp.pad(planes, ((0, 0), (0, rem), (0, 0)))
+    np_ = planes.shape[1]
+    out = pl.pallas_call(
+        _hamming_kernel,
+        grid=(np_ // bn,),
+        in_specs=[
+            pl.BlockSpec((b, bn, w), lambda i: (0, i, 0)),
+            pl.BlockSpec((b, w), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.int32),
+        interpret=interpret,
+    )(planes, q)
+    return out[:n]

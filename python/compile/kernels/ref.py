@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the build-time correctness
+contract: pytest asserts kernel == ref on randomized inputs)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+I32_INF = jnp.int32(2**31 - 1)
+
+
+def minhash_min_ref(x, h):
+    """x: f32[N, D] (0/1), h: i32[L, D] → i32[N, L]."""
+    active = x > 0.0  # (N, D)
+    scores = jnp.where(active[:, None, :], h[None, :, :], I32_INF)
+    return jnp.min(scores, axis=2)
+
+
+def cws_argmin_ref(x, r, logc, beta):
+    """x: f32[N, D] (>=0), params f32[L, D] → argmin index i32[N, L]."""
+    active = x > 0.0
+    lnx = jnp.log(jnp.where(active, x, 1.0))
+    t = jnp.floor(lnx[:, None, :] / r[None, :, :] + beta[None, :, :])
+    ln_a = logc[None, :, :] - r[None, :, :] * (t + 1.0 - beta[None, :, :])
+    scores = jnp.where(active[:, None, :], ln_a, jnp.inf)
+    return jnp.argmin(scores, axis=2).astype(jnp.int32)
+
+
+def hamming_scan_ref(planes, q):
+    """planes: i32[b, N, W], q: i32[b, W] → i32[N]."""
+    x = planes ^ q[:, None, :]
+    folded = x[0]
+    for k in range(1, planes.shape[0]):
+        folded = folded | x[k]
+    return jnp.sum(jax.lax.population_count(folded), axis=1, dtype=jnp.int32)
+
+
+def minhash_sketch_ref(x, h, b):
+    """Full b-bit minhash: low b bits of the min hash value."""
+    return minhash_min_ref(x, h) & jnp.int32((1 << b) - 1)
+
+
+def cws_sketch_ref(x, r, logc, beta, b):
+    """Full 0-bit CWS: argmin index mod 2^b."""
+    return cws_argmin_ref(x, r, logc, beta) & jnp.int32((1 << b) - 1)

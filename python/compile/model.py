@@ -1,0 +1,43 @@
+"""Layer-2 JAX models: the similarity-preserving hashing pipelines.
+
+These are the computations the Rust runtime executes through PJRT after
+``aot.py`` lowers them to HLO text. Each composes a Pallas kernel
+(`kernels/`) with the cheap surrounding arithmetic that XLA fuses:
+
+* ``minhash_sketch``  — b-bit minwise hashing: masked min (kernel) + low-b
+  bits. Bit-identical to ``rust/src/sketch/minhash.rs`` given the same
+  `h` tensor (integer min has no rounding).
+* ``cws_sketch``      — 0-bit CWS: fused score+argmin (kernel) + mod 2^b.
+  Matches the native implementation up to f32 `ln` ulp differences
+  (<0.5% of characters; see the cross-implementation test).
+* ``hamming_scan_model`` — vertical Hamming distances of a database batch
+  against one query (the XLA linear-scan baseline / remote verifier).
+
+Python never runs at serving time: these functions exist to be lowered
+once by ``aot.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.argmin import cws_argmin, minhash_min
+from .kernels.hamming import hamming_scan
+
+
+def minhash_sketch(x, h, *, b: int, interpret: bool = True):
+    """x: f32[N, D] 0/1 fingerprints; h: i32[L, D] hashes → i32[N, L]
+    characters in [0, 2^b)."""
+    return minhash_min(x, h, interpret=interpret) & jnp.int32((1 << b) - 1)
+
+
+def cws_sketch(x, r, logc, beta, *, b: int, interpret: bool = True):
+    """x: f32[N, D] non-negative weights; CWS params f32[L, D] →
+    i32[N, L] characters in [0, 2^b)."""
+    arg = cws_argmin(x, r, logc, beta, interpret=interpret)
+    return arg & jnp.int32((1 << b) - 1)
+
+
+def hamming_scan_model(planes, q, *, interpret: bool = True):
+    """planes: i32[b, N, W]; q: i32[b, W] → i32[N] distances."""
+    return hamming_scan(planes, q, interpret=interpret)

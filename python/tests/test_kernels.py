@@ -1,0 +1,133 @@
+"""Kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, alphabet widths and sparsity; fixed-seed numpy
+generates the payloads (hypothesis drives the *configuration* space so
+shrinking stays fast)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.argmin import cws_argmin, minhash_min
+from compile.kernels.hamming import hamming_scan
+
+RNG = np.random.default_rng(12345)
+
+
+def random_minhash_inputs(n, d, l, density):
+    x = (RNG.random((n, d)) < density).astype(np.float32)
+    h = RNG.integers(0, 2**31 - 1, size=(l, d), dtype=np.int32)
+    return jnp.asarray(x), jnp.asarray(h)
+
+
+def random_cws_inputs(n, d, l, density):
+    x = np.where(RNG.random((n, d)) < density, RNG.random((n, d)), 0.0)
+    x = x.astype(np.float32)
+    r = RNG.gamma(2.0, 1.0, size=(l, d)).astype(np.float32)
+    logc = np.log(RNG.gamma(2.0, 1.0, size=(l, d))).astype(np.float32)
+    beta = RNG.random((l, d)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(r), jnp.asarray(logc), jnp.asarray(beta)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 40),
+    d=st.integers(1, 600),
+    l=st.integers(1, 20),
+    density=st.floats(0.0, 1.0),
+)
+def test_minhash_matches_ref(n, d, l, density):
+    x, h = random_minhash_inputs(n, d, l, density)
+    got = minhash_min(x, h)
+    expect = ref.minhash_min_ref(x, h)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 24),
+    d=st.integers(1, 400),
+    l=st.integers(1, 12),
+    density=st.floats(0.0, 1.0),
+)
+def test_cws_matches_ref(n, d, l, density):
+    x, r, logc, beta = random_cws_inputs(n, d, l, density)
+    got = cws_argmin(x, r, logc, beta)
+    expect = ref.cws_argmin_ref(x, r, logc, beta)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4, 8]),
+    n=st.integers(1, 300),
+    w=st.integers(1, 2),
+)
+def test_hamming_matches_ref(b, n, w):
+    planes = jnp.asarray(
+        RNG.integers(-(2**31), 2**31 - 1, size=(b, n, w), dtype=np.int64).astype(
+            np.int32
+        )
+    )
+    q = jnp.asarray(
+        RNG.integers(-(2**31), 2**31 - 1, size=(b, w), dtype=np.int64).astype(np.int32)
+    )
+    got = hamming_scan(planes, q)
+    expect = ref.hamming_scan_ref(planes, q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+def test_minhash_crosses_tile_boundaries():
+    # shapes straddling BN/BL/BD multiples
+    for (n, d, l) in [(257, 513, 9), (256, 512, 8), (1, 1, 1), (300, 1100, 17)]:
+        x, h = random_minhash_inputs(n, d, l, 0.3)
+        got = minhash_min(x, h)
+        expect = ref.minhash_min_ref(x, h)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+def test_cws_tie_break_is_first_index():
+    # Identical params in all dims → score identical → argmin must be the
+    # first active dimension.
+    n, d, l = 4, 50, 6
+    x = np.zeros((n, d), np.float32)
+    x[:, 10] = 2.0
+    x[:, 30] = 2.0
+    r = np.full((l, d), 1.5, np.float32)
+    logc = np.zeros((l, d), np.float32)
+    beta = np.full((l, d), 0.25, np.float32)
+    got = np.asarray(cws_argmin(jnp.asarray(x), jnp.asarray(r), jnp.asarray(logc), jnp.asarray(beta)))
+    assert (got == 10).all()
+
+
+def test_minhash_empty_rows_yield_inf():
+    x = np.zeros((3, 64), np.float32)
+    h = RNG.integers(0, 2**31 - 1, size=(4, 64), dtype=np.int32)
+    got = np.asarray(minhash_min(jnp.asarray(x), jnp.asarray(h)))
+    assert (got == 2**31 - 1).all()
+
+
+def test_hamming_zero_distance_to_self():
+    planes = jnp.asarray(RNG.integers(0, 2**31 - 1, size=(4, 100, 2), dtype=np.int64).astype(np.int32))
+    q = planes[:, 17, :]
+    got = np.asarray(hamming_scan(planes, q))
+    assert got[17] == 0
+
+
+def test_sketch_chars_in_alphabet():
+    from compile import model
+
+    for b in (2, 4):
+        x, h = random_minhash_inputs(10, 128, 8, 0.2)
+        s = np.asarray(model.minhash_sketch(x, h, b=b))
+        assert s.min() >= 0 and s.max() < (1 << b)
+    x, r, logc, beta = random_cws_inputs(10, 64, 8, 0.8)
+    s = np.asarray(model.cws_sketch(x, r, logc, beta, b=4))
+    assert s.min() >= 0 and s.max() < 16
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,68 @@
+"""Layer-2 model tests: full sketch pipelines vs oracles, alphabet
+containment, and statistical sanity of the hashes themselves."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(777)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.sampled_from([1, 2, 4, 8]), n=st.integers(1, 30), d=st.integers(2, 300))
+def test_minhash_sketch_matches_ref(b, n, d):
+    l = 8
+    x = (RNG.random((n, d)) < 0.3).astype(np.float32)
+    h = RNG.integers(0, 2**31 - 1, size=(l, d), dtype=np.int32)
+    got = model.minhash_sketch(jnp.asarray(x), jnp.asarray(h), b=b)
+    expect = ref.minhash_sketch_ref(jnp.asarray(x), jnp.asarray(h), b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+    assert np.asarray(got).max() < (1 << b)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.sampled_from([2, 4, 8]), n=st.integers(1, 20), d=st.integers(2, 200))
+def test_cws_sketch_matches_ref(b, n, d):
+    l = 6
+    x = np.where(RNG.random((n, d)) < 0.7, RNG.random((n, d)), 0.0).astype(np.float32)
+    r = RNG.gamma(2.0, 1.0, size=(l, d)).astype(np.float32)
+    logc = np.log(RNG.gamma(2.0, 1.0, size=(l, d))).astype(np.float32)
+    beta = RNG.random((l, d)).astype(np.float32)
+    got = model.cws_sketch(
+        jnp.asarray(x), jnp.asarray(r), jnp.asarray(logc), jnp.asarray(beta), b=b
+    )
+    expect = ref.cws_sketch_ref(
+        jnp.asarray(x), jnp.asarray(r), jnp.asarray(logc), jnp.asarray(beta), b
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+def test_minhash_collision_tracks_jaccard():
+    """The sketch must actually approximate Jaccard similarity —
+    the end-to-end statistical contract of the hashing layer."""
+    d, l, b = 1000, 512, 2
+    h = RNG.integers(0, 2**31 - 1, size=(l, d), dtype=np.int32)
+    base = RNG.permutation(d)[:400]
+    a_idx, b_idx = base[:300], base[100:400]  # |∩|=200, |∪|=400 → J=0.5
+    xa = np.zeros((1, d), np.float32)
+    xb = np.zeros((1, d), np.float32)
+    xa[0, a_idx] = 1
+    xb[0, b_idx] = 1
+    sa = np.asarray(model.minhash_sketch(jnp.asarray(xa), jnp.asarray(h), b=b))[0]
+    sb = np.asarray(model.minhash_sketch(jnp.asarray(xb), jnp.asarray(h), b=b))[0]
+    coll = float((sa == sb).mean())
+    expect = 0.5 + 0.5 / (1 << b)  # J + (1-J)/2^b
+    assert abs(coll - expect) < 0.08, (coll, expect)
+
+
+def test_hamming_model_self_distance():
+    planes = jnp.asarray(
+        RNG.integers(0, 2**31 - 1, size=(4, 50, 1), dtype=np.int64).astype(np.int32)
+    )
+    d = np.asarray(model.hamming_scan_model(planes, planes[:, 3, :]))
+    assert d[3] == 0
+    assert (d >= 0).all()

@@ -1,0 +1,97 @@
+//! Ablation of bST's design choices (DESIGN.md §1):
+//!
+//! * the **dense layer** (implicit complete trie) on/off;
+//! * the **sparse layer** position: λ sweep + no-collapse (`ls = L`);
+//! * the adaptive **TABLE/LIST** middle selection vs forcing either.
+//!
+//! Each variant reports search time across τ and structure size — showing
+//! *why* each layer earns its place (the paper argues this qualitatively;
+//! this bench quantifies it on the CP-like workload).
+//!
+//! Run: `cargo bench --bench ablation_bst` (env `BST_SCALE`, default 0.1).
+
+use bst::data::{generate_workload, Dataset, GenConfig};
+use bst::trie::bst::{BstConfig, BstTrie, MiddleRepr};
+use bst::trie::{SketchTrie, SortedSketches};
+use bst::util::timer::{sink, Timer};
+
+fn main() {
+    let scale: f64 = std::env::var("BST_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1);
+    let ds = Dataset::Cp;
+    let cfg = GenConfig::for_dataset(ds, scale, 42, 8);
+    let w = generate_workload(ds, &cfg);
+    let ss = SortedSketches::build(&w.sketches);
+    let n_q = 100.min(w.queries.len());
+    println!(
+        "# ablation_bst — {} n={} distinct={} (scale={scale})",
+        ds.name(),
+        w.sketches.n(),
+        ss.n_distinct()
+    );
+
+    let variants: Vec<(String, BstConfig)> = vec![
+        ("default (λ=0.5, adaptive)".into(), BstConfig::default()),
+        (
+            "no dense layer (lm=0)".into(),
+            BstConfig { lm: Some(0), ..Default::default() },
+        ),
+        (
+            "no sparse collapse (ls=L)".into(),
+            BstConfig { ls: Some(w.sketches.l()), ..Default::default() },
+        ),
+        (
+            "all-TABLE middle".into(),
+            BstConfig { force_repr: Some(MiddleRepr::Table), ..Default::default() },
+        ),
+        (
+            "all-LIST middle".into(),
+            BstConfig { force_repr: Some(MiddleRepr::List), ..Default::default() },
+        ),
+        ("λ=0.1 (early collapse)".into(), BstConfig { lambda: 0.1, ..Default::default() }),
+        ("λ=0.9 (late collapse)".into(), BstConfig { lambda: 0.9, ..Default::default() }),
+    ];
+
+    println!(
+        "\n{:28} {:>8} {:>8} {:>8} {:>10} {:>6}",
+        "variant", "tau=1", "tau=3", "tau=5", "space KiB", "layers"
+    );
+    // correctness pin: all variants must agree with the default
+    let default_trie = BstTrie::build(&ss, BstConfig::default());
+    let mut reference: Vec<Vec<u32>> = Vec::new();
+    for q in w.queries.iter().take(n_q) {
+        let mut r = default_trie.search(q, 3);
+        r.sort();
+        reference.push(r);
+    }
+
+    for (name, cfg) in variants {
+        let trie = BstTrie::build(&ss, cfg);
+        for (qi, q) in w.queries.iter().take(n_q).enumerate() {
+            let mut r = trie.search(q, 3);
+            r.sort();
+            assert_eq!(r, reference[qi], "variant '{name}' diverges");
+        }
+        let mut times = Vec::new();
+        for tau in [1usize, 3, 5] {
+            let t = Timer::start();
+            let mut acc = 0usize;
+            for q in w.queries.iter().take(n_q) {
+                acc += trie.search(q, tau).len();
+            }
+            sink(acc);
+            times.push(t.elapsed_ms() / n_q as f64);
+        }
+        println!(
+            "{:28} {:>8.3} {:>8.3} {:>8.3} {:>10.0} {:>6}",
+            name,
+            times[0],
+            times[1],
+            times[2],
+            trie.heap_bytes() as f64 / 1024.0,
+            trie.layer_string().len()
+        );
+    }
+}

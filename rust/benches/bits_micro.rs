@@ -1,0 +1,93 @@
+//! Micro-benchmarks of the succinct substrate: rank, select, in-window
+//! bit scans — the inner loops of every `children()` call.
+//!
+//! Run: `cargo bench --bench bits_micro`
+
+use bst::bits::rsvec::SelectMode;
+use bst::bits::{BitVec, RsBitVec};
+use bst::util::timer::{measure, sink};
+use bst::util::Rng;
+use std::time::Duration;
+
+fn bench(name: &str, iters: usize, f: impl FnMut()) {
+    let mut stats = measure(iters, Duration::from_millis(300), f);
+    println!(
+        "{name:40} mean {:>10.1} ns   p50 {:>10.1} ns   (n={})",
+        stats.mean() * 1000.0,
+        stats.p50() * 1000.0,
+        stats.len()
+    );
+}
+
+fn main() {
+    println!("# bits_micro — rank/select substrate");
+    let n = 8 << 20; // 8 Mi bits
+    let mut rng = Rng::new(1);
+    let bv: BitVec = (0..n).map(|_| rng.f64() < 0.5).collect();
+    let rs = RsBitVec::new(bv, SelectMode::Both);
+    let ones = rs.count_ones();
+
+    // batches of 1024 queries per iteration to dominate loop overhead
+    let positions: Vec<usize> = (0..1024).map(|_| rng.below_usize(n)).collect();
+    let ks: Vec<usize> = (0..1024).map(|_| rng.below_usize(ones)).collect();
+
+    bench("rank1 x1024 (random)", 50, || {
+        let mut acc = 0usize;
+        for &p in &positions {
+            acc = acc.wrapping_add(rs.rank1(p));
+        }
+        sink(acc);
+    });
+
+    bench("select1 x1024 (random)", 50, || {
+        let mut acc = 0usize;
+        for &k in &ks {
+            acc = acc.wrapping_add(rs.select1(k));
+        }
+        sink(acc);
+    });
+
+    bench("select0 x1024 (random)", 50, || {
+        let mut acc = 0usize;
+        for &k in &ks {
+            acc = acc.wrapping_add(rs.select0(k.min(n - ones - 1)));
+        }
+        sink(acc);
+    });
+
+    // TABLE-window style: rank + scan of an aligned 16-bit window
+    bench("table children() x1024 (b=4)", 50, || {
+        let mut acc = 0usize;
+        for &p in &positions {
+            let start = p & !15;
+            let base = rs.rank1(start);
+            let mut w = rs.get_bits(start, 16);
+            let mut child = base;
+            while w != 0 {
+                acc = acc.wrapping_add(child + w.trailing_zeros() as usize);
+                child += 1;
+                w &= w - 1;
+            }
+        }
+        sink(acc);
+    });
+
+    // sparse-density select (every ~4096th bit set)
+    let mut sparse = BitVec::zeros(n);
+    let mut i = 0usize;
+    while i < n {
+        sparse.set(i);
+        i += 4096;
+    }
+    let rs_sparse = RsBitVec::new(sparse, SelectMode::Ones);
+    let sk: Vec<usize> = (0..1024)
+        .map(|_| rng.below_usize(rs_sparse.count_ones()))
+        .collect();
+    bench("select1 x1024 (sparse 1/4096)", 50, || {
+        let mut acc = 0usize;
+        for &k in &sk {
+            acc = acc.wrapping_add(rs_sparse.select1(k));
+        }
+        sink(acc);
+    });
+}

@@ -1,0 +1,35 @@
+//! Fig. 7 end-to-end bench: the five similarity-search methods on one
+//! dataset (default: review at 0.25 scale; env `BST_DATASET`/`BST_SCALE`).
+//!
+//! Run: `cargo bench --bench fig7_methods`
+
+use bst::data::{generate_workload, Dataset, GenConfig};
+use bst::eval::tables;
+use bst::eval::EvalOpts;
+
+fn main() {
+    let ds = std::env::var("BST_DATASET")
+        .ok()
+        .and_then(|s| Dataset::parse(&s))
+        .unwrap_or(Dataset::Review);
+    let scale: f64 = std::env::var("BST_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+    let opts = EvalOpts {
+        scale,
+        queries: 100,
+        sih_cap_secs: 1.0,
+        ..Default::default()
+    };
+    // sanity: workload generates
+    let cfg = GenConfig::for_dataset(ds, scale, opts.seed, opts.threads);
+    let w = generate_workload(ds, &cfg);
+    println!(
+        "# fig7_methods — {} n={} queries={}",
+        ds.name(),
+        w.sketches.n(),
+        opts.queries
+    );
+    print!("{}", tables::fig7(&opts, &[ds]));
+}

@@ -1,0 +1,65 @@
+//! §V-C preliminary experiment: naive vs horizontal-SWAR vs vertical
+//! Hamming distance. The paper reports the vertical format "more than an
+//! order of magnitude faster" than naive for 32-dim 4-bit sketches —
+//! this bench regenerates that comparison (plus every dataset config).
+//!
+//! Run: `cargo bench --bench hamming`
+
+use bst::sketch::{hamming, SketchSet, VerticalSet};
+use bst::util::timer::{measure, sink};
+use bst::util::Rng;
+use std::time::Duration;
+
+fn main() {
+    println!("# hamming — naive vs horizontal vs vertical (§V-C)");
+    for &(b, l, label) in &[
+        (2usize, 16usize, "review (b=2, L=16)"),
+        (2, 32, "cp     (b=2, L=32)"),
+        (4, 32, "sift   (b=4, L=32)  <- paper's preliminary config"),
+        (8, 64, "gist   (b=8, L=64)"),
+    ] {
+        let n = 100_000;
+        let mut rng = Rng::new((b * l) as u64);
+        let rows: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect();
+        let set = SketchSet::from_rows(b, l, &rows);
+        let vert = VerticalSet::from_horizontal(&set);
+        let q = rows[0].clone();
+        let q_packed = set.pack_row(&q);
+        let q_planes = vert.pack_query(&q);
+
+        let naive = measure(10, Duration::from_millis(400), || {
+            let mut acc = 0usize;
+            for row in &rows {
+                acc += hamming::ham_chars(row, &q);
+            }
+            sink(acc);
+        })
+        .mean();
+        let horizontal = measure(10, Duration::from_millis(400), || {
+            let mut acc = 0usize;
+            for i in 0..n {
+                acc += set.ham_packed(i, &q_packed);
+            }
+            sink(acc);
+        })
+        .mean();
+        let vertical = measure(10, Duration::from_millis(400), || {
+            let mut acc = 0usize;
+            for i in 0..n {
+                acc += vert.ham(i, &q_planes);
+            }
+            sink(acc);
+        })
+        .mean();
+
+        println!("\n## {label} — {n} distances");
+        println!("naive      {naive:>10.1} us   1.0x");
+        println!(
+            "horizontal {horizontal:>10.1} us   {:.1}x",
+            naive / horizontal
+        );
+        println!("vertical   {vertical:>10.1} us   {:.1}x", naive / vertical);
+    }
+}

@@ -1,0 +1,117 @@
+//! Ingestion-path bench: native Rust sketching vs the XLA (AOT
+//! JAX/Pallas) artifact, items/second. Documents the L1/L2 cost on this
+//! CPU testbed (interpret-mode Pallas; see DESIGN.md §4 for the TPU
+//! roofline estimate).
+//!
+//! Run: `cargo bench --bench sketching` (needs `make artifacts`).
+
+use bst::data::{generate_dense, generate_sets, Dataset, GenConfig};
+use bst::runtime::Runtime;
+use bst::sketch::{CwsParams, MinhashParams};
+use bst::util::timer::Timer;
+use std::path::Path;
+
+fn main() {
+    let n = 20_000usize;
+    println!("# sketching — native vs XLA artifact ({n} items)");
+
+    let rt = Runtime::load(Path::new("artifacts")).ok();
+    if rt.is_none() {
+        println!("artifacts not built — native path only (run `make artifacts`)");
+    }
+
+    // minhash (review config)
+    {
+        let ds = Dataset::Review;
+        let cfg = GenConfig { n, seed: 1, threads: 8, cluster_size: 24, background: 0.1 };
+        let sets = generate_sets(ds, &cfg);
+        let params = MinhashParams::generate(ds.l(), ds.b(), ds.dim(), 1);
+
+        let t = Timer::start();
+        let native = params.sketch_batch(&sets, 8);
+        let native_s = t.elapsed_ms() / 1000.0;
+        println!(
+            "\nminhash native : {:>10.0} items/s ({:.2}s)",
+            n as f64 / native_s,
+            native_s
+        );
+
+        if let Some(rt) = &rt {
+            let sk = rt.sketcher("review").expect("sketcher");
+            let d = ds.dim();
+            let mut x = vec![0f32; n * d];
+            for (i, s) in sets.iter().enumerate() {
+                for &j in s {
+                    x[i * d + j as usize] = 1.0;
+                }
+            }
+            let t = Timer::start();
+            let via_xla = sk.sketch_minhash(&x, n, &params).expect("sketch");
+            let xla_s = t.elapsed_ms() / 1000.0;
+            println!(
+                "minhash xla    : {:>10.0} items/s ({:.2}s, interpret-mode pallas)",
+                n as f64 / xla_s,
+                xla_s
+            );
+            assert_eq!(native.row(0), via_xla.row(0), "paths must agree");
+        }
+    }
+
+    // CWS (sift config)
+    {
+        let ds = Dataset::Sift;
+        let cfg = GenConfig { n, seed: 2, threads: 8, cluster_size: 24, background: 0.1 };
+        let x = generate_dense(ds, &cfg);
+        let params = CwsParams::generate(ds.l(), ds.b(), ds.dim(), 2);
+
+        let t = Timer::start();
+        let _native = params.sketch_batch(&x, n, 8);
+        let native_s = t.elapsed_ms() / 1000.0;
+        println!(
+            "\ncws native     : {:>10.0} items/s ({:.2}s)",
+            n as f64 / native_s,
+            native_s
+        );
+
+        if let Some(rt) = &rt {
+            let sk = rt.sketcher("sift").expect("sketcher");
+            let t = Timer::start();
+            let _via = sk.sketch_cws(&x, n, &params).expect("sketch");
+            let xla_s = t.elapsed_ms() / 1000.0;
+            println!(
+                "cws xla        : {:>10.0} items/s ({:.2}s, interpret-mode pallas)",
+                n as f64 / xla_s,
+                xla_s
+            );
+        }
+    }
+
+    // XLA hamming scan vs native vertical scan
+    if let Some(rt) = &rt {
+        use bst::sketch::{SketchSet, VerticalSet};
+        use bst::util::Rng;
+        let (b, l, n) = (2usize, 32usize, 200_000usize);
+        let mut rng = Rng::new(3);
+        let mut set = SketchSet::zeros(b, l, n);
+        for i in 0..n {
+            for p in 0..l {
+                set.set_char(i, p, rng.below(4) as u8);
+            }
+        }
+        let vert = VerticalSet::from_horizontal(&set);
+        let q = set.row(0);
+
+        let t = Timer::start();
+        let native_hits = vert.scan(&q, 3).len();
+        let native_ms = t.elapsed_ms();
+
+        let scan = rt.scanner("cp").expect("scanner");
+        let t = Timer::start();
+        let xla_hits = scan.search(&vert, &q, 3).expect("scan").len();
+        let xla_ms = t.elapsed_ms();
+        assert_eq!(native_hits, xla_hits);
+        println!(
+            "\nhamming scan ({n} sketches): native {native_ms:.1} ms, xla {xla_ms:.1} ms"
+        );
+    }
+}

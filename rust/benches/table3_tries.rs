@@ -1,0 +1,64 @@
+//! Table III end-to-end bench: bST vs LOUDS vs FST search time and space
+//! on the synthetic Review and CP workloads (the two the paper runs all
+//! three tries on).
+//!
+//! Run: `cargo bench --bench table3_tries` (env `BST_SCALE` to resize).
+
+use bst::data::{generate_workload, Dataset, GenConfig};
+use bst::index::{SearchIndex, SingleBst, SingleFst, SingleLouds};
+use bst::trie::bst::BstConfig;
+use bst::trie::SketchTrie;
+use bst::util::timer::{sink, Timer};
+
+fn main() {
+    let scale: f64 = std::env::var("BST_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+    println!("# table3_tries — succinct-trie comparison (scale={scale})");
+    for ds in [Dataset::Review, Dataset::Cp] {
+        let cfg = GenConfig::for_dataset(ds, scale, 42, 8);
+        let w = generate_workload(ds, &cfg);
+        let n_q = 100.min(w.queries.len());
+
+        let build = Timer::start();
+        let bst = SingleBst::build(&w.sketches, BstConfig::default());
+        let bst_build = build.elapsed_ms();
+        let build = Timer::start();
+        let louds = SingleLouds::build(&w.sketches);
+        let louds_build = build.elapsed_ms();
+        let build = Timer::start();
+        let fst = SingleFst::build(&w.sketches);
+        let fst_build = build.elapsed_ms();
+
+        println!(
+            "\n## {} n={} ({}; build bst {:.0} ms / louds {:.0} ms / fst {:.0} ms)",
+            ds.name(),
+            w.sketches.n(),
+            bst.trie().describe(),
+            bst_build,
+            louds_build,
+            fst_build
+        );
+        println!(
+            "{:8} {:>9} {:>9} {:>9} {:>9} {:>9} {:>11}",
+            "trie", "tau=1", "tau=2", "tau=3", "tau=4", "tau=5", "space(MiB)"
+        );
+        let run = |name: &str, search: &dyn Fn(&[u8], usize) -> Vec<u32>, bytes: usize| {
+            print!("{name:8}");
+            for tau in 1..=5usize {
+                let t = Timer::start();
+                let mut acc = 0usize;
+                for q in w.queries.iter().take(n_q) {
+                    acc += search(q, tau).len();
+                }
+                sink(acc);
+                print!(" {:>8.3}", t.elapsed_ms() / n_q as f64);
+            }
+            println!("   {:>9.1}", bytes as f64 / (1024.0 * 1024.0));
+        };
+        run("bST", &|q, tau| bst.search(q, tau), bst.heap_bytes());
+        run("LOUDS", &|q, tau| louds.search(q, tau), louds.heap_bytes());
+        run("FST", &|q, tau| fst.search(q, tau), fst.heap_bytes());
+    }
+}

@@ -1,0 +1,258 @@
+//! Plain word-backed bit vector with unaligned multi-bit reads.
+
+use crate::util::HeapSize;
+
+/// A growable bit vector backed by `u64` words (LSB-first within a word).
+#[derive(Debug, Clone, Default)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    pub fn new() -> Self {
+        BitVec::default()
+    }
+
+    /// All-zero bit vector of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        BitVec { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    pub fn with_capacity(bits: usize) -> Self {
+        BitVec { words: Vec::with_capacity(bits.div_ceil(64)), len: 0 }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Underlying words (the last word's high bits beyond `len` are zero).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Appends a single bit.
+    #[inline]
+    pub fn push(&mut self, bit: bool) {
+        let (w, o) = (self.len / 64, self.len % 64);
+        if o == 0 {
+            self.words.push(0);
+        }
+        if bit {
+            self.words[w] |= 1u64 << o;
+        }
+        self.len += 1;
+    }
+
+    /// Appends the low `width` bits of `value` (LSB first). `width <= 64`;
+    /// bits of `value` above `width` are ignored.
+    pub fn push_bits(&mut self, value: u64, width: usize) {
+        debug_assert!(width <= 64);
+        if width == 0 {
+            return;
+        }
+        let value = if width == 64 { value } else { value & ((1u64 << width) - 1) };
+        let (w, o) = (self.len / 64, self.len % 64);
+        if o == 0 {
+            self.words.push(0);
+        }
+        self.words[w] |= value << o;
+        if o + width > 64 {
+            self.words.push(value >> (64 - o));
+        }
+        self.len += width;
+    }
+
+    /// Bit at position `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Sets bit `i` to 1.
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    /// Reads `width <= 64` bits starting at bit offset `pos` (unaligned).
+    /// Bits beyond `len` read as zero (caller may over-read the tail).
+    #[inline]
+    pub fn get_bits(&self, pos: usize, width: usize) -> u64 {
+        debug_assert!(width <= 64);
+        if width == 0 {
+            return 0;
+        }
+        let (w, o) = (pos / 64, pos % 64);
+        let lo = self.words.get(w).copied().unwrap_or(0) >> o;
+        let val = if o + width > 64 {
+            lo | (self.words.get(w + 1).copied().unwrap_or(0) << (64 - o))
+        } else {
+            lo
+        };
+        if width == 64 {
+            val
+        } else {
+            val & ((1u64 << width) - 1)
+        }
+    }
+
+    /// Total number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Iterates positions of set bits.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let tz = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + tz)
+                }
+            })
+        })
+    }
+
+    /// Number of set bits in `[0, i)` computed by scanning — used only for
+    /// testing and tiny vectors; real queries go through [`super::RsBitVec`].
+    pub fn rank1_slow(&self, i: usize) -> usize {
+        debug_assert!(i <= self.len);
+        let (w, o) = (i / 64, i % 64);
+        let mut r: usize = self.words[..w].iter().map(|x| x.count_ones() as usize).sum();
+        if o > 0 {
+            r += (self.words[w] & ((1u64 << o) - 1)).count_ones() as usize;
+        }
+        r
+    }
+}
+
+impl HeapSize for BitVec {
+    fn heap_bytes(&self) -> usize {
+        self.words.heap_bytes()
+    }
+}
+
+impl FromIterator<bool> for BitVec {
+    fn from_iter<I: IntoIterator<Item = bool>>(iter: I) -> Self {
+        let mut bv = BitVec::new();
+        for b in iter {
+            bv.push(b);
+        }
+        bv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn push_get_roundtrip() {
+        let mut bv = BitVec::new();
+        let pattern = [true, false, true, true, false, false, true];
+        for _ in 0..20 {
+            for &b in &pattern {
+                bv.push(b);
+            }
+        }
+        assert_eq!(bv.len(), 140);
+        for i in 0..bv.len() {
+            assert_eq!(bv.get(i), pattern[i % 7], "bit {i}");
+        }
+    }
+
+    #[test]
+    fn push_bits_matches_push() {
+        let mut rng = Rng::new(1);
+        let mut a = BitVec::new();
+        let mut b = BitVec::new();
+        for _ in 0..500 {
+            let width = rng.below_usize(65);
+            let value = if width == 64 {
+                rng.next_u64()
+            } else if width == 0 {
+                0
+            } else {
+                rng.next_u64() & ((1u64 << width) - 1)
+            };
+            a.push_bits(value, width);
+            for i in 0..width {
+                b.push((value >> i) & 1 == 1);
+            }
+        }
+        assert_eq!(a.len(), b.len());
+        for i in 0..a.len() {
+            assert_eq!(a.get(i), b.get(i), "bit {i}");
+        }
+    }
+
+    #[test]
+    fn get_bits_unaligned() {
+        let mut bv = BitVec::new();
+        let mut rng = Rng::new(2);
+        let vals: Vec<u64> = (0..100).map(|_| rng.next_u64()).collect();
+        for &v in &vals {
+            bv.push_bits(v, 64);
+        }
+        for _ in 0..2000 {
+            let width = 1 + rng.below_usize(64);
+            let pos = rng.below_usize(bv.len() - width);
+            let got = bv.get_bits(pos, width);
+            let mut expect = 0u64;
+            for i in 0..width {
+                if bv.get(pos + i) {
+                    expect |= 1u64 << i;
+                }
+            }
+            assert_eq!(got, expect, "pos={pos} width={width}");
+        }
+    }
+
+    #[test]
+    fn get_bits_tail_overread_is_zero() {
+        let mut bv = BitVec::new();
+        bv.push_bits(u64::MAX, 10);
+        assert_eq!(bv.get_bits(5, 20), 0b11111);
+        assert_eq!(bv.get_bits(70, 10), 0);
+    }
+
+    #[test]
+    fn iter_ones_and_count() {
+        let mut bv = BitVec::zeros(300);
+        let ones = [0usize, 1, 63, 64, 65, 128, 200, 299];
+        for &i in &ones {
+            bv.set(i);
+        }
+        assert_eq!(bv.count_ones(), ones.len());
+        assert_eq!(bv.iter_ones().collect::<Vec<_>>(), ones);
+    }
+
+    #[test]
+    fn rank1_slow_matches() {
+        let mut rng = Rng::new(3);
+        let bv: BitVec = (0..1000).map(|_| rng.f64() < 0.3).collect();
+        let mut expected = 0;
+        for i in 0..=bv.len() {
+            assert_eq!(bv.rank1_slow(i), expected);
+            if i < bv.len() && bv.get(i) {
+                expected += 1;
+            }
+        }
+    }
+}

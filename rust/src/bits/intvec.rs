@@ -1,0 +1,138 @@
+//! Fixed-width packed integer vector.
+//!
+//! Stores `n` integers of `width` bits each contiguously; the LIST label
+//! arrays `C_ℓ` use `width = b`, postings offsets use wider entries.
+
+use super::BitVec;
+use crate::util::HeapSize;
+
+/// Immutable-width, growable packed integer vector.
+#[derive(Debug, Clone)]
+pub struct IntVec {
+    bits: BitVec,
+    width: usize,
+    len: usize,
+}
+
+impl IntVec {
+    /// Creates an empty vector of `width`-bit entries (`1 <= width <= 64`).
+    pub fn new(width: usize) -> Self {
+        assert!((1..=64).contains(&width));
+        IntVec { bits: BitVec::new(), width, len: 0 }
+    }
+
+    /// Smallest width that can hold `max_value`.
+    pub fn width_for(max_value: u64) -> usize {
+        (64 - max_value.leading_zeros() as usize).max(1)
+    }
+
+    pub fn with_capacity(width: usize, n: usize) -> Self {
+        assert!((1..=64).contains(&width));
+        IntVec { bits: BitVec::with_capacity(width * n), width, len: 0 }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Appends `value` (must fit in `width` bits).
+    #[inline]
+    pub fn push(&mut self, value: u64) {
+        debug_assert!(self.width == 64 || value < (1u64 << self.width));
+        self.bits.push_bits(value, self.width);
+        self.len += 1;
+    }
+
+    /// Entry at index `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> u64 {
+        debug_assert!(i < self.len);
+        self.bits.get_bits(i * self.width, self.width)
+    }
+
+    /// Iterates all entries.
+    pub fn iter(&self) -> impl Iterator<Item = u64> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+}
+
+impl HeapSize for IntVec {
+    fn heap_bytes(&self) -> usize {
+        self.bits.heap_bytes()
+    }
+}
+
+impl FromIterator<u64> for IntVec {
+    /// Builds with the minimal width for the maximum element (two passes).
+    fn from_iter<I: IntoIterator<Item = u64>>(iter: I) -> Self {
+        let items: Vec<u64> = iter.into_iter().collect();
+        let width = IntVec::width_for(items.iter().copied().max().unwrap_or(0));
+        let mut iv = IntVec::with_capacity(width, items.len());
+        for x in items {
+            iv.push(x);
+        }
+        iv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        let mut rng = Rng::new(5);
+        for width in 1..=64usize {
+            let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+            let vals: Vec<u64> = (0..200).map(|_| rng.next_u64() & mask).collect();
+            let mut iv = IntVec::new(width);
+            for &v in &vals {
+                iv.push(v);
+            }
+            assert_eq!(iv.len(), 200);
+            for (i, &v) in vals.iter().enumerate() {
+                assert_eq!(iv.get(i), v, "width={width} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn width_for_values() {
+        assert_eq!(IntVec::width_for(0), 1);
+        assert_eq!(IntVec::width_for(1), 1);
+        assert_eq!(IntVec::width_for(2), 2);
+        assert_eq!(IntVec::width_for(3), 2);
+        assert_eq!(IntVec::width_for(255), 8);
+        assert_eq!(IntVec::width_for(256), 9);
+        assert_eq!(IntVec::width_for(u64::MAX), 64);
+    }
+
+    #[test]
+    fn from_iter_minimal_width() {
+        let iv: IntVec = vec![1u64, 5, 200].into_iter().collect();
+        assert_eq!(iv.width(), 8);
+        assert_eq!(iv.iter().collect::<Vec<_>>(), vec![1, 5, 200]);
+    }
+
+    #[test]
+    fn space_is_compact() {
+        let mut iv = IntVec::with_capacity(2, 1000);
+        for i in 0..1000u64 {
+            iv.push(i % 4);
+        }
+        // 2000 bits ≈ 250 bytes; allow word-granularity slack.
+        assert!(iv.heap_bytes() <= 260 + 8, "heap={}", iv.heap_bytes());
+    }
+}

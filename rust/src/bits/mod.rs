@@ -1,0 +1,20 @@
+//! Succinct bit-vector substrate.
+//!
+//! The paper's bST is built on *rank/select* data structures (Jacobson
+//! 1989); the original implementation used sdsl. This module provides our
+//! own engineered equivalents:
+//!
+//! * [`BitVec`] — growable, word-backed bit vector with unaligned reads.
+//! * [`broadword`] — in-word popcount/select primitives.
+//! * [`RsBitVec`] — rank9-style rank directory + position-sampled select
+//!   (both for 1s and 0s), `O(1)` rank, `O(1)` amortized select.
+//! * [`IntVec`] — fixed-width packed integer vector (edge labels, ids).
+
+pub mod bitvec;
+pub mod broadword;
+pub mod intvec;
+pub mod rsvec;
+
+pub use bitvec::BitVec;
+pub use intvec::IntVec;
+pub use rsvec::RsBitVec;

@@ -1,0 +1,347 @@
+//! Rank/select bit vector.
+//!
+//! Design (space/speed balance chosen for the bST workload, where `rank` is
+//! the hot operation — one per TABLE `children()` — and `select` drives the
+//! LIST / sparse layers):
+//!
+//! * rank: absolute `u32` count per 512-bit block (6.25% overhead), query
+//!   scans at most 7 words with hardware popcount.
+//! * select: every `SELECT_SAMPLE`-th result position is sampled (`u32`),
+//!   queries jump to the sampled block and scan forward block-by-block
+//!   using the rank directory, then finish with broadword in-word select.
+//!
+//! Matches the paper's use of sdsl's `rank_support_v`/`select_support_mcl`:
+//! `O(1)` rank, `O(1)` amortized select, o(n) space.
+
+use super::broadword::select64;
+use super::BitVec;
+use crate::util::HeapSize;
+
+const BLOCK_BITS: usize = 512;
+const WORDS_PER_BLOCK: usize = BLOCK_BITS / 64;
+const SELECT_SAMPLE: usize = 512;
+
+/// Which select directories to build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SelectMode {
+    /// rank only (no select queries).
+    None,
+    /// select over set bits (LIST `B`, sparse `D`).
+    #[default]
+    Ones,
+    /// select over both set and unset bits (LOUDS navigation).
+    Both,
+}
+
+/// Immutable bit vector with rank/select support.
+#[derive(Debug, Clone)]
+pub struct RsBitVec {
+    bits: BitVec,
+    /// Absolute number of ones before each 512-bit block (+ final total).
+    block_ranks: Vec<u32>,
+    /// Sampled positions of every SELECT_SAMPLE-th one.
+    select1_samples: Vec<u32>,
+    /// Sampled positions of every SELECT_SAMPLE-th zero.
+    select0_samples: Vec<u32>,
+    ones: usize,
+}
+
+impl RsBitVec {
+    /// Builds the directories over `bits`.
+    pub fn new(bits: BitVec, mode: SelectMode) -> Self {
+        assert!(
+            bits.len() < u32::MAX as usize,
+            "RsBitVec supports < 2^32 bits per vector"
+        );
+        let words = bits.words();
+        let n_blocks = bits.len().div_ceil(BLOCK_BITS);
+        let mut block_ranks = Vec::with_capacity(n_blocks + 1);
+        let mut acc: u32 = 0;
+        for b in 0..n_blocks {
+            block_ranks.push(acc);
+            let lo = b * WORDS_PER_BLOCK;
+            let hi = (lo + WORDS_PER_BLOCK).min(words.len());
+            for &w in &words[lo..hi] {
+                acc += w.count_ones();
+            }
+        }
+        block_ranks.push(acc);
+        let ones = acc as usize;
+
+        let mut select1_samples = Vec::new();
+        let mut select0_samples = Vec::new();
+        if mode != SelectMode::None {
+            select1_samples = Self::sample_positions(&bits, true);
+            if mode == SelectMode::Both {
+                select0_samples = Self::sample_positions(&bits, false);
+            }
+        }
+        RsBitVec { bits, block_ranks, select1_samples, select0_samples, ones }
+    }
+
+    fn sample_positions(bits: &BitVec, ones: bool) -> Vec<u32> {
+        let mut samples = Vec::new();
+        let mut count = 0usize;
+        for (wi, &word) in bits.words().iter().enumerate() {
+            let mut w = if ones { word } else { !word };
+            // Mask tail bits of the final word when sampling zeros.
+            if !ones && (wi + 1) * 64 > bits.len() {
+                let valid = bits.len() - wi * 64;
+                if valid < 64 {
+                    w &= (1u64 << valid) - 1;
+                }
+            }
+            while w != 0 {
+                let tz = w.trailing_zeros() as usize;
+                if count % SELECT_SAMPLE == 0 {
+                    samples.push((wi * 64 + tz) as u32);
+                }
+                count += 1;
+                w &= w - 1;
+            }
+        }
+        samples
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.bits.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.bits.is_empty()
+    }
+
+    /// Total set bits.
+    #[inline]
+    pub fn count_ones(&self) -> usize {
+        self.ones
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        self.bits.get(i)
+    }
+
+    /// Raw words (for windowed scans in the TABLE representation).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        self.bits.words()
+    }
+
+    /// Unaligned multi-bit read.
+    #[inline]
+    pub fn get_bits(&self, pos: usize, width: usize) -> u64 {
+        self.bits.get_bits(pos, width)
+    }
+
+    /// Number of 1s in `[0, i)`.
+    #[inline]
+    pub fn rank1(&self, i: usize) -> usize {
+        debug_assert!(i <= self.len());
+        let block = i / BLOCK_BITS;
+        let mut r = self.block_ranks[block] as usize;
+        let words = self.bits.words();
+        let first_word = block * WORDS_PER_BLOCK;
+        let target_word = i / 64;
+        for &w in &words[first_word..target_word] {
+            r += w.count_ones() as usize;
+        }
+        let o = i % 64;
+        if o > 0 {
+            r += (words[target_word] & ((1u64 << o) - 1)).count_ones() as usize;
+        }
+        r
+    }
+
+    /// Number of 0s in `[0, i)`.
+    #[inline]
+    pub fn rank0(&self, i: usize) -> usize {
+        i - self.rank1(i)
+    }
+
+    /// Position of the `k`-th (0-based) set bit. `k < count_ones()`.
+    pub fn select1(&self, k: usize) -> usize {
+        debug_assert!(k < self.ones, "select1 k={k} ones={}", self.ones);
+        debug_assert!(!self.select1_samples.is_empty(), "select not enabled");
+        // Bracket the block between the surrounding samples, then binary
+        // search the rank directory (linear walks were ~60x slower on
+        // 1/4096-density vectors; EXPERIMENTS.md §Perf).
+        let si = k / SELECT_SAMPLE;
+        let mut lo = self.select1_samples[si] as usize / BLOCK_BITS;
+        let mut hi = if si + 1 < self.select1_samples.len() {
+            self.select1_samples[si + 1] as usize / BLOCK_BITS + 1
+        } else {
+            self.block_ranks.len() - 1
+        };
+        // invariant: block_ranks[lo] <= k < block_ranks[hi]
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if self.block_ranks[mid] as usize <= k {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let block = lo;
+        let mut remaining = k - self.block_ranks[block] as usize;
+        let words = self.bits.words();
+        let lo = block * WORDS_PER_BLOCK;
+        let hi = (lo + WORDS_PER_BLOCK).min(words.len());
+        for wi in lo..hi {
+            let c = words[wi].count_ones() as usize;
+            if remaining < c {
+                return wi * 64 + select64(words[wi], remaining as u32) as usize;
+            }
+            remaining -= c;
+        }
+        unreachable!("select1: rank directory inconsistent")
+    }
+
+    /// Position of the `k`-th (0-based) unset bit. Requires `SelectMode::Both`.
+    pub fn select0(&self, k: usize) -> usize {
+        let zeros = self.len() - self.ones;
+        debug_assert!(k < zeros, "select0 k={k} zeros={zeros}");
+        debug_assert!(!self.select0_samples.is_empty() || zeros == 0);
+        // zeros before block boundary b = min(b*512, len) - block_ranks[b]
+        let zeros_before = |b: usize| -> usize {
+            (b * BLOCK_BITS).min(self.len()) - self.block_ranks[b] as usize
+        };
+        let si = k / SELECT_SAMPLE;
+        let mut lo = self.select0_samples[si] as usize / BLOCK_BITS;
+        let mut hi = if si + 1 < self.select0_samples.len() {
+            self.select0_samples[si + 1] as usize / BLOCK_BITS + 1
+        } else {
+            self.block_ranks.len() - 1
+        };
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if zeros_before(mid) <= k {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let block = lo;
+        let mut remaining = k - zeros_before(block);
+        let words = self.bits.words();
+        let lo = block * WORDS_PER_BLOCK;
+        let hi = (lo + WORDS_PER_BLOCK).min(words.len());
+        for wi in lo..hi {
+            let inv = !words[wi];
+            let c = inv.count_ones() as usize;
+            if remaining < c {
+                return wi * 64 + select64(inv, remaining as u32) as usize;
+            }
+            remaining -= c;
+        }
+        unreachable!("select0: rank directory inconsistent")
+    }
+}
+
+impl HeapSize for RsBitVec {
+    fn heap_bytes(&self) -> usize {
+        self.bits.heap_bytes()
+            + self.block_ranks.heap_bytes()
+            + self.select1_samples.heap_bytes()
+            + self.select0_samples.heap_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_bv(n: usize, density: f64, seed: u64) -> BitVec {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.f64() < density).collect()
+    }
+
+    #[test]
+    fn rank_matches_slow() {
+        for &density in &[0.01, 0.3, 0.5, 0.9, 0.999] {
+            let bv = random_bv(5000, density, 42);
+            let rs = RsBitVec::new(bv.clone(), SelectMode::None);
+            for i in (0..=5000).step_by(7) {
+                assert_eq!(rs.rank1(i), bv.rank1_slow(i), "i={i} d={density}");
+                assert_eq!(rs.rank0(i), i - bv.rank1_slow(i));
+            }
+        }
+    }
+
+    #[test]
+    fn select1_inverts_rank() {
+        for &density in &[0.02, 0.5, 0.97] {
+            let bv = random_bv(20_000, density, 7);
+            let rs = RsBitVec::new(bv, SelectMode::Ones);
+            for k in (0..rs.count_ones()).step_by(13) {
+                let pos = rs.select1(k);
+                assert!(rs.get(pos), "k={k}");
+                assert_eq!(rs.rank1(pos), k, "k={k} d={density}");
+            }
+        }
+    }
+
+    #[test]
+    fn select0_inverts_rank0() {
+        for &density in &[0.02, 0.5, 0.97] {
+            let bv = random_bv(20_000, density, 9);
+            let rs = RsBitVec::new(bv, SelectMode::Both);
+            let zeros = rs.len() - rs.count_ones();
+            for k in (0..zeros).step_by(13) {
+                let pos = rs.select0(k);
+                assert!(!rs.get(pos), "k={k}");
+                assert_eq!(rs.rank0(pos), k, "k={k} d={density}");
+            }
+        }
+    }
+
+    #[test]
+    fn edge_cases() {
+        // All ones.
+        let bv: BitVec = (0..700).map(|_| true).collect();
+        let rs = RsBitVec::new(bv, SelectMode::Both);
+        assert_eq!(rs.count_ones(), 700);
+        assert_eq!(rs.select1(699), 699);
+        assert_eq!(rs.rank1(700), 700);
+        // All zeros.
+        let bv: BitVec = (0..700).map(|_| false).collect();
+        let rs = RsBitVec::new(bv, SelectMode::Both);
+        assert_eq!(rs.count_ones(), 0);
+        assert_eq!(rs.select0(699), 699);
+        // Single bit at the very end.
+        let mut bv = BitVec::zeros(1025);
+        bv.set(1024);
+        let rs = RsBitVec::new(bv, SelectMode::Ones);
+        assert_eq!(rs.select1(0), 1024);
+        assert_eq!(rs.rank1(1024), 0);
+        assert_eq!(rs.rank1(1025), 1);
+    }
+
+    #[test]
+    fn empty_vector() {
+        let rs = RsBitVec::new(BitVec::new(), SelectMode::Both);
+        assert_eq!(rs.len(), 0);
+        assert_eq!(rs.count_ones(), 0);
+        assert_eq!(rs.rank1(0), 0);
+    }
+
+    #[test]
+    fn sparse_select_crosses_many_blocks() {
+        // ones every 4096 bits: select must skip multiple blocks per query.
+        let mut bv = BitVec::zeros(1 << 18);
+        let mut expected = Vec::new();
+        let mut i = 0;
+        while i < bv.len() {
+            bv.set(i);
+            expected.push(i);
+            i += 4096;
+        }
+        let rs = RsBitVec::new(bv, SelectMode::Ones);
+        for (k, &pos) in expected.iter().enumerate() {
+            assert_eq!(rs.select1(k), pos);
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Dynamic request batcher.
+//!
+//! Connection threads submit queries and block on their reply channel;
+//! the batcher thread drains the queue into batches bounded by
+//! `max_batch` / `max_delay_us` and runs each batch through the engine as
+//! one fan-out round. Under load batches fill instantly (throughput
+//! mode); a lone request waits at most `max_delay_us` (latency mode) —
+//! the standard dynamic-batching contract.
+
+use super::engine::Engine;
+use super::ServeConfig;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One queued request.
+struct Pending {
+    q: Vec<u8>,
+    tau: usize,
+    reply: Sender<Vec<u32>>,
+}
+
+enum Msg {
+    Req(Pending),
+    /// Explicit shutdown: connection threads may still hold submitters
+    /// (blocked on idle sockets), so channel-closure alone cannot signal
+    /// termination — see the deadlock regression test below.
+    Quit,
+}
+
+/// Handle used by connection threads.
+#[derive(Clone)]
+pub struct BatchSubmitter {
+    tx: Sender<Msg>,
+}
+
+impl BatchSubmitter {
+    /// Submits a query and blocks until its result arrives. `None` when
+    /// the batcher has shut down.
+    pub fn search(&self, q: Vec<u8>, tau: usize) -> Option<Vec<u32>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx.send(Msg::Req(Pending { q, tau, reply: reply_tx })).ok()?;
+        reply_rx.recv().ok()
+    }
+}
+
+/// The batcher thread plus its submitter handle.
+pub struct Batcher {
+    submitter: BatchSubmitter,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Batcher {
+    pub fn start(engine: Arc<Engine>, cfg: &ServeConfig) -> Self {
+        let (tx, rx) = channel::<Msg>();
+        let max_batch = cfg.max_batch.max(1);
+        let max_delay = Duration::from_micros(cfg.max_delay_us);
+        let handle = std::thread::Builder::new()
+            .name("bst-batcher".into())
+            .spawn(move || Self::run(engine, rx, max_batch, max_delay))
+            .expect("spawn batcher");
+        Batcher { submitter: BatchSubmitter { tx }, handle: Some(handle) }
+    }
+
+    pub fn submitter(&self) -> BatchSubmitter {
+        self.submitter.clone()
+    }
+
+    fn run(engine: Arc<Engine>, rx: Receiver<Msg>, max_batch: usize, max_delay: Duration) {
+        loop {
+            // Block for the first request (idle: no spinning).
+            let first = match rx.recv() {
+                Ok(Msg::Req(p)) => p,
+                Ok(Msg::Quit) | Err(_) => return,
+            };
+            let mut batch = vec![first];
+            let deadline = Instant::now() + max_delay;
+            let mut quit = false;
+            // Fill until the batch is full or the deadline passes.
+            while batch.len() < max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(Msg::Req(p)) => batch.push(p),
+                    Ok(Msg::Quit) => {
+                        quit = true;
+                        break;
+                    }
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            // Execute the whole batch as one round.
+            let queries: Vec<(Vec<u8>, usize)> =
+                batch.iter().map(|p| (p.q.clone(), p.tau)).collect();
+            let results = engine.search_batch(&queries);
+            for (p, r) in batch.into_iter().zip(results) {
+                let _ = p.reply.send(r);
+            }
+            if quit {
+                return;
+            }
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        // Explicit Quit: outstanding submitter clones in connection
+        // threads must not keep the batcher alive.
+        let _ = self.submitter.tx.send(Msg::Quit);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::ShardIndexKind;
+    use crate::sketch::SketchSet;
+    use crate::trie::bst::BstConfig;
+    use crate::util::Rng;
+
+    fn engine(n: usize) -> Arc<Engine> {
+        let mut rng = Rng::new(7);
+        let rows: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..8).map(|_| rng.below(4) as u8).collect())
+            .collect();
+        let set = SketchSet::from_rows(2, 8, &rows);
+        Arc::new(Engine::build(&set, 2, &ShardIndexKind::Bst(BstConfig::default())))
+    }
+
+    #[test]
+    fn single_request_round_trips() {
+        let eng = engine(200);
+        let cfg = ServeConfig { max_batch: 16, max_delay_us: 100, ..Default::default() };
+        let batcher = Batcher::start(Arc::clone(&eng), &cfg);
+        let sub = batcher.submitter();
+        let q = vec![0u8; 8];
+        let direct = {
+            let mut v = eng.search(&q, 8);
+            v.sort();
+            v
+        };
+        let mut got = sub.search(q, 8).unwrap();
+        got.sort();
+        assert_eq!(got, direct);
+    }
+
+    #[test]
+    fn concurrent_submitters_get_correct_answers() {
+        let eng = engine(500);
+        let cfg = ServeConfig { max_batch: 8, max_delay_us: 500, ..Default::default() };
+        let batcher = Batcher::start(Arc::clone(&eng), &cfg);
+        let mut handles = Vec::new();
+        for t in 0..16 {
+            let sub = batcher.submitter();
+            let eng = Arc::clone(&eng);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(t);
+                for _ in 0..20 {
+                    let q: Vec<u8> = (0..8).map(|_| rng.below(4) as u8).collect();
+                    let tau = rng.below_usize(4);
+                    let mut got = sub.search(q.clone(), tau).unwrap();
+                    got.sort();
+                    let mut expect = eng.search(&q, tau);
+                    expect.sort();
+                    assert_eq!(got, expect);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let batches = eng.metrics().batches.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(batches >= 1);
+    }
+
+    /// Regression: dropping the batcher while submitter clones are still
+    /// held (idle connections) must not deadlock.
+    #[test]
+    fn drop_with_live_submitters_terminates() {
+        let eng = engine(100);
+        let cfg = ServeConfig::default();
+        let batcher = Batcher::start(eng, &cfg);
+        let _held: Vec<BatchSubmitter> = (0..4).map(|_| batcher.submitter()).collect();
+        let t = std::time::Instant::now();
+        drop(batcher); // must return promptly despite `_held`
+        assert!(t.elapsed() < Duration::from_secs(2));
+        // held submitters now observe shutdown
+        assert!(_held[0].search(vec![0; 8], 1).is_none());
+    }
+}

@@ -1,0 +1,40 @@
+//! Serving configuration.
+
+/// Parameters of the query service.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Listen address, e.g. `127.0.0.1:7878`.
+    pub addr: String,
+    /// Number of index shards (each gets its own worker thread).
+    pub shards: usize,
+    /// Dynamic batcher: flush when this many requests are queued…
+    pub max_batch: usize,
+    /// …or when the oldest queued request is this old (microseconds).
+    pub max_delay_us: u64,
+    /// Default Hamming threshold when a request omits `tau`.
+    pub default_tau: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            shards: 4,
+            max_batch: 32,
+            max_delay_us: 200,
+            default_tau: 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_sane() {
+        let c = ServeConfig::default();
+        assert!(c.shards >= 1);
+        assert!(c.max_batch >= 1);
+    }
+}

@@ -1,0 +1,328 @@
+//! Sharded query engine.
+//!
+//! The database is striped into `S` contiguous shards; each shard worker
+//! thread owns one index (any [`SearchIndex`]) over its stripe. A search
+//! fans out to all shards and merges results with the global id offsets.
+//!
+//! Shard workers are persistent (channel-fed) rather than spawned per
+//! query — fan-out latency is two channel hops, and the workers give the
+//! natural place for per-shard pinning or NUMA placement at larger scale.
+
+use super::metrics::Metrics;
+use crate::index::SearchIndex;
+use crate::sketch::SketchSet;
+use crate::trie::bst::BstConfig;
+use crate::util::timer::Timer;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+enum ShardMsg {
+    Search {
+        q: Vec<u8>,
+        tau: usize,
+        reply: Sender<(usize, Vec<u32>)>,
+        shard_no: usize,
+    },
+    Shutdown,
+}
+
+struct Shard {
+    tx: Sender<ShardMsg>,
+    handle: Option<JoinHandle<()>>,
+    offset: u32,
+}
+
+/// Builder: which index each shard uses.
+pub enum ShardIndexKind {
+    /// SI-bST (default).
+    Bst(BstConfig),
+    /// MI-bST with `m` blocks.
+    MultiBst(usize),
+}
+
+/// The sharded engine.
+pub struct Engine {
+    shards: Vec<Shard>,
+    metrics: Arc<Metrics>,
+    l: usize,
+    n: usize,
+    heap_bytes: usize,
+}
+
+impl Engine {
+    /// Stripes `set` over `n_shards` shards and builds per-shard indexes
+    /// in parallel.
+    pub fn build(set: &SketchSet, n_shards: usize, kind: &ShardIndexKind) -> Self {
+        let n = set.n();
+        let n_shards = n_shards.clamp(1, n.max(1));
+        let per = n.div_ceil(n_shards);
+        let metrics = Arc::new(Metrics::new());
+
+        let mut shards = Vec::with_capacity(n_shards);
+        let mut heap_bytes = 0usize;
+        // Build indexes in parallel with scoped threads, then move each
+        // into its worker thread.
+        let stripes: Vec<(u32, SketchSet)> = (0..n_shards)
+            .map(|s| {
+                let lo = s * per;
+                let hi = ((s + 1) * per).min(n);
+                let mut stripe = SketchSet::zeros(set.b(), set.l(), hi - lo);
+                for i in lo..hi {
+                    for p in 0..set.l() {
+                        stripe.set_char(i - lo, p, set.get_char(i, p));
+                    }
+                }
+                (lo as u32, stripe)
+            })
+            .collect();
+
+        let built: Vec<(u32, Box<dyn SearchIndex + Send + Sync>)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = stripes
+                .into_iter()
+                .map(|(offset, stripe)| {
+                    scope.spawn(move || {
+                        let index: Box<dyn SearchIndex + Send + Sync> = match kind {
+                            ShardIndexKind::Bst(cfg) => {
+                                Box::new(crate::index::SingleBst::build(&stripe, *cfg))
+                            }
+                            ShardIndexKind::MultiBst(m) => {
+                                Box::new(crate::index::MultiBst::build(&stripe, *m))
+                            }
+                        };
+                        (offset, index)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard build")).collect()
+        });
+
+        for (offset, index) in built {
+            heap_bytes += index.heap_bytes();
+            let (tx, rx) = channel::<ShardMsg>();
+            let handle = std::thread::Builder::new()
+                .name(format!("bst-shard-{offset}"))
+                .spawn(move || {
+                    while let Ok(msg) = rx.recv() {
+                        match msg {
+                            ShardMsg::Search { q, tau, reply, shard_no } => {
+                                let hits = index.search(&q, tau);
+                                let _ = reply.send((shard_no, hits));
+                            }
+                            ShardMsg::Shutdown => break,
+                        }
+                    }
+                })
+                .expect("spawn shard worker");
+            shards.push(Shard { tx, handle: Some(handle), offset });
+        }
+
+        Engine { shards, metrics, l: set.l(), n, heap_bytes }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn l(&self) -> usize {
+        self.l
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.heap_bytes
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Fans a query out to every shard and merges global ids.
+    pub fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {
+        assert_eq!(q.len(), self.l, "query length mismatch");
+        let timer = Timer::start();
+        let (reply_tx, reply_rx) = channel();
+        for (no, shard) in self.shards.iter().enumerate() {
+            shard
+                .tx
+                .send(ShardMsg::Search {
+                    q: q.to_vec(),
+                    tau,
+                    reply: reply_tx.clone(),
+                    shard_no: no,
+                })
+                .expect("shard worker alive");
+        }
+        drop(reply_tx);
+        let mut out = Vec::new();
+        for (shard_no, hits) in reply_rx {
+            let offset = self.shards[shard_no].offset;
+            out.extend(hits.into_iter().map(|id| id + offset));
+        }
+        self.metrics.record_query(timer.elapsed_us() as u64, out.len());
+        out
+    }
+
+    /// Executes a batch of queries as one pipelined fan-out round (the
+    /// batcher's entry point). All queries are enqueued on every shard
+    /// *before* any result is collected, so the batch completes in
+    /// (slowest shard's queue) time rather than Σ per-query latencies —
+    /// see EXPERIMENTS.md §Perf for the before/after.
+    pub fn search_batch(&self, queries: &[(Vec<u8>, usize)]) -> Vec<Vec<u32>> {
+        self.metrics.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let timer = Timer::start();
+        // Phase 1: fan out everything.
+        let rxs: Vec<_> = queries
+            .iter()
+            .map(|(q, tau)| {
+                let (reply_tx, reply_rx) = channel();
+                for (no, shard) in self.shards.iter().enumerate() {
+                    shard
+                        .tx
+                        .send(ShardMsg::Search {
+                            q: q.clone(),
+                            tau: *tau,
+                            reply: reply_tx.clone(),
+                            shard_no: no,
+                        })
+                        .expect("shard worker alive");
+                }
+                reply_rx
+            })
+            .collect();
+        // Phase 2: collect in request order.
+        let n_shards = self.shards.len();
+        let out: Vec<Vec<u32>> = rxs
+            .into_iter()
+            .map(|rx| {
+                let mut merged = Vec::new();
+                for _ in 0..n_shards {
+                    let (shard_no, hits) = rx.recv().expect("shard reply");
+                    let offset = self.shards[shard_no].offset;
+                    merged.extend(hits.into_iter().map(|id| id + offset));
+                }
+                merged
+            })
+            .collect();
+        let per_query_us = timer.elapsed_us() as u64 / queries.len().max(1) as u64;
+        for r in &out {
+            self.metrics.record_query(per_query_us, r.len());
+        }
+        out
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        for s in &self.shards {
+            let _ = s.tx.send(ShardMsg::Shutdown);
+        }
+        for s in &mut self.shards {
+            if let Some(h) = s.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::hamming::ham_chars;
+    use crate::util::Rng;
+
+    fn rows(n: usize, seed: u64) -> Vec<Vec<u8>> {
+        let mut rng = Rng::new(seed);
+        let centers: Vec<Vec<u8>> = (0..8)
+            .map(|_| (0..16).map(|_| rng.below(4) as u8).collect())
+            .collect();
+        (0..n)
+            .map(|_| {
+                let mut r = centers[rng.below_usize(8)].clone();
+                for _ in 0..rng.below_usize(4) {
+                    let p = rng.below_usize(16);
+                    r[p] = rng.below(4) as u8;
+                }
+                r
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sharded_equals_unsharded() {
+        let rows = rows(2000, 91);
+        let set = SketchSet::from_rows(2, 16, &rows);
+        for n_shards in [1usize, 3, 8] {
+            let engine = Engine::build(&set, n_shards, &ShardIndexKind::Bst(BstConfig::default()));
+            assert_eq!(engine.n_shards(), n_shards);
+            let mut rng = Rng::new(92);
+            for _ in 0..10 {
+                let q = rows[rng.below_usize(rows.len())].clone();
+                for tau in [0usize, 2, 4] {
+                    let mut got = engine.search(&q, tau);
+                    got.sort();
+                    let expect: Vec<u32> = (0..rows.len())
+                        .filter(|&i| ham_chars(&rows[i], &q) <= tau)
+                        .map(|i| i as u32)
+                        .collect();
+                    assert_eq!(got, expect, "shards={n_shards} tau={tau}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multibst_shards_work() {
+        let rows = rows(800, 93);
+        let set = SketchSet::from_rows(2, 16, &rows);
+        let engine = Engine::build(&set, 2, &ShardIndexKind::MultiBst(2));
+        let q = rows[0].clone();
+        let mut got = engine.search(&q, 3);
+        got.sort();
+        let expect: Vec<u32> = (0..rows.len())
+            .filter(|&i| ham_chars(&rows[i], &q) <= 3)
+            .map(|i| i as u32)
+            .collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let rows = rows(300, 94);
+        let set = SketchSet::from_rows(2, 16, &rows);
+        let engine = Engine::build(&set, 2, &ShardIndexKind::Bst(BstConfig::default()));
+        for i in 0..5 {
+            engine.search(&rows[i], 1);
+        }
+        let m = engine.metrics();
+        assert_eq!(m.queries.load(std::sync::atomic::Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn concurrent_searches_are_safe() {
+        let rows = rows(1000, 95);
+        let set = SketchSet::from_rows(2, 16, &rows);
+        let engine = std::sync::Arc::new(Engine::build(
+            &set,
+            4,
+            &ShardIndexKind::Bst(BstConfig::default()),
+        ));
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let eng = std::sync::Arc::clone(&engine);
+            let q = rows[t * 10].clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let hits = eng.search(&q, 2);
+                    assert!(!hits.is_empty()); // at least itself
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Service metrics: lock-free counters and a log-bucketed latency
+//! histogram (p50/p99 without storing samples).
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of histogram buckets: bucket `i` covers `[2^i, 2^{i+1})` µs.
+const BUCKETS: usize = 32;
+
+/// Shared, thread-safe service metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub queries: AtomicU64,
+    pub solutions: AtomicU64,
+    pub batches: AtomicU64,
+    pub errors: AtomicU64,
+    latency_buckets: [AtomicU64; BUCKETS],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    /// Records one query with its latency and solution count.
+    pub fn record_query(&self, latency_us: u64, solutions: usize) {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        self.solutions.fetch_add(solutions as u64, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(latency_us, Ordering::Relaxed);
+        let bucket = (64 - latency_us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.latency_buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate percentile from the histogram (upper bucket bound).
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let total: u64 = self
+            .latency_buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.latency_buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        u64::MAX
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let q = self.queries.load(Ordering::Relaxed);
+        if q == 0 {
+            0.0
+        } else {
+            self.latency_sum_us.load(Ordering::Relaxed) as f64 / q as f64
+        }
+    }
+
+    /// JSON snapshot for the `stats` endpoint.
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("queries", Json::num(self.queries.load(Ordering::Relaxed) as f64)),
+            ("solutions", Json::num(self.solutions.load(Ordering::Relaxed) as f64)),
+            ("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64)),
+            ("errors", Json::num(self.errors.load(Ordering::Relaxed) as f64)),
+            ("mean_latency_us", Json::num(self.mean_latency_us())),
+            ("p50_latency_us", Json::num(self.latency_percentile_us(50.0) as f64)),
+            ("p99_latency_us", Json::num(self.latency_percentile_us(99.0) as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_query(100, 5);
+        m.record_query(200, 1);
+        m.record_query(10_000, 0);
+        assert_eq!(m.queries.load(Ordering::Relaxed), 3);
+        assert_eq!(m.solutions.load(Ordering::Relaxed), 6);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("queries").unwrap().as_usize(), Some(3));
+        assert!(m.mean_latency_us() > 1000.0);
+    }
+
+    #[test]
+    fn percentiles_are_monotone() {
+        let m = Metrics::new();
+        for i in 1..=1000u64 {
+            m.record_query(i * 10, 0);
+        }
+        let p50 = m.latency_percentile_us(50.0);
+        let p99 = m.latency_percentile_us(99.0);
+        assert!(p50 <= p99);
+        assert!(p50 >= 4096, "p50 bucket bound for ~5000us: {p50}");
+    }
+
+    #[test]
+    fn empty_metrics() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_percentile_us(99.0), 0);
+        assert_eq!(m.mean_latency_us(), 0.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! The serving layer: a sharded similarity-search service.
+//!
+//! The paper's contribution is the index; serving it at scale needs the
+//! machinery every retrieval system (vLLM-router-style) carries:
+//!
+//! * [`engine`] — sharded query engine: the database is striped over `S`
+//!   shards, each owning one index (SI-bST by default); a query fans out
+//!   to all shards and merges id sets (ids are globally offset).
+//! * [`batcher`] — dynamic batching: requests queue up to `max_batch` or
+//!   `max_delay`, then execute as one fan-out round (amortizes shard
+//!   wake-ups under load; single requests still cut through on timeout).
+//! * [`server`] — TCP front-end, line-delimited JSON protocol.
+//! * [`metrics`] — atomic counters + log-bucketed latency histogram.
+//! * [`config`] — serving configuration.
+//!
+//! Python is never involved: the engine serves from memory-resident
+//! indexes; ingestion (feature→sketch) ran through the PJRT runtime at
+//! build time.
+
+pub mod batcher;
+pub mod config;
+pub mod engine;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+
+pub use config::ServeConfig;
+pub use engine::Engine;
+pub use metrics::Metrics;

@@ -1,0 +1,112 @@
+//! Wire protocol: line-delimited JSON over TCP.
+//!
+//! Requests:
+//! ```text
+//! {"op":"search","q":[0,1,2,3],"tau":2}
+//! {"op":"stats"}
+//! {"op":"ping"}
+//! {"op":"shutdown"}
+//! ```
+//! Responses (one line each):
+//! ```text
+//! {"ids":[5,17],"latency_us":123}
+//! {"queries":...,"p50_latency_us":...}
+//! {"pong":true}
+//! {"ok":true}
+//! {"error":"..."}
+//! ```
+
+use crate::util::json::Json;
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Search { q: Vec<u8>, tau: Option<usize> },
+    Stats,
+    Ping,
+    Shutdown,
+}
+
+/// Parses one request line.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let v = Json::parse(line.trim()).map_err(|e| e.to_string())?;
+    let op = v
+        .get("op")
+        .and_then(|o| o.as_str())
+        .ok_or_else(|| "missing 'op'".to_string())?;
+    match op {
+        "ping" => Ok(Request::Ping),
+        "stats" => Ok(Request::Stats),
+        "shutdown" => Ok(Request::Shutdown),
+        "search" => {
+            let q = v
+                .get("q")
+                .and_then(|q| q.as_arr())
+                .ok_or_else(|| "search requires 'q' array".to_string())?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .filter(|&f| f.fract() == 0.0 && (0.0..256.0).contains(&f))
+                        .map(|f| f as u8)
+                        .ok_or_else(|| "q entries must be chars 0..256".to_string())
+                })
+                .collect::<Result<Vec<u8>, _>>()?;
+            let tau = v.get("tau").and_then(|t| t.as_usize());
+            Ok(Request::Search { q, tau })
+        }
+        other => Err(format!("unknown op '{other}'")),
+    }
+}
+
+/// Encodes a search response.
+pub fn search_response(ids: &[u32], latency_us: u64) -> String {
+    Json::obj(vec![
+        ("ids", Json::ids(ids)),
+        ("latency_us", Json::num(latency_us as f64)),
+    ])
+    .to_string()
+}
+
+/// Encodes an error response.
+pub fn error_response(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_search() {
+        let r = parse_request(r#"{"op":"search","q":[0,3,1],"tau":2}"#).unwrap();
+        assert_eq!(r, Request::Search { q: vec![0, 3, 1], tau: Some(2) });
+        let r = parse_request(r#"{"op":"search","q":[255]}"#).unwrap();
+        assert_eq!(r, Request::Search { q: vec![255], tau: None });
+    }
+
+    #[test]
+    fn parses_control_ops() {
+        assert_eq!(parse_request(r#"{"op":"ping"}"#).unwrap(), Request::Ping);
+        assert_eq!(parse_request(r#"{"op":"stats"}"#).unwrap(), Request::Stats);
+        assert_eq!(parse_request(r#"{"op":"shutdown"}"#).unwrap(), Request::Shutdown);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"op":"nope"}"#).is_err());
+        assert!(parse_request(r#"{"op":"search"}"#).is_err());
+        assert!(parse_request(r#"{"op":"search","q":[300]}"#).is_err());
+        assert!(parse_request(r#"{"op":"search","q":[1.5]}"#).is_err());
+        assert!(parse_request(r#"{}"#).is_err());
+    }
+
+    #[test]
+    fn responses_are_valid_json() {
+        let s = search_response(&[1, 2, 3], 42);
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(v.get("ids").unwrap().as_arr().unwrap().len(), 3);
+        let e = error_response("bad");
+        assert!(Json::parse(&e).unwrap().get("error").is_some());
+    }
+}

@@ -1,0 +1,135 @@
+//! TCP front-end.
+//!
+//! One thread per connection (sufficient for the benchmark client counts
+//! here; the request path itself is the batcher → sharded engine). The
+//! listener thread accepts until `shutdown` is requested by any client or
+//! the returned [`ServerHandle`] is stopped.
+
+use super::batcher::Batcher;
+use super::engine::Engine;
+use super::protocol::{error_response, parse_request, search_response, Request};
+use super::ServeConfig;
+use crate::util::timer::Timer;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Running server handle; dropping it stops the listener.
+pub struct ServerHandle {
+    /// Bound address (useful when the config asked for port 0).
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn stop(mut self) {
+        self.do_stop();
+    }
+
+    fn do_stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the accept loop
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        if self.handle.is_some() {
+            self.do_stop();
+        }
+    }
+}
+
+/// Starts serving `engine` per `cfg`; returns immediately.
+pub fn serve(engine: Arc<Engine>, cfg: ServeConfig) -> std::io::Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let default_tau = cfg.default_tau;
+
+    let batcher = Batcher::start(Arc::clone(&engine), &cfg);
+
+    let handle = std::thread::Builder::new()
+        .name("bst-listener".into())
+        .spawn(move || {
+            // keep the batcher alive for the server lifetime
+            let batcher = batcher;
+            for stream in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                // Small request/response pairs: Nagle + delayed ACK would
+                // add ~40 ms per round trip (measured; EXPERIMENTS.md §Perf).
+                let _ = stream.set_nodelay(true);
+                let submitter = batcher.submitter();
+                let engine = Arc::clone(&engine);
+                let stop3 = Arc::clone(&stop2);
+                std::thread::spawn(move || {
+                    let _ = handle_conn(stream, submitter, engine, stop3, default_tau);
+                });
+            }
+        })
+        .expect("spawn listener");
+
+    Ok(ServerHandle { addr, stop, handle: Some(handle) })
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    submitter: super::batcher::BatchSubmitter,
+    engine: Arc<Engine>,
+    stop: Arc<AtomicBool>,
+    default_tau: usize,
+) -> std::io::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match parse_request(&line) {
+            Err(e) => {
+                engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
+                error_response(&e)
+            }
+            Ok(Request::Ping) => r#"{"pong":true}"#.to_string(),
+            Ok(Request::Stats) => engine.metrics().snapshot().to_string(),
+            Ok(Request::Shutdown) => {
+                stop.store(true, Ordering::SeqCst);
+                writer.write_all(b"{\"ok\":true}\n")?;
+                // poke the accept loop so it observes the stop flag
+                let _ = TcpStream::connect(writer.local_addr()?);
+                break;
+            }
+            Ok(Request::Search { q, tau }) => {
+                if q.len() != engine.l() {
+                    engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
+                    error_response(&format!(
+                        "query length {} != sketch length {}",
+                        q.len(),
+                        engine.l()
+                    ))
+                } else {
+                    let timer = Timer::start();
+                    match submitter.search(q, tau.unwrap_or(default_tau)) {
+                        Some(ids) => search_response(&ids, timer.elapsed_us() as u64),
+                        None => error_response("engine unavailable"),
+                    }
+                }
+            }
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Binary serialization of sketch databases.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic   u64  = 0x62_53_54_53_4b_45_54_31  ("bSTSKET1")
+//! b, l, n u64 × 3
+//! words   u64 × n·⌈l·b/64⌉
+//! ```
+//! Used by `bst sketch --out` / `bst build --in` so expensive sketching
+//! runs once per dataset and the eval harness reloads from disk.
+
+use crate::sketch::SketchSet;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Result, Write};
+use std::path::Path;
+
+const MAGIC: u64 = 0x6253_5453_4b45_5431;
+
+/// Writes a sketch set to `path`.
+pub fn save_sketches(set: &SketchSet, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    for v in [MAGIC, set.b() as u64, set.l() as u64, set.n() as u64] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for &word in set.raw_words() {
+        w.write_all(&word.to_le_bytes())?;
+    }
+    w.flush()
+}
+
+/// Reads a sketch set from `path`.
+pub fn load_sketches(path: &Path) -> Result<SketchSet> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut buf = [0u8; 8];
+    let mut read_u64 = |r: &mut BufReader<File>| -> Result<u64> {
+        r.read_exact(&mut buf)?;
+        Ok(u64::from_le_bytes(buf))
+    };
+    let magic = read_u64(&mut r)?;
+    if magic != MAGIC {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad magic {magic:#x}: not a bst sketch file"),
+        ));
+    }
+    let b = read_u64(&mut r)? as usize;
+    let l = read_u64(&mut r)? as usize;
+    let n = read_u64(&mut r)? as usize;
+    let wps = (l * b).div_ceil(64);
+    let mut bytes = vec![0u8; n * wps * 8];
+    r.read_exact(&mut bytes)?;
+    let words: Vec<u64> = bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(SketchSet::from_raw(b, l, n, words))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(3);
+        let rows: Vec<Vec<u8>> = (0..100)
+            .map(|_| (0..32).map(|_| rng.below(4) as u8).collect())
+            .collect();
+        let set = SketchSet::from_rows(2, 32, &rows);
+        let dir = std::env::temp_dir().join("bst_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sketches.bin");
+        save_sketches(&set, &path).unwrap();
+        let loaded = load_sketches(&path).unwrap();
+        assert_eq!(loaded.b(), 2);
+        assert_eq!(loaded.l(), 32);
+        assert_eq!(loaded.n(), 100);
+        assert_eq!(loaded.raw_words(), set.raw_words());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("bst_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.bin");
+        std::fs::write(&path, [0u8; 64]).unwrap();
+        assert!(load_sketches(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,347 @@
+//! Synthetic dataset generators standing in for the paper's corpora.
+//!
+//! The paper evaluates on four real datasets (Table I):
+//!
+//! | name   | n             | hashing       | L  | b |
+//! |--------|---------------|---------------|----|---|
+//! | Review | 12,886,488    | b-bit minhash | 16 | 2 |
+//! | CP     | 216,121,626   | b-bit minhash | 32 | 2 |
+//! | SIFT   | 1,000,000,000 | 0-bit CWS     | 32 | 4 |
+//! | GIST   | 79,302,017    | 0-bit CWS     | 64 | 8 |
+//!
+//! Those corpora (Amazon reviews, compound–protein pairs, BIGANN,
+//! 80M tiny images) are not available here, so we synthesize workloads
+//! with the *same structure the index sees*: clustered feature vectors
+//! whose sketches exhibit realistic near-neighbor populations (Table II
+//! reports hundreds-to-thousands of solutions per query — pure uniform
+//! sketches would have none). Each item is a perturbed copy of a cluster
+//! center plus a background of unclustered items; perturbation strength is
+//! drawn per item so query difficulty varies. See DESIGN.md §5.
+//!
+//! Default sizes are scaled down (×`scale` to grow):
+//! Review 200k, CP 400k, SIFT 1M, GIST 500k.
+
+pub mod io;
+
+use crate::sketch::{CwsParams, MinhashParams, SketchSet};
+use crate::util::rng::{Rng, Zipf};
+
+/// The four benchmark dataset families.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    Review,
+    Cp,
+    Sift,
+    Gist,
+}
+
+impl Dataset {
+    pub const ALL: [Dataset; 4] = [Dataset::Review, Dataset::Cp, Dataset::Sift, Dataset::Gist];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::Review => "review",
+            Dataset::Cp => "cp",
+            Dataset::Sift => "sift",
+            Dataset::Gist => "gist",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dataset> {
+        match s.to_ascii_lowercase().as_str() {
+            "review" => Some(Dataset::Review),
+            "cp" => Some(Dataset::Cp),
+            "sift" => Some(Dataset::Sift),
+            "gist" => Some(Dataset::Gist),
+            _ => None,
+        }
+    }
+
+    /// Sketch parameters from Table I.
+    pub fn b(&self) -> usize {
+        match self {
+            Dataset::Review | Dataset::Cp => 2,
+            Dataset::Sift => 4,
+            Dataset::Gist => 8,
+        }
+    }
+
+    pub fn l(&self) -> usize {
+        match self {
+            Dataset::Review => 16,
+            Dataset::Cp | Dataset::Sift => 32,
+            Dataset::Gist => 64,
+        }
+    }
+
+    /// Whether sketching uses minhash (set data) or CWS (dense data).
+    pub fn uses_minhash(&self) -> bool {
+        matches!(self, Dataset::Review | Dataset::Cp)
+    }
+
+    /// Feature dimensionality of the synthetic generator. The paper's
+    /// fingerprints are millions-dimensional; only the hashing kernel sees
+    /// `D`, the index never does, so we use a compact vocabulary.
+    pub fn dim(&self) -> usize {
+        match self {
+            Dataset::Review | Dataset::Cp => 4096,
+            Dataset::Sift => 128,
+            Dataset::Gist => 384,
+        }
+    }
+
+    /// Default database size at `scale = 1.0`.
+    pub fn default_n(&self) -> usize {
+        match self {
+            Dataset::Review => 200_000,
+            Dataset::Cp => 400_000,
+            Dataset::Sift => 1_000_000,
+            Dataset::Gist => 500_000,
+        }
+    }
+
+    /// The paper's full-size n (for extrapolation tables).
+    pub fn paper_n(&self) -> usize {
+        match self {
+            Dataset::Review => 12_886_488,
+            Dataset::Cp => 216_121_626,
+            Dataset::Sift => 1_000_000_000,
+            Dataset::Gist => 79_302_017,
+        }
+    }
+}
+
+/// Generation knobs shared by the set and dense generators.
+#[derive(Debug, Clone)]
+pub struct GenConfig {
+    /// Number of items.
+    pub n: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Number of worker threads for sketching.
+    pub threads: usize,
+    /// Average cluster size (items per center).
+    pub cluster_size: usize,
+    /// Fraction of unclustered background items.
+    pub background: f64,
+}
+
+impl GenConfig {
+    pub fn for_dataset(ds: Dataset, scale: f64, seed: u64, threads: usize) -> Self {
+        GenConfig {
+            n: ((ds.default_n() as f64 * scale) as usize).max(1000),
+            seed,
+            threads: threads.max(1),
+            cluster_size: 24,
+            background: 0.10,
+        }
+    }
+}
+
+/// Generates set fingerprints (present-index lists) for Review/CP-like data:
+/// Zipf-distributed vocabularies, per-item element swaps against a cluster
+/// center set.
+pub fn generate_sets(ds: Dataset, cfg: &GenConfig) -> Vec<Vec<u32>> {
+    assert!(ds.uses_minhash());
+    let d = ds.dim();
+    let mut rng = Rng::new(cfg.seed ^ 0x5e75);
+    let zipf = Zipf::new(d, 1.05);
+    let n_clustered = ((1.0 - cfg.background) * cfg.n as f64) as usize;
+    let n_centers = (n_clustered / cfg.cluster_size).max(1);
+
+    let sample_set = |rng: &mut Rng, size: usize| -> Vec<u32> {
+        let mut set = std::collections::BTreeSet::new();
+        while set.len() < size {
+            set.insert(zipf.sample(rng) as u32);
+        }
+        set.into_iter().collect()
+    };
+
+    // Cluster centers: word sets of 80–160 elements.
+    let centers: Vec<Vec<u32>> = (0..n_centers)
+        .map(|_| {
+            let size = 80 + rng.below_usize(80);
+            sample_set(&mut rng, size)
+        })
+        .collect();
+
+    let mut out = Vec::with_capacity(cfg.n);
+    for i in 0..cfg.n {
+        if i < n_clustered {
+            let center = &centers[i % n_centers];
+            // Swap out a random fraction of the center's elements. The
+            // fourth-power skew makes near-duplicates common (real corpora
+            // are dominated by them — that is what Table II's hundreds of
+            // small-τ solutions reflect) while keeping a long tail of
+            // heavily-edited variants.
+            let u = rng.f64();
+            let swap_frac = 0.5 * u * u * u * u;
+            let mut set: std::collections::BTreeSet<u32> = center
+                .iter()
+                .filter(|_| rng.f64() >= swap_frac)
+                .copied()
+                .collect();
+            let additions = (center.len() as f64 * swap_frac) as usize;
+            while set.len() < center.len().min(set.len() + additions) {
+                set.insert(zipf.sample(&mut rng) as u32);
+            }
+            if set.is_empty() {
+                set.insert(zipf.sample(&mut rng) as u32);
+            }
+            out.push(set.into_iter().collect());
+        } else {
+            let size = 60 + rng.below_usize(120);
+            out.push(sample_set(&mut rng, size));
+        }
+    }
+    out
+}
+
+/// Generates dense non-negative feature vectors (row-major `n × dim`) for
+/// SIFT/GIST-like data: mixture of half-normal cluster centers with
+/// per-item noise of varying strength.
+pub fn generate_dense(ds: Dataset, cfg: &GenConfig) -> Vec<f32> {
+    assert!(!ds.uses_minhash());
+    let d = ds.dim();
+    let mut rng = Rng::new(cfg.seed ^ 0xde5e);
+    let n_clustered = ((1.0 - cfg.background) * cfg.n as f64) as usize;
+    let n_centers = (n_clustered / cfg.cluster_size).max(1);
+    let centers: Vec<f32> = (0..n_centers * d)
+        .map(|_| rng.normal().abs() as f32)
+        .collect();
+
+    let mut out = vec![0f32; cfg.n * d];
+    for i in 0..cfg.n {
+        let row = &mut out[i * d..(i + 1) * d];
+        if i < n_clustered {
+            let c = (i % n_centers) * d;
+            // Fourth-power skew: most items sit very close to their
+            // center (near-duplicate descriptors), few are far.
+            let u = rng.f64() as f32;
+            let sigma = 0.005 + 0.4 * u * u * u * u;
+            for (j, r) in row.iter_mut().enumerate() {
+                *r = (centers[c + j] + sigma * rng.normal() as f32).max(0.0);
+            }
+        } else {
+            for r in row.iter_mut() {
+                *r = rng.normal().abs() as f32;
+            }
+        }
+    }
+    out
+}
+
+/// A fully-sketched dataset plus its query set and hashing parameters.
+pub struct Workload {
+    pub dataset: Dataset,
+    pub sketches: SketchSet,
+    /// Query rows (sampled database members, as in the paper).
+    pub queries: Vec<Vec<u8>>,
+    /// Hashing parameters (kept so the runtime example can re-sketch via XLA).
+    pub minhash: Option<MinhashParams>,
+    pub cws: Option<CwsParams>,
+}
+
+/// Number of queries sampled per dataset (paper: 1,000).
+pub const N_QUERIES: usize = 1000;
+
+/// Generates the complete workload for a dataset: features → sketches →
+/// sampled queries. Deterministic in `cfg.seed`.
+pub fn generate_workload(ds: Dataset, cfg: &GenConfig) -> Workload {
+    let (sketches, minhash, cws) = if ds.uses_minhash() {
+        let params = MinhashParams::generate(ds.l(), ds.b(), ds.dim(), cfg.seed);
+        let sets = generate_sets(ds, cfg);
+        let sketches = params.sketch_batch(&sets, cfg.threads);
+        (sketches, Some(params), None)
+    } else {
+        let params = CwsParams::generate(ds.l(), ds.b(), ds.dim(), cfg.seed);
+        let feats = generate_dense(ds, cfg);
+        let sketches = params.sketch_batch(&feats, cfg.n, cfg.threads);
+        (sketches, None, Some(params))
+    };
+    let mut rng = Rng::new(cfg.seed ^ 0x9e51e5);
+    let n_q = N_QUERIES.min(cfg.n);
+    let queries = rng
+        .sample_indices(cfg.n, n_q)
+        .into_iter()
+        .map(|i| sketches.row(i))
+        .collect();
+    Workload { dataset: ds, sketches, queries, minhash, cws }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(n: usize) -> GenConfig {
+        GenConfig { n, seed: 42, threads: 2, cluster_size: 8, background: 0.1 }
+    }
+
+    #[test]
+    fn dataset_table1_parameters() {
+        assert_eq!(Dataset::Review.b(), 2);
+        assert_eq!(Dataset::Review.l(), 16);
+        assert_eq!(Dataset::Cp.b(), 2);
+        assert_eq!(Dataset::Cp.l(), 32);
+        assert_eq!(Dataset::Sift.b(), 4);
+        assert_eq!(Dataset::Sift.l(), 32);
+        assert_eq!(Dataset::Gist.b(), 8);
+        assert_eq!(Dataset::Gist.l(), 64);
+        assert_eq!(Dataset::parse("SIFT"), Some(Dataset::Sift));
+        assert_eq!(Dataset::parse("nope"), None);
+    }
+
+    #[test]
+    fn sets_are_valid_and_nonempty() {
+        let sets = generate_sets(Dataset::Review, &tiny_cfg(500));
+        assert_eq!(sets.len(), 500);
+        for s in &sets {
+            assert!(!s.is_empty());
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "sorted unique");
+            assert!(s.iter().all(|&j| (j as usize) < Dataset::Review.dim()));
+        }
+    }
+
+    #[test]
+    fn dense_is_nonnegative() {
+        let xs = generate_dense(Dataset::Sift, &tiny_cfg(200));
+        assert_eq!(xs.len(), 200 * 128);
+        assert!(xs.iter().all(|&x| x >= 0.0));
+        assert!(xs.iter().any(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn workload_shape_and_determinism() {
+        let cfg = tiny_cfg(1200);
+        let w1 = generate_workload(Dataset::Review, &cfg);
+        let w2 = generate_workload(Dataset::Review, &cfg);
+        assert_eq!(w1.sketches.n(), 1200);
+        assert_eq!(w1.sketches.l(), 16);
+        assert_eq!(w1.queries.len(), N_QUERIES);
+        assert_eq!(w1.sketches.raw_words(), w2.sketches.raw_words());
+        assert_eq!(w1.queries, w2.queries);
+    }
+
+    #[test]
+    fn clustering_produces_near_neighbors() {
+        // The core requirement: queries must have non-trivial neighbor sets
+        // at small tau (Table II), unlike uniform random sketches.
+        let cfg = tiny_cfg(2000);
+        let w = generate_workload(Dataset::Cp, &cfg);
+        let vert = crate::sketch::VerticalSet::from_horizontal(&w.sketches);
+        let mut total = 0usize;
+        for q in w.queries.iter().take(50) {
+            total += vert.scan(q, 3).len();
+        }
+        // every query matches itself; clustered data must add more.
+        assert!(total > 50 * 2, "avg solutions too small: {}", total as f64 / 50.0);
+    }
+
+    #[test]
+    fn cws_workload_generates() {
+        let cfg = GenConfig { n: 800, seed: 7, threads: 2, cluster_size: 8, background: 0.1 };
+        let w = generate_workload(Dataset::Sift, &cfg);
+        assert_eq!(w.sketches.b(), 4);
+        assert!(w.cws.is_some() && w.minhash.is_none());
+    }
+}

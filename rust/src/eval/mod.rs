@@ -1,0 +1,52 @@
+//! Evaluation harness: regenerates every table and figure of the paper
+//! (§VI + Appendix A) on the synthetic workloads.
+//!
+//! | experiment | runner |
+//! |---|---|
+//! | Table I (datasets)            | [`tables::table1`] |
+//! | Table II (avg #solutions)     | [`tables::table2`] |
+//! | Table III (succinct tries)    | [`tables::table3`] |
+//! | Table IV (space usage)        | [`tables::table4`] |
+//! | Fig. 7 (search time, 5 methods) | [`tables::fig7`] |
+//! | Fig. 8 (cost model)           | [`cost::fig8`] |
+//! | §VI-C m-sweep                 | [`tables::msweep`] |
+//!
+//! Output is Markdown (piped into EXPERIMENTS.md). Absolute numbers are
+//! testbed-specific; the *shapes* (who wins, by what factor, where the
+//! crossovers sit) are the reproduction targets — see EXPERIMENTS.md.
+
+pub mod cost;
+pub mod report;
+pub mod tables;
+
+/// Options shared by the experiment runners.
+#[derive(Debug, Clone)]
+pub struct EvalOpts {
+    /// Dataset scale multiplier (1.0 = DESIGN.md defaults).
+    pub scale: f64,
+    /// Number of queries per (dataset, τ) cell (paper: 1000).
+    pub queries: usize,
+    /// Per-query wall-clock cap for SIH, seconds (paper: 10).
+    pub sih_cap_secs: f64,
+    /// Memory cap in GiB for index construction — indexes whose size
+    /// estimate exceeds it report "OOM" (reproducing the paper's SIFT
+    /// HmSearch cell).
+    pub mem_cap_gib: f64,
+    /// Master seed.
+    pub seed: u64,
+    /// Worker threads for data generation / query timing.
+    pub threads: usize,
+}
+
+impl Default for EvalOpts {
+    fn default() -> Self {
+        EvalOpts {
+            scale: 1.0,
+            queries: 200,
+            sih_cap_secs: 2.0,
+            mem_cap_gib: 8.0,
+            seed: 42,
+            threads: std::thread::available_parallelism().map_or(4, |p| p.get()),
+        }
+    }
+}

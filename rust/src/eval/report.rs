@@ -1,0 +1,109 @@
+//! Markdown table rendering for the experiment reports.
+
+/// A simple Markdown table builder.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>) -> Self {
+        Table { title: title.into(), header: Vec::new(), rows: Vec::new() }
+    }
+
+    pub fn header(&mut self, cols: Vec<String>) -> &mut Self {
+        self.header = cols;
+        self
+    }
+
+    pub fn row(&mut self, cols: Vec<String>) -> &mut Self {
+        debug_assert_eq!(cols.len(), self.header.len(), "row arity");
+        self.rows.push(cols);
+        self
+    }
+
+    /// Renders with column alignment (renders fine in raw terminals too).
+    pub fn render(&self) -> String {
+        
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cols: &[String]| -> String {
+            let cells: Vec<String> = cols
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect();
+            format!("| {} |", cells.join(" | "))
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n\n", self.title));
+        }
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&format!("|-{}-|\n", sep.join("-|-")));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Formats milliseconds compactly (matching the paper's precision).
+pub fn ms(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{x:.0}")
+    } else if x >= 1.0 {
+        format!("{x:.1}")
+    } else if x >= 0.01 {
+        format!("{x:.2}")
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+/// Formats mebibytes.
+pub fn mib_str(bytes: usize) -> String {
+    let m = bytes as f64 / (1024.0 * 1024.0);
+    if m >= 100.0 {
+        format!("{m:.0}")
+    } else if m >= 1.0 {
+        format!("{m:.1}")
+    } else {
+        format!("{m:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new("demo");
+        t.header(vec!["name".into(), "value".into()]);
+        t.row(vec!["x".into(), "1".into()]);
+        t.row(vec!["longer".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("### demo"));
+        assert!(s.contains("| name   | value |"));
+        assert!(s.contains("| longer | 2.5   |"));
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(ms(123.4), "123");
+        assert_eq!(ms(12.34), "12.3");
+        assert_eq!(ms(0.123), "0.12");
+        assert_eq!(ms(0.00123), "0.001");
+        assert_eq!(mib_str(1024 * 1024 * 250), "250");
+        assert_eq!(mib_str(1536 * 1024), "1.5");
+    }
+}

@@ -1,0 +1,397 @@
+//! Experiment runners for Tables I–IV, Figure 7 and the m-sweep.
+
+use super::report::{mib_str, ms, Table};
+use super::EvalOpts;
+use crate::data::{generate_workload, Dataset, GenConfig, Workload};
+use crate::index::{
+    HmSearch, LinearScan, Mih, MultiBst, SearchIndex, Sih, SingleBst, SingleFst, SingleLouds,
+};
+use crate::index::sih::CappedResult;
+use crate::trie::bst::BstConfig;
+use crate::trie::SketchTrie;
+use crate::util::pool::par_chunks;
+use crate::util::timer::Timer;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Thresholds evaluated throughout the paper.
+pub const TAUS: [usize; 5] = [1, 2, 3, 4, 5];
+
+/// Generates (or regenerates) the workload for one dataset.
+pub fn load_workload(ds: Dataset, opts: &EvalOpts) -> Workload {
+    let cfg = GenConfig::for_dataset(ds, opts.scale, opts.seed, opts.threads);
+    generate_workload(ds, &cfg)
+}
+
+/// Mean per-query latency (ms) of `search` over the first `n_q` queries.
+fn time_queries<F: Fn(&[u8]) -> Vec<u32>>(
+    queries: &[Vec<u8>],
+    n_q: usize,
+    search: F,
+) -> (f64, usize) {
+    let qs = &queries[..n_q.min(queries.len())];
+    let solutions = AtomicUsize::new(0);
+    let timer = Timer::start();
+    for q in qs {
+        let hits = search(q);
+        solutions.fetch_add(hits.len(), Ordering::Relaxed);
+    }
+    let total_ms = timer.elapsed_ms();
+    (total_ms / qs.len() as f64, solutions.load(Ordering::Relaxed))
+}
+
+/// Table I: dataset summary (paper parameters + generated sizes).
+pub fn table1(opts: &EvalOpts) -> String {
+    let mut t = Table::new("Table I — datasets (synthetic stand-ins; see DESIGN.md §5)");
+    t.header(vec![
+        "dataset".into(),
+        "hashing".into(),
+        "L".into(),
+        "b".into(),
+        "n (ours)".into(),
+        "n (paper)".into(),
+        "D (ours)".into(),
+    ]);
+    for ds in Dataset::ALL {
+        let n = ((ds.default_n() as f64 * opts.scale) as usize).max(1000);
+        t.row(vec![
+            ds.name().into(),
+            if ds.uses_minhash() { "b-bit minhash".into() } else { "0-bit CWS".into() },
+            ds.l().to_string(),
+            ds.b().to_string(),
+            n.to_string(),
+            ds.paper_n().to_string(),
+            ds.dim().to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// Table II: average number of solutions per τ (linear-scan ground truth).
+pub fn table2(opts: &EvalOpts, datasets: &[Dataset]) -> String {
+    let mut t = Table::new(format!(
+        "Table II — average #solutions over {} queries",
+        opts.queries
+    ));
+    let mut header = vec!["dataset".into()];
+    header.extend(TAUS.iter().map(|tau| format!("tau={tau}")));
+    t.header(header);
+    for &ds in datasets {
+        let w = load_workload(ds, opts);
+        let scan = LinearScan::build(&w.sketches);
+        let n_q = opts.queries.min(w.queries.len());
+        let mut row = vec![ds.name().to_string()];
+        // parallel over queries: accumulate solution counts per tau
+        let totals: Vec<AtomicUsize> = TAUS.iter().map(|_| AtomicUsize::new(0)).collect();
+        par_chunks(n_q, opts.threads, |range| {
+            for qi in range {
+                // one scan at max tau gives all smaller taus for free
+                let qp = scan.vertical().pack_query(&w.queries[qi]);
+                for i in 0..scan.vertical().n() {
+                    let d = scan.vertical().ham(i, &qp);
+                    for (ti, &tau) in TAUS.iter().enumerate() {
+                        if d <= tau {
+                            totals[ti].fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }
+        });
+        for t_acc in &totals {
+            row.push(format!("{:.0}", t_acc.load(Ordering::Relaxed) as f64 / n_q as f64));
+        }
+        t.row(row);
+    }
+    t.render()
+}
+
+/// Table III: succinct-trie comparison (bST vs LOUDS vs FST), single-index.
+pub fn table3(opts: &EvalOpts, datasets: &[Dataset]) -> String {
+    let mut out = String::new();
+    for &ds in datasets {
+        let w = load_workload(ds, opts);
+        let n_q = opts.queries.min(w.queries.len());
+
+        let bst = SingleBst::build(&w.sketches, BstConfig::default());
+        let louds = SingleLouds::build(&w.sketches);
+        let fst = SingleFst::build(&w.sketches);
+
+        let mut t = Table::new(format!(
+            "Table III — {} ({}; {} queries)",
+            ds.name(),
+            bst.trie().describe(),
+            n_q
+        ));
+        let mut header = vec!["trie".into()];
+        header.extend(TAUS.iter().map(|tau| format!("tau={tau} (ms)")));
+        header.push("space (MiB)".into());
+        t.header(header);
+
+        let search_bst = |q: &[u8], tau: usize| bst.search(q, tau);
+        let search_louds = |q: &[u8], tau: usize| louds.search(q, tau);
+        let search_fst = |q: &[u8], tau: usize| fst.search(q, tau);
+        let methods: Vec<(&str, &dyn Fn(&[u8], usize) -> Vec<u32>, usize)> = vec![
+            ("bST", &search_bst, bst.heap_bytes()),
+            ("LOUDS", &search_louds, louds.heap_bytes()),
+            ("FST", &search_fst, fst.heap_bytes()),
+        ];
+        for (name, search, bytes) in methods {
+            let mut row = vec![name.to_string()];
+            for &tau in &TAUS {
+                let (mean_ms, _) = time_queries(&w.queries, n_q, |q| search(q, tau));
+                row.push(ms(mean_ms));
+            }
+            row.push(mib_str(bytes));
+            t.row(row);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
+/// Which multi-index block counts the sweep evaluates (paper: {2,3,4}).
+pub const MS: [usize; 3] = [2, 3, 4];
+
+/// Table IV: space usage of the similarity-search methods.
+pub fn table4(opts: &EvalOpts, datasets: &[Dataset]) -> String {
+    let cap_bytes = (opts.mem_cap_gib * 1024.0 * 1024.0 * 1024.0) as u128;
+    let mut t = Table::new("Table IV — space usage (MiB)");
+    let mut header = vec!["method".into()];
+    header.extend(datasets.iter().map(|d| d.name().to_string()));
+    t.header(header);
+
+    // Build rows method-major like the paper; datasets column-major.
+    let mut cells: Vec<Vec<String>> = Vec::new();
+    let mut labels: Vec<String> = vec![
+        "SI-bST".into(),
+        "MI-bST (m=2)".into(),
+        "SIH".into(),
+        "MIH (m=2)".into(),
+        "MIH (m=3)".into(),
+        "HmSearch (tau=1,2)".into(),
+        "HmSearch (tau=3,4)".into(),
+        "HmSearch (tau=5)".into(),
+    ];
+    for _ in &labels {
+        cells.push(Vec::new());
+    }
+
+    for &ds in datasets {
+        let w = load_workload(ds, opts);
+        let set = &w.sketches;
+        cells[0].push(mib_str(SingleBst::build(set, BstConfig::default()).heap_bytes()));
+        cells[1].push(mib_str(SearchIndex::heap_bytes(&MultiBst::build(set, 2))));
+        cells[2].push(mib_str(SearchIndex::heap_bytes(&Sih::build(set))));
+        cells[3].push(mib_str(SearchIndex::heap_bytes(&Mih::build(set, 2))));
+        cells[4].push(mib_str(SearchIndex::heap_bytes(&Mih::build(set, 3))));
+        for (slot, tau_max) in [(5usize, 2usize), (6, 4), (7, 5)] {
+            let est = HmSearch::estimate_postings(set, tau_max) * 8; // ≥8 B/posting
+            if est > cap_bytes {
+                cells[slot].push(format!("OOM(>{:.0}GiB est)", est as f64 / (1u64 << 30) as f64));
+            } else {
+                cells[slot]
+                    .push(mib_str(SearchIndex::heap_bytes(&HmSearch::build(set, tau_max))));
+            }
+        }
+    }
+    for (label, row) in labels.drain(..).zip(cells) {
+        let mut r = vec![label];
+        r.extend(row);
+        t.row(r);
+    }
+    t.render()
+}
+
+/// Figure 7: average search time of the five methods.
+pub fn fig7(opts: &EvalOpts, datasets: &[Dataset]) -> String {
+    let mut out = String::new();
+    let cap = Duration::from_secs_f64(opts.sih_cap_secs);
+    for &ds in datasets {
+        let w = load_workload(ds, opts);
+        let set = &w.sketches;
+        let n_q = opts.queries.min(w.queries.len());
+
+        let si = SingleBst::build(set, BstConfig::default());
+        let mi: Vec<MultiBst> = MS.iter().map(|&m| MultiBst::build(set, m)).collect();
+        let sih = Sih::build(set);
+        let mih: Vec<Mih> = MS.iter().map(|&m| Mih::build(set, m)).collect();
+
+        let cap_bytes = (opts.mem_cap_gib * 1024.0 * 1024.0 * 1024.0) as u128;
+        let hmsearch: Vec<Option<HmSearch>> = [2usize, 4, 5]
+            .iter()
+            .map(|&tmax| {
+                (HmSearch::estimate_postings(set, tmax) * 8 <= cap_bytes)
+                    .then(|| HmSearch::build(set, tmax))
+            })
+            .collect();
+
+        let mut t = Table::new(format!(
+            "Fig. 7 — {} (avg ms/query over {} queries; SIH capped at {:.0} s)",
+            ds.name(),
+            n_q,
+            opts.sih_cap_secs
+        ));
+        let mut header = vec!["method".into()];
+        header.extend(TAUS.iter().map(|tau| format!("tau={tau}")));
+        t.header(header);
+
+        // SI-bST
+        let mut row = vec!["SI-bST".to_string()];
+        for &tau in &TAUS {
+            let (m, _) = time_queries(&w.queries, n_q, |q| si.search(q, tau));
+            row.push(ms(m));
+        }
+        t.row(row);
+
+        // MI-bST: best m per tau
+        let mut row = vec!["MI-bST (best m)".to_string()];
+        for &tau in &TAUS {
+            let best = mi
+                .iter()
+                .map(|idx| time_queries(&w.queries, n_q, |q| idx.search(q, tau)).0)
+                .fold(f64::INFINITY, f64::min);
+            row.push(ms(best));
+        }
+        t.row(row);
+
+        // SIH with cap
+        let mut row = vec![format!("SIH (cap {:.0}s)", opts.sih_cap_secs)];
+        for &tau in &TAUS {
+            let mut timed_out = false;
+            let timer = Timer::start();
+            let mut done = 0usize;
+            for q in w.queries.iter().take(n_q) {
+                match sih.search_capped(q, tau, cap) {
+                    CappedResult::Done(_) => done += 1,
+                    CappedResult::TimedOut => {
+                        timed_out = true;
+                        break;
+                    }
+                }
+            }
+            if timed_out {
+                row.push(format!(">{:.0}s", opts.sih_cap_secs));
+            } else {
+                row.push(ms(timer.elapsed_ms() / done.max(1) as f64));
+            }
+        }
+        t.row(row);
+
+        // MIH: best m per tau
+        let mut row = vec!["MIH (best m)".to_string()];
+        for &tau in &TAUS {
+            let best = mih
+                .iter()
+                .map(|idx| time_queries(&w.queries, n_q, |q| idx.search(q, tau)).0)
+                .fold(f64::INFINITY, f64::min);
+            row.push(ms(best));
+        }
+        t.row(row);
+
+        // HmSearch: bucket per tau
+        let mut row = vec!["HmSearch".to_string()];
+        for &tau in &TAUS {
+            let bucket = match tau {
+                1 | 2 => &hmsearch[0],
+                3 | 4 => &hmsearch[1],
+                _ => &hmsearch[2],
+            };
+            match bucket {
+                Some(hm) => {
+                    let (m, _) = time_queries(&w.queries, n_q, |q| hm.search(q, tau));
+                    row.push(ms(m));
+                }
+                None => row.push("OOM".into()),
+            }
+        }
+        t.row(row);
+
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
+/// §VI-C m-sweep: MI-bST and MIH for every m ∈ {2,3,4}.
+pub fn msweep(opts: &EvalOpts, datasets: &[Dataset]) -> String {
+    let mut out = String::new();
+    for &ds in datasets {
+        let w = load_workload(ds, opts);
+        let set = &w.sketches;
+        let n_q = opts.queries.min(w.queries.len());
+        let mut t = Table::new(format!("m-sweep — {} (avg ms/query)", ds.name()));
+        let mut header = vec!["method".into()];
+        header.extend(TAUS.iter().map(|tau| format!("tau={tau}")));
+        t.header(header);
+        for &m in &MS {
+            let mi = MultiBst::build(set, m);
+            let mut row = vec![format!("MI-bST m={m}")];
+            for &tau in &TAUS {
+                row.push(ms(time_queries(&w.queries, n_q, |q| mi.search(q, tau)).0));
+            }
+            t.row(row);
+        }
+        for &m in &MS {
+            let mih = Mih::build(set, m);
+            let mut row = vec![format!("MIH m={m}")];
+            for &tau in &TAUS {
+                row.push(ms(time_queries(&w.queries, n_q, |q| mih.search(q, tau)).0));
+            }
+            t.row(row);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> EvalOpts {
+        EvalOpts {
+            scale: 0.01,
+            queries: 10,
+            sih_cap_secs: 0.2,
+            mem_cap_gib: 1.0,
+            seed: 7,
+            threads: 2,
+        }
+    }
+
+    #[test]
+    fn table1_lists_all_datasets() {
+        let s = table1(&tiny_opts());
+        for ds in Dataset::ALL {
+            assert!(s.contains(ds.name()), "{s}");
+        }
+    }
+
+    #[test]
+    fn table2_runs_on_review() {
+        let s = table2(&tiny_opts(), &[Dataset::Review]);
+        assert!(s.contains("review"));
+        assert!(s.contains("tau=5"));
+    }
+
+    #[test]
+    fn table3_runs_on_review() {
+        let s = table3(&tiny_opts(), &[Dataset::Review]);
+        assert!(s.contains("bST"));
+        assert!(s.contains("LOUDS"));
+        assert!(s.contains("FST"));
+    }
+
+    #[test]
+    fn fig7_and_table4_run_on_review() {
+        let opts = tiny_opts();
+        let s4 = table4(&opts, &[Dataset::Review]);
+        assert!(s4.contains("SI-bST"));
+        assert!(s4.contains("HmSearch"));
+        let s7 = fig7(&opts, &[Dataset::Review]);
+        assert!(s7.contains("SI-bST"));
+        assert!(s7.contains("MIH"));
+    }
+}

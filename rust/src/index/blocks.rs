@@ -1,0 +1,128 @@
+//! Multi-index block partitioning and threshold assignment (§III-B).
+//!
+//! A sketch of length `L` is split into `m` disjoint blocks of near-equal
+//! length (`⌊L/m⌋`, the first `L mod m` blocks one longer — matching MIH).
+//!
+//! **Per-block thresholds.** With `τ' = ⌊τ/m⌋` and `a = τ mod m`, the
+//! tight general-pigeonhole split assigns `τ'` to the first `a+1` blocks
+//! and `τ' − 1` to the rest:
+//! if `Σ d_j <= τ` but block `j` exceeds its threshold for every `j`,
+//! then `Σ d_j >= (a+1)(τ'+1) + (m−a−1)τ' = mτ' + a + 1 = τ + 1` —
+//! contradiction. Blocks whose threshold would be negative need no lookup
+//! at all.
+//!
+//! **Paper-text note.** §III-B states the assignment *reversed*
+//! (`τ'−1` to the first `a+1` blocks, `τ'` to the rest), which admits
+//! false negatives — e.g. `m=2, τ=3` gives thresholds `(0,1)` and misses
+//! the distance split `d=(1,2)`. We implement the sound rule above; the
+//! property test `no_false_negatives` pins it down.
+
+/// The half-open character ranges of the `m` blocks.
+pub fn block_ranges(l: usize, m: usize) -> Vec<(usize, usize)> {
+    assert!(m >= 1 && m <= l, "need 1 <= m <= L");
+    let base = l / m;
+    let extra = l % m;
+    let mut out = Vec::with_capacity(m);
+    let mut lo = 0usize;
+    for j in 0..m {
+        let len = base + usize::from(j < extra);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    debug_assert_eq!(lo, l);
+    out
+}
+
+/// Per-block thresholds for query threshold `tau`; `None` = the block
+/// needs no candidate lookup (its threshold would be negative).
+pub fn block_thresholds(tau: usize, m: usize) -> Vec<Option<usize>> {
+    let tp = tau / m;
+    let a = tau % m;
+    (0..m)
+        .map(|j| {
+            if j <= a {
+                Some(tp)
+            } else {
+                tp.checked_sub(1)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn ranges_tile_and_balance() {
+        for l in 1..=64usize {
+            for m in 1..=l.min(8) {
+                let r = block_ranges(l, m);
+                assert_eq!(r.len(), m);
+                assert_eq!(r[0].0, 0);
+                assert_eq!(r.last().unwrap().1, l);
+                for w in r.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+                let lens: Vec<usize> = r.iter().map(|(a, b)| b - a).collect();
+                let min = lens.iter().min().unwrap();
+                let max = lens.iter().max().unwrap();
+                assert!(max - min <= 1, "l={l} m={m} lens={lens:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn thresholds_sum_rule() {
+        // Σ (θ_j + 1) must exceed τ (that's exactly the pigeonhole).
+        for tau in 0..20usize {
+            for m in 1..=6usize {
+                let th = block_thresholds(tau, m);
+                let total: usize = th.iter().map(|t| t.map_or(0, |x| x + 1)).sum();
+                assert!(total >= tau + 1, "tau={tau} m={m} th={th:?}");
+            }
+        }
+    }
+
+    /// The defining property: any distance vector summing to <= tau is
+    /// caught by at least one block at its threshold.
+    #[test]
+    fn no_false_negatives() {
+        let mut rng = Rng::new(7);
+        for _ in 0..20_000 {
+            let m = 1 + rng.below_usize(5);
+            let tau = rng.below_usize(12);
+            let th = block_thresholds(tau, m);
+            // random split of some total <= tau over m blocks
+            let total = rng.below_usize(tau + 1);
+            let mut d = vec![0usize; m];
+            for _ in 0..total {
+                d[rng.below_usize(m)] += 1;
+            }
+            let caught = (0..m).any(|j| th[j].is_some_and(|t| d[j] <= t));
+            assert!(caught, "m={m} tau={tau} d={d:?} th={th:?}");
+        }
+    }
+
+    /// Regression: the paper's stated (reversed) assignment is unsound.
+    #[test]
+    fn papers_reversed_rule_would_miss() {
+        // m=2, tau=3: paper's text gives (0, 1); d=(1,2) sums to 3 but
+        // 1 > 0 and 2 > 1 — missed. Our rule gives (1, 1): caught.
+        let ours = block_thresholds(3, 2);
+        assert_eq!(ours, vec![Some(1), Some(1)]);
+        let d = [1usize, 2];
+        assert!((0..2).any(|j| ours[j].is_some_and(|t| d[j] <= t)));
+    }
+
+    #[test]
+    fn small_tau_skips_blocks() {
+        // tau=1, m=3: thresholds (0, 0, None) wait — a=1 → blocks 0,1 get
+        // tp=0, block 2 gets None.
+        assert_eq!(block_thresholds(1, 3), vec![Some(0), Some(0), None]);
+        assert_eq!(block_thresholds(0, 2), vec![Some(0), None]);
+        assert_eq!(block_thresholds(5, 2), vec![Some(2), Some(2)]);
+        assert_eq!(block_thresholds(4, 2), vec![Some(2), Some(1)]);
+    }
+}

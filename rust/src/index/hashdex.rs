@@ -1,0 +1,186 @@
+//! Open-addressing inverted index: packed sketch/block key → id postings.
+//!
+//! The hash-table backend of SIH / MIH / HmSearch (§III). `std::HashMap`
+//! would work, but an explicit structure gives (a) honest memory
+//! accounting for the paper's space tables, (b) postings grouped in one
+//! arena rather than per-key `Vec`s, (c) ~2× faster probes (no SipHash).
+//!
+//! Layout: robin-hood-free linear probing over `(key+1)`-tagged slots
+//! (0 = empty), two-pass construction (count, then fill) so postings of a
+//! key are contiguous in one arena.
+
+use crate::util::rng::mix64;
+use crate::util::HeapSize;
+
+const EMPTY: u64 = 0;
+
+/// Immutable key → postings-list map built from `(key, id)` pairs.
+pub struct HashIndex {
+    /// Tagged keys (`key + 1`; 0 = empty slot). Power-of-two length.
+    slots: Vec<u64>,
+    /// Postings range of slot `s`: `arena[starts[s]..starts[s+1]]` —
+    /// `starts` is indexed by *slot*, `u32::MAX` sentinel for empty.
+    offsets: Vec<u32>,
+    lens: Vec<u32>,
+    arena: Vec<u32>,
+    n_keys: usize,
+}
+
+impl HashIndex {
+    /// Builds from an iterator of `(key, id)` pairs supplied twice (the
+    /// builder runs two passes).
+    pub fn build<I, F>(n_pairs: usize, mut pairs: F) -> Self
+    where
+        I: Iterator<Item = (u64, u32)>,
+        F: FnMut() -> I,
+    {
+        // Load factor 0.5 (power of two).
+        let cap = (n_pairs.max(1) * 2).next_power_of_two();
+        let mut slots = vec![EMPTY; cap];
+        let mut lens = vec![0u32; cap];
+        let mask = cap - 1;
+
+        // Pass 1: insert keys, count postings per slot.
+        let mut n_keys = 0usize;
+        for (key, _) in pairs() {
+            let tagged = key.wrapping_add(1);
+            debug_assert_ne!(tagged, EMPTY, "key u64::MAX unsupported");
+            let mut s = (mix64(key) as usize) & mask;
+            loop {
+                if slots[s] == EMPTY {
+                    slots[s] = tagged;
+                    n_keys += 1;
+                    lens[s] += 1;
+                    break;
+                }
+                if slots[s] == tagged {
+                    lens[s] += 1;
+                    break;
+                }
+                s = (s + 1) & mask;
+            }
+        }
+
+        // Prefix-sum into offsets.
+        let mut offsets = vec![0u32; cap + 1];
+        let mut acc = 0u32;
+        for s in 0..cap {
+            offsets[s] = acc;
+            acc += lens[s];
+        }
+        offsets[cap] = acc;
+        debug_assert_eq!(acc as usize, n_pairs);
+
+        // Pass 2: fill the arena.
+        let mut arena = vec![0u32; n_pairs];
+        let mut cursor = offsets[..cap].to_vec();
+        for (key, id) in pairs() {
+            let tagged = key.wrapping_add(1);
+            let mut s = (mix64(key) as usize) & mask;
+            while slots[s] != tagged {
+                s = (s + 1) & mask;
+            }
+            arena[cursor[s] as usize] = id;
+            cursor[s] += 1;
+        }
+
+        HashIndex { slots, offsets, lens, arena, n_keys }
+    }
+
+    /// Number of distinct keys.
+    pub fn n_keys(&self) -> usize {
+        self.n_keys
+    }
+
+    /// Postings for `key` (empty slice if absent).
+    #[inline]
+    pub fn get(&self, key: u64) -> &[u32] {
+        let tagged = key.wrapping_add(1);
+        let mask = self.slots.len() - 1;
+        let mut s = (mix64(key) as usize) & mask;
+        loop {
+            let slot = self.slots[s];
+            if slot == tagged {
+                let lo = self.offsets[s] as usize;
+                return &self.arena[lo..lo + self.lens[s] as usize];
+            }
+            if slot == EMPTY {
+                return &[];
+            }
+            s = (s + 1) & mask;
+        }
+    }
+
+    /// Total stored postings.
+    pub fn n_postings(&self) -> usize {
+        self.arena.len()
+    }
+}
+
+impl HeapSize for HashIndex {
+    fn heap_bytes(&self) -> usize {
+        self.slots.heap_bytes()
+            + self.offsets.heap_bytes()
+            + self.lens.heap_bytes()
+            + self.arena.heap_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::collections::HashMap;
+
+    #[test]
+    fn matches_std_hashmap() {
+        let mut rng = Rng::new(1);
+        let pairs: Vec<(u64, u32)> = (0..5000)
+            .map(|i| (rng.below(700), i as u32))
+            .collect();
+        let idx = HashIndex::build(pairs.len(), || pairs.iter().copied());
+        let mut reference: HashMap<u64, Vec<u32>> = HashMap::new();
+        for &(k, v) in &pairs {
+            reference.entry(k).or_default().push(v);
+        }
+        assert_eq!(idx.n_keys(), reference.len());
+        assert_eq!(idx.n_postings(), pairs.len());
+        for (k, expect) in &reference {
+            let mut got = idx.get(*k).to_vec();
+            got.sort();
+            let mut expect = expect.clone();
+            expect.sort();
+            assert_eq!(&got, &expect, "key {k}");
+        }
+        // absent keys
+        for k in 10_000..10_050u64 {
+            assert!(idx.get(k).is_empty());
+        }
+    }
+
+    #[test]
+    fn single_pair() {
+        let pairs = [(42u64, 7u32)];
+        let idx = HashIndex::build(1, || pairs.iter().copied());
+        assert_eq!(idx.get(42), &[7]);
+        assert!(idx.get(41).is_empty());
+    }
+
+    #[test]
+    fn adversarial_colliding_keys() {
+        // keys differing only in high bits — mix64 must spread them.
+        let pairs: Vec<(u64, u32)> =
+            (0..1000).map(|i| ((i as u64) << 48, i as u32)).collect();
+        let idx = HashIndex::build(pairs.len(), || pairs.iter().copied());
+        for &(k, v) in &pairs {
+            assert_eq!(idx.get(k), &[v]);
+        }
+    }
+
+    #[test]
+    fn empty_index() {
+        let idx = HashIndex::build(0, || std::iter::empty());
+        assert_eq!(idx.n_keys(), 0);
+        assert!(idx.get(0).is_empty());
+    }
+}

@@ -1,0 +1,66 @@
+//! Linear scan baseline: bit-parallel vertical Hamming over the whole
+//! database. No index at all — the floor every filter method must beat,
+//! and the ground-truth oracle of the test suite.
+
+use super::SearchIndex;
+use crate::sketch::{SketchSet, VerticalSet};
+use crate::util::HeapSize;
+
+/// Brute-force scanner in vertical format.
+pub struct LinearScan {
+    vertical: VerticalSet,
+}
+
+impl LinearScan {
+    pub fn build(set: &SketchSet) -> Self {
+        LinearScan { vertical: VerticalSet::from_horizontal(set) }
+    }
+
+    /// Access to the underlying vertical database (shared with the XLA
+    /// hamming-scan runtime path).
+    pub fn vertical(&self) -> &VerticalSet {
+        &self.vertical
+    }
+}
+
+impl SearchIndex for LinearScan {
+    fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {
+        self.vertical.scan(q, tau)
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.vertical.heap_bytes()
+    }
+
+    fn name(&self) -> String {
+        "LinearScan".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::hamming::ham_chars;
+    use crate::util::Rng;
+
+    #[test]
+    fn finds_exact_neighbors() {
+        let mut rng = Rng::new(3);
+        let rows: Vec<Vec<u8>> = (0..500)
+            .map(|_| (0..16).map(|_| rng.below(4) as u8).collect())
+            .collect();
+        let set = SketchSet::from_rows(2, 16, &rows);
+        let scan = LinearScan::build(&set);
+        for qi in [0usize, 10, 499] {
+            for tau in [0usize, 2, 5] {
+                let mut got = scan.search(&rows[qi], tau);
+                got.sort();
+                let expect: Vec<u32> = (0..rows.len())
+                    .filter(|&i| ham_chars(&rows[i], &rows[qi]) <= tau)
+                    .map(|i| i as u32)
+                    .collect();
+                assert_eq!(got, expect);
+            }
+        }
+    }
+}

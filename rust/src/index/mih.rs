@@ -1,0 +1,204 @@
+//! MIH — multi-index hashing (Norouzi et al., TPAMI 2014; §III-B).
+//!
+//! The multi-index framework with hash-table block filters: each block
+//! keeps an inverted index keyed by the (packed or mixed) block value;
+//! filtering enumerates the query block's signature ball at the block
+//! threshold and probes each signature.
+//!
+//! Block keys are exact when `L_j · b <= 64` (every configuration in the
+//! paper except GIST m=2..3, whose blocks are mixed-hashed; the
+//! framework's verification step absorbs collisions soundly).
+
+use super::hashdex::HashIndex;
+use super::multi::{BlockFilter, MultiIndex};
+use super::signature::{for_each_signature, pack_key};
+use crate::sketch::SketchSet;
+use crate::util::rng::mix64;
+use crate::util::HeapSize;
+
+/// Hash-table inverted index over one block.
+pub struct HashBlockFilter {
+    index: HashIndex,
+    b: usize,
+    l: usize,
+    exact_keys: bool,
+}
+
+#[inline]
+fn mixed_key(row: &[u8], b: usize) -> u64 {
+    let mut h = 0x517c_c1b7_2722_0a95u64 ^ (row.len() as u64);
+    let mut acc = 0u64;
+    let mut bits = 0usize;
+    for &c in row {
+        acc = (acc << b) | c as u64;
+        bits += b;
+        if bits >= 56 {
+            h = mix64(h ^ acc);
+            acc = 0;
+            bits = 0;
+        }
+    }
+    if bits > 0 {
+        h = mix64(h ^ acc);
+    }
+    h
+}
+
+impl BlockFilter for HashBlockFilter {
+    fn build(block: &SketchSet) -> Self {
+        let (b, l, n) = (block.b(), block.l(), block.n());
+        let exact_keys = l * b <= 64;
+        let index = HashIndex::build(n, || {
+            (0..n).map(|i| {
+                let row = block.row(i);
+                let key = if exact_keys {
+                    pack_key(&row, b)
+                } else {
+                    mixed_key(&row, b)
+                };
+                (key, i as u32)
+            })
+        });
+        HashBlockFilter { index, b, l, exact_keys }
+    }
+
+    fn candidates(&self, q_block: &[u8], tau_j: usize, emit: &mut dyn FnMut(u32)) {
+        debug_assert_eq!(q_block.len(), self.l);
+        if self.exact_keys {
+            for_each_signature(q_block, self.b, tau_j, &mut |key| {
+                for &id in self.index.get(key) {
+                    emit(id);
+                }
+                true
+            });
+        } else {
+            // enumerate signature rows in place, probe the mixed key
+            let mut row = q_block.to_vec();
+            enumerate_rows(&mut row, self.b, 0, tau_j, true, &mut |r| {
+                for &id in self.index.get(mixed_key(r, self.b)) {
+                    emit(id);
+                }
+            });
+        }
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.index.heap_bytes()
+    }
+
+    fn filter_name() -> &'static str {
+        "MIH"
+    }
+}
+
+/// In-place DFS over the signature rows of `row` within `budget` edits.
+pub(crate) fn enumerate_rows(
+    row: &mut Vec<u8>,
+    b: usize,
+    from: usize,
+    budget: usize,
+    include_self: bool,
+    f: &mut dyn FnMut(&[u8]),
+) {
+    if include_self {
+        f(row);
+    }
+    if budget == 0 {
+        return;
+    }
+    let sigma = 1u8 << b;
+    let l = row.len();
+    for pos in from..l {
+        let orig = row[pos];
+        for c in 0..sigma {
+            if c == orig {
+                continue;
+            }
+            row[pos] = c;
+            f(row);
+            if budget > 1 {
+                enumerate_rows(row, b, pos + 1, budget - 1, false, f);
+            }
+        }
+        row[pos] = orig;
+    }
+}
+
+/// `MIH`: the multi-index with hash-table filters.
+pub type Mih = MultiIndex<HashBlockFilter>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::SearchIndex;
+    use crate::sketch::hamming::ham_chars;
+    use crate::util::Rng;
+
+    fn clustered(b: usize, l: usize, n: usize, seed: u64) -> Vec<Vec<u8>> {
+        let mut rng = Rng::new(seed);
+        let centers: Vec<Vec<u8>> = (0..12)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect();
+        (0..n)
+            .map(|_| {
+                let mut row = centers[rng.below_usize(12)].clone();
+                for _ in 0..rng.below_usize(4) {
+                    let p = rng.below_usize(l);
+                    row[p] = rng.below(1 << b) as u8;
+                }
+                row
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_linear_scan() {
+        let rows = clustered(2, 16, 800, 71);
+        let set = SketchSet::from_rows(2, 16, &rows);
+        let mut rng = Rng::new(72);
+        for m in [2usize, 3, 4] {
+            let mih = Mih::build(&set, m);
+            for _ in 0..8 {
+                let q = rows[rng.below_usize(rows.len())].clone();
+                for tau in [0usize, 1, 2, 4, 5] {
+                    let mut got = mih.search(&q, tau);
+                    got.sort();
+                    let expect: Vec<u32> = (0..rows.len())
+                        .filter(|&i| ham_chars(&rows[i], &q) <= tau)
+                        .map(|i| i as u32)
+                        .collect();
+                    assert_eq!(got, expect, "m={m} tau={tau}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_key_blocks_gist_shape() {
+        // b=8, L=16, m=2 → 8-char blocks = 64 bits exact; m=1 block of 16
+        // chars = 128 bits → mixed. Force the mixed path via m=1.
+        let rows = clustered(8, 16, 300, 73);
+        let set = SketchSet::from_rows(8, 16, &rows);
+        let mih = Mih::build(&set, 1);
+        let q = rows[3].clone();
+        for tau in [0usize, 1] {
+            let mut got = mih.search(&q, tau);
+            got.sort();
+            let expect: Vec<u32> = (0..rows.len())
+                .filter(|&i| ham_chars(&rows[i], &q) <= tau)
+                .map(|i| i as u32)
+                .collect();
+            assert_eq!(got, expect, "tau={tau}");
+        }
+    }
+
+    #[test]
+    fn enumerate_rows_ball_size() {
+        let mut row = vec![0u8, 1, 2];
+        let mut count = 0usize;
+        enumerate_rows(&mut row, 2, 0, 2, true, &mut |_| count += 1);
+        // 1 + 3*3 + C(3,2)*9 = 37
+        assert_eq!(count, 37);
+        assert_eq!(row, vec![0, 1, 2], "row restored");
+    }
+}

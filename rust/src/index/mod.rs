@@ -1,0 +1,51 @@
+//! Similarity-search indexes.
+//!
+//! Every method of the paper's evaluation (§VI) behind one trait:
+//!
+//! | method       | approach     | filter backend        | module      |
+//! |--------------|--------------|-----------------------|-------------|
+//! | `SI-bST`     | single-index | bST traversal         | [`single`]  |
+//! | `MI-bST`     | multi-index  | per-block bST         | [`multi`]   |
+//! | `SIH`        | single-index | hash + signatures     | [`sih`]     |
+//! | `MIH`        | multi-index  | per-block hash + sigs | [`mih`]     |
+//! | `HmSearch`   | multi-index  | 1-var signatures in DB| [`hmsearch`]|
+//! | linear scan  | none         | vertical Hamming      | [`linear`]  |
+//!
+//! Supporting machinery: [`signature`] (Hamming-ball enumeration),
+//! [`hashdex`] (open-addressing inverted index on packed block keys),
+//! [`blocks`] (multi-index partitioning + threshold assignment).
+
+pub mod blocks;
+pub mod hashdex;
+pub mod hmsearch;
+pub mod linear;
+pub mod mih;
+pub mod multi;
+pub mod signature;
+pub mod sih;
+pub mod single;
+
+pub use hmsearch::HmSearch;
+pub use linear::LinearScan;
+pub use mih::Mih;
+pub use multi::MultiBst;
+pub use sih::Sih;
+pub use single::{SingleBst, SingleFst, SingleLouds};
+
+/// A Hamming-threshold similarity index over a fixed sketch database.
+pub trait SearchIndex {
+    /// Ids of all sketches with `ham(s_i, q) <= tau`, in unspecified order.
+    fn search(&self, q: &[u8], tau: usize) -> Vec<u32>;
+
+    /// Heap bytes owned by the index (paper Tables III/IV).
+    fn heap_bytes(&self) -> usize;
+
+    /// Display name matching the paper's method labels.
+    fn name(&self) -> String;
+
+    /// Largest threshold the index supports (`None` = unlimited).
+    /// HmSearch is built per-τ-bucket; others accept any τ.
+    fn max_tau(&self) -> Option<usize> {
+        None
+    }
+}

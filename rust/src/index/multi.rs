@@ -1,0 +1,282 @@
+//! Multi-index framework (§III-B) with pluggable per-block filters.
+//!
+//! `MultiIndex<F>` partitions sketches into `m` blocks, builds one filter
+//! per block, and answers a query in two steps:
+//!
+//! 1. **filter** — each block `j` with threshold `θ_j` (see
+//!    [`super::blocks`]) reports candidate ids whose block is within
+//!    `θ_j` of the query block;
+//! 2. **verification** — candidates are deduplicated (epoch array — no
+//!    clearing between queries) and their *full* Hamming distance checked
+//!    with the vertical bit-parallel kernel.
+//!
+//! `MI-bST` instantiates `F` = per-block bST; [`super::mih`] and
+//! [`super::hmsearch`] provide the hash-table backends.
+
+use super::blocks::{block_ranges, block_thresholds};
+use super::SearchIndex;
+use crate::sketch::{SketchSet, VerticalSet};
+use crate::trie::bst::{BstConfig, BstTrie};
+use crate::trie::{SketchTrie, SortedSketches};
+use crate::util::HeapSize;
+use std::sync::Mutex;
+
+/// Per-block candidate filter.
+pub trait BlockFilter: Send + Sync {
+    /// Builds over the block substrings of every sketch.
+    fn build(block: &SketchSet) -> Self;
+
+    /// Invokes `emit(id)` for every sketch whose block is within `tau_j`
+    /// of `q_block` (duplicates allowed; the framework deduplicates).
+    fn candidates(&self, q_block: &[u8], tau_j: usize, emit: &mut dyn FnMut(u32));
+
+    fn heap_bytes(&self) -> usize;
+
+    fn filter_name() -> &'static str;
+}
+
+/// Query-time candidate statistics (exposed for the eval harness).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FilterStats {
+    /// Candidates emitted by all blocks (with duplicates).
+    pub emitted: usize,
+    /// Distinct candidates verified.
+    pub verified: usize,
+    /// Final solutions.
+    pub solutions: usize,
+}
+
+/// Epoch-based visited set: `O(1)` clear between queries.
+struct Visited {
+    epoch: Vec<u32>,
+    cur: u32,
+}
+
+impl Visited {
+    fn new(n: usize) -> Self {
+        Visited { epoch: vec![0; n], cur: 0 }
+    }
+
+    fn next_query(&mut self) {
+        self.cur = self.cur.wrapping_add(1);
+        if self.cur == 0 {
+            self.epoch.fill(0);
+            self.cur = 1;
+        }
+    }
+
+    #[inline]
+    fn insert(&mut self, id: u32) -> bool {
+        let e = &mut self.epoch[id as usize];
+        if *e == self.cur {
+            false
+        } else {
+            *e = self.cur;
+            true
+        }
+    }
+}
+
+/// Generic multi-index.
+pub struct MultiIndex<F: BlockFilter> {
+    m: usize,
+    ranges: Vec<(usize, usize)>,
+    filters: Vec<F>,
+    /// Full sketches in vertical format for verification.
+    vertical: VerticalSet,
+    visited: Mutex<Visited>,
+}
+
+impl<F: BlockFilter> MultiIndex<F> {
+    /// Partitions into `m` blocks and builds the per-block filters.
+    pub fn build(set: &SketchSet, m: usize) -> Self {
+        assert!(m >= 1 && m <= set.l());
+        let ranges = block_ranges(set.l(), m);
+        let filters = ranges
+            .iter()
+            .map(|&(lo, hi)| F::build(&set.slice_block(lo, hi)))
+            .collect();
+        MultiIndex {
+            m,
+            ranges,
+            filters,
+            vertical: VerticalSet::from_horizontal(set),
+            visited: Mutex::new(Visited::new(set.n())),
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Search with per-query statistics.
+    pub fn search_with_stats(&self, q: &[u8], tau: usize) -> (Vec<u32>, FilterStats) {
+        assert_eq!(q.len(), self.vertical.l());
+        let thresholds = block_thresholds(tau, self.m);
+        let q_planes = self.vertical.pack_query(q);
+        let mut stats = FilterStats::default();
+        let mut out = Vec::new();
+
+        let mut visited = self.visited.lock().unwrap();
+        visited.next_query();
+        for (j, &(lo, hi)) in self.ranges.iter().enumerate() {
+            let Some(tau_j) = thresholds[j] else { continue };
+            let q_block = &q[lo..hi];
+            let vertical = &self.vertical;
+            let visited = &mut *visited;
+            let stats = &mut stats;
+            let out = &mut out;
+            self.filters[j].candidates(q_block, tau_j, &mut |id| {
+                stats.emitted += 1;
+                if visited.insert(id) {
+                    stats.verified += 1;
+                    if vertical.ham_leq(id as usize, &q_planes, tau).is_some() {
+                        out.push(id);
+                    }
+                }
+            });
+        }
+        stats.solutions = out.len();
+        (out, stats)
+    }
+}
+
+impl<F: BlockFilter> SearchIndex for MultiIndex<F> {
+    fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {
+        self.search_with_stats(q, tau).0
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.filters.iter().map(|f| f.heap_bytes()).sum::<usize>()
+            + self.vertical.heap_bytes()
+            + self.visited.lock().unwrap().epoch.heap_bytes()
+    }
+
+    fn name(&self) -> String {
+        format!("{} (m={})", F::filter_name(), self.m)
+    }
+}
+
+/// bST as a per-block filter: the block trie's leaves hold the ids of all
+/// sketches sharing the block value — exactly an inverted index, searched
+/// by traversal instead of signature probing.
+pub struct BstBlockFilter {
+    trie: BstTrie,
+}
+
+impl BlockFilter for BstBlockFilter {
+    fn build(block: &SketchSet) -> Self {
+        let ss = SortedSketches::build(block);
+        BstBlockFilter { trie: BstTrie::build(&ss, BstConfig::default()) }
+    }
+
+    fn candidates(&self, q_block: &[u8], tau_j: usize, emit: &mut dyn FnMut(u32)) {
+        // Reuse the trie's search buffer-free path.
+        let mut buf = Vec::new();
+        self.trie.search_into(q_block, tau_j, &mut buf);
+        for id in buf {
+            emit(id);
+        }
+    }
+
+    fn heap_bytes(&self) -> usize {
+        SketchTrie::heap_bytes(&self.trie)
+    }
+
+    fn filter_name() -> &'static str {
+        "MI-bST"
+    }
+}
+
+/// `MI-bST`: multi-index with bST block filters.
+pub type MultiBst = MultiIndex<BstBlockFilter>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::hamming::ham_chars;
+    use crate::util::Rng;
+
+    fn clustered_rows(b: usize, l: usize, n: usize, seed: u64) -> Vec<Vec<u8>> {
+        let mut rng = Rng::new(seed);
+        let centers: Vec<Vec<u8>> = (0..15)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect();
+        (0..n)
+            .map(|_| {
+                let mut row = centers[rng.below_usize(15)].clone();
+                for _ in 0..rng.below_usize(4) {
+                    let p = rng.below_usize(l);
+                    row[p] = rng.below(1 << b) as u8;
+                }
+                row
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_linear_scan_all_m() {
+        let rows = clustered_rows(2, 16, 900, 51);
+        let set = SketchSet::from_rows(2, 16, &rows);
+        let mut rng = Rng::new(52);
+        for m in [2usize, 3, 4] {
+            let mi = MultiBst::build(&set, m);
+            for _ in 0..12 {
+                let q = rows[rng.below_usize(rows.len())].clone();
+                for tau in [0usize, 1, 2, 3, 5] {
+                    let mut got = mi.search(&q, tau);
+                    got.sort();
+                    let expect: Vec<u32> = (0..rows.len())
+                        .filter(|&i| ham_chars(&rows[i], &q) <= tau)
+                        .map(|i| i as u32)
+                        .collect();
+                    assert_eq!(got, expect, "m={m} tau={tau}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let rows = clustered_rows(2, 16, 400, 53);
+        let set = SketchSet::from_rows(2, 16, &rows);
+        let mi = MultiBst::build(&set, 2);
+        let (hits, stats) = mi.search_with_stats(&rows[0], 3);
+        assert_eq!(stats.solutions, hits.len());
+        assert!(stats.verified >= stats.solutions);
+        assert!(stats.emitted >= stats.verified);
+    }
+
+    #[test]
+    fn visited_epoch_wraps_safely() {
+        let mut v = Visited::new(4);
+        for _ in 0..5 {
+            v.next_query();
+            assert!(v.insert(2));
+            assert!(!v.insert(2));
+        }
+        // Force wraparound.
+        v.cur = u32::MAX;
+        v.next_query();
+        assert_eq!(v.cur, 1);
+        assert!(v.insert(2));
+    }
+
+    #[test]
+    fn duplicate_sketches_reported_once_each() {
+        let mut rows = clustered_rows(2, 8, 100, 55);
+        rows.push(rows[0].clone());
+        rows.push(rows[0].clone());
+        let set = SketchSet::from_rows(2, 8, &rows);
+        let mi = MultiBst::build(&set, 2);
+        let got = mi.search(&rows[0], 0);
+        let dup_count = got
+            .iter()
+            .filter(|&&id| rows[id as usize] == rows[0])
+            .count();
+        assert_eq!(dup_count, got.len());
+        // each id exactly once
+        let set_ids: std::collections::HashSet<_> = got.iter().collect();
+        assert_eq!(set_ids.len(), got.len());
+    }
+}

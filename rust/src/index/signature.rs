@@ -1,0 +1,207 @@
+//! Signature enumeration: the Hamming ball `{q' : ham(q, q') <= τ}`.
+//!
+//! The single-index approach (§III-A) generates every such `q'` and probes
+//! the inverted index; `|ball| = Σ_{k<=τ} C(L,k)(2^b-1)^k` (Eq. 3), which
+//! is the exponential blow-up bST exists to avoid. Blocks in MIH enumerate
+//! the same ball over short substrings with small per-block thresholds.
+//!
+//! Enumeration works on *packed keys*: sketches of `L·b <= 64` bits packed
+//! MSB-first (the natural key width for block lengths used in practice;
+//! whole-sketch keys up to 64 bits cover every dataset in the paper).
+
+/// Packs a character row into a `u64` key, MSB-first (lexicographic).
+#[inline]
+pub fn pack_key(row: &[u8], b: usize) -> u64 {
+    debug_assert!(row.len() * b <= 64, "key too wide: {}x{}", row.len(), b);
+    let mut key = 0u64;
+    for &c in row {
+        key = (key << b) | c as u64;
+    }
+    key
+}
+
+/// Unpacks a key back into characters (testing/diagnostics).
+pub fn unpack_key(mut key: u64, b: usize, l: usize) -> Vec<u8> {
+    let mask = (1u64 << b) - 1;
+    let mut row = vec![0u8; l];
+    for i in (0..l).rev() {
+        row[i] = (key & mask) as u8;
+        key >>= b;
+    }
+    row
+}
+
+/// Number of signatures `sigs(b, L, τ)` (Eq. 3 of the paper), saturating.
+pub fn count_signatures(b: usize, l: usize, tau: usize) -> u128 {
+    let sigma_m1 = (1u128 << b) - 1;
+    let mut total: u128 = 0;
+    for k in 0..=tau.min(l) {
+        let mut term = binomial(l, k);
+        for _ in 0..k {
+            term = term.saturating_mul(sigma_m1);
+        }
+        total = total.saturating_add(term);
+    }
+    total
+}
+
+/// C(n, k) as u128, saturating.
+pub fn binomial(n: usize, k: usize) -> u128 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut acc: u128 = 1;
+    for i in 0..k {
+        acc = acc.saturating_mul((n - i) as u128) / (i as u128 + 1);
+    }
+    acc
+}
+
+/// Enumerates every signature within Hamming distance `tau` of `row`,
+/// invoking `f(key)` for each (including `row` itself). Enumeration is
+/// depth-first over mismatch positions; keys are packed MSB-first.
+///
+/// Returns `false` if `f` ever returns `false` (caller-requested abort —
+/// used to enforce the paper's 10 s per-query cap on SIH).
+pub fn for_each_signature<F: FnMut(u64) -> bool>(
+    row: &[u8],
+    b: usize,
+    tau: usize,
+    f: &mut F,
+) -> bool {
+    let base = pack_key(row, b);
+    let l = row.len();
+    if !f(base) {
+        return false;
+    }
+    if tau == 0 {
+        return true;
+    }
+    rec(base, row, b, l, 0, tau, f)
+}
+
+fn rec<F: FnMut(u64) -> bool>(
+    key: u64,
+    row: &[u8],
+    b: usize,
+    l: usize,
+    from: usize,
+    budget: usize,
+    f: &mut F,
+) -> bool {
+    let sigma = 1u64 << b;
+    for pos in from..l {
+        let shift = (l - 1 - pos) * b;
+        let orig = row[pos] as u64;
+        let cleared = key & !(((sigma - 1) << shift) as u64);
+        for c in 0..sigma {
+            if c == orig {
+                continue;
+            }
+            let k2 = cleared | (c << shift);
+            if !f(k2) {
+                return false;
+            }
+            if budget > 1 && !rec(k2, row, b, l, pos + 1, budget - 1, f) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::hamming::ham_chars;
+    use std::collections::HashSet;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let row = vec![3u8, 0, 2, 1];
+        let key = pack_key(&row, 2);
+        assert_eq!(key, 0b11_00_10_01);
+        assert_eq!(unpack_key(key, 2, 4), row);
+    }
+
+    #[test]
+    fn pack_is_lexicographic() {
+        let a = pack_key(&[0, 1, 2], 4);
+        let b = pack_key(&[0, 2, 0], 4);
+        let c = pack_key(&[1, 0, 0], 4);
+        assert!(a < b && b < c);
+    }
+
+    #[test]
+    fn count_matches_formula() {
+        // b=1: sigs = Σ C(L,k)
+        assert_eq!(count_signatures(1, 4, 1), 1 + 4);
+        assert_eq!(count_signatures(1, 4, 2), 1 + 4 + 6);
+        // b=2: C(4,1)*3 = 12
+        assert_eq!(count_signatures(2, 4, 1), 1 + 12);
+        assert_eq!(count_signatures(2, 4, 2), 1 + 12 + 6 * 9);
+        // paper's example magnitudes: b=4, L=32, tau=3
+        let s = count_signatures(4, 32, 3);
+        assert_eq!(s, 1 + 32 * 15 + binomial(32, 2) * 225 + binomial(32, 3) * 3375);
+    }
+
+    #[test]
+    fn enumeration_is_exact_ball() {
+        for &(b, l, tau) in &[(1usize, 6usize, 2usize), (2, 4, 2), (2, 5, 3), (4, 3, 2), (8, 2, 1)] {
+            let row: Vec<u8> = (0..l).map(|i| (i % (1 << b)) as u8).collect();
+            let mut got = HashSet::new();
+            for_each_signature(&row, b, tau, &mut |k| {
+                assert!(got.insert(k), "duplicate signature {k:#x}");
+                true
+            });
+            assert_eq!(got.len() as u128, count_signatures(b, l, tau), "b={b} l={l} tau={tau}");
+            // every signature is within tau; and every ball member present
+            for &k in &got {
+                let r = unpack_key(k, b, l);
+                assert!(ham_chars(&r, &row) <= tau);
+            }
+        }
+    }
+
+    #[test]
+    fn enumeration_covers_whole_ball_bruteforce() {
+        let b = 2usize;
+        let l = 4usize;
+        let row = vec![1u8, 3, 0, 2];
+        for tau in 0..=4 {
+            let mut got = HashSet::new();
+            for_each_signature(&row, b, tau, &mut |k| {
+                got.insert(k);
+                true
+            });
+            // brute force all 4^4 strings
+            for x in 0u64..256 {
+                let r = unpack_key(x, b, l);
+                let inside = ham_chars(&r, &row) <= tau;
+                assert_eq!(got.contains(&x), inside, "tau={tau} x={x:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn abort_stops_enumeration() {
+        let row = vec![0u8; 8];
+        let mut count = 0usize;
+        let completed = for_each_signature(&row, 2, 3, &mut |_| {
+            count += 1;
+            count < 10
+        });
+        assert!(!completed);
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn binomial_basics() {
+        assert_eq!(binomial(5, 0), 1);
+        assert_eq!(binomial(5, 5), 1);
+        assert_eq!(binomial(5, 2), 10);
+        assert_eq!(binomial(64, 32) > 1u128 << 60, true);
+        assert_eq!(binomial(3, 5), 0);
+    }
+}

@@ -1,0 +1,289 @@
+//! SIH — single-index hashing (§III-A).
+//!
+//! An inverted index keyed by the *whole* sketch; a query enumerates every
+//! signature in its Hamming ball (Eq. 3) and probes each. Cost explodes as
+//! `Σ C(L,k)(2^b−1)^k` — the paper caps SIH at 10 s per query and reports
+//! timeouts for larger τ/b (Fig. 7); [`Sih::search_capped`] reproduces
+//! that cap.
+//!
+//! Sketches with `L·b <= 64` use exact packed keys; longer sketches
+//! (GIST: 512 bits) use a 64-bit mixed key plus full verification of the
+//! retrieved candidates (collision-safe, and the extra check is free
+//! relative to enumeration).
+
+use super::hashdex::HashIndex;
+use super::signature::{for_each_signature, pack_key};
+use super::SearchIndex;
+use crate::sketch::{SketchSet, VerticalSet};
+use crate::util::rng::mix64;
+use crate::util::HeapSize;
+use std::time::{Duration, Instant};
+
+/// Single-index hashing over whole sketches.
+pub struct Sih {
+    index: HashIndex,
+    b: usize,
+    l: usize,
+    /// Exact packed keys (fits in u64) or mixed hash keys.
+    exact_keys: bool,
+    /// Verification store (only consulted when `exact_keys` is false).
+    vertical: Option<VerticalSet>,
+}
+
+/// Result of a capped search.
+pub enum CappedResult {
+    Done(Vec<u32>),
+    /// The per-query time budget expired mid-enumeration.
+    TimedOut,
+}
+
+/// Mixes an arbitrary-width packed row into a 64-bit key.
+#[inline]
+fn mixed_key(row: &[u8], b: usize) -> u64 {
+    // fold 64-bit chunks of the packed representation
+    let mut h = 0x9E37_79B9_7F4A_7C15u64 ^ (row.len() as u64);
+    let mut acc = 0u64;
+    let mut bits = 0usize;
+    for &c in row {
+        acc = (acc << b) | c as u64;
+        bits += b;
+        if bits >= 56 {
+            h = mix64(h ^ acc);
+            acc = 0;
+            bits = 0;
+        }
+    }
+    if bits > 0 {
+        h = mix64(h ^ acc);
+    }
+    h
+}
+
+impl Sih {
+    pub fn build(set: &SketchSet) -> Self {
+        let (b, l, n) = (set.b(), set.l(), set.n());
+        let exact_keys = l * b <= 64;
+        let key_of = |row: &[u8]| -> u64 {
+            if exact_keys {
+                pack_key(row, b)
+            } else {
+                mixed_key(row, b)
+            }
+        };
+        let index = HashIndex::build(n, || {
+            (0..n).map(|i| (key_of(&set.row(i)), i as u32))
+        });
+        let vertical = (!exact_keys).then(|| VerticalSet::from_horizontal(set));
+        Sih { index, b, l, exact_keys, vertical }
+    }
+
+    #[inline]
+    fn key_of(&self, row: &[u8]) -> u64 {
+        if self.exact_keys {
+            pack_key(row, self.b)
+        } else {
+            mixed_key(row, self.b)
+        }
+    }
+
+    /// Uncapped search (tests, small τ).
+    fn search_uncapped(&self, q: &[u8], tau: usize) -> Vec<u32> {
+        match self.search_capped(q, tau, Duration::from_secs(u64::MAX / 2)) {
+            CappedResult::Done(v) => v,
+            CappedResult::TimedOut => unreachable!(),
+        }
+    }
+
+    /// Search with the paper's per-query wall-clock cap (10 s in §VI-C).
+    ///
+    /// Signature enumeration is *not* materialized: each signature probes
+    /// the index as it is generated, checking the clock every 4096
+    /// signatures.
+    pub fn search_capped(&self, q: &[u8], tau: usize, budget: Duration) -> CappedResult {
+        assert_eq!(q.len(), self.l);
+        let start = Instant::now();
+        let mut out = Vec::new();
+        let q_planes = self.vertical.as_ref().map(|v| v.pack_query(q));
+        let mut since_check = 0usize;
+        let mut timed_out = false;
+
+        let completed = if self.exact_keys {
+            // enumerate signatures directly as packed keys
+            for_each_signature(q, self.b, tau, &mut |key| {
+                for &id in self.index.get(key) {
+                    out.push(id);
+                }
+                since_check += 1;
+                if since_check >= 4096 {
+                    since_check = 0;
+                    if start.elapsed() > budget {
+                        timed_out = true;
+                        return false;
+                    }
+                }
+                true
+            })
+        } else {
+            // enumerate signature *rows*, mix each into a key, verify hits
+            let mut row = q.to_vec();
+            self.enumerate_rows_capped(&mut row, 0, tau, &mut |r| {
+                let key = self.key_of(r);
+                for &id in self.index.get(key) {
+                    if self
+                        .vertical
+                        .as_ref()
+                        .unwrap()
+                        .ham_leq(id as usize, q_planes.as_ref().unwrap(), tau)
+                        .is_some()
+                    {
+                        out.push(id);
+                    }
+                }
+                since_check += 1;
+                if since_check >= 4096 {
+                    since_check = 0;
+                    if start.elapsed() > budget {
+                        timed_out = true;
+                        return false;
+                    }
+                }
+                true
+            })
+        };
+        if completed && !timed_out {
+            CappedResult::Done(out)
+        } else {
+            CappedResult::TimedOut
+        }
+    }
+
+    /// DFS over signature rows in place (mirrors
+    /// [`super::signature::for_each_signature`] but yields `&[u8]`).
+    fn enumerate_rows_capped(
+        &self,
+        row: &mut Vec<u8>,
+        from: usize,
+        budget: usize,
+        f: &mut dyn FnMut(&[u8]) -> bool,
+    ) -> bool {
+        if from == 0 && !f(row) {
+            return false;
+        }
+        if budget == 0 {
+            return true;
+        }
+        let sigma = 1u8 << self.b;
+        for pos in from..self.l {
+            let orig = row[pos];
+            for c in 0..sigma {
+                if c == orig {
+                    continue;
+                }
+                row[pos] = c;
+                if !f(row) {
+                    row[pos] = orig;
+                    return false;
+                }
+                if budget > 1 && !self.enumerate_rows_capped(row, pos + 1, budget - 1, f) {
+                    row[pos] = orig;
+                    return false;
+                }
+            }
+            row[pos] = orig;
+        }
+        true
+    }
+}
+
+impl SearchIndex for Sih {
+    fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {
+        self.search_uncapped(q, tau)
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.index.heap_bytes()
+            + self.vertical.as_ref().map_or(0, |v| v.heap_bytes())
+    }
+
+    fn name(&self) -> String {
+        "SIH".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::hamming::ham_chars;
+    use crate::util::Rng;
+
+    fn rows(b: usize, l: usize, n: usize, seed: u64) -> Vec<Vec<u8>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect()
+    }
+
+    #[test]
+    fn matches_linear_scan_exact_keys() {
+        let rows = rows(2, 10, 600, 61);
+        let set = SketchSet::from_rows(2, 10, &rows);
+        let sih = Sih::build(&set);
+        assert!(sih.exact_keys);
+        let mut rng = Rng::new(62);
+        for _ in 0..10 {
+            let q = rows[rng.below_usize(rows.len())].clone();
+            for tau in [0usize, 1, 2] {
+                let mut got = sih.search(&q, tau);
+                got.sort();
+                got.dedup();
+                let expect: Vec<u32> = (0..rows.len())
+                    .filter(|&i| ham_chars(&rows[i], &q) <= tau)
+                    .map(|i| i as u32)
+                    .collect();
+                assert_eq!(got, expect, "tau={tau}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_linear_scan_mixed_keys() {
+        // b=8, L=12 → 96 bits: mixed-key path with verification.
+        let rows = rows(8, 12, 300, 63);
+        let set = SketchSet::from_rows(8, 12, &rows);
+        let sih = Sih::build(&set);
+        assert!(!sih.exact_keys);
+        let q = rows[5].clone();
+        for tau in [0usize, 1] {
+            let mut got = sih.search(&q, tau);
+            got.sort();
+            got.dedup();
+            let expect: Vec<u32> = (0..rows.len())
+                .filter(|&i| ham_chars(&rows[i], &q) <= tau)
+                .map(|i| i as u32)
+                .collect();
+            assert_eq!(got, expect, "tau={tau}");
+        }
+    }
+
+    #[test]
+    fn cap_triggers_on_tiny_budget() {
+        let rows = rows(4, 16, 100, 65);
+        let set = SketchSet::from_rows(4, 16, &rows);
+        let sih = Sih::build(&set);
+        // tau=4 over b=4,L=16 ≈ 2.8e9 sigs — must hit a 10ms budget.
+        match sih.search_capped(&rows[0], 4, Duration::from_millis(10)) {
+            CappedResult::TimedOut => {}
+            CappedResult::Done(_) => panic!("expected timeout"),
+        }
+    }
+
+    #[test]
+    fn duplicate_sketches_all_reported() {
+        let mut r = rows(2, 8, 50, 67);
+        r.push(r[0].clone());
+        let set = SketchSet::from_rows(2, 8, &r);
+        let sih = Sih::build(&set);
+        let got = sih.search(&r[0], 0);
+        assert!(got.contains(&0) && got.contains(&50));
+    }
+}

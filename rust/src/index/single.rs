@@ -1,0 +1,129 @@
+//! Single-index approach backed by a trie (§IV / §VI-B).
+//!
+//! The trie *replaces* the inverted index: the similarity search traverses
+//! it directly (no signature generation), so one structure serves every τ.
+//! `SI-bST` is the paper's headline method; `SingleLouds` / `SingleFst`
+//! are the Table III baselines behind the same interface.
+
+use super::SearchIndex;
+use crate::sketch::SketchSet;
+use crate::trie::bst::{BstConfig, BstTrie};
+use crate::trie::fst::FstTrie;
+use crate::trie::louds::LoudsTrie;
+use crate::trie::pointer::PointerTrie;
+use crate::trie::{SketchTrie, SortedSketches};
+
+/// Generic single-index over any [`SketchTrie`].
+pub struct SingleIndex<T: SketchTrie> {
+    trie: T,
+    label: &'static str,
+}
+
+impl<T: SketchTrie> SearchIndex for SingleIndex<T> {
+    fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {
+        self.trie.search(q, tau)
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.trie.heap_bytes()
+    }
+
+    fn name(&self) -> String {
+        self.label.to_string()
+    }
+}
+
+impl<T: SketchTrie> SingleIndex<T> {
+    pub fn trie(&self) -> &T {
+        &self.trie
+    }
+}
+
+/// `SI-bST`: single-index over the b-bit sketch trie.
+pub type SingleBst = SingleIndex<BstTrie>;
+
+impl SingleBst {
+    pub fn build(set: &SketchSet, cfg: BstConfig) -> Self {
+        let ss = SortedSketches::build(set);
+        SingleIndex { trie: BstTrie::build(&ss, cfg), label: "SI-bST" }
+    }
+}
+
+/// Single-index over the LOUDS-trie baseline.
+pub type SingleLouds = SingleIndex<LoudsTrie>;
+
+impl SingleLouds {
+    pub fn build(set: &SketchSet) -> Self {
+        let ss = SortedSketches::build(set);
+        SingleIndex { trie: LoudsTrie::build(&ss), label: "SI-LOUDS" }
+    }
+}
+
+/// Single-index over the FST baseline.
+pub type SingleFst = SingleIndex<FstTrie>;
+
+impl SingleFst {
+    pub fn build(set: &SketchSet) -> Self {
+        let ss = SortedSketches::build(set);
+        SingleIndex { trie: FstTrie::build(&ss), label: "SI-FST" }
+    }
+}
+
+/// Single-index over the pointer trie (context rows / oracle).
+pub type SinglePointer = SingleIndex<PointerTrie>;
+
+impl SinglePointer {
+    pub fn build(set: &SketchSet) -> Self {
+        let ss = SortedSketches::build(set);
+        SingleIndex { trie: PointerTrie::build(&ss), label: "SI-PT" }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn all_single_indexes_agree() {
+        let mut rng = Rng::new(41);
+        let rows: Vec<Vec<u8>> = (0..700)
+            .map(|_| (0..12).map(|_| rng.below(4) as u8).collect())
+            .collect();
+        let set = SketchSet::from_rows(2, 12, &rows);
+        let bst = SingleBst::build(&set, BstConfig::default());
+        let louds = SingleLouds::build(&set);
+        let fst = SingleFst::build(&set);
+        let pt = SinglePointer::build(&set);
+        for _ in 0..10 {
+            let q: Vec<u8> = (0..12).map(|_| rng.below(4) as u8).collect();
+            for tau in [0usize, 1, 3] {
+                let mut a = bst.search(&q, tau);
+                let mut b = louds.search(&q, tau);
+                let mut c = fst.search(&q, tau);
+                let mut d = pt.search(&q, tau);
+                a.sort();
+                b.sort();
+                c.sort();
+                d.sort();
+                assert_eq!(a, b);
+                assert_eq!(a, c);
+                assert_eq!(a, d);
+            }
+        }
+    }
+
+    #[test]
+    fn bst_is_smallest() {
+        let mut rng = Rng::new(43);
+        let rows: Vec<Vec<u8>> = (0..4000)
+            .map(|_| (0..16).map(|_| rng.below(4) as u8).collect())
+            .collect();
+        let set = SketchSet::from_rows(2, 16, &rows);
+        let bst = SingleBst::build(&set, BstConfig::default());
+        let louds = SingleLouds::build(&set);
+        let fst = SingleFst::build(&set);
+        assert!(bst.heap_bytes() < louds.heap_bytes(), "bST must beat LOUDS");
+        assert!(bst.heap_bytes() < fst.heap_bytes(), "bST must beat FST");
+    }
+}

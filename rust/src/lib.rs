@@ -1,0 +1,61 @@
+//! # `bst` — b-Bit Sketch Trie: scalable similarity search on integer sketches
+//!
+//! Production-quality reproduction of Kanda & Tabei,
+//! *"b-Bit Sketch Trie: Scalable Similarity Search on Integer Sketches"* (2019).
+//!
+//! A *b-bit sketch* is a length-`L` string over the integer alphabet
+//! `[0, 2^b)` produced by a similarity-preserving hash (b-bit minhash,
+//! 0-bit CWS, ...). The library answers Hamming-threshold queries
+//! `I = { i : ham(s_i, q) <= tau }` over massive sketch databases.
+//!
+//! ## Layout
+//!
+//! * [`bits`] — succinct bit-vector substrate (rank/select, packed ints).
+//! * [`sketch`] — packed sketch storage, vertical (bit-plane) format,
+//!   bit-parallel Hamming, native minhash/CWS sketchers.
+//! * [`trie`] — the paper's contribution: the [`trie::bst`] succinct trie,
+//!   plus pointer-trie / LOUDS / FST baselines.
+//! * [`index`] — similarity-search indexes: SI-bST, MI-bST, SIH, MIH,
+//!   HmSearch, linear scan.
+//! * [`data`] — synthetic dataset generators standing in for the paper's
+//!   Review / CP / SIFT / GIST corpora.
+//! * [`runtime`] — PJRT (XLA) runtime: loads AOT-lowered JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) for the sketching pipeline and the
+//!   XLA Hamming-scan baseline. Python never runs on the request path.
+//! * [`coordinator`] — the serving layer: sharded router, dynamic batcher,
+//!   TCP server, metrics.
+//! * [`eval`] — harness regenerating every table and figure of the paper.
+//! * [`util`] — PRNG, thread pool, timers, JSON (no external deps).
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use bst::sketch::SketchSet;
+//! use bst::index::{SearchIndex, SingleBst};
+//!
+//! // 2-bit sketches of length 8, from raw characters.
+//! let rows: Vec<Vec<u8>> = vec![
+//!     vec![0, 1, 2, 3, 0, 1, 2, 3],
+//!     vec![0, 1, 2, 3, 0, 1, 2, 2],
+//!     vec![3, 3, 3, 3, 3, 3, 3, 3],
+//! ];
+//! let set = SketchSet::from_rows(2, 8, &rows);
+//! let index = SingleBst::build(&set, Default::default());
+//! let mut hits = index.search(&rows[0], 1);
+//! hits.sort();
+//! assert_eq!(hits, vec![0, 1]);
+//! ```
+
+pub mod bits;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod index;
+pub mod runtime;
+pub mod sketch;
+pub mod trie;
+pub mod util;
+
+pub use index::SearchIndex;
+pub use sketch::SketchSet;

@@ -1,0 +1,344 @@
+//! `bst` — the command-line entry point.
+//!
+//! ```text
+//! bst eval <table1|table2|table3|table4|fig7|fig8|msweep|all> [--datasets a,b]
+//!          [--scale F] [--queries N] [--sih-cap S] [--mem-cap-gib G]
+//!          [--seed S] [--threads T]
+//! bst sketch --dataset D [--scale F] [--out FILE] [--xla]   # ingestion
+//! bst build  --in FILE [--index si-bst|mi-bst|...]          # index stats
+//! bst query  --in FILE --q 0,1,2,... --tau T
+//! bst serve  --dataset D [--addr A] [--shards S] [--scale F]
+//! bst info                                                  # build info
+//! ```
+
+use bst::cli::Args;
+use bst::coordinator::engine::{Engine, ShardIndexKind};
+use bst::coordinator::{server, ServeConfig};
+use bst::data::{self, Dataset};
+use bst::eval::{cost, tables, EvalOpts};
+use bst::index::SearchIndex;
+use bst::trie::bst::BstConfig;
+use bst::trie::SketchTrie;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "eval" => cmd_eval(&args),
+        "sketch" => cmd_sketch(&args),
+        "build" => cmd_build(&args),
+        "query" => cmd_query(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(),
+        _ => {
+            print!("{}", HELP);
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+bst — b-bit sketch trie: scalable similarity search on integer sketches
+
+USAGE:
+  bst eval <exp>      regenerate a paper experiment
+                      (table1 table2 table3 table4 fig7 fig8 msweep all)
+                      [--datasets review,cp,sift,gist] [--scale F]
+                      [--queries N] [--sih-cap SECS] [--mem-cap-gib G]
+                      [--seed S] [--threads T]
+  bst sketch          generate + sketch a synthetic dataset
+                      --dataset D [--scale F] [--out FILE] [--xla]
+  bst build           build an index over saved sketches, print stats
+                      --in FILE [--index si-bst|mi-bst|sih|mih|hmsearch]
+  bst query           one-off query against saved sketches
+                      --in FILE --q c0,c1,... [--tau T]
+  bst serve           start the sharded TCP query service
+                      --dataset D [--scale F] [--addr A] [--shards N]
+                      [--index si-bst|mi-bst] [--max-batch N] [--max-delay-us U]
+  bst info            print build/runtime information
+";
+
+fn eval_opts(args: &Args) -> EvalOpts {
+    let mut o = EvalOpts {
+        scale: args.get_f64("scale", 1.0),
+        queries: args.get_usize("queries", 200),
+        sih_cap_secs: args.get_f64("sih-cap", 2.0),
+        mem_cap_gib: args.get_f64("mem-cap-gib", 8.0),
+        seed: args.get_u64("seed", 42),
+        ..Default::default()
+    };
+    if let Some(t) = args.get("threads") {
+        o.threads = t.parse().unwrap_or(o.threads);
+    }
+    o
+}
+
+fn parse_datasets(args: &Args) -> Vec<Dataset> {
+    match args.get("datasets") {
+        None => Dataset::ALL.to_vec(),
+        Some(spec) => spec
+            .split(',')
+            .filter_map(|s| {
+                let d = Dataset::parse(s.trim());
+                if d.is_none() {
+                    eprintln!("warning: unknown dataset '{s}'");
+                }
+                d
+            })
+            .collect(),
+    }
+}
+
+fn cmd_eval(args: &Args) -> i32 {
+    let exp = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let opts = eval_opts(args);
+    let datasets = parse_datasets(args);
+    eprintln!(
+        "# eval {exp}: datasets={:?} scale={} queries={} threads={}",
+        datasets.iter().map(|d| d.name()).collect::<Vec<_>>(),
+        opts.scale,
+        opts.queries,
+        opts.threads
+    );
+    let out = match exp {
+        "table1" | "datasets" => tables::table1(&opts),
+        "table2" => tables::table2(&opts, &datasets),
+        "table3" => tables::table3(&opts, &datasets),
+        "table4" => tables::table4(&opts, &datasets),
+        "fig7" => tables::fig7(&opts, &datasets),
+        "fig8" => cost::fig8(),
+        "msweep" => tables::msweep(&opts, &datasets),
+        "all" => {
+            let mut s = String::new();
+            s.push_str(&tables::table1(&opts));
+            s.push('\n');
+            s.push_str(&tables::table2(&opts, &datasets));
+            s.push('\n');
+            s.push_str(&tables::table3(&opts, &datasets));
+            s.push_str(&tables::table4(&opts, &datasets));
+            s.push('\n');
+            s.push_str(&tables::fig7(&opts, &datasets));
+            s.push_str(&cost::fig8());
+            s
+        }
+        other => {
+            eprintln!("unknown experiment '{other}'");
+            return 2;
+        }
+    };
+    println!("{out}");
+    0
+}
+
+fn cmd_sketch(args: &Args) -> i32 {
+    let Some(ds) = args.get("dataset").and_then(Dataset::parse) else {
+        eprintln!("--dataset review|cp|sift|gist required");
+        return 2;
+    };
+    let opts = eval_opts(args);
+    let cfg = data::GenConfig::for_dataset(ds, opts.scale, opts.seed, opts.threads);
+    eprintln!("generating {} items for {}...", cfg.n, ds.name());
+
+    let sketches = if args.has("xla") {
+        // ingestion through the PJRT runtime (Layer 2/1 artifacts)
+        let rt = match bst::runtime::Runtime::load(Path::new("artifacts")) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("runtime error: {e:#}");
+                return 1;
+            }
+        };
+        let sk = rt.sketcher(ds.name()).expect("sketcher");
+        eprintln!("sketching via XLA artifact {} ...", sk.meta().name);
+        if ds.uses_minhash() {
+            let sets = data::generate_sets(ds, &cfg);
+            let params =
+                bst::sketch::MinhashParams::generate(ds.l(), ds.b(), ds.dim(), cfg.seed);
+            let d = ds.dim();
+            let mut x = vec![0f32; cfg.n * d];
+            for (i, s) in sets.iter().enumerate() {
+                for &j in s {
+                    x[i * d + j as usize] = 1.0;
+                }
+            }
+            sk.sketch_minhash(&x, cfg.n, &params).expect("sketch")
+        } else {
+            let feats = data::generate_dense(ds, &cfg);
+            let params = bst::sketch::CwsParams::generate(ds.l(), ds.b(), ds.dim(), cfg.seed);
+            sk.sketch_cws(&feats, cfg.n, &params).expect("sketch")
+        }
+    } else {
+        data::generate_workload(ds, &cfg).sketches
+    };
+
+    let out = args.get_or("out", "sketches.bin");
+    if let Err(e) = data::io::save_sketches(&sketches, Path::new(out)) {
+        eprintln!("save failed: {e}");
+        return 1;
+    }
+    eprintln!(
+        "wrote {} sketches (b={}, L={}) to {out}",
+        sketches.n(),
+        sketches.b(),
+        sketches.l()
+    );
+    0
+}
+
+fn load_input(args: &Args) -> Option<bst::SketchSet> {
+    let path = args.get_or("in", "sketches.bin");
+    match data::io::load_sketches(Path::new(path)) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("loading {path}: {e}");
+            None
+        }
+    }
+}
+
+fn cmd_build(args: &Args) -> i32 {
+    let Some(set) = load_input(args) else { return 1 };
+    let kind = args.get_or("index", "si-bst");
+    let t = bst::util::timer::Timer::start();
+    let (name, bytes, extra): (String, usize, String) = match kind {
+        "si-bst" => {
+            let idx = bst::index::SingleBst::build(&set, BstConfig::default());
+            let d = idx.trie().describe();
+            (idx.name(), idx.heap_bytes(), d)
+        }
+        "mi-bst" => {
+            let m = args.get_usize("m", 2);
+            let idx = bst::index::MultiBst::build(&set, m);
+            (SearchIndex::name(&idx), SearchIndex::heap_bytes(&idx), String::new())
+        }
+        "sih" => {
+            let idx = bst::index::Sih::build(&set);
+            (SearchIndex::name(&idx), SearchIndex::heap_bytes(&idx), String::new())
+        }
+        "mih" => {
+            let m = args.get_usize("m", 2);
+            let idx = bst::index::Mih::build(&set, m);
+            (SearchIndex::name(&idx), SearchIndex::heap_bytes(&idx), String::new())
+        }
+        "hmsearch" => {
+            let tau = args.get_usize("tau", 2);
+            let idx = bst::index::HmSearch::build(&set, tau);
+            (SearchIndex::name(&idx), SearchIndex::heap_bytes(&idx), String::new())
+        }
+        "louds" => {
+            let idx = bst::index::SingleLouds::build(&set);
+            let d = idx.trie().describe();
+            (idx.name(), idx.heap_bytes(), d)
+        }
+        "fst" => {
+            let idx = bst::index::SingleFst::build(&set);
+            let d = idx.trie().describe();
+            (idx.name(), idx.heap_bytes(), d)
+        }
+        other => {
+            eprintln!("unknown index '{other}'");
+            return 2;
+        }
+    };
+    println!(
+        "index={name} n={} L={} b={} build_ms={:.0} size_mib={:.1} {extra}",
+        set.n(),
+        set.l(),
+        set.b(),
+        t.elapsed_ms(),
+        bytes as f64 / (1024.0 * 1024.0)
+    );
+    0
+}
+
+fn cmd_query(args: &Args) -> i32 {
+    let Some(set) = load_input(args) else { return 1 };
+    let Some(qspec) = args.get("q") else {
+        eprintln!("--q c0,c1,... required");
+        return 2;
+    };
+    let q: Vec<u8> = qspec
+        .split(',')
+        .filter_map(|c| c.trim().parse().ok())
+        .collect();
+    if q.len() != set.l() {
+        eprintln!("query must have L={} characters", set.l());
+        return 2;
+    }
+    let tau = args.get_usize("tau", 2);
+    let idx = bst::index::SingleBst::build(&set, BstConfig::default());
+    let t = bst::util::timer::Timer::start();
+    let mut hits = idx.search(&q, tau);
+    let us = t.elapsed_us();
+    hits.sort();
+    println!(
+        "{}",
+        bst::util::json::Json::obj(vec![
+            ("ids", bst::util::json::Json::ids(&hits)),
+            ("latency_us", bst::util::json::Json::num(us)),
+        ])
+    );
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let Some(ds) = args.get("dataset").and_then(Dataset::parse) else {
+        eprintln!("--dataset review|cp|sift|gist required");
+        return 2;
+    };
+    let opts = eval_opts(args);
+    let cfg = data::GenConfig::for_dataset(ds, opts.scale, opts.seed, opts.threads);
+    eprintln!("building workload for {} (n={})...", ds.name(), cfg.n);
+    let w = data::generate_workload(ds, &cfg);
+
+    let kind = match args.get_or("index", "si-bst") {
+        "mi-bst" => ShardIndexKind::MultiBst(args.get_usize("m", 2)),
+        _ => ShardIndexKind::Bst(BstConfig::default()),
+    };
+    let serve_cfg = ServeConfig {
+        addr: args.get_or("addr", "127.0.0.1:7878").to_string(),
+        shards: args.get_usize("shards", 4),
+        max_batch: args.get_usize("max-batch", 32),
+        max_delay_us: args.get_u64("max-delay-us", 200),
+        default_tau: args.get_usize("tau", 2),
+    };
+    eprintln!("building {} shards...", serve_cfg.shards);
+    let engine = Arc::new(Engine::build(&w.sketches, serve_cfg.shards, &kind));
+    eprintln!(
+        "engine ready: n={} shards={} index_mib={:.1}",
+        engine.n(),
+        engine.n_shards(),
+        engine.heap_bytes() as f64 / (1024.0 * 1024.0)
+    );
+    match server::serve(engine, serve_cfg) {
+        Ok(handle) => {
+            eprintln!("listening on {}", handle.addr);
+            // Block forever (ctrl-c to stop); the handle joins on drop.
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("bind failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    println!("bst {} — b-bit sketch trie", env!("CARGO_PKG_VERSION"));
+    println!("artifacts: {}", Path::new("artifacts/meta.json").exists());
+    match bst::runtime::Runtime::load(Path::new("artifacts")) {
+        Ok(rt) => {
+            println!("pjrt platform: {}", rt.platform());
+            for a in rt.registry().all() {
+                println!("  artifact {} kind={} batch={}", a.name, a.kind, a.batch);
+            }
+        }
+        Err(e) => println!("runtime unavailable: {e}"),
+    }
+    0
+}

@@ -1,0 +1,112 @@
+//! Artifact registry: parses `artifacts/meta.json` written by
+//! `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Metadata of one lowered HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// `sketch_minhash` | `sketch_cws` | `hamming_scan`.
+    pub kind: String,
+    pub dataset: String,
+    /// Static batch size of the executable.
+    pub batch: usize,
+    /// Feature dimensionality (sketch artifacts; 0 otherwise).
+    pub d: usize,
+    pub l: usize,
+    pub b: usize,
+    /// Words per plane (hamming artifacts; 0 otherwise).
+    pub w: usize,
+    /// Absolute path to the `.hlo.txt` file.
+    pub path: PathBuf,
+}
+
+/// All artifacts in a directory.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    artifacts: Vec<ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Registry {
+    /// Reads and validates `dir/meta.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?}"))?;
+        let json = Json::parse(&text).context("parsing meta.json")?;
+        let arr = json
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("meta.json missing 'artifacts' array"))?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for item in arr {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(item
+                    .get(k)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("artifact missing field {k}"))?
+                    .to_string())
+            };
+            let get_num =
+                |k: &str| -> usize { item.get(k).and_then(|v| v.as_usize()).unwrap_or(0) };
+            let file = get_str("file")?;
+            let path = dir.join(&file);
+            if !path.exists() {
+                return Err(anyhow!("artifact file {path:?} missing (re-run `make artifacts`)"));
+            }
+            artifacts.push(ArtifactMeta {
+                name: get_str("name")?,
+                kind: get_str("kind")?,
+                dataset: get_str("dataset")?,
+                batch: get_num("batch"),
+                d: get_num("d"),
+                l: get_num("l"),
+                b: get_num("b"),
+                w: get_num("w"),
+                path,
+            });
+        }
+        Ok(Registry { artifacts, dir: dir.to_path_buf() })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn all(&self) -> &[ArtifactMeta] {
+        &self.artifacts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_generated_meta() {
+        // Written by `make artifacts`; skip silently when absent so unit
+        // tests can run pre-artifact (integration tests require it).
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("meta.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let reg = Registry::load(&dir).unwrap();
+        assert!(reg.find("sketch_review").is_some());
+        assert!(reg.find("hamming_gist").is_some());
+        let s = reg.find("sketch_sift").unwrap();
+        assert_eq!((s.b, s.l, s.d), (4, 32, 128));
+        assert_eq!(s.kind, "sketch_cws");
+        let h = reg.find("hamming_gist").unwrap();
+        assert_eq!(h.w, 2);
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(Registry::load(Path::new("/no/such/dir")).is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! 0-bit consistent weighted sampling (Li, KDD 2015).
+//!
+//! Maps a non-negative weighted vector `x ∈ R_{>=0}^D` to an `L`-character
+//! sketch approximating the min-max kernel. For each hash `ℓ` and active
+//! dimension `j` (`x_j > 0`), with fixed random `r ~ Gamma(2,1)`,
+//! `c ~ Gamma(2,1)`, `β ~ U(0,1)`:
+//!
+//! ```text
+//! t_j   = floor( ln x_j / r_j + β_j )
+//! ln a_j = ln c_j − r_j · (t_j + 1 − β_j)
+//! i*    = argmin_j a_j          (first index on ties)
+//! char  = i* mod 2^b            ("0-bit": discard (i*, t_{i*}) bookkeeping)
+//! ```
+//!
+//! The random tensors (`r`, `ln c`, `β`) are generated here (f32) and fed
+//! to both this native implementation and the JAX/Pallas artifact. The
+//! prelude is all-f32; libm vs XLA may differ in the last ulp, so the
+//! cross-implementation test allows a tiny per-character mismatch rate
+//! (`< 0.5%`), while this module's own tests are exact.
+
+use crate::sketch::SketchSet;
+use crate::util::pool::par_chunks;
+use crate::util::rng::Rng;
+
+/// Random CWS parameter tensors, each row-major `l × d`.
+#[derive(Debug, Clone)]
+pub struct CwsParams {
+    pub l: usize,
+    pub b: usize,
+    pub d: usize,
+    /// `r ~ Gamma(2,1)` (f32).
+    pub r: Vec<f32>,
+    /// `ln c`, `c ~ Gamma(2,1)` (f32).
+    pub logc: Vec<f32>,
+    /// `β ~ U[0,1)` (f32).
+    pub beta: Vec<f32>,
+}
+
+impl CwsParams {
+    /// Generates parameter tensors deterministically from `seed`.
+    pub fn generate(l: usize, b: usize, d: usize, seed: u64) -> Self {
+        assert!(matches!(b, 1 | 2 | 4 | 8));
+        let mut rng = Rng::new(seed ^ 0x0c77_73u64); // "cws"
+        let n = l * d;
+        let mut r = Vec::with_capacity(n);
+        let mut logc = Vec::with_capacity(n);
+        let mut beta = Vec::with_capacity(n);
+        for _ in 0..n {
+            r.push(rng.gamma(2.0) as f32);
+            logc.push((rng.gamma(2.0) as f32).ln());
+            beta.push(rng.f32());
+        }
+        CwsParams { l, b, d, r, logc, beta }
+    }
+
+    /// Sketches one dense non-negative vector. Inactive dimensions
+    /// (`x_j <= 0`) are excluded from the argmin; an all-zero vector maps
+    /// to the all-zero sketch.
+    pub fn sketch_dense(&self, x: &[f32]) -> Vec<u8> {
+        debug_assert_eq!(x.len(), self.d);
+        let mask = (1u32 << self.b) - 1;
+        // Precompute ln x once per vector (shared across the L hashes).
+        let lnx: Vec<f32> = x.iter().map(|&v| if v > 0.0 { v.ln() } else { 0.0 }).collect();
+        (0..self.l)
+            .map(|l| {
+                let base = l * self.d;
+                let mut best = f32::INFINITY;
+                let mut best_j = 0u32;
+                for j in 0..self.d {
+                    if x[j] <= 0.0 {
+                        continue;
+                    }
+                    let r = self.r[base + j];
+                    let beta = self.beta[base + j];
+                    let t = (lnx[j] / r + beta).floor();
+                    let ln_a = self.logc[base + j] - r * (t + 1.0 - beta);
+                    if ln_a < best {
+                        best = ln_a;
+                        best_j = j as u32;
+                    }
+                }
+                (best_j & mask) as u8
+            })
+            .collect()
+    }
+
+    /// Batch-sketches dense vectors (row-major `n × d`) in parallel.
+    pub fn sketch_batch(&self, xs: &[f32], n: usize, threads: usize) -> SketchSet {
+        assert_eq!(xs.len(), n * self.d);
+        let mut out = SketchSet::zeros(self.b, self.l, n);
+        let rows: std::sync::Mutex<Vec<(usize, Vec<u8>)>> =
+            std::sync::Mutex::new(Vec::with_capacity(n));
+        par_chunks(n, threads, |range| {
+            let mut local = Vec::with_capacity(range.len());
+            for i in range {
+                local.push((i, self.sketch_dense(&xs[i * self.d..(i + 1) * self.d])));
+            }
+            rows.lock().unwrap().extend(local);
+        });
+        for (i, row) in rows.into_inner().unwrap() {
+            for (p, &c) in row.iter().enumerate() {
+                out.set_char(i, p, c);
+            }
+        }
+        out
+    }
+}
+
+/// Min-max kernel (generalized Jaccard) between two non-negative vectors:
+/// `Σ min(x_i, y_i) / Σ max(x_i, y_i)`.
+pub fn minmax_kernel(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let (mut num, mut den) = (0f64, 0f64);
+    for (&a, &b) in x.iter().zip(y) {
+        num += a.min(b) as f64;
+        den += a.max(b) as f64;
+    }
+    if den == 0.0 {
+        1.0
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = CwsParams::generate(8, 4, 64, 5);
+        let b = CwsParams::generate(8, 4, 64, 5);
+        assert_eq!(a.r, b.r);
+        let x: Vec<f32> = (0..64).map(|i| (i % 7) as f32).collect();
+        assert_eq!(a.sketch_dense(&x), b.sketch_dense(&x));
+    }
+
+    #[test]
+    fn chars_in_alphabet() {
+        let p = CwsParams::generate(32, 2, 100, 6);
+        let x: Vec<f32> = (0..100).map(|i| (i as f32).sqrt()).collect();
+        for c in p.sketch_dense(&x) {
+            assert!(c < 4);
+        }
+    }
+
+    #[test]
+    fn scale_invariance() {
+        // CWS is scale-invariant in distribution; for *fixed* params the
+        // argmin can shift slightly, but identical vectors must collide.
+        let p = CwsParams::generate(64, 4, 128, 8);
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..128).map(|_| rng.f32() + 0.01).collect();
+        assert_eq!(p.sketch_dense(&x), p.sketch_dense(&x));
+    }
+
+    #[test]
+    fn collision_tracks_minmax_kernel() {
+        let d = 256usize;
+        let l = 768usize;
+        let p = CwsParams::generate(l, 8, d, 21);
+        let mut rng = Rng::new(77);
+        let x: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+        // y = x with perturbation → known min-max similarity.
+        let y: Vec<f32> = x.iter().map(|&v| (v + 0.15 * rng.f32()).max(0.0)).collect();
+        let k = minmax_kernel(&x, &y);
+        let sx = p.sketch_dense(&x);
+        let sy = p.sketch_dense(&y);
+        let coll = sx.iter().zip(&sy).filter(|(a, b)| a == b).count() as f64 / l as f64;
+        // 0-bit CWS collision ≈ K + (1-K)/2^b; with b=8 the floor is tiny.
+        assert!(
+            (coll - k).abs() < 0.07,
+            "minmax={k:.3} collision={coll:.3}"
+        );
+    }
+
+    #[test]
+    fn inactive_dims_ignored() {
+        let d = 32;
+        let p = CwsParams::generate(16, 4, d, 9);
+        let mut x = vec![0f32; d];
+        x[3] = 2.0;
+        x[9] = 1.0;
+        // only dims 3 and 9 can win the argmin
+        for c in p.sketch_dense(&x) {
+            assert!(c == 3 % 16 || c == 9 % 16, "char {c}");
+        }
+    }
+
+    #[test]
+    fn all_zero_vector_sketches_to_zero() {
+        let p = CwsParams::generate(8, 2, 16, 10);
+        assert_eq!(p.sketch_dense(&vec![0f32; 16]), vec![0u8; 8]);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let d = 64;
+        let p = CwsParams::generate(12, 2, d, 12);
+        let mut rng = Rng::new(13);
+        let n = 40;
+        let xs: Vec<f32> = (0..n * d).map(|_| rng.f32()).collect();
+        let batch = p.sketch_batch(&xs, n, 4);
+        for i in 0..n {
+            assert_eq!(batch.row(i), p.sketch_dense(&xs[i * d..(i + 1) * d]), "i={i}");
+        }
+    }
+
+    #[test]
+    fn minmax_kernel_basics() {
+        assert_eq!(minmax_kernel(&[1.0, 2.0], &[1.0, 2.0]), 1.0);
+        assert_eq!(minmax_kernel(&[1.0, 0.0], &[0.0, 1.0]), 0.0);
+        assert_eq!(minmax_kernel(&[0.0], &[0.0]), 1.0);
+        assert!((minmax_kernel(&[2.0, 1.0], &[1.0, 1.0]) - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,157 @@
+//! Hamming distance kernels.
+//!
+//! Three implementations, fastest last (§V-C of the paper):
+//!
+//! 1. naive character-by-character — `O(L)`;
+//! 2. horizontal SWAR over packed words — `O(b · ⌈Lb/64⌉)` word ops;
+//! 3. vertical (bit-plane) — `O(b · ⌈L/64⌉)` word ops: XOR the planes,
+//!    OR-accumulate, popcount. The paper measured >10× over naive for
+//!    `L = 32, b = 4`; bench `hamming` reproduces the comparison.
+
+/// Naive Hamming distance over raw character rows.
+#[inline]
+pub fn ham_chars(a: &[u8], b: &[u8]) -> usize {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).filter(|(x, y)| x != y).count()
+}
+
+/// Per-lane "nonzero" mask collapse: given `x = a ^ b` with `b`-bit lanes,
+/// returns a word with bit set at each lane's LSB iff the lane is nonzero.
+#[inline]
+fn lane_nonzero(x: u64, b: usize) -> u64 {
+    match b {
+        1 => x,
+        2 => (x | (x >> 1)) & 0x5555_5555_5555_5555,
+        4 => {
+            let t = x | (x >> 1);
+            let t = t | (t >> 2);
+            t & 0x1111_1111_1111_1111
+        }
+        8 => {
+            let t = x | (x >> 1);
+            let t = t | (t >> 2);
+            let t = t | (t >> 4);
+            t & 0x0101_0101_0101_0101
+        }
+        _ => unreachable!("b must be 1,2,4,8"),
+    }
+}
+
+/// Horizontal Hamming distance between two packed sketches (same layout as
+/// [`super::SketchSet`]): XOR words, collapse each b-bit lane to one bit,
+/// popcount. Padding lanes (beyond `l` chars) are zero in both inputs, so
+/// they never contribute.
+#[inline]
+pub fn ham_horizontal(a: &[u64], b: &[u64], bits: usize, _l: usize) -> usize {
+    debug_assert_eq!(a.len(), b.len());
+    let mut total = 0usize;
+    for (&x, &y) in a.iter().zip(b) {
+        total += lane_nonzero(x ^ y, bits).count_ones() as usize;
+    }
+    total
+}
+
+/// Vertical Hamming distance for `L <= 64`: `planes[k]` holds bit `k` of
+/// every character packed into one word per sketch.
+///
+/// `bits_or = OR_k (a_planes[k] ^ q_planes[k])` has one set bit per
+/// mismatching position; `popcnt` finishes the job (Zhang et al.'s trick).
+#[inline]
+pub fn ham_vertical(a_planes: &[u64], q_planes: &[u64]) -> usize {
+    debug_assert_eq!(a_planes.len(), q_planes.len());
+    let mut acc = 0u64;
+    for (&x, &y) in a_planes.iter().zip(q_planes) {
+        acc |= x ^ y;
+    }
+    acc.count_ones() as usize
+}
+
+/// Vertical Hamming with early-exit threshold: returns `None` if the
+/// distance exceeds `tau` (cheap because `acc` only grows).
+#[inline]
+pub fn ham_vertical_leq(a_planes: &[u64], q_planes: &[u64], tau: usize) -> Option<usize> {
+    let mut acc = 0u64;
+    for (&x, &y) in a_planes.iter().zip(q_planes) {
+        acc |= x ^ y;
+    }
+    let d = acc.count_ones() as usize;
+    (d <= tau).then_some(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::{SketchSet, VerticalSet};
+    use crate::util::Rng;
+
+    #[test]
+    fn lane_nonzero_counts() {
+        // b=2: chars 0..4 packed; differences in lanes 0 and 2
+        let a = 0b00_01_10_11u64;
+        let b = 0b00_11_10_00u64;
+        assert_eq!(lane_nonzero(a ^ b, 2).count_ones(), 2);
+        // b=8
+        let a = 0x00_FF_01_00_00_00_00_AAu64;
+        let b = 0x00_FF_02_00_01_00_00_AAu64;
+        assert_eq!(lane_nonzero(a ^ b, 8).count_ones(), 2);
+    }
+
+    #[test]
+    fn horizontal_matches_naive() {
+        let mut rng = Rng::new(21);
+        for &b in &[1usize, 2, 4, 8] {
+            for &l in &[1usize, 7, 16, 32, 63, 64] {
+                if l * b > 64 * 8 {
+                    continue;
+                }
+                let rows: Vec<Vec<u8>> = (0..30)
+                    .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+                    .collect();
+                let set = SketchSet::from_rows(b, l, &rows);
+                for i in 0..rows.len() {
+                    for j in 0..rows.len() {
+                        let q = set.pack_row(&rows[j]);
+                        assert_eq!(
+                            set.ham_packed(i, &q),
+                            ham_chars(&rows[i], &rows[j]),
+                            "b={b} l={l} i={i} j={j}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vertical_matches_naive() {
+        let mut rng = Rng::new(23);
+        for &b in &[1usize, 2, 4, 8] {
+            let l = 33.min(64);
+            let rows: Vec<Vec<u8>> = (0..40)
+                .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+                .collect();
+            let set = SketchSet::from_rows(b, l, &rows);
+            let vert = VerticalSet::from_horizontal(&set);
+            for i in 0..rows.len() {
+                for j in 0..rows.len() {
+                    let qp = vert.pack_query(&rows[j]);
+                    assert_eq!(
+                        ham_vertical(&vert.planes_of(i), &qp),
+                        ham_chars(&rows[i], &rows[j]),
+                        "b={b} i={i} j={j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vertical_leq_thresholds() {
+        let a = [0b1010u64, 0b0110u64];
+        let q = [0b1010u64, 0b0000u64];
+        // mismatches where planes differ: plane1 differs at positions 1,2
+        let d = ham_vertical(&a, &q);
+        assert_eq!(ham_vertical_leq(&a, &q, d), Some(d));
+        assert_eq!(ham_vertical_leq(&a, &q, d.saturating_sub(1)), None);
+    }
+}

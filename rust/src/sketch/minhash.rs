@@ -1,0 +1,218 @@
+//! b-bit minwise hashing (Li & König, WWW 2010).
+//!
+//! Maps a binary set fingerprint `x ⊆ [0, D)` to an `L`-character sketch:
+//! character `ℓ` is the lowest `b` bits of `min_{j ∈ x} H_ℓ(j)` for an
+//! independent random hash `H_ℓ`. Collision probability per character
+//! approximates the Jaccard similarity (plus the 2^-b collision floor).
+//!
+//! The hash tables `H` are explicit `u32` tensors generated here and fed
+//! to **both** this native implementation and the JAX/Pallas AOT artifact,
+//! so the two produce bit-identical sketches (integer min has no rounding).
+
+use crate::sketch::SketchSet;
+use crate::util::pool::par_chunks;
+use crate::util::rng::Rng;
+
+/// Random projection tables for minhash: `l × d` independent u32 hashes.
+#[derive(Debug, Clone)]
+pub struct MinhashParams {
+    /// Sketch length (number of hash functions).
+    pub l: usize,
+    /// Bits kept per character.
+    pub b: usize,
+    /// Input dimensionality.
+    pub d: usize,
+    /// Row-major `l × d` hash values.
+    pub hashes: Vec<u32>,
+}
+
+impl MinhashParams {
+    /// Generates parameter tables deterministically from `seed`.
+    ///
+    /// Hash values are confined to `[0, 2^31)` so the XLA artifact can
+    /// take the min in `i32` with the same ordering (bit-identical
+    /// sketches across the native and AOT paths).
+    pub fn generate(l: usize, b: usize, d: usize, seed: u64) -> Self {
+        assert!(matches!(b, 1 | 2 | 4 | 8));
+        let mut rng = Rng::new(seed ^ 0x6d68_6173_68u64); // "mhash"
+        let hashes = (0..l * d).map(|_| rng.next_u32() >> 1).collect();
+        MinhashParams { l, b, d, hashes }
+    }
+
+    /// Sketches one set fingerprint given as a list of present indices.
+    /// An empty set maps to the all-`(2^b - 1)` sketch (min of nothing is
+    /// `u32::MAX`); generators never emit empty sets.
+    pub fn sketch_set(&self, present: &[u32]) -> Vec<u8> {
+        let mask = (1u32 << self.b) - 1;
+        (0..self.l)
+            .map(|l| {
+                let row = &self.hashes[l * self.d..(l + 1) * self.d];
+                let mut m = u32::MAX;
+                for &j in present {
+                    let h = row[j as usize];
+                    if h < m {
+                        m = h;
+                    }
+                }
+                (m & mask) as u8
+            })
+            .collect()
+    }
+
+    /// Sketches a dense 0/1 vector (the layout the XLA artifact consumes).
+    pub fn sketch_dense(&self, x: &[f32]) -> Vec<u8> {
+        debug_assert_eq!(x.len(), self.d);
+        let present: Vec<u32> = (0..self.d as u32)
+            .filter(|&j| x[j as usize] > 0.0)
+            .collect();
+        self.sketch_set(&present)
+    }
+
+    /// Batch-sketches `sets` (lists of present indices) in parallel into a
+    /// [`SketchSet`].
+    pub fn sketch_batch(&self, sets: &[Vec<u32>], threads: usize) -> SketchSet {
+        let n = sets.len();
+        let mut out = SketchSet::zeros(self.b, self.l, n);
+        // SAFETY-free parallelism: compute rows into a buffer, then write.
+        let rows: std::sync::Mutex<Vec<(usize, Vec<u8>)>> =
+            std::sync::Mutex::new(Vec::with_capacity(n));
+        par_chunks(n, threads, |range| {
+            let mut local = Vec::with_capacity(range.len());
+            for i in range {
+                local.push((i, self.sketch_set(&sets[i])));
+            }
+            rows.lock().unwrap().extend(local);
+        });
+        for (i, row) in rows.into_inner().unwrap() {
+            for (p, &c) in row.iter().enumerate() {
+                out.set_char(i, p, c);
+            }
+        }
+        out
+    }
+
+    /// Flattens hash tables to the f32 buffer layout the runtime feeds to
+    /// the AOT artifact (values preserved exactly: u32 reinterpreted via
+    /// `as f32` would lose precision, so artifacts take u32 directly; this
+    /// helper exists for byte serialization).
+    pub fn hashes_le_bytes(&self) -> Vec<u8> {
+        self.hashes.iter().flat_map(|h| h.to_le_bytes()).collect()
+    }
+}
+
+/// Exact Jaccard similarity of two sets given as sorted index lists.
+pub fn jaccard(a: &[u32], b: &[u32]) -> f64 {
+    let (mut i, mut j, mut inter) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                inter += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    let union = a.len() + b.len() - inter;
+    if union == 0 {
+        1.0
+    } else {
+        inter as f64 / union as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p1 = MinhashParams::generate(16, 2, 256, 42);
+        let p2 = MinhashParams::generate(16, 2, 256, 42);
+        assert_eq!(p1.hashes, p2.hashes);
+        let s = vec![3u32, 17, 200];
+        assert_eq!(p1.sketch_set(&s), p2.sketch_set(&s));
+    }
+
+    #[test]
+    fn identical_sets_identical_sketches() {
+        let p = MinhashParams::generate(32, 2, 512, 1);
+        let a = vec![1u32, 5, 9, 100, 300];
+        assert_eq!(p.sketch_set(&a), p.sketch_set(&a));
+    }
+
+    #[test]
+    fn chars_in_alphabet() {
+        let p = MinhashParams::generate(64, 4, 128, 2);
+        let s: Vec<u32> = (0..64).collect();
+        for c in p.sketch_set(&s) {
+            assert!(c < 16);
+        }
+    }
+
+    #[test]
+    fn collision_rate_tracks_jaccard() {
+        // Sketch collision probability per char ≈ J + (1-J)/2^b.
+        let d = 2000usize;
+        let l = 512usize;
+        let b = 2usize;
+        let p = MinhashParams::generate(l, b, d, 7);
+        let mut rng = Rng::new(99);
+        // Build two sets with controlled overlap.
+        let base: Vec<u32> = rng.sample_indices(d, 400).into_iter().map(|x| x as u32).collect();
+        let mut a = base[..300].to_vec();
+        let mut bset = base[100..400].to_vec();
+        a.sort();
+        bset.sort();
+        let j = jaccard(&a, &bset);
+        let sa = p.sketch_set(&a);
+        let sb = p.sketch_set(&bset);
+        let coll =
+            sa.iter().zip(&sb).filter(|(x, y)| x == y).count() as f64 / l as f64;
+        let expect = j + (1.0 - j) / (1u32 << b) as f64;
+        assert!(
+            (coll - expect).abs() < 0.08,
+            "jaccard={j:.3} collision={coll:.3} expected≈{expect:.3}"
+        );
+    }
+
+    #[test]
+    fn dense_equals_sparse() {
+        let d = 300;
+        let p = MinhashParams::generate(8, 8, d, 3);
+        let present = vec![4u32, 77, 150, 299];
+        let mut dense = vec![0f32; d];
+        for &j in &present {
+            dense[j as usize] = 1.0;
+        }
+        assert_eq!(p.sketch_set(&present), p.sketch_dense(&dense));
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let p = MinhashParams::generate(16, 2, 128, 5);
+        let mut rng = Rng::new(11);
+        let sets: Vec<Vec<u32>> = (0..50)
+            .map(|_| {
+                let k = 1 + rng.below_usize(30);
+                let mut s: Vec<u32> =
+                    rng.sample_indices(128, k).into_iter().map(|x| x as u32).collect();
+                s.sort();
+                s
+            })
+            .collect();
+        let batch = p.sketch_batch(&sets, 4);
+        for (i, s) in sets.iter().enumerate() {
+            assert_eq!(batch.row(i), p.sketch_set(s), "i={i}");
+        }
+    }
+
+    #[test]
+    fn jaccard_basics() {
+        assert_eq!(jaccard(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(jaccard(&[1, 2], &[3, 4]), 0.0);
+        assert_eq!(jaccard(&[], &[]), 1.0);
+        assert!((jaccard(&[1, 2, 3, 4], &[3, 4, 5, 6]) - 1.0 / 3.0).abs() < 1e-12);
+    }
+}

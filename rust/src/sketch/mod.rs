@@ -1,0 +1,26 @@
+//! Sketch storage and similarity-preserving hashing.
+//!
+//! A *b-bit sketch* (§II of the paper) is a length-`L` string over
+//! `Σ = [0, 2^b)`. This module provides:
+//!
+//! * [`SketchSet`] — packed horizontal storage (b-bit chars, MSB-first
+//!   within words, so word-sequence order == lexicographic order).
+//! * [`VerticalSet`] — the bit-plane ("vertical") layout of Zhang et al.
+//!   enabling bit-parallel Hamming distance (§V-C of the paper).
+//! * [`hamming`] — naive, horizontal-SWAR and vertical Hamming kernels.
+//! * [`minhash`] / [`cws`] — native Rust implementations of b-bit minwise
+//!   hashing (Li & König) and 0-bit consistent weighted sampling (Li),
+//!   bit-compatible with the JAX/Pallas AOT artifacts (the same random
+//!   parameter tensors are fed to both).
+
+pub mod cws;
+pub mod hamming;
+pub mod minhash;
+pub mod plane_store;
+pub mod types;
+pub mod vertical;
+
+pub use cws::CwsParams;
+pub use minhash::MinhashParams;
+pub use types::SketchSet;
+pub use vertical::VerticalSet;

@@ -1,0 +1,313 @@
+//! Packed horizontal sketch storage.
+
+use crate::util::{ceil_div, HeapSize};
+
+/// A database of `n` b-bit sketches of length `l`, packed at `b` bits per
+/// character.
+///
+/// Characters are packed **MSB-first** within each 64-bit word: character
+/// `p` of a sketch lives in word `p / cpw` at shift `(cpw - 1 - p%cpw) * b`
+/// (`cpw = 64 / b` characters per word). With this layout, comparing the
+/// word sequences of two sketches as big-endian-style `u64` tuples is
+/// exactly lexicographic comparison of the character strings — the trie
+/// builder sorts on raw words.
+#[derive(Debug, Clone)]
+pub struct SketchSet {
+    /// Bits per character (1, 2, 4, or 8).
+    b: usize,
+    /// Characters per sketch.
+    l: usize,
+    /// Number of sketches.
+    n: usize,
+    /// Words per sketch.
+    wps: usize,
+    /// Packed data, `n * wps` words.
+    words: Vec<u64>,
+}
+
+impl SketchSet {
+    /// Creates an empty set for `n` sketches (all characters zero).
+    pub fn zeros(b: usize, l: usize, n: usize) -> Self {
+        assert!(matches!(b, 1 | 2 | 4 | 8), "b must be one of 1,2,4,8");
+        assert!(l >= 1 && l * b <= 64 * 64, "unsupported sketch length");
+        let wps = ceil_div(l * b, 64);
+        SketchSet { b, l, n, wps, words: vec![0; n * wps] }
+    }
+
+    /// Builds from explicit character rows (mainly for tests/examples).
+    pub fn from_rows(b: usize, l: usize, rows: &[Vec<u8>]) -> Self {
+        let mut set = Self::zeros(b, l, rows.len());
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), l, "row {i} has wrong length");
+            for (p, &c) in row.iter().enumerate() {
+                set.set_char(i, p, c);
+            }
+        }
+        set
+    }
+
+    /// Builds by calling `f(i, p)` for every sketch `i`, position `p`.
+    pub fn from_fn(b: usize, l: usize, n: usize, mut f: impl FnMut(usize, usize) -> u8) -> Self {
+        let mut set = Self::zeros(b, l, n);
+        for i in 0..n {
+            for p in 0..l {
+                set.set_char(i, p, f(i, p));
+            }
+        }
+        set
+    }
+
+    #[inline]
+    pub fn b(&self) -> usize {
+        self.b
+    }
+
+    #[inline]
+    pub fn l(&self) -> usize {
+        self.l
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Alphabet size `2^b`.
+    #[inline]
+    pub fn sigma(&self) -> usize {
+        1 << self.b
+    }
+
+    /// Words per sketch.
+    #[inline]
+    pub fn words_per_sketch(&self) -> usize {
+        self.wps
+    }
+
+    /// Characters per word.
+    #[inline]
+    fn cpw(&self) -> usize {
+        64 / self.b
+    }
+
+    #[inline]
+    fn shift(&self, p: usize) -> usize {
+        let slot = p % self.cpw();
+        (self.cpw() - 1 - slot) * self.b
+    }
+
+    /// Character `p` of sketch `i`.
+    #[inline]
+    pub fn get_char(&self, i: usize, p: usize) -> u8 {
+        debug_assert!(i < self.n && p < self.l);
+        let w = self.words[i * self.wps + p / self.cpw()];
+        ((w >> self.shift(p)) as usize & (self.sigma() - 1)) as u8
+    }
+
+    /// Sets character `p` of sketch `i` to `c`.
+    #[inline]
+    pub fn set_char(&mut self, i: usize, p: usize, c: u8) {
+        debug_assert!(i < self.n && p < self.l);
+        debug_assert!((c as usize) < self.sigma(), "char {c} out of alphabet");
+        let idx = i * self.wps + p / self.cpw();
+        let sh = self.shift(p);
+        let mask = (self.sigma() as u64 - 1) << sh;
+        self.words[idx] = (self.words[idx] & !mask) | ((c as u64) << sh);
+    }
+
+    /// The packed words of sketch `i`.
+    #[inline]
+    pub fn sketch_words(&self, i: usize) -> &[u64] {
+        &self.words[i * self.wps..(i + 1) * self.wps]
+    }
+
+    /// All characters of sketch `i` as a vector.
+    pub fn row(&self, i: usize) -> Vec<u8> {
+        (0..self.l).map(|p| self.get_char(i, p)).collect()
+    }
+
+    /// Lexicographic comparison of sketches `i` and `j` (via packed words).
+    #[inline]
+    pub fn cmp_sketches(&self, i: usize, j: usize) -> std::cmp::Ordering {
+        self.sketch_words(i).cmp(self.sketch_words(j))
+    }
+
+    /// Length of the longest common prefix (in characters) of sketches
+    /// `i` and `j`, computed word-at-a-time.
+    pub fn lcp(&self, i: usize, j: usize) -> usize {
+        let (a, b) = (self.sketch_words(i), self.sketch_words(j));
+        for w in 0..self.wps {
+            if a[w] != b[w] {
+                let diff = a[w] ^ b[w];
+                // Characters are MSB-first: leading equal bits = equal chars.
+                let eq_bits = diff.leading_zeros() as usize;
+                let eq_chars_in_word = eq_bits / self.b;
+                return (w * self.cpw() + eq_chars_in_word).min(self.l);
+            }
+        }
+        self.l
+    }
+
+    /// Returns the identity permutation sorted so that
+    /// `perm[0] <= perm[1] <= ...` in lexicographic sketch order.
+    pub fn sorted_permutation(&self) -> Vec<u32> {
+        let mut perm: Vec<u32> = (0..self.n as u32).collect();
+        perm.sort_unstable_by(|&a, &b| self.cmp_sketches(a as usize, b as usize));
+        perm
+    }
+
+    /// Hamming distance between sketch `i` and a raw query row, naive
+    /// character-wise (the baseline the paper's §V-C compares against).
+    pub fn ham_naive(&self, i: usize, q: &[u8]) -> usize {
+        debug_assert_eq!(q.len(), self.l);
+        (0..self.l).filter(|&p| self.get_char(i, p) != q[p]).count()
+    }
+
+    /// Packs a raw query row into sketch words (same layout as rows).
+    pub fn pack_row(&self, q: &[u8]) -> Vec<u64> {
+        assert_eq!(q.len(), self.l);
+        let mut words = vec![0u64; self.wps];
+        for (p, &c) in q.iter().enumerate() {
+            debug_assert!((c as usize) < self.sigma());
+            words[p / self.cpw()] |= (c as u64) << self.shift(p);
+        }
+        words
+    }
+
+    /// Horizontal SWAR Hamming distance between packed words (see
+    /// [`hamming::ham_horizontal`]).
+    #[inline]
+    pub fn ham_packed(&self, i: usize, q_words: &[u64]) -> usize {
+        super::hamming::ham_horizontal(self.sketch_words(i), q_words, self.b, self.l)
+    }
+
+    /// Extracts the sub-sketches `[lo, hi)` of every sketch into a new set
+    /// (used by the multi-index approach to form blocks).
+    pub fn slice_block(&self, lo: usize, hi: usize) -> SketchSet {
+        assert!(lo < hi && hi <= self.l);
+        SketchSet::from_fn(self.b, hi - lo, self.n, |i, p| self.get_char(i, lo + p))
+    }
+
+    /// Raw words (serialization).
+    pub fn raw_words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Rebuilds from raw parts (deserialization).
+    pub fn from_raw(b: usize, l: usize, n: usize, words: Vec<u64>) -> Self {
+        let wps = ceil_div(l * b, 64);
+        assert_eq!(words.len(), n * wps);
+        SketchSet { b, l, n, wps, words }
+    }
+}
+
+impl HeapSize for SketchSet {
+    fn heap_bytes(&self) -> usize {
+        self.words.heap_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_set(b: usize, l: usize, n: usize, seed: u64) -> (SketchSet, Vec<Vec<u8>>) {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect();
+        (SketchSet::from_rows(b, l, &rows), rows)
+    }
+
+    #[test]
+    fn get_set_roundtrip_all_b() {
+        for &b in &[1usize, 2, 4, 8] {
+            let l = 130 / b; // force multi-word
+            let (set, rows) = random_set(b, l, 50, b as u64);
+            for i in 0..50 {
+                for p in 0..l {
+                    assert_eq!(set.get_char(i, p), rows[i][p], "b={b} i={i} p={p}");
+                }
+                assert_eq!(set.row(i), rows[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn word_order_is_lex_order() {
+        for &b in &[2usize, 4, 8] {
+            let (set, rows) = random_set(b, 19, 200, 7 + b as u64);
+            for i in 0..200 {
+                for j in 0..200 {
+                    assert_eq!(
+                        set.cmp_sketches(i, j),
+                        rows[i].cmp(&rows[j]),
+                        "b={b} i={i} j={j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lcp_matches_naive() {
+        let (set, rows) = random_set(2, 33, 100, 9);
+        for i in 0..100 {
+            for j in 0..100 {
+                let naive = rows[i]
+                    .iter()
+                    .zip(&rows[j])
+                    .take_while(|(a, b)| a == b)
+                    .count();
+                assert_eq!(set.lcp(i, j), naive, "i={i} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn sorted_permutation_sorts() {
+        let (set, rows) = random_set(4, 9, 300, 11);
+        let perm = set.sorted_permutation();
+        for w in perm.windows(2) {
+            assert!(rows[w[0] as usize] <= rows[w[1] as usize]);
+        }
+    }
+
+    #[test]
+    fn pack_row_matches_internal_layout() {
+        let (set, rows) = random_set(4, 21, 20, 13);
+        for i in 0..20 {
+            assert_eq!(set.pack_row(&rows[i]), set.sketch_words(i).to_vec());
+        }
+    }
+
+    #[test]
+    fn slice_block_extracts_substring() {
+        let (set, rows) = random_set(2, 32, 40, 15);
+        let block = set.slice_block(10, 25);
+        assert_eq!(block.l(), 15);
+        for i in 0..40 {
+            assert_eq!(block.row(i), rows[i][10..25].to_vec());
+        }
+    }
+
+    #[test]
+    fn ham_naive_counts_mismatches() {
+        let rows = vec![vec![0u8, 1, 2, 3], vec![0, 1, 2, 3]];
+        let set = SketchSet::from_rows(2, 4, &rows);
+        assert_eq!(set.ham_naive(0, &[0, 1, 2, 3]), 0);
+        assert_eq!(set.ham_naive(0, &[1, 1, 2, 0]), 2);
+        assert_eq!(set.ham_naive(0, &[3, 3, 3, 0]), 4);
+    }
+
+    #[test]
+    fn raw_roundtrip() {
+        let (set, _) = random_set(8, 8, 30, 17);
+        let rebuilt =
+            SketchSet::from_raw(set.b(), set.l(), set.n(), set.raw_words().to_vec());
+        for i in 0..30 {
+            assert_eq!(set.row(i), rebuilt.row(i));
+        }
+    }
+}

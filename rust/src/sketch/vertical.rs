@@ -1,0 +1,206 @@
+//! Vertical (bit-plane) sketch layout.
+//!
+//! `plane k` of a sketch holds bit `k` of each of its `L` characters,
+//! packed LSB-first into an `L`-bit field (`L <= 64`). Verification in the
+//! multi-index approach and the sparse layer of bST both use this layout
+//! for bit-parallel Hamming distance (§V-C).
+//!
+//! Storage is the flat [`super::plane_store::PlaneStore`] — `n · L` bits
+//! per plane plus one padding word (the same asymptotic space as the
+//! horizontal layout) with branch-free reads on the verification path.
+
+use super::plane_store::PlaneStore;
+use super::SketchSet;
+use crate::util::HeapSize;
+
+/// A sketch database in vertical format, supporting random access by id.
+#[derive(Debug, Clone)]
+pub struct VerticalSet {
+    store: PlaneStore,
+}
+
+impl VerticalSet {
+    /// Converts a horizontal [`SketchSet`] (requires `L <= 64`).
+    pub fn from_horizontal(set: &SketchSet) -> Self {
+        assert!(set.l() <= 64, "vertical layout requires L <= 64");
+        let (b, l, n) = (set.b(), set.l(), set.n());
+        let store = PlaneStore::from_fn(b, l, n, |k, i| {
+            let mut field = 0u64;
+            for p in 0..l {
+                field |= (((set.get_char(i, p) >> k) & 1) as u64) << p;
+            }
+            field
+        });
+        VerticalSet { store }
+    }
+
+    #[inline]
+    pub fn b(&self) -> usize {
+        self.store.b()
+    }
+
+    #[inline]
+    pub fn l(&self) -> usize {
+        self.store.width()
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.store.n()
+    }
+
+    /// The `b` plane words of sketch `i` (materialized on the stack).
+    #[inline]
+    pub fn planes_of(&self, i: usize) -> Vec<u64> {
+        (0..self.b()).map(|k| self.store.field(k, i)).collect()
+    }
+
+    /// Packs a raw query row into plane words.
+    pub fn pack_query(&self, q: &[u8]) -> Vec<u64> {
+        assert_eq!(q.len(), self.l());
+        (0..self.b())
+            .map(|k| {
+                let mut field = 0u64;
+                for (p, &c) in q.iter().enumerate() {
+                    field |= (((c >> k) & 1) as u64) << p;
+                }
+                field
+            })
+            .collect()
+    }
+
+    /// Hamming distance between sketch `i` and pre-packed query planes.
+    #[inline]
+    pub fn ham(&self, i: usize, q_planes: &[u64]) -> usize {
+        self.store.ham(i, q_planes)
+    }
+
+    /// `Some(dist)` iff `ham(i, q) <= tau` — the verification hot path.
+    #[inline]
+    pub fn ham_leq(&self, i: usize, q_planes: &[u64], tau: usize) -> Option<usize> {
+        self.store.ham_leq(i, q_planes, tau)
+    }
+
+    /// Full linear scan: ids of all sketches within `tau` of `q`.
+    pub fn scan(&self, q: &[u8], tau: usize) -> Vec<u32> {
+        let qp = self.pack_query(q);
+        let mut out = Vec::new();
+        for i in 0..self.n() {
+            if self.store.ham_leq(i, &qp, tau).is_some() {
+                out.push(i as u32);
+            }
+        }
+        out
+    }
+
+    /// Distance histogram of the whole database against `q` (diagnostics).
+    pub fn distance_histogram(&self, q: &[u8]) -> Vec<usize> {
+        let qp = self.pack_query(q);
+        let mut hist = vec![0usize; self.l() + 1];
+        for i in 0..self.n() {
+            hist[self.ham(i, &qp)] += 1;
+        }
+        hist
+    }
+
+    /// Plane field of sketch `i`, plane `k` (for the XLA runtime, which
+    /// ships planes to the Hamming-scan artifact).
+    #[inline]
+    pub fn plane_field(&self, k: usize, i: usize) -> u64 {
+        self.store.field(k, i)
+    }
+}
+
+impl HeapSize for VerticalSet {
+    fn heap_bytes(&self) -> usize {
+        self.store.heap_bytes()
+    }
+}
+
+// Re-export the free-function kernels for callers holding raw plane words.
+pub use super::hamming::{ham_vertical as ham_planes, ham_vertical_leq as ham_planes_leq};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::hamming::ham_chars;
+    use crate::util::Rng;
+
+    fn random_rows(b: usize, l: usize, n: usize, seed: u64) -> Vec<Vec<u8>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_against_horizontal() {
+        for &(b, l) in &[(2usize, 16usize), (4, 32), (8, 64), (1, 64), (2, 5)] {
+            let rows = random_rows(b, l, 64, (b * l) as u64);
+            let set = SketchSet::from_rows(b, l, &rows);
+            let vert = VerticalSet::from_horizontal(&set);
+            for (i, row) in rows.iter().enumerate() {
+                // reconstruct chars from planes
+                let planes = vert.planes_of(i);
+                for p in 0..l {
+                    let mut c = 0u8;
+                    for (k, &plane) in planes.iter().enumerate() {
+                        c |= (((plane >> p) & 1) as u8) << k;
+                    }
+                    assert_eq!(c, row[p], "b={b} l={l} i={i} p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ham_matches_naive() {
+        let rows = random_rows(4, 32, 80, 31);
+        let set = SketchSet::from_rows(4, 32, &rows);
+        let vert = VerticalSet::from_horizontal(&set);
+        for i in 0..80 {
+            let qp = vert.pack_query(&rows[i]);
+            for j in 0..80 {
+                assert_eq!(vert.ham(j, &qp), ham_chars(&rows[j], &rows[i]));
+            }
+        }
+    }
+
+    #[test]
+    fn scan_finds_exactly_neighbors() {
+        let rows = random_rows(2, 16, 300, 33);
+        let set = SketchSet::from_rows(2, 16, &rows);
+        let vert = VerticalSet::from_horizontal(&set);
+        let q = &rows[5];
+        for tau in 0..6 {
+            let got = vert.scan(q, tau);
+            let expect: Vec<u32> = (0..300)
+                .filter(|&j| ham_chars(&rows[j], q) <= tau)
+                .map(|j| j as u32)
+                .collect();
+            assert_eq!(got, expect, "tau={tau}");
+        }
+    }
+
+    #[test]
+    fn histogram_sums_to_n() {
+        let rows = random_rows(2, 16, 100, 35);
+        let set = SketchSet::from_rows(2, 16, &rows);
+        let vert = VerticalSet::from_horizontal(&set);
+        let hist = vert.distance_histogram(&rows[0]);
+        assert_eq!(hist.iter().sum::<usize>(), 100);
+        assert!(hist[0] >= 1); // itself
+    }
+
+    #[test]
+    fn space_matches_horizontal() {
+        let rows = random_rows(4, 32, 1000, 37);
+        let set = SketchSet::from_rows(4, 32, &rows);
+        let vert = VerticalSet::from_horizontal(&set);
+        // both are n*L*b bits plus per-plane padding slack
+        let raw_bits = 1000 * 32 * 4;
+        assert!(vert.heap_bytes() * 8 >= raw_bits);
+        assert!((vert.heap_bytes() as f64) < raw_bits as f64 / 8.0 * 1.4);
+        let _ = set;
+    }
+}

@@ -1,0 +1,124 @@
+//! bST layer configuration (§V of the paper).
+
+use super::middle::MiddleRepr;
+
+/// Construction parameters for [`super::BstTrie`].
+#[derive(Debug, Clone, Copy)]
+pub struct BstConfig {
+    /// Sparse-layer density parameter `λ ∈ (0, 1)`; the sparse layer
+    /// starts at the first level whose node count exceeds `λ · t_L`
+    /// (i.e. subtries below average fewer than `1/λ` leaves).
+    ///
+    /// The paper states the condition as `D(ℓ_s, L) < λ`, which is
+    /// unsatisfiable as written (`t_L / t_ℓ >= 1`); see DESIGN.md §1 for
+    /// the reading implemented here. Paper default: `λ = 0.5`.
+    pub lambda: f64,
+    /// Force the dense-layer depth `ℓ_m` (None: maximal complete level).
+    pub lm: Option<usize>,
+    /// Force the sparse-layer start `ℓ_s` (None: from `lambda`).
+    pub ls: Option<usize>,
+    /// Force every middle level to one representation (None: adaptive
+    /// TABLE/LIST selection by the `2^b/(b+1)` density crossover).
+    pub force_repr: Option<MiddleRepr>,
+}
+
+impl Default for BstConfig {
+    fn default() -> Self {
+        BstConfig { lambda: 0.5, lm: None, ls: None, force_repr: None }
+    }
+}
+
+impl BstConfig {
+    /// Resolves `(ℓ_m, ℓ_s)` for a database with per-level node counts
+    /// `counts[0..=L]`.
+    pub fn resolve_layers(&self, b: usize, l: usize, counts: &[usize]) -> (usize, usize) {
+        debug_assert_eq!(counts.len(), l + 1);
+        // max ℓ with t_ℓ = 2^{bℓ} (the level is complete). The implicit
+        // dense representation is only valid up to here, so user overrides
+        // are clamped to it.
+        let max_complete = {
+            let mut lm = 0usize;
+            let mut full = 1u128;
+            for (lv, &t) in counts.iter().enumerate().skip(1) {
+                full = full.saturating_mul(1u128 << b);
+                if t as u128 == full {
+                    lm = lv;
+                } else {
+                    break;
+                }
+            }
+            lm
+        };
+        let lm = match self.lm {
+            Some(v) => v.min(max_complete),
+            None => max_complete,
+        };
+        let t_l = counts[l];
+        let ls = match self.ls {
+            Some(v) => v.clamp(lm, l),
+            None => {
+                let threshold = self.lambda * t_l as f64;
+                let mut ls = l;
+                for lv in lm..=l {
+                    if counts[lv] as f64 > threshold {
+                        ls = lv;
+                        break;
+                    }
+                }
+                ls
+            }
+        };
+        (lm, ls)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_depth_detects_complete_levels() {
+        // b=2: alphabet 4. counts: root, 4, 16, 60 (level 3 incomplete).
+        let counts = vec![1usize, 4, 16, 60];
+        let cfg = BstConfig::default();
+        let (lm, _) = cfg.resolve_layers(2, 3, &counts);
+        assert_eq!(lm, 2);
+    }
+
+    #[test]
+    fn no_dense_layer_when_root_fanout_incomplete() {
+        let counts = vec![1usize, 3, 9, 27];
+        let (lm, _) = BstConfig::default().resolve_layers(2, 3, &counts);
+        assert_eq!(lm, 0);
+    }
+
+    #[test]
+    fn sparse_start_at_lambda_crossing() {
+        // t_L = 100, lambda=0.5 → first level with > 50 nodes.
+        let counts = vec![1usize, 4, 10, 40, 60, 90, 100];
+        let (_, ls) = BstConfig::default().resolve_layers(2, 6, &counts);
+        assert_eq!(ls, 4);
+    }
+
+    #[test]
+    fn overrides_respected_and_clamped() {
+        let counts = vec![1usize, 4, 16, 64, 100];
+        let cfg = BstConfig { lm: Some(1), ls: Some(0), ..Default::default() };
+        let (lm, ls) = cfg.resolve_layers(2, 4, &counts);
+        assert_eq!(lm, 1);
+        assert_eq!(ls, 1, "ls clamps up to lm");
+        let cfg = BstConfig { lm: Some(9), ls: Some(9), ..Default::default() };
+        let (lm, ls) = cfg.resolve_layers(2, 4, &counts);
+        // lm clamps to the max complete level (3: t_4=100 != 4^4), ls to L.
+        assert_eq!((lm, ls), (3, 4));
+    }
+
+    #[test]
+    fn degenerate_single_chain() {
+        // one distinct sketch: t_ℓ = 1 everywhere.
+        let counts = vec![1usize; 9];
+        let (lm, ls) = BstConfig::default().resolve_layers(2, 8, &counts);
+        assert_eq!(lm, 0);
+        assert_eq!(ls, 0, "whole trie is one collapsed path");
+    }
+}

@@ -1,0 +1,51 @@
+//! Dense layer (§V-A): the implicit complete `2^b`-ary trie.
+//!
+//! Levels `0..ℓ_m` store **nothing** but `ℓ_m` itself: node `u` at level
+//! `ℓ < ℓ_m` has exactly the children `u·2^b + c` for every `c ∈ Σ`, and
+//! the 0-based node id at each level coincides with the lexicographic rank
+//! of its prefix, so the ids flow seamlessly into the middle layer.
+//!
+//! `children(u_ℓ) = { (u·2^b + c, c) : c ∈ [0, 2^b) }` — pure arithmetic,
+//! no memory access. This module only hosts the helper + its tests; the
+//! traversal inlines the arithmetic directly.
+
+/// First child id of dense node `u` (its children are
+/// `child0(u, b) + c`).
+#[inline]
+pub fn child0(u: usize, b: usize) -> usize {
+    u << b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_enumerate_prefixes_in_lex_order() {
+        // b = 2 (alphabet 4): level-2 node for prefix "ca" (chars 2,0)
+        // should be id 2*4 + 0 = 8.
+        let b = 2;
+        let root = 0usize;
+        let level1: Vec<usize> = (0..4).map(|c| child0(root, b) + c).collect();
+        assert_eq!(level1, vec![0, 1, 2, 3]);
+        let ca = child0(level1[2], b) + 0;
+        assert_eq!(ca, 8);
+        let dd = child0(level1[3], b) + 3;
+        assert_eq!(dd, 15);
+    }
+
+    #[test]
+    fn level_widths_are_powers() {
+        let b = 4;
+        let mut ids = vec![0usize];
+        for _ in 0..3 {
+            ids = ids
+                .iter()
+                .flat_map(|&u| (0..(1 << b)).map(move |c| child0(u, b) + c))
+                .collect();
+        }
+        assert_eq!(ids.len(), 1 << (4 * 3));
+        // contiguity: ids are exactly 0..16^3
+        assert!(ids.iter().enumerate().all(|(i, &u)| i == u));
+    }
+}

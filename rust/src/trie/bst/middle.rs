@@ -1,0 +1,330 @@
+//! Middle layer (§V-B): per-level TABLE or LIST node representation.
+//!
+//! * **TABLE** — bit array `H_ℓ` of `2^b · t_{ℓ-1}` bits; bit
+//!   `u·2^b + c` is set iff node `u` at level `ℓ-1` has a child labeled
+//!   `c`. `children(u)` = one rank at the window start + a bit scan of the
+//!   `2^b`-bit window (windows are `2^b`-aligned, so they never straddle
+//!   more words than `⌈2^b/64⌉`).
+//! * **LIST** — label array `C_ℓ` (b bits each) + first-sibling bit array
+//!   `B_ℓ`; `children(u)` = `[select1(B_ℓ, u), select1(B_ℓ, u+1))`.
+//!
+//! Selection (§V-B): TABLE costs `2^b · t_{ℓ-1}` bits, LIST costs
+//! `(b+1) · t_ℓ` bits, so TABLE wins iff the level's density
+//! `t_ℓ / t_{ℓ-1}` exceeds `2^b / (b+1)`.
+
+use crate::bits::rsvec::SelectMode;
+use crate::bits::{BitVec, IntVec, RsBitVec};
+use crate::trie::builder::SortedSketches;
+use crate::util::HeapSize;
+
+/// Which representation a middle level uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MiddleRepr {
+    Table,
+    List,
+}
+
+/// One encoded middle level.
+pub enum MiddleLevel {
+    Table {
+        /// `H_ℓ`: windowed child bitmaps with rank support.
+        h: RsBitVec,
+        /// Alphabet bits `b` (window width = `2^b`).
+        b: usize,
+    },
+    List {
+        /// `C_ℓ`: edge labels of the level's nodes.
+        c: IntVec,
+        /// `B_ℓ`: 1 iff the node is the first of its siblings.
+        bfirst: RsBitVec,
+    },
+}
+
+impl MiddleLevel {
+    /// Encodes level `level` (1-based) of the trie, choosing TABLE/LIST by
+    /// density unless `force` is given.
+    pub fn build(ss: &SortedSketches, level: usize, force: Option<MiddleRepr>) -> Self {
+        let b = ss.set().b();
+        let sigma = 1usize << b;
+        let t_prev = ss.level_counts()[level - 1];
+        let t_cur = ss.level_counts()[level];
+
+        let density = t_cur as f64 / t_prev as f64;
+        let crossover = sigma as f64 / (b as f64 + 1.0);
+        let table_bits = sigma.saturating_mul(t_prev);
+        let mut repr = force.unwrap_or(if density > crossover {
+            MiddleRepr::Table
+        } else {
+            MiddleRepr::List
+        });
+        // RsBitVec is bounded at 2^32 bits; huge sparse levels fall back to
+        // LIST (the density rule would almost never pick TABLE there).
+        if table_bits >= u32::MAX as usize {
+            repr = MiddleRepr::List;
+        }
+
+        match repr {
+            MiddleRepr::Table => {
+                let mut h = BitVec::zeros(table_bits);
+                let mut parent = 0usize;
+                let mut seen_first = false;
+                for span in ss.nodes_at_level(level) {
+                    if span.first_sibling {
+                        if seen_first {
+                            parent += 1;
+                        }
+                        seen_first = true;
+                    }
+                    h.set(parent * sigma + span.label as usize);
+                }
+                MiddleLevel::Table { h: RsBitVec::new(h, SelectMode::None), b }
+            }
+            MiddleRepr::List => {
+                let mut c = IntVec::with_capacity(b, t_cur);
+                let mut bfirst = BitVec::with_capacity(t_cur);
+                for span in ss.nodes_at_level(level) {
+                    c.push(span.label as u64);
+                    bfirst.push(span.first_sibling);
+                }
+                MiddleLevel::List {
+                    c,
+                    bfirst: RsBitVec::new(bfirst, SelectMode::Ones),
+                }
+            }
+        }
+    }
+
+    pub fn repr(&self) -> MiddleRepr {
+        match self {
+            MiddleLevel::Table { .. } => MiddleRepr::Table,
+            MiddleLevel::List { .. } => MiddleRepr::List,
+        }
+    }
+
+    /// Number of nodes at this level (children entries).
+    #[allow(dead_code)] // used by tests and diagnostics
+    pub fn node_count(&self) -> usize {
+        match self {
+            MiddleLevel::Table { h, .. } => h.count_ones(),
+            MiddleLevel::List { c, .. } => c.len(),
+        }
+    }
+
+    /// Invokes `f(child_id, label)` for every child of node `u` at the
+    /// previous level, in label order.
+    #[inline]
+    pub fn children<F: FnMut(usize, u8)>(&self, u: usize, mut f: F) {
+        match self {
+            MiddleLevel::Table { h, b } => {
+                let sigma = 1usize << b;
+                let start = u * sigma;
+                // child ids of the window begin after all earlier 1s
+                let mut child = h.rank1(start);
+                if sigma <= 64 {
+                    // aligned single-word window
+                    let mut w = h.get_bits(start, sigma);
+                    while w != 0 {
+                        let c = w.trailing_zeros() as u8;
+                        f(child, c);
+                        child += 1;
+                        w &= w - 1;
+                    }
+                } else {
+                    // b = 8: four aligned words
+                    let words = h.words();
+                    let w0 = start / 64;
+                    for k in 0..sigma / 64 {
+                        let mut w = words.get(w0 + k).copied().unwrap_or(0);
+                        while w != 0 {
+                            let c = (k * 64) as u8 + w.trailing_zeros() as u8;
+                            f(child, c);
+                            child += 1;
+                            w &= w - 1;
+                        }
+                    }
+                }
+            }
+            MiddleLevel::List { c, bfirst } => {
+                let lo = bfirst.select1(u);
+                let hi = if u + 1 < bfirst.count_ones() {
+                    bfirst.select1(u + 1)
+                } else {
+                    c.len()
+                };
+                for v in lo..hi {
+                    f(v, c.get(v) as u8);
+                }
+            }
+        }
+    }
+
+    /// Child of node `u` with edge label exactly `label`, if present —
+    /// the `dist == τ` fast path of the traversal (and the exact-lookup
+    /// primitive when bST serves as an inverted index).
+    #[inline]
+    pub fn child_with_label(&self, u: usize, label: u8) -> Option<usize> {
+        match self {
+            MiddleLevel::Table { h, b } => {
+                let pos = (u << b) + label as usize;
+                h.get(pos).then(|| h.rank1(pos))
+            }
+            MiddleLevel::List { c, bfirst } => {
+                let lo = bfirst.select1(u);
+                let hi = if u + 1 < bfirst.count_ones() {
+                    bfirst.select1(u + 1)
+                } else {
+                    c.len()
+                };
+                // children are label-sorted; ranges are tiny → linear scan
+                (lo..hi).find(|&v| c.get(v) as u8 == label)
+            }
+        }
+    }
+
+    /// Space in bits of the core payload (excluding rank/select overhead),
+    /// as accounted in §V-B of the paper.
+    #[allow(dead_code)] // used by tests and diagnostics
+    pub fn payload_bits(&self) -> usize {
+        match self {
+            MiddleLevel::Table { h, .. } => h.len(),
+            MiddleLevel::List { c, bfirst } => c.len() * c.width() + bfirst.len(),
+        }
+    }
+}
+
+impl HeapSize for MiddleLevel {
+    fn heap_bytes(&self) -> usize {
+        match self {
+            MiddleLevel::Table { h, .. } => h.heap_bytes(),
+            MiddleLevel::List { c, bfirst } => c.heap_bytes() + bfirst.heap_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::SketchSet;
+    use crate::util::Rng;
+    use std::collections::BTreeMap;
+
+    /// Reference children: group distinct prefixes.
+    fn expected_children(
+        rows: &[Vec<u8>],
+        level: usize,
+    ) -> BTreeMap<Vec<u8>, Vec<(usize, u8)>> {
+        use std::collections::BTreeSet;
+        let prefixes: BTreeSet<Vec<u8>> =
+            rows.iter().map(|r| r[..level].to_vec()).collect();
+        let mut by_parent: BTreeMap<Vec<u8>, Vec<(usize, u8)>> = BTreeMap::new();
+        for (id, p) in prefixes.iter().enumerate() {
+            by_parent
+                .entry(p[..level - 1].to_vec())
+                .or_default()
+                .push((id, p[level - 1]));
+        }
+        by_parent
+    }
+
+    fn check_level(b: usize, l: usize, n: usize, seed: u64, force: Option<MiddleRepr>) {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect();
+        let set = SketchSet::from_rows(b, l, &rows);
+        let ss = SortedSketches::build(&set);
+        for level in 1..=l {
+            let ml = MiddleLevel::build(&ss, level, force);
+            assert_eq!(ml.node_count(), ss.level_counts()[level]);
+            let expect = expected_children(&rows, level);
+            // parents are the distinct (level-1)-prefixes in lex order
+            for (u, (_parent, kids)) in expect.iter().enumerate() {
+                let mut got = Vec::new();
+                ml.children(u, |id, c| got.push((id, c)));
+                assert_eq!(&got, kids, "b={b} level={level} u={u} {:?}", ml.repr());
+            }
+        }
+    }
+
+    #[test]
+    fn table_children_match_reference() {
+        check_level(2, 6, 400, 1, Some(MiddleRepr::Table));
+        check_level(4, 4, 300, 2, Some(MiddleRepr::Table));
+        check_level(8, 3, 500, 3, Some(MiddleRepr::Table)); // multi-word windows
+        check_level(1, 10, 300, 4, Some(MiddleRepr::Table));
+    }
+
+    #[test]
+    fn list_children_match_reference() {
+        check_level(2, 6, 400, 5, Some(MiddleRepr::List));
+        check_level(4, 4, 300, 6, Some(MiddleRepr::List));
+        check_level(8, 3, 500, 7, Some(MiddleRepr::List));
+    }
+
+    #[test]
+    fn adaptive_selection_follows_density_rule() {
+        let b = 2usize;
+        let mut rng = Rng::new(8);
+        let rows: Vec<Vec<u8>> = (0..3000)
+            .map(|_| (0..8).map(|_| rng.below(4) as u8).collect())
+            .collect();
+        let set = SketchSet::from_rows(b, 8, &rows);
+        let ss = SortedSketches::build(&set);
+        for level in 1..=8 {
+            let ml = MiddleLevel::build(&ss, level, None);
+            let density = ss.level_counts()[level] as f64
+                / ss.level_counts()[level - 1] as f64;
+            let expect = if density > 4.0 / 3.0 {
+                MiddleRepr::Table
+            } else {
+                MiddleRepr::List
+            };
+            assert_eq!(ml.repr(), expect, "level={level} density={density}");
+        }
+    }
+
+    #[test]
+    fn paper_example_table_figure3() {
+        // Figure 3 of the paper: H_2 = 1,1,1,1, 1,0,1,0, ... for a trie
+        // where node 1 at level 1 has children a..d and node 2 has {a, c}.
+        // We reproduce the semantics: set bits at positions (u-1)*4+c.
+        let rows = vec![
+            vec![0u8, 0], // a a
+            vec![0, 1],   // a b
+            vec![0, 2],
+            vec![0, 3],
+            vec![1, 0], // b a
+            vec![1, 2], // b c
+        ];
+        let set = SketchSet::from_rows(2, 2, &rows);
+        let ss = SortedSketches::build(&set);
+        let ml = MiddleLevel::build(&ss, 2, Some(MiddleRepr::Table));
+        let mut got = Vec::new();
+        ml.children(1, |id, c| got.push((id, c)));
+        // node "b" (id 1 at level 1): children ids 4,5 labels a,c
+        assert_eq!(got, vec![(4, 0), (5, 2)]);
+    }
+
+    #[test]
+    fn space_crossover_is_honest() {
+        // For a level encoded both ways, the density rule must pick the
+        // smaller payload.
+        let mut rng = Rng::new(9);
+        let rows: Vec<Vec<u8>> = (0..2000)
+            .map(|_| (0..6).map(|_| rng.below(4) as u8).collect())
+            .collect();
+        let set = SketchSet::from_rows(2, 6, &rows);
+        let ss = SortedSketches::build(&set);
+        for level in 1..=6 {
+            let t = MiddleLevel::build(&ss, level, Some(MiddleRepr::Table));
+            let l_ = MiddleLevel::build(&ss, level, Some(MiddleRepr::List));
+            let adaptive = MiddleLevel::build(&ss, level, None);
+            let min_bits = t.payload_bits().min(l_.payload_bits());
+            assert_eq!(
+                adaptive.payload_bits(),
+                min_bits,
+                "level {level}: adaptive must match the smaller payload"
+            );
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! The b-bit Sketch Trie (bST) — §V of the paper.
+//!
+//! A three-layer succinct trie exploiting the distribution of random
+//! fixed-length strings: levels near the root are *complete* (every
+//! `2^b`-ary branch exists), levels near the leaves barely branch.
+//!
+//! ```text
+//!          level 0 ─┬─ dense layer: implicit complete 2^b-ary trie;
+//!                   │  only ℓ_m is stored; children are arithmetic.
+//!         level ℓ_m ┼─ middle layer: per level, TABLE (bitmap + rank)
+//!                   │  or LIST (labels + first-sibling bits + select),
+//!                   │  picked by the density crossover 2^b/(b+1).
+//!         level ℓ_s ┼─ sparse layer: subtries collapsed to suffix
+//!                   │  strings in vertical format (P) + leftmost-leaf
+//!          level L ─┴─ bits (D); Hamming by XOR/OR/popcnt.
+//! ```
+//!
+//! Search is Algorithm 1: DFS carrying the running Hamming distance,
+//! pruning once `dist > τ`, switching to bit-parallel suffix comparison
+//! in the sparse layer.
+
+mod config;
+mod dense;
+pub(crate) mod middle;
+mod search;
+mod sparse;
+
+pub use config::BstConfig;
+pub use middle::MiddleRepr;
+
+use super::builder::SortedSketches;
+use super::SketchTrie;
+use crate::util::HeapSize;
+
+/// The b-bit sketch trie.
+pub struct BstTrie {
+    pub(crate) b: usize,
+    pub(crate) l: usize,
+    /// Dense-layer depth (levels `0..lm` are implicit-complete).
+    pub(crate) lm: usize,
+    /// Sparse-layer start (levels `ls..L` are collapsed paths).
+    pub(crate) ls: usize,
+    /// Middle-layer representations for levels `lm+1 ..= ls`
+    /// (index 0 ↔ level `lm+1`).
+    pub(crate) middle: Vec<middle::MiddleLevel>,
+    /// Sparse layer: collapsed suffixes + leaf grouping.
+    pub(crate) sparse: sparse::SparseLayer,
+    /// Leaf postings (leaf k ↔ distinct sketch k).
+    pub(crate) post_offsets: Vec<u32>,
+    pub(crate) post_ids: Vec<u32>,
+    /// Node counts per level (diagnostics / reports).
+    pub(crate) level_counts: Vec<usize>,
+}
+
+impl BstTrie {
+    /// Builds a bST over the sorted database with the given configuration.
+    pub fn build(ss: &SortedSketches, cfg: BstConfig) -> Self {
+        let set = ss.set();
+        let (b, l) = (set.b(), set.l());
+        let counts = ss.level_counts();
+
+        let (lm, ls) = cfg.resolve_layers(b, l, counts);
+
+        // Middle layer: pick TABLE or LIST per level by node density.
+        let mut middle = Vec::with_capacity(ls - lm);
+        for level in (lm + 1)..=ls {
+            middle.push(middle::MiddleLevel::build(ss, level, cfg.force_repr));
+        }
+
+        let sparse = sparse::SparseLayer::build(ss, ls);
+        let (post_offsets, post_ids) = ss.postings_parts();
+
+        BstTrie {
+            b,
+            l,
+            lm,
+            ls,
+            middle,
+            sparse,
+            post_offsets,
+            post_ids,
+            level_counts: counts.to_vec(),
+        }
+    }
+
+    /// Dense-layer depth `ℓ_m`.
+    pub fn dense_depth(&self) -> usize {
+        self.lm
+    }
+
+    /// Sparse-layer start `ℓ_s`.
+    pub fn sparse_start(&self) -> usize {
+        self.ls
+    }
+
+    /// Per-level representation choices, e.g. `"DDTTLLS"` (Dense / Table /
+    /// List / Sparse) — used by `describe` and the eval reports.
+    pub fn layer_string(&self) -> String {
+        let mut s = String::new();
+        for _ in 0..self.lm {
+            s.push('D');
+        }
+        for ml in &self.middle {
+            s.push(match ml.repr() {
+                MiddleRepr::Table => 'T',
+                MiddleRepr::List => 'L',
+            });
+        }
+        for _ in self.ls..self.l {
+            s.push('S');
+        }
+        s
+    }
+
+    #[inline]
+    pub(crate) fn postings_of(&self, leaf: usize) -> &[u32] {
+        let lo = self.post_offsets[leaf] as usize;
+        let hi = self.post_offsets[leaf + 1] as usize;
+        &self.post_ids[lo..hi]
+    }
+}
+
+impl SketchTrie for BstTrie {
+    fn search_into(&self, q: &[u8], tau: usize, out: &mut Vec<u32>) {
+        assert_eq!(q.len(), self.l);
+        search::search(self, q, tau, out);
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.middle.iter().map(|m| m.heap_bytes()).sum::<usize>()
+            + self.sparse.heap_bytes()
+            + self.post_offsets.heap_bytes()
+            + self.post_ids.heap_bytes()
+            + self.level_counts.heap_bytes()
+    }
+
+    fn node_count(&self) -> usize {
+        self.level_counts[1..].iter().sum()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "bST(b={}, L={}, lm={}, ls={}, layers={}, nodes={})",
+            self.b,
+            self.l,
+            self.lm,
+            self.ls,
+            self.layer_string(),
+            self.node_count()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::hamming::ham_chars;
+    use crate::sketch::SketchSet;
+    use crate::trie::pointer::PointerTrie;
+    use crate::util::Rng;
+
+    fn random_rows(b: usize, l: usize, n: usize, seed: u64) -> Vec<Vec<u8>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect()
+    }
+
+    /// Clustered rows so that all three layers materialize.
+    fn clustered_rows(b: usize, l: usize, n: usize, seed: u64) -> Vec<Vec<u8>> {
+        let mut rng = Rng::new(seed);
+        let centers = random_rows(b, l, 20, seed ^ 1);
+        (0..n)
+            .map(|_| {
+                let mut row = centers[rng.below_usize(20)].clone();
+                for _ in 0..rng.below_usize(3) {
+                    let p = rng.below_usize(l);
+                    row[p] = rng.below(1 << b) as u8;
+                }
+                row
+            })
+            .collect()
+    }
+
+    fn check_against_pt(rows: &[Vec<u8>], b: usize, l: usize, cfg: BstConfig, taus: &[usize]) {
+        let set = SketchSet::from_rows(b, l, rows);
+        let ss = SortedSketches::build(&set);
+        let pt = PointerTrie::build(&ss);
+        let bst = BstTrie::build(&ss, cfg);
+        let mut rng = Rng::new(0xABCD);
+        let mut queries: Vec<Vec<u8>> = (0..20)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect();
+        queries.extend(rows.iter().take(10).cloned());
+        for q in &queries {
+            for &tau in taus {
+                let mut expect = pt.search(q, tau);
+                let mut got = bst.search(q, tau);
+                expect.sort();
+                got.sort();
+                assert_eq!(got, expect, "{} tau={tau} q={q:?}", bst.describe());
+            }
+        }
+    }
+
+    #[test]
+    fn matches_pointer_trie_uniform() {
+        for &(b, l) in &[(1usize, 16usize), (2, 8), (2, 16), (4, 8), (8, 4)] {
+            let rows = random_rows(b, l, 600, (b * 31 + l) as u64);
+            check_against_pt(&rows, b, l, BstConfig::default(), &[0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn matches_pointer_trie_clustered() {
+        for &(b, l) in &[(2usize, 16usize), (4, 12), (8, 8)] {
+            let rows = clustered_rows(b, l, 800, (b * 7 + l) as u64);
+            check_against_pt(&rows, b, l, BstConfig::default(), &[0, 1, 2, 4]);
+        }
+    }
+
+    #[test]
+    fn forced_layer_boundaries() {
+        // Exercise all (lm, ls) corner combinations.
+        let rows = clustered_rows(2, 10, 500, 99);
+        for (lm, ls) in [(0, 10), (0, 0), (1, 5), (2, 10), (0, 5)] {
+            let cfg = BstConfig { lm: Some(lm), ls: Some(ls), ..Default::default() };
+            check_against_pt(&rows, 2, 10, cfg, &[0, 1, 3]);
+        }
+    }
+
+    #[test]
+    fn forced_reprs() {
+        let rows = clustered_rows(2, 12, 500, 101);
+        for repr in [Some(MiddleRepr::Table), Some(MiddleRepr::List), None] {
+            let cfg = BstConfig { force_repr: repr, ..Default::default() };
+            check_against_pt(&rows, 2, 12, cfg, &[1, 2]);
+        }
+    }
+
+    #[test]
+    fn dense_layer_forms_on_saturated_alphabet() {
+        // With b=1, L=16 and 2000 random rows, the top levels are complete.
+        let rows = random_rows(1, 16, 4000, 5);
+        let set = SketchSet::from_rows(1, 16, &rows);
+        let ss = SortedSketches::build(&set);
+        let bst = BstTrie::build(&ss, BstConfig::default());
+        assert!(bst.dense_depth() >= 4, "lm={} ({})", bst.dense_depth(), bst.describe());
+    }
+
+    #[test]
+    fn duplicates_collapse_to_single_leaf() {
+        let mut rows = vec![vec![1u8, 2, 3, 1, 2, 3, 1, 2]; 40];
+        rows.extend(random_rows(2, 8, 100, 7));
+        let set = SketchSet::from_rows(2, 8, &rows);
+        let ss = SortedSketches::build(&set);
+        let bst = BstTrie::build(&ss, BstConfig::default());
+        let got = bst.search(&[1, 2, 3, 1, 2, 3, 1, 2], 0);
+        assert!(got.len() >= 40);
+        assert!((0..40u32).all(|i| got.contains(&i)));
+    }
+
+    #[test]
+    fn smaller_than_pointer_trie() {
+        let rows = clustered_rows(2, 16, 4000, 13);
+        let set = SketchSet::from_rows(2, 16, &rows);
+        let ss = SortedSketches::build(&set);
+        let pt = PointerTrie::build(&ss);
+        let bst = BstTrie::build(&ss, BstConfig::default());
+        assert!(
+            bst.heap_bytes() * 3 < pt.heap_bytes(),
+            "bst={} pt={}",
+            bst.heap_bytes(),
+            pt.heap_bytes()
+        );
+    }
+}

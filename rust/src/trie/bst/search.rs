@@ -1,0 +1,137 @@
+//! Similarity search over bST (Algorithm 1 of the paper).
+//!
+//! Depth-first traversal carrying the running Hamming distance `dist`
+//! between the query prefix and each node's prefix:
+//!
+//! * **dense layer** — children are arithmetic; when the distance budget
+//!   is exhausted (`dist == τ`) only the query-matching child is taken,
+//!   which collapses the complete-trie fan-out to a single path;
+//! * **middle layer** — `children()` via TABLE/LIST; same budget shortcut
+//!   through `child_with_label`;
+//! * **sparse layer** — every leaf suffix under the node is compared with
+//!   the bit-parallel vertical Hamming kernel against the remaining
+//!   budget `τ - dist`.
+
+use super::dense::child0;
+use super::BstTrie;
+
+struct Searcher<'a> {
+    t: &'a BstTrie,
+    q: &'a [u8],
+    tau: usize,
+    q_planes: Vec<u64>,
+    out: &'a mut Vec<u32>,
+}
+
+/// Entry point called by [`BstTrie::search_into`].
+pub fn search(t: &BstTrie, q: &[u8], tau: usize, out: &mut Vec<u32>) {
+    let q_planes = t.sparse.pack_query(&q[t.ls..]);
+    let mut s = Searcher { t, q, tau, q_planes, out };
+    s.descend(0, 0, 0);
+}
+
+impl<'a> Searcher<'a> {
+    fn descend(&mut self, level: usize, u: usize, dist: usize) {
+        if level == self.t.ls {
+            self.scan_sparse(u, dist);
+            return;
+        }
+        let qc = self.q[level];
+        if level < self.t.lm {
+            // Dense layer: implicit complete 2^b-ary node.
+            let base = child0(u, self.t.b);
+            if dist == self.tau {
+                self.descend(level + 1, base + qc as usize, dist);
+            } else {
+                let sigma = 1usize << self.t.b;
+                for c in 0..sigma {
+                    self.descend(level + 1, base + c, dist + usize::from(c != qc as usize));
+                }
+            }
+        } else {
+            let ml = &self.t.middle[level - self.t.lm];
+            if dist == self.tau {
+                if let Some(child) = ml.child_with_label(u, qc) {
+                    self.descend(level + 1, child, dist);
+                }
+            } else {
+                // Collect children first to keep the closure borrow local.
+                let mut kids: [(u32, u8); 256] = [(0, 0); 256];
+                let mut n_kids = 0usize;
+                ml.children(u, |child, c| {
+                    kids[n_kids] = (child as u32, c);
+                    n_kids += 1;
+                });
+                for &(child, c) in &kids[..n_kids] {
+                    let nd = dist + usize::from(c != qc);
+                    if nd <= self.tau {
+                        self.descend(level + 1, child as usize, nd);
+                    }
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn scan_sparse(&mut self, u: usize, dist: usize) {
+        let budget = self.tau - dist;
+        let (lo, hi) = self.t.sparse.leaf_range(u);
+        for v in lo..hi {
+            if self.t.sparse.ham_suffix(v, &self.q_planes) <= budget {
+                self.out.extend_from_slice(self.t.postings_of(v));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::SketchSet;
+    use crate::trie::builder::SortedSketches;
+    use crate::trie::bst::BstConfig;
+    use crate::trie::SketchTrie;
+
+    #[test]
+    fn paper_figure1_example() {
+        // Figure 1: eleven 2-bit sketches over {a,b,c,d} = {0,1,2,3},
+        // query aaaaa, tau = 1 → ids of sketches within distance 1.
+        let names = [
+            "baabb", "aaaaa", "baaaa", "caaca", "caaca", "aaaaa", "caaca",
+            "ddccc", "abaab", "bcbcb", "ddddd",
+        ];
+        let rows: Vec<Vec<u8>> = names
+            .iter()
+            .map(|s| s.bytes().map(|c| c - b'a').collect())
+            .collect();
+        let set = SketchSet::from_rows(2, 5, &rows);
+        let ss = SortedSketches::build(&set);
+        let bst = super::super::BstTrie::build(&ss, BstConfig::default());
+        let q: Vec<u8> = "aaaaa".bytes().map(|c| c - b'a').collect();
+        let mut got = bst.search(&q, 1);
+        got.sort();
+        // ham=0: ids 1,5 ("aaaaa"); ham=1: id 2 ("baaaa").
+        assert_eq!(got, vec![1, 2, 5]);
+        // tau = 2 additionally admits caaca (ids 3,4,6) and abaab (id 8).
+        let mut got2 = bst.search(&q, 2);
+        got2.sort();
+        assert_eq!(got2, vec![1, 2, 3, 4, 5, 6, 8]);
+    }
+
+    #[test]
+    fn budget_shortcut_equals_full_enumeration() {
+        // tau = 0 must return exactly the duplicate group.
+        let rows = vec![
+            vec![0u8, 1, 2, 3],
+            vec![0, 1, 2, 3],
+            vec![0, 1, 2, 2],
+            vec![3, 1, 2, 3],
+        ];
+        let set = SketchSet::from_rows(2, 4, &rows);
+        let ss = SortedSketches::build(&set);
+        let bst = super::super::BstTrie::build(&ss, BstConfig::default());
+        let mut got = bst.search(&[0, 1, 2, 3], 0);
+        got.sort();
+        assert_eq!(got, vec![0, 1]);
+    }
+}

@@ -1,0 +1,231 @@
+//! Sparse layer (§V-C): collapsed root-to-leaf suffix paths.
+//!
+//! Subtries below level `ℓ_s` barely branch, so bST stores each leaf's
+//! remaining `S = L - ℓ_s` characters as a flat string in the path array
+//! `P`, plus a bit array `D` marking the leftmost leaf of each subtrie.
+//! `children`-style navigation disappears; the search instead restores
+//! each candidate suffix and compares it against the query suffix with the
+//! **vertical-format** bit-parallel Hamming kernel (Zhang et al.):
+//! `b` XOR/OR word ops + one popcount per leaf.
+//!
+//! `P` is stored directly in vertical format via the flat
+//! [`PlaneStore`] (`b` planes of `S` bits per leaf) — the same `b·S` bits
+//! per leaf as the character array the paper describes, but Hamming-ready
+//! without a transpose and with branch-free reads.
+
+use crate::bits::rsvec::SelectMode;
+use crate::bits::{BitVec, RsBitVec};
+use crate::sketch::plane_store::PlaneStore;
+use crate::trie::builder::SortedSketches;
+use crate::util::HeapSize;
+
+/// Collapsed sparse layer.
+pub struct SparseLayer {
+    /// Suffix length `S = L - ℓ_s` (may be 0: all leaves are at `ℓ_s`).
+    s: usize,
+    /// Alphabet bits.
+    b: usize,
+    /// Vertical suffix planes.
+    planes: PlaneStore,
+    /// `D[v] = 1` iff leaf `v` is the leftmost leaf of its `ℓ_s`-subtrie.
+    d: RsBitVec,
+}
+
+impl SparseLayer {
+    /// Extracts the suffixes of all distinct sketches below level `ls`.
+    pub fn build(ss: &SortedSketches, ls: usize) -> Self {
+        let set = ss.set();
+        let (b, l) = (set.b(), set.l());
+        let s = l - ls;
+        let n_leaves = ss.n_distinct();
+
+        let planes = PlaneStore::from_fn(b, s, n_leaves, |bit, k| {
+            let mut field = 0u64;
+            for (pos, p) in (ls..l).enumerate() {
+                field |= (((ss.char_of(k, p) >> bit) & 1) as u64) << pos;
+            }
+            field
+        });
+
+        // D: leftmost leaf of each subtrie rooted at level ls.
+        let mut d = BitVec::with_capacity(n_leaves);
+        // leaf v starts a new subtrie iff it starts a new node at level ls;
+        // for ls = 0 there is a single subtrie containing every leaf.
+        if ls == 0 {
+            for v in 0..n_leaves {
+                d.push(v == 0);
+            }
+        } else {
+            let mut starts = vec![false; n_leaves];
+            for span in ss.nodes_at_level(ls) {
+                starts[span.start] = true;
+            }
+            for v in 0..n_leaves {
+                d.push(starts[v]);
+            }
+        }
+
+        SparseLayer { s, b, planes, d: RsBitVec::new(d, SelectMode::Ones) }
+    }
+
+    /// Suffix length `S`.
+    #[inline]
+    #[allow(dead_code)] // diagnostics/tests
+    pub fn suffix_len(&self) -> usize {
+        self.s
+    }
+
+    /// Leaf range `[lo, hi)` of the subtrie rooted at sparse node `u`
+    /// (the `u`-th node at level `ℓ_s`).
+    #[inline]
+    pub fn leaf_range(&self, u: usize) -> (usize, usize) {
+        let lo = self.d.select1(u);
+        let hi = if u + 1 < self.d.count_ones() {
+            self.d.select1(u + 1)
+        } else {
+            self.d.len()
+        };
+        (lo, hi)
+    }
+
+    /// Packs the query suffix `q[ℓ_s..L)` into plane fields.
+    pub fn pack_query(&self, q_suffix: &[u8]) -> Vec<u64> {
+        debug_assert_eq!(q_suffix.len(), self.s);
+        (0..self.b)
+            .map(|k| {
+                let mut field = 0u64;
+                for (pos, &c) in q_suffix.iter().enumerate() {
+                    field |= (((c >> k) & 1) as u64) << pos;
+                }
+                field
+            })
+            .collect()
+    }
+
+    /// Hamming distance between leaf `v`'s suffix and packed query planes.
+    #[inline]
+    pub fn ham_suffix(&self, v: usize, q_planes: &[u64]) -> usize {
+        self.planes.ham(v, q_planes)
+    }
+
+    /// Restores the raw suffix characters of leaf `v` (diagnostics/tests).
+    #[allow(dead_code)] // diagnostics/tests
+    pub fn suffix_chars(&self, v: usize) -> Vec<u8> {
+        (0..self.s)
+            .map(|pos| {
+                let mut c = 0u8;
+                for k in 0..self.b {
+                    c |= (((self.planes.field(k, v) >> pos) & 1) as u8) << k;
+                }
+                c
+            })
+            .collect()
+    }
+
+    /// Number of subtrie roots (nodes at level `ℓ_s`).
+    #[allow(dead_code)] // diagnostics/tests
+    pub fn root_count(&self) -> usize {
+        self.d.count_ones()
+    }
+
+    /// Total leaves.
+    #[allow(dead_code)] // diagnostics/tests
+    pub fn leaf_count(&self) -> usize {
+        self.d.len()
+    }
+}
+
+impl HeapSize for SparseLayer {
+    fn heap_bytes(&self) -> usize {
+        self.planes.heap_bytes() + self.d.heap_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::hamming::ham_chars;
+    use crate::sketch::SketchSet;
+    use crate::util::Rng;
+
+    fn setup(b: usize, l: usize, n: usize, seed: u64) -> SketchSet {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect();
+        SketchSet::from_rows(b, l, &rows)
+    }
+
+    #[test]
+    fn suffixes_roundtrip() {
+        for &(b, l, ls) in &[(2usize, 10usize, 4usize), (4, 8, 5), (8, 6, 3), (2, 8, 0), (2, 8, 8)] {
+            let set = setup(b, l, 200, (b + l + ls) as u64);
+            let ss = SortedSketches::build(&set);
+            let sp = SparseLayer::build(&ss, ls);
+            assert_eq!(sp.suffix_len(), l - ls);
+            for k in 0..ss.n_distinct() {
+                assert_eq!(sp.suffix_chars(k), ss.suffix(k, ls), "k={k} ls={ls}");
+            }
+        }
+    }
+
+    #[test]
+    fn leaf_ranges_tile_leaves() {
+        let set = setup(2, 10, 400, 3);
+        let ss = SortedSketches::build(&set);
+        for ls in [0usize, 3, 6, 10] {
+            let sp = SparseLayer::build(&ss, ls);
+            assert_eq!(sp.root_count(), ss.level_counts()[ls]);
+            let mut covered = 0usize;
+            for u in 0..sp.root_count() {
+                let (lo, hi) = sp.leaf_range(u);
+                assert_eq!(lo, covered, "ls={ls} u={u}");
+                assert!(hi > lo);
+                covered = hi;
+            }
+            assert_eq!(covered, ss.n_distinct());
+        }
+    }
+
+    #[test]
+    fn ham_suffix_matches_naive() {
+        let set = setup(4, 12, 300, 7);
+        let ss = SortedSketches::build(&set);
+        let sp = SparseLayer::build(&ss, 5);
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let q: Vec<u8> = (0..7).map(|_| rng.below(16) as u8).collect();
+            let qp = sp.pack_query(&q);
+            for k in (0..ss.n_distinct()).step_by(7) {
+                assert_eq!(
+                    sp.ham_suffix(k, &qp),
+                    ham_chars(&ss.suffix(k, 5), &q),
+                    "k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_length_suffix() {
+        // ls = L: sparse layer stores nothing; every leaf distance is 0.
+        let set = setup(2, 6, 100, 9);
+        let ss = SortedSketches::build(&set);
+        let sp = SparseLayer::build(&ss, 6);
+        assert_eq!(sp.suffix_len(), 0);
+        let qp = sp.pack_query(&[]);
+        assert_eq!(sp.ham_suffix(0, &qp), 0);
+        assert_eq!(sp.root_count(), ss.n_distinct());
+    }
+
+    #[test]
+    fn space_is_b_s_bits_per_leaf() {
+        let set = setup(2, 16, 2000, 13);
+        let ss = SortedSketches::build(&set);
+        let sp = SparseLayer::build(&ss, 8);
+        let payload_bits = ss.n_distinct() * 2 * 8; // b*S per leaf
+        // D adds ~1 bit/leaf + rank dirs; stay within 2x of payload.
+        assert!(sp.heap_bytes() * 8 >= payload_bits);
+        assert!(sp.heap_bytes() * 8 <= payload_bits * 2 + 4096);
+    }
+}

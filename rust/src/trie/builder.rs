@@ -1,0 +1,275 @@
+//! Shared trie-construction machinery.
+//!
+//! All trie representations are derived from the same intermediate form:
+//! the database sorted lexicographically, deduplicated into *distinct*
+//! sketches with id postings, plus the LCP (longest-common-prefix) array
+//! of adjacent distinct sketches.
+//!
+//! The LCP array determines the entire level-wise topology in O(1) per
+//! node, with no pointer trie ever materialized:
+//!
+//! * distinct sketch `k` starts a new node at level `ℓ` iff
+//!   `lcp[k] < ℓ` (with `lcp[0] = -1` for the sentinel);
+//! * hence `t_ℓ = #{k : lcp[k] < ℓ}` (node counts per level),
+//! * the node starting at `k` on level `ℓ` has edge label
+//!   `char(k, ℓ-1)` and is the first of its siblings iff `lcp[k] < ℓ-1`.
+
+use crate::sketch::SketchSet;
+use crate::util::HeapSize;
+
+/// Sorted + deduplicated database with LCP array and id postings.
+pub struct SortedSketches<'a> {
+    set: &'a SketchSet,
+    /// Original id of each distinct sketch, lexicographically sorted.
+    reps: Vec<u32>,
+    /// `lcp[k]` = LCP(reps[k-1], reps[k]) in characters; `lcp[0] = -1`.
+    lcps: Vec<i32>,
+    /// Postings: ids of all sketches equal to distinct sketch `k` live at
+    /// `post_ids[post_offsets[k] .. post_offsets[k+1]]`.
+    post_offsets: Vec<u32>,
+    post_ids: Vec<u32>,
+    /// `t_ℓ` for `ℓ = 0..=L`.
+    level_counts: Vec<usize>,
+}
+
+/// One trie node on a level: the half-open range of distinct sketches it
+/// covers, its incoming edge label, and whether it is the first child of
+/// its parent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeSpan {
+    pub start: usize,
+    pub end: usize,
+    pub label: u8,
+    pub first_sibling: bool,
+}
+
+impl<'a> SortedSketches<'a> {
+    /// Sorts, deduplicates and indexes `set`.
+    pub fn build(set: &'a SketchSet) -> Self {
+        let n = set.n();
+        assert!(n > 0, "empty database");
+        let perm = set.sorted_permutation();
+
+        let mut reps: Vec<u32> = Vec::new();
+        let mut post_offsets: Vec<u32> = Vec::new();
+        let mut post_ids: Vec<u32> = Vec::with_capacity(n);
+        let mut lcps: Vec<i32> = Vec::new();
+
+        for (idx, &id) in perm.iter().enumerate() {
+            let is_new = idx == 0
+                || set.cmp_sketches(perm[idx - 1] as usize, id as usize)
+                    != std::cmp::Ordering::Equal;
+            if is_new {
+                if idx == 0 {
+                    lcps.push(-1);
+                } else {
+                    lcps.push(set.lcp(perm[idx - 1] as usize, id as usize) as i32);
+                }
+                reps.push(id);
+                post_offsets.push(post_ids.len() as u32);
+            }
+            post_ids.push(id);
+        }
+        post_offsets.push(post_ids.len() as u32);
+
+        // t_ℓ = #{k : lcp[k] < ℓ}; computed via a histogram of lcp values.
+        let l = set.l();
+        let mut hist = vec![0usize; l + 1]; // hist[v] = #lcps equal to v (v>=0)
+        let mut below_zero = 0usize;
+        for &v in &lcps {
+            if v < 0 {
+                below_zero += 1;
+            } else {
+                hist[v as usize] += 1;
+            }
+        }
+        let mut level_counts = Vec::with_capacity(l + 1);
+        level_counts.push(1); // t_0: the root
+        let mut acc = below_zero;
+        for lv in 1..=l {
+            // lcp < lv ⇔ lcp <= lv-1
+            acc += hist[lv - 1];
+            level_counts.push(acc);
+        }
+        debug_assert_eq!(level_counts[l], reps.len());
+
+        SortedSketches { set, reps, lcps, post_offsets, post_ids, level_counts }
+    }
+
+    #[inline]
+    pub fn set(&self) -> &SketchSet {
+        self.set
+    }
+
+    /// Number of distinct sketches (= leaves `t_L`).
+    #[inline]
+    pub fn n_distinct(&self) -> usize {
+        self.reps.len()
+    }
+
+    /// `t_ℓ` for `ℓ ∈ [0, L]`.
+    #[inline]
+    pub fn level_counts(&self) -> &[usize] {
+        &self.level_counts
+    }
+
+    /// Total node count `t = Σ_{ℓ>=1} t_ℓ` (the root is conventionally not
+    /// counted as a labeled node, matching the paper's `t`).
+    pub fn total_nodes(&self) -> usize {
+        self.level_counts[1..].iter().sum()
+    }
+
+    /// Character `pos` of distinct sketch `k`.
+    #[inline]
+    pub fn char_of(&self, k: usize, pos: usize) -> u8 {
+        self.set.get_char(self.reps[k] as usize, pos)
+    }
+
+    /// Ids equal to distinct sketch `k`.
+    #[inline]
+    pub fn postings(&self, k: usize) -> &[u32] {
+        let lo = self.post_offsets[k] as usize;
+        let hi = self.post_offsets[k + 1] as usize;
+        &self.post_ids[lo..hi]
+    }
+
+    /// Moves postings out (offsets, ids) for tries that own them.
+    pub fn postings_parts(&self) -> (Vec<u32>, Vec<u32>) {
+        (self.post_offsets.clone(), self.post_ids.clone())
+    }
+
+    /// Iterates the nodes of level `ℓ >= 1` in lexicographic order.
+    pub fn nodes_at_level(&self, level: usize) -> impl Iterator<Item = NodeSpan> + '_ {
+        assert!((1..=self.set.l()).contains(&level));
+        let n = self.n_distinct();
+        let mut k = 0usize;
+        std::iter::from_fn(move || {
+            if k >= n {
+                return None;
+            }
+            let start = k;
+            let first_sibling = self.lcps[k] < level as i32 - 1;
+            let label = self.char_of(k, level - 1);
+            k += 1;
+            while k < n && self.lcps[k] >= level as i32 {
+                k += 1;
+            }
+            Some(NodeSpan { start, end: k, label, first_sibling })
+        })
+    }
+
+    /// The suffix characters `[from, L)` of distinct sketch `k`.
+    pub fn suffix(&self, k: usize, from: usize) -> Vec<u8> {
+        (from..self.set.l()).map(|p| self.char_of(k, p)).collect()
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.reps.heap_bytes()
+            + self.lcps.heap_bytes()
+            + self.post_offsets.heap_bytes()
+            + self.post_ids.heap_bytes()
+            + self.level_counts.heap_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::collections::BTreeSet;
+
+    fn random_set(b: usize, l: usize, n: usize, seed: u64) -> (SketchSet, Vec<Vec<u8>>) {
+        let mut rng = Rng::new(seed);
+        // small alphabet + short length → plenty of duplicates
+        let rows: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect();
+        (SketchSet::from_rows(b, l, &rows), rows)
+    }
+
+    #[test]
+    fn distinct_and_postings_partition_ids() {
+        let (set, rows) = random_set(2, 4, 500, 1);
+        let ss = SortedSketches::build(&set);
+        let expect_distinct: BTreeSet<Vec<u8>> = rows.iter().cloned().collect();
+        assert_eq!(ss.n_distinct(), expect_distinct.len());
+        // every id appears exactly once across postings
+        let mut seen = vec![false; 500];
+        for k in 0..ss.n_distinct() {
+            for &id in ss.postings(k) {
+                assert!(!seen[id as usize], "duplicate id {id}");
+                seen[id as usize] = true;
+                assert_eq!(rows[id as usize], set.row(ss.reps[k] as usize));
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn reps_sorted_lexicographically() {
+        let (set, rows) = random_set(4, 6, 300, 2);
+        let ss = SortedSketches::build(&set);
+        for w in ss.reps.windows(2) {
+            assert!(rows[w[0] as usize] < rows[w[1] as usize]);
+        }
+    }
+
+    #[test]
+    fn level_counts_match_prefix_sets() {
+        let (set, rows) = random_set(2, 6, 400, 3);
+        let ss = SortedSketches::build(&set);
+        let counts = ss.level_counts();
+        assert_eq!(counts[0], 1);
+        for lv in 1..=6 {
+            let prefixes: BTreeSet<Vec<u8>> =
+                rows.iter().map(|r| r[..lv].to_vec()).collect();
+            assert_eq!(counts[lv], prefixes.len(), "level {lv}");
+        }
+        assert_eq!(counts[6], ss.n_distinct());
+    }
+
+    #[test]
+    fn nodes_at_level_cover_and_label_correctly() {
+        let (set, rows) = random_set(2, 5, 300, 4);
+        let ss = SortedSketches::build(&set);
+        for lv in 1..=5usize {
+            let spans: Vec<NodeSpan> = ss.nodes_at_level(lv).collect();
+            assert_eq!(spans.len(), ss.level_counts()[lv], "level {lv}");
+            // spans tile [0, n_distinct)
+            assert_eq!(spans[0].start, 0);
+            assert_eq!(spans.last().unwrap().end, ss.n_distinct());
+            for w in spans.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            // label == the lv-1 char of every distinct sketch in the span
+            for s in &spans {
+                for k in s.start..s.end {
+                    assert_eq!(ss.char_of(k, lv - 1), s.label);
+                }
+            }
+            // first_sibling marks parent-group starts: count = t_{lv-1}
+            let firsts = spans.iter().filter(|s| s.first_sibling).count();
+            assert_eq!(firsts, ss.level_counts()[lv - 1], "level {lv}");
+            let _ = rows;
+        }
+    }
+
+    #[test]
+    fn all_identical_sketches() {
+        let rows = vec![vec![1u8, 2, 3]; 50];
+        let set = SketchSet::from_rows(2, 3, &rows);
+        let ss = SortedSketches::build(&set);
+        assert_eq!(ss.n_distinct(), 1);
+        assert_eq!(ss.level_counts(), &[1, 1, 1, 1]);
+        assert_eq!(ss.postings(0).len(), 50);
+    }
+
+    #[test]
+    fn single_sketch() {
+        let set = SketchSet::from_rows(8, 4, &[vec![200u8, 3, 0, 255]]);
+        let ss = SortedSketches::build(&set);
+        assert_eq!(ss.n_distinct(), 1);
+        assert_eq!(ss.total_nodes(), 4);
+        assert_eq!(ss.suffix(0, 2), vec![0, 255]);
+    }
+}

@@ -1,0 +1,187 @@
+//! Fast Succinct Trie baseline (Zhang et al., SIGMOD 2018 — SuRF).
+//!
+//! The second succinct baseline of Table III. FST splits the trie at a
+//! cutoff level: the (few, wide) top levels use **LOUDS-DENSE** — a
+//! `2^b`-bit child bitmap per node — and the (many, narrow) bottom levels
+//! use **LOUDS-SPARSE** — label bytes + LOUDS first-sibling bits.
+//!
+//! Our implementation reuses the bST middle-layer encodings (TABLE ≙
+//! LOUDS-DENSE, LIST ≙ LOUDS-SPARSE) at every level, with the cutoff
+//! chosen by SuRF's size-ratio rule: the dense top may use at most
+//! `1/R` of the bits the sparse encoding of those levels would
+//! (`R = 16` here). What FST *lacks* relative to bST — the implicit
+//! dense-complete layer and the collapsed sparse suffixes — is exactly
+//! the gap Table III measures.
+
+use super::builder::SortedSketches;
+use super::bst::MiddleRepr;
+use super::SketchTrie;
+use crate::util::HeapSize;
+
+// Reuse the per-level encodings from the bst middle layer.
+use super::bst::middle::MiddleLevel;
+
+/// Two-layer FST over a sketch database.
+pub struct FstTrie {
+    /// Per-level encodings, level 1 at index 0.
+    levels: Vec<MiddleLevel>,
+    /// First LOUDS-SPARSE level (1-based); levels below are DENSE.
+    cutoff: usize,
+    l: usize,
+    t: usize,
+    post_offsets: Vec<u32>,
+    post_ids: Vec<u32>,
+}
+
+impl FstTrie {
+    /// Size-ratio parameter from SuRF (dense-to-sparse budget).
+    pub const SIZE_RATIO: usize = 16;
+
+    pub fn build(ss: &SortedSketches) -> Self {
+        let set = ss.set();
+        let (b, l) = (set.b(), set.l());
+        let sigma = 1usize << b;
+        let counts = ss.level_counts();
+
+        // SuRF rule: the dense (bitmap) top may spend at most 1/R of the
+        // bits an all-sparse encoding of the whole trie would use —
+        // grow the dense prefix while the cumulative bitmap size stays
+        // within that budget.
+        let sparse_total: u128 = (1..=l)
+            .map(|lv| (b as u128 + 1) * counts[lv] as u128)
+            .sum();
+        let budget = sparse_total / Self::SIZE_RATIO as u128;
+        let mut cutoff = 1usize;
+        let mut dense_acc: u128 = 0;
+        for lv in 1..=l {
+            let dense_bits = sigma as u128 * counts[lv - 1] as u128;
+            if dense_acc + dense_bits <= budget && dense_bits < u32::MAX as u128 {
+                dense_acc += dense_bits;
+                cutoff = lv + 1;
+            } else {
+                break;
+            }
+        }
+
+        let levels = (1..=l)
+            .map(|lv| {
+                let repr = if lv < cutoff { MiddleRepr::Table } else { MiddleRepr::List };
+                MiddleLevel::build(ss, lv, Some(repr))
+            })
+            .collect();
+
+        let (post_offsets, post_ids) = ss.postings_parts();
+        FstTrie {
+            levels,
+            cutoff,
+            l,
+            t: ss.total_nodes(),
+            post_offsets,
+            post_ids,
+        }
+    }
+
+    /// First sparse level (1-based).
+    pub fn cutoff(&self) -> usize {
+        self.cutoff
+    }
+
+    fn dfs(&self, u: usize, level: usize, dist: usize, q: &[u8], tau: usize, out: &mut Vec<u32>) {
+        if level == self.l {
+            let lo = self.post_offsets[u] as usize;
+            let hi = self.post_offsets[u + 1] as usize;
+            out.extend_from_slice(&self.post_ids[lo..hi]);
+            return;
+        }
+        let ml = &self.levels[level];
+        let qc = q[level];
+        if dist == tau {
+            if let Some(child) = ml.child_with_label(u, qc) {
+                self.dfs(child, level + 1, dist, q, tau, out);
+            }
+            return;
+        }
+        let mut kids: [(u32, u8); 256] = [(0, 0); 256];
+        let mut n_kids = 0usize;
+        ml.children(u, |child, c| {
+            kids[n_kids] = (child as u32, c);
+            n_kids += 1;
+        });
+        for &(child, c) in &kids[..n_kids] {
+            let nd = dist + usize::from(c != qc);
+            if nd <= tau {
+                self.dfs(child as usize, level + 1, nd, q, tau, out);
+            }
+        }
+    }
+}
+
+impl SketchTrie for FstTrie {
+    fn search_into(&self, q: &[u8], tau: usize, out: &mut Vec<u32>) {
+        assert_eq!(q.len(), self.l);
+        self.dfs(0, 0, 0, q, tau, out);
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.levels.iter().map(|m| m.heap_bytes()).sum::<usize>()
+            + self.post_offsets.heap_bytes()
+            + self.post_ids.heap_bytes()
+    }
+
+    fn node_count(&self) -> usize {
+        self.t
+    }
+
+    fn describe(&self) -> String {
+        format!("FST(nodes={}, L={}, dense<{}), R={}", self.t, self.l, self.cutoff, Self::SIZE_RATIO)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::SketchSet;
+    use crate::trie::pointer::PointerTrie;
+    use crate::util::Rng;
+
+    fn check(b: usize, l: usize, n: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect();
+        let set = SketchSet::from_rows(b, l, &rows);
+        let ss = SortedSketches::build(&set);
+        let pt = PointerTrie::build(&ss);
+        let fst = FstTrie::build(&ss);
+        for _ in 0..15 {
+            let q: Vec<u8> = (0..l).map(|_| rng.below(1 << b) as u8).collect();
+            for tau in [0usize, 1, 2, 4] {
+                let mut a = pt.search(&q, tau);
+                let mut c = fst.search(&q, tau);
+                a.sort();
+                c.sort();
+                assert_eq!(a, c, "b={b} l={l} tau={tau}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_pointer_trie() {
+        check(2, 8, 500, 21);
+        check(4, 6, 400, 22);
+        check(8, 4, 300, 23);
+    }
+
+    #[test]
+    fn has_dense_top_on_random_data() {
+        let mut rng = Rng::new(25);
+        let rows: Vec<Vec<u8>> = (0..4000)
+            .map(|_| (0..12).map(|_| rng.below(4) as u8).collect())
+            .collect();
+        let set = SketchSet::from_rows(2, 12, &rows);
+        let ss = SortedSketches::build(&set);
+        let fst = FstTrie::build(&ss);
+        assert!(fst.cutoff() > 1, "expected a dense top layer: {}", fst.describe());
+        assert!(fst.cutoff() <= 12, "dense budget must not cover the whole trie: {}", fst.describe());
+    }
+}

@@ -1,0 +1,236 @@
+//! Monolithic LOUDS-trie baseline (Jacobson 1989; Delpratt et al. 2006).
+//!
+//! The first succinct baseline of Table III (the paper used the TX
+//! library). One global bit string holds every node's degree in unary,
+//! level by level, preceded by a super-root (`10`) so the standard
+//! child-navigation formulas apply:
+//!
+//! ```text
+//! B = 1 0 | 1^deg(root) 0 | 1^deg(n1) 0 | ...        (level order)
+//! ```
+//!
+//! Node `u` (level-order rank, 0 = root) has its children encoded in the
+//! 0-terminated group after zero #u: children ids are the 1s' ranks minus
+//! one (the super-root's edge). Navigation costs one `select0` + ranks per
+//! node — the global selects over a `~2t`-bit vector are exactly why LOUDS
+//! trails bST in Table III.
+//!
+//! Space: `(b + 2)·t + o(t)` bits (2 topology bits + b label bits/node).
+
+use super::builder::SortedSketches;
+use super::SketchTrie;
+use crate::bits::rsvec::SelectMode;
+use crate::bits::{BitVec, IntVec, RsBitVec};
+use crate::util::HeapSize;
+
+/// Classic LOUDS representation of a sketch trie.
+pub struct LoudsTrie {
+    /// Topology bits with rank1/select0 support.
+    bits: RsBitVec,
+    /// Edge labels of nodes 1.. (level order; root excluded).
+    labels: IntVec,
+    /// Total nodes (excluding super-root).
+    t: usize,
+    /// Leaves = last `t_L` nodes in level order.
+    n_leaves: usize,
+    l: usize,
+    post_offsets: Vec<u32>,
+    post_ids: Vec<u32>,
+}
+
+impl LoudsTrie {
+    pub fn build(ss: &SortedSketches) -> Self {
+        let set = ss.set();
+        let (b, l) = (set.b(), set.l());
+        let t = ss.total_nodes();
+        let n_leaves = ss.n_distinct();
+
+        let mut bits = BitVec::with_capacity(2 * t + 4);
+        // super-root: one child (the root)
+        bits.push(true);
+        bits.push(false);
+        let mut labels = IntVec::with_capacity(b, t);
+
+        // Emit degrees level by level. The degree of node u at level ℓ is
+        // the number of level-(ℓ+1) spans in its child group; groups are
+        // delimited by first_sibling flags of the next level.
+        for level in 0..l {
+            if level + 1 <= l {
+                let mut deg = 0usize;
+                let mut any = false;
+                for span in ss.nodes_at_level(level + 1) {
+                    if span.first_sibling && any {
+                        // close previous node's group
+                        for _ in 0..deg {
+                            bits.push(true);
+                        }
+                        bits.push(false);
+                        deg = 0;
+                    }
+                    any = true;
+                    deg += 1;
+                    labels.push(span.label as u64);
+                }
+                if any {
+                    for _ in 0..deg {
+                        bits.push(true);
+                    }
+                    bits.push(false);
+                }
+            }
+        }
+        // leaves (level L) have degree 0
+        for _ in 0..n_leaves {
+            bits.push(false);
+        }
+
+        // Sanity: ones = t + 1 (every node incl. root appears once as a
+        // child), zeros = t + 2 (one terminator per node + super-root).
+        debug_assert_eq!(labels.len(), t);
+        debug_assert_eq!(bits.len(), 2 * t + 3);
+
+        let (post_offsets, post_ids) = ss.postings_parts();
+        LoudsTrie {
+            bits: RsBitVec::new(bits, SelectMode::Both),
+            labels,
+            t,
+            n_leaves,
+            l,
+            post_offsets,
+            post_ids,
+        }
+    }
+
+    /// First/last+1 child ids of node `u` (level-order id, 0 = root).
+    #[inline]
+    fn child_range(&self, u: usize) -> (usize, usize) {
+        // group of node u sits between zero #u and zero #(u+1).
+        let lo_pos = self.bits.select0(u) + 1;
+        let hi_pos = self.bits.select0(u + 1);
+        if lo_pos >= hi_pos {
+            return (0, 0); // leaf
+        }
+        // child id of the 1 at position p = rank1(p+1) - 1 (super-root).
+        let first = self.bits.rank1(lo_pos + 1) - 1;
+        (first, first + (hi_pos - lo_pos))
+    }
+
+    /// Level-order id of the first leaf.
+    #[inline]
+    fn first_leaf(&self) -> usize {
+        self.t + 1 - self.n_leaves // +1: root is node 0
+    }
+
+    fn dfs(&self, u: usize, level: usize, dist: usize, q: &[u8], tau: usize, out: &mut Vec<u32>) {
+        if level == self.l {
+            let k = u - self.first_leaf();
+            let lo = self.post_offsets[k] as usize;
+            let hi = self.post_offsets[k + 1] as usize;
+            out.extend_from_slice(&self.post_ids[lo..hi]);
+            return;
+        }
+        let (lo, hi) = self.child_range(u);
+        let qc = q[level];
+        for child in lo..hi {
+            let c = self.labels.get(child - 1) as u8;
+            let nd = dist + usize::from(c != qc);
+            if nd <= tau {
+                self.dfs(child, level + 1, nd, q, tau, out);
+            }
+        }
+    }
+}
+
+impl SketchTrie for LoudsTrie {
+    fn search_into(&self, q: &[u8], tau: usize, out: &mut Vec<u32>) {
+        assert_eq!(q.len(), self.l);
+        self.dfs(0, 0, 0, q, tau, out);
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.bits.heap_bytes()
+            + self.labels.heap_bytes()
+            + self.post_offsets.heap_bytes()
+            + self.post_ids.heap_bytes()
+    }
+
+    fn node_count(&self) -> usize {
+        self.t
+    }
+
+    fn describe(&self) -> String {
+        format!("LOUDS(nodes={}, L={}, bits={})", self.t, self.l, self.bits.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::SketchSet;
+    use crate::trie::pointer::PointerTrie;
+    use crate::util::Rng;
+
+    fn check(b: usize, l: usize, n: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect();
+        let set = SketchSet::from_rows(b, l, &rows);
+        let ss = SortedSketches::build(&set);
+        let pt = PointerTrie::build(&ss);
+        let louds = LoudsTrie::build(&ss);
+        assert_eq!(louds.node_count(), pt.node_count());
+        for _ in 0..15 {
+            let q: Vec<u8> = (0..l).map(|_| rng.below(1 << b) as u8).collect();
+            for tau in [0usize, 1, 2, 4] {
+                let mut a = pt.search(&q, tau);
+                let mut c = louds.search(&q, tau);
+                a.sort();
+                c.sort();
+                assert_eq!(a, c, "b={b} l={l} tau={tau}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_pointer_trie() {
+        check(2, 8, 500, 1);
+        check(4, 6, 400, 2);
+        check(8, 4, 300, 3);
+        check(1, 12, 600, 4);
+    }
+
+    #[test]
+    fn single_path_trie() {
+        let rows = vec![vec![1u8, 0, 3, 2]; 5];
+        let set = SketchSet::from_rows(2, 4, &rows);
+        let ss = SortedSketches::build(&set);
+        let louds = LoudsTrie::build(&ss);
+        assert_eq!(louds.node_count(), 4);
+        let got = louds.search(&[1, 0, 3, 2], 0);
+        assert_eq!(got.len(), 5);
+        assert!(louds.search(&[1, 0, 3, 3], 0).is_empty());
+        assert_eq!(louds.search(&[1, 0, 3, 3], 1).len(), 5);
+    }
+
+    #[test]
+    fn space_near_b_plus_2_bits_per_node() {
+        let mut rng = Rng::new(9);
+        let rows: Vec<Vec<u8>> = (0..3000)
+            .map(|_| (0..16).map(|_| rng.below(4) as u8).collect())
+            .collect();
+        let set = SketchSet::from_rows(2, 16, &rows);
+        let ss = SortedSketches::build(&set);
+        let louds = LoudsTrie::build(&ss);
+        let t = louds.node_count();
+        let structure_bytes = louds.bits.heap_bytes() + louds.labels.heap_bytes();
+        let ideal_bits = (2 + 2) * t; // (b+2)·t for b=2
+        assert!(structure_bytes * 8 >= ideal_bits);
+        assert!(
+            (structure_bytes * 8) as f64 <= ideal_bits as f64 * 1.35,
+            "{} vs ideal {}",
+            structure_bytes * 8,
+            ideal_bits
+        );
+    }
+}

@@ -1,0 +1,59 @@
+//! Trie representations for b-bit sketch databases.
+//!
+//! * [`builder`] — shared construction machinery: sorts the sketches,
+//!   deduplicates, computes the LCP array, and exposes level-wise node
+//!   spans. Every trie below is built from the same `SortedSketches`,
+//!   so they index identical topologies.
+//! * [`bst`] — the paper's **b-bit Sketch Trie** (§V): dense / middle
+//!   (TABLE ∣ LIST) / sparse three-layer succinct representation.
+//! * [`pointer`] — classic pointer trie (PT, §IV): the fast-but-fat
+//!   baseline and the correctness oracle for the succinct variants.
+//! * [`louds`] — monolithic LOUDS-trie (Jacobson; TX-library style), the
+//!   first succinct baseline of Table III.
+//! * [`fst`] — two-layer Fast Succinct Trie (SuRF-style), the second
+//!   succinct baseline of Table III.
+//!
+//! All tries implement [`SketchTrie`]: Hamming-threshold traversal
+//! (Algorithm 1 of the paper) plus space accounting.
+
+pub mod bst;
+pub mod builder;
+pub mod fst;
+pub mod louds;
+pub mod pointer;
+
+pub use builder::SortedSketches;
+
+/// Common interface: a trie over a fixed sketch database supporting the
+/// paper's similarity search (report ids of all sketches within `tau`).
+pub trait SketchTrie {
+    /// Appends all ids `i` with `ham(s_i, q) <= tau` to `out`
+    /// (ids appear in lexicographic sketch order, not sorted by id).
+    fn search_into(&self, q: &[u8], tau: usize, out: &mut Vec<u32>);
+
+    /// Convenience wrapper allocating the result vector.
+    fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.search_into(q, tau, &mut out);
+        out
+    }
+
+    /// Heap bytes owned by the structure (paper space tables).
+    fn heap_bytes(&self) -> usize;
+
+    /// Number of trie nodes (`t` in the paper), excluding any super-root.
+    fn node_count(&self) -> usize;
+
+    /// Human-readable representation summary for reports.
+    fn describe(&self) -> String;
+}
+
+/// Count of nodes traversed during the last search — tries expose this via
+/// interior counters only in debug/eval builds to keep the hot path clean;
+/// instead the eval harness re-runs with this observer variant when node
+/// statistics are wanted.
+pub struct TraversalStats {
+    pub visited: usize,
+    pub pruned: usize,
+    pub emitted: usize,
+}

@@ -1,0 +1,178 @@
+//! Pointer trie (PT, §IV of the paper).
+//!
+//! The classical representation: explicit node records with child arrays.
+//! Fast (direct pointers, no rank/select) but `O(t log t + t·b)` bits —
+//! the paper's motivation for bST. Kept as (a) the Table III context and
+//! (b) the correctness oracle for every succinct trie in the test suite.
+
+use super::builder::SortedSketches;
+use super::SketchTrie;
+use crate::util::HeapSize;
+
+#[derive(Debug)]
+struct Node {
+    /// Child node indices, ordered by edge label.
+    children: Vec<u32>,
+    /// Edge label from the parent (root: 0, unused).
+    label: u8,
+    /// For leaves: index into postings; `u32::MAX` otherwise.
+    leaf: u32,
+}
+
+/// Pointer-based trie over a sketch database.
+pub struct PointerTrie {
+    nodes: Vec<Node>,
+    post_offsets: Vec<u32>,
+    post_ids: Vec<u32>,
+    l: usize,
+}
+
+impl PointerTrie {
+    /// Builds from the shared sorted form, level by level.
+    pub fn build(ss: &SortedSketches) -> Self {
+        let l = ss.set().l();
+        let mut nodes = vec![Node { children: Vec::new(), label: 0, leaf: u32::MAX }];
+        // prev_level[i] = node index of the i-th node on the previous level.
+        let mut prev_level: Vec<u32> = vec![0];
+        for level in 1..=l {
+            let mut cur_level: Vec<u32> = Vec::with_capacity(ss.level_counts()[level]);
+            let mut parent_idx = 0usize;
+            let mut first_seen = false;
+            for span in ss.nodes_at_level(level) {
+                if span.first_sibling {
+                    if first_seen {
+                        parent_idx += 1;
+                    }
+                    first_seen = true;
+                }
+                let node_id = nodes.len() as u32;
+                let leaf = if level == l { span.start as u32 } else { u32::MAX };
+                nodes.push(Node { children: Vec::new(), label: span.label, leaf });
+                nodes[prev_level[parent_idx] as usize].children.push(node_id);
+                cur_level.push(node_id);
+            }
+            prev_level = cur_level;
+        }
+        let (post_offsets, post_ids) = ss.postings_parts();
+        PointerTrie { nodes, post_offsets, post_ids, l }
+    }
+
+    fn dfs(&self, node: u32, level: usize, dist: usize, q: &[u8], tau: usize, out: &mut Vec<u32>) {
+        let n = &self.nodes[node as usize];
+        if level == self.l {
+            let k = n.leaf as usize;
+            let lo = self.post_offsets[k] as usize;
+            let hi = self.post_offsets[k + 1] as usize;
+            out.extend_from_slice(&self.post_ids[lo..hi]);
+            return;
+        }
+        let qc = q[level];
+        for &child in &n.children {
+            let c = self.nodes[child as usize].label;
+            let ndist = dist + usize::from(c != qc);
+            if ndist <= tau {
+                self.dfs(child, level + 1, ndist, q, tau, out);
+            }
+        }
+    }
+}
+
+impl SketchTrie for PointerTrie {
+    fn search_into(&self, q: &[u8], tau: usize, out: &mut Vec<u32>) {
+        assert_eq!(q.len(), self.l);
+        self.dfs(0, 0, 0, q, tau, out);
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.nodes.len() * std::mem::size_of::<Node>()
+            + self
+                .nodes
+                .iter()
+                .map(|n| n.children.heap_bytes())
+                .sum::<usize>()
+            + self.post_offsets.heap_bytes()
+            + self.post_ids.heap_bytes()
+    }
+
+    fn node_count(&self) -> usize {
+        self.nodes.len() - 1 // exclude root, matching the paper's t
+    }
+
+    fn describe(&self) -> String {
+        format!("PT(nodes={}, L={})", self.nodes.len() - 1, self.l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::hamming::ham_chars;
+    use crate::sketch::SketchSet;
+    use crate::util::Rng;
+
+    fn build_random(
+        b: usize,
+        l: usize,
+        n: usize,
+        seed: u64,
+    ) -> (SketchSet, Vec<Vec<u8>>) {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect();
+        (SketchSet::from_rows(b, l, &rows), rows)
+    }
+
+    #[test]
+    fn search_matches_linear_scan() {
+        let (set, rows) = build_random(2, 8, 400, 5);
+        let ss = SortedSketches::build(&set);
+        let pt = PointerTrie::build(&ss);
+        let mut rng = Rng::new(17);
+        for _ in 0..30 {
+            let q: Vec<u8> = (0..8).map(|_| rng.below(4) as u8).collect();
+            for tau in 0..5 {
+                let mut got = pt.search(&q, tau);
+                got.sort();
+                let expect: Vec<u32> = (0..rows.len())
+                    .filter(|&i| ham_chars(&rows[i], &q) <= tau)
+                    .map(|i| i as u32)
+                    .collect();
+                assert_eq!(got, expect, "tau={tau} q={q:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_search_tau_zero() {
+        let (set, rows) = build_random(4, 6, 200, 7);
+        let ss = SortedSketches::build(&set);
+        let pt = PointerTrie::build(&ss);
+        for (i, row) in rows.iter().enumerate() {
+            let got = pt.search(row, 0);
+            assert!(got.contains(&(i as u32)));
+            for &id in &got {
+                assert_eq!(&rows[id as usize], row);
+            }
+        }
+    }
+
+    #[test]
+    fn node_count_matches_builder() {
+        let (set, _) = build_random(2, 6, 300, 9);
+        let ss = SortedSketches::build(&set);
+        let pt = PointerTrie::build(&ss);
+        assert_eq!(pt.node_count(), ss.total_nodes());
+    }
+
+    #[test]
+    fn tau_full_length_returns_everything() {
+        let (set, rows) = build_random(2, 5, 100, 11);
+        let ss = SortedSketches::build(&set);
+        let pt = PointerTrie::build(&ss);
+        let q = vec![0u8; 5];
+        let mut got = pt.search(&q, 5);
+        got.sort();
+        assert_eq!(got, (0..rows.len() as u32).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,58 @@
+//! Heap-size accounting for the paper's space tables (Tables III & IV).
+//!
+//! Every index/trie reports its resident size via [`HeapSize`]; the eval
+//! harness converts to MiB. We count actual allocated payload bytes
+//! (capacity, not length, for vectors) — matching how the paper reports
+//! data-structure sizes.
+
+/// Types that can report the heap bytes they own.
+pub trait HeapSize {
+    /// Bytes of heap memory owned by `self` (excluding `size_of::<Self>()`).
+    fn heap_bytes(&self) -> usize;
+}
+
+impl<T: Copy> HeapSize for Vec<T> {
+    fn heap_bytes(&self) -> usize {
+        self.capacity() * std::mem::size_of::<T>()
+    }
+}
+
+impl HeapSize for String {
+    fn heap_bytes(&self) -> usize {
+        self.capacity()
+    }
+}
+
+impl<T: HeapSize> HeapSize for Option<T> {
+    fn heap_bytes(&self) -> usize {
+        self.as_ref().map_or(0, |x| x.heap_bytes())
+    }
+}
+
+impl<K, V: HeapSize> HeapSize for std::collections::BTreeMap<K, V> {
+    fn heap_bytes(&self) -> usize {
+        // Approximation: nodes dominated by K/V payload.
+        self.values().map(|v| v.heap_bytes()).sum::<usize>()
+            + self.len() * (std::mem::size_of::<K>() + std::mem::size_of::<V>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec_heap_bytes() {
+        let v: Vec<u64> = Vec::with_capacity(16);
+        assert_eq!(v.heap_bytes(), 16 * 8);
+        let v: Vec<u8> = vec![0; 10];
+        assert!(v.heap_bytes() >= 10);
+    }
+
+    #[test]
+    fn option_and_string() {
+        assert_eq!(None::<String>.heap_bytes(), 0);
+        let s = String::from("hello world");
+        assert!(Some(s).heap_bytes() >= 11);
+    }
+}

@@ -1,0 +1,55 @@
+//! Zero-dependency utility substrate.
+//!
+//! The build environment vendors only the `xla` crate's dependency closure,
+//! so the usual ecosystem crates (`rand`, `serde`, `tokio`, `clap`,
+//! `criterion`, `proptest`) are unavailable. This module provides the small,
+//! well-tested subset of that functionality the engine needs:
+//!
+//! * [`rng`] — SplitMix64 / xoshiro256** PRNGs and distributions.
+//! * [`pool`] — a scoped thread pool for shard fan-out and ingestion.
+//! * [`timer`] — wall-clock timing and latency statistics.
+//! * [`json`] — a minimal JSON encoder/decoder for the wire protocol and
+//!   artifact metadata.
+//! * [`mem`] — heap-size accounting used by the paper's space tables.
+
+pub mod json;
+pub mod mem;
+pub mod pool;
+pub mod rng;
+pub mod timer;
+
+pub use mem::HeapSize;
+pub use pool::ThreadPool;
+pub use rng::Rng;
+pub use timer::Stats;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Formats a byte count as a human-readable MiB string (paper tables use MiB).
+pub fn mib(bytes: usize) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn mib_conversion() {
+        assert_eq!(mib(1024 * 1024), 1.0);
+        assert_eq!(mib(0), 0.0);
+    }
+}

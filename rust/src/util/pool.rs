@@ -1,0 +1,181 @@
+//! A small fixed-size thread pool.
+//!
+//! `tokio` is not vendored in this environment; the coordinator's
+//! concurrency needs (shard fan-out, batched ingestion, connection
+//! handling) are served by this classic worker-queue pool plus
+//! `std::thread::scope` for borrowed-data parallel sections.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool executing boxed closures.
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawns `size` workers (`size >= 1`).
+    pub fn new(size: usize) -> Self {
+        assert!(size >= 1);
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&receiver);
+                let q = Arc::clone(&queued);
+                thread::Builder::new()
+                    .name(format!("bst-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                q.fetch_sub(1, Ordering::Release);
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { sender: Some(sender), workers, queued }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Jobs submitted but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::Acquire)
+    }
+
+    /// Submits a job for execution.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.queued.fetch_add(1, Ordering::Acquire);
+        self.sender
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(f))
+            .expect("workers alive");
+    }
+
+    /// Runs `f` over each item of `items` on the pool and collects results
+    /// in input order. Blocks until all complete.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let n = items.len();
+        let (tx, rx) = mpsc::channel::<(usize, R)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.execute(move || {
+                let r = f(item);
+                let _ = tx.send((i, r));
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|r| r.expect("all jobs complete")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Close the channel; workers exit after draining.
+        drop(self.sender.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Parallel for-each over index chunks using scoped threads (no 'static
+/// bound — borrows are fine). Splits `[0, n)` into `chunks` contiguous
+/// ranges and runs `f(range)` on each.
+pub fn par_chunks<F>(n: usize, chunks: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let chunks = chunks.clamp(1, n.max(1));
+    let per = n.div_ceil(chunks);
+    thread::scope(|s| {
+        for c in 0..chunks {
+            let lo = c * per;
+            let hi = ((c + 1) * per).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(lo..hi));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<u64>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn par_chunks_covers_everything() {
+        let n = 1003;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        par_chunks(n, 7, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn par_chunks_handles_edge_sizes() {
+        par_chunks(0, 4, |_| panic!("no work expected"));
+        let hit = AtomicU64::new(0);
+        par_chunks(1, 8, |r| {
+            hit.fetch_add(r.len() as u64, Ordering::SeqCst);
+        });
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+}

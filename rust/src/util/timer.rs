@@ -1,0 +1,189 @@
+//! Timing and latency statistics for the evaluation harness and the
+//! coordinator metrics (criterion is not vendored; `benches/` binaries use
+//! this module's measurement loop).
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e6
+    }
+}
+
+/// Online summary statistics over a set of samples (stored; the sample
+/// counts here are small — per-query latencies, bench iterations).
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Stats::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (n - 1) as f64;
+        var.sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile in `[0, 100]` by nearest-rank.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let n = self.samples.len();
+        let rank = ((p / 100.0) * n as f64).ceil() as usize;
+        self.samples[rank.clamp(1, n) - 1]
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Measurement loop: runs `f` repeatedly until `min_time` has elapsed and at
+/// least `min_iters` iterations ran; returns per-iteration stats in
+/// microseconds. `f` should return a value consumed by `black_box`-style
+/// sinks internally to prevent dead-code elimination.
+pub fn measure<F: FnMut()>(min_iters: usize, min_time: Duration, mut f: F) -> Stats {
+    // Warmup: a few iterations to populate caches / JIT branch predictors.
+    let warmup = min_iters.clamp(1, 3);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = Stats::new();
+    let loop_start = Instant::now();
+    loop {
+        let t = Instant::now();
+        f();
+        stats.push(t.elapsed().as_secs_f64() * 1e6);
+        if stats.len() >= min_iters && loop_start.elapsed() >= min_time {
+            break;
+        }
+        // Hard cap so pathological cases terminate.
+        if loop_start.elapsed() >= min_time * 20 {
+            break;
+        }
+    }
+    stats
+}
+
+/// Prevents the optimizer from eliminating a computed value
+/// (std::hint::black_box is stable — thin wrapper for call-site clarity).
+#[inline]
+pub fn sink<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let mut s = Stats::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(x);
+        }
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.p50(), 3.0);
+        assert!((s.stddev() - 1.5811).abs() < 1e-3);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut s = Stats::new();
+        for x in 1..=100 {
+            s.push(x as f64);
+        }
+        assert_eq!(s.percentile(99.0), 99.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert_eq!(s.percentile(1.0), 1.0);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let mut s = Stats::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.p50(), 0.0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn measure_runs_min_iters() {
+        let mut count = 0usize;
+        let stats = measure(10, Duration::from_millis(1), || {
+            count += 1;
+        });
+        assert!(stats.len() >= 10);
+        assert!(count >= stats.len());
+    }
+}

@@ -1,0 +1,133 @@
+//! Three-layer composition proof: the Rust runtime loads the AOT-lowered
+//! JAX/Pallas artifacts and produces the same sketches / distances as the
+//! native Rust implementations.
+//!
+//! Requires `make artifacts` (skips with a message otherwise — CI runs
+//! `make test` which builds them first).
+
+use bst::data::{generate_dense, generate_sets, Dataset, GenConfig};
+use bst::runtime::Runtime;
+use bst::sketch::{CwsParams, MinhashParams, SketchSet, VerticalSet};
+use bst::util::Rng;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("meta.json").exists() {
+        Some(Box::leak(dir.into_boxed_path()))
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn minhash_artifact_is_bit_identical_to_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).expect("runtime");
+    let sk = rt.sketcher("review").expect("sketcher");
+
+    let ds = Dataset::Review;
+    let cfg = GenConfig { n: 3000, seed: 77, threads: 4, cluster_size: 16, background: 0.2 };
+    let sets = generate_sets(ds, &cfg);
+    let params = MinhashParams::generate(ds.l(), ds.b(), ds.dim(), cfg.seed);
+
+    // native
+    let native = params.sketch_batch(&sets, 4);
+
+    // XLA path: densify
+    let d = ds.dim();
+    let mut x = vec![0f32; cfg.n * d];
+    for (i, s) in sets.iter().enumerate() {
+        for &j in s {
+            x[i * d + j as usize] = 1.0;
+        }
+    }
+    let via_xla = sk.sketch_minhash(&x, cfg.n, &params).expect("xla sketch");
+
+    assert_eq!(native.n(), via_xla.n());
+    for i in 0..cfg.n {
+        assert_eq!(native.row(i), via_xla.row(i), "sketch {i} differs");
+    }
+}
+
+#[test]
+fn cws_artifact_matches_native_within_ulp_tolerance() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).expect("runtime");
+    let sk = rt.sketcher("sift").expect("sketcher");
+
+    let ds = Dataset::Sift;
+    let cfg = GenConfig { n: 2500, seed: 33, threads: 4, cluster_size: 16, background: 0.2 };
+    let x = generate_dense(ds, &cfg);
+    let params = CwsParams::generate(ds.l(), ds.b(), ds.dim(), cfg.seed);
+
+    let native = params.sketch_batch(&x, cfg.n, 4);
+    let via_xla = sk.sketch_cws(&x, cfg.n, &params).expect("xla sketch");
+
+    // f32 `ln` may differ in the last ulp between libm and XLA → the
+    // floor() in the CWS prelude can flip, changing isolated argmins.
+    let total = cfg.n * ds.l();
+    let mut mismatches = 0usize;
+    for i in 0..cfg.n {
+        let (a, b) = (native.row(i), via_xla.row(i));
+        mismatches += a.iter().zip(&b).filter(|(x, y)| x != y).count();
+    }
+    let rate = mismatches as f64 / total as f64;
+    assert!(
+        rate < 0.005,
+        "CWS char mismatch rate {rate:.4} exceeds tolerance ({mismatches}/{total})"
+    );
+}
+
+#[test]
+fn hamming_artifact_matches_native_scan() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).expect("runtime");
+    let scan = rt.scanner("cp").expect("scanner");
+
+    let mut rng = Rng::new(55);
+    let (b, l, n) = (2usize, 32usize, 5000usize);
+    let rows: Vec<Vec<u8>> = (0..n)
+        .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+        .collect();
+    let set = SketchSet::from_rows(b, l, &rows);
+    let vert = VerticalSet::from_horizontal(&set);
+
+    for qi in [0usize, 123, n - 1] {
+        let q = &rows[qi];
+        let dist = scan.distances(&vert, q).expect("distances");
+        assert_eq!(dist.len(), n);
+        let qp = vert.pack_query(q);
+        for i in (0..n).step_by(37) {
+            assert_eq!(dist[i] as usize, vert.ham(i, &qp), "i={i} q={qi}");
+        }
+        assert_eq!(dist[qi], 0);
+        // threshold search agrees with the native scan
+        let got = scan.search(&vert, q, 3).expect("search");
+        let expect = vert.scan(q, 3);
+        assert_eq!(got, expect);
+    }
+}
+
+#[test]
+fn gist_64char_hamming_uses_two_words() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).expect("runtime");
+    let scan = rt.scanner("gist").expect("scanner");
+    assert_eq!(scan.meta().w, 2);
+
+    let mut rng = Rng::new(66);
+    let (b, l, n) = (8usize, 64usize, 1200usize);
+    let rows: Vec<Vec<u8>> = (0..n)
+        .map(|_| (0..l).map(|_| rng.below(256) as u8).collect())
+        .collect();
+    let set = SketchSet::from_rows(b, l, &rows);
+    let vert = VerticalSet::from_horizontal(&set);
+    let q = &rows[7];
+    let dist = scan.distances(&vert, q).expect("distances");
+    let qp = vert.pack_query(q);
+    for i in (0..n).step_by(11) {
+        assert_eq!(dist[i] as usize, vert.ham(i, &qp), "i={i}");
+    }
+}

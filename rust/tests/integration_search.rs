@@ -1,0 +1,151 @@
+//! Cross-method agreement: every index must return exactly the linear-scan
+//! ground truth on randomized clustered databases — the paper's core
+//! correctness contract, checked across (b, L, τ, m) configurations and
+//! many seeds.
+
+use bst::index::{
+    HmSearch, LinearScan, Mih, MultiBst, SearchIndex, Sih, SingleBst, SingleFst, SingleLouds,
+};
+use bst::sketch::SketchSet;
+use bst::trie::bst::BstConfig;
+use bst::util::Rng;
+
+/// Clustered random database (near-duplicates + background noise).
+fn make_db(b: usize, l: usize, n: usize, seed: u64) -> SketchSet {
+    let mut rng = Rng::new(seed);
+    let n_centers = 12;
+    let centers: Vec<Vec<u8>> = (0..n_centers)
+        .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+        .collect();
+    let rows: Vec<Vec<u8>> = (0..n)
+        .map(|_| {
+            if rng.f64() < 0.15 {
+                (0..l).map(|_| rng.below(1 << b) as u8).collect()
+            } else {
+                let mut r = centers[rng.below_usize(n_centers)].clone();
+                let edits = rng.below_usize(l / 2 + 1);
+                for _ in 0..edits {
+                    let p = rng.below_usize(l);
+                    r[p] = rng.below(1 << b) as u8;
+                }
+                r
+            }
+        })
+        .collect();
+    SketchSet::from_rows(b, l, &rows)
+}
+
+fn queries(set: &SketchSet, k: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(seed ^ 0x71);
+    let mut qs: Vec<Vec<u8>> = (0..k / 2)
+        .map(|_| set.row(rng.below_usize(set.n())))
+        .collect();
+    // plus pure-random queries (not necessarily in the database)
+    for _ in 0..k - qs.len() {
+        qs.push((0..set.l()).map(|_| rng.below(set.sigma() as u64) as u8).collect());
+    }
+    qs
+}
+
+fn sorted(mut v: Vec<u32>) -> Vec<u32> {
+    v.sort();
+    v.dedup();
+    v
+}
+
+#[test]
+fn all_methods_agree_b2() {
+    for seed in [1u64, 2, 3] {
+        let set = make_db(2, 16, 1500, seed);
+        let truth = LinearScan::build(&set);
+        let si = SingleBst::build(&set, BstConfig::default());
+        let louds = SingleLouds::build(&set);
+        let fst = SingleFst::build(&set);
+        let mi2 = MultiBst::build(&set, 2);
+        let mi3 = MultiBst::build(&set, 3);
+        let sih = Sih::build(&set);
+        let mih2 = Mih::build(&set, 2);
+        let hm = HmSearch::build(&set, 5);
+        for q in queries(&set, 12, seed) {
+            for tau in [0usize, 1, 2, 3, 5] {
+                let expect = sorted(truth.search(&q, tau));
+                assert_eq!(sorted(si.search(&q, tau)), expect, "SI-bST seed={seed} tau={tau}");
+                assert_eq!(sorted(louds.search(&q, tau)), expect, "LOUDS");
+                assert_eq!(sorted(fst.search(&q, tau)), expect, "FST");
+                assert_eq!(sorted(mi2.search(&q, tau)), expect, "MI-bST m=2");
+                assert_eq!(sorted(mi3.search(&q, tau)), expect, "MI-bST m=3");
+                if tau <= 2 {
+                    assert_eq!(sorted(sih.search(&q, tau)), expect, "SIH");
+                }
+                assert_eq!(sorted(mih2.search(&q, tau)), expect, "MIH m=2");
+                assert_eq!(sorted(hm.search(&q, tau)), expect, "HmSearch");
+            }
+        }
+    }
+}
+
+#[test]
+fn all_methods_agree_b4_and_b8() {
+    for &(b, l, n) in &[(4usize, 12usize, 900usize), (8, 8, 700)] {
+        let set = make_db(b, l, n, (b + l) as u64);
+        let truth = LinearScan::build(&set);
+        let si = SingleBst::build(&set, BstConfig::default());
+        let mi2 = MultiBst::build(&set, 2);
+        let mih3 = Mih::build(&set, 3);
+        let hm = HmSearch::build(&set, 4);
+        for q in queries(&set, 8, b as u64) {
+            for tau in [0usize, 1, 3, 4] {
+                let expect = sorted(truth.search(&q, tau));
+                assert_eq!(sorted(si.search(&q, tau)), expect, "SI-bST b={b} tau={tau}");
+                assert_eq!(sorted(mi2.search(&q, tau)), expect, "MI-bST b={b}");
+                assert_eq!(sorted(mih3.search(&q, tau)), expect, "MIH b={b}");
+                assert_eq!(sorted(hm.search(&q, tau)), expect, "HmSearch b={b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn b1_binary_sketches_work() {
+    // the b=1 degenerate case (classic binary sketches)
+    let set = make_db(1, 32, 1200, 77);
+    let truth = LinearScan::build(&set);
+    let si = SingleBst::build(&set, BstConfig::default());
+    let mi = MultiBst::build(&set, 4);
+    for q in queries(&set, 8, 78) {
+        for tau in [0usize, 2, 5] {
+            let expect = sorted(truth.search(&q, tau));
+            assert_eq!(sorted(si.search(&q, tau)), expect);
+            assert_eq!(sorted(mi.search(&q, tau)), expect);
+        }
+    }
+}
+
+#[test]
+fn big_tau_returns_whole_db() {
+    let set = make_db(2, 8, 400, 99);
+    let si = SingleBst::build(&set, BstConfig::default());
+    let q = set.row(0);
+    let hits = sorted(si.search(&q, 8));
+    assert_eq!(hits, (0..400u32).collect::<Vec<_>>());
+}
+
+#[test]
+fn generated_workloads_agree() {
+    // end-to-end over the actual synthetic pipelines (minhash + CWS)
+    use bst::data::{generate_workload, Dataset, GenConfig};
+    for ds in [Dataset::Review, Dataset::Sift] {
+        let cfg = GenConfig { n: 3000, seed: 5, threads: 4, cluster_size: 16, background: 0.1 };
+        let w = generate_workload(ds, &cfg);
+        let truth = LinearScan::build(&w.sketches);
+        let si = SingleBst::build(&w.sketches, BstConfig::default());
+        let mi = MultiBst::build(&w.sketches, 2);
+        for q in w.queries.iter().take(15) {
+            for tau in [1usize, 3] {
+                let expect = sorted(truth.search(q, tau));
+                assert_eq!(sorted(si.search(q, tau)), expect, "{ds:?}");
+                assert_eq!(sorted(mi.search(q, tau)), expect, "{ds:?}");
+            }
+        }
+    }
+}

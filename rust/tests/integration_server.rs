@@ -1,0 +1,156 @@
+//! End-to-end server test: engine + batcher + TCP protocol over a real
+//! socket (port 0, OS-assigned).
+
+use bst::coordinator::engine::{Engine, ShardIndexKind};
+use bst::coordinator::{server, ServeConfig};
+use bst::sketch::hamming::ham_chars;
+use bst::sketch::SketchSet;
+use bst::trie::bst::BstConfig;
+use bst::util::json::Json;
+use bst::util::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+fn make_engine(n: usize) -> (Arc<Engine>, Vec<Vec<u8>>) {
+    let mut rng = Rng::new(0x5e1);
+    let centers: Vec<Vec<u8>> = (0..6)
+        .map(|_| (0..12).map(|_| rng.below(4) as u8).collect())
+        .collect();
+    let rows: Vec<Vec<u8>> = (0..n)
+        .map(|_| {
+            let mut r = centers[rng.below_usize(6)].clone();
+            for _ in 0..rng.below_usize(3) {
+                let p = rng.below_usize(12);
+                r[p] = rng.below(4) as u8;
+            }
+            r
+        })
+        .collect();
+    let set = SketchSet::from_rows(2, 12, &rows);
+    (
+        Arc::new(Engine::build(&set, 3, &ShardIndexKind::Bst(BstConfig::default()))),
+        rows,
+    )
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let _ = stream.set_nodelay(true);
+        Client {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+        }
+    }
+
+    fn call(&mut self, req: &str) -> Json {
+        self.writer.write_all(req.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).expect("valid json response")
+    }
+}
+
+#[test]
+fn search_over_tcp_matches_engine() {
+    let (engine, rows) = make_engine(800);
+    let cfg = ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
+    let handle = server::serve(Arc::clone(&engine), cfg).expect("serve");
+    let mut client = Client::connect(handle.addr);
+
+    // ping
+    let pong = client.call(r#"{"op":"ping"}"#);
+    assert_eq!(pong.get("pong").and_then(|b| b.as_bool()), Some(true));
+
+    // searches
+    for qi in [0usize, 100, 500] {
+        let q = &rows[qi];
+        let tau = 2;
+        let req = format!(
+            r#"{{"op":"search","q":[{}],"tau":{tau}}}"#,
+            q.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(",")
+        );
+        let resp = client.call(&req);
+        let mut ids: Vec<u32> = resp
+            .get("ids")
+            .and_then(|a| a.as_arr())
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as u32)
+            .collect();
+        ids.sort();
+        let expect: Vec<u32> = (0..rows.len())
+            .filter(|&i| ham_chars(&rows[i], q) <= tau)
+            .map(|i| i as u32)
+            .collect();
+        assert_eq!(ids, expect, "qi={qi}");
+        assert!(resp.get("latency_us").is_some());
+    }
+
+    // stats reflect the traffic
+    let stats = client.call(r#"{"op":"stats"}"#);
+    assert!(stats.get("queries").unwrap().as_usize().unwrap() >= 3);
+
+    // malformed request → error, connection stays usable
+    let err = client.call(r#"{"op":"search"}"#);
+    assert!(err.get("error").is_some());
+    let pong = client.call(r#"{"op":"ping"}"#);
+    assert_eq!(pong.get("pong").and_then(|b| b.as_bool()), Some(true));
+
+    // wrong query length → protocol error
+    let err = client.call(r#"{"op":"search","q":[1,2],"tau":1}"#);
+    assert!(err.get("error").is_some());
+
+    handle.stop();
+}
+
+#[test]
+fn concurrent_clients() {
+    let (engine, rows) = make_engine(600);
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        max_delay_us: 300,
+        ..Default::default()
+    };
+    let handle = server::serve(Arc::clone(&engine), cfg).expect("serve");
+    let addr = handle.addr;
+
+    let mut joins = Vec::new();
+    for t in 0..6 {
+        let rows = rows.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr);
+            let mut rng = Rng::new(t);
+            for _ in 0..25 {
+                let qi = rng.below_usize(rows.len());
+                let tau = rng.below_usize(4);
+                let req = format!(
+                    r#"{{"op":"search","q":[{}],"tau":{tau}}}"#,
+                    rows[qi]
+                        .iter()
+                        .map(|c| c.to_string())
+                        .collect::<Vec<_>>()
+                        .join(",")
+                );
+                let resp = client.call(&req);
+                let ids = resp.get("ids").and_then(|a| a.as_arr()).unwrap();
+                // must at least contain itself
+                assert!(ids.iter().any(|x| x.as_f64() == Some(qi as f64)));
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let metrics = engine.metrics();
+    assert!(metrics.queries.load(std::sync::atomic::Ordering::Relaxed) >= 150);
+    handle.stop();
+}

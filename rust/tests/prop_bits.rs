@@ -1,0 +1,124 @@
+//! Property-based tests for the succinct bit substrate (proptest is not
+//! vendored; we drive our own PRNG through many random configurations and
+//! assert the defining invariants).
+
+use bst::bits::rsvec::SelectMode;
+use bst::bits::{BitVec, IntVec, RsBitVec};
+use bst::util::Rng;
+
+/// rank/select inverse laws over random densities and lengths.
+#[test]
+fn prop_rank_select_inverse() {
+    let mut rng = Rng::new(0xB175);
+    for case in 0..60 {
+        let n = 1 + rng.below_usize(30_000);
+        let density = rng.f64();
+        let bv: BitVec = {
+            let mut r = Rng::new(case);
+            (0..n).map(|_| r.f64() < density).collect()
+        };
+        let rs = RsBitVec::new(bv.clone(), SelectMode::Both);
+        // total consistency
+        assert_eq!(rs.count_ones(), bv.count_ones());
+        assert_eq!(rs.rank1(n), rs.count_ones());
+        // rank is monotone with unit steps
+        let mut prev = 0;
+        for i in (0..=n).step_by(1 + n / 97) {
+            let r = rs.rank1(i);
+            assert!(r >= prev && r <= i);
+            prev = r;
+        }
+        // select1 ∘ rank1 = identity on ones
+        let ones = rs.count_ones();
+        if ones > 0 {
+            for _ in 0..50 {
+                let k = rng.below_usize(ones);
+                let pos = rs.select1(k);
+                assert!(rs.get(pos));
+                assert_eq!(rs.rank1(pos), k);
+            }
+        }
+        // select0 ∘ rank0
+        let zeros = n - ones;
+        if zeros > 0 {
+            for _ in 0..50 {
+                let k = rng.below_usize(zeros);
+                let pos = rs.select0(k);
+                assert!(!rs.get(pos));
+                assert_eq!(rs.rank0(pos), k);
+            }
+        }
+    }
+}
+
+/// Unaligned get_bits equals bit-by-bit reconstruction for random layouts.
+#[test]
+fn prop_get_bits_consistency() {
+    let mut rng = Rng::new(0xB173);
+    for _ in 0..40 {
+        let n_words = 1 + rng.below_usize(100);
+        let mut bv = BitVec::new();
+        for _ in 0..n_words {
+            bv.push_bits(rng.next_u64(), 64);
+        }
+        for _ in 0..200 {
+            let width = 1 + rng.below_usize(64);
+            if bv.len() < width {
+                continue;
+            }
+            let pos = rng.below_usize(bv.len() - width + 1);
+            let got = bv.get_bits(pos, width);
+            let mut expect = 0u64;
+            for i in 0..width {
+                expect |= (bv.get(pos + i) as u64) << i;
+            }
+            assert_eq!(got, expect);
+        }
+    }
+}
+
+/// IntVec roundtrips across random widths and lengths.
+#[test]
+fn prop_intvec_roundtrip() {
+    let mut rng = Rng::new(0x1279);
+    for _ in 0..50 {
+        let width = 1 + rng.below_usize(64);
+        let n = rng.below_usize(2000);
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        let vals: Vec<u64> = (0..n).map(|_| rng.next_u64() & mask).collect();
+        let mut iv = IntVec::new(width);
+        for &v in &vals {
+            iv.push(v);
+        }
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(iv.get(i), v, "width={width} i={i}");
+        }
+    }
+}
+
+/// Select on pathological run-structured vectors (long runs of 0s/1s).
+#[test]
+fn prop_select_on_runs() {
+    let mut rng = Rng::new(0x58EC);
+    for _ in 0..30 {
+        let mut bv = BitVec::new();
+        let mut expected_ones = Vec::new();
+        let mut pos = 0usize;
+        for _ in 0..rng.below_usize(30) + 1 {
+            let run = 1 + rng.below_usize(3000);
+            let bit = rng.f64() < 0.5;
+            for _ in 0..run {
+                bv.push(bit);
+                if bit {
+                    expected_ones.push(pos);
+                }
+                pos += 1;
+            }
+        }
+        let rs = RsBitVec::new(bv, SelectMode::Ones);
+        assert_eq!(rs.count_ones(), expected_ones.len());
+        for (k, &p) in expected_ones.iter().enumerate().step_by(17) {
+            assert_eq!(rs.select1(k), p);
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Property-based trie invariants: for random databases, every trie
+//! representation must (a) report identical topology statistics, (b)
+//! prune soundly (search results invariant under τ monotonicity), and
+//! (c) agree with the pointer-trie oracle under random layer overrides.
+
+use bst::sketch::SketchSet;
+use bst::trie::bst::{BstConfig, BstTrie, MiddleRepr};
+use bst::trie::fst::FstTrie;
+use bst::trie::louds::LoudsTrie;
+use bst::trie::pointer::PointerTrie;
+use bst::trie::{SketchTrie, SortedSketches};
+use bst::util::Rng;
+
+fn random_db(rng: &mut Rng) -> (usize, usize, SketchSet) {
+    let b = *[1usize, 2, 4, 8].iter().nth(rng.below_usize(4)).unwrap();
+    let l = 2 + rng.below_usize(15.min(64 / b * 4));
+    let n = 50 + rng.below_usize(800);
+    let clustered = rng.f64() < 0.5;
+    let rows: Vec<Vec<u8>> = if clustered {
+        let centers: Vec<Vec<u8>> = (0..5)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect();
+        (0..n)
+            .map(|_| {
+                let mut r = centers[rng.below_usize(5)].clone();
+                for _ in 0..rng.below_usize(3) {
+                    let p = rng.below_usize(l);
+                    r[p] = rng.below(1 << b) as u8;
+                }
+                r
+            })
+            .collect()
+    } else {
+        (0..n)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect()
+    };
+    (b, l, SketchSet::from_rows(b, l, &rows))
+}
+
+#[test]
+fn prop_node_counts_agree_across_representations() {
+    let mut rng = Rng::new(0x7219);
+    for _ in 0..25 {
+        let (_b, _l, set) = random_db(&mut rng);
+        let ss = SortedSketches::build(&set);
+        let pt = PointerTrie::build(&ss);
+        let bst = BstTrie::build(&ss, BstConfig::default());
+        let louds = LoudsTrie::build(&ss);
+        let fst = FstTrie::build(&ss);
+        assert_eq!(pt.node_count(), ss.total_nodes());
+        assert_eq!(bst.node_count(), ss.total_nodes());
+        assert_eq!(louds.node_count(), ss.total_nodes());
+        assert_eq!(fst.node_count(), ss.total_nodes());
+    }
+}
+
+#[test]
+fn prop_search_monotone_in_tau() {
+    let mut rng = Rng::new(0x7220);
+    for _ in 0..20 {
+        let (b, l, set) = random_db(&mut rng);
+        let ss = SortedSketches::build(&set);
+        let bst = BstTrie::build(&ss, BstConfig::default());
+        let q: Vec<u8> = (0..l).map(|_| rng.below(1 << b) as u8).collect();
+        let mut prev: Vec<u32> = Vec::new();
+        for tau in 0..=l {
+            let mut cur = bst.search(&q, tau);
+            cur.sort();
+            // result set grows monotonically with tau
+            assert!(prev.iter().all(|id| cur.binary_search(id).is_ok()), "tau={tau}");
+            prev = cur;
+        }
+        // tau = L returns everything
+        assert_eq!(prev.len(), set.n());
+    }
+}
+
+#[test]
+fn prop_random_layer_configs_match_oracle() {
+    let mut rng = Rng::new(0x7221);
+    for case in 0..30 {
+        let (b, l, set) = random_db(&mut rng);
+        let ss = SortedSketches::build(&set);
+        let pt = PointerTrie::build(&ss);
+        // random (lm, ls, repr) override
+        let lm = rng.below_usize(l + 1);
+        let ls = lm + rng.below_usize(l - lm + 1);
+        let repr = match rng.below_usize(3) {
+            0 => Some(MiddleRepr::Table),
+            1 => Some(MiddleRepr::List),
+            _ => None,
+        };
+        let cfg = BstConfig { lm: Some(lm), ls: Some(ls), force_repr: repr, ..Default::default() };
+        let bst = BstTrie::build(&ss, cfg);
+        for _ in 0..6 {
+            let q: Vec<u8> = (0..l).map(|_| rng.below(1 << b) as u8).collect();
+            let tau = rng.below_usize(4);
+            let mut a = pt.search(&q, tau);
+            let mut c = bst.search(&q, tau);
+            a.sort();
+            c.sort();
+            assert_eq!(a, c, "case={case} b={b} l={l} lm={lm} ls={ls} {repr:?} tau={tau}");
+        }
+    }
+}
+
+#[test]
+fn prop_exact_lookup_returns_posting_group() {
+    let mut rng = Rng::new(0x7222);
+    for _ in 0..20 {
+        let (_b, _l, set) = random_db(&mut rng);
+        let ss = SortedSketches::build(&set);
+        let bst = BstTrie::build(&ss, BstConfig::default());
+        // tau = 0 on a database row returns exactly the ids with equal rows
+        let probe = rng.below_usize(set.n());
+        let q = set.row(probe);
+        let mut got = bst.search(&q, 0);
+        got.sort();
+        let expect: Vec<u32> = (0..set.n())
+            .filter(|&i| set.row(i) == q)
+            .map(|i| i as u32)
+            .collect();
+        assert_eq!(got, expect);
+    }
+}
+
+#[test]
+fn prop_space_ordering_bst_smallest() {
+    // On databases large enough for the asymptotics to show, bST must not
+    // exceed LOUDS or FST (Table III's space column).
+    let mut rng = Rng::new(0x7223);
+    let mut wins = 0usize;
+    let mut total = 0usize;
+    for _ in 0..10 {
+        let b = 2usize;
+        let l = 16usize;
+        let n = 4000;
+        let rows: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect();
+        let set = SketchSet::from_rows(b, l, &rows);
+        let ss = SortedSketches::build(&set);
+        let bst = BstTrie::build(&ss, BstConfig::default());
+        let louds = LoudsTrie::build(&ss);
+        let fst = FstTrie::build(&ss);
+        total += 1;
+        if bst.heap_bytes() <= louds.heap_bytes() && bst.heap_bytes() <= fst.heap_bytes() {
+            wins += 1;
+        }
+    }
+    assert_eq!(wins, total, "bST must be smallest on all runs");
+}
