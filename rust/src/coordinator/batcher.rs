@@ -14,9 +14,10 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// One queued request.
+/// One queued request. The query is held as `Arc<[u8]>` so the engine's
+/// shard fan-out shares the bytes instead of cloning them per shard.
 struct Pending {
-    q: Vec<u8>,
+    q: Arc<[u8]>,
     tau: usize,
     reply: Sender<Vec<u32>>,
 }
@@ -40,7 +41,9 @@ impl BatchSubmitter {
     /// the batcher has shut down.
     pub fn search(&self, q: Vec<u8>, tau: usize) -> Option<Vec<u32>> {
         let (reply_tx, reply_rx) = channel();
-        self.tx.send(Msg::Req(Pending { q, tau, reply: reply_tx })).ok()?;
+        self.tx
+            .send(Msg::Req(Pending { q: q.into(), tau, reply: reply_tx }))
+            .ok()?;
         reply_rx.recv().ok()
     }
 }
@@ -93,9 +96,9 @@ impl Batcher {
                     Err(RecvTimeoutError::Disconnected) => break,
                 }
             }
-            // Execute the whole batch as one round.
-            let queries: Vec<(Vec<u8>, usize)> =
-                batch.iter().map(|p| (p.q.clone(), p.tau)).collect();
+            // Execute the whole batch as one round (Arc clones, no copies).
+            let queries: Vec<(Arc<[u8]>, usize)> =
+                batch.iter().map(|p| (Arc::clone(&p.q), p.tau)).collect();
             let results = engine.search_batch(&queries);
             for (p, r) in batch.into_iter().zip(results) {
                 let _ = p.reply.send(r);

@@ -1,8 +1,16 @@
 //! Sharded query engine.
 //!
 //! The database is striped into `S` contiguous shards; each shard worker
-//! thread owns one index (any [`SearchIndex`]) over its stripe. A search
-//! fans out to all shards and merges results with the global id offsets.
+//! thread owns one index (any [`SearchIndex`]) over its stripe plus one
+//! persistent [`QueryCtx`] — the per-worker scratch pool that makes the
+//! per-shard hot path allocation-free after warm-up. A query fans out to
+//! all shards as one shared `Arc<[u8]>` (no per-shard copies) and merges
+//! results with the global id offsets.
+//!
+//! Three query modes ride the same fan-out machinery: id collection
+//! ([`Engine::search`] / [`Engine::search_batch`]), counting
+//! ([`Engine::count`]) and top-k nearest neighbors ([`Engine::top_k`],
+//! merged globally by `(dist, id)`).
 //!
 //! Shard workers are persistent (channel-fed) rather than spawned per
 //! query — fan-out latency is two channel hops, and the workers give the
@@ -10,6 +18,7 @@
 
 use super::metrics::Metrics;
 use crate::index::SearchIndex;
+use crate::query::{CollectIds, CountOnly, QueryCtx, TopK};
 use crate::sketch::SketchSet;
 use crate::trie::bst::BstConfig;
 use crate::util::timer::Timer;
@@ -17,11 +26,30 @@ use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+/// How a fanned-out query collects results on each shard.
+#[derive(Debug, Clone, Copy)]
+pub enum QueryMode {
+    /// Collect matching ids (classic threshold search).
+    Ids,
+    /// Count matches only.
+    Count,
+    /// Per-shard top-k by `(dist, id)`; merged globally by the caller.
+    TopK(usize),
+}
+
+/// One shard's result payload.
+pub enum ShardReply {
+    Ids(Vec<u32>),
+    Count(usize),
+    TopK(Vec<(u32, usize)>),
+}
+
 enum ShardMsg {
-    Search {
-        q: Vec<u8>,
+    Query {
+        q: Arc<[u8]>,
         tau: usize,
-        reply: Sender<(usize, Vec<u32>)>,
+        mode: QueryMode,
+        reply: Sender<(usize, ShardReply)>,
         shard_no: usize,
     },
     Shutdown,
@@ -103,11 +131,32 @@ impl Engine {
             let handle = std::thread::Builder::new()
                 .name(format!("bst-shard-{offset}"))
                 .spawn(move || {
+                    // One QueryCtx per worker: scratch buffers are warmed
+                    // by the first query and reused for the shard's
+                    // lifetime (the pooling layer of the query refactor).
+                    let mut qctx = QueryCtx::new();
                     while let Ok(msg) = rx.recv() {
                         match msg {
-                            ShardMsg::Search { q, tau, reply, shard_no } => {
-                                let hits = index.search(&q, tau);
-                                let _ = reply.send((shard_no, hits));
+                            ShardMsg::Query { q, tau, mode, reply, shard_no } => {
+                                let result = match mode {
+                                    QueryMode::Ids => {
+                                        let mut hits = Vec::new();
+                                        let mut coll = CollectIds::new(tau, &mut hits);
+                                        index.run(&q, &mut qctx, &mut coll);
+                                        ShardReply::Ids(hits)
+                                    }
+                                    QueryMode::Count => {
+                                        let mut coll = CountOnly::new(tau);
+                                        index.run(&q, &mut qctx, &mut coll);
+                                        ShardReply::Count(coll.count())
+                                    }
+                                    QueryMode::TopK(k) => {
+                                        let mut coll = TopK::new(k, tau);
+                                        index.run(&q, &mut qctx, &mut coll);
+                                        ShardReply::TopK(coll.finish())
+                                    }
+                                };
+                                let _ = reply.send((shard_no, result));
                             }
                             ShardMsg::Shutdown => break,
                         }
@@ -140,78 +189,129 @@ impl Engine {
         Arc::clone(&self.metrics)
     }
 
-    /// Fans a query out to every shard and merges global ids.
-    pub fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {
-        assert_eq!(q.len(), self.l, "query length mismatch");
-        let timer = Timer::start();
-        let (reply_tx, reply_rx) = channel();
+    /// Enqueues `q` on every shard; the query bytes are shared via one
+    /// `Arc` clone per shard, never copied.
+    fn fan_out(
+        &self,
+        q: &Arc<[u8]>,
+        tau: usize,
+        mode: QueryMode,
+        reply_tx: &Sender<(usize, ShardReply)>,
+    ) {
         for (no, shard) in self.shards.iter().enumerate() {
             shard
                 .tx
-                .send(ShardMsg::Search {
-                    q: q.to_vec(),
+                .send(ShardMsg::Query {
+                    q: Arc::clone(q),
                     tau,
+                    mode,
                     reply: reply_tx.clone(),
                     shard_no: no,
                 })
                 .expect("shard worker alive");
         }
+    }
+
+    /// Fans a query out to every shard and merges global ids.
+    pub fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {
+        assert_eq!(q.len(), self.l, "query length mismatch");
+        let timer = Timer::start();
+        let q: Arc<[u8]> = Arc::from(q);
+        let (reply_tx, reply_rx) = channel();
+        self.fan_out(&q, tau, QueryMode::Ids, &reply_tx);
         drop(reply_tx);
         let mut out = Vec::new();
-        for (shard_no, hits) in reply_rx {
-            let offset = self.shards[shard_no].offset;
-            out.extend(hits.into_iter().map(|id| id + offset));
+        for (shard_no, reply) in reply_rx {
+            if let ShardReply::Ids(hits) = reply {
+                let offset = self.shards[shard_no].offset;
+                out.extend(hits.into_iter().map(|id| id + offset));
+            }
         }
         self.metrics.record_query(timer.elapsed_us() as u64, out.len());
         out
+    }
+
+    /// Counts matches across all shards.
+    pub fn count(&self, q: &[u8], tau: usize) -> usize {
+        assert_eq!(q.len(), self.l, "query length mismatch");
+        let timer = Timer::start();
+        let q: Arc<[u8]> = Arc::from(q);
+        let (reply_tx, reply_rx) = channel();
+        self.fan_out(&q, tau, QueryMode::Count, &reply_tx);
+        drop(reply_tx);
+        let mut total = 0usize;
+        for (_no, reply) in reply_rx {
+            if let ShardReply::Count(n) = reply {
+                total += n;
+            }
+        }
+        self.metrics.record_query(timer.elapsed_us() as u64, total);
+        total
+    }
+
+    /// Global top-k within radius `tau`: each shard answers its local
+    /// top-k, merged here by `(dist, global id)` — within a shard the
+    /// local-id order equals the global-id order (offsets are monotone),
+    /// so the merge is exact. Returns `(id, dist)` pairs.
+    pub fn top_k(&self, q: &[u8], k: usize, tau: usize) -> Vec<(u32, usize)> {
+        assert_eq!(q.len(), self.l, "query length mismatch");
+        let timer = Timer::start();
+        let q: Arc<[u8]> = Arc::from(q);
+        let (reply_tx, reply_rx) = channel();
+        self.fan_out(&q, tau, QueryMode::TopK(k), &reply_tx);
+        drop(reply_tx);
+        let mut all: Vec<(usize, u32)> = Vec::new();
+        for (shard_no, reply) in reply_rx {
+            if let ShardReply::TopK(hits) = reply {
+                let offset = self.shards[shard_no].offset;
+                all.extend(hits.into_iter().map(|(id, d)| (d, id + offset)));
+            }
+        }
+        all.sort_unstable();
+        all.truncate(k);
+        self.metrics.record_query(timer.elapsed_us() as u64, all.len());
+        all.into_iter().map(|(d, id)| (id, d)).collect()
     }
 
     /// Executes a batch of queries as one pipelined fan-out round (the
     /// batcher's entry point). All queries are enqueued on every shard
     /// *before* any result is collected, so the batch completes in
     /// (slowest shard's queue) time rather than Σ per-query latencies —
-    /// see EXPERIMENTS.md §Perf for the before/after.
-    pub fn search_batch(&self, queries: &[(Vec<u8>, usize)]) -> Vec<Vec<u32>> {
+    /// see EXPERIMENTS.md §Perf for the before/after. Queries arrive as
+    /// `Arc<[u8]>` and are shared, not cloned, across shard messages.
+    pub fn search_batch(&self, queries: &[(Arc<[u8]>, usize)]) -> Vec<Vec<u32>> {
         self.metrics.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let timer = Timer::start();
-        // Phase 1: fan out everything.
-        let rxs: Vec<_> = queries
+        // Phase 1: fan out everything, stamping each query's own start so
+        // latency metrics reflect real per-query wall time (an even split
+        // of the batch total would hide stragglers).
+        let pending: Vec<_> = queries
             .iter()
             .map(|(q, tau)| {
+                let timer = Timer::start();
                 let (reply_tx, reply_rx) = channel();
-                for (no, shard) in self.shards.iter().enumerate() {
-                    shard
-                        .tx
-                        .send(ShardMsg::Search {
-                            q: q.clone(),
-                            tau: *tau,
-                            reply: reply_tx.clone(),
-                            shard_no: no,
-                        })
-                        .expect("shard worker alive");
-                }
-                reply_rx
+                self.fan_out(q, *tau, QueryMode::Ids, &reply_tx);
+                (timer, reply_rx)
             })
             .collect();
-        // Phase 2: collect in request order.
+        // Phase 2: collect in request order; each query's latency is
+        // measured from its fan-out to the receipt of its last shard
+        // reply.
         let n_shards = self.shards.len();
-        let out: Vec<Vec<u32>> = rxs
+        pending
             .into_iter()
-            .map(|rx| {
+            .map(|(timer, rx)| {
                 let mut merged = Vec::new();
                 for _ in 0..n_shards {
-                    let (shard_no, hits) = rx.recv().expect("shard reply");
-                    let offset = self.shards[shard_no].offset;
-                    merged.extend(hits.into_iter().map(|id| id + offset));
+                    let (shard_no, reply) = rx.recv().expect("shard reply");
+                    if let ShardReply::Ids(hits) = reply {
+                        let offset = self.shards[shard_no].offset;
+                        merged.extend(hits.into_iter().map(|id| id + offset));
+                    }
                 }
+                self.metrics.record_query(timer.elapsed_us() as u64, merged.len());
                 merged
             })
-            .collect();
-        let per_query_us = timer.elapsed_us() as u64 / queries.len().max(1) as u64;
-        for r in &out {
-            self.metrics.record_query(per_query_us, r.len());
-        }
-        out
+            .collect()
     }
 }
 
@@ -272,6 +372,64 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn count_and_topk_agree_with_search() {
+        let rows = rows(1200, 96);
+        let set = SketchSet::from_rows(2, 16, &rows);
+        for n_shards in [1usize, 4] {
+            let engine = Engine::build(&set, n_shards, &ShardIndexKind::Bst(BstConfig::default()));
+            for qi in [0usize, 7, 400] {
+                let q = &rows[qi];
+                for tau in [0usize, 2, 4] {
+                    assert_eq!(
+                        engine.count(q, tau),
+                        engine.search(q, tau).len(),
+                        "shards={n_shards} tau={tau}"
+                    );
+                }
+                // top-k equals globally sorted brute force by (dist, id)
+                let tau = 4usize;
+                let mut all: Vec<(usize, u32)> = (0..rows.len())
+                    .map(|i| (ham_chars(&rows[i], q), i as u32))
+                    .filter(|&(d, _)| d <= tau)
+                    .collect();
+                all.sort_unstable();
+                for k in [1usize, 10, 1000] {
+                    let got = engine.top_k(q, k, tau);
+                    let expect: Vec<(u32, usize)> =
+                        all.iter().take(k).map(|&(d, id)| (id, d)).collect();
+                    assert_eq!(got, expect, "shards={n_shards} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_sequential_and_records_per_query_latency() {
+        let rows = rows(900, 97);
+        let set = SketchSet::from_rows(2, 16, &rows);
+        let engine = Engine::build(&set, 3, &ShardIndexKind::Bst(BstConfig::default()));
+        let queries: Vec<(Arc<[u8]>, usize)> = (0..8)
+            .map(|i| (Arc::from(rows[i * 37].as_slice()), i % 4))
+            .collect();
+        let batch = engine.search_batch(&queries);
+        assert_eq!(batch.len(), queries.len());
+        for ((q, tau), got) in queries.iter().zip(&batch) {
+            let mut got = got.clone();
+            got.sort();
+            let mut expect = engine.search(q, *tau);
+            expect.sort();
+            assert_eq!(got, expect);
+        }
+        // one metrics record per query (batch counted once)
+        let m = engine.metrics();
+        assert_eq!(
+            m.queries.load(std::sync::atomic::Ordering::Relaxed),
+            (queries.len() * 2) as u64
+        );
+        assert_eq!(m.batches.load(std::sync::atomic::Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //! machinery every retrieval system (vLLM-router-style) carries:
 //!
 //! * [`engine`] — sharded query engine: the database is striped over `S`
-//!   shards, each owning one index (SI-bST by default); a query fans out
-//!   to all shards and merges id sets (ids are globally offset).
+//!   shards, each owning one index (SI-bST by default) plus a persistent
+//!   per-worker `QueryCtx`; a query fans out to all shards as one shared
+//!   `Arc<[u8]>` and merges id sets / counts / top-k results (ids are
+//!   globally offset).
 //! * [`batcher`] — dynamic batching: requests queue up to `max_batch` or
 //!   `max_delay`, then execute as one fan-out round (amortizes shard
 //!   wake-ups under load; single requests still cut through on timeout).

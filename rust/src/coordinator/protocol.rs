@@ -3,6 +3,8 @@
 //! Requests:
 //! ```text
 //! {"op":"search","q":[0,1,2,3],"tau":2}
+//! {"op":"count","q":[0,1,2,3],"tau":2}
+//! {"op":"topk","q":[0,1,2,3],"k":5,"tau":4}
 //! {"op":"stats"}
 //! {"op":"ping"}
 //! {"op":"shutdown"}
@@ -10,11 +12,17 @@
 //! Responses (one line each):
 //! ```text
 //! {"ids":[5,17],"latency_us":123}
+//! {"count":2,"latency_us":87}
+//! {"ids":[5,17],"dists":[0,2],"latency_us":140}
 //! {"queries":...,"p50_latency_us":...}
 //! {"pong":true}
 //! {"ok":true}
 //! {"error":"..."}
 //! ```
+//!
+//! `tau` is optional everywhere: `search`/`count` fall back to the
+//! server's default threshold, `topk` to the sketch length (an unbounded
+//! nearest-neighbor query). `topk` results are sorted by `(dist, id)`.
 
 use crate::util::json::Json;
 
@@ -22,9 +30,26 @@ use crate::util::json::Json;
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Search { q: Vec<u8>, tau: Option<usize> },
+    Count { q: Vec<u8>, tau: Option<usize> },
+    TopK { q: Vec<u8>, k: usize, tau: Option<usize> },
     Stats,
     Ping,
     Shutdown,
+}
+
+/// Extracts the query characters from a request body.
+fn parse_q(v: &Json) -> Result<Vec<u8>, String> {
+    v.get("q")
+        .and_then(|q| q.as_arr())
+        .ok_or_else(|| "request requires 'q' array".to_string())?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .filter(|&f| f.fract() == 0.0 && (0.0..256.0).contains(&f))
+                .map(|f| f as u8)
+                .ok_or_else(|| "q entries must be chars 0..256".to_string())
+        })
+        .collect()
 }
 
 /// Parses one request line.
@@ -39,20 +64,24 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         "stats" => Ok(Request::Stats),
         "shutdown" => Ok(Request::Shutdown),
         "search" => {
-            let q = v
-                .get("q")
-                .and_then(|q| q.as_arr())
-                .ok_or_else(|| "search requires 'q' array".to_string())?
-                .iter()
-                .map(|x| {
-                    x.as_f64()
-                        .filter(|&f| f.fract() == 0.0 && (0.0..256.0).contains(&f))
-                        .map(|f| f as u8)
-                        .ok_or_else(|| "q entries must be chars 0..256".to_string())
-                })
-                .collect::<Result<Vec<u8>, _>>()?;
+            let q = parse_q(&v)?;
             let tau = v.get("tau").and_then(|t| t.as_usize());
             Ok(Request::Search { q, tau })
+        }
+        "count" => {
+            let q = parse_q(&v)?;
+            let tau = v.get("tau").and_then(|t| t.as_usize());
+            Ok(Request::Count { q, tau })
+        }
+        "topk" => {
+            let q = parse_q(&v)?;
+            let k = v
+                .get("k")
+                .and_then(|k| k.as_usize())
+                .filter(|&k| k >= 1)
+                .ok_or_else(|| "topk requires 'k' >= 1".to_string())?;
+            let tau = v.get("tau").and_then(|t| t.as_usize());
+            Ok(Request::TopK { q, k, tau })
         }
         other => Err(format!("unknown op '{other}'")),
     }
@@ -62,6 +91,32 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
 pub fn search_response(ids: &[u32], latency_us: u64) -> String {
     Json::obj(vec![
         ("ids", Json::ids(ids)),
+        ("latency_us", Json::num(latency_us as f64)),
+    ])
+    .to_string()
+}
+
+/// Encodes a count response.
+pub fn count_response(count: usize, latency_us: u64) -> String {
+    Json::obj(vec![
+        ("count", Json::num(count as f64)),
+        ("latency_us", Json::num(latency_us as f64)),
+    ])
+    .to_string()
+}
+
+/// Encodes a top-k response: parallel `ids` / `dists` arrays sorted by
+/// `(dist, id)`.
+pub fn topk_response(hits: &[(u32, usize)], latency_us: u64) -> String {
+    Json::obj(vec![
+        (
+            "ids",
+            Json::Arr(hits.iter().map(|&(id, _)| Json::Num(id as f64)).collect()),
+        ),
+        (
+            "dists",
+            Json::Arr(hits.iter().map(|&(_, d)| Json::Num(d as f64)).collect()),
+        ),
         ("latency_us", Json::num(latency_us as f64)),
     ])
     .to_string()
@@ -85,6 +140,16 @@ mod tests {
     }
 
     #[test]
+    fn parses_count_and_topk() {
+        let r = parse_request(r#"{"op":"count","q":[1,2],"tau":3}"#).unwrap();
+        assert_eq!(r, Request::Count { q: vec![1, 2], tau: Some(3) });
+        let r = parse_request(r#"{"op":"topk","q":[1,2],"k":5}"#).unwrap();
+        assert_eq!(r, Request::TopK { q: vec![1, 2], k: 5, tau: None });
+        let r = parse_request(r#"{"op":"topk","q":[0],"k":1,"tau":2}"#).unwrap();
+        assert_eq!(r, Request::TopK { q: vec![0], k: 1, tau: Some(2) });
+    }
+
+    #[test]
     fn parses_control_ops() {
         assert_eq!(parse_request(r#"{"op":"ping"}"#).unwrap(), Request::Ping);
         assert_eq!(parse_request(r#"{"op":"stats"}"#).unwrap(), Request::Stats);
@@ -98,6 +163,9 @@ mod tests {
         assert!(parse_request(r#"{"op":"search"}"#).is_err());
         assert!(parse_request(r#"{"op":"search","q":[300]}"#).is_err());
         assert!(parse_request(r#"{"op":"search","q":[1.5]}"#).is_err());
+        assert!(parse_request(r#"{"op":"count"}"#).is_err());
+        assert!(parse_request(r#"{"op":"topk","q":[1]}"#).is_err());
+        assert!(parse_request(r#"{"op":"topk","q":[1],"k":0}"#).is_err());
         assert!(parse_request(r#"{}"#).is_err());
     }
 
@@ -106,6 +174,12 @@ mod tests {
         let s = search_response(&[1, 2, 3], 42);
         let v = Json::parse(&s).unwrap();
         assert_eq!(v.get("ids").unwrap().as_arr().unwrap().len(), 3);
+        let c = count_response(7, 10);
+        assert_eq!(Json::parse(&c).unwrap().get("count").unwrap().as_usize(), Some(7));
+        let t = topk_response(&[(5, 0), (17, 2)], 140);
+        let tv = Json::parse(&t).unwrap();
+        assert_eq!(tv.get("ids").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(tv.get("dists").unwrap().as_arr().unwrap().len(), 2);
         let e = error_response("bad");
         assert!(Json::parse(&e).unwrap().get("error").is_some());
     }

@@ -7,7 +7,9 @@
 
 use super::batcher::Batcher;
 use super::engine::Engine;
-use super::protocol::{error_response, parse_request, search_response, Request};
+use super::protocol::{
+    count_response, error_response, parse_request, search_response, topk_response, Request,
+};
 use super::ServeConfig;
 use crate::util::timer::Timer;
 use std::io::{BufRead, BufReader, Write};
@@ -83,6 +85,23 @@ pub fn serve(engine: Arc<Engine>, cfg: ServeConfig) -> std::io::Result<ServerHan
     Ok(ServerHandle { addr, stop, handle: Some(handle) })
 }
 
+/// Validates a request's query length against the engine's sketch length.
+fn check_len(engine: &Engine, q: &[u8]) -> Result<(), String> {
+    if q.len() == engine.l() {
+        Ok(())
+    } else {
+        engine
+            .metrics()
+            .errors
+            .fetch_add(1, Ordering::Relaxed);
+        Err(format!(
+            "query length {} != sketch length {}",
+            q.len(),
+            engine.l()
+        ))
+    }
+}
+
 fn handle_conn(
     stream: TcpStream,
     submitter: super::batcher::BatchSubmitter,
@@ -111,22 +130,38 @@ fn handle_conn(
                 let _ = TcpStream::connect(writer.local_addr()?);
                 break;
             }
-            Ok(Request::Search { q, tau }) => {
-                if q.len() != engine.l() {
-                    engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
-                    error_response(&format!(
-                        "query length {} != sketch length {}",
-                        q.len(),
-                        engine.l()
-                    ))
-                } else {
+            Ok(Request::Search { q, tau }) => match check_len(&engine, &q) {
+                Err(e) => error_response(&e),
+                Ok(()) => {
                     let timer = Timer::start();
                     match submitter.search(q, tau.unwrap_or(default_tau)) {
                         Some(ids) => search_response(&ids, timer.elapsed_us() as u64),
                         None => error_response("engine unavailable"),
                     }
                 }
-            }
+            },
+            // Count and top-k go straight to the engine: id-searches are
+            // the high-volume path the batcher amortizes.
+            Ok(Request::Count { q, tau }) => match check_len(&engine, &q) {
+                Err(e) => error_response(&e),
+                Ok(()) => {
+                    let timer = Timer::start();
+                    let n = engine.count(&q, tau.unwrap_or(default_tau));
+                    count_response(n, timer.elapsed_us() as u64)
+                }
+            },
+            Ok(Request::TopK { q, k, tau }) => match check_len(&engine, &q) {
+                Err(e) => error_response(&e),
+                Ok(()) => {
+                    let timer = Timer::start();
+                    // default radius: unbounded nearest-neighbor (tau = L);
+                    // k above the database size is meaningless — clamp it
+                    // so untrusted requests stay cheap.
+                    let k = k.min(engine.n());
+                    let hits = engine.top_k(&q, k, tau.unwrap_or(engine.l()));
+                    topk_response(&hits, timer.elapsed_us() as u64)
+                }
+            },
         };
         writer.write_all(reply.as_bytes())?;
         writer.write_all(b"\n")?;

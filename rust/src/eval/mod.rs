@@ -10,6 +10,8 @@
 //! | Fig. 7 (search time, 5 methods) | [`tables::fig7`] |
 //! | Fig. 8 (cost model)           | [`cost::fig8`] |
 //! | §VI-C m-sweep                 | [`tables::msweep`] |
+//! | pruning stats (beyond-paper)  | [`tables::pruning`] |
+//! | top-k timing (beyond-paper)   | [`tables::topk`] |
 //!
 //! Output is Markdown (piped into EXPERIMENTS.md). Absolute numbers are
 //! testbed-specific; the *shapes* (who wins, by what factor, where the

@@ -7,6 +7,7 @@ use crate::index::{
     HmSearch, LinearScan, Mih, MultiBst, SearchIndex, Sih, SingleBst, SingleFst, SingleLouds,
 };
 use crate::index::sih::CappedResult;
+use crate::query::{CountOnly, QueryCtx, StatsObserver};
 use crate::trie::bst::BstConfig;
 use crate::trie::SketchTrie;
 use crate::util::pool::par_chunks;
@@ -346,6 +347,98 @@ pub fn msweep(opts: &EvalOpts, datasets: &[Dataset]) -> String {
     out
 }
 
+/// Pruning effectiveness of the bST traversal: average nodes visited /
+/// children pruned / ids emitted per query, via the `StatsObserver`
+/// collector (the node-visit accounting of Algorithm 1, per τ).
+pub fn pruning(opts: &EvalOpts, datasets: &[Dataset]) -> String {
+    let mut out = String::new();
+    for &ds in datasets {
+        let w = load_workload(ds, opts);
+        let n_q = opts.queries.min(w.queries.len());
+        let bst = SingleBst::build(&w.sketches, BstConfig::default());
+        let total_nodes = bst.trie().node_count();
+        let mut t = Table::new(format!(
+            "Pruning — {} ({}; {} queries; t={} nodes)",
+            ds.name(),
+            bst.trie().describe(),
+            n_q,
+            total_nodes
+        ));
+        t.header(vec![
+            "tau".into(),
+            "visited/query".into(),
+            "pruned/query".into(),
+            "emitted/query".into(),
+            "visited/t".into(),
+        ]);
+        let mut ctx = QueryCtx::new();
+        for &tau in &TAUS {
+            let (mut visited, mut pruned, mut emitted) = (0usize, 0usize, 0usize);
+            for q in w.queries.iter().take(n_q) {
+                let mut obs = StatsObserver::new(CountOnly::new(tau));
+                bst.trie().run(q, &mut ctx, &mut obs);
+                visited += obs.stats.visited;
+                pruned += obs.stats.pruned;
+                emitted += obs.stats.emitted;
+            }
+            let nq = n_q.max(1) as f64;
+            t.row(vec![
+                tau.to_string(),
+                format!("{:.0}", visited as f64 / nq),
+                format!("{:.0}", pruned as f64 / nq),
+                format!("{:.1}", emitted as f64 / nq),
+                format!("{:.4}", visited as f64 / nq / total_nodes.max(1) as f64),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
+/// Top-k (nearest-neighbor) timing: the adaptive `TopK` collector over
+/// SI-bST vs brute-force k-NN over the linear scanner, k ∈ {1, 10, 100}.
+pub fn topk(opts: &EvalOpts, datasets: &[Dataset]) -> String {
+    const KS: [usize; 3] = [1, 10, 100];
+    let mut out = String::new();
+    for &ds in datasets {
+        let w = load_workload(ds, opts);
+        let set = &w.sketches;
+        let n_q = opts.queries.min(w.queries.len());
+        let si = SingleBst::build(set, BstConfig::default());
+        let scan = LinearScan::build(set);
+        let l = set.l();
+
+        let mut t = Table::new(format!(
+            "Top-k — {} (avg ms/query over {} queries; unbounded radius)",
+            ds.name(),
+            n_q
+        ));
+        let mut header = vec!["method".into()];
+        header.extend(KS.iter().map(|k| format!("k={k}")));
+        t.header(header);
+
+        for (name, idx) in [
+            ("SI-bST (adaptive τ)", &si as &dyn SearchIndex),
+            ("LinearScan", &scan as &dyn SearchIndex),
+        ] {
+            let mut row = vec![name.to_string()];
+            for &k in &KS {
+                let timer = Timer::start();
+                for q in w.queries.iter().take(n_q) {
+                    let hits = idx.top_k(q, k, l);
+                    std::hint::black_box(&hits);
+                }
+                row.push(ms(timer.elapsed_ms() / n_q.max(1) as f64));
+            }
+            t.row(row);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -382,6 +475,16 @@ mod tests {
         assert!(s.contains("bST"));
         assert!(s.contains("LOUDS"));
         assert!(s.contains("FST"));
+    }
+
+    #[test]
+    fn pruning_and_topk_run_on_review() {
+        let opts = tiny_opts();
+        let s = pruning(&opts, &[Dataset::Review]);
+        assert!(s.contains("visited/query"), "{s}");
+        let s = topk(&opts, &[Dataset::Review]);
+        assert!(s.contains("SI-bST"), "{s}");
+        assert!(s.contains("k=100"), "{s}");
     }
 
     #[test]

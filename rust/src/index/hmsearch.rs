@@ -25,6 +25,7 @@ use super::blocks::block_ranges;
 use super::hashdex::HashIndex;
 use super::signature::pack_key;
 use super::SearchIndex;
+use crate::query::{Collector, QueryCtx};
 use crate::sketch::{SketchSet, VerticalSet};
 use crate::util::rng::mix64;
 use crate::util::HeapSize;
@@ -192,14 +193,14 @@ impl HmSearch {
 }
 
 impl SearchIndex for HmSearch {
-    fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {
+    fn run(&self, q: &[u8], _ctx: &mut QueryCtx, c: &mut dyn Collector) {
+        let tau = c.tau();
         assert!(
             tau <= self.tau_max,
             "HmSearch built for tau <= {}, got {tau}",
             self.tau_max
         );
         let q_planes = self.vertical.pack_query(q);
-        let mut out = Vec::new();
         let mut guard = self.visited.lock().unwrap();
         let (epochs, cur) = &mut *guard;
         *cur = cur.wrapping_add(1);
@@ -209,13 +210,13 @@ impl SearchIndex for HmSearch {
         }
         for blk in &self.blocks {
             let q_block = &q[blk.lo..blk.hi];
-            let mut probe = |key: u64, out: &mut Vec<u32>| {
+            let mut probe = |key: u64, c: &mut dyn Collector| {
                 for &id in blk.index.get(key) {
                     let e = &mut epochs[id as usize];
                     if *e != *cur {
                         *e = *cur;
-                        if self.vertical.ham_leq(id as usize, &q_planes, tau).is_some() {
-                            out.push(id);
+                        if let Some(d) = self.vertical.ham_leq(id as usize, &q_planes, c.tau()) {
+                            c.emit(&[id], d);
                         }
                     }
                 }
@@ -223,18 +224,17 @@ impl SearchIndex for HmSearch {
             match blk.scheme {
                 Scheme::Substitution => {
                     // db registered all 1-substitutions → exact probe only
-                    probe(sub_key(q_block, self.b), &mut out);
+                    probe(sub_key(q_block, self.b), &mut *c);
                 }
                 Scheme::Deletion => {
                     // probe exact + every query-side deletion
-                    probe(sub_key(q_block, self.b), &mut out);
+                    probe(sub_key(q_block, self.b), &mut *c);
                     for pos in 0..q_block.len() {
-                        probe(del_key(q_block, pos, self.b), &mut out);
+                        probe(del_key(q_block, pos, self.b), &mut *c);
                     }
                 }
             }
         }
-        out
     }
 
     fn heap_bytes(&self) -> usize {

@@ -3,6 +3,7 @@
 //! and the ground-truth oracle of the test suite.
 
 use super::SearchIndex;
+use crate::query::{Collector, QueryCtx};
 use crate::sketch::{SketchSet, VerticalSet};
 use crate::util::HeapSize;
 
@@ -24,8 +25,18 @@ impl LinearScan {
 }
 
 impl SearchIndex for LinearScan {
-    fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {
-        self.vertical.scan(q, tau)
+    fn run(&self, q: &[u8], ctx: &mut QueryCtx, c: &mut dyn Collector) {
+        // Reuse the caller's plane scratch: the scan is allocation-free.
+        self.vertical.pack_query_into(q, &mut ctx.q_planes);
+        let qp = &ctx.q_planes;
+        for i in 0..self.vertical.n() {
+            c.on_visit();
+            if let Some(d) = self.vertical.ham_leq(i, qp, c.tau()) {
+                c.emit(&[i as u32], d);
+            } else {
+                c.on_prune();
+            }
+        }
     }
 
     fn heap_bytes(&self) -> usize {

@@ -10,7 +10,7 @@
 //! framework's verification step absorbs collisions soundly).
 
 use super::hashdex::HashIndex;
-use super::multi::{BlockFilter, MultiIndex};
+use super::multi::{BlockFilter, BlockScratch, MultiIndex};
 use super::signature::{for_each_signature, pack_key};
 use crate::sketch::SketchSet;
 use crate::util::rng::mix64;
@@ -62,19 +62,28 @@ impl BlockFilter for HashBlockFilter {
         HashBlockFilter { index, b, l, exact_keys }
     }
 
-    fn candidates(&self, q_block: &[u8], tau_j: usize, emit: &mut dyn FnMut(u32)) {
+    fn candidates(
+        &self,
+        q_block: &[u8],
+        tau_j: usize,
+        scratch: &mut BlockScratch,
+        emit: &mut dyn FnMut(u32),
+    ) {
         debug_assert_eq!(q_block.len(), self.l);
         if self.exact_keys {
-            for_each_signature(q_block, self.b, tau_j, &mut |key| {
+            for_each_signature(q_block, self.b, tau_j, &mut |key, _edits| {
                 for &id in self.index.get(key) {
                     emit(id);
                 }
                 true
             });
         } else {
-            // enumerate signature rows in place, probe the mixed key
-            let mut row = q_block.to_vec();
-            enumerate_rows(&mut row, self.b, 0, tau_j, true, &mut |r| {
+            // enumerate signature rows in place (in the shared scratch
+            // buffer), probing the mixed key of each
+            let row = &mut scratch.row;
+            row.clear();
+            row.extend_from_slice(q_block);
+            enumerate_rows(row, self.b, 0, tau_j, true, &mut |r| {
                 for &id in self.index.get(mixed_key(r, self.b)) {
                     emit(id);
                 }

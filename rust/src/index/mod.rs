@@ -11,6 +11,20 @@
 //! | `HmSearch`   | multi-index  | 1-var signatures in DB| [`hmsearch`]|
 //! | linear scan  | none         | vertical Hamming      | [`linear`]  |
 //!
+//! The primary entry point is [`SearchIndex::run`]: every index executes
+//! a query against a caller-supplied [`Collector`] (ids / count / top-k /
+//! stats — see [`crate::query`]) with reusable [`QueryCtx`] scratch. The
+//! collector carries the threshold; because [`crate::query::TopK`]
+//! tightens it while candidates stream in, every index answers
+//! nearest-neighbor queries through the same code path that serves
+//! threshold queries. [`SearchIndex::search`] / [`SearchIndex::count`] /
+//! [`SearchIndex::top_k`] are thin wrappers over `run`.
+//!
+//! `run` takes `&mut dyn Collector` (not a generic parameter) so the
+//! trait stays object-safe — the sharded engine stores
+//! `Box<dyn SearchIndex>` per shard. Trie traversals underneath are
+//! still monomorphized; only the per-group `emit` crosses a vtable.
+//!
 //! Supporting machinery: [`signature`] (Hamming-ball enumeration),
 //! [`hashdex`] (open-addressing inverted index on packed block keys),
 //! [`blocks`] (multi-index partitioning + threshold assignment).
@@ -32,10 +46,41 @@ pub use multi::MultiBst;
 pub use sih::Sih;
 pub use single::{SingleBst, SingleFst, SingleLouds};
 
+use crate::query::{CollectIds, Collector, CountOnly, QueryCtx, TopK};
+
 /// A Hamming-threshold similarity index over a fixed sketch database.
 pub trait SearchIndex {
+    /// Executes a query, feeding every solution (with its exact distance)
+    /// to the collector. The collector's `tau()` at entry is the τ the
+    /// index plans for; adaptive collectors may tighten it mid-query.
+    fn run(&self, q: &[u8], ctx: &mut QueryCtx, c: &mut dyn Collector);
+
     /// Ids of all sketches with `ham(s_i, q) <= tau`, in unspecified order.
-    fn search(&self, q: &[u8], tau: usize) -> Vec<u32>;
+    fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut ctx = QueryCtx::new();
+        let mut coll = CollectIds::new(tau, &mut out);
+        self.run(q, &mut ctx, &mut coll);
+        out
+    }
+
+    /// Number of sketches with `ham(s_i, q) <= tau`.
+    fn count(&self, q: &[u8], tau: usize) -> usize {
+        let mut ctx = QueryCtx::new();
+        let mut coll = CountOnly::new(tau);
+        self.run(q, &mut ctx, &mut coll);
+        coll.count()
+    }
+
+    /// The `k` nearest sketches within radius `tau`, sorted by
+    /// `(dist, id)` and returned as `(id, dist)` pairs. Pass `tau = L`
+    /// for an unbounded nearest-neighbor query.
+    fn top_k(&self, q: &[u8], k: usize, tau: usize) -> Vec<(u32, usize)> {
+        let mut ctx = QueryCtx::new();
+        let mut coll = TopK::new(k, tau);
+        self.run(q, &mut ctx, &mut coll);
+        coll.finish()
+    }
 
     /// Heap bytes owned by the index (paper Tables III/IV).
     fn heap_bytes(&self) -> usize;

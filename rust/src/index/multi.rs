@@ -8,18 +8,37 @@
 //!    `θ_j` of the query block;
 //! 2. **verification** — candidates are deduplicated (epoch array — no
 //!    clearing between queries) and their *full* Hamming distance checked
-//!    with the vertical bit-parallel kernel.
+//!    with the vertical bit-parallel kernel against the collector's
+//!    *live* threshold, so top-k queries tighten verification as the
+//!    heap fills.
+//!
+//! All per-query state (epoch array, packed query planes, the bST block
+//! filter's traversal scratch) lives behind one mutex and is reused
+//! across queries — the multi-index analogue of the engine's per-worker
+//! `QueryCtx` pooling.
 //!
 //! `MI-bST` instantiates `F` = per-block bST; [`super::mih`] and
 //! [`super::hmsearch`] provide the hash-table backends.
 
 use super::blocks::{block_ranges, block_thresholds};
 use super::SearchIndex;
+use crate::query::{CollectIds, Collector, QueryCtx};
 use crate::sketch::{SketchSet, VerticalSet};
 use crate::trie::bst::{BstConfig, BstTrie};
 use crate::trie::{SketchTrie, SortedSketches};
 use crate::util::HeapSize;
 use std::sync::Mutex;
+
+/// Reusable scratch handed to block filters on every query (kept inside
+/// the index's query-state mutex, so it is warmed once and reused).
+pub struct BlockScratch {
+    /// Traversal scratch for trie-backed filters.
+    pub ctx: QueryCtx,
+    /// Hit buffer for filters that materialize their candidates.
+    pub hits: Vec<u32>,
+    /// Row buffer for filters that enumerate signature rows in place.
+    pub row: Vec<u8>,
+}
 
 /// Per-block candidate filter.
 pub trait BlockFilter: Send + Sync {
@@ -28,7 +47,13 @@ pub trait BlockFilter: Send + Sync {
 
     /// Invokes `emit(id)` for every sketch whose block is within `tau_j`
     /// of `q_block` (duplicates allowed; the framework deduplicates).
-    fn candidates(&self, q_block: &[u8], tau_j: usize, emit: &mut dyn FnMut(u32));
+    fn candidates(
+        &self,
+        q_block: &[u8],
+        tau_j: usize,
+        scratch: &mut BlockScratch,
+        emit: &mut dyn FnMut(u32),
+    );
 
     fn heap_bytes(&self) -> usize;
 
@@ -77,6 +102,13 @@ impl Visited {
     }
 }
 
+/// All mutable per-query state, reused across queries.
+struct QueryState {
+    visited: Visited,
+    scratch: BlockScratch,
+    q_planes: Vec<u64>,
+}
+
 /// Generic multi-index.
 pub struct MultiIndex<F: BlockFilter> {
     m: usize,
@@ -84,7 +116,7 @@ pub struct MultiIndex<F: BlockFilter> {
     filters: Vec<F>,
     /// Full sketches in vertical format for verification.
     vertical: VerticalSet,
-    visited: Mutex<Visited>,
+    state: Mutex<QueryState>,
 }
 
 impl<F: BlockFilter> MultiIndex<F> {
@@ -101,7 +133,15 @@ impl<F: BlockFilter> MultiIndex<F> {
             ranges,
             filters,
             vertical: VerticalSet::from_horizontal(set),
-            visited: Mutex::new(Visited::new(set.n())),
+            state: Mutex::new(QueryState {
+                visited: Visited::new(set.n()),
+                scratch: BlockScratch {
+                    ctx: QueryCtx::new(),
+                    hits: Vec::new(),
+                    row: Vec::new(),
+                },
+                q_planes: Vec::new(),
+            }),
         }
     }
 
@@ -109,47 +149,60 @@ impl<F: BlockFilter> MultiIndex<F> {
         self.m
     }
 
-    /// Search with per-query statistics.
-    pub fn search_with_stats(&self, q: &[u8], tau: usize) -> (Vec<u32>, FilterStats) {
+    /// Filter + verify, streaming solutions into the collector. `tau` is
+    /// the threshold the block assignment plans for (the collector's tau
+    /// at entry); verification prunes against the live `c.tau()`.
+    fn run_filtered(&self, q: &[u8], tau: usize, c: &mut dyn Collector, stats: &mut FilterStats) {
         assert_eq!(q.len(), self.vertical.l());
         let thresholds = block_thresholds(tau, self.m);
-        let q_planes = self.vertical.pack_query(q);
-        let mut stats = FilterStats::default();
-        let mut out = Vec::new();
+        let vertical = &self.vertical;
 
-        let mut visited = self.visited.lock().unwrap();
+        let mut guard = self.state.lock().unwrap();
+        let QueryState { visited, scratch, q_planes } = &mut *guard;
         visited.next_query();
+        vertical.pack_query_into(q, q_planes);
         for (j, &(lo, hi)) in self.ranges.iter().enumerate() {
             let Some(tau_j) = thresholds[j] else { continue };
             let q_block = &q[lo..hi];
-            let vertical = &self.vertical;
+            let q_planes = &*q_planes;
             let visited = &mut *visited;
-            let stats = &mut stats;
-            let out = &mut out;
-            self.filters[j].candidates(q_block, tau_j, &mut |id| {
+            let stats = &mut *stats;
+            let c = &mut *c;
+            self.filters[j].candidates(q_block, tau_j, scratch, &mut |id| {
                 stats.emitted += 1;
                 if visited.insert(id) {
                     stats.verified += 1;
-                    if vertical.ham_leq(id as usize, &q_planes, tau).is_some() {
-                        out.push(id);
+                    if let Some(d) = vertical.ham_leq(id as usize, q_planes, c.tau()) {
+                        c.emit(&[id], d);
                     }
                 }
             });
         }
+    }
+
+    /// Search with per-query statistics.
+    pub fn search_with_stats(&self, q: &[u8], tau: usize) -> (Vec<u32>, FilterStats) {
+        let mut stats = FilterStats::default();
+        let mut out = Vec::new();
+        let mut coll = CollectIds::new(tau, &mut out);
+        self.run_filtered(q, tau, &mut coll, &mut stats);
         stats.solutions = out.len();
         (out, stats)
     }
 }
 
 impl<F: BlockFilter> SearchIndex for MultiIndex<F> {
-    fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {
-        self.search_with_stats(q, tau).0
+    fn run(&self, q: &[u8], _ctx: &mut QueryCtx, c: &mut dyn Collector) {
+        // Internal pooled scratch is used instead of the caller's ctx: the
+        // epoch array must match this index's database size.
+        let mut stats = FilterStats::default();
+        self.run_filtered(q, c.tau(), c, &mut stats);
     }
 
     fn heap_bytes(&self) -> usize {
         self.filters.iter().map(|f| f.heap_bytes()).sum::<usize>()
             + self.vertical.heap_bytes()
-            + self.visited.lock().unwrap().epoch.heap_bytes()
+            + self.state.lock().unwrap().visited.epoch.heap_bytes()
     }
 
     fn name(&self) -> String {
@@ -159,7 +212,8 @@ impl<F: BlockFilter> SearchIndex for MultiIndex<F> {
 
 /// bST as a per-block filter: the block trie's leaves hold the ids of all
 /// sketches sharing the block value — exactly an inverted index, searched
-/// by traversal instead of signature probing.
+/// by traversal instead of signature probing. The traversal reuses the
+/// shared [`BlockScratch`], so filtering allocates nothing after warm-up.
 pub struct BstBlockFilter {
     trie: BstTrie,
 }
@@ -170,11 +224,18 @@ impl BlockFilter for BstBlockFilter {
         BstBlockFilter { trie: BstTrie::build(&ss, BstConfig::default()) }
     }
 
-    fn candidates(&self, q_block: &[u8], tau_j: usize, emit: &mut dyn FnMut(u32)) {
-        // Reuse the trie's search buffer-free path.
-        let mut buf = Vec::new();
-        self.trie.search_into(q_block, tau_j, &mut buf);
-        for id in buf {
+    fn candidates(
+        &self,
+        q_block: &[u8],
+        tau_j: usize,
+        scratch: &mut BlockScratch,
+        emit: &mut dyn FnMut(u32),
+    ) {
+        let BlockScratch { ctx, hits } = scratch;
+        hits.clear();
+        let mut coll = CollectIds::new(tau_j, hits);
+        self.trie.run(q_block, ctx, &mut coll);
+        for &id in hits.iter() {
             emit(id);
         }
     }
@@ -245,6 +306,30 @@ mod tests {
         assert_eq!(stats.solutions, hits.len());
         assert!(stats.verified >= stats.solutions);
         assert!(stats.emitted >= stats.verified);
+    }
+
+    #[test]
+    fn count_and_topk_match_search() {
+        let rows = clustered_rows(2, 16, 500, 54);
+        let set = SketchSet::from_rows(2, 16, &rows);
+        let mi = MultiBst::build(&set, 2);
+        for tau in [0usize, 2, 4] {
+            let ids = mi.search(&rows[0], tau);
+            assert_eq!(mi.count(&rows[0], tau), ids.len(), "tau={tau}");
+        }
+        // top-k within radius tau equals sorted brute force
+        let tau = 4;
+        let mut all: Vec<(usize, u32)> = (0..rows.len())
+            .map(|i| (ham_chars(&rows[i], &rows[0]), i as u32))
+            .filter(|&(d, _)| d <= tau)
+            .collect();
+        all.sort_unstable();
+        for k in [1usize, 5, 50] {
+            let got = mi.top_k(&rows[0], k, tau);
+            let expect: Vec<(u32, usize)> =
+                all.iter().take(k).map(|&(d, id)| (id, d)).collect();
+            assert_eq!(got, expect, "k={k}");
+        }
     }
 
     #[test]

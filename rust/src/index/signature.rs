@@ -59,12 +59,16 @@ pub fn binomial(n: usize, k: usize) -> u128 {
 }
 
 /// Enumerates every signature within Hamming distance `tau` of `row`,
-/// invoking `f(key)` for each (including `row` itself). Enumeration is
-/// depth-first over mismatch positions; keys are packed MSB-first.
+/// invoking `f(key, edits)` for each (including `row` itself at
+/// `edits = 0`). `edits` is the signature's exact Hamming distance from
+/// `row` — collectors that need distances (top-k over exact-key SIH) read
+/// it directly, since an exact-key match implies `ham(s, q) = edits`.
+/// Enumeration is depth-first over mismatch positions; keys are packed
+/// MSB-first.
 ///
 /// Returns `false` if `f` ever returns `false` (caller-requested abort —
 /// used to enforce the paper's 10 s per-query cap on SIH).
-pub fn for_each_signature<F: FnMut(u64) -> bool>(
+pub fn for_each_signature<F: FnMut(u64, usize) -> bool>(
     row: &[u8],
     b: usize,
     tau: usize,
@@ -72,22 +76,24 @@ pub fn for_each_signature<F: FnMut(u64) -> bool>(
 ) -> bool {
     let base = pack_key(row, b);
     let l = row.len();
-    if !f(base) {
+    if !f(base, 0) {
         return false;
     }
     if tau == 0 {
         return true;
     }
-    rec(base, row, b, l, 0, tau, f)
+    rec(base, row, b, l, 0, tau, 1, f)
 }
 
-fn rec<F: FnMut(u64) -> bool>(
+#[allow(clippy::too_many_arguments)]
+fn rec<F: FnMut(u64, usize) -> bool>(
     key: u64,
     row: &[u8],
     b: usize,
     l: usize,
     from: usize,
     budget: usize,
+    edits: usize,
     f: &mut F,
 ) -> bool {
     let sigma = 1u64 << b;
@@ -100,10 +106,10 @@ fn rec<F: FnMut(u64) -> bool>(
                 continue;
             }
             let k2 = cleared | (c << shift);
-            if !f(k2) {
+            if !f(k2, edits) {
                 return false;
             }
-            if budget > 1 && !rec(k2, row, b, l, pos + 1, budget - 1, f) {
+            if budget > 1 && !rec(k2, row, b, l, pos + 1, budget - 1, edits + 1, f) {
                 return false;
             }
         }
@@ -151,8 +157,13 @@ mod tests {
         for &(b, l, tau) in &[(1usize, 6usize, 2usize), (2, 4, 2), (2, 5, 3), (4, 3, 2), (8, 2, 1)] {
             let row: Vec<u8> = (0..l).map(|i| (i % (1 << b)) as u8).collect();
             let mut got = HashSet::new();
-            for_each_signature(&row, b, tau, &mut |k| {
+            for_each_signature(&row, b, tau, &mut |k, edits| {
                 assert!(got.insert(k), "duplicate signature {k:#x}");
+                assert_eq!(
+                    edits,
+                    ham_chars(&unpack_key(k, b, l), &row),
+                    "edit count must equal the signature's distance"
+                );
                 true
             });
             assert_eq!(got.len() as u128, count_signatures(b, l, tau), "b={b} l={l} tau={tau}");
@@ -171,7 +182,7 @@ mod tests {
         let row = vec![1u8, 3, 0, 2];
         for tau in 0..=4 {
             let mut got = HashSet::new();
-            for_each_signature(&row, b, tau, &mut |k| {
+            for_each_signature(&row, b, tau, &mut |k, _edits| {
                 got.insert(k);
                 true
             });
@@ -188,7 +199,7 @@ mod tests {
     fn abort_stops_enumeration() {
         let row = vec![0u8; 8];
         let mut count = 0usize;
-        let completed = for_each_signature(&row, 2, 3, &mut |_| {
+        let completed = for_each_signature(&row, 2, 3, &mut |_, _| {
             count += 1;
             count < 10
         });

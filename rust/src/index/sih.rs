@@ -14,6 +14,7 @@
 use super::hashdex::HashIndex;
 use super::signature::{for_each_signature, pack_key};
 use super::SearchIndex;
+use crate::query::{CollectIds, Collector, QueryCtx};
 use crate::sketch::{SketchSet, VerticalSet};
 use crate::util::rng::mix64;
 use crate::util::HeapSize;
@@ -86,32 +87,45 @@ impl Sih {
         }
     }
 
-    /// Uncapped search (tests, small τ).
-    fn search_uncapped(&self, q: &[u8], tau: usize) -> Vec<u32> {
-        match self.search_capped(q, tau, Duration::from_secs(u64::MAX / 2)) {
-            CappedResult::Done(v) => v,
-            CappedResult::TimedOut => unreachable!(),
-        }
-    }
-
     /// Search with the paper's per-query wall-clock cap (10 s in §VI-C).
     ///
     /// Signature enumeration is *not* materialized: each signature probes
     /// the index as it is generated, checking the clock every 4096
     /// signatures.
     pub fn search_capped(&self, q: &[u8], tau: usize, budget: Duration) -> CappedResult {
+        let mut out = Vec::new();
+        let mut coll = CollectIds::new(tau, &mut out);
+        if self.run_capped(q, tau, budget, &mut coll) {
+            CappedResult::Done(out)
+        } else {
+            CappedResult::TimedOut
+        }
+    }
+
+    /// Core enumeration loop feeding a collector; returns `false` on
+    /// timeout. `tau` fixes the enumeration ball (signature generation
+    /// cannot shrink mid-flight), but candidate emission respects the
+    /// collector's live threshold.
+    fn run_capped(
+        &self,
+        q: &[u8],
+        tau: usize,
+        budget: Duration,
+        c: &mut dyn Collector,
+    ) -> bool {
         assert_eq!(q.len(), self.l);
         let start = Instant::now();
-        let mut out = Vec::new();
         let q_planes = self.vertical.as_ref().map(|v| v.pack_query(q));
         let mut since_check = 0usize;
         let mut timed_out = false;
 
         let completed = if self.exact_keys {
-            // enumerate signatures directly as packed keys
-            for_each_signature(q, self.b, tau, &mut |key| {
-                for &id in self.index.get(key) {
-                    out.push(id);
+            // enumerate signatures directly as packed keys; an exact-key
+            // hit's distance is the signature's edit count
+            for_each_signature(q, self.b, tau, &mut |key, edits| {
+                let ids = self.index.get(key);
+                if !ids.is_empty() && edits <= c.tau() {
+                    c.emit(ids, edits);
                 }
                 since_check += 1;
                 if since_check >= 4096 {
@@ -129,14 +143,13 @@ impl Sih {
             self.enumerate_rows_capped(&mut row, 0, tau, &mut |r| {
                 let key = self.key_of(r);
                 for &id in self.index.get(key) {
-                    if self
+                    if let Some(d) = self
                         .vertical
                         .as_ref()
                         .unwrap()
-                        .ham_leq(id as usize, q_planes.as_ref().unwrap(), tau)
-                        .is_some()
+                        .ham_leq(id as usize, q_planes.as_ref().unwrap(), c.tau())
                     {
-                        out.push(id);
+                        c.emit(&[id], d);
                     }
                 }
                 since_check += 1;
@@ -150,11 +163,7 @@ impl Sih {
                 true
             })
         };
-        if completed && !timed_out {
-            CappedResult::Done(out)
-        } else {
-            CappedResult::TimedOut
-        }
+        completed && !timed_out
     }
 
     /// DFS over signature rows in place (mirrors
@@ -196,8 +205,9 @@ impl Sih {
 }
 
 impl SearchIndex for Sih {
-    fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {
-        self.search_uncapped(q, tau)
+    fn run(&self, q: &[u8], _ctx: &mut QueryCtx, c: &mut dyn Collector) {
+        // Uncapped (tests, small τ); serving paths use `search_capped`.
+        let _ = self.run_capped(q, c.tau(), Duration::from_secs(u64::MAX / 2), c);
     }
 
     fn heap_bytes(&self) -> usize {

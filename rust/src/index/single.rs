@@ -6,6 +6,7 @@
 //! are the Table III baselines behind the same interface.
 
 use super::SearchIndex;
+use crate::query::{Collector, QueryCtx};
 use crate::sketch::SketchSet;
 use crate::trie::bst::{BstConfig, BstTrie};
 use crate::trie::fst::FstTrie;
@@ -20,8 +21,11 @@ pub struct SingleIndex<T: SketchTrie> {
 }
 
 impl<T: SketchTrie> SearchIndex for SingleIndex<T> {
-    fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {
-        self.trie.search(q, tau)
+    fn run(&self, q: &[u8], ctx: &mut QueryCtx, c: &mut dyn Collector) {
+        // `&mut dyn Collector` implements Collector (forwarding impl), so
+        // the trie traversal monomorphizes over the dynamic adapter.
+        let mut c = c;
+        self.trie.run(q, ctx, &mut c);
     }
 
     fn heap_bytes(&self) -> usize {

@@ -15,6 +15,9 @@
 //!   bit-parallel Hamming, native minhash/CWS sketchers.
 //! * [`trie`] — the paper's contribution: the [`trie::bst`] succinct trie,
 //!   plus pointer-trie / LOUDS / FST baselines.
+//! * [`query`] — query execution: reusable [`query::QueryCtx`] scratch +
+//!   the pluggable [`query::Collector`] policies (ids / count / top-k /
+//!   traversal stats) shared by every trie and index.
 //! * [`index`] — similarity-search indexes: SI-bST, MI-bST, SIH, MIH,
 //!   HmSearch, linear scan.
 //! * [`data`] — synthetic dataset generators standing in for the paper's
@@ -52,6 +55,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod index;
+pub mod query;
 pub mod runtime;
 pub mod sketch;
 pub mod trie;

@@ -6,7 +6,7 @@
 //!          [--seed S] [--threads T]
 //! bst sketch --dataset D [--scale F] [--out FILE] [--xla]   # ingestion
 //! bst build  --in FILE [--index si-bst|mi-bst|...]          # index stats
-//! bst query  --in FILE --q 0,1,2,... --tau T
+//! bst query  --in FILE --q 0,1,2,... [--tau T] [--topk K] [--stats]
 //! bst serve  --dataset D [--addr A] [--shards S] [--scale F]
 //! bst info                                                  # build info
 //! ```
@@ -45,7 +45,8 @@ bst — b-bit sketch trie: scalable similarity search on integer sketches
 
 USAGE:
   bst eval <exp>      regenerate a paper experiment
-                      (table1 table2 table3 table4 fig7 fig8 msweep all)
+                      (table1 table2 table3 table4 fig7 fig8 msweep
+                       pruning topk all)
                       [--datasets review,cp,sift,gist] [--scale F]
                       [--queries N] [--sih-cap SECS] [--mem-cap-gib G]
                       [--seed S] [--threads T]
@@ -55,6 +56,7 @@ USAGE:
                       --in FILE [--index si-bst|mi-bst|sih|mih|hmsearch]
   bst query           one-off query against saved sketches
                       --in FILE --q c0,c1,... [--tau T]
+                      [--topk K] (k nearest)  [--stats] (traversal stats)
   bst serve           start the sharded TCP query service
                       --dataset D [--scale F] [--addr A] [--shards N]
                       [--index si-bst|mi-bst] [--max-batch N] [--max-delay-us U]
@@ -111,6 +113,8 @@ fn cmd_eval(args: &Args) -> i32 {
         "fig7" => tables::fig7(&opts, &datasets),
         "fig8" => cost::fig8(),
         "msweep" => tables::msweep(&opts, &datasets),
+        "pruning" => tables::pruning(&opts, &datasets),
+        "topk" => tables::topk(&opts, &datasets),
         "all" => {
             let mut s = String::new();
             s.push_str(&tables::table1(&opts));
@@ -268,19 +272,52 @@ fn cmd_query(args: &Args) -> i32 {
         eprintln!("query must have L={} characters", set.l());
         return 2;
     }
-    let tau = args.get_usize("tau", 2);
+    use bst::query::{CollectIds, QueryCtx, StatsObserver};
+    use bst::util::json::Json;
     let idx = bst::index::SingleBst::build(&set, BstConfig::default());
+
+    // --topk K: k nearest neighbors (radius --tau, default: unbounded).
+    if let Some(spec) = args.get("topk") {
+        let Ok(k) = spec.parse::<usize>() else {
+            eprintln!("--topk must be a non-negative integer, got '{spec}'");
+            return 2;
+        };
+        let tau = args.get_usize("tau", set.l());
+        let t = bst::util::timer::Timer::start();
+        let hits = idx.top_k(&q, k, tau);
+        let us = t.elapsed_us();
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("ids", Json::Arr(hits.iter().map(|&(id, _)| Json::Num(id as f64)).collect())),
+                ("dists", Json::Arr(hits.iter().map(|&(_, d)| Json::Num(d as f64)).collect())),
+                ("latency_us", Json::num(us)),
+            ])
+        );
+        return 0;
+    }
+
+    let tau = args.get_usize("tau", 2);
     let t = bst::util::timer::Timer::start();
-    let mut hits = idx.search(&q, tau);
+    let mut hits = Vec::new();
+    let stats = {
+        let mut ctx = QueryCtx::new();
+        let mut obs = StatsObserver::new(CollectIds::new(tau, &mut hits));
+        idx.trie().run(&q, &mut ctx, &mut obs);
+        obs.stats
+    };
     let us = t.elapsed_us();
     hits.sort();
-    println!(
-        "{}",
-        bst::util::json::Json::obj(vec![
-            ("ids", bst::util::json::Json::ids(&hits)),
-            ("latency_us", bst::util::json::Json::num(us)),
-        ])
-    );
+    let mut fields = vec![
+        ("ids", Json::ids(&hits)),
+        ("latency_us", Json::num(us)),
+    ];
+    if args.has("stats") {
+        fields.push(("visited", Json::num(stats.visited as f64)));
+        fields.push(("pruned", Json::num(stats.pruned as f64)));
+        fields.push(("emitted", Json::num(stats.emitted as f64)));
+    }
+    println!("{}", Json::obj(fields));
     0
 }
 

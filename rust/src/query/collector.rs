@@ -1,0 +1,224 @@
+//! The [`Collector`] trait and its four standard implementations.
+
+use std::collections::BinaryHeap;
+
+/// Node-visit accounting of one traversal: how many nodes the search
+/// entered, how many children it cut on the distance budget, and how many
+/// ids it reported. Filled by [`StatsObserver`]; the plain collectors
+/// compile the hooks away so the hot path stays clean.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TraversalStats {
+    /// Nodes entered (trie nodes + sparse-layer leaves compared).
+    pub visited: usize,
+    /// Children / candidates cut by the distance budget.
+    pub pruned: usize,
+    /// Ids emitted as solutions.
+    pub emitted: usize,
+}
+
+/// Consumption policy of a similarity search.
+///
+/// The traversal reads the *live* threshold via [`Collector::tau`] (it may
+/// shrink during the query — that is how [`TopK`] adapts) and reports every
+/// surviving candidate group through [`Collector::emit`] together with its
+/// **exact** Hamming distance. `on_visit` / `on_prune` are observation
+/// hooks with empty default bodies.
+pub trait Collector {
+    /// Current distance threshold; subtrees with running distance above
+    /// this may be pruned. Never increases during a query.
+    fn tau(&self) -> usize;
+
+    /// Reports candidate ids at exact distance `dist` (`dist <= tau()` at
+    /// call time). Groups share one distance (e.g. a leaf posting list).
+    fn emit(&mut self, ids: &[u32], dist: usize);
+
+    /// A node (or collapsed leaf) was entered.
+    #[inline]
+    fn on_visit(&mut self) {}
+
+    /// A child/candidate was cut by the distance budget.
+    #[inline]
+    fn on_prune(&mut self) {}
+}
+
+/// Forwarding impl so monomorphized traversals accept `&mut dyn Collector`
+/// (the object-safe form the index layer uses).
+impl<C: Collector + ?Sized> Collector for &mut C {
+    #[inline]
+    fn tau(&self) -> usize {
+        (**self).tau()
+    }
+
+    #[inline]
+    fn emit(&mut self, ids: &[u32], dist: usize) {
+        (**self).emit(ids, dist)
+    }
+
+    #[inline]
+    fn on_visit(&mut self) {
+        (**self).on_visit()
+    }
+
+    #[inline]
+    fn on_prune(&mut self) {
+        (**self).on_prune()
+    }
+}
+
+/// Today's semantics: append every matching id to a caller-owned buffer.
+pub struct CollectIds<'a> {
+    tau: usize,
+    out: &'a mut Vec<u32>,
+}
+
+impl<'a> CollectIds<'a> {
+    pub fn new(tau: usize, out: &'a mut Vec<u32>) -> Self {
+        CollectIds { tau, out }
+    }
+}
+
+impl Collector for CollectIds<'_> {
+    #[inline]
+    fn tau(&self) -> usize {
+        self.tau
+    }
+
+    #[inline]
+    fn emit(&mut self, ids: &[u32], _dist: usize) {
+        self.out.extend_from_slice(ids);
+    }
+}
+
+/// Counts solutions without materializing them.
+#[derive(Debug, Clone, Copy)]
+pub struct CountOnly {
+    tau: usize,
+    count: usize,
+}
+
+impl CountOnly {
+    pub fn new(tau: usize) -> Self {
+        CountOnly { tau, count: 0 }
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+}
+
+impl Collector for CountOnly {
+    #[inline]
+    fn tau(&self) -> usize {
+        self.tau
+    }
+
+    #[inline]
+    fn emit(&mut self, ids: &[u32], _dist: usize) {
+        self.count += ids.len();
+    }
+}
+
+/// Bounded nearest-neighbor collector: keeps the `k` candidates with the
+/// smallest `(dist, id)` pairs (ties broken toward smaller ids, making the
+/// result deterministic and exactly comparable to a sorted brute-force
+/// scan). Once the heap is full, [`Collector::tau`] drops to the current
+/// worst kept distance, so the traversal prunes adaptively.
+pub struct TopK {
+    k: usize,
+    tau0: usize,
+    /// Max-heap over `(dist, id)`; `peek()` is the current worst kept pair.
+    heap: BinaryHeap<(usize, u32)>,
+}
+
+impl TopK {
+    /// `tau` is the initial search radius (use the sketch length `L` for an
+    /// unbounded nearest-neighbor query). The heap grows with actual
+    /// results, so the pre-allocation is capped — a huge untrusted `k`
+    /// (e.g. from a wire request) must not translate into a huge
+    /// allocation up front.
+    pub fn new(k: usize, tau: usize) -> Self {
+        TopK { k, tau0: tau, heap: BinaryHeap::with_capacity(k.min(1024) + 1) }
+    }
+
+    /// Results sorted by `(dist, id)`, as `(id, dist)` pairs.
+    pub fn finish(self) -> Vec<(u32, usize)> {
+        let mut v = self.heap.into_vec();
+        v.sort_unstable();
+        v.into_iter().map(|(d, id)| (id, d)).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl Collector for TopK {
+    #[inline]
+    fn tau(&self) -> usize {
+        if self.k == 0 {
+            return 0;
+        }
+        if self.heap.len() == self.k {
+            self.heap.peek().map_or(self.tau0, |&(d, _)| d)
+        } else {
+            self.tau0
+        }
+    }
+
+    fn emit(&mut self, ids: &[u32], dist: usize) {
+        if self.k == 0 || dist > self.tau0 {
+            return;
+        }
+        for &id in ids {
+            if self.heap.len() < self.k {
+                self.heap.push((dist, id));
+            } else if let Some(&worst) = self.heap.peek() {
+                if (dist, id) < worst {
+                    self.heap.push((dist, id));
+                    self.heap.pop();
+                }
+            }
+        }
+    }
+}
+
+/// Wraps any collector and fills [`TraversalStats`] from the observation
+/// hooks — the eval harness's way to measure pruning without a second
+/// code path in the tries.
+pub struct StatsObserver<C> {
+    pub inner: C,
+    pub stats: TraversalStats,
+}
+
+impl<C: Collector> StatsObserver<C> {
+    pub fn new(inner: C) -> Self {
+        StatsObserver { inner, stats: TraversalStats::default() }
+    }
+}
+
+impl<C: Collector> Collector for StatsObserver<C> {
+    #[inline]
+    fn tau(&self) -> usize {
+        self.inner.tau()
+    }
+
+    #[inline]
+    fn emit(&mut self, ids: &[u32], dist: usize) {
+        self.stats.emitted += ids.len();
+        self.inner.emit(ids, dist);
+    }
+
+    #[inline]
+    fn on_visit(&mut self) {
+        self.stats.visited += 1;
+    }
+
+    #[inline]
+    fn on_prune(&mut self) {
+        self.stats.pruned += 1;
+    }
+}

@@ -1,0 +1,57 @@
+//! Reusable per-query scratch.
+
+/// All scratch a single query needs, owned by the caller so repeated
+/// queries reuse the same buffers (shard workers keep one per thread).
+///
+/// * `q_planes` — the query suffix packed into vertical bit-planes
+///   (filled by `SparseLayer::pack_query_into` / `VerticalSet::pack_query_into`).
+/// * `kids` — the middle-layer fan-out buffer. Traversals store each
+///   level's children in the level's own stride-`sigma` segment, so the
+///   buffer is shared across the whole recursion without aliasing: a
+///   frame at depth `d` only writes `[d * sigma, (d + 1) * sigma)`.
+///
+/// Buffers only ever grow; after the first query at a given shape every
+/// later query runs allocation-free (see `tests/query_alloc.rs`).
+#[derive(Debug, Default)]
+pub struct QueryCtx {
+    /// Packed query bit-planes (`b` words).
+    pub(crate) q_planes: Vec<u64>,
+    /// Flat child buffer: `levels` segments of `kid_stride` slots each.
+    pub(crate) kids: Vec<(u32, u8)>,
+    /// Current segment width (`1 << b` of the structure being queried).
+    kid_stride: usize,
+}
+
+impl QueryCtx {
+    pub fn new() -> Self {
+        QueryCtx { q_planes: Vec::new(), kids: Vec::new(), kid_stride: 0 }
+    }
+
+    /// Ensures the child buffer holds `levels` segments of `sigma` slots.
+    /// `sigma` must be `1 << b` with `b <= 8` (labels are `u8`).
+    pub(crate) fn ensure_kids(&mut self, sigma: usize, levels: usize) {
+        debug_assert!(sigma <= 256, "alphabet wider than u8 labels: {sigma}");
+        self.kid_stride = sigma;
+        let need = sigma.saturating_mul(levels);
+        if self.kids.len() < need {
+            self.kids.resize(need, (0, 0));
+        }
+    }
+
+    /// Start of depth `d`'s segment in [`Self::kids`].
+    #[inline]
+    pub(crate) fn kid_off(&self, depth: usize) -> usize {
+        depth * self.kid_stride
+    }
+
+    /// Current size of the child buffer (diagnostics / tests).
+    pub fn kids_capacity(&self) -> usize {
+        self.kids.len()
+    }
+
+    /// Heap bytes currently held by the scratch buffers.
+    pub fn heap_bytes(&self) -> usize {
+        self.q_planes.capacity() * std::mem::size_of::<u64>()
+            + self.kids.capacity() * std::mem::size_of::<(u32, u8)>()
+    }
+}

@@ -1,0 +1,120 @@
+//! Query execution: reusable per-query scratch + pluggable collectors.
+//!
+//! The hot path of every search method is a traversal (trie descent,
+//! signature probing, linear scan) that *produces candidate ids with
+//! known Hamming distances*. Before this subsystem, each layer baked in
+//! one consumption policy ("append ids to a `Vec<u32>`") and re-allocated
+//! its scratch on every call. The query subsystem splits the two concerns:
+//!
+//! * [`QueryCtx`] — all per-query scratch, owned by the caller and reused
+//!   across queries: packed query bit-planes, the middle-layer fan-out
+//!   buffer (sized `1 << b`, one slot per traversal level), and nothing
+//!   else. After one warm-up query a `BstTrie` threshold search performs
+//!   **zero heap allocations** (asserted by `tests/query_alloc.rs`).
+//! * [`Collector`] — the consumption policy, threaded through every trie
+//!   ([`crate::trie::SketchTrie::run`]) and every index
+//!   ([`crate::index::SearchIndex::run`]):
+//!     * [`CollectIds`] — classic semantics: append matching ids.
+//!     * [`CountOnly`] — aggregate counting, no result materialization.
+//!     * [`TopK`] — bounded max-heap over exact distances; its
+//!       [`Collector::tau`] tightens as the heap fills, turning any
+//!       threshold traversal into an adaptive nearest-neighbor search
+//!       (the top-k extension of Kanda & Tabei's dynamic-sketch line).
+//!     * [`StatsObserver`] — wraps another collector and fills
+//!       [`TraversalStats`] (visited / pruned / emitted), the node-visit
+//!       accounting the eval harness reports.
+//!
+//! The contract between traversal and collector: the traversal may prune
+//! any subtree whose running distance exceeds the *current* `c.tau()`,
+//! and must call `c.emit(ids, dist)` with the **exact** distance for every
+//! surviving candidate group. Because `TopK::tau()` only ever decreases,
+//! pruning against the live threshold is always sound.
+
+mod collector;
+mod ctx;
+
+pub use collector::{CollectIds, Collector, CountOnly, StatsObserver, TopK, TraversalStats};
+pub use ctx::QueryCtx;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collect_ids_appends() {
+        let mut out = Vec::new();
+        let mut c = CollectIds::new(3, &mut out);
+        assert_eq!(c.tau(), 3);
+        c.emit(&[1, 2], 1);
+        c.emit(&[7], 3);
+        assert_eq!(out, vec![1, 2, 7]);
+    }
+
+    #[test]
+    fn count_only_counts() {
+        let mut c = CountOnly::new(2);
+        c.emit(&[1, 2, 3], 0);
+        c.emit(&[9], 2);
+        assert_eq!(c.count(), 4);
+        assert_eq!(c.tau(), 2);
+    }
+
+    #[test]
+    fn topk_keeps_k_smallest_by_dist_then_id() {
+        let mut c = TopK::new(3, 10);
+        c.emit(&[5], 4);
+        c.emit(&[1], 2);
+        c.emit(&[9], 2);
+        assert_eq!(c.tau(), 4, "heap full: tau = current worst distance");
+        c.emit(&[3], 1); // evicts (4, 5)
+        c.emit(&[8], 9); // above tau, ignored
+        let got = c.finish();
+        assert_eq!(got, vec![(3, 1), (1, 2), (9, 2)]);
+    }
+
+    #[test]
+    fn topk_tie_break_is_smallest_id() {
+        let mut c = TopK::new(2, 5);
+        c.emit(&[30, 10, 20], 1);
+        assert_eq!(c.finish(), vec![(10, 1), (20, 1)]);
+    }
+
+    #[test]
+    fn topk_partial_fill_keeps_initial_tau() {
+        let mut c = TopK::new(4, 6);
+        c.emit(&[1], 5);
+        assert_eq!(c.tau(), 6, "heap not full: initial tau still active");
+        assert_eq!(c.finish(), vec![(1, 5)]);
+    }
+
+    #[test]
+    fn topk_zero_k_is_empty() {
+        let mut c = TopK::new(0, 3);
+        c.emit(&[1], 0);
+        assert_eq!(c.tau(), 0);
+        assert!(c.finish().is_empty());
+    }
+
+    #[test]
+    fn stats_observer_counts_and_delegates() {
+        let mut out = Vec::new();
+        let mut obs = StatsObserver::new(CollectIds::new(2, &mut out));
+        obs.on_visit();
+        obs.on_visit();
+        obs.on_prune();
+        obs.emit(&[4, 5], 1);
+        let stats = obs.stats;
+        assert_eq!((stats.visited, stats.pruned, stats.emitted), (2, 1, 2));
+        assert_eq!(out, vec![4, 5]);
+    }
+
+    #[test]
+    fn ctx_kid_buffer_is_sized_from_sigma() {
+        let mut ctx = QueryCtx::new();
+        ctx.ensure_kids(1 << 8, 4);
+        assert!(ctx.kids_capacity() >= 256 * 4);
+        // shrinking requests never shrink the buffer
+        ctx.ensure_kids(1 << 2, 2);
+        assert!(ctx.kids_capacity() >= 256 * 4);
+    }
+}

@@ -1,8 +1,8 @@
 //! Artifact registry: parses `artifacts/meta.json` written by
 //! `python/compile/aot.py`.
 
+use super::{RuntimeError, RuntimeResult};
 use crate::util::json::Json;
-use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Metadata of one lowered HLO artifact.
@@ -33,22 +33,23 @@ pub struct Registry {
 
 impl Registry {
     /// Reads and validates `dir/meta.json`.
-    pub fn load(dir: &Path) -> Result<Self> {
+    pub fn load(dir: &Path) -> RuntimeResult<Self> {
         let meta_path = dir.join("meta.json");
         let text = std::fs::read_to_string(&meta_path)
-            .with_context(|| format!("reading {meta_path:?}"))?;
-        let json = Json::parse(&text).context("parsing meta.json")?;
+            .map_err(|e| RuntimeError::msg(format!("reading {meta_path:?}: {e}")))?;
+        let json = Json::parse(&text)
+            .map_err(|e| RuntimeError::msg(format!("parsing meta.json: {e}")))?;
         let arr = json
             .get("artifacts")
             .and_then(|a| a.as_arr())
-            .ok_or_else(|| anyhow!("meta.json missing 'artifacts' array"))?;
+            .ok_or_else(|| RuntimeError::msg("meta.json missing 'artifacts' array"))?;
         let mut artifacts = Vec::with_capacity(arr.len());
         for item in arr {
-            let get_str = |k: &str| -> Result<String> {
+            let get_str = |k: &str| -> RuntimeResult<String> {
                 Ok(item
                     .get(k)
                     .and_then(|v| v.as_str())
-                    .ok_or_else(|| anyhow!("artifact missing field {k}"))?
+                    .ok_or_else(|| RuntimeError::msg(format!("artifact missing field {k}")))?
                     .to_string())
             };
             let get_num =
@@ -56,7 +57,9 @@ impl Registry {
             let file = get_str("file")?;
             let path = dir.join(&file);
             if !path.exists() {
-                return Err(anyhow!("artifact file {path:?} missing (re-run `make artifacts`)"));
+                return Err(RuntimeError::msg(format!(
+                    "artifact file {path:?} missing (re-run `make artifacts`)"
+                )));
             }
             artifacts.push(ArtifactMeta {
                 name: get_str("name")?,

@@ -1,0 +1,28 @@
+//! Lightweight runtime error type.
+//!
+//! `anyhow` is only linked when the `pjrt` feature is enabled; the
+//! artifact registry and the no-XLA stub use this string-backed error so
+//! the rest of the crate stays dependency-free. It implements
+//! `std::error::Error`, so the `pjrt` implementation can still wrap it
+//! with `anyhow::Context`.
+
+/// Error of the artifact registry / runtime facade.
+#[derive(Debug)]
+pub struct RuntimeError(String);
+
+impl RuntimeError {
+    pub(crate) fn msg(s: impl Into<String>) -> Self {
+        RuntimeError(s.into())
+    }
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Result alias used by the registry and the stub runtime.
+pub type RuntimeResult<T> = std::result::Result<T, RuntimeError>;

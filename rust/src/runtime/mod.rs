@@ -14,237 +14,37 @@
 //!   accelerator-style brute-force baseline).
 //!
 //! Artifact metadata lives in `artifacts/meta.json` ([`artifacts`]).
+//!
+//! The XLA executor is feature-gated: `--features pjrt` compiles the
+//! real implementation (the `pjrt` module, which needs the vendored
+//! `xla` + `anyhow` crates — see Cargo.toml); the default build uses a
+//! dependency-free `stub` with the identical API whose `Runtime::load`
+//! reports the runtime as unavailable. All request-path code is pure
+//! Rust either way.
 
 pub mod artifacts;
 
-use crate::sketch::{CwsParams, MinhashParams, SketchSet, VerticalSet};
-use anyhow::{bail, Context, Result};
-use artifacts::{ArtifactMeta, Registry};
-use std::path::Path;
+mod error;
+pub use error::{RuntimeError, RuntimeResult};
 
-/// A PJRT CPU client plus the artifact registry.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    registry: Registry,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{HammingScanner, Runtime, Sketcher};
 
-impl Runtime {
-    /// Loads `meta.json` from `dir` and connects the PJRT CPU client.
-    pub fn load(dir: &Path) -> Result<Self> {
-        let registry = Registry::load(dir)
-            .with_context(|| format!("loading artifact registry from {dir:?} (run `make artifacts`)"))?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, registry })
-    }
-
-    /// PJRT platform string (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn registry(&self) -> &Registry {
-        &self.registry
-    }
-
-    fn compile(&self, meta: &ArtifactMeta) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(&meta.path)
-            .with_context(|| format!("parsing HLO text {:?}", meta.path))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {}", meta.name))
-    }
-
-    /// Compiles the sketching executable for a dataset config.
-    pub fn sketcher(&self, dataset: &str) -> Result<Sketcher> {
-        let meta = self
-            .registry
-            .find(&format!("sketch_{dataset}"))
-            .with_context(|| format!("no sketch artifact for dataset {dataset}"))?
-            .clone();
-        let exe = self.compile(&meta)?;
-        Ok(Sketcher { exe, meta })
-    }
-
-    /// Compiles the Hamming-scan executable for a dataset config.
-    pub fn scanner(&self, dataset: &str) -> Result<HammingScanner> {
-        let meta = self
-            .registry
-            .find(&format!("hamming_{dataset}"))
-            .with_context(|| format!("no hamming artifact for dataset {dataset}"))?
-            .clone();
-        let exe = self.compile(&meta)?;
-        Ok(HammingScanner { exe, meta })
-    }
-}
-
-/// Executes the sketch pipeline artifact over feature batches.
-pub struct Sketcher {
-    exe: xla::PjRtLoadedExecutable,
-    meta: ArtifactMeta,
-}
-
-impl Sketcher {
-    pub fn meta(&self) -> &ArtifactMeta {
-        &self.meta
-    }
-
-    /// Runs one padded batch; `x` is row-major `batch × d`. Returns the
-    /// flat `batch × l` i32 character matrix.
-    fn run_batch(&self, x: &[f32], params: &[xla::Literal]) -> Result<Vec<i32>> {
-        let (batch, d) = (self.meta.batch, self.meta.d);
-        assert_eq!(x.len(), batch * d);
-        let x_lit = xla::Literal::vec1(x).reshape(&[batch as i64, d as i64])?;
-        let mut args = vec![x_lit];
-        args.extend(params.iter().map(clone_literal));
-        let results = self.exe.execute::<xla::Literal>(&args)?;
-        let out = results[0][0].to_literal_sync()?.to_tuple1()?;
-        Ok(out.to_vec::<i32>()?)
-    }
-
-    /// Sketches `n` minhash fingerprints (dense 0/1 rows, row-major
-    /// `n × d`), looping over padded batches.
-    pub fn sketch_minhash(&self, x: &[f32], n: usize, p: &MinhashParams) -> Result<SketchSet> {
-        if self.meta.kind != "sketch_minhash" {
-            bail!("artifact {} is not a minhash sketcher", self.meta.name);
-        }
-        assert_eq!((p.l, p.d), (self.meta.l, self.meta.d), "params mismatch");
-        let h_i32: Vec<i32> = p.hashes.iter().map(|&v| v as i32).collect();
-        let h_lit = xla::Literal::vec1(&h_i32)
-            .reshape(&[self.meta.l as i64, self.meta.d as i64])?;
-        self.batched_sketch(x, n, p.b, &[h_lit])
-    }
-
-    /// Sketches `n` CWS weight vectors (row-major `n × d`).
-    pub fn sketch_cws(&self, x: &[f32], n: usize, p: &CwsParams) -> Result<SketchSet> {
-        if self.meta.kind != "sketch_cws" {
-            bail!("artifact {} is not a CWS sketcher", self.meta.name);
-        }
-        assert_eq!((p.l, p.d), (self.meta.l, self.meta.d), "params mismatch");
-        let dims = [self.meta.l as i64, self.meta.d as i64];
-        let r = xla::Literal::vec1(&p.r).reshape(&dims)?;
-        let logc = xla::Literal::vec1(&p.logc).reshape(&dims)?;
-        let beta = xla::Literal::vec1(&p.beta).reshape(&dims)?;
-        self.batched_sketch(x, n, p.b, &[r, logc, beta])
-    }
-
-    fn batched_sketch(
-        &self,
-        x: &[f32],
-        n: usize,
-        b: usize,
-        params: &[xla::Literal],
-    ) -> Result<SketchSet> {
-        let (batch, d, l) = (self.meta.batch, self.meta.d, self.meta.l);
-        assert_eq!(x.len(), n * d, "features must be n×d");
-        let mut out = SketchSet::zeros(b, l, n);
-        let mut padded = vec![0f32; batch * d];
-        let mut i = 0usize;
-        while i < n {
-            let take = batch.min(n - i);
-            padded[..take * d].copy_from_slice(&x[i * d..(i + take) * d]);
-            padded[take * d..].fill(0.0);
-            let chars = self.run_batch(&padded, params)?;
-            for row in 0..take {
-                for pos in 0..l {
-                    out.set_char(i + row, pos, (chars[row * l + pos] & 0xFF) as u8);
-                }
-            }
-            i += take;
-        }
-        Ok(out)
-    }
-}
-
-/// Executes the vertical Hamming scan artifact.
-pub struct HammingScanner {
-    exe: xla::PjRtLoadedExecutable,
-    meta: ArtifactMeta,
-}
-
-impl HammingScanner {
-    pub fn meta(&self) -> &ArtifactMeta {
-        &self.meta
-    }
-
-    /// Distances of every sketch in `db` to query `q`, computed on the
-    /// XLA side in `scan_batch`-sized chunks.
-    pub fn distances(&self, db: &VerticalSet, q: &[u8]) -> Result<Vec<i32>> {
-        let (b, l, w, batch) = (self.meta.b, self.meta.l, self.meta.w, self.meta.batch);
-        assert_eq!((db.b(), db.l()), (b, l), "database/artifact mismatch");
-        let n = db.n();
-
-        // query planes → i32 words
-        let qp = db.pack_query(q);
-        let mut q_words = vec![0i32; b * w];
-        for (k, &plane) in qp.iter().enumerate() {
-            for wi in 0..w {
-                q_words[k * w + wi] = ((plane >> (32 * wi)) & 0xFFFF_FFFF) as u32 as i32;
-            }
-        }
-        let q_lit = xla::Literal::vec1(&q_words).reshape(&[b as i64, w as i64])?;
-
-        let mut out = Vec::with_capacity(n);
-        let mut planes = vec![0i32; b * batch * w];
-        let mut i = 0usize;
-        while i < n {
-            let take = batch.min(n - i);
-            planes.fill(0);
-            for row in 0..take {
-                for k in 0..b {
-                    let field = db.plane_field(k, i + row);
-                    for wi in 0..w {
-                        planes[k * batch * w + row * w + wi] =
-                            ((field >> (32 * wi)) & 0xFFFF_FFFF) as u32 as i32;
-                    }
-                }
-            }
-            let p_lit = xla::Literal::vec1(&planes)
-                .reshape(&[b as i64, batch as i64, w as i64])?;
-            let results = self.exe.execute::<xla::Literal>(&[p_lit, clone_literal(&q_lit)])?;
-            let dist = results[0][0].to_literal_sync()?.to_tuple1()?.to_vec::<i32>()?;
-            out.extend_from_slice(&dist[..take]);
-            i += take;
-        }
-        Ok(out)
-    }
-
-    /// Threshold search via the XLA scan (the baseline `search` shape).
-    pub fn search(&self, db: &VerticalSet, q: &[u8], tau: usize) -> Result<Vec<u32>> {
-        let d = self.distances(db, q)?;
-        Ok(d.iter()
-            .enumerate()
-            .filter(|(_, &x)| x as usize <= tau)
-            .map(|(i, _)| i as u32)
-            .collect())
-    }
-}
-
-/// The `xla` crate's `Literal` lacks `Clone`; for the small f32/i32
-/// parameter tensors used here a deep copy through the element vector is
-/// sufficient (and off the hot path).
-fn clone_literal(lit: &xla::Literal) -> xla::Literal {
-    let shape = lit.array_shape().expect("literal array shape");
-    let dims = shape.dims().to_vec();
-    match shape.element_type() {
-        xla::ElementType::F32 => {
-            let v = lit.to_vec::<f32>().expect("f32 literal");
-            xla::Literal::vec1(&v).reshape(&dims).expect("reshape")
-        }
-        xla::ElementType::S32 => {
-            let v = lit.to_vec::<i32>().expect("i32 literal");
-            xla::Literal::vec1(&v).reshape(&dims).expect("reshape")
-        }
-        other => panic!("clone_literal: unsupported element type {other:?}"),
-    }
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{HammingScanner, Runtime, Sketcher};
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::Path;
 
     /// Unit-level: registry failure modes (full runtime integration tests
-    /// live in rust/tests/integration_runtime.rs and need `make artifacts`).
+    /// live in rust/tests/integration_runtime.rs and need `make artifacts`
+    /// plus the `pjrt` feature).
     #[test]
     fn missing_registry_errors() {
         let r = Runtime::load(Path::new("/nonexistent/dir"));

@@ -1,0 +1,91 @@
+//! Dependency-free stand-in for the PJRT runtime (default build).
+//!
+//! The `xla` crate is not vendored in every build environment, so the
+//! default feature set compiles this stub instead of [`super`]'s
+//! `pjrt` module. It keeps the exact API surface — `Runtime`,
+//! [`Sketcher`], [`HammingScanner`] — but `Runtime::load` always fails
+//! with a clear message, and the downstream types are uninhabited (they
+//! can never be constructed, so their methods are statically
+//! unreachable). Callers that probe with `Runtime::load(..).ok()`
+//! degrade gracefully; the native Rust sketchers in [`crate::sketch`]
+//! cover every ingestion path without XLA.
+
+use super::artifacts::{ArtifactMeta, Registry};
+use super::{RuntimeError, RuntimeResult};
+use crate::sketch::{CwsParams, MinhashParams, SketchSet, VerticalSet};
+use std::convert::Infallible;
+use std::path::Path;
+
+/// Stub runtime: cannot be constructed (see module docs).
+pub struct Runtime {
+    never: Infallible,
+}
+
+impl Runtime {
+    /// Always fails: the binary was built without the `pjrt` feature.
+    pub fn load(_dir: &Path) -> RuntimeResult<Self> {
+        Err(RuntimeError::msg(
+            "PJRT runtime unavailable: built without the `pjrt` feature \
+             (rebuild with `--features pjrt` and the vendored xla crate)",
+        ))
+    }
+
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    pub fn registry(&self) -> &Registry {
+        match self.never {}
+    }
+
+    pub fn sketcher(&self, _dataset: &str) -> RuntimeResult<Sketcher> {
+        match self.never {}
+    }
+
+    pub fn scanner(&self, _dataset: &str) -> RuntimeResult<HammingScanner> {
+        match self.never {}
+    }
+}
+
+/// Stub sketcher (uninhabited).
+pub struct Sketcher {
+    never: Infallible,
+}
+
+impl Sketcher {
+    pub fn meta(&self) -> &ArtifactMeta {
+        match self.never {}
+    }
+
+    pub fn sketch_minhash(
+        &self,
+        _x: &[f32],
+        _n: usize,
+        _p: &MinhashParams,
+    ) -> RuntimeResult<SketchSet> {
+        match self.never {}
+    }
+
+    pub fn sketch_cws(&self, _x: &[f32], _n: usize, _p: &CwsParams) -> RuntimeResult<SketchSet> {
+        match self.never {}
+    }
+}
+
+/// Stub scanner (uninhabited).
+pub struct HammingScanner {
+    never: Infallible,
+}
+
+impl HammingScanner {
+    pub fn meta(&self) -> &ArtifactMeta {
+        match self.never {}
+    }
+
+    pub fn distances(&self, _db: &VerticalSet, _q: &[u8]) -> RuntimeResult<Vec<i32>> {
+        match self.never {}
+    }
+
+    pub fn search(&self, _db: &VerticalSet, _q: &[u8], _tau: usize) -> RuntimeResult<Vec<u32>> {
+        match self.never {}
+    }
+}

@@ -55,18 +55,25 @@ impl VerticalSet {
         (0..self.b()).map(|k| self.store.field(k, i)).collect()
     }
 
-    /// Packs a raw query row into plane words.
-    pub fn pack_query(&self, q: &[u8]) -> Vec<u64> {
+    /// Packs a raw query row into plane words, reusing the caller's buffer
+    /// (the per-query scratch on the verification hot path).
+    pub fn pack_query_into(&self, q: &[u8], out: &mut Vec<u64>) {
         assert_eq!(q.len(), self.l());
-        (0..self.b())
-            .map(|k| {
-                let mut field = 0u64;
-                for (p, &c) in q.iter().enumerate() {
-                    field |= (((c >> k) & 1) as u64) << p;
-                }
-                field
-            })
-            .collect()
+        out.clear();
+        for k in 0..self.b() {
+            let mut field = 0u64;
+            for (p, &c) in q.iter().enumerate() {
+                field |= (((c >> k) & 1) as u64) << p;
+            }
+            out.push(field);
+        }
+    }
+
+    /// Allocating convenience wrapper around [`Self::pack_query_into`].
+    pub fn pack_query(&self, q: &[u8]) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.b());
+        self.pack_query_into(q, &mut out);
+        out
     }
 
     /// Hamming distance between sketch `i` and pre-packed query planes.

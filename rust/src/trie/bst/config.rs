@@ -29,6 +29,10 @@ impl Default for BstConfig {
 }
 
 impl BstConfig {
+    /// Largest supported alphabet width: labels are `u8` and the query
+    /// scratch sizes its per-level fan-out buffer as `1 << b`.
+    pub const MAX_B: usize = 8;
+
     /// Resolves `(ℓ_m, ℓ_s)` for a database with per-level node counts
     /// `counts[0..=L]`.
     pub fn resolve_layers(&self, b: usize, l: usize, counts: &[usize]) -> (usize, usize) {

@@ -30,6 +30,7 @@ pub use middle::MiddleRepr;
 
 use super::builder::SortedSketches;
 use super::SketchTrie;
+use crate::query::{Collector, QueryCtx};
 use crate::util::HeapSize;
 
 /// The b-bit sketch trie.
@@ -57,6 +58,13 @@ impl BstTrie {
     pub fn build(ss: &SortedSketches, cfg: BstConfig) -> Self {
         let set = ss.set();
         let (b, l) = (set.b(), set.l());
+        // Labels travel as u8 and the per-level fan-out buffer in QueryCtx
+        // is sized 1 << b, so the alphabet must fit a byte.
+        assert!(
+            b <= BstConfig::MAX_B,
+            "bST supports b <= {} (u8 labels), got b={b}",
+            BstConfig::MAX_B
+        );
         let counts = ss.level_counts();
 
         let (lm, ls) = cfg.resolve_layers(b, l, counts);
@@ -121,9 +129,9 @@ impl BstTrie {
 }
 
 impl SketchTrie for BstTrie {
-    fn search_into(&self, q: &[u8], tau: usize, out: &mut Vec<u32>) {
+    fn run<C: Collector>(&self, q: &[u8], ctx: &mut QueryCtx, c: &mut C) {
         assert_eq!(q.len(), self.l);
-        search::search(self, q, tau, out);
+        search::run(self, q, ctx, c);
     }
 
     fn heap_bytes(&self) -> usize {

@@ -1,4 +1,5 @@
-//! Similarity search over bST (Algorithm 1 of the paper).
+//! Similarity search over bST (Algorithm 1 of the paper), generic over
+//! the consuming [`Collector`].
 //!
 //! Depth-first traversal carrying the running Hamming distance `dist`
 //! between the query prefix and each node's prefix:
@@ -7,65 +8,87 @@
 //!   is exhausted (`dist == τ`) only the query-matching child is taken,
 //!   which collapses the complete-trie fan-out to a single path;
 //! * **middle layer** — `children()` via TABLE/LIST; same budget shortcut
-//!   through `child_with_label`;
+//!   through `child_with_label`; the fan-out buffer lives in the caller's
+//!   [`QueryCtx`] (one stride-`2^b` segment per middle level), not on the
+//!   stack of every frame;
 //! * **sparse layer** — every leaf suffix under the node is compared with
 //!   the bit-parallel vertical Hamming kernel against the remaining
 //!   budget `τ - dist`.
+//!
+//! The threshold is re-read from the collector (`c.tau()`) instead of
+//! being a constant: [`crate::query::TopK`] shrinks it as its heap fills,
+//! so the same traversal serves threshold and nearest-neighbor queries.
 
 use super::dense::child0;
 use super::BstTrie;
+use crate::query::{Collector, QueryCtx};
 
-struct Searcher<'a> {
+struct Searcher<'a, C: Collector> {
     t: &'a BstTrie,
     q: &'a [u8],
-    tau: usize,
-    q_planes: Vec<u64>,
-    out: &'a mut Vec<u32>,
+    ctx: &'a mut QueryCtx,
+    c: &'a mut C,
 }
 
-/// Entry point called by [`BstTrie::search_into`].
-pub fn search(t: &BstTrie, q: &[u8], tau: usize, out: &mut Vec<u32>) {
-    let q_planes = t.sparse.pack_query(&q[t.ls..]);
-    let mut s = Searcher { t, q, tau, q_planes, out };
+/// Entry point called by [`BstTrie`]'s `SketchTrie::run`.
+pub fn run<C: Collector>(t: &BstTrie, q: &[u8], ctx: &mut QueryCtx, c: &mut C) {
+    ctx.ensure_kids(1usize << t.b, t.middle.len());
+    t.sparse.pack_query_into(&q[t.ls..], &mut ctx.q_planes);
+    let mut s = Searcher { t, q, ctx, c };
     s.descend(0, 0, 0);
 }
 
-impl<'a> Searcher<'a> {
+impl<C: Collector> Searcher<'_, C> {
     fn descend(&mut self, level: usize, u: usize, dist: usize) {
-        if level == self.t.ls {
+        let tau = self.c.tau();
+        if dist > tau {
+            // only reachable when the threshold tightened mid-traversal
+            self.c.on_prune();
+            return;
+        }
+        self.c.on_visit();
+        let t = self.t;
+        if level == t.ls {
             self.scan_sparse(u, dist);
             return;
         }
         let qc = self.q[level];
-        if level < self.t.lm {
+        if level < t.lm {
             // Dense layer: implicit complete 2^b-ary node.
-            let base = child0(u, self.t.b);
-            if dist == self.tau {
+            let base = child0(u, t.b);
+            if dist == tau {
                 self.descend(level + 1, base + qc as usize, dist);
             } else {
-                let sigma = 1usize << self.t.b;
-                for c in 0..sigma {
-                    self.descend(level + 1, base + c, dist + usize::from(c != qc as usize));
+                let sigma = 1usize << t.b;
+                for ch in 0..sigma {
+                    self.descend(level + 1, base + ch, dist + usize::from(ch != qc as usize));
                 }
             }
         } else {
-            let ml = &self.t.middle[level - self.t.lm];
-            if dist == self.tau {
+            let ml = &t.middle[level - t.lm];
+            if dist == tau {
                 if let Some(child) = ml.child_with_label(u, qc) {
                     self.descend(level + 1, child, dist);
                 }
             } else {
-                // Collect children first to keep the closure borrow local.
-                let mut kids: [(u32, u8); 256] = [(0, 0); 256];
+                // Stage the children in this level's segment of the shared
+                // fan-out buffer (deeper frames use their own segments).
+                let off = self.ctx.kid_off(level - t.lm);
                 let mut n_kids = 0usize;
-                ml.children(u, |child, c| {
-                    kids[n_kids] = (child as u32, c);
-                    n_kids += 1;
-                });
-                for &(child, c) in &kids[..n_kids] {
-                    let nd = dist + usize::from(c != qc);
-                    if nd <= self.tau {
+                {
+                    let kids = &mut self.ctx.kids;
+                    ml.children(u, |child, ch| {
+                        kids[off + n_kids] = (child as u32, ch);
+                        n_kids += 1;
+                    });
+                }
+                for i in 0..n_kids {
+                    let (child, ch) = self.ctx.kids[off + i];
+                    let nd = dist + usize::from(ch != qc);
+                    if nd <= self.c.tau() {
                         self.descend(level + 1, child as usize, nd);
+                    } else {
+                        self.c.on_prune();
                     }
                 }
             }
@@ -74,11 +97,19 @@ impl<'a> Searcher<'a> {
 
     #[inline]
     fn scan_sparse(&mut self, u: usize, dist: usize) {
-        let budget = self.tau - dist;
-        let (lo, hi) = self.t.sparse.leaf_range(u);
+        let t = self.t;
+        let (lo, hi) = t.sparse.leaf_range(u);
         for v in lo..hi {
-            if self.t.sparse.ham_suffix(v, &self.q_planes) <= budget {
-                self.out.extend_from_slice(self.t.postings_of(v));
+            self.c.on_visit();
+            let Some(budget) = self.c.tau().checked_sub(dist) else {
+                self.c.on_prune();
+                return;
+            };
+            let sd = t.sparse.ham_suffix(v, &self.ctx.q_planes);
+            if sd <= budget {
+                self.c.emit(t.postings_of(v), dist + sd);
+            } else {
+                self.c.on_prune();
             }
         }
     }
@@ -87,15 +118,15 @@ impl<'a> Searcher<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::query::{CollectIds, CountOnly, StatsObserver, TopK};
+    use crate::sketch::hamming::ham_chars;
     use crate::sketch::SketchSet;
     use crate::trie::builder::SortedSketches;
     use crate::trie::bst::BstConfig;
     use crate::trie::SketchTrie;
 
-    #[test]
-    fn paper_figure1_example() {
-        // Figure 1: eleven 2-bit sketches over {a,b,c,d} = {0,1,2,3},
-        // query aaaaa, tau = 1 → ids of sketches within distance 1.
+    fn figure1() -> (super::super::BstTrie, Vec<Vec<u8>>, Vec<u8>) {
+        // Figure 1: eleven 2-bit sketches over {a,b,c,d} = {0,1,2,3}.
         let names = [
             "baabb", "aaaaa", "baaaa", "caaca", "caaca", "aaaaa", "caaca",
             "ddccc", "abaab", "bcbcb", "ddddd",
@@ -108,6 +139,12 @@ mod tests {
         let ss = SortedSketches::build(&set);
         let bst = super::super::BstTrie::build(&ss, BstConfig::default());
         let q: Vec<u8> = "aaaaa".bytes().map(|c| c - b'a').collect();
+        (bst, rows, q)
+    }
+
+    #[test]
+    fn paper_figure1_example() {
+        let (bst, _rows, q) = figure1();
         let mut got = bst.search(&q, 1);
         got.sort();
         // ham=0: ids 1,5 ("aaaaa"); ham=1: id 2 ("baaaa").
@@ -133,5 +170,66 @@ mod tests {
         let mut got = bst.search(&[0, 1, 2, 3], 0);
         got.sort();
         assert_eq!(got, vec![0, 1]);
+    }
+
+    #[test]
+    fn figure1_topk_matches_brute_force() {
+        let (bst, rows, q) = figure1();
+        // Brute force: all (dist, id) sorted, truncated to k.
+        let mut all: Vec<(usize, u32)> = rows
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (ham_chars(r, &q), i as u32))
+            .collect();
+        all.sort_unstable();
+        for k in [1usize, 3, 5, 11, 20] {
+            let mut ctx = QueryCtx::new();
+            let mut coll = TopK::new(k, q.len());
+            bst.run(&q, &mut ctx, &mut coll);
+            let got = coll.finish();
+            let expect: Vec<(u32, usize)> = all
+                .iter()
+                .take(k)
+                .map(|&(d, id)| (id, d))
+                .collect();
+            assert_eq!(got, expect, "k={k}");
+        }
+    }
+
+    #[test]
+    fn count_and_stats_agree_with_ids() {
+        let (bst, _rows, q) = figure1();
+        let mut ctx = QueryCtx::new();
+        for tau in 0..=5 {
+            let ids = bst.search(&q, tau);
+            let mut cnt = CountOnly::new(tau);
+            bst.run(&q, &mut ctx, &mut cnt);
+            assert_eq!(cnt.count(), ids.len(), "tau={tau}");
+
+            let mut out = Vec::new();
+            let mut obs = StatsObserver::new(CollectIds::new(tau, &mut out));
+            bst.run(&q, &mut ctx, &mut obs);
+            let stats = obs.stats;
+            assert_eq!(stats.emitted, ids.len(), "tau={tau}");
+            assert!(stats.visited > 0);
+            assert_eq!(out.len(), ids.len());
+        }
+    }
+
+    #[test]
+    fn ctx_reuse_across_taus_and_queries() {
+        let (bst, rows, _q) = figure1();
+        let mut ctx = QueryCtx::new();
+        for q in rows.iter().take(6) {
+            for tau in [0usize, 1, 3] {
+                let mut out = Vec::new();
+                let mut coll = CollectIds::new(tau, &mut out);
+                bst.run(q, &mut ctx, &mut coll);
+                let mut fresh = bst.search(q, tau);
+                out.sort();
+                fresh.sort();
+                assert_eq!(out, fresh);
+            }
+        }
     }
 }

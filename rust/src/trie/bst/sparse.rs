@@ -88,18 +88,25 @@ impl SparseLayer {
         (lo, hi)
     }
 
-    /// Packs the query suffix `q[ℓ_s..L)` into plane fields.
-    pub fn pack_query(&self, q_suffix: &[u8]) -> Vec<u64> {
+    /// Packs the query suffix `q[ℓ_s..L)` into plane fields, reusing the
+    /// caller's buffer (the per-query scratch in `QueryCtx`).
+    pub fn pack_query_into(&self, q_suffix: &[u8], out: &mut Vec<u64>) {
         debug_assert_eq!(q_suffix.len(), self.s);
-        (0..self.b)
-            .map(|k| {
-                let mut field = 0u64;
-                for (pos, &c) in q_suffix.iter().enumerate() {
-                    field |= (((c >> k) & 1) as u64) << pos;
-                }
-                field
-            })
-            .collect()
+        out.clear();
+        for k in 0..self.b {
+            let mut field = 0u64;
+            for (pos, &c) in q_suffix.iter().enumerate() {
+                field |= (((c >> k) & 1) as u64) << pos;
+            }
+            out.push(field);
+        }
+    }
+
+    /// Allocating convenience wrapper around [`Self::pack_query_into`].
+    pub fn pack_query(&self, q_suffix: &[u8]) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.b);
+        self.pack_query_into(q_suffix, &mut out);
+        out
     }
 
     /// Hamming distance between leaf `v`'s suffix and packed query planes.

@@ -16,6 +16,7 @@
 use super::builder::SortedSketches;
 use super::bst::MiddleRepr;
 use super::SketchTrie;
+use crate::query::{Collector, QueryCtx};
 use crate::util::HeapSize;
 
 // Reuse the per-level encodings from the bst middle layer.
@@ -27,6 +28,7 @@ pub struct FstTrie {
     levels: Vec<MiddleLevel>,
     /// First LOUDS-SPARSE level (1-based); levels below are DENSE.
     cutoff: usize,
+    b: usize,
     l: usize,
     t: usize,
     post_offsets: Vec<u32>,
@@ -74,6 +76,7 @@ impl FstTrie {
         FstTrie {
             levels,
             cutoff,
+            b,
             l,
             t: ss.total_nodes(),
             post_offsets,
@@ -86,40 +89,62 @@ impl FstTrie {
         self.cutoff
     }
 
-    fn dfs(&self, u: usize, level: usize, dist: usize, q: &[u8], tau: usize, out: &mut Vec<u32>) {
+    fn dfs<C: Collector>(
+        &self,
+        u: usize,
+        level: usize,
+        dist: usize,
+        q: &[u8],
+        ctx: &mut QueryCtx,
+        c: &mut C,
+    ) {
+        let tau = c.tau();
+        if dist > tau {
+            c.on_prune();
+            return;
+        }
+        c.on_visit();
         if level == self.l {
             let lo = self.post_offsets[u] as usize;
             let hi = self.post_offsets[u + 1] as usize;
-            out.extend_from_slice(&self.post_ids[lo..hi]);
+            c.emit(&self.post_ids[lo..hi], dist);
             return;
         }
         let ml = &self.levels[level];
         let qc = q[level];
         if dist == tau {
             if let Some(child) = ml.child_with_label(u, qc) {
-                self.dfs(child, level + 1, dist, q, tau, out);
+                self.dfs(child, level + 1, dist, q, ctx, c);
             }
             return;
         }
-        let mut kids: [(u32, u8); 256] = [(0, 0); 256];
+        // Stage children in this level's segment of the shared buffer.
+        let off = ctx.kid_off(level);
         let mut n_kids = 0usize;
-        ml.children(u, |child, c| {
-            kids[n_kids] = (child as u32, c);
-            n_kids += 1;
-        });
-        for &(child, c) in &kids[..n_kids] {
-            let nd = dist + usize::from(c != qc);
-            if nd <= tau {
-                self.dfs(child as usize, level + 1, nd, q, tau, out);
+        {
+            let kids = &mut ctx.kids;
+            ml.children(u, |child, ch| {
+                kids[off + n_kids] = (child as u32, ch);
+                n_kids += 1;
+            });
+        }
+        for i in 0..n_kids {
+            let (child, ch) = ctx.kids[off + i];
+            let nd = dist + usize::from(ch != qc);
+            if nd <= c.tau() {
+                self.dfs(child as usize, level + 1, nd, q, ctx, c);
+            } else {
+                c.on_prune();
             }
         }
     }
 }
 
 impl SketchTrie for FstTrie {
-    fn search_into(&self, q: &[u8], tau: usize, out: &mut Vec<u32>) {
+    fn run<C: Collector>(&self, q: &[u8], ctx: &mut QueryCtx, c: &mut C) {
         assert_eq!(q.len(), self.l);
-        self.dfs(0, 0, 0, q, tau, out);
+        ctx.ensure_kids(1usize << self.b, self.l);
+        self.dfs(0, 0, 0, q, ctx, c);
     }
 
     fn heap_bytes(&self) -> usize {

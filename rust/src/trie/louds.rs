@@ -19,6 +19,7 @@
 
 use super::builder::SortedSketches;
 use super::SketchTrie;
+use crate::query::{Collector, QueryCtx};
 use crate::bits::rsvec::SelectMode;
 use crate::bits::{BitVec, IntVec, RsBitVec};
 use crate::util::HeapSize;
@@ -121,30 +122,37 @@ impl LoudsTrie {
         self.t + 1 - self.n_leaves // +1: root is node 0
     }
 
-    fn dfs(&self, u: usize, level: usize, dist: usize, q: &[u8], tau: usize, out: &mut Vec<u32>) {
+    fn dfs<C: Collector>(&self, u: usize, level: usize, dist: usize, q: &[u8], c: &mut C) {
+        if dist > c.tau() {
+            c.on_prune();
+            return;
+        }
+        c.on_visit();
         if level == self.l {
             let k = u - self.first_leaf();
             let lo = self.post_offsets[k] as usize;
             let hi = self.post_offsets[k + 1] as usize;
-            out.extend_from_slice(&self.post_ids[lo..hi]);
+            c.emit(&self.post_ids[lo..hi], dist);
             return;
         }
         let (lo, hi) = self.child_range(u);
         let qc = q[level];
         for child in lo..hi {
-            let c = self.labels.get(child - 1) as u8;
-            let nd = dist + usize::from(c != qc);
-            if nd <= tau {
-                self.dfs(child, level + 1, nd, q, tau, out);
+            let ch = self.labels.get(child - 1) as u8;
+            let nd = dist + usize::from(ch != qc);
+            if nd <= c.tau() {
+                self.dfs(child, level + 1, nd, q, c);
+            } else {
+                c.on_prune();
             }
         }
     }
 }
 
 impl SketchTrie for LoudsTrie {
-    fn search_into(&self, q: &[u8], tau: usize, out: &mut Vec<u32>) {
+    fn run<C: Collector>(&self, q: &[u8], _ctx: &mut QueryCtx, c: &mut C) {
         assert_eq!(q.len(), self.l);
-        self.dfs(0, 0, 0, q, tau, out);
+        self.dfs(0, 0, 0, q, c);
     }
 
     fn heap_bytes(&self) -> usize {

@@ -13,8 +13,15 @@
 //! * [`fst`] — two-layer Fast Succinct Trie (SuRF-style), the second
 //!   succinct baseline of Table III.
 //!
-//! All tries implement [`SketchTrie`]: Hamming-threshold traversal
-//! (Algorithm 1 of the paper) plus space accounting.
+//! All tries implement [`SketchTrie`], whose primary entry point is the
+//! collector-generic [`SketchTrie::run`]: Algorithm 1's pruned traversal,
+//! parameterized over a [`Collector`] (ids / count / top-k / stats — see
+//! [`crate::query`]) and fed by a caller-owned [`QueryCtx`] holding all
+//! per-query scratch. `run` is monomorphized per collector, so the
+//! classic id-collecting search compiles to the same tight loop as
+//! before, while top-k and counting traversals share every line of the
+//! pruning logic. [`SketchTrie::search_into`] / [`SketchTrie::search`]
+//! remain as thin compatibility wrappers.
 
 pub mod bst;
 pub mod builder;
@@ -24,15 +31,36 @@ pub mod pointer;
 
 pub use builder::SortedSketches;
 
+pub use crate::query::{Collector, QueryCtx, TraversalStats};
+
 /// Common interface: a trie over a fixed sketch database supporting the
-/// paper's similarity search (report ids of all sketches within `tau`).
+/// paper's similarity search (all ids with `ham(s_i, q) <= tau`, where
+/// `tau` — possibly adaptive — lives in the collector).
 pub trait SketchTrie {
+    /// Collector-generic traversal: prunes on the collector's live
+    /// threshold and emits every surviving posting group with its exact
+    /// distance. `ctx` supplies reusable scratch; passing the same ctx
+    /// across queries makes the traversal allocation-free after warm-up.
+    fn run<C: Collector>(&self, q: &[u8], ctx: &mut QueryCtx, c: &mut C)
+    where
+        Self: Sized;
+
     /// Appends all ids `i` with `ham(s_i, q) <= tau` to `out`
     /// (ids appear in lexicographic sketch order, not sorted by id).
-    fn search_into(&self, q: &[u8], tau: usize, out: &mut Vec<u32>);
+    fn search_into(&self, q: &[u8], tau: usize, out: &mut Vec<u32>)
+    where
+        Self: Sized,
+    {
+        let mut ctx = QueryCtx::new();
+        let mut coll = crate::query::CollectIds::new(tau, out);
+        self.run(q, &mut ctx, &mut coll);
+    }
 
     /// Convenience wrapper allocating the result vector.
-    fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {
+    fn search(&self, q: &[u8], tau: usize) -> Vec<u32>
+    where
+        Self: Sized,
+    {
         let mut out = Vec::new();
         self.search_into(q, tau, &mut out);
         out
@@ -46,14 +74,4 @@ pub trait SketchTrie {
 
     /// Human-readable representation summary for reports.
     fn describe(&self) -> String;
-}
-
-/// Count of nodes traversed during the last search — tries expose this via
-/// interior counters only in debug/eval builds to keep the hot path clean;
-/// instead the eval harness re-runs with this observer variant when node
-/// statistics are wanted.
-pub struct TraversalStats {
-    pub visited: usize,
-    pub pruned: usize,
-    pub emitted: usize,
 }

@@ -7,6 +7,7 @@
 
 use super::builder::SortedSketches;
 use super::SketchTrie;
+use crate::query::{Collector, QueryCtx};
 use crate::util::HeapSize;
 
 #[derive(Debug)]
@@ -57,30 +58,37 @@ impl PointerTrie {
         PointerTrie { nodes, post_offsets, post_ids, l }
     }
 
-    fn dfs(&self, node: u32, level: usize, dist: usize, q: &[u8], tau: usize, out: &mut Vec<u32>) {
+    fn dfs<C: Collector>(&self, node: u32, level: usize, dist: usize, q: &[u8], c: &mut C) {
+        if dist > c.tau() {
+            c.on_prune();
+            return;
+        }
+        c.on_visit();
         let n = &self.nodes[node as usize];
         if level == self.l {
             let k = n.leaf as usize;
             let lo = self.post_offsets[k] as usize;
             let hi = self.post_offsets[k + 1] as usize;
-            out.extend_from_slice(&self.post_ids[lo..hi]);
+            c.emit(&self.post_ids[lo..hi], dist);
             return;
         }
         let qc = q[level];
         for &child in &n.children {
-            let c = self.nodes[child as usize].label;
-            let ndist = dist + usize::from(c != qc);
-            if ndist <= tau {
-                self.dfs(child, level + 1, ndist, q, tau, out);
+            let ch = self.nodes[child as usize].label;
+            let ndist = dist + usize::from(ch != qc);
+            if ndist <= c.tau() {
+                self.dfs(child, level + 1, ndist, q, c);
+            } else {
+                c.on_prune();
             }
         }
     }
 }
 
 impl SketchTrie for PointerTrie {
-    fn search_into(&self, q: &[u8], tau: usize, out: &mut Vec<u32>) {
+    fn run<C: Collector>(&self, q: &[u8], _ctx: &mut QueryCtx, c: &mut C) {
         assert_eq!(q.len(), self.l);
-        self.dfs(0, 0, 0, q, tau, out);
+        self.dfs(0, 0, 0, q, c);
     }
 
     fn heap_bytes(&self) -> usize {

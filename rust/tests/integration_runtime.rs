@@ -3,7 +3,10 @@
 //! native Rust implementations.
 //!
 //! Requires `make artifacts` (skips with a message otherwise — CI runs
-//! `make test` which builds them first).
+//! `make test` which builds them first) AND the `pjrt` feature: without
+//! it `bst::runtime` is the dependency-free stub, so these tests are
+//! compiled out entirely.
+#![cfg(feature = "pjrt")]
 
 use bst::data::{generate_dense, generate_sets, Dataset, GenConfig};
 use bst::runtime::Runtime;

@@ -94,6 +94,35 @@ fn search_over_tcp_matches_engine() {
         assert!(resp.get("latency_us").is_some());
     }
 
+    // count matches the id search
+    {
+        let q = &rows[100];
+        let tau = 2usize;
+        let qs = q.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(",");
+        let ids = client
+            .call(&format!(r#"{{"op":"search","q":[{qs}],"tau":{tau}}}"#))
+            .get("ids")
+            .and_then(|a| a.as_arr())
+            .unwrap()
+            .len();
+        let resp = client.call(&format!(r#"{{"op":"count","q":[{qs}],"tau":{tau}}}"#));
+        assert_eq!(resp.get("count").and_then(|c| c.as_usize()), Some(ids));
+
+        // top-k: dists sorted, ids within tau, k respected
+        let resp = client.call(&format!(r#"{{"op":"topk","q":[{qs}],"k":4,"tau":6}}"#));
+        let t_ids = resp.get("ids").and_then(|a| a.as_arr()).unwrap();
+        let dists = resp.get("dists").and_then(|a| a.as_arr()).unwrap();
+        assert_eq!(t_ids.len(), dists.len());
+        assert!(t_ids.len() <= 4 && !t_ids.is_empty());
+        let dv: Vec<usize> = dists.iter().map(|d| d.as_usize().unwrap()).collect();
+        assert!(dv.windows(2).all(|w| w[0] <= w[1]), "dists sorted: {dv:?}");
+        assert_eq!(dv[0], 0, "query is a database row");
+
+        // malformed top-k (k=0) is rejected
+        let err = client.call(&format!(r#"{{"op":"topk","q":[{qs}],"k":0}}"#));
+        assert!(err.get("error").is_some());
+    }
+
     // stats reflect the traffic
     let stats = client.call(r#"{"op":"stats"}"#);
     assert!(stats.get("queries").unwrap().as_usize().unwrap() >= 3);

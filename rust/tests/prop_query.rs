@@ -1,0 +1,198 @@
+//! Cross-method agreement for the collector-based query path: all four
+//! tries and all six indexes must report identical id sets via
+//! `CollectIds`, identical counts via `CountOnly`, and `TopK(k)` must
+//! equal the brute-force distances sorted by `(dist, id)` — fuzzed over
+//! b ∈ {1,2,4,8}, τ ∈ 0..=6 and duplicate-heavy databases.
+
+use bst::index::signature::count_signatures;
+use bst::index::{HmSearch, LinearScan, Mih, MultiBst, SearchIndex, Sih, SingleBst};
+use bst::query::{CollectIds, CountOnly, QueryCtx, StatsObserver, TopK};
+use bst::sketch::hamming::ham_chars;
+use bst::sketch::SketchSet;
+use bst::trie::bst::{BstConfig, BstTrie};
+use bst::trie::fst::FstTrie;
+use bst::trie::louds::LoudsTrie;
+use bst::trie::pointer::PointerTrie;
+use bst::trie::{SketchTrie, SortedSketches};
+use bst::util::Rng;
+
+/// Duplicate-heavy database: a few centers, light edits, plus exact
+/// duplicates of the first rows.
+fn dup_heavy_rows(b: usize, l: usize, n: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<u8>> = (0..6)
+        .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+        .collect();
+    let mut rows: Vec<Vec<u8>> = (0..n)
+        .map(|_| {
+            let mut r = centers[rng.below_usize(6)].clone();
+            for _ in 0..rng.below_usize(3) {
+                let p = rng.below_usize(l);
+                r[p] = rng.below(1 << b) as u8;
+            }
+            r
+        })
+        .collect();
+    // exact duplicates — posting groups with several ids
+    for i in 0..12.min(n) {
+        rows.push(rows[i].clone());
+    }
+    rows
+}
+
+fn brute_ids(rows: &[Vec<u8>], q: &[u8], tau: usize) -> Vec<u32> {
+    (0..rows.len())
+        .filter(|&i| ham_chars(&rows[i], q) <= tau)
+        .map(|i| i as u32)
+        .collect()
+}
+
+fn brute_topk(rows: &[Vec<u8>], q: &[u8], k: usize, tau: usize) -> Vec<(u32, usize)> {
+    let mut all: Vec<(usize, u32)> = (0..rows.len())
+        .map(|i| (ham_chars(&rows[i], q), i as u32))
+        .filter(|&(d, _)| d <= tau)
+        .collect();
+    all.sort_unstable();
+    all.truncate(k);
+    all.into_iter().map(|(d, id)| (id, d)).collect()
+}
+
+fn check_trie<T: SketchTrie>(
+    trie: &T,
+    ctx: &mut QueryCtx,
+    q: &[u8],
+    tau: usize,
+    expect: &[u32],
+    label: &str,
+) {
+    let mut got = Vec::new();
+    let mut coll = CollectIds::new(tau, &mut got);
+    trie.run(q, ctx, &mut coll);
+    got.sort();
+    got.dedup();
+    assert_eq!(got, expect, "{label} ids tau={tau}");
+
+    let mut cnt = CountOnly::new(tau);
+    trie.run(q, ctx, &mut cnt);
+    assert_eq!(cnt.count(), expect.len(), "{label} count tau={tau}");
+}
+
+#[test]
+fn prop_tries_and_indexes_agree_across_collectors() {
+    for &(b, l, seed) in &[(1usize, 16usize, 11u64), (2, 12, 12), (4, 8, 13), (8, 6, 14)] {
+        let rows = dup_heavy_rows(b, l, 180, seed);
+        let set = SketchSet::from_rows(b, l, &rows);
+        let ss = SortedSketches::build(&set);
+        let bst = BstTrie::build(&ss, BstConfig::default());
+        let pt = PointerTrie::build(&ss);
+        let louds = LoudsTrie::build(&ss);
+        let fst = FstTrie::build(&ss);
+
+        let linear = LinearScan::build(&set);
+        let si = SingleBst::build(&set, BstConfig::default());
+        let mi = MultiBst::build(&set, 2);
+        let mih = Mih::build(&set, 2);
+        let sih = Sih::build(&set);
+
+        // HmSearch serves thresholds up to its bucket: one build per τ.
+        let hms: Vec<HmSearch> = (0..=6usize.min(l))
+            .map(|tau| HmSearch::build(&set, tau.max(1)))
+            .collect();
+
+        let mut rng = Rng::new(seed ^ 0xF00D);
+        let mut ctx = QueryCtx::new();
+        for case in 0..6 {
+            let q: Vec<u8> = if case % 2 == 0 {
+                rows[rng.below_usize(rows.len())].clone()
+            } else {
+                (0..l).map(|_| rng.below(1 << b) as u8).collect()
+            };
+            for tau in 0..=6usize.min(l) {
+                let expect = brute_ids(&rows, &q, tau);
+
+                // all four tries, ids + counts, sharing one QueryCtx
+                check_trie(&bst, &mut ctx, &q, tau, &expect, "bst");
+                check_trie(&pt, &mut ctx, &q, tau, &expect, "pointer");
+                check_trie(&louds, &mut ctx, &q, tau, &expect, "louds");
+                check_trie(&fst, &mut ctx, &q, tau, &expect, "fst");
+
+                // indexes: SIH only where its signature ball is tractable;
+                // HmSearch is built per-τ below.
+                let mut indexes: Vec<(&str, &dyn SearchIndex)> = vec![
+                    ("linear", &linear),
+                    ("si-bst", &si),
+                    ("mi-bst", &mi),
+                    ("mih", &mih),
+                ];
+                if count_signatures(b, l, tau) < 60_000 {
+                    indexes.push(("sih", &sih));
+                }
+                for (label, idx) in &indexes {
+                    let mut got = idx.search(&q, tau);
+                    got.sort();
+                    got.dedup();
+                    assert_eq!(got, expect, "{label} ids b={b} tau={tau}");
+                    assert_eq!(
+                        idx.count(&q, tau),
+                        expect.len(),
+                        "{label} count b={b} tau={tau}"
+                    );
+                    for k in [1usize, 7, 64] {
+                        let got = idx.top_k(&q, k, tau);
+                        let expect_k = brute_topk(&rows, &q, k, tau);
+                        assert_eq!(got, expect_k, "{label} topk b={b} tau={tau} k={k}");
+                    }
+                }
+
+                let hm = &hms[tau];
+                let mut got = hm.search(&q, tau);
+                got.sort();
+                got.dedup();
+                assert_eq!(got, expect, "hmsearch ids b={b} tau={tau}");
+                assert_eq!(hm.count(&q, tau), expect.len(), "hmsearch count b={b} tau={tau}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_topk_unbounded_radius_equals_brute_force() {
+    for &(b, l, seed) in &[(2usize, 10usize, 21u64), (4, 8, 22)] {
+        let rows = dup_heavy_rows(b, l, 150, seed);
+        let set = SketchSet::from_rows(b, l, &rows);
+        let ss = SortedSketches::build(&set);
+        let bst = BstTrie::build(&ss, BstConfig::default());
+        let mut rng = Rng::new(seed ^ 0xBEEF);
+        let mut ctx = QueryCtx::new();
+        for _ in 0..5 {
+            let q: Vec<u8> = (0..l).map(|_| rng.below(1 << b) as u8).collect();
+            for k in [1usize, 5, 40, 1000] {
+                let mut coll = TopK::new(k, l);
+                bst.run(&q, &mut ctx, &mut coll);
+                let got = coll.finish();
+                assert_eq!(got, brute_topk(&rows, &q, k, l), "b={b} k={k}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_stats_observer_counts_traversal_work() {
+    let rows = dup_heavy_rows(2, 12, 200, 31);
+    let set = SketchSet::from_rows(2, 12, &rows);
+    let ss = SortedSketches::build(&set);
+    let bst = BstTrie::build(&ss, BstConfig::default());
+    let mut ctx = QueryCtx::new();
+    let q = rows[0].clone();
+    let mut prev_visited = 0usize;
+    for tau in 0..=4usize {
+        let mut obs = StatsObserver::new(CountOnly::new(tau));
+        bst.run(&q, &mut ctx, &mut obs);
+        assert_eq!(obs.stats.emitted, brute_ids(&rows, &q, tau).len(), "tau={tau}");
+        assert!(
+            obs.stats.visited >= prev_visited,
+            "looser budgets must visit at least as many nodes (tau={tau})"
+        );
+        prev_visited = obs.stats.visited;
+    }
+}

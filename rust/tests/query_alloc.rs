@@ -1,0 +1,108 @@
+//! Acceptance check for the query-execution refactor: after one warm-up
+//! query per shape, a `BstTrie` threshold search performs **zero** heap
+//! allocations — the packed query planes, the middle-layer fan-out buffer
+//! and the hit vector are all reused through `QueryCtx` / `CollectIds`.
+//!
+//! Measured with a counting global allocator. This file intentionally
+//! contains a single `#[test]` so no sibling test thread allocates inside
+//! the measurement window.
+
+use bst::query::{CollectIds, CountOnly, QueryCtx};
+use bst::sketch::SketchSet;
+use bst::trie::bst::{BstConfig, BstTrie};
+use bst::trie::{SketchTrie, SortedSketches};
+use bst::util::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn bst_search_is_allocation_free_after_warmup() {
+    // Clustered database so all three bST layers materialize.
+    let (b, l, n) = (2usize, 16usize, 1500usize);
+    let mut rng = Rng::new(0xA110C);
+    let centers: Vec<Vec<u8>> = (0..10)
+        .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+        .collect();
+    let rows: Vec<Vec<u8>> = (0..n)
+        .map(|_| {
+            let mut r = centers[rng.below_usize(10)].clone();
+            for _ in 0..rng.below_usize(3) {
+                let p = rng.below_usize(l);
+                r[p] = rng.below(1 << b) as u8;
+            }
+            r
+        })
+        .collect();
+    let set = SketchSet::from_rows(b, l, &rows);
+    let ss = SortedSketches::build(&set);
+    let bst = BstTrie::build(&ss, BstConfig::default());
+
+    let queries: Vec<Vec<u8>> = (0..16)
+        .map(|i| rows[i * 31].clone())
+        .collect();
+    let taus = [0usize, 1, 2, 4];
+
+    let mut ctx = QueryCtx::new();
+    let mut out: Vec<u32> = Vec::new();
+
+    // Warm-up: run every (query, tau) once to size the scratch buffers
+    // and the hit vector's capacity.
+    for q in &queries {
+        for &tau in &taus {
+            out.clear();
+            let mut coll = CollectIds::new(tau, &mut out);
+            bst.run(q, &mut ctx, &mut coll);
+        }
+    }
+
+    // Measurement: the same traffic must not touch the allocator at all.
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    for _ in 0..3 {
+        for q in &queries {
+            for &tau in &taus {
+                out.clear();
+                let mut coll = CollectIds::new(tau, &mut out);
+                bst.run(q, &mut ctx, &mut coll);
+            }
+            // counting traversals share the same zero-alloc path
+            let mut cnt = CountOnly::new(2);
+            bst.run(q, &mut ctx, &mut cnt);
+            assert!(cnt.count() > 0, "query is a database row");
+        }
+    }
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "bST threshold search must be allocation-free after QueryCtx warm-up"
+    );
+    assert!(!out.is_empty(), "last query returned its own posting group");
+}
