@@ -1,5 +1,6 @@
 //! Plain word-backed bit vector with unaligned multi-bit reads.
 
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
 use crate::util::HeapSize;
 
 /// A growable bit vector backed by `u64` words (LSB-first within a word).
@@ -147,6 +148,28 @@ impl HeapSize for BitVec {
     }
 }
 
+impl Persist for BitVec {
+    fn write_into(&self, w: &mut ByteWriter) {
+        w.put_usize(self.len);
+        w.put_u64s(&self.words);
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        let len = r.get_usize()?;
+        let words = r.get_u64s()?;
+        ensure(words.len() == len.div_ceil(64), || {
+            format!("BitVec: {} words cannot hold {len} bits", words.len())
+        })?;
+        // push/get_bits rely on the tail bits beyond `len` being zero.
+        if len % 64 != 0 {
+            ensure(words[len / 64] >> (len % 64) == 0, || {
+                "BitVec: nonzero bits beyond len".to_string()
+            })?;
+        }
+        Ok(BitVec { words, len })
+    }
+}
+
 impl FromIterator<bool> for BitVec {
     fn from_iter<I: IntoIterator<Item = bool>>(iter: I) -> Self {
         let mut bv = BitVec::new();
@@ -241,6 +264,25 @@ mod tests {
         }
         assert_eq!(bv.count_ones(), ones.len());
         assert_eq!(bv.iter_ones().collect::<Vec<_>>(), ones);
+    }
+
+    #[test]
+    fn persist_roundtrip_and_rejects_tail_garbage() {
+        let mut rng = Rng::new(4);
+        let bv: BitVec = (0..777).map(|_| rng.f64() < 0.4).collect();
+        let bytes = crate::store::to_payload(&bv);
+        let got: BitVec =
+            crate::store::from_payload(&mut crate::store::ByteReader::new(&bytes)).unwrap();
+        assert_eq!(got.len(), bv.len());
+        assert_eq!(got.words(), bv.words());
+        // nonzero bits beyond len must be rejected
+        let mut bad = bv.clone();
+        bad.words[777 / 64] |= 1u64 << 63;
+        let bytes = crate::store::to_payload(&bad);
+        assert!(
+            crate::store::from_payload::<BitVec>(&mut crate::store::ByteReader::new(&bytes))
+                .is_err()
+        );
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! arrays `C_ℓ` use `width = b`, postings offsets use wider entries.
 
 use super::BitVec;
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
 use crate::util::HeapSize;
 
 /// Immutable-width, growable packed integer vector.
@@ -64,6 +65,30 @@ impl IntVec {
     /// Iterates all entries.
     pub fn iter(&self) -> impl Iterator<Item = u64> + '_ {
         (0..self.len).map(move |i| self.get(i))
+    }
+}
+
+impl Persist for IntVec {
+    fn write_into(&self, w: &mut ByteWriter) {
+        w.put_usize(self.width);
+        w.put_usize(self.len);
+        self.bits.write_into(w);
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        let width = r.get_usize()?;
+        let len = r.get_usize()?;
+        let bits = BitVec::read_from(r)?;
+        ensure((1..=64).contains(&width), || {
+            format!("IntVec: invalid width {width}")
+        })?;
+        let need = len
+            .checked_mul(width)
+            .ok_or_else(|| StoreError::Corrupt(format!("IntVec: {len}x{width} overflows")))?;
+        ensure(bits.len() == need, || {
+            format!("IntVec: {} bits != len*width = {need}", bits.len())
+        })?;
+        Ok(IntVec { bits, width, len })
     }
 }
 

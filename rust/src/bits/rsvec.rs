@@ -15,11 +15,22 @@
 
 use super::broadword::select64;
 use super::BitVec;
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
 use crate::util::HeapSize;
 
 const BLOCK_BITS: usize = 512;
 const WORDS_PER_BLOCK: usize = BLOCK_BITS / 64;
 const SELECT_SAMPLE: usize = 512;
+
+/// Global count of directory constructions ([`RsBitVec::new`] calls).
+/// Diagnostics only: the snapshot tests use it to prove that loading a
+/// serialized vector skips re-indexing entirely.
+static DIRECTORY_BUILDS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// How many rank/select directories have been built in this process.
+pub fn directory_builds() -> u64 {
+    DIRECTORY_BUILDS.load(std::sync::atomic::Ordering::Relaxed)
+}
 
 /// Which select directories to build.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -49,6 +60,7 @@ pub struct RsBitVec {
 impl RsBitVec {
     /// Builds the directories over `bits`.
     pub fn new(bits: BitVec, mode: SelectMode) -> Self {
+        DIRECTORY_BUILDS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         assert!(
             bits.len() < u32::MAX as usize,
             "RsBitVec supports < 2^32 bits per vector"
@@ -134,6 +146,20 @@ impl RsBitVec {
     #[inline]
     pub fn get_bits(&self, pos: usize, width: usize) -> u64 {
         self.bits.get_bits(pos, width)
+    }
+
+    /// Whether `select1` queries are answerable (directory built, or no
+    /// set bits to select). Used by snapshot validation: a loaded
+    /// structure must not reach `select1` with a missing directory.
+    #[inline]
+    pub fn select1_enabled(&self) -> bool {
+        !self.select1_samples.is_empty() || self.ones == 0
+    }
+
+    /// Whether `select0` queries are answerable.
+    #[inline]
+    pub fn select0_enabled(&self) -> bool {
+        !self.select0_samples.is_empty() || self.len() == self.ones
     }
 
     /// Number of 1s in `[0, i)`.
@@ -240,6 +266,99 @@ impl RsBitVec {
     }
 }
 
+/// The rank/select directories are part of the payload, so a loaded
+/// vector answers `rank`/`select` immediately — no re-indexing pass.
+/// Validation is structural (lengths, monotonicity, sampled positions
+/// hitting bits of the right parity, total popcount): cheap linear scans
+/// that never rebuild a directory.
+impl Persist for RsBitVec {
+    fn write_into(&self, w: &mut ByteWriter) {
+        self.bits.write_into(w);
+        w.put_u32s(&self.block_ranks);
+        w.put_u32s(&self.select1_samples);
+        w.put_u32s(&self.select0_samples);
+        w.put_usize(self.ones);
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        let bits = BitVec::read_from(r)?;
+        let block_ranks = r.get_u32s()?;
+        let select1_samples = r.get_u32s()?;
+        let select0_samples = r.get_u32s()?;
+        let ones = r.get_usize()?;
+        let len = bits.len();
+        ensure(len < u32::MAX as usize, || "RsBitVec: length >= 2^32".into())?;
+        let n_blocks = len.div_ceil(BLOCK_BITS);
+        ensure(block_ranks.len() == n_blocks + 1, || {
+            format!(
+                "RsBitVec: rank directory has {} entries, expected {}",
+                block_ranks.len(),
+                n_blocks + 1
+            )
+        })?;
+        // Verify every rank entry against the actual words — one popcount
+        // pass, no directory rebuilt. rank1/select1/select0 assume the
+        // directory is exact; with this check a crafted-but-checksummed
+        // snapshot cannot steer a query into the `unreachable!` scans.
+        {
+            let words = bits.words();
+            let mut acc: u32 = 0;
+            for (blk, &stored) in block_ranks[..n_blocks].iter().enumerate() {
+                ensure(stored == acc, || {
+                    format!("RsBitVec: rank directory wrong at block {blk}")
+                })?;
+                let lo = blk * WORDS_PER_BLOCK;
+                let hi = (lo + WORDS_PER_BLOCK).min(words.len());
+                for &w in &words[lo..hi] {
+                    acc += w.count_ones();
+                }
+            }
+            ensure(block_ranks[n_blocks] == acc && acc as usize == ones, || {
+                format!("RsBitVec: stored ones {ones} != actual popcount {acc}")
+            })?;
+        }
+        let zeros = len - ones;
+        for (samples, expected_count, want_set) in [
+            (&select1_samples, ones.div_ceil(SELECT_SAMPLE), true),
+            (&select0_samples, zeros.div_ceil(SELECT_SAMPLE), false),
+        ] {
+            // empty = that select directory was not built (SelectMode).
+            if samples.is_empty() {
+                continue;
+            }
+            ensure(samples.len() == expected_count, || {
+                format!(
+                    "RsBitVec: {} select samples, expected {expected_count}",
+                    samples.len()
+                )
+            })?;
+            ensure(
+                samples.windows(2).all(|w| w[0] < w[1])
+                    && samples.iter().all(|&p| (p as usize) < len),
+                || "RsBitVec: select samples not increasing in-range positions".into(),
+            )?;
+            ensure(
+                samples.iter().all(|&p| bits.get(p as usize) == want_set),
+                || "RsBitVec: select sample points at a bit of the wrong parity".into(),
+            )?;
+        }
+        let rs = RsBitVec { bits, block_ranks, select1_samples, select0_samples, ones };
+        // Each sample must be the (i·512)-th bit of its parity exactly —
+        // rank1/rank0 are trustworthy now that the directory is verified.
+        for (i, &p) in rs.select1_samples.iter().enumerate() {
+            ensure(rs.rank1(p as usize) == i * SELECT_SAMPLE, || {
+                format!("RsBitVec: select1 sample {i} is not the {}-th set bit", i * SELECT_SAMPLE)
+            })?;
+        }
+        for (i, &p) in rs.select0_samples.iter().enumerate() {
+            ensure(rs.rank0(p as usize) == i * SELECT_SAMPLE, || {
+                format!("RsBitVec: select0 sample {i} is not the {}-th unset bit", i * SELECT_SAMPLE)
+            })?;
+        }
+        Ok(rs)
+    }
+}
+
 impl HeapSize for RsBitVec {
     fn heap_bytes(&self) -> usize {
         self.bits.heap_bytes()
@@ -326,6 +445,56 @@ mod tests {
         assert_eq!(rs.len(), 0);
         assert_eq!(rs.count_ones(), 0);
         assert_eq!(rs.rank1(0), 0);
+    }
+
+    #[test]
+    fn persist_roundtrip_preserves_directories() {
+        for mode in [SelectMode::None, SelectMode::Ones, SelectMode::Both] {
+            let bv = random_bv(10_000, 0.3, 21);
+            let rs = RsBitVec::new(bv, mode);
+            let bytes = crate::store::to_payload(&rs);
+            let got: RsBitVec =
+                crate::store::from_payload(&mut crate::store::ByteReader::new(&bytes))
+                    .unwrap();
+            assert_eq!(got.block_ranks, rs.block_ranks);
+            assert_eq!(got.select1_samples, rs.select1_samples);
+            assert_eq!(got.select0_samples, rs.select0_samples);
+            assert_eq!(got.ones, rs.ones);
+            for i in (0..=got.len()).step_by(97) {
+                assert_eq!(got.rank1(i), rs.rank1(i));
+            }
+        }
+    }
+
+    #[test]
+    fn persist_rejects_inconsistent_directories() {
+        let rs = RsBitVec::new(random_bv(5000, 0.5, 22), SelectMode::Ones);
+        // wrong ones count
+        let mut bad = rs.clone();
+        bad.ones += 1;
+        let bytes = crate::store::to_payload(&bad);
+        assert!(crate::store::from_payload::<RsBitVec>(
+            &mut crate::store::ByteReader::new(&bytes)
+        )
+        .is_err());
+        // non-monotone rank directory
+        let mut bad = rs.clone();
+        bad.block_ranks[1] = u32::MAX;
+        let bytes = crate::store::to_payload(&bad);
+        assert!(crate::store::from_payload::<RsBitVec>(
+            &mut crate::store::ByteReader::new(&bytes)
+        )
+        .is_err());
+        // select sample pointing at a zero bit
+        let mut bad = rs;
+        if let Some(first_zero) = (0..bad.len()).find(|&i| !bad.get(i)) {
+            bad.select1_samples[0] = first_zero as u32;
+            let bytes = crate::store::to_payload(&bad);
+            assert!(crate::store::from_payload::<RsBitVec>(
+                &mut crate::store::ByteReader::new(&bytes)
+            )
+            .is_err());
+        }
     }
 
     #[test]

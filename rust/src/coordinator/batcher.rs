@@ -6,8 +6,17 @@
 //! one fan-out round. Under load batches fill instantly (throughput
 //! mode); a lone request waits at most `max_delay_us` (latency mode) —
 //! the standard dynamic-batching contract.
+//!
+//! All three query modes (id search, count, top-k) flow through the
+//! batcher: a batch is mixed-mode and executes via
+//! [`Engine::run_batch`], so every served query — whatever its mode —
+//! records the same real per-query wall time in the metrics.
+//!
+//! The engine is read through an [`EngineSlot`] at the start of each
+//! batch, so a `reload` (snapshot swap) takes effect on the next batch
+//! without restarting the batcher.
 
-use super::engine::Engine;
+use super::engine::{Engine, EngineSlot, QueryMode, QueryResult};
 use super::ServeConfig;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -19,7 +28,8 @@ use std::time::{Duration, Instant};
 struct Pending {
     q: Arc<[u8]>,
     tau: usize,
-    reply: Sender<Vec<u32>>,
+    mode: QueryMode,
+    reply: Sender<QueryResult>,
 }
 
 enum Msg {
@@ -37,14 +47,37 @@ pub struct BatchSubmitter {
 }
 
 impl BatchSubmitter {
-    /// Submits a query and blocks until its result arrives. `None` when
-    /// the batcher has shut down.
-    pub fn search(&self, q: Vec<u8>, tau: usize) -> Option<Vec<u32>> {
+    fn submit(&self, q: Vec<u8>, tau: usize, mode: QueryMode) -> Option<QueryResult> {
         let (reply_tx, reply_rx) = channel();
         self.tx
-            .send(Msg::Req(Pending { q: q.into(), tau, reply: reply_tx }))
+            .send(Msg::Req(Pending { q: q.into(), tau, mode, reply: reply_tx }))
             .ok()?;
         reply_rx.recv().ok()
+    }
+
+    /// Submits an id search and blocks until its result arrives. `None`
+    /// when the batcher has shut down.
+    pub fn search(&self, q: Vec<u8>, tau: usize) -> Option<Vec<u32>> {
+        match self.submit(q, tau, QueryMode::Ids)? {
+            QueryResult::Ids(ids) => Some(ids),
+            _ => None,
+        }
+    }
+
+    /// Submits a counting query.
+    pub fn count(&self, q: Vec<u8>, tau: usize) -> Option<usize> {
+        match self.submit(q, tau, QueryMode::Count)? {
+            QueryResult::Count(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    /// Submits a top-k query (radius `tau`).
+    pub fn topk(&self, q: Vec<u8>, k: usize, tau: usize) -> Option<Vec<(u32, usize)>> {
+        match self.submit(q, tau, QueryMode::TopK(k))? {
+            QueryResult::TopK(hits) => Some(hits),
+            _ => None,
+        }
     }
 }
 
@@ -55,22 +88,28 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    pub fn start(engine: Arc<Engine>, cfg: &ServeConfig) -> Self {
+    pub fn start(slot: Arc<EngineSlot>, cfg: &ServeConfig) -> Self {
         let (tx, rx) = channel::<Msg>();
         let max_batch = cfg.max_batch.max(1);
         let max_delay = Duration::from_micros(cfg.max_delay_us);
         let handle = std::thread::Builder::new()
             .name("bst-batcher".into())
-            .spawn(move || Self::run(engine, rx, max_batch, max_delay))
+            .spawn(move || Self::run(slot, rx, max_batch, max_delay))
             .expect("spawn batcher");
         Batcher { submitter: BatchSubmitter { tx }, handle: Some(handle) }
+    }
+
+    /// Convenience for tests and embedded use: a batcher over a fixed
+    /// engine (no reload).
+    pub fn start_fixed(engine: Arc<Engine>, cfg: &ServeConfig) -> Self {
+        Self::start(Arc::new(EngineSlot::new(engine)), cfg)
     }
 
     pub fn submitter(&self) -> BatchSubmitter {
         self.submitter.clone()
     }
 
-    fn run(engine: Arc<Engine>, rx: Receiver<Msg>, max_batch: usize, max_delay: Duration) {
+    fn run(slot: Arc<EngineSlot>, rx: Receiver<Msg>, max_batch: usize, max_delay: Duration) {
         loop {
             // Block for the first request (idle: no spinning).
             let first = match rx.recv() {
@@ -96,10 +135,14 @@ impl Batcher {
                     Err(RecvTimeoutError::Disconnected) => break,
                 }
             }
-            // Execute the whole batch as one round (Arc clones, no copies).
-            let queries: Vec<(Arc<[u8]>, usize)> =
-                batch.iter().map(|p| (Arc::clone(&p.q), p.tau)).collect();
-            let results = engine.search_batch(&queries);
+            // Execute the whole batch as one round (Arc clones, no
+            // copies) against the engine serving *now*.
+            let engine = slot.current();
+            let queries: Vec<(Arc<[u8]>, usize, QueryMode)> = batch
+                .iter()
+                .map(|p| (Arc::clone(&p.q), p.tau, p.mode))
+                .collect();
+            let results = engine.run_batch(&queries);
             for (p, r) in batch.into_iter().zip(results) {
                 let _ = p.reply.send(r);
             }
@@ -142,7 +185,7 @@ mod tests {
     fn single_request_round_trips() {
         let eng = engine(200);
         let cfg = ServeConfig { max_batch: 16, max_delay_us: 100, ..Default::default() };
-        let batcher = Batcher::start(Arc::clone(&eng), &cfg);
+        let batcher = Batcher::start_fixed(Arc::clone(&eng), &cfg);
         let sub = batcher.submitter();
         let q = vec![0u8; 8];
         let direct = {
@@ -156,10 +199,24 @@ mod tests {
     }
 
     #[test]
+    fn count_and_topk_ride_the_batcher() {
+        let eng = engine(400);
+        let cfg = ServeConfig { max_batch: 8, max_delay_us: 200, ..Default::default() };
+        let batcher = Batcher::start_fixed(Arc::clone(&eng), &cfg);
+        let sub = batcher.submitter();
+        let q = vec![1u8, 2, 3, 0, 1, 2, 3, 0];
+        assert_eq!(sub.count(q.clone(), 3).unwrap(), eng.count(&q, 3));
+        assert_eq!(sub.topk(q.clone(), 5, 8).unwrap(), eng.top_k(&q, 5, 8));
+        // all three went through run_batch → batches advanced
+        let batches = eng.metrics().batches.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(batches >= 2, "batches={batches}");
+    }
+
+    #[test]
     fn concurrent_submitters_get_correct_answers() {
         let eng = engine(500);
         let cfg = ServeConfig { max_batch: 8, max_delay_us: 500, ..Default::default() };
-        let batcher = Batcher::start(Arc::clone(&eng), &cfg);
+        let batcher = Batcher::start_fixed(Arc::clone(&eng), &cfg);
         let mut handles = Vec::new();
         for t in 0..16 {
             let sub = batcher.submitter();
@@ -190,12 +247,30 @@ mod tests {
     fn drop_with_live_submitters_terminates() {
         let eng = engine(100);
         let cfg = ServeConfig::default();
-        let batcher = Batcher::start(eng, &cfg);
+        let batcher = Batcher::start_fixed(eng, &cfg);
         let _held: Vec<BatchSubmitter> = (0..4).map(|_| batcher.submitter()).collect();
         let t = std::time::Instant::now();
         drop(batcher); // must return promptly despite `_held`
         assert!(t.elapsed() < Duration::from_secs(2));
         // held submitters now observe shutdown
         assert!(_held[0].search(vec![0; 8], 1).is_none());
+    }
+
+    #[test]
+    fn slot_swap_is_picked_up_by_next_batch() {
+        let a = engine(100);
+        let b = engine(300);
+        let slot = Arc::new(EngineSlot::new(Arc::clone(&a)));
+        let cfg = ServeConfig { max_batch: 4, max_delay_us: 100, ..Default::default() };
+        let batcher = Batcher::start(Arc::clone(&slot), &cfg);
+        let sub = batcher.submitter();
+        let q = vec![0u8; 8];
+        let _ = sub.search(q.clone(), 8).unwrap();
+        let a_queries = a.metrics().queries.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(a_queries >= 1);
+        slot.replace(Arc::clone(&b));
+        let hits = sub.search(q.clone(), 8).unwrap();
+        assert_eq!(hits.len(), 300, "served by the swapped-in engine");
+        assert!(b.metrics().queries.load(std::sync::atomic::Ordering::Relaxed) >= 1);
     }
 }

@@ -1,29 +1,46 @@
 //! Sharded query engine.
 //!
 //! The database is striped into `S` contiguous shards; each shard worker
-//! thread owns one index (any [`SearchIndex`]) over its stripe plus one
+//! thread owns one index (a [`ShardIndex`]) over its stripe plus one
 //! persistent [`QueryCtx`] — the per-worker scratch pool that makes the
-//! per-shard hot path allocation-free after warm-up. A query fans out to
-//! all shards as one shared `Arc<[u8]>` (no per-shard copies) and merges
+//! per-shard hot path allocation-free after warm-up (including the top-k
+//! heap, parked in the ctx between queries). A query fans out to all
+//! shards as one shared `Arc<[u8]>` (no per-shard copies) and merges
 //! results with the global id offsets.
 //!
 //! Three query modes ride the same fan-out machinery: id collection
-//! ([`Engine::search`] / [`Engine::search_batch`]), counting
+//! ([`Engine::search`] / [`Engine::run_batch`]), counting
 //! ([`Engine::count`]) and top-k nearest neighbors ([`Engine::top_k`],
-//! merged globally by `(dist, id)`).
+//! merged globally by `(dist, id)`). [`Engine::run_batch`] executes a
+//! mixed-mode batch as one pipelined fan-out round — the batcher routes
+//! *all three* modes through it, so every served query records real
+//! per-query wall time.
+//!
+//! **Persistence** ([`Engine::save`] / [`Engine::load`]): the engine
+//! writes one snapshot (see [`crate::store`]) with a `meta` section
+//! (sketch length, database size, shard offsets) and one `shard.N`
+//! section per shard. Loading validates the container and reconstructs
+//! the workers directly from the serialized structures — it never
+//! re-runs `SortedSketches::build`, sorts anything, or rebuilds a
+//! rank/select directory. Build once, serve many, restart in seconds.
 //!
 //! Shard workers are persistent (channel-fed) rather than spawned per
 //! query — fan-out latency is two channel hops, and the workers give the
 //! natural place for per-shard pinning or NUMA placement at larger scale.
 
 use super::metrics::Metrics;
-use crate::index::SearchIndex;
-use crate::query::{CollectIds, CountOnly, QueryCtx, TopK};
+use crate::index::{MultiBst, SearchIndex, SingleBst};
+use crate::query::{CollectIds, Collector, CountOnly, QueryCtx};
 use crate::sketch::SketchSet;
+use crate::store::{
+    ensure, from_payload, to_payload, ByteReader, ByteWriter, Persist, Snapshot,
+    SnapshotStreamWriter, StoreError,
+};
 use crate::trie::bst::BstConfig;
 use crate::util::timer::Timer;
+use std::path::Path;
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 
 /// How a fanned-out query collects results on each shard.
@@ -44,6 +61,14 @@ pub enum ShardReply {
     TopK(Vec<(u32, usize)>),
 }
 
+/// A globally merged query result (one per batch entry).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum QueryResult {
+    Ids(Vec<u32>),
+    Count(usize),
+    TopK(Vec<(u32, usize)>),
+}
+
 enum ShardMsg {
     Query {
         q: Arc<[u8]>,
@@ -59,6 +84,9 @@ struct Shard {
     tx: Sender<ShardMsg>,
     handle: Option<JoinHandle<()>>,
     offset: u32,
+    /// Shared with the worker thread; kept here so `save` can serialize
+    /// the live structures without a rebuild.
+    index: Arc<ShardIndex>,
 }
 
 /// Builder: which index each shard uses.
@@ -67,6 +95,77 @@ pub enum ShardIndexKind {
     Bst(BstConfig),
     /// MI-bST with `m` blocks.
     MultiBst(usize),
+}
+
+/// A shard's index, concretely tagged so snapshots can restore it. All
+/// variants answer queries through [`SearchIndex`].
+pub enum ShardIndex {
+    Bst(SingleBst),
+    MultiBst(MultiBst),
+}
+
+impl ShardIndex {
+    /// Rows in this shard's stripe.
+    fn n_rows(&self) -> usize {
+        match self {
+            ShardIndex::Bst(idx) => idx.trie().post_id_count(),
+            ShardIndex::MultiBst(idx) => idx.n(),
+        }
+    }
+
+    /// Sketch length the shard serves.
+    fn l(&self) -> usize {
+        match self {
+            ShardIndex::Bst(idx) => idx.trie().sketch_len(),
+            ShardIndex::MultiBst(idx) => idx.l(),
+        }
+    }
+}
+
+impl SearchIndex for ShardIndex {
+    fn run(&self, q: &[u8], ctx: &mut QueryCtx, c: &mut dyn Collector) {
+        match self {
+            ShardIndex::Bst(idx) => idx.run(q, ctx, c),
+            ShardIndex::MultiBst(idx) => idx.run(q, ctx, c),
+        }
+    }
+
+    fn heap_bytes(&self) -> usize {
+        match self {
+            ShardIndex::Bst(idx) => idx.heap_bytes(),
+            ShardIndex::MultiBst(idx) => SearchIndex::heap_bytes(idx),
+        }
+    }
+
+    fn name(&self) -> String {
+        match self {
+            ShardIndex::Bst(idx) => idx.name(),
+            ShardIndex::MultiBst(idx) => SearchIndex::name(idx),
+        }
+    }
+}
+
+impl Persist for ShardIndex {
+    fn write_into(&self, w: &mut ByteWriter) {
+        match self {
+            ShardIndex::Bst(idx) => {
+                w.put_u8(0);
+                idx.write_into(w);
+            }
+            ShardIndex::MultiBst(idx) => {
+                w.put_u8(1);
+                idx.write_into(w);
+            }
+        }
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        match r.get_u8()? {
+            0 => Ok(ShardIndex::Bst(SingleBst::read_from(r)?)),
+            1 => Ok(ShardIndex::MultiBst(MultiBst::read_from(r)?)),
+            t => Err(StoreError::Corrupt(format!("shard index: unknown kind tag {t}"))),
+        }
+    }
 }
 
 /// The sharded engine.
@@ -79,16 +178,18 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Most shards an engine will build or load — keeps `save`/`load`
+    /// symmetric (anything `build` produces, `load` accepts) and bounds
+    /// the allocation a corrupt snapshot header can request.
+    pub const MAX_SHARDS: usize = 65_536;
+
     /// Stripes `set` over `n_shards` shards and builds per-shard indexes
     /// in parallel.
     pub fn build(set: &SketchSet, n_shards: usize, kind: &ShardIndexKind) -> Self {
         let n = set.n();
-        let n_shards = n_shards.clamp(1, n.max(1));
+        let n_shards = n_shards.clamp(1, n.max(1)).min(Self::MAX_SHARDS);
         let per = n.div_ceil(n_shards);
-        let metrics = Arc::new(Metrics::new());
 
-        let mut shards = Vec::with_capacity(n_shards);
-        let mut heap_bytes = 0usize;
         // Build indexes in parallel with scoped threads, then move each
         // into its worker thread.
         let stripes: Vec<(u32, SketchSet)> = (0..n_shards)
@@ -105,35 +206,44 @@ impl Engine {
             })
             .collect();
 
-        let built: Vec<(u32, Box<dyn SearchIndex + Send + Sync>)> = std::thread::scope(|scope| {
+        let built: Vec<(u32, Arc<ShardIndex>)> = std::thread::scope(|scope| {
             let handles: Vec<_> = stripes
                 .into_iter()
                 .map(|(offset, stripe)| {
                     scope.spawn(move || {
-                        let index: Box<dyn SearchIndex + Send + Sync> = match kind {
+                        let index = match kind {
                             ShardIndexKind::Bst(cfg) => {
-                                Box::new(crate::index::SingleBst::build(&stripe, *cfg))
+                                ShardIndex::Bst(SingleBst::build(&stripe, *cfg))
                             }
                             ShardIndexKind::MultiBst(m) => {
-                                Box::new(crate::index::MultiBst::build(&stripe, *m))
+                                ShardIndex::MultiBst(MultiBst::build(&stripe, *m))
                             }
                         };
-                        (offset, index)
+                        (offset, Arc::new(index))
                     })
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().expect("shard build")).collect()
         });
 
-        for (offset, index) in built {
+        Engine::assemble(set.l(), n, built)
+    }
+
+    /// Spawns the shard workers over already-built (or loaded) indexes.
+    fn assemble(l: usize, n: usize, parts: Vec<(u32, Arc<ShardIndex>)>) -> Self {
+        let metrics = Arc::new(Metrics::new());
+        let mut shards = Vec::with_capacity(parts.len());
+        let mut heap_bytes = 0usize;
+        for (offset, index) in parts {
             heap_bytes += index.heap_bytes();
             let (tx, rx) = channel::<ShardMsg>();
+            let worker_index = Arc::clone(&index);
             let handle = std::thread::Builder::new()
                 .name(format!("bst-shard-{offset}"))
                 .spawn(move || {
-                    // One QueryCtx per worker: scratch buffers are warmed
-                    // by the first query and reused for the shard's
-                    // lifetime (the pooling layer of the query refactor).
+                    // One QueryCtx per worker: scratch buffers (including
+                    // the parked top-k heap) are warmed by the first query
+                    // and reused for the shard's lifetime.
                     let mut qctx = QueryCtx::new();
                     while let Ok(msg) = rx.recv() {
                         match msg {
@@ -142,18 +252,18 @@ impl Engine {
                                     QueryMode::Ids => {
                                         let mut hits = Vec::new();
                                         let mut coll = CollectIds::new(tau, &mut hits);
-                                        index.run(&q, &mut qctx, &mut coll);
+                                        worker_index.run(&q, &mut qctx, &mut coll);
                                         ShardReply::Ids(hits)
                                     }
                                     QueryMode::Count => {
                                         let mut coll = CountOnly::new(tau);
-                                        index.run(&q, &mut qctx, &mut coll);
+                                        worker_index.run(&q, &mut qctx, &mut coll);
                                         ShardReply::Count(coll.count())
                                     }
                                     QueryMode::TopK(k) => {
-                                        let mut coll = TopK::new(k, tau);
-                                        index.run(&q, &mut qctx, &mut coll);
-                                        ShardReply::TopK(coll.finish())
+                                        let mut hits = Vec::new();
+                                        worker_index.top_k_into(&q, k, tau, &mut qctx, &mut hits);
+                                        ShardReply::TopK(hits)
                                     }
                                 };
                                 let _ = reply.send((shard_no, result));
@@ -163,10 +273,84 @@ impl Engine {
                     }
                 })
                 .expect("spawn shard worker");
-            shards.push(Shard { tx, handle: Some(handle), offset });
+            shards.push(Shard { tx, handle: Some(handle), offset, index });
         }
 
-        Engine { shards, metrics, l: set.l(), n, heap_bytes }
+        Engine { shards, metrics, l, n, heap_bytes }
+    }
+
+    /// Writes a snapshot: one `meta` section plus one `shard.N` section
+    /// per shard (see [`crate::store::container`] for the file format).
+    /// Shards are serialized and streamed one at a time, so saving a
+    /// large engine never holds more than one shard's payload beyond the
+    /// resident structures.
+    pub fn save(&self, path: &Path) -> Result<(), StoreError> {
+        let mut out = SnapshotStreamWriter::create(path, 1 + self.shards.len())?;
+        let mut w = ByteWriter::new();
+        w.put_usize(self.l);
+        w.put_usize(self.n);
+        w.put_usize(self.shards.len());
+        for s in &self.shards {
+            w.put_u64(s.offset as u64);
+        }
+        out.add_section("meta", &w.into_bytes())?;
+        for (i, s) in self.shards.iter().enumerate() {
+            out.add_section(&format!("shard.{i}"), &to_payload(&*s.index))?;
+        }
+        out.finish()
+    }
+
+    /// Restores an engine from a snapshot and spawns its workers. The
+    /// load path is parse + validate only: no sorting, no trie
+    /// construction, no rank/select re-indexing.
+    pub fn load(path: &Path) -> Result<Self, StoreError> {
+        let snap = Snapshot::open(path)?;
+        let mut r = snap.section("meta")?;
+        let l = r.get_usize()?;
+        let n = r.get_usize()?;
+        let n_shards = r.get_usize()?;
+        ensure(l >= 1 && (1..=Self::MAX_SHARDS).contains(&n_shards), || {
+            format!("engine meta: bad shape L={l} shards={n_shards}")
+        })?;
+        let mut offsets = Vec::with_capacity(n_shards);
+        for _ in 0..n_shards {
+            let o = r.get_u64()?;
+            offsets.push(u32::try_from(o).map_err(|_| {
+                StoreError::Corrupt(format!("engine meta: shard offset {o} exceeds u32"))
+            })?);
+        }
+        r.expect_end()?;
+
+        let mut parts = Vec::with_capacity(n_shards);
+        let mut covered = 0usize;
+        for (i, &offset) in offsets.iter().enumerate() {
+            let mut sr = snap.section(&format!("shard.{i}"))?;
+            let index: ShardIndex = from_payload(&mut sr)?;
+            ensure(offset as usize == covered, || {
+                format!("engine meta: shard {i} offset {offset} does not tile (expected {covered})")
+            })?;
+            ensure(index.l() == l, || {
+                format!("shard {i}: sketch length {} != engine L={l}", index.l())
+            })?;
+            // Bound local ids by the stripe size: the merge paths compute
+            // `id + offset`, so out-of-range ids from a crafted shard
+            // must be rejected here, not wrap at query time. (MI-bST
+            // shards bound their ids inside MultiIndex::read_from.)
+            if let ShardIndex::Bst(idx) = &index {
+                ensure(
+                    idx.trie()
+                        .max_posting()
+                        .map_or(true, |m| (m as usize) < index.n_rows()),
+                    || format!("shard {i}: posting ids exceed the stripe size"),
+                )?;
+            }
+            covered += index.n_rows();
+            parts.push((offset, Arc::new(index)));
+        }
+        ensure(covered == n, || {
+            format!("engine meta: shards cover {covered} rows, expected n={n}")
+        })?;
+        Ok(Engine::assemble(l, n, parts))
     }
 
     pub fn n_shards(&self) -> usize {
@@ -260,56 +444,106 @@ impl Engine {
         let (reply_tx, reply_rx) = channel();
         self.fan_out(&q, tau, QueryMode::TopK(k), &reply_tx);
         drop(reply_tx);
+        let merged = Self::merge_topk(&self.shards, reply_rx.iter(), k);
+        self.metrics.record_query(timer.elapsed_us() as u64, merged.len());
+        merged
+    }
+
+    fn merge_topk(
+        shards: &[Shard],
+        replies: impl Iterator<Item = (usize, ShardReply)>,
+        k: usize,
+    ) -> Vec<(u32, usize)> {
         let mut all: Vec<(usize, u32)> = Vec::new();
-        for (shard_no, reply) in reply_rx {
+        for (shard_no, reply) in replies {
             if let ShardReply::TopK(hits) = reply {
-                let offset = self.shards[shard_no].offset;
+                let offset = shards[shard_no].offset;
                 all.extend(hits.into_iter().map(|(id, d)| (d, id + offset)));
             }
         }
         all.sort_unstable();
         all.truncate(k);
-        self.metrics.record_query(timer.elapsed_us() as u64, all.len());
         all.into_iter().map(|(d, id)| (id, d)).collect()
     }
 
-    /// Executes a batch of queries as one pipelined fan-out round (the
-    /// batcher's entry point). All queries are enqueued on every shard
+    /// Executes a mixed-mode batch of queries as one pipelined fan-out
+    /// round (the batcher's entry point — search, count *and* top-k all
+    /// flow through here). All queries are enqueued on every shard
     /// *before* any result is collected, so the batch completes in
-    /// (slowest shard's queue) time rather than Σ per-query latencies —
-    /// see EXPERIMENTS.md §Perf for the before/after. Queries arrive as
-    /// `Arc<[u8]>` and are shared, not cloned, across shard messages.
-    pub fn search_batch(&self, queries: &[(Arc<[u8]>, usize)]) -> Vec<Vec<u32>> {
+    /// (slowest shard's queue) time rather than Σ per-query latencies.
+    /// Each query's latency is stamped from its own fan-out to its last
+    /// shard reply — real per-query wall time, identical accounting for
+    /// all three modes.
+    pub fn run_batch(&self, queries: &[(Arc<[u8]>, usize, QueryMode)]) -> Vec<QueryResult> {
         self.metrics.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        // Phase 1: fan out everything, stamping each query's own start so
-        // latency metrics reflect real per-query wall time (an even split
-        // of the batch total would hide stragglers).
+        for (q, _, _) in queries {
+            assert_eq!(q.len(), self.l, "query length mismatch");
+        }
+        // Phase 1: fan out everything.
         let pending: Vec<_> = queries
             .iter()
-            .map(|(q, tau)| {
+            .map(|(q, tau, mode)| {
                 let timer = Timer::start();
                 let (reply_tx, reply_rx) = channel();
-                self.fan_out(q, *tau, QueryMode::Ids, &reply_tx);
-                (timer, reply_rx)
+                self.fan_out(q, *tau, *mode, &reply_tx);
+                (*mode, timer, reply_rx)
             })
             .collect();
-        // Phase 2: collect in request order; each query's latency is
-        // measured from its fan-out to the receipt of its last shard
-        // reply.
+        // Phase 2: collect in request order.
         let n_shards = self.shards.len();
         pending
             .into_iter()
-            .map(|(timer, rx)| {
-                let mut merged = Vec::new();
-                for _ in 0..n_shards {
-                    let (shard_no, reply) = rx.recv().expect("shard reply");
-                    if let ShardReply::Ids(hits) = reply {
-                        let offset = self.shards[shard_no].offset;
-                        merged.extend(hits.into_iter().map(|id| id + offset));
+            .map(|(mode, timer, rx)| {
+                let result = match mode {
+                    QueryMode::Ids => {
+                        let mut merged = Vec::new();
+                        for _ in 0..n_shards {
+                            let (shard_no, reply) = rx.recv().expect("shard reply");
+                            if let ShardReply::Ids(hits) = reply {
+                                let offset = self.shards[shard_no].offset;
+                                merged.extend(hits.into_iter().map(|id| id + offset));
+                            }
+                        }
+                        QueryResult::Ids(merged)
                     }
-                }
-                self.metrics.record_query(timer.elapsed_us() as u64, merged.len());
-                merged
+                    QueryMode::Count => {
+                        let mut total = 0usize;
+                        for _ in 0..n_shards {
+                            let (_, reply) = rx.recv().expect("shard reply");
+                            if let ShardReply::Count(c) = reply {
+                                total += c;
+                            }
+                        }
+                        QueryResult::Count(total)
+                    }
+                    QueryMode::TopK(k) => {
+                        let replies = (0..n_shards).map(|_| rx.recv().expect("shard reply"));
+                        QueryResult::TopK(Self::merge_topk(&self.shards, replies, k))
+                    }
+                };
+                let size = match &result {
+                    QueryResult::Ids(v) => v.len(),
+                    QueryResult::Count(c) => *c,
+                    QueryResult::TopK(v) => v.len(),
+                };
+                self.metrics.record_query(timer.elapsed_us() as u64, size);
+                result
+            })
+            .collect()
+    }
+
+    /// Id-search-only batch (compatibility wrapper over
+    /// [`Engine::run_batch`]).
+    pub fn search_batch(&self, queries: &[(Arc<[u8]>, usize)]) -> Vec<Vec<u32>> {
+        let with_mode: Vec<(Arc<[u8]>, usize, QueryMode)> = queries
+            .iter()
+            .map(|(q, tau)| (Arc::clone(q), *tau, QueryMode::Ids))
+            .collect();
+        self.run_batch(&with_mode)
+            .into_iter()
+            .map(|r| match r {
+                QueryResult::Ids(v) => v,
+                _ => unreachable!("Ids batch returned a non-Ids result"),
             })
             .collect()
     }
@@ -325,6 +559,31 @@ impl Drop for Engine {
                 let _ = h.join();
             }
         }
+    }
+}
+
+/// A swappable engine reference: the server and batcher read the current
+/// engine through this slot, and the `reload` protocol op replaces it
+/// with one freshly loaded from a snapshot — zero-downtime cold-storage
+/// swap (in-flight batches finish on the engine they started on).
+pub struct EngineSlot {
+    inner: RwLock<Arc<Engine>>,
+}
+
+impl EngineSlot {
+    pub fn new(engine: Arc<Engine>) -> Self {
+        EngineSlot { inner: RwLock::new(engine) }
+    }
+
+    /// The engine serving right now.
+    pub fn current(&self) -> Arc<Engine> {
+        self.inner.read().unwrap().clone()
+    }
+
+    /// Swaps in a new engine, returning the previous one (kept alive by
+    /// any in-flight queries that still hold its `Arc`).
+    pub fn replace(&self, engine: Arc<Engine>) -> Arc<Engine> {
+        std::mem::replace(&mut *self.inner.write().unwrap(), engine)
     }
 }
 
@@ -433,6 +692,33 @@ mod tests {
     }
 
     #[test]
+    fn mixed_mode_batch_matches_single_queries() {
+        let rows = rows(700, 99);
+        let set = SketchSet::from_rows(2, 16, &rows);
+        let engine = Engine::build(&set, 3, &ShardIndexKind::Bst(BstConfig::default()));
+        let q0: Arc<[u8]> = Arc::from(rows[0].as_slice());
+        let q1: Arc<[u8]> = Arc::from(rows[50].as_slice());
+        let batch = engine.run_batch(&[
+            (Arc::clone(&q0), 2, QueryMode::Ids),
+            (Arc::clone(&q1), 3, QueryMode::Count),
+            (Arc::clone(&q0), 4, QueryMode::TopK(5)),
+        ]);
+        assert_eq!(batch.len(), 3);
+        match &batch[0] {
+            QueryResult::Ids(ids) => {
+                let mut got = ids.clone();
+                got.sort();
+                let mut expect = engine.search(&q0, 2);
+                expect.sort();
+                assert_eq!(got, expect);
+            }
+            other => panic!("expected Ids, got {other:?}"),
+        }
+        assert_eq!(batch[1], QueryResult::Count(engine.count(&q1, 3)));
+        assert_eq!(batch[2], QueryResult::TopK(engine.top_k(&q0, 5, 4)));
+    }
+
+    #[test]
     fn multibst_shards_work() {
         let rows = rows(800, 93);
         let set = SketchSet::from_rows(2, 16, &rows);
@@ -482,5 +768,86 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn save_load_roundtrip_answers_identically() {
+        let rows = rows(1500, 90);
+        let set = SketchSet::from_rows(2, 16, &rows);
+        let dir = std::env::temp_dir().join("bst_engine_snap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (kind, name) in [
+            (ShardIndexKind::Bst(BstConfig::default()), "bst"),
+            (ShardIndexKind::MultiBst(2), "mibst"),
+        ] {
+            let engine = Engine::build(&set, 3, &kind);
+            let path = dir.join(format!("engine_{name}.snap"));
+            engine.save(&path).unwrap();
+
+            // (the no-rebuild counter assertions live in the dedicated
+            // single-test binary tests/snapshot_cold_start.rs — the
+            // global counters would race with parallel sibling tests)
+            let loaded = Engine::load(&path).unwrap();
+            assert_eq!(loaded.n(), engine.n());
+            assert_eq!(loaded.l(), engine.l());
+            assert_eq!(loaded.n_shards(), engine.n_shards());
+            let mut rng = Rng::new(77);
+            for _ in 0..8 {
+                let q = rows[rng.below_usize(rows.len())].clone();
+                for tau in [0usize, 2, 4] {
+                    let mut a = engine.search(&q, tau);
+                    let mut b = loaded.search(&q, tau);
+                    a.sort();
+                    b.sort();
+                    assert_eq!(a, b, "{name} tau={tau}");
+                    assert_eq!(engine.count(&q, tau), loaded.count(&q, tau));
+                }
+                assert_eq!(engine.top_k(&q, 7, 5), loaded.top_k(&q, 7, 5), "{name}");
+            }
+            std::fs::remove_file(&path).unwrap();
+        }
+    }
+
+    #[test]
+    fn load_rejects_corrupt_and_missing() {
+        let rows = rows(300, 89);
+        let set = SketchSet::from_rows(2, 16, &rows);
+        let engine = Engine::build(&set, 2, &ShardIndexKind::Bst(BstConfig::default()));
+        let dir = std::env::temp_dir().join("bst_engine_snap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("engine_corrupt.snap");
+        engine.save(&path).unwrap();
+
+        let good = std::fs::read(&path).unwrap();
+        // truncations at many points
+        for cut in [0usize, 8, 40, good.len() / 2, good.len() - 3] {
+            std::fs::write(&path, &good[..cut]).unwrap();
+            assert!(Engine::load(&path).is_err(), "cut={cut}");
+        }
+        // flip 8 consecutive bytes mid-file: inter-section padding runs
+        // are at most 7 bytes, so at least one checksummed byte flips
+        let mut bad = good.clone();
+        let mid = good.len() / 2;
+        for b in &mut bad[mid..mid + 8] {
+            *b ^= 0x10;
+        }
+        std::fs::write(&path, &bad).unwrap();
+        assert!(Engine::load(&path).is_err());
+        // missing file
+        assert!(Engine::load(&dir.join("nope.snap")).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn engine_slot_swaps() {
+        let rows = rows(200, 88);
+        let set = SketchSet::from_rows(2, 16, &rows);
+        let a = Arc::new(Engine::build(&set, 1, &ShardIndexKind::Bst(BstConfig::default())));
+        let b = Arc::new(Engine::build(&set, 2, &ShardIndexKind::Bst(BstConfig::default())));
+        let slot = EngineSlot::new(Arc::clone(&a));
+        assert_eq!(slot.current().n_shards(), 1);
+        let old = slot.replace(Arc::clone(&b));
+        assert_eq!(old.n_shards(), 1);
+        assert_eq!(slot.current().n_shards(), 2);
     }
 }

@@ -8,10 +8,15 @@
 //!   per-worker `QueryCtx`; a query fans out to all shards as one shared
 //!   `Arc<[u8]>` and merges id sets / counts / top-k results (ids are
 //!   globally offset).
-//! * [`batcher`] — dynamic batching: requests queue up to `max_batch` or
-//!   `max_delay`, then execute as one fan-out round (amortizes shard
-//!   wake-ups under load; single requests still cut through on timeout).
-//! * [`server`] — TCP front-end, line-delimited JSON protocol.
+//! * [`batcher`] — dynamic batching: requests (search, count *and*
+//!   top-k) queue up to `max_batch` or `max_delay`, then execute as one
+//!   mixed-mode fan-out round (amortizes shard wake-ups under load;
+//!   single requests still cut through on timeout).
+//! * [`server`] — TCP front-end, line-delimited JSON protocol, including
+//!   the `reload` op that swaps in an engine loaded from a snapshot.
+//! * [`engine::Engine::save`] / [`engine::Engine::load`] — snapshot
+//!   persistence: build once, serve many, restart in seconds (see
+//!   [`crate::store`]).
 //! * [`metrics`] — atomic counters + log-bucketed latency histogram.
 //! * [`config`] — serving configuration.
 //!
@@ -27,5 +32,5 @@ pub mod protocol;
 pub mod server;
 
 pub use config::ServeConfig;
-pub use engine::Engine;
+pub use engine::{Engine, EngineSlot};
 pub use metrics::Metrics;

@@ -7,6 +7,7 @@
 //! {"op":"topk","q":[0,1,2,3],"k":5,"tau":4}
 //! {"op":"stats"}
 //! {"op":"ping"}
+//! {"op":"reload","path":"/path/to/engine.snap"}
 //! {"op":"shutdown"}
 //! ```
 //! Responses (one line each):
@@ -32,6 +33,8 @@ pub enum Request {
     Search { q: Vec<u8>, tau: Option<usize> },
     Count { q: Vec<u8>, tau: Option<usize> },
     TopK { q: Vec<u8>, k: usize, tau: Option<usize> },
+    /// Swap the serving engine for one loaded from a snapshot file.
+    Reload { path: String },
     Stats,
     Ping,
     Shutdown,
@@ -83,6 +86,14 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             let tau = v.get("tau").and_then(|t| t.as_usize());
             Ok(Request::TopK { q, k, tau })
         }
+        "reload" => {
+            let path = v
+                .get("path")
+                .and_then(|p| p.as_str())
+                .filter(|p| !p.is_empty())
+                .ok_or_else(|| "reload requires a non-empty 'path'".to_string())?;
+            Ok(Request::Reload { path: path.to_string() })
+        }
         other => Err(format!("unknown op '{other}'")),
     }
 }
@@ -127,6 +138,18 @@ pub fn error_response(msg: &str) -> String {
     Json::obj(vec![("error", Json::str(msg))]).to_string()
 }
 
+/// Encodes a successful reload: the snapshot path now serving plus the
+/// new engine's shape.
+pub fn reload_response(n: usize, shards: usize, latency_us: u64) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("n", Json::num(n as f64)),
+        ("shards", Json::num(shards as f64)),
+        ("latency_us", Json::num(latency_us as f64)),
+    ])
+    .to_string()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +177,12 @@ mod tests {
         assert_eq!(parse_request(r#"{"op":"ping"}"#).unwrap(), Request::Ping);
         assert_eq!(parse_request(r#"{"op":"stats"}"#).unwrap(), Request::Stats);
         assert_eq!(parse_request(r#"{"op":"shutdown"}"#).unwrap(), Request::Shutdown);
+        assert_eq!(
+            parse_request(r#"{"op":"reload","path":"/tmp/e.snap"}"#).unwrap(),
+            Request::Reload { path: "/tmp/e.snap".into() }
+        );
+        assert!(parse_request(r#"{"op":"reload"}"#).is_err());
+        assert!(parse_request(r#"{"op":"reload","path":""}"#).is_err());
     }
 
     #[test]
@@ -182,5 +211,9 @@ mod tests {
         assert_eq!(tv.get("dists").unwrap().as_arr().unwrap().len(), 2);
         let e = error_response("bad");
         assert!(Json::parse(&e).unwrap().get("error").is_some());
+        let rl = reload_response(1000, 4, 12);
+        let v = Json::parse(&rl).unwrap();
+        assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(v.get("shards").and_then(|s| s.as_usize()), Some(4));
     }
 }

@@ -4,16 +4,24 @@
 //! here; the request path itself is the batcher → sharded engine). The
 //! listener thread accepts until `shutdown` is requested by any client or
 //! the returned [`ServerHandle`] is stopped.
+//!
+//! The engine lives behind an [`EngineSlot`]: the `reload` op loads a
+//! snapshot from disk ([`Engine::load`] — no rebuild) and swaps it in;
+//! subsequent batches serve from the new engine. A reload must keep the
+//! sketch length `L` (the serving schema); snapshots of a different
+//! shape are rejected without disturbing the running engine.
 
 use super::batcher::Batcher;
-use super::engine::Engine;
+use super::engine::{Engine, EngineSlot};
 use super::protocol::{
-    count_response, error_response, parse_request, search_response, topk_response, Request,
+    count_response, error_response, parse_request, reload_response, search_response,
+    topk_response, Request,
 };
 use super::ServeConfig;
 use crate::util::timer::Timer;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -57,7 +65,8 @@ pub fn serve(engine: Arc<Engine>, cfg: ServeConfig) -> std::io::Result<ServerHan
     let stop2 = Arc::clone(&stop);
     let default_tau = cfg.default_tau;
 
-    let batcher = Batcher::start(Arc::clone(&engine), &cfg);
+    let slot = Arc::new(EngineSlot::new(engine));
+    let batcher = Batcher::start(Arc::clone(&slot), &cfg);
 
     let handle = std::thread::Builder::new()
         .name("bst-listener".into())
@@ -73,10 +82,10 @@ pub fn serve(engine: Arc<Engine>, cfg: ServeConfig) -> std::io::Result<ServerHan
                 // add ~40 ms per round trip (measured; EXPERIMENTS.md §Perf).
                 let _ = stream.set_nodelay(true);
                 let submitter = batcher.submitter();
-                let engine = Arc::clone(&engine);
+                let slot = Arc::clone(&slot);
                 let stop3 = Arc::clone(&stop2);
                 std::thread::spawn(move || {
-                    let _ = handle_conn(stream, submitter, engine, stop3, default_tau);
+                    let _ = handle_conn(stream, submitter, slot, stop3, default_tau);
                 });
             }
         })
@@ -105,7 +114,7 @@ fn check_len(engine: &Engine, q: &[u8]) -> Result<(), String> {
 fn handle_conn(
     stream: TcpStream,
     submitter: super::batcher::BatchSubmitter,
-    engine: Arc<Engine>,
+    slot: Arc<EngineSlot>,
     stop: Arc<AtomicBool>,
     default_tau: usize,
 ) -> std::io::Result<()> {
@@ -116,6 +125,7 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
+        let engine = slot.current();
         let reply = match parse_request(&line) {
             Err(e) => {
                 engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
@@ -130,6 +140,8 @@ fn handle_conn(
                 let _ = TcpStream::connect(writer.local_addr()?);
                 break;
             }
+            // All three query modes ride the batcher, so they share the
+            // fan-out amortization and the per-query latency accounting.
             Ok(Request::Search { q, tau }) => match check_len(&engine, &q) {
                 Err(e) => error_response(&e),
                 Ok(()) => {
@@ -140,14 +152,14 @@ fn handle_conn(
                     }
                 }
             },
-            // Count and top-k go straight to the engine: id-searches are
-            // the high-volume path the batcher amortizes.
             Ok(Request::Count { q, tau }) => match check_len(&engine, &q) {
                 Err(e) => error_response(&e),
                 Ok(()) => {
                     let timer = Timer::start();
-                    let n = engine.count(&q, tau.unwrap_or(default_tau));
-                    count_response(n, timer.elapsed_us() as u64)
+                    match submitter.count(q, tau.unwrap_or(default_tau)) {
+                        Some(n) => count_response(n, timer.elapsed_us() as u64),
+                        None => error_response("engine unavailable"),
+                    }
                 }
             },
             Ok(Request::TopK { q, k, tau }) => match check_len(&engine, &q) {
@@ -158,10 +170,36 @@ fn handle_conn(
                     // k above the database size is meaningless — clamp it
                     // so untrusted requests stay cheap.
                     let k = k.min(engine.n());
-                    let hits = engine.top_k(&q, k, tau.unwrap_or(engine.l()));
-                    topk_response(&hits, timer.elapsed_us() as u64)
+                    let tau = tau.unwrap_or(engine.l());
+                    match submitter.topk(q, k, tau) {
+                        Some(hits) => topk_response(&hits, timer.elapsed_us() as u64),
+                        None => error_response("engine unavailable"),
+                    }
                 }
             },
+            Ok(Request::Reload { path }) => {
+                let timer = Timer::start();
+                match Engine::load(Path::new(&path)) {
+                    Err(e) => {
+                        engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
+                        error_response(&format!("reload failed: {e}"))
+                    }
+                    Ok(new_engine) if new_engine.l() != engine.l() => {
+                        engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
+                        error_response(&format!(
+                            "reload rejected: snapshot L={} != serving L={}",
+                            new_engine.l(),
+                            engine.l()
+                        ))
+                    }
+                    Ok(new_engine) => {
+                        let n = new_engine.n();
+                        let shards = new_engine.n_shards();
+                        slot.replace(Arc::new(new_engine));
+                        reload_response(n, shards, timer.elapsed_us() as u64)
+                    }
+                }
+            }
         };
         writer.write_all(reply.as_bytes())?;
         writer.write_all(b"\n")?;

@@ -28,9 +28,21 @@ pub fn save_sketches(set: &SketchSet, path: &Path) -> Result<()> {
     w.flush()
 }
 
+fn bad_data(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
 /// Reads a sketch set from `path`.
+///
+/// The header is fully validated before any data-sized allocation: the
+/// dimensions must be representable (`b ∈ {1,2,4,8}`, supported `L`,
+/// checked size arithmetic) and the file length must equal the declared
+/// payload exactly — truncated *and* oversized files are rejected, so a
+/// corrupt header can neither over-allocate nor silently misparse.
 pub fn load_sketches(path: &Path) -> Result<SketchSet> {
-    let mut r = BufReader::new(File::open(path)?);
+    let file = File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
     let mut buf = [0u8; 8];
     let mut read_u64 = |r: &mut BufReader<File>| -> Result<u64> {
         r.read_exact(&mut buf)?;
@@ -38,16 +50,35 @@ pub fn load_sketches(path: &Path) -> Result<SketchSet> {
     };
     let magic = read_u64(&mut r)?;
     if magic != MAGIC {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("bad magic {magic:#x}: not a bst sketch file"),
-        ));
+        return Err(bad_data(format!("bad magic {magic:#x}: not a bst sketch file")));
     }
-    let b = read_u64(&mut r)? as usize;
-    let l = read_u64(&mut r)? as usize;
-    let n = read_u64(&mut r)? as usize;
+    let b64 = read_u64(&mut r)?;
+    let l64 = read_u64(&mut r)?;
+    let n64 = read_u64(&mut r)?;
+    if !matches!(b64, 1 | 2 | 4 | 8) {
+        return Err(bad_data(format!("invalid bits-per-char b={b64}")));
+    }
+    let b = b64 as usize;
+    let l = usize::try_from(l64).map_err(|_| bad_data(format!("L={l64} out of range")))?;
+    if l < 1 || !l.checked_mul(b).is_some_and(|x| x <= 64 * 64) {
+        return Err(bad_data(format!("unsupported sketch length L={l} (b={b})")));
+    }
+    let n = usize::try_from(n64).map_err(|_| bad_data(format!("n={n64} out of range")))?;
     let wps = (l * b).div_ceil(64);
-    let mut bytes = vec![0u8; n * wps * 8];
+    let payload = n
+        .checked_mul(wps)
+        .and_then(|w| w.checked_mul(8))
+        .ok_or_else(|| bad_data(format!("n={n} overflows the payload size")))?;
+    let declared = 32u64
+        .checked_add(payload as u64)
+        .ok_or_else(|| bad_data("declared size overflows".into()))?;
+    if file_len != declared {
+        return Err(bad_data(format!(
+            "file is {file_len} bytes but the header declares {declared} \
+             (n={n}, wps={wps}): truncated or trailing garbage"
+        )));
+    }
+    let mut bytes = vec![0u8; payload];
     r.read_exact(&mut bytes)?;
     let words: Vec<u64> = bytes
         .chunks_exact(8)
@@ -86,6 +117,58 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("garbage.bin");
         std::fs::write(&path, [0u8; 64]).unwrap();
+        assert!(load_sketches(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    fn saved_sample(name: &str) -> (std::path::PathBuf, Vec<u8>) {
+        let rows: Vec<Vec<u8>> = (0..10).map(|i| vec![(i % 4) as u8; 8]).collect();
+        let set = SketchSet::from_rows(2, 8, &rows);
+        let dir = std::env::temp_dir().join("bst_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        save_sketches(&set, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        (path, bytes)
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let (path, bytes) = saved_sample("trunc.bin");
+        for cut in [0usize, 7, 31, 33, bytes.len() - 1] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(load_sketches(&path).is_err(), "cut={cut}");
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_oversized_file() {
+        let (path, mut bytes) = saved_sample("oversize.bin");
+        bytes.extend_from_slice(&[0u8; 16]); // trailing garbage
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_sketches(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_invalid_header_fields() {
+        let (path, good) = saved_sample("header.bin");
+        // b = 3 (not in {1,2,4,8})
+        let mut bad = good.clone();
+        bad[8] = 3;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(load_sketches(&path).is_err());
+        // l = 0
+        let mut bad = good.clone();
+        bad[16..24].copy_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&path, &bad).unwrap();
+        assert!(load_sketches(&path).is_err());
+        // n so large that n*wps*8 overflows usize — must error cleanly,
+        // not allocate
+        let mut bad = good.clone();
+        bad[24..32].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bad).unwrap();
         assert!(load_sketches(&path).is_err());
         std::fs::remove_file(&path).unwrap();
     }

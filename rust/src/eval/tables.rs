@@ -8,6 +8,7 @@ use crate::index::{
 };
 use crate::index::sih::CappedResult;
 use crate::query::{CountOnly, QueryCtx, StatsObserver};
+use crate::store::persisted_bytes;
 use crate::trie::bst::BstConfig;
 use crate::trie::SketchTrie;
 use crate::util::pool::par_chunks;
@@ -126,23 +127,25 @@ pub fn table3(opts: &EvalOpts, datasets: &[Dataset]) -> String {
         let mut header = vec!["trie".into()];
         header.extend(TAUS.iter().map(|tau| format!("tau={tau} (ms)")));
         header.push("space (MiB)".into());
+        header.push("disk (MiB)".into());
         t.header(header);
 
         let search_bst = |q: &[u8], tau: usize| bst.search(q, tau);
         let search_louds = |q: &[u8], tau: usize| louds.search(q, tau);
         let search_fst = |q: &[u8], tau: usize| fst.search(q, tau);
-        let methods: Vec<(&str, &dyn Fn(&[u8], usize) -> Vec<u32>, usize)> = vec![
-            ("bST", &search_bst, bst.heap_bytes()),
-            ("LOUDS", &search_louds, louds.heap_bytes()),
-            ("FST", &search_fst, fst.heap_bytes()),
+        let methods: Vec<(&str, &dyn Fn(&[u8], usize) -> Vec<u32>, usize, usize)> = vec![
+            ("bST", &search_bst, bst.heap_bytes(), persisted_bytes(&bst)),
+            ("LOUDS", &search_louds, louds.heap_bytes(), persisted_bytes(&louds)),
+            ("FST", &search_fst, fst.heap_bytes(), persisted_bytes(&fst)),
         ];
-        for (name, search, bytes) in methods {
+        for (name, search, bytes, disk) in methods {
             let mut row = vec![name.to_string()];
             for &tau in &TAUS {
                 let (mean_ms, _) = time_queries(&w.queries, n_q, |q| search(q, tau));
                 row.push(ms(mean_ms));
             }
             row.push(mib_str(bytes));
+            row.push(mib_str(disk));
             t.row(row);
         }
         out.push_str(&t.render());
@@ -157,7 +160,7 @@ pub const MS: [usize; 3] = [2, 3, 4];
 /// Table IV: space usage of the similarity-search methods.
 pub fn table4(opts: &EvalOpts, datasets: &[Dataset]) -> String {
     let cap_bytes = (opts.mem_cap_gib * 1024.0 * 1024.0 * 1024.0) as u128;
-    let mut t = Table::new("Table IV — space usage (MiB)");
+    let mut t = Table::new("Table IV — space usage (MiB, heap/disk)");
     let mut header = vec!["method".into()];
     header.extend(datasets.iter().map(|d| d.name().to_string()));
     t.header(header);
@@ -178,21 +181,31 @@ pub fn table4(opts: &EvalOpts, datasets: &[Dataset]) -> String {
         cells.push(Vec::new());
     }
 
+    // Both costs of each method: resident heap and serialized snapshot
+    // (the cold-start artifact a production deployment ships).
+    fn heap_disk(heap: usize, disk: usize) -> String {
+        format!("{}/{}", mib_str(heap), mib_str(disk))
+    }
     for &ds in datasets {
         let w = load_workload(ds, opts);
         let set = &w.sketches;
-        cells[0].push(mib_str(SingleBst::build(set, BstConfig::default()).heap_bytes()));
-        cells[1].push(mib_str(SearchIndex::heap_bytes(&MultiBst::build(set, 2))));
-        cells[2].push(mib_str(SearchIndex::heap_bytes(&Sih::build(set))));
-        cells[3].push(mib_str(SearchIndex::heap_bytes(&Mih::build(set, 2))));
-        cells[4].push(mib_str(SearchIndex::heap_bytes(&Mih::build(set, 3))));
+        let si = SingleBst::build(set, BstConfig::default());
+        cells[0].push(heap_disk(si.heap_bytes(), persisted_bytes(&si)));
+        let mi = MultiBst::build(set, 2);
+        cells[1].push(heap_disk(SearchIndex::heap_bytes(&mi), persisted_bytes(&mi)));
+        let sih = Sih::build(set);
+        cells[2].push(heap_disk(SearchIndex::heap_bytes(&sih), persisted_bytes(&sih)));
+        let mih2 = Mih::build(set, 2);
+        cells[3].push(heap_disk(SearchIndex::heap_bytes(&mih2), persisted_bytes(&mih2)));
+        let mih3 = Mih::build(set, 3);
+        cells[4].push(heap_disk(SearchIndex::heap_bytes(&mih3), persisted_bytes(&mih3)));
         for (slot, tau_max) in [(5usize, 2usize), (6, 4), (7, 5)] {
             let est = HmSearch::estimate_postings(set, tau_max) * 8; // ≥8 B/posting
             if est > cap_bytes {
                 cells[slot].push(format!("OOM(>{:.0}GiB est)", est as f64 / (1u64 << 30) as f64));
             } else {
-                cells[slot]
-                    .push(mib_str(SearchIndex::heap_bytes(&HmSearch::build(set, tau_max))));
+                let hm = HmSearch::build(set, tau_max);
+                cells[slot].push(heap_disk(SearchIndex::heap_bytes(&hm), persisted_bytes(&hm)));
             }
         }
     }

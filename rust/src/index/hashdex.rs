@@ -9,6 +9,7 @@
 //! (0 = empty), two-pass construction (count, then fill) so postings of a
 //! key are contiguous in one arena.
 
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
 use crate::util::rng::mix64;
 use crate::util::HeapSize;
 
@@ -114,6 +115,61 @@ impl HashIndex {
     /// Total stored postings.
     pub fn n_postings(&self) -> usize {
         self.arena.len()
+    }
+
+    /// Largest stored posting id (`None` when empty) — snapshot loaders
+    /// use this to bound ids against the database size they serve.
+    pub fn max_posting(&self) -> Option<u32> {
+        self.arena.iter().copied().max()
+    }
+}
+
+impl Persist for HashIndex {
+    fn write_into(&self, w: &mut ByteWriter) {
+        w.put_u64s(&self.slots);
+        w.put_u32s(&self.offsets);
+        w.put_u32s(&self.lens);
+        w.put_u32s(&self.arena);
+        w.put_usize(self.n_keys);
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        let slots = r.get_u64s()?;
+        let offsets = r.get_u32s()?;
+        let lens = r.get_u32s()?;
+        let arena = r.get_u32s()?;
+        let n_keys = r.get_usize()?;
+        let cap = slots.len();
+        ensure(cap >= 1 && cap.is_power_of_two(), || {
+            format!("HashIndex: capacity {cap} not a power of two")
+        })?;
+        ensure(offsets.len() == cap + 1 && lens.len() == cap, || {
+            format!("HashIndex: table arrays disagree with capacity {cap}")
+        })?;
+        // offsets must be the exact prefix sums of lens over the arena —
+        // in u64 so no wrapped chain can sneak a postings range past the
+        // arena bounds (get() slices without re-checking).
+        ensure(offsets[0] == 0 && offsets[cap] as usize == arena.len(), || {
+            "HashIndex: offsets do not cover the arena".to_string()
+        })?;
+        for s in 0..cap {
+            ensure(
+                offsets[s] as u64 + lens[s] as u64 == offsets[s + 1] as u64,
+                || format!("HashIndex: offsets[{s}] inconsistent with lens"),
+            )?;
+        }
+        let occupied = slots.iter().filter(|&&s| s != EMPTY).count();
+        ensure(occupied == n_keys, || {
+            format!("HashIndex: {occupied} occupied slots, stored n_keys={n_keys}")
+        })?;
+        // At least one EMPTY slot, or probe loops on absent keys never end.
+        ensure(n_keys < cap, || "HashIndex: table has no empty slot".to_string())?;
+        for s in 0..cap {
+            ensure(slots[s] != EMPTY || lens[s] == 0, || {
+                format!("HashIndex: empty slot {s} has postings")
+            })?;
+        }
+        Ok(HashIndex { slots, offsets, lens, arena, n_keys })
     }
 }
 

@@ -27,6 +27,7 @@ use super::signature::pack_key;
 use super::SearchIndex;
 use crate::query::{Collector, QueryCtx};
 use crate::sketch::{SketchSet, VerticalSet};
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
 use crate::util::rng::mix64;
 use crate::util::HeapSize;
 use std::sync::Mutex;
@@ -189,6 +190,81 @@ impl HmSearch {
 
     pub fn m(&self) -> usize {
         self.blocks.len()
+    }
+}
+
+/// Persistence: per-block signature indexes + the verification store.
+/// The visited-epoch array is query-time-only and rebuilt on load.
+impl Persist for HmSearch {
+    fn write_into(&self, w: &mut ByteWriter) {
+        w.put_usize(self.b);
+        w.put_usize(self.tau_max);
+        w.put_usize(self.blocks.len());
+        for blk in &self.blocks {
+            w.put_usize(blk.lo);
+            w.put_usize(blk.hi);
+            w.put_u8(match blk.scheme {
+                Scheme::Substitution => 0,
+                Scheme::Deletion => 1,
+            });
+            blk.index.write_into(w);
+        }
+        self.vertical.write_into(w);
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        let b = r.get_usize()?;
+        let tau_max = r.get_usize()?;
+        let m = r.get_usize()?;
+        // tau_max feeds m_for_tau's `tau_max + 3` — bound it first.
+        ensure(matches!(b, 1 | 2 | 4 | 8) && tau_max <= 4096 && m >= 1 && m <= 4096, || {
+            format!("HmSearch: bad shape b={b} tau_max={tau_max} m={m}")
+        })?;
+        let expect_scheme = if b <= 2 { Scheme::Substitution } else { Scheme::Deletion };
+        let mut blocks = Vec::with_capacity(m);
+        for _ in 0..m {
+            let lo = r.get_usize()?;
+            let hi = r.get_usize()?;
+            let scheme = match r.get_u8()? {
+                0 => Scheme::Substitution,
+                1 => Scheme::Deletion,
+                t => return Err(StoreError::Corrupt(format!("HmSearch: unknown scheme {t}"))),
+            };
+            ensure(scheme == expect_scheme, || {
+                "HmSearch: signature scheme disagrees with alphabet width".to_string()
+            })?;
+            let index = HashIndex::read_from(r)?;
+            blocks.push(Block { index, lo, hi, scheme });
+        }
+        let vertical = VerticalSet::read_from(r)?;
+        let l = vertical.l();
+        ensure(vertical.b() == b, || "HmSearch: verification store b mismatch".to_string())?;
+        ensure(m == Self::m_for_tau(tau_max).min(l), || {
+            format!("HmSearch: {m} blocks disagree with tau_max={tau_max}, L={l}")
+        })?;
+        let mut expect = 0usize;
+        for blk in &blocks {
+            ensure(blk.lo == expect && blk.hi > blk.lo, || {
+                format!("HmSearch: block range {}..{} does not tile", blk.lo, blk.hi)
+            })?;
+            expect = blk.hi;
+        }
+        ensure(expect == l, || format!("HmSearch: blocks cover {expect} of L={l}"))?;
+        let n = vertical.n();
+        for (j, blk) in blocks.iter().enumerate() {
+            // Emitted ids index the epoch array and the verification
+            // store — bound them at load, not at query time.
+            ensure(blk.index.max_posting().map_or(true, |m| (m as usize) < n), || {
+                format!("HmSearch: block {j} emits ids beyond n={n}")
+            })?;
+        }
+        Ok(HmSearch {
+            blocks,
+            b,
+            tau_max,
+            vertical,
+            visited: Mutex::new((vec![0u32; n], 0)),
+        })
     }
 }
 

@@ -5,6 +5,7 @@
 use super::SearchIndex;
 use crate::query::{Collector, QueryCtx};
 use crate::sketch::{SketchSet, VerticalSet};
+use crate::store::{ByteReader, ByteWriter, Persist, StoreError};
 use crate::util::HeapSize;
 
 /// Brute-force scanner in vertical format.
@@ -21,6 +22,16 @@ impl LinearScan {
     /// hamming-scan runtime path).
     pub fn vertical(&self) -> &VerticalSet {
         &self.vertical
+    }
+}
+
+impl Persist for LinearScan {
+    fn write_into(&self, w: &mut ByteWriter) {
+        self.vertical.write_into(w);
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        Ok(LinearScan { vertical: VerticalSet::read_from(r)? })
     }
 }
 

@@ -13,6 +13,7 @@ use super::hashdex::HashIndex;
 use super::multi::{BlockFilter, BlockScratch, MultiIndex};
 use super::signature::{for_each_signature, pack_key};
 use crate::sketch::SketchSet;
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
 use crate::util::rng::mix64;
 use crate::util::HeapSize;
 
@@ -97,6 +98,43 @@ impl BlockFilter for HashBlockFilter {
 
     fn filter_name() -> &'static str {
         "MIH"
+    }
+
+    fn block_len(&self) -> usize {
+        self.l
+    }
+
+    fn max_id(&self) -> Option<u32> {
+        self.index.max_posting()
+    }
+
+    fn alphabet_bits(&self) -> usize {
+        self.b
+    }
+}
+
+impl Persist for HashBlockFilter {
+    fn write_into(&self, w: &mut ByteWriter) {
+        w.put_usize(self.b);
+        w.put_usize(self.l);
+        w.put_u8(self.exact_keys as u8);
+        self.index.write_into(w);
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        let b = r.get_usize()?;
+        let l = r.get_usize()?;
+        let exact_keys = r.get_u8()? != 0;
+        let index = HashIndex::read_from(r)?;
+        // bound L before the l*b product below (debug-overflow safety).
+        ensure((1..=8).contains(&b) && l >= 1 && l <= 64 * 64, || {
+            format!("MIH block: bad dims b={b} L={l}")
+        })?;
+        // The key scheme is a pure function of the block shape.
+        ensure(exact_keys == (l * b <= 64), || {
+            "MIH block: key scheme disagrees with block shape".to_string()
+        })?;
+        Ok(HashBlockFilter { index, b, l, exact_keys })
     }
 }
 

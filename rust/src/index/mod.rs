@@ -77,9 +77,27 @@ pub trait SearchIndex {
     /// for an unbounded nearest-neighbor query.
     fn top_k(&self, q: &[u8], k: usize, tau: usize) -> Vec<(u32, usize)> {
         let mut ctx = QueryCtx::new();
-        let mut coll = TopK::new(k, tau);
-        self.run(q, &mut ctx, &mut coll);
-        coll.finish()
+        let mut out = Vec::new();
+        self.top_k_into(q, k, tau, &mut ctx, &mut out);
+        out
+    }
+
+    /// Reusable-scratch form of [`SearchIndex::top_k`]: the adaptive heap
+    /// is parked in `ctx` between queries and `out` is cleared and
+    /// refilled, so steady-state top-k traffic over a warm ctx performs
+    /// no heap allocation (enforced by `tests/query_alloc.rs`).
+    fn top_k_into(
+        &self,
+        q: &[u8],
+        k: usize,
+        tau: usize,
+        ctx: &mut QueryCtx,
+        out: &mut Vec<(u32, usize)>,
+    ) {
+        let mut coll = TopK::with_heap(k, tau, ctx.take_topk_heap());
+        self.run(q, ctx, &mut coll);
+        coll.drain_into(out);
+        ctx.put_topk_heap(coll.into_heap());
     }
 
     /// Heap bytes owned by the index (paper Tables III/IV).

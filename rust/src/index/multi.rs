@@ -24,6 +24,7 @@ use super::blocks::{block_ranges, block_thresholds};
 use super::SearchIndex;
 use crate::query::{CollectIds, Collector, QueryCtx};
 use crate::sketch::{SketchSet, VerticalSet};
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
 use crate::trie::bst::{BstConfig, BstTrie};
 use crate::trie::{SketchTrie, SortedSketches};
 use crate::util::HeapSize;
@@ -58,6 +59,21 @@ pub trait BlockFilter: Send + Sync {
     fn heap_bytes(&self) -> usize;
 
     fn filter_name() -> &'static str;
+
+    /// Block substring length this filter was built over — snapshot
+    /// validation cross-checks it against the block partition so a
+    /// mismatched filter is rejected at load, not at query time.
+    fn block_len(&self) -> usize;
+
+    /// Largest sketch id this filter can emit (`None` when empty) —
+    /// snapshot validation bounds it by the database size (emitted ids
+    /// index the epoch array and the verification store).
+    fn max_id(&self) -> Option<u32>;
+
+    /// Alphabet bits `b` the filter was built over — snapshot validation
+    /// cross-checks it against the verification store so a mismatched
+    /// pairing cannot produce silently wrong Hamming verdicts.
+    fn alphabet_bits(&self) -> usize;
 }
 
 /// Query-time candidate statistics (exposed for the eval harness).
@@ -149,6 +165,16 @@ impl<F: BlockFilter> MultiIndex<F> {
         self.m
     }
 
+    /// Database size (rows in the verification store).
+    pub fn n(&self) -> usize {
+        self.vertical.n()
+    }
+
+    /// Sketch length `L`.
+    pub fn l(&self) -> usize {
+        self.vertical.l()
+    }
+
     /// Filter + verify, streaming solutions into the collector. `tau` is
     /// the threshold the block assignment plans for (the collector's tau
     /// at entry); verification prunes against the live `c.tau()`.
@@ -188,6 +214,95 @@ impl<F: BlockFilter> MultiIndex<F> {
         self.run_filtered(q, tau, &mut coll, &mut stats);
         stats.solutions = out.len();
         (out, stats)
+    }
+}
+
+/// Persistence: block partition + per-block filters + the verification
+/// store. The pooled query state (epoch array, scratch) is construction-
+/// only and rebuilt fresh on load.
+impl<F: BlockFilter + Persist> Persist for MultiIndex<F> {
+    fn write_into(&self, w: &mut ByteWriter) {
+        w.put_usize(self.m);
+        for &(lo, hi) in &self.ranges {
+            w.put_usize(lo);
+            w.put_usize(hi);
+        }
+        for f in &self.filters {
+            f.write_into(w);
+        }
+        self.vertical.write_into(w);
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        let m = r.get_usize()?;
+        ensure((1..=4096).contains(&m), || format!("multi-index: bad m {m}"))?;
+        let mut ranges = Vec::with_capacity(m);
+        for _ in 0..m {
+            let lo = r.get_usize()?;
+            let hi = r.get_usize()?;
+            ranges.push((lo, hi));
+        }
+        let mut filters = Vec::with_capacity(m);
+        for _ in 0..m {
+            filters.push(F::read_from(r)?);
+        }
+        let vertical = VerticalSet::read_from(r)?;
+        // Ranges must tile [0, L) in order.
+        let mut expect = 0usize;
+        for &(lo, hi) in &ranges {
+            ensure(lo == expect && hi > lo, || {
+                format!("multi-index: block range {lo}..{hi} does not tile")
+            })?;
+            expect = hi;
+        }
+        ensure(expect == vertical.l(), || {
+            format!("multi-index: blocks cover {expect} of L={}", vertical.l())
+        })?;
+        let n = vertical.n();
+        for (j, (&(lo, hi), f)) in ranges.iter().zip(&filters).enumerate() {
+            ensure(f.block_len() == hi - lo, || {
+                format!(
+                    "multi-index: filter {j} is over {}-char blocks, range is {lo}..{hi}",
+                    f.block_len()
+                )
+            })?;
+            ensure(f.max_id().map_or(true, |m| (m as usize) < n), || {
+                format!("multi-index: filter {j} emits ids beyond n={n}")
+            })?;
+            ensure(f.alphabet_bits() == vertical.b(), || {
+                format!(
+                    "multi-index: filter {j} alphabet b={} != verification store b={}",
+                    f.alphabet_bits(),
+                    vertical.b()
+                )
+            })?;
+        }
+        Ok(MultiIndex {
+            m,
+            ranges,
+            filters,
+            vertical,
+            state: Mutex::new(QueryState {
+                visited: Visited::new(n),
+                scratch: BlockScratch {
+                    ctx: QueryCtx::new(),
+                    hits: Vec::new(),
+                    row: Vec::new(),
+                },
+                q_planes: Vec::new(),
+            }),
+        })
+    }
+}
+
+/// bST block filters persist as their trie.
+impl Persist for BstBlockFilter {
+    fn write_into(&self, w: &mut ByteWriter) {
+        self.trie.write_into(w);
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        Ok(BstBlockFilter { trie: BstTrie::read_from(r)? })
     }
 }
 
@@ -231,7 +346,7 @@ impl BlockFilter for BstBlockFilter {
         scratch: &mut BlockScratch,
         emit: &mut dyn FnMut(u32),
     ) {
-        let BlockScratch { ctx, hits } = scratch;
+        let BlockScratch { ctx, hits, .. } = scratch;
         hits.clear();
         let mut coll = CollectIds::new(tau_j, hits);
         self.trie.run(q_block, ctx, &mut coll);
@@ -246,6 +361,18 @@ impl BlockFilter for BstBlockFilter {
 
     fn filter_name() -> &'static str {
         "MI-bST"
+    }
+
+    fn block_len(&self) -> usize {
+        self.trie.sketch_len()
+    }
+
+    fn max_id(&self) -> Option<u32> {
+        self.trie.max_posting()
+    }
+
+    fn alphabet_bits(&self) -> usize {
+        self.trie.alphabet_bits()
     }
 }
 

@@ -16,6 +16,7 @@ use super::signature::{for_each_signature, pack_key};
 use super::SearchIndex;
 use crate::query::{CollectIds, Collector, QueryCtx};
 use crate::sketch::{SketchSet, VerticalSet};
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
 use crate::util::rng::mix64;
 use crate::util::HeapSize;
 use std::time::{Duration, Instant};
@@ -201,6 +202,56 @@ impl Sih {
             row[pos] = orig;
         }
         true
+    }
+}
+
+impl Persist for Sih {
+    fn write_into(&self, w: &mut ByteWriter) {
+        w.put_usize(self.b);
+        w.put_usize(self.l);
+        w.put_u8(self.exact_keys as u8);
+        self.index.write_into(w);
+        match &self.vertical {
+            Some(v) => {
+                w.put_u8(1);
+                v.write_into(w);
+            }
+            None => w.put_u8(0),
+        }
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        let b = r.get_usize()?;
+        let l = r.get_usize()?;
+        let exact_keys = r.get_u8()? != 0;
+        let index = HashIndex::read_from(r)?;
+        let vertical = if r.get_u8()? != 0 {
+            Some(VerticalSet::read_from(r)?)
+        } else {
+            None
+        };
+        // bound L before the l*b products below (debug-overflow safety).
+        ensure(matches!(b, 1 | 2 | 4 | 8) && l >= 1 && l <= 64 * 64, || {
+            format!("SIH: bad dims b={b} L={l}")
+        })?;
+        ensure(exact_keys == (l * b <= 64), || {
+            "SIH: key scheme disagrees with sketch shape".to_string()
+        })?;
+        // Mixed keys collide; the verification store is mandatory there.
+        ensure(exact_keys == vertical.is_none(), || {
+            "SIH: verification store presence disagrees with key scheme".to_string()
+        })?;
+        if let Some(v) = &vertical {
+            ensure(v.b() == b && v.l() == l, || {
+                "SIH: verification store shape mismatch".to_string()
+            })?;
+            // Mixed-key hits are verified by indexing the store — bound
+            // the ids at load so a crafted table cannot read out of range.
+            ensure(index.max_posting().map_or(true, |m| (m as usize) < v.n()), || {
+                format!("SIH: postings exceed the {}-row verification store", v.n())
+            })?;
+        }
+        Ok(Sih { index, b, l, exact_keys, vertical })
     }
 }
 

@@ -8,6 +8,7 @@
 use super::SearchIndex;
 use crate::query::{Collector, QueryCtx};
 use crate::sketch::SketchSet;
+use crate::store::{ByteReader, ByteWriter, Persist, StoreError};
 use crate::trie::bst::{BstConfig, BstTrie};
 use crate::trie::fst::FstTrie;
 use crate::trie::louds::LoudsTrie;
@@ -42,6 +43,27 @@ impl<T: SketchTrie> SingleIndex<T> {
         &self.trie
     }
 }
+
+/// A single-index snapshot is just its trie; the label is a compile-time
+/// constant of the concrete alias, so each alias gets its own impl.
+macro_rules! impl_persist_single {
+    ($alias:ty, $trie:ty, $label:literal) => {
+        impl Persist for $alias {
+            fn write_into(&self, w: &mut ByteWriter) {
+                self.trie.write_into(w);
+            }
+
+            fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+                Ok(SingleIndex { trie: <$trie>::read_from(r)?, label: $label })
+            }
+        }
+    };
+}
+
+impl_persist_single!(SingleBst, BstTrie, "SI-bST");
+impl_persist_single!(SingleLouds, LoudsTrie, "SI-LOUDS");
+impl_persist_single!(SingleFst, FstTrie, "SI-FST");
+impl_persist_single!(SinglePointer, PointerTrie, "SI-PT");
 
 /// `SI-bST`: single-index over the b-bit sketch trie.
 pub type SingleBst = SingleIndex<BstTrie>;

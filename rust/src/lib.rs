@@ -22,6 +22,9 @@
 //!   HmSearch, linear scan.
 //! * [`data`] — synthetic dataset generators standing in for the paper's
 //!   Review / CP / SIFT / GIST corpora.
+//! * [`store`] — index persistence: the versioned sectioned snapshot
+//!   container and the [`store::Persist`] trait every structure
+//!   implements, enabling build-once / serve-from-snapshot cold starts.
 //! * [`runtime`] — PJRT (XLA) runtime: loads AOT-lowered JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) for the sketching pipeline and the
 //!   XLA Hamming-scan baseline. Python never runs on the request path.
@@ -58,6 +61,7 @@ pub mod index;
 pub mod query;
 pub mod runtime;
 pub mod sketch;
+pub mod store;
 pub mod trie;
 pub mod util;
 

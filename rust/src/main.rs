@@ -6,8 +6,11 @@
 //!          [--seed S] [--threads T]
 //! bst sketch --dataset D [--scale F] [--out FILE] [--xla]   # ingestion
 //! bst build  --in FILE [--index si-bst|mi-bst|...]          # index stats
-//! bst query  --in FILE --q 0,1,2,... [--tau T] [--topk K] [--stats]
-//! bst serve  --dataset D [--addr A] [--shards S] [--scale F]
+//!            [--save SNAP --shards S]                       # engine snapshot
+//! bst query  --in FILE | --index SNAP
+//!            --q 0,1,2,... [--tau T] [--topk K] [--stats]
+//! bst serve  --dataset D | --index SNAP
+//!            [--addr A] [--shards S] [--scale F]
 //! bst info                                                  # build info
 //! ```
 
@@ -54,12 +57,16 @@ USAGE:
                       --dataset D [--scale F] [--out FILE] [--xla]
   bst build           build an index over saved sketches, print stats
                       --in FILE [--index si-bst|mi-bst|sih|mih|hmsearch]
-  bst query           one-off query against saved sketches
-                      --in FILE --q c0,c1,... [--tau T]
+                      [--save SNAP] (write an engine snapshot; si-bst|mi-bst)
+                      [--shards N] (snapshot shard count, default 1)
+  bst query           one-off query against saved sketches or a snapshot
+                      --in FILE | --index SNAP (serve-from-snapshot)
+                      --q c0,c1,... [--tau T]
                       [--topk K] (k nearest)  [--stats] (traversal stats)
   bst serve           start the sharded TCP query service
-                      --dataset D [--scale F] [--addr A] [--shards N]
-                      [--index si-bst|mi-bst] [--max-batch N] [--max-delay-us U]
+                      --dataset D [--scale F] | --index SNAP (cold start)
+                      [--addr A] [--shards N]
+                      [--index-kind si-bst|mi-bst] [--max-batch N] [--max-delay-us U]
   bst info            print build/runtime information
 ";
 
@@ -206,6 +213,41 @@ fn load_input(args: &Args) -> Option<bst::SketchSet> {
 fn cmd_build(args: &Args) -> i32 {
     let Some(set) = load_input(args) else { return 1 };
     let kind = args.get_or("index", "si-bst");
+
+    // --save SNAP: build a sharded engine and write a serve-from-snapshot
+    // container (loadable by `bst query/serve --index SNAP` and the
+    // server's `reload` op).
+    if let Some(save_path) = args.get("save") {
+        let engine_kind = match kind {
+            "si-bst" => ShardIndexKind::Bst(BstConfig::default()),
+            "mi-bst" => ShardIndexKind::MultiBst(args.get_usize("m", 2)),
+            other => {
+                eprintln!("--save supports --index si-bst|mi-bst, got '{other}'");
+                return 2;
+            }
+        };
+        let shards = args.get_usize("shards", 1);
+        let t = bst::util::timer::Timer::start();
+        let engine = Engine::build(&set, shards, &engine_kind);
+        let build_ms = t.elapsed_ms();
+        if let Err(e) = engine.save(Path::new(save_path)) {
+            eprintln!("saving snapshot {save_path}: {e}");
+            return 1;
+        }
+        let disk = std::fs::metadata(save_path).map(|m| m.len()).unwrap_or(0);
+        println!(
+            "snapshot={save_path} index={kind} n={} L={} b={} shards={} \
+             build_ms={build_ms:.0} heap_mib={:.1} disk_mib={:.1}",
+            set.n(),
+            set.l(),
+            set.b(),
+            engine.n_shards(),
+            engine.heap_bytes() as f64 / (1024.0 * 1024.0),
+            disk as f64 / (1024.0 * 1024.0),
+        );
+        return 0;
+    }
+
     let t = bst::util::timer::Timer::start();
     let (name, bytes, extra): (String, usize, String) = match kind {
         "si-bst" => {
@@ -259,7 +301,6 @@ fn cmd_build(args: &Args) -> i32 {
 }
 
 fn cmd_query(args: &Args) -> i32 {
-    let Some(set) = load_input(args) else { return 1 };
     let Some(qspec) = args.get("q") else {
         eprintln!("--q c0,c1,... required");
         return 2;
@@ -268,6 +309,14 @@ fn cmd_query(args: &Args) -> i32 {
         .split(',')
         .filter_map(|c| c.trim().parse().ok())
         .collect();
+
+    // --index SNAP: serve the query from a saved engine snapshot (no
+    // sketches needed, no rebuild).
+    if let Some(snap) = args.get("index") {
+        return query_snapshot(args, snap, &q);
+    }
+
+    let Some(set) = load_input(args) else { return 1 };
     if q.len() != set.l() {
         eprintln!("query must have L={} characters", set.l());
         return 2;
@@ -321,20 +370,53 @@ fn cmd_query(args: &Args) -> i32 {
     0
 }
 
-fn cmd_serve(args: &Args) -> i32 {
-    let Some(ds) = args.get("dataset").and_then(Dataset::parse) else {
-        eprintln!("--dataset review|cp|sift|gist required");
+/// `bst query --index SNAP`: answers from a loaded engine snapshot —
+/// the cold-start path (no sketches on hand, no reconstruction).
+fn query_snapshot(args: &Args, snap: &str, q: &[u8]) -> i32 {
+    use bst::util::json::Json;
+    let engine = match Engine::load(Path::new(snap)) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("loading snapshot {snap}: {e}");
+            return 1;
+        }
+    };
+    if q.len() != engine.l() {
+        eprintln!("query must have L={} characters", engine.l());
         return 2;
-    };
-    let opts = eval_opts(args);
-    let cfg = data::GenConfig::for_dataset(ds, opts.scale, opts.seed, opts.threads);
-    eprintln!("building workload for {} (n={})...", ds.name(), cfg.n);
-    let w = data::generate_workload(ds, &cfg);
+    }
+    if let Some(spec) = args.get("topk") {
+        let Ok(k) = spec.parse::<usize>() else {
+            eprintln!("--topk must be a non-negative integer, got '{spec}'");
+            return 2;
+        };
+        let tau = args.get_usize("tau", engine.l());
+        let t = bst::util::timer::Timer::start();
+        let hits = engine.top_k(q, k, tau);
+        let us = t.elapsed_us();
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("ids", Json::Arr(hits.iter().map(|&(id, _)| Json::Num(id as f64)).collect())),
+                ("dists", Json::Arr(hits.iter().map(|&(_, d)| Json::Num(d as f64)).collect())),
+                ("latency_us", Json::num(us)),
+            ])
+        );
+        return 0;
+    }
+    let tau = args.get_usize("tau", 2);
+    let t = bst::util::timer::Timer::start();
+    let mut hits = engine.search(q, tau);
+    let us = t.elapsed_us();
+    hits.sort();
+    println!(
+        "{}",
+        Json::obj(vec![("ids", Json::ids(&hits)), ("latency_us", Json::num(us))])
+    );
+    0
+}
 
-    let kind = match args.get_or("index", "si-bst") {
-        "mi-bst" => ShardIndexKind::MultiBst(args.get_usize("m", 2)),
-        _ => ShardIndexKind::Bst(BstConfig::default()),
-    };
+fn cmd_serve(args: &Args) -> i32 {
     let serve_cfg = ServeConfig {
         addr: args.get_or("addr", "127.0.0.1:7878").to_string(),
         shards: args.get_usize("shards", 4),
@@ -342,8 +424,63 @@ fn cmd_serve(args: &Args) -> i32 {
         max_delay_us: args.get_u64("max-delay-us", 200),
         default_tau: args.get_usize("tau", 2),
     };
-    eprintln!("building {} shards...", serve_cfg.shards);
-    let engine = Arc::new(Engine::build(&w.sketches, serve_cfg.shards, &kind));
+
+    // `--index` doubles as the historical kind selector (si-bst/mi-bst)
+    // and the snapshot path; `--index-kind` is the unambiguous spelling.
+    // Anything else must name an existing snapshot file — a typo'd kind
+    // must fail loudly here, not fall through to a default index or a
+    // confusing io error.
+    let index_arg = args.get("index");
+    let snapshot = index_arg.filter(|v| !matches!(*v, "si-bst" | "mi-bst"));
+    if let Some(snap) = snapshot {
+        if !Path::new(snap).is_file() {
+            eprintln!(
+                "--index '{snap}' is neither a known index kind (si-bst|mi-bst) \
+                 nor an existing snapshot file"
+            );
+            return 2;
+        }
+    }
+    let kind_name = args
+        .get("index-kind")
+        .or_else(|| index_arg.filter(|v| matches!(*v, "si-bst" | "mi-bst")))
+        .unwrap_or("si-bst");
+
+    let engine = if let Some(snap) = snapshot {
+        // Cold start: serve directly from the snapshot — no dataset
+        // generation, no sketching, no index construction.
+        let t = bst::util::timer::Timer::start();
+        match Engine::load(Path::new(snap)) {
+            Ok(e) => {
+                eprintln!(
+                    "loaded snapshot {snap} in {:.0} ms (n={}, shards={})",
+                    t.elapsed_ms(),
+                    e.n(),
+                    e.n_shards()
+                );
+                Arc::new(e)
+            }
+            Err(e) => {
+                eprintln!("loading snapshot {snap}: {e}");
+                return 1;
+            }
+        }
+    } else {
+        let Some(ds) = args.get("dataset").and_then(Dataset::parse) else {
+            eprintln!("--dataset review|cp|sift|gist (or --index SNAP) required");
+            return 2;
+        };
+        let opts = eval_opts(args);
+        let cfg = data::GenConfig::for_dataset(ds, opts.scale, opts.seed, opts.threads);
+        eprintln!("building workload for {} (n={})...", ds.name(), cfg.n);
+        let w = data::generate_workload(ds, &cfg);
+        let kind = match kind_name {
+            "mi-bst" => ShardIndexKind::MultiBst(args.get_usize("m", 2)),
+            _ => ShardIndexKind::Bst(BstConfig::default()),
+        };
+        eprintln!("building {} shards...", serve_cfg.shards);
+        Arc::new(Engine::build(&w.sketches, serve_cfg.shards, &kind))
+    };
     eprintln!(
         "engine ready: n={} shards={} index_mib={:.1}",
         engine.n(),

@@ -140,11 +140,38 @@ impl TopK {
         TopK { k, tau0: tau, heap: BinaryHeap::with_capacity(k.min(1024) + 1) }
     }
 
+    /// Like [`TopK::new`] but recycling a heap (typically parked in
+    /// [`super::QueryCtx`] between queries), so repeated top-k queries
+    /// are allocation-free after warm-up. The heap is cleared; its
+    /// capacity is kept.
+    pub fn with_heap(k: usize, tau: usize, mut heap: BinaryHeap<(usize, u32)>) -> Self {
+        heap.clear();
+        TopK { k, tau0: tau, heap }
+    }
+
     /// Results sorted by `(dist, id)`, as `(id, dist)` pairs.
-    pub fn finish(self) -> Vec<(u32, usize)> {
-        let mut v = self.heap.into_vec();
-        v.sort_unstable();
-        v.into_iter().map(|(d, id)| (id, d)).collect()
+    pub fn finish(mut self) -> Vec<(u32, usize)> {
+        let mut out = Vec::new();
+        self.drain_into(&mut out);
+        out
+    }
+
+    /// Drains the results into `out` (cleared first), sorted by
+    /// `(dist, id)`, leaving the heap empty but with its capacity intact
+    /// — recover it with [`TopK::into_heap`] for reuse.
+    pub fn drain_into(&mut self, out: &mut Vec<(u32, usize)>) {
+        out.clear();
+        out.reserve(self.heap.len());
+        // max-heap pops worst-first; reverse for ascending (dist, id).
+        while let Some((d, id)) = self.heap.pop() {
+            out.push((id, d));
+        }
+        out.reverse();
+    }
+
+    /// Recovers the backing heap for reuse across queries.
+    pub fn into_heap(self) -> BinaryHeap<(usize, u32)> {
+        self.heap
     }
 
     pub fn len(&self) -> usize {

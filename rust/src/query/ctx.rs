@@ -20,11 +20,33 @@ pub struct QueryCtx {
     pub(crate) kids: Vec<(u32, u8)>,
     /// Current segment width (`1 << b` of the structure being queried).
     kid_stride: usize,
+    /// Parked top-k heap, recycled across nearest-neighbor queries (the
+    /// `TopK` collector borrows it via take/put because the collector and
+    /// the ctx are both live during a traversal).
+    topk_heap: std::collections::BinaryHeap<(usize, u32)>,
 }
 
 impl QueryCtx {
     pub fn new() -> Self {
-        QueryCtx { q_planes: Vec::new(), kids: Vec::new(), kid_stride: 0 }
+        QueryCtx {
+            q_planes: Vec::new(),
+            kids: Vec::new(),
+            kid_stride: 0,
+            topk_heap: std::collections::BinaryHeap::new(),
+        }
+    }
+
+    /// Takes the parked top-k heap (empty or warm). Pair with
+    /// [`QueryCtx::put_topk_heap`] after the query so the capacity is
+    /// reused — see `SearchIndex::top_k_into`.
+    pub fn take_topk_heap(&mut self) -> std::collections::BinaryHeap<(usize, u32)> {
+        std::mem::take(&mut self.topk_heap)
+    }
+
+    /// Parks a heap (typically recovered via `TopK::into_heap`) for the
+    /// next top-k query.
+    pub fn put_topk_heap(&mut self, heap: std::collections::BinaryHeap<(usize, u32)>) {
+        self.topk_heap = heap;
     }
 
     /// Ensures the child buffer holds `levels` segments of `sigma` slots.
@@ -53,5 +75,6 @@ impl QueryCtx {
     pub fn heap_bytes(&self) -> usize {
         self.q_planes.capacity() * std::mem::size_of::<u64>()
             + self.kids.capacity() * std::mem::size_of::<(u32, u8)>()
+            + self.topk_heap.capacity() * std::mem::size_of::<(usize, u32)>()
     }
 }

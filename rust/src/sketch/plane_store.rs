@@ -12,6 +12,7 @@
 //! field(k, i) = ((w0 >> o) | (w1 << (63-o) << 1)) & mask
 //! ```
 
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
 use crate::util::HeapSize;
 
 /// `b` planes × `n` fields of `width` bits.
@@ -111,6 +112,35 @@ impl PlaneStore {
     pub fn ham_leq(&self, i: usize, q: &[u64], tau: usize) -> Option<usize> {
         let d = self.ham(i, q);
         (d <= tau).then_some(d)
+    }
+}
+
+impl Persist for PlaneStore {
+    fn write_into(&self, w: &mut ByteWriter) {
+        w.put_usize(self.b);
+        w.put_usize(self.width);
+        w.put_usize(self.n);
+        w.put_u64s(&self.words);
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        let b = r.get_usize()?;
+        let width = r.get_usize()?;
+        let n = r.get_usize()?;
+        let words = r.get_u64s()?;
+        ensure(width <= 64, || format!("PlaneStore: width {width} > 64"))?;
+        let total_bits = n
+            .checked_mul(b)
+            .and_then(|x| x.checked_mul(width))
+            .ok_or_else(|| StoreError::Corrupt("PlaneStore: dimensions overflow".into()))?;
+        ensure(words.len() == total_bits.div_ceil(64) + 2, || {
+            format!(
+                "PlaneStore: {} words for {total_bits} payload bits (+2 padding)",
+                words.len()
+            )
+        })?;
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        Ok(PlaneStore { b, width, n, words, mask })
     }
 }
 

@@ -1,5 +1,6 @@
 //! Packed horizontal sketch storage.
 
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
 use crate::util::{ceil_div, HeapSize};
 
 /// A database of `n` b-bit sketches of length `l`, packed at `b` bits per
@@ -201,6 +202,34 @@ impl SketchSet {
     }
 }
 
+impl Persist for SketchSet {
+    fn write_into(&self, w: &mut ByteWriter) {
+        w.put_usize(self.b);
+        w.put_usize(self.l);
+        w.put_usize(self.n);
+        w.put_u64s(&self.words);
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        let b = r.get_usize()?;
+        let l = r.get_usize()?;
+        let n = r.get_usize()?;
+        let words = r.get_u64s()?;
+        ensure(matches!(b, 1 | 2 | 4 | 8), || format!("SketchSet: invalid b {b}"))?;
+        ensure(l >= 1 && l.checked_mul(b).map_or(false, |x| x <= 64 * 64), || {
+            format!("SketchSet: unsupported length L={l} (b={b})")
+        })?;
+        let wps = ceil_div(l * b, 64);
+        let need = n
+            .checked_mul(wps)
+            .ok_or_else(|| StoreError::Corrupt("SketchSet: n*wps overflows".into()))?;
+        ensure(words.len() == need, || {
+            format!("SketchSet: {} words != n*wps = {need}", words.len())
+        })?;
+        Ok(SketchSet { b, l, n, wps, words })
+    }
+}
+
 impl HeapSize for SketchSet {
     fn heap_bytes(&self) -> usize {
         self.words.heap_bytes()
@@ -299,6 +328,41 @@ mod tests {
         assert_eq!(set.ham_naive(0, &[0, 1, 2, 3]), 0);
         assert_eq!(set.ham_naive(0, &[1, 1, 2, 0]), 2);
         assert_eq!(set.ham_naive(0, &[3, 3, 3, 0]), 4);
+    }
+
+    #[test]
+    fn persist_roundtrip_and_validation() {
+        for &b in &[1usize, 2, 4, 8] {
+            let l = 96 / b;
+            let (set, _) = random_set(b, l, 40, 19 + b as u64);
+            let bytes = crate::store::to_payload(&set);
+            let got: SketchSet =
+                crate::store::from_payload(&mut crate::store::ByteReader::new(&bytes)).unwrap();
+            assert_eq!(got.b(), set.b());
+            assert_eq!(got.l(), set.l());
+            assert_eq!(got.n(), set.n());
+            assert_eq!(got.raw_words(), set.raw_words());
+        }
+        // invalid b and word-count mismatch are rejected
+        let (set, _) = random_set(2, 8, 10, 23);
+        let mut w = crate::store::ByteWriter::new();
+        w.put_usize(3); // b = 3 is not a supported width
+        w.put_usize(set.l());
+        w.put_usize(set.n());
+        w.put_u64s(set.raw_words());
+        assert!(crate::store::from_payload::<SketchSet>(
+            &mut crate::store::ByteReader::new(&w.into_bytes())
+        )
+        .is_err());
+        let mut w = crate::store::ByteWriter::new();
+        w.put_usize(set.b());
+        w.put_usize(set.l());
+        w.put_usize(set.n() + 1); // declares more rows than words carry
+        w.put_u64s(set.raw_words());
+        assert!(crate::store::from_payload::<SketchSet>(
+            &mut crate::store::ByteReader::new(&w.into_bytes())
+        )
+        .is_err());
     }
 
     #[test]

@@ -11,6 +11,7 @@
 
 use super::plane_store::PlaneStore;
 use super::SketchSet;
+use crate::store::{ByteReader, ByteWriter, Persist, StoreError};
 use crate::util::HeapSize;
 
 /// A sketch database in vertical format, supporting random access by id.
@@ -115,6 +116,16 @@ impl VerticalSet {
     #[inline]
     pub fn plane_field(&self, k: usize, i: usize) -> u64 {
         self.store.field(k, i)
+    }
+}
+
+impl Persist for VerticalSet {
+    fn write_into(&self, w: &mut ByteWriter) {
+        self.store.write_into(w);
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        Ok(VerticalSet { store: PlaneStore::read_from(r)? })
     }
 }
 

@@ -1,0 +1,266 @@
+//! Checked little-endian byte cursors for section payloads.
+//!
+//! [`ByteWriter`] appends into a growable buffer; [`ByteReader`] walks a
+//! borrowed slice and returns [`StoreError::Corrupt`] on any out-of-bounds
+//! or malformed read — snapshot loading must never panic on bad input.
+//! Slice reads validate the declared element count against the bytes that
+//! actually remain *before* allocating, so a corrupted length field cannot
+//! trigger a huge allocation.
+
+use super::StoreError;
+
+/// Append-only little-endian encoder.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    #[inline]
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    #[inline]
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `usize` values travel as `u64` (the format is 64-bit regardless of
+    /// the writing host).
+    #[inline]
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_usize(v.len());
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn put_u32s(&mut self, v: &[u32]) {
+        self.put_usize(v.len());
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn put_u64s(&mut self, v: &[u64]) {
+        self.put_usize(v.len());
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn put_usizes(&mut self, v: &[usize]) {
+        self.put_usize(v.len());
+        for &x in v {
+            self.put_u64(x as u64);
+        }
+    }
+}
+
+/// Checked decoder over a borrowed payload slice.
+#[derive(Debug, Clone)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], StoreError> {
+        if n > self.remaining() {
+            return Err(StoreError::corrupt(format!(
+                "truncated payload: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    #[inline]
+    pub fn get_u8(&mut self) -> Result<u8, StoreError> {
+        Ok(self.take(1)?[0])
+    }
+
+    #[inline]
+    pub fn get_u32(&mut self) -> Result<u32, StoreError> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn get_u64(&mut self) -> Result<u64, StoreError> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn get_usize(&mut self) -> Result<usize, StoreError> {
+        let v = self.get_u64()?;
+        usize::try_from(v)
+            .map_err(|_| StoreError::corrupt(format!("length {v} exceeds this platform's usize")))
+    }
+
+    /// Reads a declared element count, refusing counts that cannot fit in
+    /// the remaining bytes (`elem_size` bytes per element).
+    fn get_len(&mut self, elem_size: usize) -> Result<usize, StoreError> {
+        let n = self.get_usize()?;
+        let need = n
+            .checked_mul(elem_size)
+            .ok_or_else(|| StoreError::corrupt(format!("element count {n} overflows")))?;
+        if need > self.remaining() {
+            return Err(StoreError::corrupt(format!(
+                "declared {n} elements ({need} bytes) but only {} bytes remain",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
+    pub fn get_bytes(&mut self) -> Result<&'a [u8], StoreError> {
+        let n = self.get_len(1)?;
+        self.take(n)
+    }
+
+    pub fn get_u32s(&mut self) -> Result<Vec<u32>, StoreError> {
+        let n = self.get_len(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn get_u64s(&mut self) -> Result<Vec<u64>, StoreError> {
+        let n = self.get_len(8)?;
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn get_usizes(&mut self) -> Result<Vec<usize>, StoreError> {
+        let n = self.get_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_usize()?);
+        }
+        Ok(out)
+    }
+
+    /// Errors unless the payload was consumed exactly — trailing garbage
+    /// means the reader and writer disagree about the layout.
+    pub fn expect_end(&self) -> Result<(), StoreError> {
+        if self.remaining() != 0 {
+            return Err(StoreError::corrupt(format!(
+                "{} unread trailing bytes in section payload",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_usize(42);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.get_usize().unwrap(), 42);
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let mut w = ByteWriter::new();
+        w.put_u32s(&[1, 2, 3]);
+        w.put_u64s(&[u64::MAX, 0]);
+        w.put_bytes(b"hello");
+        w.put_usizes(&[9, 8]);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u32s().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.get_u64s().unwrap(), vec![u64::MAX, 0]);
+        assert_eq!(r.get_bytes().unwrap(), b"hello");
+        assert_eq!(r.get_usizes().unwrap(), vec![9, 8]);
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn truncated_reads_error() {
+        let mut w = ByteWriter::new();
+        w.put_u64(1);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes[..4]);
+        assert!(r.get_u64().is_err());
+    }
+
+    #[test]
+    fn oversized_declared_length_rejected_before_alloc() {
+        // length field claims 2^60 u64s — must error, not allocate.
+        let mut w = ByteWriter::new();
+        w.put_u64(1u64 << 60);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.get_u64s().is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut w = ByteWriter::new();
+        w.put_u32(1);
+        w.put_u32(2);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        let _ = r.get_u32().unwrap();
+        assert!(r.expect_end().is_err());
+    }
+}

@@ -1,0 +1,448 @@
+//! The snapshot container: a versioned, sectioned binary file.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset 0   magic      u64   "bSTSNAP1"
+//! offset 8   version    u32   FORMAT_VERSION
+//! offset 12  n_sections u32
+//! offset 16  section table, n_sections × 48 bytes:
+//!              name     [u8; 24]  ASCII, zero-padded
+//!              offset   u64       absolute, 8-byte aligned
+//!              len      u64       payload bytes
+//!              checksum u64       FNV-1a 64 over the payload
+//! then       payloads, each starting 8-byte aligned (zero padding between)
+//! ```
+//!
+//! Compatibility policy: the magic never changes; `FORMAT_VERSION` bumps on
+//! any layout change and readers reject versions they don't know —
+//! snapshots are cheap to regenerate from raw sketches, so there is no
+//! cross-version migration machinery. Opening validates the table (bounds,
+//! alignment, duplicate names) and every section checksum up front, so a
+//! truncated or bit-flipped file fails fast with [`StoreError`] instead of
+//! surfacing as a confusing payload parse error later.
+
+use super::{ByteReader, StoreError};
+use std::path::Path;
+
+/// File magic: the first 8 bytes of every snapshot.
+pub const MAGIC: u64 = u64::from_le_bytes(*b"bSTSNAP1");
+
+/// Current container format version.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Maximum section-name length (table entries are fixed-size).
+pub const MAX_NAME_LEN: usize = 24;
+
+const TABLE_ENTRY_BYTES: usize = MAX_NAME_LEN + 8 + 8 + 8;
+const HEADER_BYTES: usize = 16;
+
+/// FNV-1a 64-bit checksum.
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Accumulates named sections and serializes the container.
+#[derive(Debug, Default)]
+pub struct SnapshotBuilder {
+    sections: Vec<(String, Vec<u8>)>,
+}
+
+impl SnapshotBuilder {
+    pub fn new() -> Self {
+        SnapshotBuilder::default()
+    }
+
+    /// Adds a section. Names must be non-empty ASCII of at most
+    /// [`MAX_NAME_LEN`] bytes and unique within the snapshot.
+    pub fn add_section(&mut self, name: &str, payload: Vec<u8>) {
+        assert!(
+            !name.is_empty() && name.len() <= MAX_NAME_LEN && name.is_ascii(),
+            "section name must be 1..={MAX_NAME_LEN} ASCII bytes: {name:?}"
+        );
+        assert!(
+            self.sections.iter().all(|(n, _)| n != name),
+            "duplicate section {name:?}"
+        );
+        self.sections.push((name.to_string(), payload));
+    }
+
+    /// Serializes the container to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let table_end = HEADER_BYTES + self.sections.len() * TABLE_ENTRY_BYTES;
+        let mut out = Vec::with_capacity(
+            table_end
+                + self
+                    .sections
+                    .iter()
+                    .map(|(_, p)| p.len().div_ceil(8) * 8)
+                    .sum::<usize>(),
+        );
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+
+        // Section table: offsets assigned sequentially, 8-aligned.
+        let mut offset = table_end; // table_end is a multiple of 8
+        for (name, payload) in &self.sections {
+            let mut name_bytes = [0u8; MAX_NAME_LEN];
+            name_bytes[..name.len()].copy_from_slice(name.as_bytes());
+            out.extend_from_slice(&name_bytes);
+            out.extend_from_slice(&(offset as u64).to_le_bytes());
+            out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            out.extend_from_slice(&checksum(payload).to_le_bytes());
+            offset += payload.len().div_ceil(8) * 8;
+        }
+
+        // Payloads with zero padding up to 8-byte boundaries.
+        for (_, payload) in &self.sections {
+            out.extend_from_slice(payload);
+            let pad = payload.len().div_ceil(8) * 8 - payload.len();
+            out.extend_from_slice(&[0u8; 8][..pad]);
+        }
+        out
+    }
+
+    /// Writes the container to `path`. Convenience for small snapshots
+    /// and tests — the whole file is assembled in memory first; large
+    /// multi-section snapshots should use [`SnapshotStreamWriter`],
+    /// which buffers only one section at a time.
+    pub fn write_to(&self, path: &Path) -> Result<(), StoreError> {
+        std::fs::write(path, self.to_bytes())?;
+        Ok(())
+    }
+}
+
+/// Incremental snapshot writer: sections stream to disk as they are
+/// produced (payload + padding written immediately, checksummed on the
+/// way through) and the table — whose entries are only known once every
+/// payload has been sized — is patched in by seeking back at
+/// [`SnapshotStreamWriter::finish`]. Peak memory is one section's
+/// payload, not the whole container; `Engine::save` uses this so a
+/// multi-GiB engine never holds a second full copy of itself while
+/// persisting.
+///
+/// The section count is fixed at creation (the table is laid out before
+/// payloads); `finish` errors unless exactly that many were added.
+pub struct SnapshotStreamWriter {
+    file: std::io::BufWriter<std::fs::File>,
+    /// `(name, offset, len, checksum)` per written section.
+    table: Vec<(String, u64, u64, u64)>,
+    n_sections: usize,
+    offset: u64,
+}
+
+impl SnapshotStreamWriter {
+    /// Creates the file and reserves header + table space for exactly
+    /// `n_sections` sections.
+    pub fn create(path: &Path, n_sections: usize) -> Result<Self, StoreError> {
+        use std::io::Write;
+        let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
+        file.write_all(&MAGIC.to_le_bytes())?;
+        file.write_all(&FORMAT_VERSION.to_le_bytes())?;
+        file.write_all(&(n_sections as u32).to_le_bytes())?;
+        // Placeholder table, patched by finish().
+        let zeros = [0u8; TABLE_ENTRY_BYTES];
+        for _ in 0..n_sections {
+            file.write_all(&zeros)?;
+        }
+        let offset = (HEADER_BYTES + n_sections * TABLE_ENTRY_BYTES) as u64;
+        Ok(SnapshotStreamWriter { file, table: Vec::with_capacity(n_sections), n_sections, offset })
+    }
+
+    /// Streams one section's payload (plus alignment padding) to disk.
+    pub fn add_section(&mut self, name: &str, payload: &[u8]) -> Result<(), StoreError> {
+        use std::io::Write;
+        assert!(
+            !name.is_empty() && name.len() <= MAX_NAME_LEN && name.is_ascii(),
+            "section name must be 1..={MAX_NAME_LEN} ASCII bytes: {name:?}"
+        );
+        assert!(
+            self.table.len() < self.n_sections,
+            "snapshot declared {} sections; {name:?} is one too many",
+            self.n_sections
+        );
+        assert!(
+            self.table.iter().all(|(n, ..)| n != name),
+            "duplicate section {name:?}"
+        );
+        self.file.write_all(payload)?;
+        let pad = payload.len().div_ceil(8) * 8 - payload.len();
+        self.file.write_all(&[0u8; 8][..pad])?;
+        self.table
+            .push((name.to_string(), self.offset, payload.len() as u64, checksum(payload)));
+        self.offset += (payload.len() + pad) as u64;
+        Ok(())
+    }
+
+    /// Seeks back and writes the real section table, then flushes.
+    pub fn finish(mut self) -> Result<(), StoreError> {
+        use std::io::{Seek, SeekFrom, Write};
+        if self.table.len() != self.n_sections {
+            return Err(StoreError::Corrupt(format!(
+                "snapshot declared {} sections but {} were written",
+                self.n_sections,
+                self.table.len()
+            )));
+        }
+        self.file.flush()?;
+        self.file.seek(SeekFrom::Start(HEADER_BYTES as u64))?;
+        for (name, offset, len, sum) in &self.table {
+            let mut name_bytes = [0u8; MAX_NAME_LEN];
+            name_bytes[..name.len()].copy_from_slice(name.as_bytes());
+            self.file.write_all(&name_bytes)?;
+            self.file.write_all(&offset.to_le_bytes())?;
+            self.file.write_all(&len.to_le_bytes())?;
+            self.file.write_all(&sum.to_le_bytes())?;
+        }
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// A validated, loaded snapshot.
+pub struct Snapshot {
+    bytes: Vec<u8>,
+    /// `(name, payload start, payload len)` per section.
+    sections: Vec<(String, usize, usize)>,
+}
+
+impl Snapshot {
+    /// Parses and fully validates a container (header, table bounds and
+    /// alignment, section checksums).
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<Self, StoreError> {
+        if bytes.len() < HEADER_BYTES {
+            return Err(StoreError::corrupt(format!(
+                "file too short for a snapshot header: {} bytes",
+                bytes.len()
+            )));
+        }
+        let magic = u64::from_le_bytes(bytes[0..8].try_into().unwrap());
+        if magic != MAGIC {
+            return Err(StoreError::BadMagic(magic));
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != FORMAT_VERSION {
+            return Err(StoreError::UnsupportedVersion(version));
+        }
+        let n_sections = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        let table_end = HEADER_BYTES
+            .checked_add(n_sections.checked_mul(TABLE_ENTRY_BYTES).ok_or_else(|| {
+                StoreError::corrupt(format!("section count {n_sections} overflows"))
+            })?)
+            .ok_or_else(|| StoreError::corrupt("section table overflows".into()))?;
+        if table_end > bytes.len() {
+            return Err(StoreError::corrupt(format!(
+                "truncated section table: need {table_end} bytes, file has {}",
+                bytes.len()
+            )));
+        }
+
+        let mut sections: Vec<(String, usize, usize)> = Vec::with_capacity(n_sections);
+        for s in 0..n_sections {
+            let e = HEADER_BYTES + s * TABLE_ENTRY_BYTES;
+            let raw_name = &bytes[e..e + MAX_NAME_LEN];
+            let name_len = raw_name.iter().position(|&b| b == 0).unwrap_or(MAX_NAME_LEN);
+            let name = std::str::from_utf8(&raw_name[..name_len])
+                .map_err(|_| StoreError::corrupt(format!("section {s}: non-UTF8 name")))?
+                .to_string();
+            if name.is_empty() || raw_name[name_len..].iter().any(|&b| b != 0) {
+                return Err(StoreError::corrupt(format!("section {s}: malformed name")));
+            }
+            let offset = u64::from_le_bytes(
+                bytes[e + MAX_NAME_LEN..e + MAX_NAME_LEN + 8].try_into().unwrap(),
+            );
+            let len = u64::from_le_bytes(
+                bytes[e + MAX_NAME_LEN + 8..e + MAX_NAME_LEN + 16].try_into().unwrap(),
+            );
+            let sum = u64::from_le_bytes(
+                bytes[e + MAX_NAME_LEN + 16..e + MAX_NAME_LEN + 24].try_into().unwrap(),
+            );
+            let offset = usize::try_from(offset)
+                .map_err(|_| StoreError::corrupt(format!("section {name}: bad offset")))?;
+            let len = usize::try_from(len)
+                .map_err(|_| StoreError::corrupt(format!("section {name}: bad length")))?;
+            let end = offset.checked_add(len).ok_or_else(|| {
+                StoreError::corrupt(format!("section {name}: offset+len overflows"))
+            })?;
+            if offset % 8 != 0 || offset < table_end || end > bytes.len() {
+                return Err(StoreError::corrupt(format!(
+                    "section {name}: range {offset}..{end} invalid (file len {})",
+                    bytes.len()
+                )));
+            }
+            if sections.iter().any(|(n, _, _)| *n == name) {
+                return Err(StoreError::corrupt(format!("duplicate section {name}")));
+            }
+            if checksum(&bytes[offset..end]) != sum {
+                return Err(StoreError::corrupt(format!("section {name}: checksum mismatch")));
+            }
+            sections.push((name, offset, len));
+        }
+        Ok(Snapshot { bytes, sections })
+    }
+
+    /// Reads and validates a snapshot file.
+    pub fn open(path: &Path) -> Result<Self, StoreError> {
+        Snapshot::from_bytes(std::fs::read(path)?)
+    }
+
+    /// Names of all sections, in file order.
+    pub fn section_names(&self) -> impl Iterator<Item = &str> {
+        self.sections.iter().map(|(n, _, _)| n.as_str())
+    }
+
+    pub fn has_section(&self, name: &str) -> bool {
+        self.sections.iter().any(|(n, _, _)| n == name)
+    }
+
+    /// A checked reader over the named section's payload.
+    pub fn section(&self, name: &str) -> Result<ByteReader<'_>, StoreError> {
+        let (_, off, len) = self
+            .sections
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .ok_or_else(|| StoreError::MissingSection(name.to_string()))?;
+        Ok(ByteReader::new(&self.bytes[*off..*off + *len]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SnapshotBuilder {
+        let mut b = SnapshotBuilder::new();
+        b.add_section("meta", vec![1, 2, 3]);
+        b.add_section("shard.0", (0u8..100).collect());
+        b.add_section("shard.1", Vec::new());
+        b
+    }
+
+    #[test]
+    fn roundtrip() {
+        let bytes = sample().to_bytes();
+        let snap = Snapshot::from_bytes(bytes).unwrap();
+        assert_eq!(
+            snap.section_names().collect::<Vec<_>>(),
+            vec!["meta", "shard.0", "shard.1"]
+        );
+        let mut r = snap.section("meta").unwrap();
+        assert_eq!(r.get_u8().unwrap(), 1);
+        let mut r = snap.section("shard.0").unwrap();
+        assert_eq!(r.remaining(), 100);
+        for i in 0u8..100 {
+            assert_eq!(r.get_u8().unwrap(), i);
+        }
+        r.expect_end().unwrap();
+        assert_eq!(snap.section("shard.1").unwrap().remaining(), 0);
+        assert!(snap.has_section("meta"));
+        assert!(!snap.has_section("nope"));
+    }
+
+    #[test]
+    fn missing_section_is_err() {
+        let snap = Snapshot::from_bytes(sample().to_bytes()).unwrap();
+        assert!(matches!(
+            snap.section("absent"),
+            Err(StoreError::MissingSection(_))
+        ));
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = sample().to_bytes();
+        bytes[0] ^= 0xFF;
+        assert!(matches!(
+            Snapshot::from_bytes(bytes),
+            Err(StoreError::BadMagic(_))
+        ));
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let mut bytes = sample().to_bytes();
+        bytes[8] = 99;
+        assert!(matches!(
+            Snapshot::from_bytes(bytes),
+            Err(StoreError::UnsupportedVersion(_))
+        ));
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let bytes = sample().to_bytes();
+        for cut in [0, 10, 17, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                Snapshot::from_bytes(bytes[..cut].to_vec()).is_err(),
+                "cut={cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn payload_corruption_caught_by_checksum() {
+        let bytes = sample().to_bytes();
+        let snap = Snapshot::from_bytes(bytes.clone()).unwrap();
+        let (_, off, _) = snap.sections[1];
+        let mut bad = bytes;
+        bad[off + 5] ^= 0x40;
+        assert!(matches!(
+            Snapshot::from_bytes(bad),
+            Err(StoreError::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn streamed_file_matches_in_memory_assembly() {
+        let b = sample();
+        let dir = std::env::temp_dir().join("bst_container_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stream.snap");
+        let mut w = SnapshotStreamWriter::create(&path, 3).unwrap();
+        w.add_section("meta", &[1, 2, 3]).unwrap();
+        w.add_section("shard.0", &(0u8..100).collect::<Vec<u8>>()).unwrap();
+        w.add_section("shard.1", &[]).unwrap();
+        w.finish().unwrap();
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            b.to_bytes(),
+            "streamed bytes must equal the in-memory assembly"
+        );
+        let snap = Snapshot::open(&path).unwrap();
+        assert_eq!(snap.section_names().count(), 3);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn stream_writer_enforces_section_count() {
+        let dir = std::env::temp_dir().join("bst_container_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("short.snap");
+        let mut w = SnapshotStreamWriter::create(&path, 2).unwrap();
+        w.add_section("only", &[9]).unwrap();
+        assert!(w.finish().is_err(), "missing section must fail finish");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_snapshot_roundtrips() {
+        let b = SnapshotBuilder::new();
+        let snap = Snapshot::from_bytes(b.to_bytes()).unwrap();
+        assert_eq!(snap.section_names().count(), 0);
+    }
+
+    #[test]
+    fn alignment_of_all_sections() {
+        let bytes = sample().to_bytes();
+        let snap = Snapshot::from_bytes(bytes).unwrap();
+        for (_, off, _) in &snap.sections {
+            assert_eq!(off % 8, 0);
+        }
+    }
+}

@@ -14,6 +14,7 @@
 
 use crate::bits::rsvec::SelectMode;
 use crate::bits::{BitVec, IntVec, RsBitVec};
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
 use crate::trie::builder::SortedSketches;
 use crate::util::HeapSize;
 
@@ -188,6 +189,90 @@ impl MiddleLevel {
         match self {
             MiddleLevel::Table { h, .. } => h.len(),
             MiddleLevel::List { c, bfirst } => c.len() * c.width() + bfirst.len(),
+        }
+    }
+}
+
+impl MiddleLevel {
+    /// Snapshot validation: checks this encoding against the node counts
+    /// of its level (`t_prev` parents, `t_cur` nodes) for alphabet bits
+    /// `b`. Cheap structural checks only — no re-encoding.
+    pub(crate) fn validate_level(
+        &self,
+        b: usize,
+        t_prev: usize,
+        t_cur: usize,
+    ) -> Result<(), StoreError> {
+        match self {
+            MiddleLevel::Table { h, b: tb } => {
+                ensure(*tb == b, || format!("middle TABLE: b {tb} != trie b {b}"))?;
+                let want = (1usize << b)
+                    .checked_mul(t_prev)
+                    .ok_or_else(|| StoreError::Corrupt("middle TABLE: size overflows".into()))?;
+                ensure(h.len() == want, || {
+                    format!("middle TABLE: {} bits != 2^b * t_prev = {want}", h.len())
+                })?;
+                ensure(h.count_ones() == t_cur, || {
+                    format!("middle TABLE: {} set bits != t_cur = {t_cur}", h.count_ones())
+                })
+            }
+            MiddleLevel::List { c, bfirst } => {
+                ensure(c.width() == b, || {
+                    format!("middle LIST: label width {} != b {b}", c.width())
+                })?;
+                ensure(c.len() == t_cur && bfirst.len() == t_cur, || {
+                    format!("middle LIST: {} labels != t_cur = {t_cur}", c.len())
+                })?;
+                ensure(bfirst.count_ones() == t_prev, || {
+                    format!(
+                        "middle LIST: {} first-sibling bits != t_prev = {t_prev}",
+                        bfirst.count_ones()
+                    )
+                })?;
+                ensure(bfirst.select1_enabled(), || {
+                    "middle LIST: select directory missing".to_string()
+                })
+            }
+        }
+    }
+}
+
+impl Persist for MiddleLevel {
+    fn write_into(&self, w: &mut ByteWriter) {
+        match self {
+            MiddleLevel::Table { h, b } => {
+                w.put_u8(0);
+                w.put_usize(*b);
+                h.write_into(w);
+            }
+            MiddleLevel::List { c, bfirst } => {
+                w.put_u8(1);
+                c.write_into(w);
+                bfirst.write_into(w);
+            }
+        }
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        match r.get_u8()? {
+            0 => {
+                let b = r.get_usize()?;
+                ensure((1..=8).contains(&b), || format!("middle TABLE: bad b {b}"))?;
+                let h = RsBitVec::read_from(r)?;
+                ensure(h.len() % (1usize << b) == 0, || {
+                    "middle TABLE: bitmap not window-aligned".to_string()
+                })?;
+                Ok(MiddleLevel::Table { h, b })
+            }
+            1 => {
+                let c = IntVec::read_from(r)?;
+                let bfirst = RsBitVec::read_from(r)?;
+                ensure(c.len() == bfirst.len(), || {
+                    format!("middle LIST: {} labels vs {} bits", c.len(), bfirst.len())
+                })?;
+                Ok(MiddleLevel::List { c, bfirst })
+            }
+            t => Err(StoreError::Corrupt(format!("middle level: unknown repr tag {t}"))),
         }
     }
 }

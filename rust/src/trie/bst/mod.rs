@@ -31,6 +31,7 @@ pub use middle::MiddleRepr;
 use super::builder::SortedSketches;
 use super::SketchTrie;
 use crate::query::{Collector, QueryCtx};
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
 use crate::util::HeapSize;
 
 /// The b-bit sketch trie.
@@ -120,11 +121,115 @@ impl BstTrie {
         s
     }
 
+    /// Sketch length `L`.
+    pub fn sketch_len(&self) -> usize {
+        self.l
+    }
+
+    /// Alphabet bits `b`.
+    pub fn alphabet_bits(&self) -> usize {
+        self.b
+    }
+
+    /// Total ids across all leaf postings (= database rows, duplicates
+    /// included): every indexed sketch id appears in exactly one group.
+    pub fn post_id_count(&self) -> usize {
+        self.post_ids.len()
+    }
+
+    /// Largest posting id (`None` for an empty postings table) —
+    /// snapshot loaders bound ids against the database they serve.
+    pub fn max_posting(&self) -> Option<u32> {
+        self.post_ids.iter().copied().max()
+    }
+
     #[inline]
     pub(crate) fn postings_of(&self, leaf: usize) -> &[u32] {
         let lo = self.post_offsets[leaf] as usize;
         let hi = self.post_offsets[leaf + 1] as usize;
         &self.post_ids[lo..hi]
+    }
+}
+
+impl Persist for BstTrie {
+    fn write_into(&self, w: &mut ByteWriter) {
+        w.put_usize(self.b);
+        w.put_usize(self.l);
+        w.put_usize(self.lm);
+        w.put_usize(self.ls);
+        w.put_usize(self.middle.len());
+        for ml in &self.middle {
+            ml.write_into(w);
+        }
+        self.sparse.write_into(w);
+        w.put_u32s(&self.post_offsets);
+        w.put_u32s(&self.post_ids);
+        w.put_usizes(&self.level_counts);
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        let b = r.get_usize()?;
+        let l = r.get_usize()?;
+        let lm = r.get_usize()?;
+        let ls = r.get_usize()?;
+        ensure(
+            (1..=BstConfig::MAX_B).contains(&b)
+                && l >= 1
+                && l <= 64 * 64 // SketchSet's L·b bound; also caps the vec below
+                && lm <= ls
+                && ls <= l,
+            || format!("bST: invalid layer bounds b={b} L={l} lm={lm} ls={ls}"),
+        )?;
+        let n_middle = r.get_usize()?;
+        ensure(n_middle == ls - lm, || {
+            format!("bST: {n_middle} middle levels for lm={lm} ls={ls}")
+        })?;
+        let mut middle = Vec::with_capacity(n_middle);
+        for _ in 0..n_middle {
+            middle.push(middle::MiddleLevel::read_from(r)?);
+        }
+        let sparse = sparse::SparseLayer::read_from(r)?;
+        let post_offsets = r.get_u32s()?;
+        let post_ids = r.get_u32s()?;
+        let level_counts = r.get_usizes()?;
+
+        ensure(level_counts.len() == l + 1 && level_counts[0] == 1, || {
+            format!("bST: {} level counts for L={l}", level_counts.len())
+        })?;
+        ensure(level_counts.windows(2).all(|w| w[0] <= w[1]), || {
+            "bST: level counts must be nondecreasing".to_string()
+        })?;
+        // Dense layer: levels 0..=lm must be complete (ids are arithmetic).
+        let mut full = 1u128;
+        for lv in 1..=lm {
+            full = full.saturating_mul(1u128 << b);
+            ensure(level_counts[lv] as u128 == full, || {
+                format!("bST: dense level {lv} has {} nodes, expected {full}", level_counts[lv])
+            })?;
+        }
+        for (i, ml) in middle.iter().enumerate() {
+            let level = lm + 1 + i;
+            ml.validate_level(b, level_counts[level - 1], level_counts[level])?;
+        }
+        let n_leaves = level_counts[l];
+        ensure(
+            sparse.suffix_len() == l - ls
+                && sparse.leaf_count() == n_leaves
+                && sparse.root_count() == level_counts[ls],
+            || "bST: sparse layer disagrees with level counts".to_string(),
+        )?;
+        super::validate_postings(&post_offsets, &post_ids, n_leaves)?;
+        Ok(BstTrie {
+            b,
+            l,
+            lm,
+            ls,
+            middle,
+            sparse,
+            post_offsets,
+            post_ids,
+            level_counts,
+        })
     }
 }
 

@@ -16,6 +16,7 @@
 use crate::bits::rsvec::SelectMode;
 use crate::bits::{BitVec, RsBitVec};
 use crate::sketch::plane_store::PlaneStore;
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
 use crate::trie::builder::SortedSketches;
 use crate::util::HeapSize;
 
@@ -139,6 +140,39 @@ impl SparseLayer {
     #[allow(dead_code)] // diagnostics/tests
     pub fn leaf_count(&self) -> usize {
         self.d.len()
+    }
+}
+
+impl Persist for SparseLayer {
+    fn write_into(&self, w: &mut ByteWriter) {
+        w.put_usize(self.s);
+        w.put_usize(self.b);
+        self.planes.write_into(w);
+        self.d.write_into(w);
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        let s = r.get_usize()?;
+        let b = r.get_usize()?;
+        let planes = PlaneStore::read_from(r)?;
+        let d = RsBitVec::read_from(r)?;
+        ensure((1..=8).contains(&b) && s <= 64, || {
+            format!("sparse layer: bad dims b={b} S={s}")
+        })?;
+        ensure(planes.b() == b && planes.width() == s, || {
+            format!(
+                "sparse layer: plane store is {}x{}-bit, expected {b}x{s}",
+                planes.b(),
+                planes.width()
+            )
+        })?;
+        ensure(d.len() == planes.n(), || {
+            format!("sparse layer: {} D bits for {} leaves", d.len(), planes.n())
+        })?;
+        ensure(d.select1_enabled(), || "sparse layer: D select missing".to_string())?;
+        // Leaf ranges tile from leaf 0: the first leaf starts a subtrie.
+        ensure(d.is_empty() || d.get(0), || "sparse layer: D[0] must be set".to_string())?;
+        Ok(SparseLayer { s, b, planes, d })
     }
 }
 

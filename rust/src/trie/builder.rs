@@ -16,6 +16,18 @@
 
 use crate::sketch::SketchSet;
 use crate::util::HeapSize;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Global count of [`SortedSketches::build`] invocations. Diagnostics
+/// only: the snapshot tests pin down that `Engine::load` serves without
+/// re-running construction (one relaxed increment per build — noise next
+/// to the sort it precedes).
+static BUILD_INVOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// How many times [`SortedSketches::build`] has run in this process.
+pub fn build_invocations() -> u64 {
+    BUILD_INVOCATIONS.load(Ordering::Relaxed)
+}
 
 /// Sorted + deduplicated database with LCP array and id postings.
 pub struct SortedSketches<'a> {
@@ -46,6 +58,7 @@ pub struct NodeSpan {
 impl<'a> SortedSketches<'a> {
     /// Sorts, deduplicates and indexes `set`.
     pub fn build(set: &'a SketchSet) -> Self {
+        BUILD_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
         let n = set.n();
         assert!(n > 0, "empty database");
         let perm = set.sorted_permutation();

@@ -17,6 +17,7 @@ use super::builder::SortedSketches;
 use super::bst::MiddleRepr;
 use super::SketchTrie;
 use crate::query::{Collector, QueryCtx};
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
 use crate::util::HeapSize;
 
 // Reuse the per-level encodings from the bst middle layer.
@@ -137,6 +138,58 @@ impl FstTrie {
                 c.on_prune();
             }
         }
+    }
+}
+
+impl Persist for FstTrie {
+    fn write_into(&self, w: &mut ByteWriter) {
+        w.put_usize(self.b);
+        w.put_usize(self.l);
+        w.put_usize(self.t);
+        w.put_usize(self.cutoff);
+        for ml in &self.levels {
+            ml.write_into(w);
+        }
+        w.put_u32s(&self.post_offsets);
+        w.put_u32s(&self.post_ids);
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        let b = r.get_usize()?;
+        let l = r.get_usize()?;
+        let t = r.get_usize()?;
+        let cutoff = r.get_usize()?;
+        ensure(
+            (1..=8).contains(&b)
+                && l >= 1
+                && l <= 64 * 64 // caps the level vec before allocation
+                && (1..=l + 1).contains(&cutoff),
+            || format!("FST: bad shape b={b} L={l} cutoff={cutoff}"),
+        )?;
+        let mut levels = Vec::with_capacity(l);
+        for _ in 0..l {
+            levels.push(MiddleLevel::read_from(r)?);
+        }
+        let post_offsets = r.get_u32s()?;
+        let post_ids = r.get_u32s()?;
+        // Validate the per-level chain: level ℓ's encoding must cover the
+        // previous level's node count (the root level has one parent).
+        let mut t_prev = 1usize;
+        let mut total = 0usize;
+        for (i, ml) in levels.iter().enumerate() {
+            let t_cur = ml.node_count();
+            ml.validate_level(b, t_prev, t_cur)?;
+            ensure(
+                (i + 1 < cutoff) == matches!(ml.repr(), MiddleRepr::Table),
+                || format!("FST: level {} repr disagrees with cutoff {cutoff}", i + 1),
+            )?;
+            total += t_cur;
+            t_prev = t_cur;
+        }
+        ensure(total == t, || format!("FST: level node counts sum to {total}, not t={t}"))?;
+        let n_leaves = t_prev;
+        super::validate_postings(&post_offsets, &post_ids, n_leaves)?;
+        Ok(FstTrie { levels, cutoff, b, l, t, post_offsets, post_ids })
     }
 }
 

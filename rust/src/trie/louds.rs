@@ -22,6 +22,7 @@ use super::SketchTrie;
 use crate::query::{Collector, QueryCtx};
 use crate::bits::rsvec::SelectMode;
 use crate::bits::{BitVec, IntVec, RsBitVec};
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
 use crate::util::HeapSize;
 
 /// Classic LOUDS representation of a sketch trie.
@@ -146,6 +147,41 @@ impl LoudsTrie {
                 c.on_prune();
             }
         }
+    }
+}
+
+impl Persist for LoudsTrie {
+    fn write_into(&self, w: &mut ByteWriter) {
+        self.bits.write_into(w);
+        self.labels.write_into(w);
+        w.put_usize(self.t);
+        w.put_usize(self.n_leaves);
+        w.put_usize(self.l);
+        w.put_u32s(&self.post_offsets);
+        w.put_u32s(&self.post_ids);
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        let bits = RsBitVec::read_from(r)?;
+        let labels = IntVec::read_from(r)?;
+        let t = r.get_usize()?;
+        let n_leaves = r.get_usize()?;
+        let l = r.get_usize()?;
+        let post_offsets = r.get_u32s()?;
+        let post_ids = r.get_u32s()?;
+        ensure(l >= 1 && n_leaves >= 1 && n_leaves <= t, || {
+            format!("LOUDS: bad shape t={t} leaves={n_leaves} L={l}")
+        })?;
+        ensure(labels.len() == t && labels.width() <= 8, || {
+            format!("LOUDS: {} labels (width {}) for {t} nodes", labels.len(), labels.width())
+        })?;
+        ensure(bits.len() == 2 * t + 3 && bits.count_ones() == t + 1, || {
+            format!("LOUDS: topology {} bits / {} ones for t={t}", bits.len(), bits.count_ones())
+        })?;
+        // Navigation needs select0 (group seek) and rank over the ones.
+        ensure(bits.select0_enabled(), || "LOUDS: select0 directory missing".to_string())?;
+        super::validate_postings(&post_offsets, &post_ids, n_leaves)?;
+        Ok(LoudsTrie { bits, labels, t, n_leaves, l, post_offsets, post_ids })
     }
 }
 

@@ -33,6 +33,30 @@ pub use builder::SortedSketches;
 
 pub use crate::query::{Collector, QueryCtx, TraversalStats};
 
+use crate::store::{ensure, StoreError};
+
+/// Snapshot validation shared by every trie: the leaf postings must be a
+/// strictly increasing offset table over `post_ids` with one range per
+/// leaf (every distinct sketch owns at least one id).
+pub(crate) fn validate_postings(
+    post_offsets: &[u32],
+    post_ids: &[u32],
+    n_leaves: usize,
+) -> Result<(), StoreError> {
+    ensure(post_offsets.len() == n_leaves + 1, || {
+        format!(
+            "postings: {} offsets for {n_leaves} leaves",
+            post_offsets.len()
+        )
+    })?;
+    ensure(
+        post_offsets.first() == Some(&0)
+            && post_offsets.windows(2).all(|w| w[0] < w[1])
+            && *post_offsets.last().unwrap() as usize == post_ids.len(),
+        || "postings: offsets not strictly increasing from 0 to #ids".to_string(),
+    )
+}
+
 /// Common interface: a trie over a fixed sketch database supporting the
 /// paper's similarity search (all ids with `ham(s_i, q) <= tau`, where
 /// `tau` — possibly adaptive — lives in the collector).

@@ -8,6 +8,7 @@
 use super::builder::SortedSketches;
 use super::SketchTrie;
 use crate::query::{Collector, QueryCtx};
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
 use crate::util::HeapSize;
 
 #[derive(Debug)]
@@ -82,6 +83,59 @@ impl PointerTrie {
                 c.on_prune();
             }
         }
+    }
+}
+
+impl Persist for PointerTrie {
+    fn write_into(&self, w: &mut ByteWriter) {
+        w.put_usize(self.l);
+        w.put_usize(self.nodes.len());
+        for n in &self.nodes {
+            w.put_u32s(&n.children);
+            w.put_u8(n.label);
+            w.put_u32(n.leaf);
+        }
+        w.put_u32s(&self.post_offsets);
+        w.put_u32s(&self.post_ids);
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        let l = r.get_usize()?;
+        let n_nodes = r.get_usize()?;
+        ensure(l >= 1 && l <= 64 * 64 && n_nodes >= 2, || {
+            format!("PT: bad shape L={l} nodes={n_nodes}")
+        })?;
+        // Each serialized node is >= 13 bytes (children length prefix +
+        // label + leaf): bound the count by the bytes that actually
+        // remain before allocating, mirroring ByteReader's own guard.
+        ensure(n_nodes <= r.remaining() / 13, || {
+            format!("PT: {n_nodes} nodes cannot fit in {} bytes", r.remaining())
+        })?;
+        let mut nodes = Vec::with_capacity(n_nodes);
+        for _ in 0..n_nodes {
+            let children = r.get_u32s()?;
+            let label = r.get_u8()?;
+            let leaf = r.get_u32()?;
+            nodes.push(Node { children, label, leaf });
+        }
+        let post_offsets = r.get_u32s()?;
+        let post_ids = r.get_u32s()?;
+        let n_leaves = post_offsets.len().saturating_sub(1);
+        super::validate_postings(&post_offsets, &post_ids, n_leaves)?;
+        for (i, n) in nodes.iter().enumerate() {
+            // children point strictly forward (never at the root), leaf
+            // slots index the postings table.
+            ensure(
+                n.children
+                    .iter()
+                    .all(|&c| (c as usize) < n_nodes && c as usize > i),
+                || format!("PT: node {i} has an out-of-range child"),
+            )?;
+            ensure(n.leaf == u32::MAX || (n.leaf as usize) < n_leaves, || {
+                format!("PT: node {i} has leaf index {} of {n_leaves}", n.leaf)
+            })?;
+        }
+        Ok(PointerTrie { nodes, post_offsets, post_ids, l })
     }
 }
 

@@ -141,6 +141,57 @@ fn search_over_tcp_matches_engine() {
 }
 
 #[test]
+fn reload_swaps_in_snapshot_engine() {
+    let (engine, rows) = make_engine(400);
+    let n1 = rows.len();
+
+    // A second database with the same L but different size, saved as a
+    // snapshot the running server will be told to reload.
+    let mut rng = Rng::new(0x7e10);
+    let rows2: Vec<Vec<u8>> = (0..150)
+        .map(|_| (0..12).map(|_| rng.below(4) as u8).collect())
+        .collect();
+    let set2 = SketchSet::from_rows(2, 12, &rows2);
+    let engine2 = Engine::build(&set2, 2, &ShardIndexKind::Bst(BstConfig::default()));
+    let dir = std::env::temp_dir().join("bst_server_reload_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let snap = dir.join("reload.snap");
+    engine2.save(&snap).unwrap();
+    drop(engine2);
+
+    let cfg = ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
+    let handle = server::serve(engine, cfg).expect("serve");
+    let mut client = Client::connect(handle.addr);
+    let q = "0,".repeat(11) + "0"; // L=12 query; tau=L counts everything
+
+    let before = client.call(&format!(r#"{{"op":"count","q":[{q}],"tau":12}}"#));
+    assert_eq!(before.get("count").and_then(|c| c.as_usize()), Some(n1));
+
+    // A bad path is rejected and the old engine keeps serving.
+    let err = client.call(r#"{"op":"reload","path":"/nonexistent/x.snap"}"#);
+    assert!(err.get("error").is_some());
+    let still = client.call(&format!(r#"{{"op":"count","q":[{q}],"tau":12}}"#));
+    assert_eq!(still.get("count").and_then(|c| c.as_usize()), Some(n1));
+
+    // Reload the snapshot: subsequent queries hit the new database.
+    let ok = client.call(&format!(
+        r#"{{"op":"reload","path":"{}"}}"#,
+        snap.display()
+    ));
+    assert_eq!(ok.get("ok").and_then(|b| b.as_bool()), Some(true), "{ok:?}");
+    assert_eq!(ok.get("n").and_then(|n| n.as_usize()), Some(150));
+    let after = client.call(&format!(r#"{{"op":"count","q":[{q}],"tau":12}}"#));
+    assert_eq!(after.get("count").and_then(|c| c.as_usize()), Some(150));
+
+    // top-k over the reloaded engine still flows end to end.
+    let topk = client.call(&format!(r#"{{"op":"topk","q":[{q}],"k":3}}"#));
+    assert_eq!(topk.get("ids").and_then(|a| a.as_arr()).map(|a| a.len()), Some(3));
+
+    handle.stop();
+    std::fs::remove_file(&snap).unwrap();
+}
+
+#[test]
 fn concurrent_clients() {
     let (engine, rows) = make_engine(600);
     let cfg = ServeConfig {

@@ -1,0 +1,200 @@
+//! Snapshot roundtrip property suite: for every trie and every index,
+//! across `b ∈ {1, 2, 4, 8}`, save → load must answer `search` / `count`
+//! / `topk` identically to the freshly built structure (compared
+//! result-for-result, unsorted — a loaded structure is bit-identical, so
+//! even the emission order must match), re-serialization must be
+//! byte-stable, truncated payloads must be rejected, and corrupted
+//! container bytes must be caught by the section checksums.
+
+use bst::index::{
+    HmSearch, LinearScan, Mih, MultiBst, SearchIndex, Sih, SingleBst, SingleFst, SingleLouds,
+};
+use bst::query::{CountOnly, QueryCtx, TopK};
+use bst::sketch::SketchSet;
+use bst::store::{from_payload, to_payload, ByteReader, Persist, Snapshot, SnapshotBuilder};
+use bst::trie::bst::{BstConfig, BstTrie};
+use bst::trie::fst::FstTrie;
+use bst::trie::louds::LoudsTrie;
+use bst::trie::pointer::PointerTrie;
+use bst::trie::{SketchTrie, SortedSketches};
+use bst::util::Rng;
+
+/// `(b, L)` shapes covering every supported alphabet width.
+const SHAPES: [(usize, usize); 4] = [(1, 16), (2, 12), (4, 8), (8, 6)];
+
+fn clustered_rows(b: usize, l: usize, n: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<u8>> = (0..12)
+        .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+        .collect();
+    (0..n)
+        .map(|_| {
+            let mut row = centers[rng.below_usize(12)].clone();
+            for _ in 0..rng.below_usize(3) {
+                let p = rng.below_usize(l);
+                row[p] = rng.below(1 << b) as u8;
+            }
+            row
+        })
+        .collect()
+}
+
+fn queries(rows: &[Vec<u8>], b: usize, l: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(seed);
+    let mut qs: Vec<Vec<u8>> = rows.iter().take(4).cloned().collect();
+    qs.extend((0..3).map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect::<Vec<u8>>()));
+    qs
+}
+
+/// Roundtrips `x` through its payload encoding, checks byte-stability,
+/// truncation rejection, and container-checksum corruption rejection,
+/// then hands `(original, loaded)` to the caller's equality check.
+fn check_persist<T: Persist>(x: &T, label: &str, check_equal: impl FnOnce(&T, &T)) {
+    let bytes = to_payload(x);
+    let loaded: T = from_payload(&mut ByteReader::new(&bytes))
+        .unwrap_or_else(|e| panic!("{label}: roundtrip failed: {e}"));
+    assert_eq!(
+        to_payload(&loaded),
+        bytes,
+        "{label}: re-serialization must be byte-stable"
+    );
+    check_equal(x, &loaded);
+
+    // Truncated payloads must error, never panic.
+    for cut in [0usize, 5, bytes.len() / 3, bytes.len() / 2, bytes.len() - 1] {
+        assert!(
+            from_payload::<T>(&mut ByteReader::new(&bytes[..cut.min(bytes.len() - 1)])).is_err(),
+            "{label}: truncation at {cut} must be rejected"
+        );
+    }
+
+    // Container-level corruption is caught by the section checksum.
+    let mut builder = SnapshotBuilder::new();
+    builder.add_section("payload", bytes.clone());
+    let file = builder.to_bytes();
+    assert!(Snapshot::from_bytes(file.clone()).is_ok(), "{label}");
+    let mut bad = file.clone();
+    let mid = file.len() - 1 - bytes.len() / 2; // inside the payload
+    bad[mid] ^= 0x04;
+    assert!(
+        Snapshot::from_bytes(bad).is_err(),
+        "{label}: corrupted container byte must be rejected"
+    );
+}
+
+/// All three query modes of a trie against one query.
+fn trie_results<T: SketchTrie>(
+    t: &T,
+    q: &[u8],
+    tau: usize,
+) -> (Vec<u32>, usize, Vec<(u32, usize)>) {
+    let ids = t.search(q, tau);
+    let mut ctx = QueryCtx::new();
+    let mut cnt = CountOnly::new(tau);
+    t.run(q, &mut ctx, &mut cnt);
+    let mut topk = TopK::new(5, tau);
+    t.run(q, &mut ctx, &mut topk);
+    (ids, cnt.count(), topk.finish())
+}
+
+fn check_trie<T: SketchTrie + Persist>(t: &T, label: &str, qs: &[Vec<u8>], taus: &[usize]) {
+    check_persist(t, label, |orig, loaded| {
+        for q in qs {
+            for &tau in taus {
+                assert_eq!(
+                    trie_results(orig, q, tau),
+                    trie_results(loaded, q, tau),
+                    "{label}: tau={tau} q={q:?}"
+                );
+            }
+        }
+    });
+}
+
+fn check_index<T: SearchIndex + Persist>(t: &T, label: &str, qs: &[Vec<u8>], taus: &[usize]) {
+    check_persist(t, label, |orig, loaded| {
+        for q in qs {
+            for &tau in taus {
+                assert_eq!(orig.search(q, tau), loaded.search(q, tau), "{label} tau={tau}");
+                assert_eq!(orig.count(q, tau), loaded.count(q, tau), "{label} tau={tau}");
+            }
+            let tau = *taus.last().unwrap();
+            assert_eq!(orig.top_k(q, 5, tau), loaded.top_k(q, 5, tau), "{label} topk");
+        }
+    });
+}
+
+#[test]
+fn all_tries_roundtrip_across_b() {
+    for &(b, l) in &SHAPES {
+        let rows = clustered_rows(b, l, 400, (b * 131 + l) as u64);
+        let set = SketchSet::from_rows(b, l, &rows);
+        let ss = SortedSketches::build(&set);
+        let qs = queries(&rows, b, l, 0xA1);
+        let taus = [0usize, 1, 2];
+
+        let bst = BstTrie::build(&ss, BstConfig::default());
+        check_trie(&bst, &format!("bST b={b}"), &qs, &taus);
+        // forced layer corners exercise every middle representation
+        for (lm, ls) in [(0usize, l), (0, 0), (1, l / 2)] {
+            let cfg = BstConfig { lm: Some(lm), ls: Some(ls), ..Default::default() };
+            let t = BstTrie::build(&ss, cfg);
+            check_trie(&t, &format!("bST b={b} lm={lm} ls={ls}"), &qs, &taus);
+        }
+        check_trie(&LoudsTrie::build(&ss), &format!("LOUDS b={b}"), &qs, &taus);
+        check_trie(&FstTrie::build(&ss), &format!("FST b={b}"), &qs, &taus);
+        check_trie(&PointerTrie::build(&ss), &format!("PT b={b}"), &qs, &taus);
+    }
+}
+
+#[test]
+fn all_indexes_roundtrip_across_b() {
+    for &(b, l) in &SHAPES {
+        let rows = clustered_rows(b, l, 350, (b * 37 + l) as u64);
+        let set = SketchSet::from_rows(b, l, &rows);
+        let qs = queries(&rows, b, l, 0xB2);
+        let taus = [0usize, 1, 2];
+        // SIH enumerates the full signature ball — keep its radius tight
+        // for the wide alphabet.
+        let sih_taus: &[usize] = if b >= 4 { &[0, 1] } else { &[0, 1, 2] };
+
+        check_index(
+            &SingleBst::build(&set, BstConfig::default()),
+            &format!("SI-bST b={b}"),
+            &qs,
+            &taus,
+        );
+        check_index(&SingleLouds::build(&set), &format!("SI-LOUDS b={b}"), &qs, &taus);
+        check_index(&SingleFst::build(&set), &format!("SI-FST b={b}"), &qs, &taus);
+        check_index(&MultiBst::build(&set, 2), &format!("MI-bST b={b}"), &qs, &taus);
+        check_index(&Mih::build(&set, 2), &format!("MIH b={b}"), &qs, &taus);
+        check_index(&Sih::build(&set), &format!("SIH b={b}"), &qs, sih_taus);
+        check_index(&HmSearch::build(&set, 2), &format!("HmSearch b={b}"), &qs, &taus);
+        check_index(&LinearScan::build(&set), &format!("LinearScan b={b}"), &qs, &taus);
+    }
+}
+
+#[test]
+fn mixed_key_indexes_roundtrip() {
+    // b=8, L=12 → 96-bit sketches: SIH carries a verification store and
+    // MIH (m=1) uses mixed block keys.
+    let (b, l) = (8usize, 12usize);
+    let rows = clustered_rows(b, l, 250, 0xC3);
+    let set = SketchSet::from_rows(b, l, &rows);
+    let qs = queries(&rows, b, l, 0xC4);
+    check_index(&Sih::build(&set), "SIH mixed", &qs, &[0, 1]);
+    check_index(&Mih::build(&set, 1), "MIH mixed", &qs, &[0, 1]);
+}
+
+#[test]
+fn cross_structure_corruption_is_rejected() {
+    // A valid LOUDS payload must not parse as a bST (and vice versa):
+    // the layered validation catches shape mismatches, not just EOF.
+    let rows = clustered_rows(2, 10, 200, 0xD5);
+    let set = SketchSet::from_rows(2, 10, &rows);
+    let ss = SortedSketches::build(&set);
+    let bst_bytes = to_payload(&BstTrie::build(&ss, BstConfig::default()));
+    let louds_bytes = to_payload(&LoudsTrie::build(&ss));
+    assert!(from_payload::<LoudsTrie>(&mut ByteReader::new(&bst_bytes)).is_err());
+    assert!(from_payload::<BstTrie>(&mut ByteReader::new(&louds_bytes)).is_err());
+}

@@ -1,12 +1,15 @@
 //! Acceptance check for the query-execution refactor: after one warm-up
 //! query per shape, a `BstTrie` threshold search performs **zero** heap
 //! allocations — the packed query planes, the middle-layer fan-out buffer
-//! and the hit vector are all reused through `QueryCtx` / `CollectIds`.
+//! and the hit vector are all reused through `QueryCtx` / `CollectIds` —
+//! and so does a top-k search: the adaptive heap is parked in `QueryCtx`
+//! between queries (`SearchIndex::top_k_into`).
 //!
 //! Measured with a counting global allocator. This file intentionally
 //! contains a single `#[test]` so no sibling test thread allocates inside
 //! the measurement window.
 
+use bst::index::{SearchIndex, SingleBst};
 use bst::query::{CollectIds, CountOnly, QueryCtx};
 use bst::sketch::SketchSet;
 use bst::trie::bst::{BstConfig, BstTrie};
@@ -105,4 +108,32 @@ fn bst_search_is_allocation_free_after_warmup() {
         "bST threshold search must be allocation-free after QueryCtx warm-up"
     );
     assert!(!out.is_empty(), "last query returned its own posting group");
+
+    // --- Top-k: the heap lives in QueryCtx; after warm-up the whole
+    // nearest-neighbor query (traversal + heap + drained results) must
+    // not touch the allocator either.
+    let idx = SingleBst::build(&set, BstConfig::default());
+    let mut topk_ctx = QueryCtx::new();
+    let mut hits: Vec<(u32, usize)> = Vec::new();
+    let ks = [1usize, 8, 32];
+    for q in &queries {
+        for &k in &ks {
+            idx.top_k_into(q, k, l, &mut topk_ctx, &mut hits);
+        }
+    }
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    for _ in 0..3 {
+        for q in &queries {
+            for &k in &ks {
+                idx.top_k_into(q, k, l, &mut topk_ctx, &mut hits);
+                assert!(!hits.is_empty(), "query is a database row");
+            }
+        }
+    }
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "top-k must be allocation-free after the QueryCtx heap warms up"
+    );
 }

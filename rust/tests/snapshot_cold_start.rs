@@ -1,0 +1,89 @@
+//! Acceptance check for serve-from-snapshot cold start: `Engine::load`
+//! answers `search` / `count` / `topk` identically to `Engine::build`
+//! over the same sketches, and loading performs **zero** reconstruction —
+//! no `SortedSketches::build`, no rank/select directory builds.
+//!
+//! The no-rebuild proof uses process-global counters, so this file
+//! intentionally contains a single `#[test]` (sibling tests in the same
+//! binary would race the counters).
+
+use bst::bits::rsvec::directory_builds;
+use bst::coordinator::engine::{Engine, ShardIndexKind};
+use bst::sketch::SketchSet;
+use bst::trie::builder::build_invocations;
+use bst::trie::bst::BstConfig;
+use bst::util::Rng;
+
+#[test]
+fn engine_load_serves_without_reconstruction() {
+    let (b, l, n) = (2usize, 16usize, 2000usize);
+    let mut rng = Rng::new(0xC01D);
+    let centers: Vec<Vec<u8>> = (0..10)
+        .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+        .collect();
+    let rows: Vec<Vec<u8>> = (0..n)
+        .map(|_| {
+            let mut r = centers[rng.below_usize(10)].clone();
+            for _ in 0..rng.below_usize(4) {
+                let p = rng.below_usize(l);
+                r[p] = rng.below(1 << b) as u8;
+            }
+            r
+        })
+        .collect();
+    let set = SketchSet::from_rows(b, l, &rows);
+
+    let dir = std::env::temp_dir().join("bst_cold_start_test");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    for (kind, name) in [
+        (ShardIndexKind::Bst(BstConfig::default()), "si-bst"),
+        (ShardIndexKind::MultiBst(2), "mi-bst"),
+    ] {
+        let built = Engine::build(&set, 3, &kind);
+        let path = dir.join(format!("{name}.snap"));
+        built.save(&path).unwrap();
+
+        let builds_before = build_invocations();
+        let dirs_before = directory_builds();
+        let loaded = Engine::load(&path).unwrap();
+        assert_eq!(
+            build_invocations(),
+            builds_before,
+            "{name}: load must not re-run SortedSketches::build"
+        );
+        assert_eq!(
+            directory_builds(),
+            dirs_before,
+            "{name}: load must not rebuild any rank/select directory"
+        );
+        assert_eq!(loaded.n(), built.n());
+        assert_eq!(loaded.l(), built.l());
+        assert_eq!(loaded.n_shards(), built.n_shards());
+        // heap_bytes counts capacity, and loaded vectors are exact-sized
+        // where built ones may carry growth slack — so compare loosely.
+        assert!(loaded.heap_bytes() > 0);
+        assert!(loaded.heap_bytes() <= built.heap_bytes(), "{name}: loaded is never larger");
+
+        let mut qrng = Rng::new(0x5EED);
+        for _ in 0..10 {
+            let q = rows[qrng.below_usize(rows.len())].clone();
+            for tau in [0usize, 1, 3, 5] {
+                let mut a = built.search(&q, tau);
+                let mut b = loaded.search(&q, tau);
+                a.sort();
+                b.sort();
+                assert_eq!(a, b, "{name}: search tau={tau}");
+                assert_eq!(built.count(&q, tau), loaded.count(&q, tau), "{name}: count");
+            }
+            for k in [1usize, 10, 100] {
+                assert_eq!(
+                    built.top_k(&q, k, l),
+                    loaded.top_k(&q, k, l),
+                    "{name}: topk k={k}"
+                );
+            }
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+}
