@@ -1,7 +1,12 @@
 //! §V-C preliminary experiment: naive vs horizontal-SWAR vs vertical
 //! Hamming distance. The paper reports the vertical format "more than an
 //! order of magnitude faster" than naive for 32-dim 4-bit sketches —
-//! this bench regenerates that comparison (plus every dataset config).
+//! this bench regenerates that comparison (plus every dataset config),
+//! then compares the *verification kernels*: per-item `ham()` extraction
+//! vs the streaming range kernel (`ham_range_leq`) vs the batched
+//! candidate kernel (`ham_many_leq`) at a selective threshold — the
+//! regime every verifier (bST sparse scan, linear, MI-bST, SIH,
+//! HmSearch) actually runs in.
 //!
 //! Run: `cargo bench --bench hamming`
 
@@ -61,5 +66,74 @@ fn main() {
             naive / horizontal
         );
         println!("vertical   {vertical:>10.1} us   {:.1}x", naive / vertical);
+
+        // --- verification kernels at a selective threshold (the
+        // verifiers' operating point: most items are over-threshold).
+        let tau = (l / 8).max(1);
+        let per_item = measure(10, Duration::from_millis(400), || {
+            // the pre-kernel verification loop: full per-item fold,
+            // threshold applied after the fact
+            let mut hits = 0usize;
+            for i in 0..n {
+                if vert.ham(i, &q_planes) <= tau {
+                    hits += 1;
+                }
+            }
+            sink(hits);
+        })
+        .mean();
+        let per_item_leq = measure(10, Duration::from_millis(400), || {
+            // per-item with the between-plane early exit (ham_leq),
+            // still one dispatch per item
+            let mut hits = 0usize;
+            for i in 0..n {
+                if vert.ham_leq(i, &q_planes, tau).is_some() {
+                    hits += 1;
+                }
+            }
+            sink(hits);
+        })
+        .mean();
+        let range = measure(10, Duration::from_millis(400), || {
+            let mut hits = 0usize;
+            vert.ham_range_leq(0, n, &q_planes, tau, |_, verdict| {
+                hits += usize::from(verdict.is_some());
+                Some(tau)
+            });
+            sink(hits);
+        })
+        .mean();
+        // near-sorted candidate list (every 3rd item), as postings are
+        let ids: Vec<u32> = (0..n as u32).step_by(3).collect();
+        let batch = measure(10, Duration::from_millis(400), || {
+            let mut hits = 0usize;
+            vert.ham_many_leq(&ids, &q_planes, tau, |_, verdict| {
+                hits += usize::from(verdict.is_some());
+                Some(tau)
+            });
+            sink(hits);
+        })
+        .mean();
+        let per_ns = |us: f64, items: usize| us * 1000.0 / items as f64;
+        println!("-- verification kernels, tau={tau} --");
+        println!(
+            "per-item ham        {per_item:>10.1} us   {:>6.2} ns/item   1.0x",
+            per_ns(per_item, n)
+        );
+        println!(
+            "per-item ham_leq    {per_item_leq:>10.1} us   {:>6.2} ns/item   {:.1}x",
+            per_ns(per_item_leq, n),
+            per_item / per_item_leq
+        );
+        println!(
+            "range kernel        {range:>10.1} us   {:>6.2} ns/item   {:.1}x",
+            per_ns(range, n),
+            per_item / range
+        );
+        println!(
+            "batch kernel        {batch:>10.1} us   {:>6.2} ns/item   {:.1}x vs per-item on same ids",
+            per_ns(batch, ids.len()),
+            per_item * (ids.len() as f64 / n as f64) / batch
+        );
     }
 }

@@ -1,0 +1,117 @@
+//! Perf-trajectory experiment (`bst bench`): machine-readable per-query
+//! latency points comparing bST against the linear-scan floor.
+//!
+//! Every PR that touches a hot path re-runs this and commits/uploads the
+//! resulting `BENCH_*.json`, so the repo accumulates a comparable series
+//! of perf measurements (schema `bst-bench-v1`): one row per
+//! `(dataset, index, tau)` with `n`, `b`, `L`, p50/p99 latency in µs and
+//! throughput in M queries/s. Absolute numbers are testbed-specific —
+//! the trajectory (and the bST-vs-linear gap) is the signal.
+
+use super::EvalOpts;
+use crate::data::{self, Dataset, GenConfig};
+use crate::index::{LinearScan, SearchIndex, SingleBst};
+use crate::query::{CollectIds, QueryCtx};
+use crate::trie::bst::BstConfig;
+use crate::util::json::Json;
+use crate::util::timer::{Stats, Timer};
+
+/// Runs the experiment; returns `(markdown report, json payload)`.
+pub fn bench(opts: &EvalOpts, datasets: &[Dataset]) -> (String, Json) {
+    let mut md = String::from("# bench — perf trajectory (bST vs linear)\n\n");
+    md.push_str("| dataset | index | n | b | L | tau | p50 us | p99 us | Mq/s |\n");
+    md.push_str("|---|---|---|---|---|---|---|---|---|\n");
+    let mut rows: Vec<Json> = Vec::new();
+
+    for &ds in datasets {
+        let cfg = GenConfig::for_dataset(ds, opts.scale, opts.seed, opts.threads);
+        let w = data::generate_workload(ds, &cfg);
+        let set = &w.sketches;
+        let bst = SingleBst::build(set, BstConfig::default());
+        let linear = LinearScan::build(set);
+        let indexes: [(&str, &dyn SearchIndex); 2] = [("si-bst", &bst), ("linear", &linear)];
+
+        for (name, idx) in indexes {
+            for &tau in &[1usize, 2, 4] {
+                let mut ctx = QueryCtx::new();
+                let mut out: Vec<u32> = Vec::new();
+                // warm-up: size the scratch, touch the structure
+                for q in w.queries.iter().take(8) {
+                    out.clear();
+                    let mut coll = CollectIds::new(tau, &mut out);
+                    idx.run(q, &mut ctx, &mut coll);
+                }
+                let mut lat = Stats::new();
+                let mut solutions = 0usize;
+                for qi in 0..opts.queries {
+                    let q = &w.queries[qi % w.queries.len()];
+                    let t = Timer::start();
+                    out.clear();
+                    let mut coll = CollectIds::new(tau, &mut out);
+                    idx.run(q, &mut ctx, &mut coll);
+                    lat.push(t.elapsed_us());
+                    solutions += out.len();
+                }
+                let (p50, p99, mean) = (lat.p50(), lat.p99(), lat.mean());
+                let mqps = if mean > 0.0 { 1.0 / mean } else { 0.0 };
+                md.push_str(&format!(
+                    "| {} | {name} | {} | {} | {} | {tau} | {p50:.2} | {p99:.2} | {mqps:.3} |\n",
+                    ds.name(),
+                    set.n(),
+                    set.b(),
+                    set.l()
+                ));
+                rows.push(Json::obj(vec![
+                    ("dataset", Json::str(ds.name())),
+                    ("index", Json::str(name)),
+                    ("n", Json::num(set.n() as f64)),
+                    ("b", Json::num(set.b() as f64)),
+                    ("l", Json::num(set.l() as f64)),
+                    ("tau", Json::num(tau as f64)),
+                    ("queries", Json::num(opts.queries as f64)),
+                    ("avg_solutions", Json::num(solutions as f64 / opts.queries.max(1) as f64)),
+                    ("p50_us", Json::num(p50)),
+                    ("p99_us", Json::num(p99)),
+                    ("mean_us", Json::num(mean)),
+                    ("mqps", Json::num(mqps)),
+                ]));
+            }
+        }
+    }
+
+    let payload = Json::obj(vec![
+        ("schema", Json::str("bst-bench-v1")),
+        (
+            "config",
+            Json::obj(vec![
+                ("scale", Json::num(opts.scale)),
+                ("queries", Json::num(opts.queries as f64)),
+                ("seed", Json::num(opts.seed as f64)),
+            ]),
+        ),
+        ("rows", Json::Arr(rows)),
+    ]);
+    (md, payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_emits_rows_for_every_cell() {
+        let opts = EvalOpts { scale: 0.005, queries: 4, ..Default::default() };
+        let (md, payload) = bench(&opts, &[Dataset::Review]);
+        assert!(md.contains("si-bst") && md.contains("linear"));
+        let rows = payload.get("rows").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(rows.len(), 2 * 3, "2 indexes x 3 taus");
+        for row in rows {
+            assert!(row.get("p50_us").and_then(Json::as_f64).is_some());
+            assert!(row.get("mqps").and_then(Json::as_f64).unwrap() >= 0.0);
+        }
+        assert_eq!(
+            payload.get("schema").and_then(Json::as_str),
+            Some("bst-bench-v1")
+        );
+    }
+}

@@ -12,11 +12,13 @@
 //! | §VI-C m-sweep                 | [`tables::msweep`] |
 //! | pruning stats (beyond-paper)  | [`tables::pruning`] |
 //! | top-k timing (beyond-paper)   | [`tables::topk`] |
+//! | perf trajectory (`BENCH_*.json`) | [`bench::bench`] |
 //!
 //! Output is Markdown (piped into EXPERIMENTS.md). Absolute numbers are
 //! testbed-specific; the *shapes* (who wins, by what factor, where the
 //! crossovers sit) are the reproduction targets — see EXPERIMENTS.md.
 
+pub mod bench;
 pub mod cost;
 pub mod report;
 pub mod tables;

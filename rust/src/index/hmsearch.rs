@@ -46,13 +46,22 @@ struct Block {
     scheme: Scheme,
 }
 
+/// Reusable per-query probe state: the epoch-based visited set plus the
+/// deduplicated candidate buffer of one probe (verified in a single
+/// batched kernel call).
+struct ProbeState {
+    epochs: Vec<u32>,
+    cur: u32,
+    cands: Vec<u32>,
+}
+
 /// HmSearch index for thresholds `<= tau_max`.
 pub struct HmSearch {
     blocks: Vec<Block>,
     b: usize,
     tau_max: usize,
     vertical: VerticalSet,
-    visited: Mutex<(Vec<u32>, u32)>,
+    state: Mutex<ProbeState>,
 }
 
 #[inline]
@@ -184,7 +193,7 @@ impl HmSearch {
             b,
             tau_max,
             vertical: VerticalSet::from_horizontal(set),
-            visited: Mutex::new((vec![0u32; set.n()], 0)),
+            state: Mutex::new(ProbeState { epochs: vec![0u32; set.n()], cur: 0, cands: Vec::new() }),
         }
     }
 
@@ -263,7 +272,7 @@ impl Persist for HmSearch {
             b,
             tau_max,
             vertical,
-            visited: Mutex::new((vec![0u32; n], 0)),
+            state: Mutex::new(ProbeState { epochs: vec![0u32; n], cur: 0, cands: Vec::new() }),
         })
     }
 }
@@ -277,8 +286,8 @@ impl SearchIndex for HmSearch {
             self.tau_max
         );
         let q_planes = self.vertical.pack_query(q);
-        let mut guard = self.visited.lock().unwrap();
-        let (epochs, cur) = &mut *guard;
+        let mut guard = self.state.lock().unwrap();
+        let ProbeState { epochs, cur, cands } = &mut *guard;
         *cur = cur.wrapping_add(1);
         if *cur == 0 {
             epochs.fill(0);
@@ -287,15 +296,22 @@ impl SearchIndex for HmSearch {
         for blk in &self.blocks {
             let q_block = &q[blk.lo..blk.hi];
             let mut probe = |key: u64, c: &mut dyn Collector| {
+                // Dedup the probe's posting list, then verify the
+                // surviving candidates in one batched kernel call.
+                cands.clear();
                 for &id in blk.index.get(key) {
                     let e = &mut epochs[id as usize];
                     if *e != *cur {
                         *e = *cur;
-                        if let Some(d) = self.vertical.ham_leq(id as usize, &q_planes, c.tau()) {
-                            c.emit(&[id], d);
-                        }
+                        cands.push(id);
                     }
                 }
+                self.vertical.ham_many_leq(cands, &q_planes, c.tau(), |id, verdict| {
+                    if let Some(d) = verdict {
+                        c.emit(&[id], d);
+                    }
+                    Some(c.tau())
+                });
             };
             match blk.scheme {
                 Scheme::Substitution => {
@@ -319,7 +335,7 @@ impl SearchIndex for HmSearch {
             .map(|b| b.index.heap_bytes())
             .sum::<usize>()
             + self.vertical.heap_bytes()
-            + self.visited.lock().unwrap().0.heap_bytes()
+            + self.state.lock().unwrap().epochs.heap_bytes()
     }
 
     fn name(&self) -> String {

@@ -39,15 +39,23 @@ impl SearchIndex for LinearScan {
     fn run(&self, q: &[u8], ctx: &mut QueryCtx, c: &mut dyn Collector) {
         // Reuse the caller's plane scratch: the scan is allocation-free.
         self.vertical.pack_query_into(q, &mut ctx.q_planes);
-        let qp = &ctx.q_planes;
-        for i in 0..self.vertical.n() {
-            c.on_visit();
-            if let Some(d) = self.vertical.ham_leq(i, qp, c.tau()) {
-                c.emit(&[i as u32], d);
-            } else {
-                c.on_prune();
+        let n = self.vertical.n();
+        // One streaming kernel call over the whole database: sequential
+        // word loads with the b>1 lower-bound early exit, re-reading the
+        // collector's live threshold per row. Every row is visited
+        // exactly once and pruned-row counts are order-independent, so
+        // both are accounted through the batched hooks (one virtual call
+        // each instead of n).
+        c.on_visit_many(n);
+        let mut pruned = 0usize;
+        self.vertical.ham_range_leq(0, n, &ctx.q_planes, c.tau(), |i, verdict| {
+            match verdict {
+                Some(d) => c.emit(&[i as u32], d),
+                None => pruned += 1,
             }
-        }
+            Some(c.tau())
+        });
+        c.on_prune_many(pruned);
     }
 
     fn heap_bytes(&self) -> usize {

@@ -7,10 +7,13 @@
 //!    [`super::blocks`]) reports candidate ids whose block is within
 //!    `θ_j` of the query block;
 //! 2. **verification** — candidates are deduplicated (epoch array — no
-//!    clearing between queries) and their *full* Hamming distance checked
-//!    with the vertical bit-parallel kernel against the collector's
-//!    *live* threshold, so top-k queries tighten verification as the
-//!    heap fills.
+//!    clearing between queries) into a reusable buffer, and each block's
+//!    buffer is verified in **one batched kernel call**
+//!    ([`crate::sketch::VerticalSet::ham_many_leq`]) against the
+//!    collector's *live* threshold, so top-k queries tighten verification
+//!    as the heap fills. (Verification of a block's candidates happens
+//!    after that block's filtering rather than interleaved per candidate;
+//!    result sets are unchanged — adaptive collectors only ever tighten.)
 //!
 //! All per-query state (epoch array, packed query planes, the bST block
 //! filter's traversal scratch) lives behind one mutex and is reused
@@ -123,6 +126,9 @@ struct QueryState {
     visited: Visited,
     scratch: BlockScratch,
     q_planes: Vec<u64>,
+    /// Deduplicated candidates of one block, verified in a single
+    /// batched kernel call.
+    cands: Vec<u32>,
 }
 
 /// Generic multi-index.
@@ -157,6 +163,7 @@ impl<F: BlockFilter> MultiIndex<F> {
                     row: Vec::new(),
                 },
                 q_planes: Vec::new(),
+                cands: Vec::new(),
             }),
         }
     }
@@ -184,24 +191,34 @@ impl<F: BlockFilter> MultiIndex<F> {
         let vertical = &self.vertical;
 
         let mut guard = self.state.lock().unwrap();
-        let QueryState { visited, scratch, q_planes } = &mut *guard;
+        let QueryState { visited, scratch, q_planes, cands } = &mut *guard;
         visited.next_query();
         vertical.pack_query_into(q, q_planes);
         for (j, &(lo, hi)) in self.ranges.iter().enumerate() {
             let Some(tau_j) = thresholds[j] else { continue };
             let q_block = &q[lo..hi];
-            let q_planes = &*q_planes;
-            let visited = &mut *visited;
-            let stats = &mut *stats;
-            let c = &mut *c;
-            self.filters[j].candidates(q_block, tau_j, scratch, &mut |id| {
-                stats.emitted += 1;
-                if visited.insert(id) {
-                    stats.verified += 1;
-                    if let Some(d) = vertical.ham_leq(id as usize, q_planes, c.tau()) {
-                        c.emit(&[id], d);
+            // Filter: deduplicate this block's candidates into the
+            // reusable buffer (no verification yet).
+            cands.clear();
+            {
+                let visited = &mut *visited;
+                let stats = &mut *stats;
+                let cands = &mut *cands;
+                self.filters[j].candidates(q_block, tau_j, scratch, &mut |id| {
+                    stats.emitted += 1;
+                    if visited.insert(id) {
+                        stats.verified += 1;
+                        cands.push(id);
                     }
+                });
+            }
+            // Verify: one batched bit-parallel kernel call per block,
+            // against the collector's live threshold.
+            vertical.ham_many_leq(cands, q_planes, c.tau(), |id, verdict| {
+                if let Some(d) = verdict {
+                    c.emit(&[id], d);
                 }
+                Some(c.tau())
             });
         }
     }
@@ -290,6 +307,7 @@ impl<F: BlockFilter + Persist> Persist for MultiIndex<F> {
                     row: Vec::new(),
                 },
                 q_planes: Vec::new(),
+                cands: Vec::new(),
             }),
         })
     }

@@ -139,19 +139,21 @@ impl Sih {
                 true
             })
         } else {
-            // enumerate signature *rows*, mix each into a key, verify hits
+            // enumerate signature *rows*, mix each into a key, and verify
+            // each key's posting list through the batched kernel
+            let vertical = self.vertical.as_ref().unwrap();
+            let q_planes = q_planes.as_ref().unwrap();
             let mut row = q.to_vec();
             self.enumerate_rows_capped(&mut row, 0, tau, &mut |r| {
                 let key = self.key_of(r);
-                for &id in self.index.get(key) {
-                    if let Some(d) = self
-                        .vertical
-                        .as_ref()
-                        .unwrap()
-                        .ham_leq(id as usize, q_planes.as_ref().unwrap(), c.tau())
-                    {
-                        c.emit(&[id], d);
-                    }
+                let ids = self.index.get(key);
+                if !ids.is_empty() {
+                    vertical.ham_many_leq(ids, q_planes, c.tau(), |id, verdict| {
+                        if let Some(d) = verdict {
+                            c.emit(&[id], d);
+                        }
+                        Some(c.tau())
+                    });
                 }
                 since_check += 1;
                 if since_check >= 4096 {

@@ -4,6 +4,7 @@
 //! bst eval <table1|table2|table3|table4|fig7|fig8|msweep|all> [--datasets a,b]
 //!          [--scale F] [--queries N] [--sih-cap S] [--mem-cap-gib G]
 //!          [--seed S] [--threads T]
+//! bst bench [--out BENCH_prN.json] [--datasets a,b] [--scale F] [--queries N]
 //! bst sketch --dataset D [--scale F] [--out FILE] [--xla]   # ingestion
 //! bst build  --in FILE [--index si-bst|mi-bst|...]          # index stats
 //!            [--save SNAP --shards S]                       # engine snapshot
@@ -18,7 +19,7 @@ use bst::cli::Args;
 use bst::coordinator::engine::{Engine, ShardIndexKind};
 use bst::coordinator::{server, ServeConfig};
 use bst::data::{self, Dataset};
-use bst::eval::{cost, tables, EvalOpts};
+use bst::eval::{bench, cost, tables, EvalOpts};
 use bst::index::SearchIndex;
 use bst::trie::bst::BstConfig;
 use bst::trie::SketchTrie;
@@ -30,6 +31,7 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
         "eval" => cmd_eval(&args),
+        "bench" => cmd_bench(&args),
         "sketch" => cmd_sketch(&args),
         "build" => cmd_build(&args),
         "query" => cmd_query(&args),
@@ -53,6 +55,10 @@ USAGE:
                       [--datasets review,cp,sift,gist] [--scale F]
                       [--queries N] [--sih-cap SECS] [--mem-cap-gib G]
                       [--seed S] [--threads T]
+  bst bench           perf-trajectory point: bST vs linear per-query
+                      latency (p50/p99 us, Mq/s) as Markdown + JSON
+                      [--out BENCH_prN.json] [--datasets a,b] [--scale F]
+                      [--queries N] [--seed S] [--threads T]
   bst sketch          generate + sketch a synthetic dataset
                       --dataset D [--scale F] [--out FILE] [--xla]
   bst build           build an index over saved sketches, print stats
@@ -141,6 +147,27 @@ fn cmd_eval(args: &Args) -> i32 {
         }
     };
     println!("{out}");
+    0
+}
+
+fn cmd_bench(args: &Args) -> i32 {
+    let opts = eval_opts(args);
+    let datasets = parse_datasets(args);
+    eprintln!(
+        "# bench: datasets={:?} scale={} queries={}",
+        datasets.iter().map(|d| d.name()).collect::<Vec<_>>(),
+        opts.scale,
+        opts.queries
+    );
+    let (md, payload) = bench::bench(&opts, &datasets);
+    println!("{md}");
+    if let Some(path) = args.get("out") {
+        if let Err(e) = std::fs::write(path, payload.to_string() + "\n") {
+            eprintln!("writing {path}: {e}");
+            return 1;
+        }
+        eprintln!("wrote {path}");
+    }
     0
 }
 

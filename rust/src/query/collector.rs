@@ -39,6 +39,27 @@ pub trait Collector {
     /// A child/candidate was cut by the distance budget.
     #[inline]
     fn on_prune(&mut self) {}
+
+    /// Batched form of [`Collector::on_visit`]: `n` nodes/candidates
+    /// entered at once. Range kernels account a whole scanned block with
+    /// one call instead of `n` per-item hook invocations; the default
+    /// expands to `n` single visits so observers that only override
+    /// `on_visit` stay exact.
+    #[inline]
+    fn on_visit_many(&mut self, n: usize) {
+        for _ in 0..n {
+            self.on_visit();
+        }
+    }
+
+    /// Batched form of [`Collector::on_prune`] (see
+    /// [`Collector::on_visit_many`]).
+    #[inline]
+    fn on_prune_many(&mut self, n: usize) {
+        for _ in 0..n {
+            self.on_prune();
+        }
+    }
 }
 
 /// Forwarding impl so monomorphized traversals accept `&mut dyn Collector`
@@ -62,6 +83,16 @@ impl<C: Collector + ?Sized> Collector for &mut C {
     #[inline]
     fn on_prune(&mut self) {
         (**self).on_prune()
+    }
+
+    #[inline]
+    fn on_visit_many(&mut self, n: usize) {
+        (**self).on_visit_many(n)
+    }
+
+    #[inline]
+    fn on_prune_many(&mut self, n: usize) {
+        (**self).on_prune_many(n)
     }
 }
 
@@ -247,5 +278,15 @@ impl<C: Collector> Collector for StatsObserver<C> {
     #[inline]
     fn on_prune(&mut self) {
         self.stats.pruned += 1;
+    }
+
+    #[inline]
+    fn on_visit_many(&mut self, n: usize) {
+        self.stats.visited += n;
+    }
+
+    #[inline]
+    fn on_prune_many(&mut self, n: usize) {
+        self.stats.pruned += n;
     }
 }

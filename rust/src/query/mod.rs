@@ -109,6 +109,19 @@ mod tests {
     }
 
     #[test]
+    fn batched_hooks_equal_n_single_hooks() {
+        // range kernels account whole blocks; totals must match n
+        // individual hook calls both for observers and for defaults.
+        let mut obs = StatsObserver::new(CountOnly::new(1));
+        obs.on_visit_many(5);
+        obs.on_prune_many(3);
+        assert_eq!((obs.stats.visited, obs.stats.pruned), (5, 3));
+        let dyn_obs: &mut dyn Collector = &mut obs;
+        dyn_obs.on_visit_many(2);
+        assert_eq!(obs.stats.visited, 7);
+    }
+
+    #[test]
     fn ctx_kid_buffer_is_sized_from_sigma() {
         let mut ctx = QueryCtx::new();
         ctx.ensure_kids(1 << 8, 4);

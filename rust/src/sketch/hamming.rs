@@ -39,10 +39,10 @@ fn lane_nonzero(x: u64, b: usize) -> u64 {
 
 /// Horizontal Hamming distance between two packed sketches (same layout as
 /// [`super::SketchSet`]): XOR words, collapse each b-bit lane to one bit,
-/// popcount. Padding lanes (beyond `l` chars) are zero in both inputs, so
-/// they never contribute.
+/// popcount. Padding lanes (beyond the sketch length) are zero in both
+/// inputs, so they never contribute.
 #[inline]
-pub fn ham_horizontal(a: &[u64], b: &[u64], bits: usize, _l: usize) -> usize {
+pub fn ham_horizontal(a: &[u64], b: &[u64], bits: usize) -> usize {
     debug_assert_eq!(a.len(), b.len());
     let mut total = 0usize;
     for (&x, &y) in a.iter().zip(b) {
@@ -67,12 +67,27 @@ pub fn ham_vertical(a_planes: &[u64], q_planes: &[u64]) -> usize {
 }
 
 /// Vertical Hamming with early-exit threshold: returns `None` if the
-/// distance exceeds `tau` (cheap because `acc` only grows).
+/// distance exceeds `tau`. For `b ∈ {4, 8}` the running popcount of the
+/// OR-accumulator — a lower bound on the final distance, since OR only
+/// grows — is checked between planes, so over-threshold items bail
+/// before touching all planes (previously `tau` was only applied after
+/// the full fold).
 #[inline]
 pub fn ham_vertical_leq(a_planes: &[u64], q_planes: &[u64], tau: usize) -> Option<usize> {
+    debug_assert_eq!(a_planes.len(), q_planes.len());
+    let b = a_planes.len();
     let mut acc = 0u64;
-    for (&x, &y) in a_planes.iter().zip(q_planes) {
-        acc |= x ^ y;
+    if b >= 4 {
+        for (k, (&x, &y)) in a_planes.iter().zip(q_planes).enumerate() {
+            if k > 0 && acc.count_ones() as usize > tau {
+                return None;
+            }
+            acc |= x ^ y;
+        }
+    } else {
+        for (&x, &y) in a_planes.iter().zip(q_planes) {
+            acc |= x ^ y;
+        }
     }
     let d = acc.count_ones() as usize;
     (d <= tau).then_some(d)
@@ -153,5 +168,26 @@ mod tests {
         let d = ham_vertical(&a, &q);
         assert_eq!(ham_vertical_leq(&a, &q, d), Some(d));
         assert_eq!(ham_vertical_leq(&a, &q, d.saturating_sub(1)), None);
+    }
+
+    #[test]
+    fn vertical_leq_early_exit_agrees_with_full_fold() {
+        // b = 4 and 8 take the incremental-lower-bound path; the verdict
+        // must match the full fold for every tau.
+        let mut rng = Rng::new(29);
+        for &b in &[4usize, 8] {
+            for _ in 0..200 {
+                let a: Vec<u64> = (0..b).map(|_| rng.next_u64()).collect();
+                let q: Vec<u64> = (0..b).map(|_| rng.next_u64()).collect();
+                let d = ham_vertical(&a, &q);
+                for tau in [0usize, d.saturating_sub(1), d, d + 1, 64] {
+                    assert_eq!(
+                        ham_vertical_leq(&a, &q, tau),
+                        (d <= tau).then_some(d),
+                        "b={b} d={d} tau={tau}"
+                    );
+                }
+            }
+        }
     }
 }

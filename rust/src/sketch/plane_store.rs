@@ -11,6 +11,45 @@
 //! ```text
 //! field(k, i) = ((w0 >> o) | (w1 << (63-o) << 1)) & mask
 //! ```
+//!
+//! # Verification kernels
+//!
+//! Beyond the per-item accessors, the store exposes streaming kernels
+//! that exploit the interleaved layout — consecutive items occupy
+//! consecutive words, so a scan over a contiguous range walks `words`
+//! strictly left-to-right:
+//!
+//! * [`PlaneStore::range_scan`] / [`RangeHam`] — a cursor over items
+//!   `[lo, hi)` carrying a rolling bit offset. Each `next_leq(tau)`
+//!   advances one item with sequential loads; no per-item
+//!   `i·b·width` re-derivation, no random `field()` extraction.
+//! * [`PlaneStore::ham_range_leq`] — loop driver over a cursor with a
+//!   per-item sink.
+//! * [`PlaneStore::ham_many_leq`] — batched verification of a scattered
+//!   candidate list: query-side setup (fast-path dispatch, one-word
+//!   query packing) is hoisted out of the loop, and each item still
+//!   costs only its own one-or-two cache lines.
+//!
+//! **Contract** (shared by all three):
+//!
+//! * Items are verified in the order given (ascending for ranges, list
+//!   order for candidate batches); the sink sees every verified item
+//!   exactly once.
+//! * The verdict is `Some(d)` iff the exact distance `d <= tau`, where
+//!   `tau` is the threshold *live at that item* — sinks return the
+//!   threshold for the next item (adaptive collectors keep tightening
+//!   mid-scan) or `None` to stop the scan early.
+//! * An over-threshold item yields `None` without a distance: for
+//!   `b > 1` the kernels bail out of the plane loop as soon as the
+//!   running OR-accumulator's popcount (a lower bound — OR only grows)
+//!   exceeds `tau`, so hopeless items never touch all planes.
+//! * Fast paths: `width == 64` (word-aligned fields, shift-free) and
+//!   `b·width == 64` (one word per item: single load, log₂(b)
+//!   shift-OR lane fold). Both produce bit-identical verdicts to the
+//!   generic path.
+//!
+//! The kernels change the *access pattern only* — the word layout (and
+//! therefore the snapshot encoding) is untouched.
 
 use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
 use crate::util::HeapSize;
@@ -107,11 +146,206 @@ impl PlaneStore {
         (acc & self.mask).count_ones() as usize
     }
 
-    /// `Some(d)` iff `ham(i, q) <= tau`.
+    /// `Some(d)` iff `ham(i, q) <= tau`, with an incremental lower-bound
+    /// early exit for `b > 1`: between planes, if the popcount of the
+    /// OR-accumulator (which only grows) already exceeds `tau`, the
+    /// remaining planes are never fetched.
     #[inline]
     pub fn ham_leq(&self, i: usize, q: &[u64], tau: usize) -> Option<usize> {
-        let d = self.ham(i, q);
+        debug_assert!(i < self.n);
+        debug_assert_eq!(q.len(), self.b);
+        if self.width == 64 {
+            self.ham_leq_aligned(i, q, tau)
+        } else {
+            self.ham_leq_stream(i * self.b * self.width, q, tau)
+        }
+    }
+
+    /// Word-aligned per-item verification (`width == 64`): no shifts.
+    #[inline(always)]
+    fn ham_leq_aligned(&self, i: usize, q: &[u64], tau: usize) -> Option<usize> {
+        let base = i * self.b;
+        let mut acc = 0u64;
+        for (k, &qk) in q.iter().enumerate() {
+            if k > 0 && acc.count_ones() as usize > tau {
+                return None;
+            }
+            acc |= self.words[base + k] ^ qk;
+        }
+        let d = acc.count_ones() as usize;
         (d <= tau).then_some(d)
+    }
+
+    /// Generic per-item verification at a pre-computed bit offset: the
+    /// two-word fetch per plane, with the incremental early exit. `acc`
+    /// carries garbage above `width` bits (neighboring fields), so every
+    /// popcount masks first.
+    #[inline(always)]
+    fn ham_leq_stream(&self, mut bit: usize, q: &[u64], tau: usize) -> Option<usize> {
+        let mut acc = 0u64;
+        for (k, &qk) in q.iter().enumerate() {
+            if k > 0 && (acc & self.mask).count_ones() as usize > tau {
+                return None;
+            }
+            let idx = bit >> 6;
+            let o = bit & 63;
+            let w0 = self.words[idx];
+            let w1 = self.words[idx + 1]; // padding keeps this in-bounds
+            acc |= ((w0 >> o) | ((w1 << (63 - o)) << 1)) ^ qk;
+            bit += self.width;
+        }
+        let d = (acc & self.mask).count_ones() as usize;
+        (d <= tau).then_some(d)
+    }
+
+    /// One-word-per-item verification (`b·width == 64`, `width < 64`):
+    /// single load, XOR against the pre-packed query word, then an
+    /// OR-fold of the `b` lanes down to the low `width` bits. `width`
+    /// divides 64 here, so it is a power of two and the halving fold is
+    /// exact.
+    #[inline(always)]
+    fn ham_leq_word(&self, i: usize, q_word: u64, tau: usize) -> Option<usize> {
+        let mut f = self.words[i] ^ q_word;
+        let mut step = 32usize;
+        while step >= self.width {
+            f |= f >> step;
+            step >>= 1;
+        }
+        let d = (f & self.mask).count_ones() as usize;
+        (d <= tau).then_some(d)
+    }
+
+    /// Packs the `b` query plane fields into the one-word item layout
+    /// (`q[k]` at bits `[k·width, (k+1)·width)`), for the
+    /// `b·width == 64` fast path.
+    #[inline]
+    fn pack_item_word(&self, q: &[u64]) -> u64 {
+        let mut w = 0u64;
+        for (k, &qk) in q.iter().enumerate() {
+            w |= (qk & self.mask) << (k * self.width);
+        }
+        w
+    }
+
+    /// Opens a streaming verification cursor over items `[lo, hi)` —
+    /// see the module docs for the kernel contract.
+    #[inline]
+    pub fn range_scan<'a>(&'a self, lo: usize, hi: usize, q: &'a [u64]) -> RangeHam<'a> {
+        assert!(lo <= hi && hi <= self.n, "range {lo}..{hi} out of 0..{}", self.n);
+        debug_assert_eq!(q.len(), self.b);
+        let item_bits = self.b * self.width;
+        let q_word = if self.width < 64 && item_bits == 64 {
+            self.pack_item_word(q)
+        } else {
+            0
+        };
+        RangeHam { store: self, q, q_word, item_bits, i: lo, hi, bit: lo * item_bits }
+    }
+
+    /// Streaming range kernel: verifies items `lo..hi` in ascending
+    /// order. `sink(i, verdict)` is called once per item and returns the
+    /// threshold for the next item (`None` stops the scan). The first
+    /// item is verified against `tau0`. See the module docs.
+    pub fn ham_range_leq<F>(&self, lo: usize, hi: usize, q: &[u64], tau0: usize, mut sink: F)
+    where
+        F: FnMut(usize, Option<usize>) -> Option<usize>,
+    {
+        let mut cur = self.range_scan(lo, hi, q);
+        let mut tau = tau0;
+        for i in lo..hi {
+            match sink(i, cur.next_leq(tau)) {
+                Some(t) => tau = t,
+                None => return,
+            }
+        }
+    }
+
+    /// Batched candidate kernel: verifies the (possibly duplicate-heavy,
+    /// typically near-sorted) id list in order. Same sink contract as
+    /// [`Self::ham_range_leq`]; the per-query setup (fast-path dispatch,
+    /// query-word packing) is hoisted out of the per-candidate loop.
+    pub fn ham_many_leq<F>(&self, ids: &[u32], q: &[u64], tau0: usize, mut sink: F)
+    where
+        F: FnMut(u32, Option<usize>) -> Option<usize>,
+    {
+        debug_assert_eq!(q.len(), self.b);
+        debug_assert!(ids.iter().all(|&id| (id as usize) < self.n));
+        let mut tau = tau0;
+        if self.width == 64 {
+            for &id in ids {
+                match sink(id, self.ham_leq_aligned(id as usize, q, tau)) {
+                    Some(t) => tau = t,
+                    None => return,
+                }
+            }
+            return;
+        }
+        let item_bits = self.b * self.width;
+        if item_bits == 64 {
+            let qw = self.pack_item_word(q);
+            for &id in ids {
+                match sink(id, self.ham_leq_word(id as usize, qw, tau)) {
+                    Some(t) => tau = t,
+                    None => return,
+                }
+            }
+            return;
+        }
+        for &id in ids {
+            match sink(id, self.ham_leq_stream(id as usize * item_bits, q, tau)) {
+                Some(t) => tau = t,
+                None => return,
+            }
+        }
+    }
+}
+
+/// Streaming verification cursor over a contiguous item range, created
+/// by [`PlaneStore::range_scan`]. Carries a rolling bit offset so every
+/// `next_leq` issues sequential loads; the fast-path dispatch and the
+/// one-word query packing happen once at construction.
+pub struct RangeHam<'a> {
+    store: &'a PlaneStore,
+    q: &'a [u64],
+    /// Pre-packed one-word query (`b·width == 64` fast path only).
+    q_word: u64,
+    /// Bits per item (`b·width`).
+    item_bits: usize,
+    /// Next item to verify.
+    i: usize,
+    /// Exclusive range end.
+    hi: usize,
+    /// Rolling bit cursor (`i · item_bits`).
+    bit: usize,
+}
+
+impl RangeHam<'_> {
+    /// Items not yet verified.
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.hi - self.i
+    }
+
+    /// Verifies the next item against the live threshold `tau` and
+    /// advances: `Some(d)` iff its exact distance `d <= tau` (over-
+    /// threshold items bail early without a full distance — see the
+    /// module docs). Must not be called past the range end.
+    #[inline]
+    pub fn next_leq(&mut self, tau: usize) -> Option<usize> {
+        debug_assert!(self.i < self.hi, "range cursor exhausted");
+        let s = self.store;
+        let i = self.i;
+        self.i += 1;
+        if s.width == 64 {
+            return s.ham_leq_aligned(i, self.q, tau);
+        }
+        let bit = self.bit;
+        self.bit += self.item_bits;
+        if self.item_bits == 64 {
+            s.ham_leq_word(i, self.q_word, tau)
+        } else {
+            s.ham_leq_stream(bit, self.q, tau)
+        }
     }
 }
 
@@ -201,5 +435,116 @@ mod tests {
         // upstream) but from_fn must not panic for n = 0 fields.
         let ps = PlaneStore::from_fn(2, 8, 0, |_, _| 0);
         assert_eq!(ps.n(), 0);
+    }
+
+    /// Shapes covering every kernel dispatch: generic streaming,
+    /// `b·width == 64` one-word, and `width == 64` aligned.
+    const KERNEL_SHAPES: &[(usize, usize)] =
+        &[(1, 16), (2, 16), (2, 32), (4, 16), (4, 32), (8, 8), (8, 64), (2, 21), (3, 13)];
+
+    #[test]
+    fn range_kernel_matches_per_item() {
+        let mut rng = Rng::new(5);
+        for &(b, width) in KERNEL_SHAPES {
+            let n = 150;
+            let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+            let vals: Vec<u64> = (0..b * n).map(|_| rng.next_u64() & mask).collect();
+            let ps = PlaneStore::from_fn(b, width, n, |k, i| vals[k * n + i]);
+            let q: Vec<u64> = (0..b).map(|_| rng.next_u64() & mask).collect();
+            for tau in [0usize, 1, width / 2, width] {
+                let (lo, hi) = (n / 5, n - n / 7);
+                let mut expect_i = lo;
+                ps.ham_range_leq(lo, hi, &q, tau, |i, verdict| {
+                    assert_eq!(i, expect_i);
+                    expect_i += 1;
+                    let d = ps.ham(i, &q);
+                    assert_eq!(verdict, (d <= tau).then_some(d), "b={b} w={width} i={i} tau={tau}");
+                    assert_eq!(verdict, ps.ham_leq(i, &q, tau));
+                    Some(tau)
+                });
+                assert_eq!(expect_i, hi, "b={b} w={width}: kernel must cover the range");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_kernel_matches_per_item_with_duplicates() {
+        let mut rng = Rng::new(6);
+        for &(b, width) in KERNEL_SHAPES {
+            let n = 120;
+            let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+            let vals: Vec<u64> = (0..b * n).map(|_| rng.next_u64() & mask).collect();
+            let ps = PlaneStore::from_fn(b, width, n, |k, i| vals[k * n + i]);
+            let q: Vec<u64> = (0..b).map(|_| rng.next_u64() & mask).collect();
+            // duplicate-heavy, unsorted candidate list
+            let ids: Vec<u32> = (0..3 * n).map(|_| rng.below(n as u64) as u32).collect();
+            let tau = width / 3;
+            let mut seen = 0usize;
+            ps.ham_many_leq(&ids, &q, tau, |id, verdict| {
+                assert_eq!(id, ids[seen]);
+                seen += 1;
+                let d = ps.ham(id as usize, &q);
+                assert_eq!(verdict, (d <= tau).then_some(d), "b={b} w={width} id={id}");
+                Some(tau)
+            });
+            assert_eq!(seen, ids.len());
+        }
+    }
+
+    #[test]
+    fn kernels_honor_live_tau_and_early_stop() {
+        let mut rng = Rng::new(7);
+        let (b, width, n) = (4usize, 32usize, 100usize);
+        let mask = (1u64 << width) - 1;
+        let vals: Vec<u64> = (0..b * n).map(|_| rng.next_u64() & mask).collect();
+        let ps = PlaneStore::from_fn(b, width, n, |k, i| vals[k * n + i]);
+        let q: Vec<u64> = (0..b).map(|_| rng.next_u64() & mask).collect();
+
+        // tau shrinks every 10 items; verdicts must track the live value.
+        let mut tau = width;
+        ps.ham_range_leq(0, n, &q, tau, |i, verdict| {
+            let d = ps.ham(i, &q);
+            assert_eq!(verdict, (d <= tau).then_some(d), "i={i} live tau={tau}");
+            if i % 10 == 9 {
+                tau = tau.saturating_sub(3);
+            }
+            Some(tau)
+        });
+
+        // a None sink return stops the scan immediately.
+        let mut calls = 0usize;
+        ps.ham_range_leq(0, n, &q, width, |_, _| {
+            calls += 1;
+            (calls < 7).then_some(width)
+        });
+        assert_eq!(calls, 7);
+        let ids: Vec<u32> = (0..n as u32).collect();
+        calls = 0;
+        ps.ham_many_leq(&ids, &q, width, |_, _| {
+            calls += 1;
+            (calls < 5).then_some(width)
+        });
+        assert_eq!(calls, 5);
+    }
+
+    #[test]
+    fn cursor_streams_the_whole_range() {
+        let mut rng = Rng::new(8);
+        for &(b, width) in &[(2usize, 32usize), (8, 64), (4, 11)] {
+            let n = 90;
+            let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+            let vals: Vec<u64> = (0..b * n).map(|_| rng.next_u64() & mask).collect();
+            let ps = PlaneStore::from_fn(b, width, n, |k, i| vals[k * n + i]);
+            let q: Vec<u64> = (0..b).map(|_| rng.next_u64() & mask).collect();
+            let mut cur = ps.range_scan(10, n, &q);
+            assert_eq!(cur.remaining(), n - 10);
+            for i in 10..n {
+                let tau = i % (width + 1);
+                let got = cur.next_leq(tau);
+                let d = ps.ham(i, &q);
+                assert_eq!(got, (d <= tau).then_some(d), "b={b} w={width} i={i}");
+            }
+            assert_eq!(cur.remaining(), 0);
+        }
     }
 }

@@ -179,7 +179,7 @@ impl SketchSet {
     /// [`hamming::ham_horizontal`]).
     #[inline]
     pub fn ham_packed(&self, i: usize, q_words: &[u64]) -> usize {
-        super::hamming::ham_horizontal(self.sketch_words(i), q_words, self.b, self.l)
+        super::hamming::ham_horizontal(self.sketch_words(i), q_words, self.b)
     }
 
     /// Extracts the sub-sketches `[lo, hi)` of every sketch into a new set

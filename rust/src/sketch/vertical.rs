@@ -89,15 +89,36 @@ impl VerticalSet {
         self.store.ham_leq(i, q_planes, tau)
     }
 
+    /// Streaming range-verification kernel — see
+    /// [`PlaneStore::ham_range_leq`] for the contract.
+    #[inline]
+    pub fn ham_range_leq<F>(&self, lo: usize, hi: usize, q_planes: &[u64], tau0: usize, sink: F)
+    where
+        F: FnMut(usize, Option<usize>) -> Option<usize>,
+    {
+        self.store.ham_range_leq(lo, hi, q_planes, tau0, sink)
+    }
+
+    /// Batched candidate-verification kernel — see
+    /// [`PlaneStore::ham_many_leq`] for the contract.
+    #[inline]
+    pub fn ham_many_leq<F>(&self, ids: &[u32], q_planes: &[u64], tau0: usize, sink: F)
+    where
+        F: FnMut(u32, Option<usize>) -> Option<usize>,
+    {
+        self.store.ham_many_leq(ids, q_planes, tau0, sink)
+    }
+
     /// Full linear scan: ids of all sketches within `tau` of `q`.
     pub fn scan(&self, q: &[u8], tau: usize) -> Vec<u32> {
         let qp = self.pack_query(q);
         let mut out = Vec::new();
-        for i in 0..self.n() {
-            if self.store.ham_leq(i, &qp, tau).is_some() {
+        self.store.ham_range_leq(0, self.n(), &qp, tau, |i, verdict| {
+            if verdict.is_some() {
                 out.push(i as u32);
             }
-        }
+            Some(tau)
+        });
         out
     }
 

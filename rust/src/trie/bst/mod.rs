@@ -50,6 +50,10 @@ pub struct BstTrie {
     /// Leaf postings (leaf k ↔ distinct sketch k).
     pub(crate) post_offsets: Vec<u32>,
     pub(crate) post_ids: Vec<u32>,
+    /// Largest posting id, cached at construction (`None` when empty) —
+    /// loaders bound ids against the stripe they serve on every snapshot
+    /// open, so this must not be an O(n) scan per call.
+    pub(crate) max_post: Option<u32>,
     /// Node counts per level (diagnostics / reports).
     pub(crate) level_counts: Vec<usize>,
 }
@@ -78,6 +82,7 @@ impl BstTrie {
 
         let sparse = sparse::SparseLayer::build(ss, ls);
         let (post_offsets, post_ids) = ss.postings_parts();
+        let max_post = post_ids.iter().copied().max();
 
         BstTrie {
             b,
@@ -88,6 +93,7 @@ impl BstTrie {
             sparse,
             post_offsets,
             post_ids,
+            max_post,
             level_counts: counts.to_vec(),
         }
     }
@@ -139,8 +145,10 @@ impl BstTrie {
 
     /// Largest posting id (`None` for an empty postings table) —
     /// snapshot loaders bound ids against the database they serve.
+    /// Cached at build/load time (the load-time validation pass already
+    /// walks every id), so this is O(1).
     pub fn max_posting(&self) -> Option<u32> {
-        self.post_ids.iter().copied().max()
+        self.max_post
     }
 
     #[inline]
@@ -218,7 +226,7 @@ impl Persist for BstTrie {
                 && sparse.root_count() == level_counts[ls],
             || "bST: sparse layer disagrees with level counts".to_string(),
         )?;
-        super::validate_postings(&post_offsets, &post_ids, n_leaves)?;
+        let max_post = super::validate_postings(&post_offsets, &post_ids, n_leaves)?;
         Ok(BstTrie {
             b,
             l,
@@ -228,6 +236,7 @@ impl Persist for BstTrie {
             sparse,
             post_offsets,
             post_ids,
+            max_post,
             level_counts,
         })
     }

@@ -99,17 +99,21 @@ impl<C: Collector> Searcher<'_, C> {
     fn scan_sparse(&mut self, u: usize, dist: usize) {
         let t = self.t;
         let (lo, hi) = t.sparse.leaf_range(u);
+        // One streaming kernel call per sparse node: the cursor walks the
+        // contiguous leaves' plane words sequentially (with the b>1
+        // lower-bound early exit) while the collector accounting stays
+        // per-leaf, identical to the per-item path it replaces.
+        let c = &mut *self.c;
+        let mut cur = t.sparse.suffix_scan(lo, hi, &self.ctx.q_planes);
         for v in lo..hi {
-            self.c.on_visit();
-            let Some(budget) = self.c.tau().checked_sub(dist) else {
-                self.c.on_prune();
+            c.on_visit();
+            let Some(budget) = c.tau().checked_sub(dist) else {
+                c.on_prune();
                 return;
             };
-            let sd = t.sparse.ham_suffix(v, &self.ctx.q_planes);
-            if sd <= budget {
-                self.c.emit(t.postings_of(v), dist + sd);
-            } else {
-                self.c.on_prune();
+            match cur.next_leq(budget) {
+                Some(sd) => c.emit(t.postings_of(v), dist + sd),
+                None => c.on_prune(),
             }
         }
     }

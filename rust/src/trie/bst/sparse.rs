@@ -110,10 +110,28 @@ impl SparseLayer {
         out
     }
 
-    /// Hamming distance between leaf `v`'s suffix and packed query planes.
+    /// Hamming distance between leaf `v`'s suffix and packed query planes
+    /// (per-item reference path; the traversal streams via
+    /// [`Self::suffix_scan`]).
     #[inline]
+    #[allow(dead_code)] // diagnostics/tests — oracle for the kernel
     pub fn ham_suffix(&self, v: usize, q_planes: &[u64]) -> usize {
         self.planes.ham(v, q_planes)
+    }
+
+    /// Streaming suffix-verification cursor over leaves `[lo, hi)` — one
+    /// kernel call per sparse node instead of per-leaf random `field()`
+    /// extraction. The leaves of a subtrie are contiguous
+    /// ([`Self::leaf_range`]), so the cursor walks the plane words
+    /// sequentially; see [`PlaneStore::range_scan`] for the contract.
+    #[inline]
+    pub fn suffix_scan<'a>(
+        &'a self,
+        lo: usize,
+        hi: usize,
+        q_planes: &'a [u64],
+    ) -> crate::sketch::plane_store::RangeHam<'a> {
+        self.planes.range_scan(lo, hi, q_planes)
     }
 
     /// Restores the raw suffix characters of leaf `v` (diagnostics/tests).

@@ -38,11 +38,16 @@ use crate::store::{ensure, StoreError};
 /// Snapshot validation shared by every trie: the leaf postings must be a
 /// strictly increasing offset table over `post_ids` with one range per
 /// leaf (every distinct sketch owns at least one id).
+///
+/// Returns the largest posting id (`None` for an empty table): loaders
+/// bound ids against the database they serve, and this pass already
+/// walks the table — computing the maximum here removes the separate
+/// O(n) `max_posting` scan the bST loader used to run.
 pub(crate) fn validate_postings(
     post_offsets: &[u32],
     post_ids: &[u32],
     n_leaves: usize,
-) -> Result<(), StoreError> {
+) -> Result<Option<u32>, StoreError> {
     ensure(post_offsets.len() == n_leaves + 1, || {
         format!(
             "postings: {} offsets for {n_leaves} leaves",
@@ -54,7 +59,8 @@ pub(crate) fn validate_postings(
             && post_offsets.windows(2).all(|w| w[0] < w[1])
             && *post_offsets.last().unwrap() as usize == post_ids.len(),
         || "postings: offsets not strictly increasing from 0 to #ids".to_string(),
-    )
+    )?;
+    Ok(post_ids.iter().copied().max())
 }
 
 /// Common interface: a trie over a fixed sketch database supporting the

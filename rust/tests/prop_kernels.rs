@@ -1,0 +1,220 @@
+//! Property suite for the streaming range- and batch-verification
+//! kernels (`PlaneStore::ham_range_leq` / `ham_many_leq` / `range_scan`):
+//! verdicts must agree with the `ham_chars` oracle — and with the
+//! per-item path — across `b ∈ {1,2,4,8}`, `width ∈ {0,1,31,63,64}`,
+//! random `(lo, hi)` ranges, duplicate-heavy candidate lists, and every
+//! `tau ∈ {0, …, width}`. Also proves the rewired search paths (bST
+//! sparse scan, linear, MI-bST, SIH, HmSearch) still produce identical
+//! result sets and collector stats.
+
+use bst::index::{HmSearch, LinearScan, MultiBst, SearchIndex, Sih};
+use bst::query::{CollectIds, QueryCtx, StatsObserver};
+use bst::sketch::hamming::ham_chars;
+use bst::sketch::plane_store::PlaneStore;
+use bst::sketch::{SketchSet, VerticalSet};
+use bst::trie::bst::{BstConfig, BstTrie};
+use bst::trie::{SketchTrie, SortedSketches};
+use bst::util::Rng;
+
+/// Random char rows + the vertical plane store over them (the layout the
+/// sparse layer and `VerticalSet` both use: plane `k` packs bit `k` of
+/// each of the `width` chars).
+fn rows_and_store(b: usize, width: usize, n: usize, rng: &mut Rng) -> (Vec<Vec<u8>>, PlaneStore) {
+    let rows: Vec<Vec<u8>> = (0..n)
+        .map(|_| (0..width).map(|_| rng.below(1 << b) as u8).collect())
+        .collect();
+    let ps = PlaneStore::from_fn(b, width, n, |k, i| {
+        let mut field = 0u64;
+        for (pos, &c) in rows[i].iter().enumerate() {
+            field |= (((c >> k) & 1) as u64) << pos;
+        }
+        field
+    });
+    (rows, ps)
+}
+
+fn pack_planes(q: &[u8], b: usize) -> Vec<u64> {
+    (0..b)
+        .map(|k| {
+            let mut field = 0u64;
+            for (pos, &c) in q.iter().enumerate() {
+                field |= (((c >> k) & 1) as u64) << pos;
+            }
+            field
+        })
+        .collect()
+}
+
+#[test]
+fn prop_kernels_match_ham_chars_oracle() {
+    let mut rng = Rng::new(0xC0DE);
+    for &b in &[1usize, 2, 4, 8] {
+        for &width in &[0usize, 1, 31, 63, 64] {
+            let n = 160;
+            let (rows, ps) = rows_and_store(b, width, n, &mut rng);
+            for _ in 0..4 {
+                let q: Vec<u8> = (0..width).map(|_| rng.below(1 << b) as u8).collect();
+                let qp = pack_planes(&q, b);
+                let dists: Vec<usize> = rows.iter().map(|r| ham_chars(r, &q)).collect();
+                for tau in 0..=width {
+                    // random range + the full range
+                    let lo = rng.below_usize(n);
+                    let hi = lo + rng.below_usize(n - lo + 1);
+                    for &(lo, hi) in &[(lo, hi), (0, n)] {
+                        let mut at = lo;
+                        ps.ham_range_leq(lo, hi, &qp, tau, |i, verdict| {
+                            assert_eq!(i, at, "emit order must be ascending");
+                            at += 1;
+                            let d = dists[i];
+                            assert_eq!(
+                                verdict,
+                                (d <= tau).then_some(d),
+                                "range b={b} w={width} i={i} tau={tau}"
+                            );
+                            // per-item path must agree with the kernel
+                            assert_eq!(verdict, ps.ham_leq(i, &qp, tau));
+                            Some(tau)
+                        });
+                        assert_eq!(at, hi, "kernel must cover the whole range");
+                    }
+                    // duplicate-heavy unsorted candidate list
+                    let ids: Vec<u32> =
+                        (0..2 * n).map(|_| rng.below(n as u64) as u32).collect();
+                    let mut seen = 0usize;
+                    ps.ham_many_leq(&ids, &qp, tau, |id, verdict| {
+                        assert_eq!(id, ids[seen], "batch order must be list order");
+                        seen += 1;
+                        let d = dists[id as usize];
+                        assert_eq!(
+                            verdict,
+                            (d <= tau).then_some(d),
+                            "batch b={b} w={width} id={id} tau={tau}"
+                        );
+                        Some(tau)
+                    });
+                    assert_eq!(seen, ids.len());
+                }
+            }
+        }
+    }
+}
+
+/// The live-threshold contract: verdicts must track whatever the sink
+/// returned for the previous item — the mechanism TopK uses to tighten
+/// verification mid-scan.
+#[test]
+fn prop_kernels_respect_live_threshold() {
+    let mut rng = Rng::new(0xBEA7);
+    for &(b, width) in &[(2usize, 31usize), (4, 16), (8, 8), (8, 64)] {
+        let n = 120;
+        let (rows, ps) = rows_and_store(b, width, n, &mut rng);
+        let q: Vec<u8> = (0..width).map(|_| rng.below(1 << b) as u8).collect();
+        let qp = pack_planes(&q, b);
+        let dists: Vec<usize> = rows.iter().map(|r| ham_chars(r, &q)).collect();
+
+        let mut tau = width;
+        ps.ham_range_leq(0, n, &qp, tau, |i, verdict| {
+            let d = dists[i];
+            assert_eq!(verdict, (d <= tau).then_some(d), "i={i} live tau={tau}");
+            if i % 7 == 6 {
+                tau = tau.saturating_sub(2);
+            }
+            Some(tau)
+        });
+
+        let ids: Vec<u32> = (0..n as u32).rev().collect();
+        let mut tau = width;
+        let mut k = 0usize;
+        ps.ham_many_leq(&ids, &qp, tau, |id, verdict| {
+            let d = dists[id as usize];
+            assert_eq!(verdict, (d <= tau).then_some(d), "id={id} live tau={tau}");
+            k += 1;
+            if k % 5 == 0 {
+                tau = tau.saturating_sub(1);
+            }
+            Some(tau)
+        });
+    }
+}
+
+/// The rewired verifiers (bST sparse scan, linear, MI-bST, SIH,
+/// HmSearch) must produce the same id sets as the brute-force oracle,
+/// and — for the collector-exact paths (bST, linear) — identical
+/// traversal stats to the per-item accounting they replaced: every
+/// candidate visited exactly once, pruned xor emitted.
+#[test]
+fn prop_rewired_verifiers_match_oracle_and_stats() {
+    for &(b, l, seed) in &[(2usize, 16usize, 41u64), (4, 12, 42), (8, 8, 43)] {
+        let mut rng = Rng::new(seed);
+        let centers: Vec<Vec<u8>> = (0..8)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect();
+        let rows: Vec<Vec<u8>> = (0..300)
+            .map(|_| {
+                let mut r = centers[rng.below_usize(8)].clone();
+                for _ in 0..rng.below_usize(4) {
+                    let p = rng.below_usize(l);
+                    r[p] = rng.below(1 << b) as u8;
+                }
+                r
+            })
+            .collect();
+        let set = SketchSet::from_rows(b, l, &rows);
+        let ss = SortedSketches::build(&set);
+        let bst = BstTrie::build(&ss, BstConfig::default());
+        let linear = LinearScan::build(&set);
+        let mi = MultiBst::build(&set, 2);
+        let sih = Sih::build(&set);
+        let vert = VerticalSet::from_horizontal(&set);
+
+        let mut ctx = QueryCtx::new();
+        for qi in [0usize, 17, 86] {
+            let q = rows[qi].clone();
+            for tau in [0usize, 1, 2, 4] {
+                let expect: Vec<u32> = (0..rows.len())
+                    .filter(|&i| ham_chars(&rows[i], &q) <= tau)
+                    .map(|i| i as u32)
+                    .collect();
+
+                // bST: ids + per-leaf stats accounting
+                let mut out = Vec::new();
+                let mut obs = StatsObserver::new(CollectIds::new(tau, &mut out));
+                bst.run(&q, &mut ctx, &mut obs);
+                let stats = obs.stats;
+                out.sort();
+                assert_eq!(out, expect, "bst b={b} tau={tau}");
+                assert_eq!(stats.emitted, expect.len(), "bst emitted b={b} tau={tau}");
+                assert!(stats.visited > 0, "bst must visit at least the root");
+
+                // linear: ids + exact stats (n visits, prune/emit split)
+                let mut out = Vec::new();
+                let mut obs = StatsObserver::new(CollectIds::new(tau, &mut out));
+                linear.run(&q, &mut ctx, &mut obs);
+                let stats = obs.stats;
+                out.sort();
+                assert_eq!(out, expect, "linear b={b} tau={tau}");
+                assert_eq!(stats.visited, rows.len(), "linear visits every row once");
+                assert_eq!(stats.emitted, expect.len());
+                assert_eq!(stats.pruned, rows.len() - expect.len());
+
+                // batched candidate verifiers
+                let mut got = mi.search(&q, tau);
+                got.sort();
+                assert_eq!(got, expect, "mi-bst b={b} tau={tau}");
+                if tau <= 1 {
+                    let mut got = sih.search(&q, tau);
+                    got.sort();
+                    got.dedup();
+                    assert_eq!(got, expect, "sih b={b} tau={tau}");
+                }
+                let hm = HmSearch::build(&set, tau.max(1));
+                let mut got = hm.search(&q, tau);
+                got.sort();
+                assert_eq!(got, expect, "hmsearch b={b} tau={tau}");
+
+                // VerticalSet::scan routes through the range kernel too
+                assert_eq!(vert.scan(&q, tau), expect, "scan b={b} tau={tau}");
+            }
+        }
+    }
+}

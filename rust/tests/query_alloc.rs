@@ -9,7 +9,7 @@
 //! contains a single `#[test]` so no sibling test thread allocates inside
 //! the measurement window.
 
-use bst::index::{SearchIndex, SingleBst};
+use bst::index::{LinearScan, SearchIndex, SingleBst};
 use bst::query::{CollectIds, CountOnly, QueryCtx};
 use bst::sketch::SketchSet;
 use bst::trie::bst::{BstConfig, BstTrie};
@@ -136,4 +136,35 @@ fn bst_search_is_allocation_free_after_warmup() {
         0,
         "top-k must be allocation-free after the QueryCtx heap warms up"
     );
+
+    // --- Range-kernel scan: the linear verifier streams the whole
+    // database through `ham_range_leq`; after one warm-up query the
+    // packed planes, the kernel cursor (stack-only) and the hit vector
+    // must never touch the allocator.
+    let linear = LinearScan::build(&set);
+    let mut lin_ctx = QueryCtx::new();
+    for q in &queries {
+        for &tau in &taus {
+            out.clear();
+            let mut coll = CollectIds::new(tau, &mut out);
+            linear.run(q, &mut lin_ctx, &mut coll);
+        }
+    }
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    for _ in 0..3 {
+        for q in &queries {
+            for &tau in &taus {
+                out.clear();
+                let mut coll = CollectIds::new(tau, &mut out);
+                linear.run(q, &mut lin_ctx, &mut coll);
+            }
+        }
+    }
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "range-kernel linear scan must be allocation-free after warm-up"
+    );
+    assert!(!out.is_empty(), "last query returned at least itself");
 }
