@@ -72,9 +72,7 @@ fn main() {
     let serve_cfg = ServeConfig {
         addr: "127.0.0.1:0".into(),
         shards: std::thread::available_parallelism().map_or(4, |p| p.get()),
-        max_batch: 32,
-        max_delay_us: 200,
-        default_tau: 2,
+        ..Default::default()
     };
     let t = Timer::start();
     let built = Engine::build(

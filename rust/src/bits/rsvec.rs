@@ -352,7 +352,10 @@ impl Persist for RsBitVec {
         }
         for (i, &p) in rs.select0_samples.iter().enumerate() {
             ensure(rs.rank0(p as usize) == i * SELECT_SAMPLE, || {
-                format!("RsBitVec: select0 sample {i} is not the {}-th unset bit", i * SELECT_SAMPLE)
+                format!(
+                    "RsBitVec: select0 sample {i} is not the {}-th unset bit",
+                    i * SELECT_SAMPLE
+                )
             })?;
         }
         Ok(rs)

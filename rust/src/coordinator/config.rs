@@ -13,6 +13,9 @@ pub struct ServeConfig {
     pub max_delay_us: u64,
     /// Default Hamming threshold when a request omits `tau`.
     pub default_tau: usize,
+    /// Active-delta row count that triggers a background shard merge
+    /// (`usize::MAX` disables auto-merging; the `merge` op still works).
+    pub merge_threshold: usize,
 }
 
 impl Default for ServeConfig {
@@ -23,6 +26,7 @@ impl Default for ServeConfig {
             max_batch: 32,
             max_delay_us: 200,
             default_tau: 2,
+            merge_threshold: 4096,
         }
     }
 }

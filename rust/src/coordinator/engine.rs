@@ -1,45 +1,56 @@
-//! Sharded query engine.
+//! Sharded query engine with a write path.
 //!
-//! The database is striped into `S` contiguous shards; each shard worker
-//! thread owns one index (a [`ShardIndex`]) over its stripe plus one
-//! persistent [`QueryCtx`] — the per-worker scratch pool that makes the
-//! per-shard hot path allocation-free after warm-up (including the top-k
-//! heap, parked in the ctx between queries). A query fans out to all
-//! shards as one shared `Arc<[u8]>` (no per-shard copies) and merges
-//! results with the global id offsets.
+//! The database is striped into `S` shards; each shard worker thread
+//! owns one [`SegmentedShard`] — an immutable base index plus a mutable
+//! delta segment and tombstone set (see [`super::segment`]) — and one
+//! persistent [`QueryCtx`], the per-worker scratch pool that keeps the
+//! per-shard hot path allocation-free after warm-up. A query fans out to
+//! all shards as one shared `Arc<[u8]>` (no per-shard copies); workers
+//! answer with **global** ids (the shard state maps local postings and
+//! filters tombstones at emit), so the engine-level merge is a plain
+//! concatenation / sum / `(dist, id)` sort.
 //!
 //! Three query modes ride the same fan-out machinery: id collection
 //! ([`Engine::search`] / [`Engine::run_batch`]), counting
-//! ([`Engine::count`]) and top-k nearest neighbors ([`Engine::top_k`],
-//! merged globally by `(dist, id)`). [`Engine::run_batch`] executes a
-//! mixed-mode batch as one pipelined fan-out round — the batcher routes
-//! *all three* modes through it, so every served query records real
-//! per-query wall time.
+//! ([`Engine::count`]) and top-k ([`Engine::top_k`]). Mixed-mode batches
+//! execute as one pipelined round with real per-query wall time.
 //!
-//! **Persistence** ([`Engine::save`] / [`Engine::load`]): the engine
-//! writes one snapshot (see [`crate::store`]) with a `meta` section
-//! (sketch length, database size, shard offsets) and one `shard.N`
-//! section per shard. Loading validates the container and reconstructs
-//! the workers directly from the serialized structures — it never
-//! re-runs `SortedSketches::build`, sorts anything, or rebuilds a
-//! rank/select directory. Build once, serve many, restart in seconds.
+//! **Writes** ride the same worker channels, so they serialize naturally
+//! against queries without any locking:
 //!
-//! Shard workers are persistent (channel-fed) rather than spawned per
-//! query — fan-out latency is two channel hops, and the workers give the
-//! natural place for per-shard pinning or NUMA placement at larger scale.
+//! * [`Engine::insert_batch`] assigns global ids from a monotone counter
+//!   and stripes the rows over shards by `id % S`; each shard appends to
+//!   its active delta. When a delta passes the merge threshold the
+//!   worker seals it and rebuilds base + sealed **off-thread**, swapping
+//!   the fresh immutable segment in atomically (epoch-checked install
+//!   message — the same swap discipline as [`EngineSlot::replace`]).
+//! * [`Engine::delete`] broadcasts a tombstone; the owning shard records
+//!   it and every query mode excludes the id at emit time.
+//! * [`Engine::merge`] force-folds all pending deltas synchronously
+//!   (the CLI/CI hook for deterministic all-immutable snapshots).
+//!
+//! **Persistence** ([`Engine::save`] / [`Engine::load`]): snapshots are
+//! format v2 — `meta` + per shard `shard.N` (immutable index), `rows.N`
+//! (raw rows behind it), `delta.N` (id map + pending delta rows) and
+//! `tombstones.N`. v1 snapshots (PR 2) still load, as all-immutable
+//! engines without raw rows: they serve and accept inserts/deletes, but
+//! cannot merge until rebuilt. Loading stays parse-only — no sorting, no
+//! trie construction, no rank/select re-indexing.
 
 use super::metrics::Metrics;
+use super::segment::{DeltaSegment, IdMap, MergeOutcome, SegmentedShard, ShardParts};
 use crate::index::{MultiBst, SearchIndex, SingleBst};
-use crate::query::{CollectIds, Collector, CountOnly, QueryCtx};
+use crate::query::{Collector, QueryCtx};
 use crate::sketch::SketchSet;
 use crate::store::{
     ensure, from_payload, to_payload, ByteReader, ByteWriter, Persist, Snapshot,
-    SnapshotStreamWriter, StoreError,
+    SnapshotStreamWriter, StoreError, FORMAT_VERSION_V1,
 };
 use crate::trie::bst::BstConfig;
 use crate::util::timer::Timer;
 use std::path::Path;
-use std::sync::mpsc::{channel, Sender};
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 
@@ -54,7 +65,7 @@ pub enum QueryMode {
     TopK(usize),
 }
 
-/// One shard's result payload.
+/// One shard's result payload (global ids).
 pub enum ShardReply {
     Ids(Vec<u32>),
     Count(usize),
@@ -69,6 +80,15 @@ pub enum QueryResult {
     TopK(Vec<(u32, usize)>),
 }
 
+/// Totals of one [`Engine::merge`] sweep.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MergeSummary {
+    /// Shards that are now all-immutable (freshly merged or already so).
+    pub merged: usize,
+    /// Legacy shards with pending deltas but no base rows to fold into.
+    pub skipped: usize,
+}
+
 enum ShardMsg {
     Query {
         q: Arc<[u8]>,
@@ -77,24 +97,51 @@ enum ShardMsg {
         reply: Sender<(usize, ShardReply)>,
         shard_no: usize,
     },
+    Insert {
+        items: Vec<(u32, Vec<u8>)>,
+        merge_threshold: usize,
+        reply: Sender<usize>,
+    },
+    Delete {
+        id: u32,
+        reply: Sender<bool>,
+    },
+    ForceMerge {
+        reply: Sender<MergeOutcome>,
+    },
+    /// A finished background merge returning to its owner.
+    Install(Box<super::segment::MergeResult>),
+    /// Consistent serializable view for `Engine::save`.
+    Parts {
+        reply: Sender<(usize, ShardParts)>,
+        shard_no: usize,
+    },
     Shutdown,
 }
 
 struct Shard {
     tx: Sender<ShardMsg>,
     handle: Option<JoinHandle<()>>,
-    offset: u32,
-    /// Shared with the worker thread; kept here so `save` can serialize
-    /// the live structures without a rebuild.
-    index: Arc<ShardIndex>,
 }
 
 /// Builder: which index each shard uses.
+#[derive(Debug, Clone)]
 pub enum ShardIndexKind {
     /// SI-bST (default).
     Bst(BstConfig),
     /// MI-bST with `m` blocks.
     MultiBst(usize),
+}
+
+impl ShardIndexKind {
+    /// Builds one shard's index over its stripe — shared by the initial
+    /// engine build and every merge rebuild.
+    pub fn build_index(&self, stripe: &SketchSet) -> ShardIndex {
+        match self {
+            ShardIndexKind::Bst(cfg) => ShardIndex::Bst(SingleBst::build(stripe, *cfg)),
+            ShardIndexKind::MultiBst(m) => ShardIndex::MultiBst(MultiBst::build(stripe, *m)),
+        }
+    }
 }
 
 /// A shard's index, concretely tagged so snapshots can restore it. All
@@ -106,7 +153,7 @@ pub enum ShardIndex {
 
 impl ShardIndex {
     /// Rows in this shard's stripe.
-    fn n_rows(&self) -> usize {
+    pub fn n_rows(&self) -> usize {
         match self {
             ShardIndex::Bst(idx) => idx.trie().post_id_count(),
             ShardIndex::MultiBst(idx) => idx.n(),
@@ -114,10 +161,28 @@ impl ShardIndex {
     }
 
     /// Sketch length the shard serves.
-    fn l(&self) -> usize {
+    pub fn l(&self) -> usize {
         match self {
             ShardIndex::Bst(idx) => idx.trie().sketch_len(),
             ShardIndex::MultiBst(idx) => idx.l(),
+        }
+    }
+
+    /// Alphabet bits `b`.
+    pub fn b(&self) -> usize {
+        match self {
+            ShardIndex::Bst(idx) => idx.trie().alphabet_bits(),
+            ShardIndex::MultiBst(idx) => idx.b(),
+        }
+    }
+
+    /// The rebuild recipe a merge uses to reconstruct this kind of
+    /// index. (bST construction parameters are re-derived from the data;
+    /// the engine build path passes the caller's exact config instead.)
+    fn recipe(&self) -> ShardIndexKind {
+        match self {
+            ShardIndex::Bst(_) => ShardIndexKind::Bst(BstConfig::default()),
+            ShardIndex::MultiBst(idx) => ShardIndexKind::MultiBst(idx.m()),
         }
     }
 }
@@ -173,7 +238,17 @@ pub struct Engine {
     shards: Vec<Shard>,
     metrics: Arc<Metrics>,
     l: usize,
-    n: usize,
+    b: usize,
+    /// Next global id to assign (== total rows ever inserted; ids are
+    /// never reused or renumbered, tombstoned ones included).
+    next_id: AtomicU32,
+    /// Active-delta row count that triggers a background merge.
+    merge_threshold: AtomicUsize,
+    /// Serializes id reservation + per-shard enqueue so concurrent
+    /// insert batches reach every shard in global id order (the delta
+    /// segments require strictly increasing ids). Waiting for the shard
+    /// acks happens outside this lock.
+    insert_lock: std::sync::Mutex<()>,
     heap_bytes: usize,
 }
 
@@ -182,6 +257,9 @@ impl Engine {
     /// symmetric (anything `build` produces, `load` accepts) and bounds
     /// the allocation a corrupt snapshot header can request.
     pub const MAX_SHARDS: usize = 65_536;
+
+    /// Default active-delta size that triggers a background merge.
+    pub const DEFAULT_MERGE_THRESHOLD: usize = 4096;
 
     /// Stripes `set` over `n_shards` shards and builds per-shard indexes
     /// in parallel.
@@ -206,105 +284,136 @@ impl Engine {
             })
             .collect();
 
-        let built: Vec<(u32, Arc<ShardIndex>)> = std::thread::scope(|scope| {
+        let states: Vec<SegmentedShard> = std::thread::scope(|scope| {
             let handles: Vec<_> = stripes
                 .into_iter()
                 .map(|(offset, stripe)| {
+                    let kind = kind.clone();
                     scope.spawn(move || {
-                        let index = match kind {
-                            ShardIndexKind::Bst(cfg) => {
-                                ShardIndex::Bst(SingleBst::build(&stripe, *cfg))
-                            }
-                            ShardIndexKind::MultiBst(m) => {
-                                ShardIndex::MultiBst(MultiBst::build(&stripe, *m))
-                            }
-                        };
-                        (offset, Arc::new(index))
+                        let index = Arc::new(kind.build_index(&stripe));
+                        let map = IdMap::Contig { offset, n: stripe.n() as u32 };
+                        SegmentedShard::new(kind, index, map, Some(Arc::new(stripe)))
                     })
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().expect("shard build")).collect()
         });
 
-        Engine::assemble(set.l(), n, built)
+        Engine::assemble(set.l(), set.b(), n as u32, states)
     }
 
-    /// Spawns the shard workers over already-built (or loaded) indexes.
-    fn assemble(l: usize, n: usize, parts: Vec<(u32, Arc<ShardIndex>)>) -> Self {
+    /// Spawns the shard workers over already-built (or loaded) states.
+    fn assemble(l: usize, b: usize, next_id: u32, states: Vec<SegmentedShard>) -> Self {
         let metrics = Arc::new(Metrics::new());
-        let mut shards = Vec::with_capacity(parts.len());
+        let mut shards = Vec::with_capacity(states.len());
         let mut heap_bytes = 0usize;
-        for (offset, index) in parts {
-            heap_bytes += index.heap_bytes();
+        for (no, state) in states.into_iter().enumerate() {
+            heap_bytes += state.heap_bytes();
             let (tx, rx) = channel::<ShardMsg>();
-            let worker_index = Arc::clone(&index);
+            // Workers hold a clone of their own sender so background
+            // merge threads can message the finished segment back.
+            let self_tx = tx.clone();
+            let worker_metrics = Arc::clone(&metrics);
             let handle = std::thread::Builder::new()
-                .name(format!("bst-shard-{offset}"))
-                .spawn(move || {
-                    // One QueryCtx per worker: scratch buffers (including
-                    // the parked top-k heap) are warmed by the first query
-                    // and reused for the shard's lifetime.
-                    let mut qctx = QueryCtx::new();
-                    while let Ok(msg) = rx.recv() {
-                        match msg {
-                            ShardMsg::Query { q, tau, mode, reply, shard_no } => {
-                                let result = match mode {
-                                    QueryMode::Ids => {
-                                        let mut hits = Vec::new();
-                                        let mut coll = CollectIds::new(tau, &mut hits);
-                                        worker_index.run(&q, &mut qctx, &mut coll);
-                                        ShardReply::Ids(hits)
-                                    }
-                                    QueryMode::Count => {
-                                        let mut coll = CountOnly::new(tau);
-                                        worker_index.run(&q, &mut qctx, &mut coll);
-                                        ShardReply::Count(coll.count())
-                                    }
-                                    QueryMode::TopK(k) => {
-                                        let mut hits = Vec::new();
-                                        worker_index.top_k_into(&q, k, tau, &mut qctx, &mut hits);
-                                        ShardReply::TopK(hits)
-                                    }
-                                };
-                                let _ = reply.send((shard_no, result));
-                            }
-                            ShardMsg::Shutdown => break,
-                        }
-                    }
-                })
+                .name(format!("bst-shard-{no}"))
+                .spawn(move || worker_loop(state, rx, self_tx, worker_metrics, no))
                 .expect("spawn shard worker");
-            shards.push(Shard { tx, handle: Some(handle), offset, index });
+            shards.push(Shard { tx, handle: Some(handle) });
         }
 
-        Engine { shards, metrics, l, n, heap_bytes }
+        Engine {
+            shards,
+            metrics,
+            l,
+            b,
+            next_id: AtomicU32::new(next_id),
+            merge_threshold: AtomicUsize::new(Self::DEFAULT_MERGE_THRESHOLD),
+            insert_lock: std::sync::Mutex::new(()),
+            heap_bytes,
+        }
     }
 
-    /// Writes a snapshot: one `meta` section plus one `shard.N` section
-    /// per shard (see [`crate::store::container`] for the file format).
-    /// Shards are serialized and streamed one at a time, so saving a
-    /// large engine never holds more than one shard's payload beyond the
-    /// resident structures.
+    /// Writes a snapshot: one `meta` section plus `shard.N` / `rows.N` /
+    /// `delta.N` / `tombstones.N` per shard (see
+    /// [`crate::store::container`] for the file format). Shards are
+    /// serialized and streamed one at a time. Writers should quiesce
+    /// inserts for the duration — ids assigned mid-save can land behind
+    /// the recorded high-water mark and fail validation on load.
     pub fn save(&self, path: &Path) -> Result<(), StoreError> {
-        let mut out = SnapshotStreamWriter::create(path, 1 + self.shards.len())?;
+        let (reply_tx, reply_rx) = channel();
+        for (no, s) in self.shards.iter().enumerate() {
+            s.tx
+                .send(ShardMsg::Parts { reply: reply_tx.clone(), shard_no: no })
+                .expect("shard worker alive");
+        }
+        drop(reply_tx);
+        let mut parts: Vec<Option<ShardParts>> = (0..self.shards.len()).map(|_| None).collect();
+        for (no, p) in reply_rx {
+            parts[no] = Some(p);
+        }
+        let parts: Vec<ShardParts> = parts
+            .into_iter()
+            .map(|p| p.expect("every shard reports its parts"))
+            .collect();
+
+        let n_sections =
+            1 + parts.len() * 3 + parts.iter().filter(|p| p.rows.is_some()).count();
+        let mut out = SnapshotStreamWriter::create(path, n_sections)?;
         let mut w = ByteWriter::new();
         w.put_usize(self.l);
-        w.put_usize(self.n);
-        w.put_usize(self.shards.len());
-        for s in &self.shards {
-            w.put_u64(s.offset as u64);
+        w.put_usize(self.b);
+        w.put_u64(self.next_id.load(Ordering::SeqCst) as u64);
+        w.put_usize(parts.len());
+        for p in &parts {
+            w.put_u8(u8::from(p.rows.is_some()));
         }
         out.add_section("meta", &w.into_bytes())?;
-        for (i, s) in self.shards.iter().enumerate() {
-            out.add_section(&format!("shard.{i}"), &to_payload(&*s.index))?;
+        for (i, p) in parts.iter().enumerate() {
+            out.add_section(&format!("shard.{i}"), &to_payload(&*p.index))?;
+            if let Some(rows) = &p.rows {
+                out.add_section(&format!("rows.{i}"), &to_payload(&**rows))?;
+            }
+            let mut w = ByteWriter::new();
+            p.map.write_into(&mut w);
+            w.put_usize(self.b);
+            w.put_usize(self.l);
+            w.put_u32s(p.delta.ids());
+            let mut chars = Vec::with_capacity(p.delta.len() * self.l);
+            for r in 0..p.delta.len() {
+                chars.extend_from_slice(p.delta.row(r));
+            }
+            w.put_bytes(&chars);
+            out.add_section(&format!("delta.{i}"), &w.into_bytes())?;
+            let mut w = ByteWriter::new();
+            w.put_u32s(&p.tombstones);
+            out.add_section(&format!("tombstones.{i}"), &w.into_bytes())?;
         }
         out.finish()
     }
 
     /// Restores an engine from a snapshot and spawns its workers. The
     /// load path is parse + validate only: no sorting, no trie
-    /// construction, no rank/select re-indexing.
+    /// construction, no rank/select re-indexing. v1 snapshots load as
+    /// all-immutable engines (no raw rows — see the module docs).
     pub fn load(path: &Path) -> Result<Self, StoreError> {
         let snap = Snapshot::open(path)?;
+        if snap.version() == FORMAT_VERSION_V1 {
+            Self::load_v1(&snap)
+        } else {
+            Self::load_v2(&snap)
+        }
+    }
+
+    /// PR 2 snapshots: `meta` (L, n, shard offsets) + `shard.N`.
+    fn load_v1(snap: &Snapshot) -> Result<Self, StoreError> {
+        ensure(
+            snap.section_names().all(|n| {
+                !n.starts_with("rows.")
+                    && !n.starts_with("delta.")
+                    && !n.starts_with("tombstones.")
+            }),
+            || "v1 snapshot carries write-path sections (delta/rows/tombstones)".to_string(),
+        )?;
         let mut r = snap.section("meta")?;
         let l = r.get_usize()?;
         let n = r.get_usize()?;
@@ -320,57 +429,305 @@ impl Engine {
             })?);
         }
         r.expect_end()?;
+        ensure(u32::try_from(n).is_ok(), || {
+            format!("engine meta: n={n} exceeds the u32 id space")
+        })?;
 
-        let mut parts = Vec::with_capacity(n_shards);
+        let mut states = Vec::with_capacity(n_shards);
         let mut covered = 0usize;
+        let mut b = 0usize;
         for (i, &offset) in offsets.iter().enumerate() {
             let mut sr = snap.section(&format!("shard.{i}"))?;
             let index: ShardIndex = from_payload(&mut sr)?;
             ensure(offset as usize == covered, || {
                 format!("engine meta: shard {i} offset {offset} does not tile (expected {covered})")
             })?;
-            ensure(index.l() == l, || {
-                format!("shard {i}: sketch length {} != engine L={l}", index.l())
+            validate_shard_index(&index, i, l)?;
+            ensure(i == 0 || index.b() == b, || {
+                format!("shard {i}: alphabet b={} differs from shard 0's b={b}", index.b())
             })?;
-            // Bound local ids by the stripe size: the merge paths compute
-            // `id + offset`, so out-of-range ids from a crafted shard
-            // must be rejected here, not wrap at query time. (MI-bST
-            // shards bound their ids inside MultiIndex::read_from.)
-            if let ShardIndex::Bst(idx) = &index {
-                ensure(
-                    idx.trie()
-                        .max_posting()
-                        .map_or(true, |m| (m as usize) < index.n_rows()),
-                    || format!("shard {i}: posting ids exceed the stripe size"),
-                )?;
-            }
+            b = index.b();
             covered += index.n_rows();
-            parts.push((offset, Arc::new(index)));
+            let map = IdMap::Contig { offset, n: index.n_rows() as u32 };
+            let kind = index.recipe();
+            states.push(SegmentedShard::new(kind, Arc::new(index), map, None));
         }
         ensure(covered == n, || {
             format!("engine meta: shards cover {covered} rows, expected n={n}")
         })?;
-        Ok(Engine::assemble(l, n, parts))
+        Ok(Engine::assemble(l, b, n as u32, states))
+    }
+
+    /// v2 snapshots: the write path's sections, fully cross-validated —
+    /// every assigned id must appear in exactly one shard (base or
+    /// delta), all maps strictly increasing, tombstones owned.
+    fn load_v2(snap: &Snapshot) -> Result<Self, StoreError> {
+        let mut r = snap.section("meta")?;
+        let l = r.get_usize()?;
+        let b = r.get_usize()?;
+        let next_id = r.get_u64()?;
+        let n_shards = r.get_usize()?;
+        ensure(
+            l >= 1 && matches!(b, 1..=8) && (1..=Self::MAX_SHARDS).contains(&n_shards),
+            || format!("engine meta: bad shape L={l} b={b} shards={n_shards}"),
+        )?;
+        let next_id = u32::try_from(next_id).map_err(|_| {
+            StoreError::Corrupt(format!("engine meta: next_id {next_id} exceeds u32"))
+        })?;
+        let mut has_rows = Vec::with_capacity(n_shards);
+        for _ in 0..n_shards {
+            has_rows.push(r.get_u8()? != 0);
+        }
+        r.expect_end()?;
+
+        let mut states = Vec::with_capacity(n_shards);
+        let mut total_rows = 0usize;
+        for (i, &with_rows) in has_rows.iter().enumerate() {
+            let mut sr = snap.section(&format!("shard.{i}"))?;
+            let index: ShardIndex = from_payload(&mut sr)?;
+            validate_shard_index(&index, i, l)?;
+            ensure(index.b() == b, || {
+                format!("shard {i}: alphabet b={} != engine b={b}", index.b())
+            })?;
+
+            let rows = if with_rows {
+                let mut rr = snap.section(&format!("rows.{i}"))?;
+                let rows: SketchSet = from_payload(&mut rr)?;
+                ensure(
+                    rows.b() == b && rows.l() == l && rows.n() == index.n_rows(),
+                    || {
+                        format!(
+                            "rows.{i}: shape {}x{} (b={}) != shard's {} rows of L={l} (b={b})",
+                            rows.n(),
+                            rows.l(),
+                            rows.b(),
+                            index.n_rows()
+                        )
+                    },
+                )?;
+                Some(Arc::new(rows))
+            } else {
+                ensure(!snap.has_section(&format!("rows.{i}")), || {
+                    format!("rows.{i}: present but meta declares no rows")
+                })?;
+                None
+            };
+
+            let mut dr = snap.section(&format!("delta.{i}"))?;
+            let map = IdMap::read_from(&mut dr)?;
+            let db = dr.get_usize()?;
+            let dl = dr.get_usize()?;
+            let delta_ids = dr.get_u32s()?;
+            let delta_chars = dr.get_bytes()?.to_vec();
+            dr.expect_end()?;
+            ensure(db == b && dl == l, || {
+                format!("delta.{i}: shape b={db} L={dl} != engine b={b} L={l}")
+            })?;
+            ensure(map.len() == index.n_rows(), || {
+                format!("delta.{i}: id map covers {} rows, shard has {}", map.len(), index.n_rows())
+            })?;
+            ensure(
+                delta_ids.first().is_none()
+                    || map.max().is_none_or(|m| m < delta_ids[0]),
+                || format!("delta.{i}: delta ids must exceed every base id"),
+            )?;
+            let delta = DeltaSegment::from_parts(b, l, delta_ids, delta_chars)?;
+
+            let mut tr = snap.section(&format!("tombstones.{i}"))?;
+            let tombstones = tr.get_u32s()?;
+            tr.expect_end()?;
+            ensure(tombstones.windows(2).all(|w| w[0] < w[1]), || {
+                format!("tombstones.{i}: must be strictly increasing")
+            })?;
+
+            total_rows += map.len() + delta.len();
+            let kind = index.recipe();
+            let shard =
+                SegmentedShard::from_snapshot(kind, Arc::new(index), map, rows, delta, tombstones);
+            states.push(shard);
+        }
+        ensure(total_rows == next_id as usize, || {
+            format!("engine meta: shards hold {total_rows} ids, next_id={next_id}")
+        })?;
+
+        // Global tiling: every id in [0, next_id) lives in exactly one
+        // shard, and every tombstone names an id its shard owns.
+        let mut seen = vec![false; next_id as usize];
+        for (i, state) in states.iter().enumerate() {
+            for g in state.owned_ids() {
+                let slot = seen.get_mut(g as usize).ok_or_else(|| {
+                    StoreError::Corrupt(format!("shard {i}: id {g} >= next_id {next_id}"))
+                })?;
+                ensure(!*slot, || format!("id {g} owned by two shards"))?;
+                *slot = true;
+            }
+            for &t in state.tombstone_ids() {
+                ensure(state.owns_id(t), || {
+                    format!("tombstones.{i}: id {t} is not owned by shard {i}")
+                })?;
+            }
+        }
+        debug_assert!(seen.iter().all(|&s| s), "tiling checked via total_rows");
+
+        Ok(Engine::assemble(l, b, next_id, states))
     }
 
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }
 
+    /// Total ids ever assigned (tombstoned rows included — ids are never
+    /// reused, so this is also the next insert's id).
     pub fn n(&self) -> usize {
-        self.n
+        self.next_id.load(Ordering::SeqCst) as usize
     }
 
     pub fn l(&self) -> usize {
         self.l
     }
 
+    /// Alphabet bits `b` of the served sketches.
+    pub fn b(&self) -> usize {
+        self.b
+    }
+
+    /// Heap owned by the shard states at assembly time (delta growth and
+    /// merges are not tracked — this is a capacity report, not a gauge).
     pub fn heap_bytes(&self) -> usize {
         self.heap_bytes
     }
 
     pub fn metrics(&self) -> Arc<Metrics> {
         Arc::clone(&self.metrics)
+    }
+
+    /// Sets the active-delta size that triggers a background merge
+    /// (`usize::MAX` disables auto-merging; [`Engine::merge`] still
+    /// works). Takes effect for subsequent inserts.
+    pub fn set_merge_threshold(&self, threshold: usize) {
+        self.merge_threshold.store(threshold, Ordering::SeqCst);
+    }
+
+    pub fn merge_threshold(&self) -> usize {
+        self.merge_threshold.load(Ordering::SeqCst)
+    }
+
+    /// Inserts one sketch; returns its assigned global id.
+    pub fn insert(&self, row: &[u8]) -> Result<u32, String> {
+        let batch = [row.to_vec()];
+        self.insert_batch(&batch).map(|range| range.start)
+    }
+
+    /// Inserts a batch: assigns consecutive global ids (returned as a
+    /// range), stripes the rows over shards by `id % S`, and blocks
+    /// until every shard has appended its share — after this returns,
+    /// queries see the new rows.
+    pub fn insert_batch(&self, rows: &[Vec<u8>]) -> Result<std::ops::Range<u32>, String> {
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() != self.l {
+                return Err(format!("insert row {i}: length {} != L={}", row.len(), self.l));
+            }
+            if let Some(&c) = row.iter().find(|&&c| (c as usize) >= (1 << self.b)) {
+                return Err(format!("insert row {i}: char {c} outside the 2^{} alphabet", self.b));
+            }
+        }
+        let n = u32::try_from(rows.len()).map_err(|_| "batch exceeds u32".to_string())?;
+        if n == 0 {
+            let cur = self.next_id.load(Ordering::SeqCst);
+            return Ok(cur..cur);
+        }
+        let threshold = self.merge_threshold();
+        let owned: Vec<Vec<u8>> = rows.to_vec(); // copy outside the lock
+        let (reply_tx, reply_rx) = channel();
+        // Reserve the id range and enqueue on the shards under the
+        // insert lock: concurrent batches must reach each shard in
+        // global id order. The critical section is id assignment plus
+        // O(n) row *moves* and the channel sends — the byte copies
+        // happened above, and ack-waiting happens after unlock.
+        let (first, outstanding) = {
+            let _order = self.insert_lock.lock().unwrap();
+            let cur = self.next_id.load(Ordering::SeqCst);
+            let end = cur
+                .checked_add(n)
+                .ok_or_else(|| format!("id space exhausted: {cur} + {n} exceeds u32"))?;
+            self.next_id.store(end, Ordering::SeqCst);
+            let n_shards = self.shards.len() as u32;
+            let mut per_shard: Vec<Vec<(u32, Vec<u8>)>> =
+                (0..n_shards).map(|_| Vec::new()).collect();
+            for (i, row) in owned.into_iter().enumerate() {
+                let id = cur + i as u32;
+                per_shard[(id % n_shards) as usize].push((id, row));
+            }
+            let mut outstanding = 0usize;
+            for (s, items) in per_shard.into_iter().enumerate() {
+                if items.is_empty() {
+                    continue;
+                }
+                outstanding += 1;
+                self.shards[s]
+                    .tx
+                    .send(ShardMsg::Insert {
+                        items,
+                        merge_threshold: threshold,
+                        reply: reply_tx.clone(),
+                    })
+                    .expect("shard worker alive");
+            }
+            (cur, outstanding)
+        };
+        drop(reply_tx);
+        let mut acked = 0usize;
+        for _ in 0..outstanding {
+            acked += reply_rx.recv().expect("shard reply");
+        }
+        debug_assert_eq!(acked, rows.len());
+        self.metrics.record_inserts(rows.len());
+        Ok(first..first + n)
+    }
+
+    /// Deletes a global id (tombstone). Returns `true` if the id existed
+    /// and was newly deleted; repeated/unknown ids return `false`.
+    pub fn delete(&self, id: u32) -> bool {
+        if (id as usize) >= self.n() {
+            return false;
+        }
+        let (reply_tx, reply_rx) = channel();
+        for s in &self.shards {
+            s.tx
+                .send(ShardMsg::Delete { id, reply: reply_tx.clone() })
+                .expect("shard worker alive");
+        }
+        drop(reply_tx);
+        let deleted = reply_rx.iter().any(|d| d);
+        if deleted {
+            self.metrics.deletes.fetch_add(1, Ordering::Relaxed);
+        }
+        deleted
+    }
+
+    /// Force-merges every shard synchronously: when this returns (and
+    /// absent legacy skips), all deltas are folded and the engine is
+    /// entirely immutable — the deterministic pre-save / CI hook.
+    pub fn merge(&self) -> MergeSummary {
+        let (reply_tx, reply_rx) = channel();
+        for s in &self.shards {
+            s.tx
+                .send(ShardMsg::ForceMerge { reply: reply_tx.clone() })
+                .expect("shard worker alive");
+        }
+        drop(reply_tx);
+        let mut summary = MergeSummary::default();
+        for outcome in reply_rx {
+            match outcome {
+                MergeOutcome::Merged => {
+                    summary.merged += 1;
+                    self.metrics.merges.fetch_add(1, Ordering::Relaxed);
+                }
+                MergeOutcome::Clean => summary.merged += 1,
+                MergeOutcome::Skipped => summary.skipped += 1,
+            }
+        }
+        summary
     }
 
     /// Enqueues `q` on every shard; the query bytes are shared via one
@@ -405,10 +762,9 @@ impl Engine {
         self.fan_out(&q, tau, QueryMode::Ids, &reply_tx);
         drop(reply_tx);
         let mut out = Vec::new();
-        for (shard_no, reply) in reply_rx {
+        for (_no, reply) in reply_rx {
             if let ShardReply::Ids(hits) = reply {
-                let offset = self.shards[shard_no].offset;
-                out.extend(hits.into_iter().map(|id| id + offset));
+                out.extend(hits);
             }
         }
         self.metrics.record_query(timer.elapsed_us() as u64, out.len());
@@ -434,9 +790,9 @@ impl Engine {
     }
 
     /// Global top-k within radius `tau`: each shard answers its local
-    /// top-k, merged here by `(dist, global id)` — within a shard the
-    /// local-id order equals the global-id order (offsets are monotone),
-    /// so the merge is exact. Returns `(id, dist)` pairs.
+    /// top-k over global ids (per-shard id maps are monotone, so local
+    /// heap order equals global order), merged here by `(dist, id)` —
+    /// the merge is exact. Returns `(id, dist)` pairs.
     pub fn top_k(&self, q: &[u8], k: usize, tau: usize) -> Vec<(u32, usize)> {
         assert_eq!(q.len(), self.l, "query length mismatch");
         let timer = Timer::start();
@@ -444,21 +800,19 @@ impl Engine {
         let (reply_tx, reply_rx) = channel();
         self.fan_out(&q, tau, QueryMode::TopK(k), &reply_tx);
         drop(reply_tx);
-        let merged = Self::merge_topk(&self.shards, reply_rx.iter(), k);
+        let merged = Self::merge_topk(reply_rx.iter(), k);
         self.metrics.record_query(timer.elapsed_us() as u64, merged.len());
         merged
     }
 
     fn merge_topk(
-        shards: &[Shard],
         replies: impl Iterator<Item = (usize, ShardReply)>,
         k: usize,
     ) -> Vec<(u32, usize)> {
         let mut all: Vec<(usize, u32)> = Vec::new();
-        for (shard_no, reply) in replies {
+        for (_no, reply) in replies {
             if let ShardReply::TopK(hits) = reply {
-                let offset = shards[shard_no].offset;
-                all.extend(hits.into_iter().map(|(id, d)| (d, id + offset)));
+                all.extend(hits.into_iter().map(|(id, d)| (d, id)));
             }
         }
         all.sort_unstable();
@@ -475,7 +829,7 @@ impl Engine {
     /// shard reply — real per-query wall time, identical accounting for
     /// all three modes.
     pub fn run_batch(&self, queries: &[(Arc<[u8]>, usize, QueryMode)]) -> Vec<QueryResult> {
-        self.metrics.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.batches.fetch_add(1, Ordering::Relaxed);
         for (q, _, _) in queries {
             assert_eq!(q.len(), self.l, "query length mismatch");
         }
@@ -498,10 +852,9 @@ impl Engine {
                     QueryMode::Ids => {
                         let mut merged = Vec::new();
                         for _ in 0..n_shards {
-                            let (shard_no, reply) = rx.recv().expect("shard reply");
+                            let (_no, reply) = rx.recv().expect("shard reply");
                             if let ShardReply::Ids(hits) = reply {
-                                let offset = self.shards[shard_no].offset;
-                                merged.extend(hits.into_iter().map(|id| id + offset));
+                                merged.extend(hits);
                             }
                         }
                         QueryResult::Ids(merged)
@@ -518,7 +871,7 @@ impl Engine {
                     }
                     QueryMode::TopK(k) => {
                         let replies = (0..n_shards).map(|_| rx.recv().expect("shard reply"));
-                        QueryResult::TopK(Self::merge_topk(&self.shards, replies, k))
+                        QueryResult::TopK(Self::merge_topk(replies, k))
                     }
                 };
                 let size = match &result {
@@ -547,6 +900,83 @@ impl Engine {
             })
             .collect()
     }
+}
+
+/// One shard worker: owns its [`SegmentedShard`] outright — queries,
+/// inserts, deletes, merges and snapshots all serialize through this
+/// loop, so the state needs no locks. Background merges are spawned from
+/// here and return via `self_tx` as [`ShardMsg::Install`].
+fn worker_loop(
+    mut state: SegmentedShard,
+    rx: Receiver<ShardMsg>,
+    self_tx: Sender<ShardMsg>,
+    metrics: Arc<Metrics>,
+    shard_no: usize,
+) {
+    // One QueryCtx per worker: scratch buffers (including the parked
+    // top-k heap) are warmed by the first query and reused for the
+    // shard's lifetime.
+    let mut qctx = QueryCtx::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ShardMsg::Query { q, tau, mode, reply, shard_no } => {
+                let result = state.query(&q, tau, mode, &mut qctx);
+                let _ = reply.send((shard_no, result));
+            }
+            ShardMsg::Insert { items, merge_threshold, reply } => {
+                let n = items.len();
+                state.insert(&items);
+                if let Some(job) = state.seal_for_merge(merge_threshold) {
+                    let tx = self_tx.clone();
+                    std::thread::Builder::new()
+                        .name(format!("bst-merge-{shard_no}"))
+                        .spawn(move || {
+                            let result = job.build();
+                            // The worker may already be gone (engine
+                            // dropped); the finished merge is then moot.
+                            let _ = tx.send(ShardMsg::Install(Box::new(result)));
+                        })
+                        .expect("spawn merge thread");
+                }
+                let _ = reply.send(n);
+            }
+            ShardMsg::Delete { id, reply } => {
+                let _ = reply.send(state.delete(id));
+            }
+            ShardMsg::ForceMerge { reply } => {
+                let _ = reply.send(state.force_merge());
+            }
+            ShardMsg::Install(result) => {
+                if state.install(*result) {
+                    metrics.merges.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            ShardMsg::Parts { reply, shard_no } => {
+                let _ = reply.send((shard_no, state.parts()));
+            }
+            ShardMsg::Shutdown => break,
+        }
+    }
+}
+
+/// Shared per-shard validation (both snapshot versions): shape agreement
+/// and local posting ids bounded by the stripe. MI-bST bounds its ids
+/// inside `MultiIndex::read_from`; the merge paths map `local → global`,
+/// so out-of-range ids from a crafted shard must be rejected here, not
+/// wrap at query time.
+fn validate_shard_index(index: &ShardIndex, i: usize, l: usize) -> Result<(), StoreError> {
+    ensure(index.l() == l, || {
+        format!("shard {i}: sketch length {} != engine L={l}", index.l())
+    })?;
+    if let ShardIndex::Bst(idx) = index {
+        ensure(
+            idx.trie()
+                .max_posting()
+                .is_none_or(|m| (m as usize) < index.n_rows()),
+            || format!("shard {i}: posting ids exceed the stripe size"),
+        )?;
+    }
+    Ok(())
 }
 
 impl Drop for Engine {
@@ -610,6 +1040,13 @@ mod tests {
             .collect()
     }
 
+    fn oracle(rows: &[Vec<u8>], q: &[u8], tau: usize) -> Vec<u32> {
+        (0..rows.len())
+            .filter(|&i| ham_chars(&rows[i], q) <= tau)
+            .map(|i| i as u32)
+            .collect()
+    }
+
     #[test]
     fn sharded_equals_unsharded() {
         let rows = rows(2000, 91);
@@ -623,11 +1060,7 @@ mod tests {
                 for tau in [0usize, 2, 4] {
                     let mut got = engine.search(&q, tau);
                     got.sort();
-                    let expect: Vec<u32> = (0..rows.len())
-                        .filter(|&i| ham_chars(&rows[i], &q) <= tau)
-                        .map(|i| i as u32)
-                        .collect();
-                    assert_eq!(got, expect, "shards={n_shards} tau={tau}");
+                    assert_eq!(got, oracle(&rows, &q, tau), "shards={n_shards} tau={tau}");
                 }
             }
         }
@@ -685,10 +1118,10 @@ mod tests {
         // one metrics record per query (batch counted once)
         let m = engine.metrics();
         assert_eq!(
-            m.queries.load(std::sync::atomic::Ordering::Relaxed),
+            m.queries.load(Ordering::Relaxed),
             (queries.len() * 2) as u64
         );
-        assert_eq!(m.batches.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 1);
     }
 
     #[test]
@@ -726,11 +1159,7 @@ mod tests {
         let q = rows[0].clone();
         let mut got = engine.search(&q, 3);
         got.sort();
-        let expect: Vec<u32> = (0..rows.len())
-            .filter(|&i| ham_chars(&rows[i], &q) <= 3)
-            .map(|i| i as u32)
-            .collect();
-        assert_eq!(got, expect);
+        assert_eq!(got, oracle(&rows, &q, 3));
     }
 
     #[test]
@@ -742,7 +1171,7 @@ mod tests {
             engine.search(&rows[i], 1);
         }
         let m = engine.metrics();
-        assert_eq!(m.queries.load(std::sync::atomic::Ordering::Relaxed), 5);
+        assert_eq!(m.queries.load(Ordering::Relaxed), 5);
     }
 
     #[test]
@@ -771,6 +1200,152 @@ mod tests {
     }
 
     #[test]
+    fn inserts_are_visible_and_id_ordered() {
+        let all = rows(600, 81);
+        let set = SketchSet::from_rows(2, 16, &all[..400]);
+        for n_shards in [1usize, 3] {
+            let engine = Engine::build(&set, n_shards, &ShardIndexKind::Bst(BstConfig::default()));
+            let range = engine.insert_batch(&all[400..]).unwrap();
+            assert_eq!(range, 400..600);
+            assert_eq!(engine.n(), 600);
+            let mut rng = Rng::new(82);
+            for _ in 0..8 {
+                let q = all[rng.below_usize(all.len())].clone();
+                for tau in [0usize, 2, 4] {
+                    let mut got = engine.search(&q, tau);
+                    got.sort();
+                    assert_eq!(got, oracle(&all, &q, tau), "shards={n_shards} tau={tau}");
+                    assert_eq!(engine.count(&q, tau), got.len());
+                }
+            }
+            assert_eq!(engine.metrics().inserts.load(Ordering::Relaxed), 200);
+        }
+        // single insert + bad rows rejected without assigning ids
+        let engine = Engine::build(&set, 2, &ShardIndexKind::Bst(BstConfig::default()));
+        let id = engine.insert(&all[0]).unwrap();
+        assert_eq!(id, 400);
+        assert!(engine.insert_batch(&[vec![0u8; 3]]).is_err(), "wrong length");
+        assert!(engine.insert_batch(&[vec![9u8; 16]]).is_err(), "alphabet");
+        assert_eq!(engine.n(), 401);
+    }
+
+    #[test]
+    fn concurrent_inserts_keep_ids_unique_and_mergeable() {
+        let all = rows(440, 79);
+        let set = SketchSet::from_rows(2, 16, &all[..200]);
+        let engine =
+            Arc::new(Engine::build(&set, 3, &ShardIndexKind::Bst(BstConfig::default())));
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let eng = Arc::clone(&engine);
+            let batch: Vec<Vec<u8>> = all[200 + t * 60..200 + (t + 1) * 60].to_vec();
+            handles.push(std::thread::spawn(move || {
+                (t, eng.insert_batch(&batch).unwrap())
+            }));
+        }
+        let mut ranges: Vec<(usize, std::ops::Range<u32>)> = handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect();
+        ranges.sort_by_key(|(_, r)| r.start);
+        assert_eq!(engine.n(), 440);
+        // ranges tile 200..440 without overlap, whatever the interleaving
+        let mut expect_start = 200u32;
+        for (_, r) in &ranges {
+            assert_eq!(r.start, expect_start);
+            assert_eq!(r.end - r.start, 60);
+            expect_start = r.end;
+        }
+        // every inserted row is findable under its assigned id
+        for (t, r) in &ranges {
+            for (j, id) in r.clone().enumerate() {
+                let row = &all[200 + t * 60 + j];
+                assert!(engine.search(row, 0).contains(&id), "t={t} j={j}");
+            }
+        }
+        // deltas stayed monotone per shard: the merge folds cleanly and
+        // results are unchanged afterwards
+        let before = {
+            let mut v = engine.search(&all[0], 4);
+            v.sort();
+            v
+        };
+        assert_eq!(engine.merge(), MergeSummary { merged: 3, skipped: 0 });
+        let after = {
+            let mut v = engine.search(&all[0], 4);
+            v.sort();
+            v
+        };
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn deletes_tombstone_every_mode() {
+        let all = rows(500, 83);
+        let set = SketchSet::from_rows(2, 16, &all[..450]);
+        let engine = Engine::build(&set, 3, &ShardIndexKind::Bst(BstConfig::default()));
+        engine.insert_batch(&all[450..]).unwrap();
+        assert!(engine.delete(7), "base row");
+        assert!(engine.delete(470), "delta row");
+        assert!(!engine.delete(7), "already gone");
+        assert!(!engine.delete(9999), "never existed");
+        assert_eq!(engine.metrics().deletes.load(Ordering::Relaxed), 2);
+        let alive = |i: usize| i != 7 && i != 470;
+        for qi in [7usize, 470, 100] {
+            let q = &all[qi];
+            for tau in [0usize, 2, 4] {
+                let mut got = engine.search(q, tau);
+                got.sort();
+                let expect: Vec<u32> = oracle(&all, q, tau)
+                    .into_iter()
+                    .filter(|&g| alive(g as usize))
+                    .collect();
+                assert_eq!(got, expect, "qi={qi} tau={tau}");
+                assert_eq!(engine.count(q, tau), expect.len());
+            }
+            let got = engine.top_k(q, 5, 16);
+            assert!(got.iter().all(|&(id, _)| alive(id as usize)));
+        }
+    }
+
+    #[test]
+    fn force_merge_and_background_merge_keep_results() {
+        let all = rows(800, 85);
+        let set = SketchSet::from_rows(2, 16, &all[..500]);
+        let engine = Engine::build(&set, 3, &ShardIndexKind::Bst(BstConfig::default()));
+        // background merges: tiny threshold, batched inserts
+        engine.set_merge_threshold(8);
+        for chunk in all[500..].chunks(64) {
+            engine.insert_batch(chunk).unwrap();
+        }
+        engine.delete(600);
+        // whatever the background merges have/haven't finished, results
+        // must equal the oracle at all times
+        for tau in [0usize, 2, 4] {
+            let mut got = engine.search(&all[600], tau);
+            got.sort();
+            let expect: Vec<u32> = oracle(&all, &all[600], tau)
+                .into_iter()
+                .filter(|&g| g != 600)
+                .collect();
+            assert_eq!(got, expect, "pre-force tau={tau}");
+        }
+        let summary = engine.merge();
+        assert_eq!(summary, MergeSummary { merged: 3, skipped: 0 });
+        for tau in [0usize, 2, 4] {
+            let mut got = engine.search(&all[600], tau);
+            got.sort();
+            let expect: Vec<u32> = oracle(&all, &all[600], tau)
+                .into_iter()
+                .filter(|&g| g != 600)
+                .collect();
+            assert_eq!(got, expect, "post-force tau={tau}");
+        }
+        // a second merge sweep is clean
+        assert_eq!(engine.merge(), MergeSummary { merged: 3, skipped: 0 });
+    }
+
+    #[test]
     fn save_load_roundtrip_answers_identically() {
         let rows = rows(1500, 90);
         let set = SketchSet::from_rows(2, 16, &rows);
@@ -790,6 +1365,7 @@ mod tests {
             let loaded = Engine::load(&path).unwrap();
             assert_eq!(loaded.n(), engine.n());
             assert_eq!(loaded.l(), engine.l());
+            assert_eq!(loaded.b(), engine.b());
             assert_eq!(loaded.n_shards(), engine.n_shards());
             let mut rng = Rng::new(77);
             for _ in 0..8 {
@@ -806,6 +1382,37 @@ mod tests {
             }
             std::fs::remove_file(&path).unwrap();
         }
+    }
+
+    #[test]
+    fn mutated_snapshot_roundtrips_with_delta_and_tombstones() {
+        let all = rows(700, 87);
+        let set = SketchSet::from_rows(2, 16, &all[..500]);
+        let engine = Engine::build(&set, 3, &ShardIndexKind::Bst(BstConfig::default()));
+        engine.insert_batch(&all[500..]).unwrap();
+        engine.delete(2);
+        engine.delete(650);
+        let dir = std::env::temp_dir().join("bst_engine_snap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("engine_delta.snap");
+        engine.save(&path).unwrap();
+        let loaded = Engine::load(&path).unwrap();
+        assert_eq!(loaded.n(), 700);
+        for qi in [0usize, 500, 650] {
+            for tau in [0usize, 2, 4] {
+                let mut a = engine.search(&all[qi], tau);
+                let mut b = loaded.search(&all[qi], tau);
+                a.sort();
+                b.sort();
+                assert_eq!(a, b, "qi={qi} tau={tau}");
+            }
+            assert_eq!(engine.top_k(&all[qi], 9, 6), loaded.top_k(&all[qi], 9, 6));
+        }
+        // further writes keep working on the reloaded engine
+        let range = loaded.insert_batch(&all[..10]).unwrap();
+        assert_eq!(range, 700..710);
+        assert!(loaded.delete(705));
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

@@ -14,6 +14,12 @@ pub struct Metrics {
     pub solutions: AtomicU64,
     pub batches: AtomicU64,
     pub errors: AtomicU64,
+    /// Rows appended through the write path.
+    pub inserts: AtomicU64,
+    /// Ids tombstoned.
+    pub deletes: AtomicU64,
+    /// Shard merges completed (background installs + force merges).
+    pub merges: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
 }
@@ -30,6 +36,11 @@ impl Metrics {
         self.latency_sum_us.fetch_add(latency_us, Ordering::Relaxed);
         let bucket = (64 - latency_us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
         self.latency_buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Records `n` rows inserted.
+    pub fn record_inserts(&self, n: usize) {
+        self.inserts.fetch_add(n as u64, Ordering::Relaxed);
     }
 
     /// Approximate percentile from the histogram (upper bucket bound).
@@ -69,6 +80,9 @@ impl Metrics {
             ("solutions", Json::num(self.solutions.load(Ordering::Relaxed) as f64)),
             ("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64)),
             ("errors", Json::num(self.errors.load(Ordering::Relaxed) as f64)),
+            ("inserts", Json::num(self.inserts.load(Ordering::Relaxed) as f64)),
+            ("deletes", Json::num(self.deletes.load(Ordering::Relaxed) as f64)),
+            ("merges", Json::num(self.merges.load(Ordering::Relaxed) as f64)),
             ("mean_latency_us", Json::num(self.mean_latency_us())),
             ("p50_latency_us", Json::num(self.latency_percentile_us(50.0) as f64)),
             ("p99_latency_us", Json::num(self.latency_percentile_us(99.0) as f64)),

@@ -4,10 +4,15 @@
 //! machinery every retrieval system (vLLM-router-style) carries:
 //!
 //! * [`engine`] — sharded query engine: the database is striped over `S`
-//!   shards, each owning one index (SI-bST by default) plus a persistent
+//!   shards, each owning one [`segment::SegmentedShard`] (immutable base
+//!   index + mutable delta segment + tombstones) plus a persistent
 //!   per-worker `QueryCtx`; a query fans out to all shards as one shared
-//!   `Arc<[u8]>` and merges id sets / counts / top-k results (ids are
-//!   globally offset).
+//!   `Arc<[u8]>` and merges id sets / counts / top-k results (workers
+//!   answer with global ids).
+//! * [`segment`] — the write path: append-only delta segments searched
+//!   with the streaming verification kernels, emit-time tombstones, and
+//!   the epoch-checked background merge that folds deltas back into
+//!   fresh immutable segments.
 //! * [`batcher`] — dynamic batching: requests (search, count *and*
 //!   top-k) queue up to `max_batch` or `max_delay`, then execute as one
 //!   mixed-mode fan-out round (amortizes shard wake-ups under load;
@@ -29,6 +34,7 @@ pub mod config;
 pub mod engine;
 pub mod metrics;
 pub mod protocol;
+pub mod segment;
 pub mod server;
 
 pub use config::ServeConfig;

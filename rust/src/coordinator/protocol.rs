@@ -5,6 +5,9 @@
 //! {"op":"search","q":[0,1,2,3],"tau":2}
 //! {"op":"count","q":[0,1,2,3],"tau":2}
 //! {"op":"topk","q":[0,1,2,3],"k":5,"tau":4}
+//! {"op":"insert","rows":[[0,1,2,3],[3,2,1,0]]}
+//! {"op":"delete","id":17}
+//! {"op":"merge"}
 //! {"op":"stats"}
 //! {"op":"ping"}
 //! {"op":"reload","path":"/path/to/engine.snap"}
@@ -15,6 +18,9 @@
 //! {"ids":[5,17],"latency_us":123}
 //! {"count":2,"latency_us":87}
 //! {"ids":[5,17],"dists":[0,2],"latency_us":140}
+//! {"ok":true,"first_id":1000,"inserted":2,"latency_us":95}
+//! {"ok":true,"deleted":true,"latency_us":12}
+//! {"ok":true,"merged":4,"skipped":0,"latency_us":5100}
 //! {"queries":...,"p50_latency_us":...}
 //! {"pong":true}
 //! {"ok":true}
@@ -24,6 +30,10 @@
 //! `tau` is optional everywhere: `search`/`count` fall back to the
 //! server's default threshold, `topk` to the sketch length (an unbounded
 //! nearest-neighbor query). `topk` results are sorted by `(dist, id)`.
+//!
+//! Write ops: `insert` appends rows (consecutive global ids, returned
+//! via `first_id`), `delete` tombstones one id, `merge` force-folds
+//! every shard's delta into a fresh immutable segment.
 
 use crate::util::json::Json;
 
@@ -33,6 +43,12 @@ pub enum Request {
     Search { q: Vec<u8>, tau: Option<usize> },
     Count { q: Vec<u8>, tau: Option<usize> },
     TopK { q: Vec<u8>, k: usize, tau: Option<usize> },
+    /// Append rows to the serving engine's delta segments.
+    Insert { rows: Vec<Vec<u8>> },
+    /// Tombstone one global id.
+    Delete { id: u32 },
+    /// Force-fold every shard's delta into its base segment.
+    Merge,
     /// Swap the serving engine for one loaded from a snapshot file.
     Reload { path: String },
     Stats,
@@ -40,19 +56,25 @@ pub enum Request {
     Shutdown,
 }
 
-/// Extracts the query characters from a request body.
-fn parse_q(v: &Json) -> Result<Vec<u8>, String> {
-    v.get("q")
-        .and_then(|q| q.as_arr())
-        .ok_or_else(|| "request requires 'q' array".to_string())?
-        .iter()
+/// Decodes one array of sketch characters.
+fn parse_chars(arr: &[Json], what: &str) -> Result<Vec<u8>, String> {
+    arr.iter()
         .map(|x| {
             x.as_f64()
                 .filter(|&f| f.fract() == 0.0 && (0.0..256.0).contains(&f))
                 .map(|f| f as u8)
-                .ok_or_else(|| "q entries must be chars 0..256".to_string())
+                .ok_or_else(|| format!("{what} entries must be chars 0..256"))
         })
         .collect()
+}
+
+/// Extracts the query characters from a request body.
+fn parse_q(v: &Json) -> Result<Vec<u8>, String> {
+    let arr = v
+        .get("q")
+        .and_then(|q| q.as_arr())
+        .ok_or_else(|| "request requires 'q' array".to_string())?;
+    parse_chars(arr, "q")
 }
 
 /// Parses one request line.
@@ -86,6 +108,30 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             let tau = v.get("tau").and_then(|t| t.as_usize());
             Ok(Request::TopK { q, k, tau })
         }
+        "insert" => {
+            let rows = v
+                .get("rows")
+                .and_then(|r| r.as_arr())
+                .filter(|r| !r.is_empty())
+                .ok_or_else(|| "insert requires a non-empty 'rows' array".to_string())?
+                .iter()
+                .map(|row| {
+                    row.as_arr()
+                        .ok_or_else(|| "insert rows must be arrays".to_string())
+                        .and_then(|arr| parse_chars(arr, "rows"))
+                })
+                .collect::<Result<Vec<Vec<u8>>, String>>()?;
+            Ok(Request::Insert { rows })
+        }
+        "delete" => {
+            let id = v
+                .get("id")
+                .and_then(|i| i.as_f64())
+                .filter(|&f| f.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(&f))
+                .ok_or_else(|| "delete requires an 'id' in 0..2^32".to_string())?;
+            Ok(Request::Delete { id: id as u32 })
+        }
+        "merge" => Ok(Request::Merge),
         "reload" => {
             let path = v
                 .get("path")
@@ -128,6 +174,41 @@ pub fn topk_response(hits: &[(u32, usize)], latency_us: u64) -> String {
             "dists",
             Json::Arr(hits.iter().map(|&(_, d)| Json::Num(d as f64)).collect()),
         ),
+        ("latency_us", Json::num(latency_us as f64)),
+    ])
+    .to_string()
+}
+
+/// Encodes an insert response: the first assigned global id (the batch
+/// gets consecutive ids) and the row count.
+pub fn insert_response(first_id: u32, inserted: usize, latency_us: u64) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("first_id", Json::num(first_id as f64)),
+        ("inserted", Json::num(inserted as f64)),
+        ("latency_us", Json::num(latency_us as f64)),
+    ])
+    .to_string()
+}
+
+/// Encodes a delete response (`deleted` is false for unknown or
+/// already-tombstoned ids).
+pub fn delete_response(deleted: bool, latency_us: u64) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("deleted", Json::Bool(deleted)),
+        ("latency_us", Json::num(latency_us as f64)),
+    ])
+    .to_string()
+}
+
+/// Encodes a merge response: shards now all-immutable vs legacy shards
+/// that had nothing to fold into.
+pub fn merge_response(merged: usize, skipped: usize, latency_us: u64) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("merged", Json::num(merged as f64)),
+        ("skipped", Json::num(skipped as f64)),
         ("latency_us", Json::num(latency_us as f64)),
     ])
     .to_string()
@@ -183,6 +264,37 @@ mod tests {
         );
         assert!(parse_request(r#"{"op":"reload"}"#).is_err());
         assert!(parse_request(r#"{"op":"reload","path":""}"#).is_err());
+    }
+
+    #[test]
+    fn parses_write_ops() {
+        let r = parse_request(r#"{"op":"insert","rows":[[0,1],[3,2]]}"#).unwrap();
+        assert_eq!(r, Request::Insert { rows: vec![vec![0, 1], vec![3, 2]] });
+        let r = parse_request(r#"{"op":"delete","id":17}"#).unwrap();
+        assert_eq!(r, Request::Delete { id: 17 });
+        assert_eq!(parse_request(r#"{"op":"merge"}"#).unwrap(), Request::Merge);
+        assert!(parse_request(r#"{"op":"insert"}"#).is_err());
+        assert!(parse_request(r#"{"op":"insert","rows":[]}"#).is_err());
+        assert!(parse_request(r#"{"op":"insert","rows":[3]}"#).is_err());
+        assert!(parse_request(r#"{"op":"insert","rows":[[300]]}"#).is_err());
+        assert!(parse_request(r#"{"op":"delete"}"#).is_err());
+        assert!(parse_request(r#"{"op":"delete","id":-1}"#).is_err());
+        assert!(parse_request(r#"{"op":"delete","id":1.5}"#).is_err());
+    }
+
+    #[test]
+    fn write_responses_are_valid_json() {
+        let i = insert_response(1000, 2, 95);
+        let v = Json::parse(&i).unwrap();
+        assert_eq!(v.get("first_id").and_then(|x| x.as_usize()), Some(1000));
+        assert_eq!(v.get("inserted").and_then(|x| x.as_usize()), Some(2));
+        let d = delete_response(true, 12);
+        let v = Json::parse(&d).unwrap();
+        assert_eq!(v.get("deleted").and_then(|x| x.as_bool()), Some(true));
+        let m = merge_response(4, 1, 5100);
+        let v = Json::parse(&m).unwrap();
+        assert_eq!(v.get("merged").and_then(|x| x.as_usize()), Some(4));
+        assert_eq!(v.get("skipped").and_then(|x| x.as_usize()), Some(1));
     }
 
     #[test]

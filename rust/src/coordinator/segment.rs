@@ -1,0 +1,957 @@
+//! Segmented shards: the engine's write path.
+//!
+//! Kanda & Tabei's follow-up (*Dynamic Similarity Search on Integer
+//! Sketches*, 2020) makes the static bST updatable by pairing every
+//! immutable index with a small mutable buffer. This module is that
+//! pairing for one engine shard:
+//!
+//! * **base segment** — the existing immutable [`ShardIndex`] (SI-bST or
+//!   MI-bST) over the shard's settled rows, plus the raw [`SketchSet`]
+//!   it was built from (kept so a merge can rebuild without re-reading
+//!   cold storage) and an [`IdMap`] from local postings to global ids;
+//! * **delta segment** — an append-only, uncompressed buffer of freshly
+//!   inserted sketches ([`DeltaSegment`]): raw characters for merging
+//!   and persistence, plus a vertical [`PlaneStore`] searched with the
+//!   PR 3 `ham_range_leq` streaming kernel;
+//! * **tombstones** — deleted global ids, consulted at emit time so
+//!   every query mode (ids / count / top-k) excludes them without
+//!   touching the immutable structures;
+//! * **background merge** — once the delta passes a threshold it is
+//!   sealed (immutable, still searched) and an off-thread rebuild folds
+//!   base + sealed into a fresh immutable segment, installed atomically
+//!   back on the owning worker (epoch-checked, so a racing force-merge
+//!   simply wins and the stale result is dropped).
+//!
+//! Queries fan across base + sealed + active through the same
+//! [`Collector`] machinery as everything else: the base traversal is
+//! wrapped in [`Remap`] (local→global ids + tombstone filter) and the
+//! delta scans emit global ids directly, so the engine-level merge by
+//! `(dist, id)` is unchanged. Global ids are assigned in insertion order
+//! and never renumbered — results are byte-identical to a from-scratch
+//! build of the same rows, whatever the merge history.
+
+use super::engine::{QueryMode, ShardIndex, ShardIndexKind, ShardReply};
+use crate::index::SearchIndex;
+use crate::query::{CollectIds, Collector, CountOnly, QueryCtx, TopK};
+use crate::sketch::plane_store::PlaneStore;
+use crate::sketch::SketchSet;
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
+use crate::util::HeapSize;
+use std::collections::HashSet;
+use std::sync::Arc;
+
+/// Local-posting → global-id mapping of one base segment.
+///
+/// Freshly striped shards are contiguous (`Contig`); once a merge folds
+/// round-robin-routed delta rows into the base, the map goes `Explicit`.
+/// Either way it is **strictly increasing**, so per-shard `(dist, local
+/// id)` ordering equals `(dist, global id)` ordering and the engine's
+/// exact top-k merge keeps working.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum IdMap {
+    /// Locals `0..n` map to globals `offset..offset + n`.
+    Contig { offset: u32, n: u32 },
+    /// Strictly increasing explicit ids, one per local row.
+    Explicit(Vec<u32>),
+}
+
+impl IdMap {
+    /// Rows covered by the map.
+    pub fn len(&self) -> usize {
+        match self {
+            IdMap::Contig { n, .. } => *n as usize,
+            IdMap::Explicit(ids) => ids.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Global id of local row `local`.
+    #[inline]
+    pub fn get(&self, local: u32) -> u32 {
+        match self {
+            IdMap::Contig { offset, n } => {
+                debug_assert!(local < *n);
+                offset + local
+            }
+            IdMap::Explicit(ids) => ids[local as usize],
+        }
+    }
+
+    /// Largest mapped global id (`None` when empty).
+    pub fn max(&self) -> Option<u32> {
+        match self {
+            IdMap::Contig { offset, n } => n.checked_sub(1).map(|last| offset + last),
+            IdMap::Explicit(ids) => ids.last().copied(),
+        }
+    }
+
+    /// Whether global id `g` is mapped (range check / binary search).
+    pub fn contains(&self, g: u32) -> bool {
+        match self {
+            IdMap::Contig { offset, n } => g >= *offset && g - *offset < *n,
+            IdMap::Explicit(ids) => ids.binary_search(&g).is_ok(),
+        }
+    }
+
+    /// All mapped global ids, ascending.
+    pub fn iter(&self) -> Box<dyn Iterator<Item = u32> + '_> {
+        match self {
+            IdMap::Contig { offset, n } => Box::new(*offset..*offset + *n),
+            IdMap::Explicit(ids) => Box::new(ids.iter().copied()),
+        }
+    }
+
+    /// The map after appending `extra` rows (all ids in `extra` are
+    /// strictly increasing and greater than [`IdMap::max`] — enforced by
+    /// the insert path, validated on snapshot load).
+    pub fn extend(&self, extra: &[u32]) -> IdMap {
+        if extra.is_empty() {
+            return self.clone();
+        }
+        let contiguous = extra
+            .iter()
+            .enumerate()
+            .all(|(i, &g)| g == extra[0] + i as u32);
+        if let IdMap::Contig { offset, n } = self {
+            if contiguous && extra[0] == offset + n {
+                return IdMap::Contig { offset: *offset, n: n + extra.len() as u32 };
+            }
+        }
+        if self.is_empty() && contiguous {
+            return IdMap::Contig { offset: extra[0], n: extra.len() as u32 };
+        }
+        let mut ids: Vec<u32> = self.iter().collect();
+        ids.extend_from_slice(extra);
+        IdMap::Explicit(ids)
+    }
+}
+
+impl Persist for IdMap {
+    fn write_into(&self, w: &mut ByteWriter) {
+        match self {
+            IdMap::Contig { offset, n } => {
+                w.put_u8(0);
+                w.put_u32(*offset);
+                w.put_u32(*n);
+            }
+            IdMap::Explicit(ids) => {
+                w.put_u8(1);
+                w.put_u32s(ids);
+            }
+        }
+    }
+
+    fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
+        match r.get_u8()? {
+            0 => {
+                let offset = r.get_u32()?;
+                let n = r.get_u32()?;
+                ensure(offset.checked_add(n).is_some(), || {
+                    format!("IdMap: contiguous range {offset}+{n} overflows u32")
+                })?;
+                Ok(IdMap::Contig { offset, n })
+            }
+            1 => {
+                let ids = r.get_u32s()?;
+                ensure(ids.windows(2).all(|w| w[0] < w[1]), || {
+                    "IdMap: explicit ids must be strictly increasing".to_string()
+                })?;
+                Ok(IdMap::Explicit(ids))
+            }
+            t => Err(StoreError::Corrupt(format!("IdMap: unknown tag {t}"))),
+        }
+    }
+}
+
+/// The append-only mutable segment: freshly inserted sketches, searched
+/// uncompressed until a merge folds them into the base.
+///
+/// Rows are held twice, both O(delta) and cheap: raw characters (the
+/// merge/persistence source of truth) and — when `L <= 64` — a vertical
+/// [`PlaneStore`] scanned with the streaming `ham_range_leq` kernel
+/// exactly like the linear baseline. Longer sketches fall back to a
+/// character scan with the running-distance early exit.
+#[derive(Debug, Clone)]
+pub struct DeltaSegment {
+    b: usize,
+    l: usize,
+    /// Global ids, strictly increasing (insertion order).
+    ids: Vec<u32>,
+    /// Raw characters, `l` per row.
+    chars: Vec<u8>,
+    /// Vertical planes (`L <= 64` only).
+    planes: Option<PlaneStore>,
+}
+
+impl DeltaSegment {
+    pub fn new(b: usize, l: usize) -> Self {
+        assert!(matches!(b, 1..=8) && l >= 1);
+        let planes = (l <= 64).then(|| PlaneStore::with_dims(b, l));
+        DeltaSegment { b, l, ids: Vec::new(), chars: Vec::new(), planes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn ids(&self) -> &[u32] {
+        &self.ids
+    }
+
+    /// Raw characters of delta row `i`.
+    pub fn row(&self, i: usize) -> &[u8] {
+        &self.chars[i * self.l..(i + 1) * self.l]
+    }
+
+    /// Appends one sketch under global id `id` (ids must arrive strictly
+    /// increasing — the engine assigns them from a monotone counter).
+    pub fn push(&mut self, id: u32, row: &[u8]) {
+        assert_eq!(row.len(), self.l, "delta insert: row length != L");
+        debug_assert!(row.iter().all(|&c| (c as usize) < (1 << self.b)));
+        debug_assert!(self.ids.last().is_none_or(|&last| last < id));
+        self.ids.push(id);
+        self.chars.extend_from_slice(row);
+        if let Some(planes) = &mut self.planes {
+            let mut fields = [0u64; 8];
+            for (p, &c) in row.iter().enumerate() {
+                for (k, f) in fields[..self.b].iter_mut().enumerate() {
+                    *f |= (((c >> k) & 1) as u64) << p;
+                }
+            }
+            planes.push_fields(&fields[..self.b]);
+        }
+    }
+
+    /// Runs a query over the delta rows, emitting **global** ids for
+    /// every non-tombstoned row within the collector's live threshold.
+    /// Accounting mirrors the linear scan: every row visited once, one
+    /// batched prune count.
+    pub fn run(&self, q: &[u8], ctx: &mut QueryCtx, tombs: &HashSet<u32>, c: &mut dyn Collector) {
+        if self.is_empty() {
+            return;
+        }
+        assert_eq!(q.len(), self.l, "query length mismatch");
+        if let Some(planes) = &self.planes {
+            let qp = &mut ctx.q_planes;
+            qp.clear();
+            for k in 0..self.b {
+                let mut field = 0u64;
+                for (p, &ch) in q.iter().enumerate() {
+                    field |= (((ch >> k) & 1) as u64) << p;
+                }
+                qp.push(field);
+            }
+            c.on_visit_many(self.len());
+            let mut pruned = 0usize;
+            planes.ham_range_leq(0, self.len(), &ctx.q_planes, c.tau(), |i, verdict| {
+                match verdict {
+                    Some(d) => {
+                        let g = self.ids[i];
+                        if !tombs.contains(&g) {
+                            c.emit(&[g], d);
+                        }
+                    }
+                    None => pruned += 1,
+                }
+                Some(c.tau())
+            });
+            c.on_prune_many(pruned);
+        } else {
+            // L > 64: character scan with the running-distance early exit.
+            c.on_visit_many(self.len());
+            let mut pruned = 0usize;
+            for (i, &g) in self.ids.iter().enumerate() {
+                let tau = c.tau();
+                let mut d = 0usize;
+                let mut over = false;
+                for (a, b) in self.row(i).iter().zip(q) {
+                    if a != b {
+                        d += 1;
+                        if d > tau {
+                            over = true;
+                            break;
+                        }
+                    }
+                }
+                if over {
+                    pruned += 1;
+                } else if !tombs.contains(&g) {
+                    c.emit(&[g], d);
+                }
+            }
+            c.on_prune_many(pruned);
+        }
+    }
+
+    /// Appends another delta's rows (used to fold sealed + active into
+    /// one persisted section; `other`'s ids all exceed this delta's).
+    pub fn append(&mut self, other: &DeltaSegment) {
+        for (i, &g) in other.ids.iter().enumerate() {
+            self.push(g, other.row(i));
+        }
+    }
+
+    /// Rebuilds a delta from persisted parts, validating every field.
+    pub fn from_parts(
+        b: usize,
+        l: usize,
+        ids: Vec<u32>,
+        chars: Vec<u8>,
+    ) -> Result<Self, StoreError> {
+        ensure(matches!(b, 1..=8) && l >= 1, || {
+            format!("delta: bad dims b={b} L={l}")
+        })?;
+        ensure(chars.len() == ids.len().saturating_mul(l), || {
+            format!("delta: {} chars for {} rows of L={l}", chars.len(), ids.len())
+        })?;
+        ensure(chars.iter().all(|&c| (c as usize) < (1 << b)), || {
+            format!("delta: character out of the 2^{b} alphabet")
+        })?;
+        ensure(ids.windows(2).all(|w| w[0] < w[1]), || {
+            "delta: ids must be strictly increasing".to_string()
+        })?;
+        let mut delta = DeltaSegment::new(b, l);
+        for (i, &g) in ids.iter().enumerate() {
+            delta.push(g, &chars[i * l..(i + 1) * l]);
+        }
+        Ok(delta)
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.ids.heap_bytes()
+            + self.chars.capacity()
+            + self.planes.as_ref().map_or(0, |p| p.heap_bytes())
+    }
+}
+
+/// Collector adapter for the base segment: maps emitted local ids
+/// through the shard's [`IdMap`] and drops tombstoned rows, forwarding
+/// everything else (live threshold, visit/prune accounting) unchanged.
+struct Remap<'a> {
+    inner: &'a mut dyn Collector,
+    map: &'a IdMap,
+    tombstones: &'a HashSet<u32>,
+}
+
+impl Collector for Remap<'_> {
+    #[inline]
+    fn tau(&self) -> usize {
+        self.inner.tau()
+    }
+
+    #[inline]
+    fn emit(&mut self, ids: &[u32], dist: usize) {
+        // Remap into a stack chunk and forward in bulk: one inner emit
+        // (vtable hop + vector extend) per 64 ids instead of per id, no
+        // allocation, and the tombstone probe is skipped entirely on the
+        // common no-deletes path.
+        let mut buf = [0u32; 64];
+        let no_tombs = self.tombstones.is_empty();
+        for chunk in ids.chunks(buf.len()) {
+            let mut live = 0usize;
+            for &id in chunk {
+                let g = self.map.get(id);
+                if no_tombs || !self.tombstones.contains(&g) {
+                    buf[live] = g;
+                    live += 1;
+                }
+            }
+            if live > 0 {
+                self.inner.emit(&buf[..live], dist);
+            }
+        }
+    }
+
+    #[inline]
+    fn on_visit(&mut self) {
+        self.inner.on_visit()
+    }
+
+    #[inline]
+    fn on_prune(&mut self) {
+        self.inner.on_prune()
+    }
+
+    #[inline]
+    fn on_visit_many(&mut self, n: usize) {
+        self.inner.on_visit_many(n)
+    }
+
+    #[inline]
+    fn on_prune_many(&mut self, n: usize) {
+        self.inner.on_prune_many(n)
+    }
+}
+
+/// Everything an off-thread merge needs, captured at seal time. The
+/// base structures travel as `Arc`s (no copies); `epoch` pins the shard
+/// state the rebuild is based on.
+pub struct MergeJob {
+    kind: ShardIndexKind,
+    rows: Arc<SketchSet>,
+    map: IdMap,
+    sealed: Arc<DeltaSegment>,
+    epoch: u64,
+}
+
+impl MergeJob {
+    /// The expensive part, run off the worker thread: rebuild base +
+    /// sealed into a fresh immutable segment.
+    pub fn build(self) -> MergeResult {
+        let (rows, map) = combine(&self.rows, &self.sealed, &self.map);
+        let index = self.kind.build_index(&rows);
+        MergeResult { epoch: self.epoch, index: Arc::new(index), rows: Arc::new(rows), map }
+    }
+}
+
+/// A finished merge, sent back to the owning worker for installation.
+pub struct MergeResult {
+    epoch: u64,
+    index: Arc<ShardIndex>,
+    rows: Arc<SketchSet>,
+    map: IdMap,
+}
+
+/// Outcome of a force-merge request on one shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeOutcome {
+    /// Base + delta rebuilt; the shard is all-immutable again.
+    Merged,
+    /// Nothing pending — the shard was already all-immutable.
+    Clean,
+    /// The shard has delta rows but no base rows to fold them into
+    /// (legacy v1 snapshot); the delta stays mutable.
+    Skipped,
+}
+
+/// The state each shard worker owns: one immutable base segment, at most
+/// one sealed delta (merge in flight), one active delta, and the
+/// tombstone set. All access is serialized through the worker's message
+/// loop — no locks anywhere on the query or write path.
+pub struct SegmentedShard {
+    kind: ShardIndexKind,
+    base: Arc<ShardIndex>,
+    map: IdMap,
+    /// Raw rows behind `base` (`None` for legacy v1 snapshots, which
+    /// then cannot merge — inserts still work, deltas just never fold).
+    rows: Option<Arc<SketchSet>>,
+    /// Frozen delta being merged off-thread (still searched).
+    sealed: Option<Arc<DeltaSegment>>,
+    /// Mutable delta receiving inserts.
+    active: DeltaSegment,
+    /// Deleted global ids, consulted at emit time.
+    tombstones: HashSet<u32>,
+    /// Bumped on every install/force-merge; stale off-thread results
+    /// (older epoch) are discarded.
+    epoch: u64,
+    b: usize,
+    l: usize,
+}
+
+/// Serializable view of one shard, handed to `Engine::save` (sealed and
+/// active deltas folded into one section; they reload as active).
+pub struct ShardParts {
+    pub index: Arc<ShardIndex>,
+    pub map: IdMap,
+    pub rows: Option<Arc<SketchSet>>,
+    pub delta: DeltaSegment,
+    pub tombstones: Vec<u32>,
+}
+
+impl SegmentedShard {
+    /// A freshly built (or just merged) all-immutable shard. `b` and `L`
+    /// come from the base index.
+    pub fn new(
+        kind: ShardIndexKind,
+        base: Arc<ShardIndex>,
+        map: IdMap,
+        rows: Option<Arc<SketchSet>>,
+    ) -> Self {
+        debug_assert_eq!(map.len(), base.n_rows());
+        let (b, l) = (base.b(), base.l());
+        let active = DeltaSegment::new(b, l);
+        SegmentedShard {
+            kind,
+            base,
+            map,
+            rows,
+            sealed: None,
+            active,
+            tombstones: HashSet::new(),
+            epoch: 0,
+            b,
+            l,
+        }
+    }
+
+    /// Restores a shard from snapshot sections.
+    pub fn from_snapshot(
+        kind: ShardIndexKind,
+        base: Arc<ShardIndex>,
+        map: IdMap,
+        rows: Option<Arc<SketchSet>>,
+        delta: DeltaSegment,
+        tombstones: Vec<u32>,
+    ) -> Self {
+        let mut shard = SegmentedShard::new(kind, base, map, rows);
+        shard.active = delta;
+        shard.tombstones = tombstones.into_iter().collect();
+        shard
+    }
+
+    /// Every global id this shard owns, ascending within each segment
+    /// (snapshot-load cross-validation).
+    pub fn owned_ids(&self) -> impl Iterator<Item = u32> + '_ {
+        let sealed: &[u32] = self.sealed.as_deref().map_or(&[], |s| s.ids());
+        self.map
+            .iter()
+            .chain(sealed.iter().copied())
+            .chain(self.active.ids().iter().copied())
+    }
+
+    /// The tombstoned global ids (unordered).
+    pub fn tombstone_ids(&self) -> impl Iterator<Item = &u32> {
+        self.tombstones.iter()
+    }
+
+    /// Whether this shard owns global id `g` (any segment).
+    pub fn owns_id(&self, g: u32) -> bool {
+        self.owns(g)
+    }
+
+    /// Rows this shard owns (base + pending deltas, tombstones included).
+    pub fn n_rows(&self) -> usize {
+        self.map.len() + self.sealed.as_ref().map_or(0, |s| s.len()) + self.active.len()
+    }
+
+    /// Pending (not yet merged) delta rows.
+    pub fn delta_len(&self) -> usize {
+        self.sealed.as_ref().map_or(0, |s| s.len()) + self.active.len()
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.base.heap_bytes()
+            + self.rows.as_ref().map_or(0, |r| r.heap_bytes())
+            + self.sealed.as_ref().map_or(0, |s| s.heap_bytes())
+            + self.active.heap_bytes()
+    }
+
+    /// Executes one query across base + sealed + active, returning
+    /// global ids. The collector order is irrelevant to the result —
+    /// every mode's semantics are order-independent — so segments are
+    /// visited base-first for cache friendliness.
+    pub fn query(&self, q: &[u8], tau: usize, mode: QueryMode, ctx: &mut QueryCtx) -> ShardReply {
+        match mode {
+            QueryMode::Ids => {
+                let mut hits = Vec::new();
+                let mut coll = CollectIds::new(tau, &mut hits);
+                self.run_all(q, ctx, &mut coll);
+                ShardReply::Ids(hits)
+            }
+            QueryMode::Count => {
+                let mut coll = CountOnly::new(tau);
+                self.run_all(q, ctx, &mut coll);
+                ShardReply::Count(coll.count())
+            }
+            QueryMode::TopK(k) => {
+                let mut hits = Vec::new();
+                let mut coll = TopK::with_heap(k, tau, ctx.take_topk_heap());
+                self.run_all(q, ctx, &mut coll);
+                coll.drain_into(&mut hits);
+                ctx.put_topk_heap(coll.into_heap());
+                ShardReply::TopK(hits)
+            }
+        }
+    }
+
+    fn run_all(&self, q: &[u8], ctx: &mut QueryCtx, c: &mut dyn Collector) {
+        {
+            let mut remap = Remap { inner: c, map: &self.map, tombstones: &self.tombstones };
+            self.base.run(q, ctx, &mut remap);
+        }
+        if let Some(sealed) = &self.sealed {
+            sealed.run(q, ctx, &self.tombstones, c);
+        }
+        self.active.run(q, ctx, &self.tombstones, c);
+    }
+
+    /// Appends pre-assigned `(global id, row)` pairs to the active delta.
+    pub fn insert(&mut self, items: &[(u32, Vec<u8>)]) {
+        for (id, row) in items {
+            self.active.push(*id, row);
+        }
+    }
+
+    /// Whether global id `g` lives in this shard (any segment).
+    fn owns(&self, g: u32) -> bool {
+        self.map.contains(g)
+            || self.active.ids.binary_search(&g).is_ok()
+            || self
+                .sealed
+                .as_ref()
+                .is_some_and(|s| s.ids.binary_search(&g).is_ok())
+    }
+
+    /// Tombstones `g` if this shard owns it; returns whether the id was
+    /// newly deleted here.
+    pub fn delete(&mut self, g: u32) -> bool {
+        if self.owns(g) {
+            self.tombstones.insert(g)
+        } else {
+            false
+        }
+    }
+
+    /// Seals the active delta and captures a [`MergeJob`] when the merge
+    /// threshold is reached (and no merge is already in flight, and the
+    /// shard has base rows to fold into).
+    pub fn seal_for_merge(&mut self, threshold: usize) -> Option<MergeJob> {
+        if self.sealed.is_some() || self.active.len() < threshold.max(1) {
+            return None;
+        }
+        let rows = self.rows.clone()?;
+        let sealed = Arc::new(std::mem::replace(
+            &mut self.active,
+            DeltaSegment::new(self.b, self.l),
+        ));
+        self.sealed = Some(Arc::clone(&sealed));
+        Some(MergeJob {
+            kind: self.kind.clone(),
+            rows,
+            map: self.map.clone(),
+            sealed,
+            epoch: self.epoch,
+        })
+    }
+
+    /// Installs a finished off-thread merge. Rejected (returns `false`)
+    /// when the shard moved on — a force-merge already folded the sealed
+    /// delta — in which case the result is simply dropped.
+    pub fn install(&mut self, result: MergeResult) -> bool {
+        if result.epoch != self.epoch {
+            return false;
+        }
+        debug_assert!(self.sealed.is_some());
+        self.base = result.index;
+        self.rows = Some(result.rows);
+        self.map = result.map;
+        self.sealed = None;
+        self.epoch += 1;
+        true
+    }
+
+    /// Synchronously folds every pending delta row (sealed + active)
+    /// into a fresh immutable base. Any in-flight background merge is
+    /// subsumed: the epoch bump makes its later install a no-op.
+    pub fn force_merge(&mut self) -> MergeOutcome {
+        if self.delta_len() == 0 {
+            return MergeOutcome::Clean;
+        }
+        let Some(rows) = self.rows.clone() else {
+            return MergeOutcome::Skipped;
+        };
+        let mut pending = match self.sealed.take() {
+            Some(sealed) => (*sealed).clone(),
+            None => DeltaSegment::new(self.b, self.l),
+        };
+        pending.append(&self.active);
+        let (new_rows, new_map) = combine(&rows, &pending, &self.map);
+        self.base = Arc::new(self.kind.build_index(&new_rows));
+        self.rows = Some(Arc::new(new_rows));
+        self.map = new_map;
+        self.active = DeltaSegment::new(self.b, self.l);
+        self.epoch += 1;
+        MergeOutcome::Merged
+    }
+
+    /// A consistent serializable view for `Engine::save` (sealed +
+    /// active folded into one delta; tombstones sorted).
+    pub fn parts(&self) -> ShardParts {
+        let mut delta = match &self.sealed {
+            Some(sealed) => (**sealed).clone(),
+            None => DeltaSegment::new(self.b, self.l),
+        };
+        delta.append(&self.active);
+        let mut tombstones: Vec<u32> = self.tombstones.iter().copied().collect();
+        tombstones.sort_unstable();
+        ShardParts {
+            index: Arc::clone(&self.base),
+            map: self.map.clone(),
+            rows: self.rows.clone(),
+            delta,
+            tombstones,
+        }
+    }
+}
+
+/// Concatenates base rows + delta rows (in id order) and extends the id
+/// map accordingly — the input of every merge rebuild.
+fn combine(rows: &SketchSet, delta: &DeltaSegment, map: &IdMap) -> (SketchSet, IdMap) {
+    let n0 = rows.n();
+    let combined = SketchSet::from_fn(rows.b(), rows.l(), n0 + delta.len(), |i, p| {
+        if i < n0 {
+            rows.get_char(i, p)
+        } else {
+            delta.row(i - n0)[p]
+        }
+    });
+    (combined, map.extend(delta.ids()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::QueryMode;
+    use crate::sketch::hamming::ham_chars;
+    use crate::trie::bst::BstConfig;
+    use crate::util::Rng;
+
+    fn rows(b: usize, l: usize, n: usize, seed: u64) -> Vec<Vec<u8>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect()
+    }
+
+    fn bst_shard(data: &[Vec<u8>], b: usize, l: usize, offset: u32) -> SegmentedShard {
+        let set = SketchSet::from_rows(b, l, data);
+        let kind = ShardIndexKind::Bst(BstConfig::default());
+        let base = Arc::new(kind.build_index(&set));
+        let map = IdMap::Contig { offset, n: data.len() as u32 };
+        SegmentedShard::new(kind, base, map, Some(Arc::new(set)))
+    }
+
+    fn sorted_ids(reply: ShardReply) -> Vec<u32> {
+        match reply {
+            ShardReply::Ids(mut v) => {
+                v.sort_unstable();
+                v
+            }
+            _ => panic!("expected ids"),
+        }
+    }
+
+    #[test]
+    fn idmap_contig_and_explicit() {
+        let c = IdMap::Contig { offset: 10, n: 4 };
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.get(0), 10);
+        assert_eq!(c.get(3), 13);
+        assert_eq!(c.max(), Some(13));
+        assert!(c.contains(12) && !c.contains(14) && !c.contains(9));
+        assert_eq!(c.iter().collect::<Vec<_>>(), vec![10, 11, 12, 13]);
+
+        // contiguous extension stays Contig; gapped goes Explicit
+        assert_eq!(c.extend(&[14, 15]), IdMap::Contig { offset: 10, n: 6 });
+        let e = c.extend(&[20, 25]);
+        assert_eq!(e, IdMap::Explicit(vec![10, 11, 12, 13, 20, 25]));
+        assert_eq!(e.get(4), 20);
+        assert!(e.contains(25) && !e.contains(24));
+        assert_eq!(e.max(), Some(25));
+        assert_eq!(e.extend(&[]), e);
+
+        let empty = IdMap::Contig { offset: 0, n: 0 };
+        assert_eq!(empty.max(), None);
+        assert_eq!(empty.extend(&[7, 8]), IdMap::Contig { offset: 7, n: 2 });
+
+        // persistence roundtrip + monotonicity validation
+        for m in [c, e] {
+            let bytes = crate::store::to_payload(&m);
+            let got: IdMap =
+                crate::store::from_payload(&mut ByteReader::new(&bytes)).unwrap();
+            assert_eq!(got, m);
+        }
+        let mut w = ByteWriter::new();
+        w.put_u8(1);
+        w.put_u32s(&[5, 5]);
+        assert!(crate::store::from_payload::<IdMap>(&mut ByteReader::new(&w.into_bytes()))
+            .is_err());
+    }
+
+    #[test]
+    fn delta_scan_matches_oracle_all_b() {
+        // (2, 64) hits the widest plane fields; (2, 80) exercises the
+        // L > 64 character-scan fallback (no vertical planes).
+        for &(b, l) in &[(1usize, 16usize), (2, 12), (4, 8), (8, 6), (2, 64), (2, 80)] {
+            let data = rows(b, l, 60, (b * l) as u64);
+            let mut delta = DeltaSegment::new(b, l);
+            for (i, row) in data.iter().enumerate() {
+                delta.push(100 + i as u32, row);
+            }
+            assert_eq!(delta.len(), data.len());
+            let tombs: HashSet<u32> = [101u32, 130].into_iter().collect();
+            let mut ctx = QueryCtx::new();
+            for qi in [0usize, 7, 59] {
+                let q = &data[qi];
+                for tau in [0usize, 1, 3] {
+                    let mut hits = Vec::new();
+                    let mut coll = CollectIds::new(tau, &mut hits);
+                    delta.run(q, &mut ctx, &tombs, &mut coll);
+                    hits.sort_unstable();
+                    let expect: Vec<u32> = (0..data.len())
+                        .filter(|&i| ham_chars(&data[i], q) <= tau)
+                        .map(|i| 100 + i as u32)
+                        .filter(|g| !tombs.contains(g))
+                        .collect();
+                    assert_eq!(hits, expect, "b={b} l={l} tau={tau}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn delta_roundtrips_through_parts() {
+        let data = rows(2, 10, 25, 77);
+        let mut delta = DeltaSegment::new(2, 10);
+        for (i, row) in data.iter().enumerate() {
+            delta.push(3 * i as u32, row);
+        }
+        let rebuilt =
+            DeltaSegment::from_parts(2, 10, delta.ids.clone(), delta.chars.clone()).unwrap();
+        assert_eq!(rebuilt.ids, delta.ids);
+        assert_eq!(rebuilt.chars, delta.chars);
+        // out-of-alphabet and non-monotone inputs are rejected
+        assert!(DeltaSegment::from_parts(2, 10, vec![0], vec![9; 10]).is_err());
+        assert!(DeltaSegment::from_parts(2, 2, vec![1, 1], vec![0; 4]).is_err());
+        assert!(DeltaSegment::from_parts(2, 10, vec![0], vec![0; 7]).is_err());
+    }
+
+    #[test]
+    fn shard_query_spans_base_delta_and_tombstones() {
+        let (b, l) = (2usize, 12usize);
+        let data = rows(b, l, 150, 5);
+        let mut shard = bst_shard(&data[..100], b, l, 0);
+        shard.insert(
+            &data[100..]
+                .iter()
+                .enumerate()
+                .map(|(i, r)| (100 + i as u32, r.clone()))
+                .collect::<Vec<_>>(),
+        );
+        assert!(shard.delete(3), "base row");
+        assert!(shard.delete(120), "delta row");
+        assert!(!shard.delete(3), "already tombstoned");
+        assert!(!shard.delete(999), "not owned");
+
+        let alive = |i: usize| i != 3 && i != 120;
+        let mut ctx = QueryCtx::new();
+        for qi in [0usize, 50, 120] {
+            let q = &data[qi];
+            for tau in [0usize, 2, 4] {
+                let got = sorted_ids(shard.query(q, tau, QueryMode::Ids, &mut ctx));
+                let expect: Vec<u32> = (0..data.len())
+                    .filter(|&i| alive(i) && ham_chars(&data[i], q) <= tau)
+                    .map(|i| i as u32)
+                    .collect();
+                assert_eq!(got, expect, "qi={qi} tau={tau}");
+                match shard.query(q, tau, QueryMode::Count, &mut ctx) {
+                    ShardReply::Count(n) => assert_eq!(n, expect.len()),
+                    _ => panic!("expected count"),
+                }
+            }
+            // top-k equals the brute-force (dist, id) order over live rows
+            let tau = 4usize;
+            let mut all: Vec<(usize, u32)> = (0..data.len())
+                .filter(|&i| alive(i))
+                .map(|i| (ham_chars(&data[i], q), i as u32))
+                .filter(|&(d, _)| d <= tau)
+                .collect();
+            all.sort_unstable();
+            match shard.query(q, tau, QueryMode::TopK(5), &mut ctx) {
+                ShardReply::TopK(got) => {
+                    let expect: Vec<(u32, usize)> =
+                        all.iter().take(5).map(|&(d, id)| (id, d)).collect();
+                    assert_eq!(got, expect, "qi={qi}");
+                }
+                _ => panic!("expected topk"),
+            }
+        }
+    }
+
+    #[test]
+    fn force_merge_preserves_results_and_goes_immutable() {
+        let (b, l) = (2usize, 10usize);
+        let data = rows(b, l, 120, 9);
+        let mut shard = bst_shard(&data[..80], b, l, 0);
+        assert_eq!(shard.force_merge(), MergeOutcome::Clean);
+        let items: Vec<(u32, Vec<u8>)> = data[80..]
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (80 + i as u32, r.clone()))
+            .collect();
+        shard.insert(&items);
+        shard.delete(90);
+
+        let mut ctx = QueryCtx::new();
+        let q = &data[85];
+        let before = sorted_ids(shard.query(q, 3, QueryMode::Ids, &mut ctx));
+        assert_eq!(shard.force_merge(), MergeOutcome::Merged);
+        assert_eq!(shard.delta_len(), 0);
+        assert_eq!(shard.n_rows(), 120);
+        let after = sorted_ids(shard.query(q, 3, QueryMode::Ids, &mut ctx));
+        assert_eq!(before, after, "merge must not change results");
+        // tombstone survives the merge; the id is never resurrected
+        assert!(!after.contains(&90));
+    }
+
+    #[test]
+    fn background_merge_seal_install_and_stale_drop() {
+        let (b, l) = (2usize, 10usize);
+        let data = rows(b, l, 100, 11);
+        let mut shard = bst_shard(&data[..60], b, l, 0);
+        let items: Vec<(u32, Vec<u8>)> = data[60..90]
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (60 + i as u32, r.clone()))
+            .collect();
+        shard.insert(&items);
+        assert!(shard.seal_for_merge(usize::MAX).is_none(), "below threshold");
+        let job = shard.seal_for_merge(10).expect("threshold reached");
+        assert!(shard.seal_for_merge(1).is_none(), "merge already in flight");
+        // sealed rows stay searchable while the merge runs
+        let mut ctx = QueryCtx::new();
+        let pre = sorted_ids(shard.query(&data[70], 2, QueryMode::Ids, &mut ctx));
+        assert!(pre.contains(&70));
+        // inserts keep landing in the fresh active delta meanwhile
+        shard.insert(&[(95, data[95].clone())]);
+
+        let result = job.build();
+        assert!(shard.install(result), "epoch matches");
+        assert_eq!(shard.n_rows(), 91);
+        assert_eq!(shard.delta_len(), 1, "post-seal insert survives the install");
+        let post = sorted_ids(shard.query(&data[70], 2, QueryMode::Ids, &mut ctx));
+        assert_eq!(pre, post);
+
+        // A stale result (older epoch) is dropped: force-merge wins.
+        shard.insert(&items.iter().map(|(g, r)| (g + 100, r.clone())).collect::<Vec<_>>());
+        let stale = shard.seal_for_merge(1).expect("seal again");
+        assert_eq!(shard.force_merge(), MergeOutcome::Merged);
+        let n_before = shard.n_rows();
+        assert!(!shard.install(stale.build()), "stale epoch rejected");
+        assert_eq!(shard.n_rows(), n_before);
+    }
+
+    #[test]
+    fn legacy_shard_without_rows_skips_merge_but_serves_inserts() {
+        let (b, l) = (2usize, 10usize);
+        let data = rows(b, l, 50, 13);
+        let set = SketchSet::from_rows(b, l, &data[..40]);
+        let kind = ShardIndexKind::Bst(BstConfig::default());
+        let base = Arc::new(kind.build_index(&set));
+        let mut shard =
+            SegmentedShard::new(kind, base, IdMap::Contig { offset: 0, n: 40 }, None);
+        shard.insert(&[(40, data[40].clone()), (41, data[41].clone())]);
+        assert!(shard.seal_for_merge(1).is_none(), "no base rows to fold into");
+        assert_eq!(shard.force_merge(), MergeOutcome::Skipped);
+        let mut ctx = QueryCtx::new();
+        let got = sorted_ids(shard.query(&data[41], 0, QueryMode::Ids, &mut ctx));
+        assert!(got.contains(&41), "delta still serves");
+    }
+}

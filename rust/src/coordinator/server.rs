@@ -10,12 +10,17 @@
 //! subsequent batches serve from the new engine. A reload must keep the
 //! sketch length `L` (the serving schema); snapshots of a different
 //! shape are rejected without disturbing the running engine.
+//!
+//! Write ops (`insert` / `delete` / `merge`) are control-plane: they hit
+//! the current engine directly rather than riding the batcher, and a
+//! reload replaces the engine wholesale — flush mutations with a `merge`
+//! + save before reloading if they must survive.
 
 use super::batcher::Batcher;
 use super::engine::{Engine, EngineSlot};
 use super::protocol::{
-    count_response, error_response, parse_request, reload_response, search_response,
-    topk_response, Request,
+    count_response, delete_response, error_response, insert_response, merge_response,
+    parse_request, reload_response, search_response, topk_response, Request,
 };
 use super::ServeConfig;
 use crate::util::timer::Timer;
@@ -59,6 +64,7 @@ impl Drop for ServerHandle {
 
 /// Starts serving `engine` per `cfg`; returns immediately.
 pub fn serve(engine: Arc<Engine>, cfg: ServeConfig) -> std::io::Result<ServerHandle> {
+    engine.set_merge_threshold(cfg.merge_threshold);
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
@@ -177,6 +183,34 @@ fn handle_conn(
                     }
                 }
             },
+            // Write ops are control-plane: they go straight to the
+            // current engine (not through the batcher). Inserts block
+            // until every shard has appended, so a subsequent query on
+            // this connection sees the new rows.
+            Ok(Request::Insert { rows }) => {
+                let timer = Timer::start();
+                match engine.insert_batch(&rows) {
+                    Err(e) => {
+                        engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
+                        error_response(&e)
+                    }
+                    Ok(range) => insert_response(
+                        range.start,
+                        rows.len(),
+                        timer.elapsed_us() as u64,
+                    ),
+                }
+            }
+            Ok(Request::Delete { id }) => {
+                let timer = Timer::start();
+                let deleted = engine.delete(id);
+                delete_response(deleted, timer.elapsed_us() as u64)
+            }
+            Ok(Request::Merge) => {
+                let timer = Timer::start();
+                let summary = engine.merge();
+                merge_response(summary.merged, summary.skipped, timer.elapsed_us() as u64)
+            }
             Ok(Request::Reload { path }) => {
                 let timer = Timer::start();
                 match Engine::load(Path::new(&path)) {
@@ -193,6 +227,9 @@ fn handle_conn(
                         ))
                     }
                     Ok(new_engine) => {
+                        // the snapshot engine inherits the serving
+                        // merge threshold (it is not persisted)
+                        new_engine.set_merge_threshold(engine.merge_threshold());
                         let n = new_engine.n();
                         let shards = new_engine.n_shards();
                         slot.replace(Arc::new(new_engine));

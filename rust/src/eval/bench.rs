@@ -1,14 +1,19 @@
 //! Perf-trajectory experiment (`bst bench`): machine-readable per-query
-//! latency points comparing bST against the linear-scan floor.
+//! latency points comparing bST against the linear-scan floor, plus the
+//! write path's insert throughput.
 //!
 //! Every PR that touches a hot path re-runs this and commits/uploads the
 //! resulting `BENCH_*.json`, so the repo accumulates a comparable series
-//! of perf measurements (schema `bst-bench-v1`): one row per
+//! of perf measurements (schema `bst-bench-v2`): one row per
 //! `(dataset, index, tau)` with `n`, `b`, `L`, p50/p99 latency in µs and
-//! throughput in M queries/s. Absolute numbers are testbed-specific —
-//! the trajectory (and the bST-vs-linear gap) is the signal.
+//! throughput in M queries/s, and one `delta-insert` row per dataset
+//! with per-batch latency percentiles and append throughput in Mops/s
+//! (rows/µs into the engine's delta segments, auto-merge disabled).
+//! Absolute numbers are testbed-specific — the trajectory (and the
+//! bST-vs-linear gap) is the signal.
 
 use super::EvalOpts;
+use crate::coordinator::engine::{Engine, ShardIndexKind};
 use crate::data::{self, Dataset, GenConfig};
 use crate::index::{LinearScan, SearchIndex, SingleBst};
 use crate::query::{CollectIds, QueryCtx};
@@ -16,11 +21,14 @@ use crate::trie::bst::BstConfig;
 use crate::util::json::Json;
 use crate::util::timer::{Stats, Timer};
 
+/// Rows appended per `insert_batch` call in the write-path measurement.
+const INSERT_BATCH: usize = 512;
+
 /// Runs the experiment; returns `(markdown report, json payload)`.
 pub fn bench(opts: &EvalOpts, datasets: &[Dataset]) -> (String, Json) {
-    let mut md = String::from("# bench — perf trajectory (bST vs linear)\n\n");
-    md.push_str("| dataset | index | n | b | L | tau | p50 us | p99 us | Mq/s |\n");
-    md.push_str("|---|---|---|---|---|---|---|---|---|\n");
+    let mut md = String::from("# bench — perf trajectory (bST vs linear + write path)\n\n");
+    md.push_str("| dataset | index | n | b | L | tau | p50 us | p99 us | Mq/s | Mops/s |\n");
+    md.push_str("|---|---|---|---|---|---|---|---|---|---|\n");
     let mut rows: Vec<Json> = Vec::new();
 
     for &ds in datasets {
@@ -55,7 +63,7 @@ pub fn bench(opts: &EvalOpts, datasets: &[Dataset]) -> (String, Json) {
                 let (p50, p99, mean) = (lat.p50(), lat.p99(), lat.mean());
                 let mqps = if mean > 0.0 { 1.0 / mean } else { 0.0 };
                 md.push_str(&format!(
-                    "| {} | {name} | {} | {} | {} | {tau} | {p50:.2} | {p99:.2} | {mqps:.3} |\n",
+                    "| {} | {name} | {} | {} | {} | {tau} | {p50:.2} | {p99:.2} | {mqps:.3} | - |\n",
                     ds.name(),
                     set.n(),
                     set.b(),
@@ -77,10 +85,55 @@ pub fn bench(opts: &EvalOpts, datasets: &[Dataset]) -> (String, Json) {
                 ]));
             }
         }
+
+        // Write path: append throughput into the delta segments. The
+        // engine starts from the dataset and re-inserts rotated rows in
+        // fixed-size batches; auto-merge is disabled so the measurement
+        // is pure append + fan-out (merge cost has its own trajectory
+        // via the CI write-path step).
+        let engine = Engine::build(set, 2, &ShardIndexKind::Bst(BstConfig::default()));
+        engine.set_merge_threshold(usize::MAX);
+        let n_insert = (set.n() / 2).clamp(INSERT_BATCH, 100_000);
+        let mut lat = Stats::new();
+        let mut inserted = 0usize;
+        let mut cursor = 0usize;
+        let t_all = Timer::start();
+        while inserted < n_insert {
+            let m = INSERT_BATCH.min(n_insert - inserted);
+            let batch: Vec<Vec<u8>> =
+                (0..m).map(|j| set.row((cursor + j) % set.n())).collect();
+            cursor += m;
+            let t = Timer::start();
+            engine.insert_batch(&batch).expect("bench insert");
+            lat.push(t.elapsed_us());
+            inserted += m;
+        }
+        let total_us = t_all.elapsed_us();
+        let mops = if total_us > 0.0 { inserted as f64 / total_us } else { 0.0 };
+        md.push_str(&format!(
+            "| {} | delta-insert | {inserted} | {} | {} | - | {:.2} | {:.2} | - | {mops:.3} |\n",
+            ds.name(),
+            set.b(),
+            set.l(),
+            lat.p50(),
+            lat.p99(),
+        ));
+        rows.push(Json::obj(vec![
+            ("dataset", Json::str(ds.name())),
+            ("index", Json::str("delta-insert")),
+            ("n", Json::num(inserted as f64)),
+            ("b", Json::num(set.b() as f64)),
+            ("l", Json::num(set.l() as f64)),
+            ("batch", Json::num(INSERT_BATCH as f64)),
+            ("p50_us", Json::num(lat.p50())),
+            ("p99_us", Json::num(lat.p99())),
+            ("mean_us", Json::num(lat.mean())),
+            ("mops", Json::num(mops)),
+        ]));
     }
 
     let payload = Json::obj(vec![
-        ("schema", Json::str("bst-bench-v1")),
+        ("schema", Json::str("bst-bench-v2")),
         (
             "config",
             Json::obj(vec![
@@ -102,16 +155,32 @@ mod tests {
     fn bench_emits_rows_for_every_cell() {
         let opts = EvalOpts { scale: 0.005, queries: 4, ..Default::default() };
         let (md, payload) = bench(&opts, &[Dataset::Review]);
-        assert!(md.contains("si-bst") && md.contains("linear"));
+        assert!(md.contains("si-bst") && md.contains("linear") && md.contains("delta-insert"));
         let rows = payload.get("rows").and_then(|r| r.as_arr()).unwrap();
-        assert_eq!(rows.len(), 2 * 3, "2 indexes x 3 taus");
+        assert_eq!(rows.len(), 2 * 3 + 1, "2 indexes x 3 taus + 1 insert row");
         for row in rows {
             assert!(row.get("p50_us").and_then(Json::as_f64).is_some());
+        }
+        let query_rows: Vec<&Json> = rows
+            .iter()
+            .filter(|r| {
+                matches!(r.get("index").and_then(Json::as_str), Some("si-bst" | "linear"))
+            })
+            .collect();
+        assert_eq!(query_rows.len(), 6);
+        for row in &query_rows {
             assert!(row.get("mqps").and_then(Json::as_f64).unwrap() >= 0.0);
         }
+        let insert_rows: Vec<&Json> = rows
+            .iter()
+            .filter(|r| r.get("index").and_then(Json::as_str) == Some("delta-insert"))
+            .collect();
+        assert_eq!(insert_rows.len(), 1);
+        assert!(insert_rows[0].get("mops").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(insert_rows[0].get("n").and_then(Json::as_f64).unwrap() > 0.0);
         assert_eq!(
             payload.get("schema").and_then(Json::as_str),
-            Some("bst-bench-v1")
+            Some("bst-bench-v2")
         );
     }
 }

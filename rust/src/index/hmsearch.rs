@@ -193,7 +193,11 @@ impl HmSearch {
             b,
             tau_max,
             vertical: VerticalSet::from_horizontal(set),
-            state: Mutex::new(ProbeState { epochs: vec![0u32; set.n()], cur: 0, cands: Vec::new() }),
+            state: Mutex::new(ProbeState {
+                epochs: vec![0u32; set.n()],
+                cur: 0,
+                cands: Vec::new(),
+            }),
         }
     }
 

@@ -182,6 +182,11 @@ impl<F: BlockFilter> MultiIndex<F> {
         self.vertical.l()
     }
 
+    /// Alphabet bits `b` (from the verification store).
+    pub fn b(&self) -> usize {
+        self.vertical.b()
+    }
+
     /// Filter + verify, streaming solutions into the collector. `tau` is
     /// the threshold the block assignment plans for (the collector's tau
     /// at entry); verification prunes against the live `c.tau()`.

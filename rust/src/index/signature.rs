@@ -154,7 +154,9 @@ mod tests {
 
     #[test]
     fn enumeration_is_exact_ball() {
-        for &(b, l, tau) in &[(1usize, 6usize, 2usize), (2, 4, 2), (2, 5, 3), (4, 3, 2), (8, 2, 1)] {
+        for &(b, l, tau) in
+            &[(1usize, 6usize, 2usize), (2, 4, 2), (2, 5, 3), (4, 3, 2), (8, 2, 1)]
+        {
             let row: Vec<u8> = (0..l).map(|i| (i % (1 << b)) as u8).collect();
             let mut got = HashSet::new();
             for_each_signature(&row, b, tau, &mut |k, edits| {

@@ -8,6 +8,8 @@
 //! bst sketch --dataset D [--scale F] [--out FILE] [--xla]   # ingestion
 //! bst build  --in FILE [--index si-bst|mi-bst|...]          # index stats
 //!            [--save SNAP --shards S]                       # engine snapshot
+//! bst insert --index SNAP --in NEW.bin --save OUT.snap      # write path
+//!            [--merge]
 //! bst query  --in FILE | --index SNAP
 //!            --q 0,1,2,... [--tau T] [--topk K] [--stats]
 //! bst serve  --dataset D | --index SNAP
@@ -34,6 +36,7 @@ fn main() {
         "bench" => cmd_bench(&args),
         "sketch" => cmd_sketch(&args),
         "build" => cmd_build(&args),
+        "insert" => cmd_insert(&args),
         "query" => cmd_query(&args),
         "serve" => cmd_serve(&args),
         "info" => cmd_info(),
@@ -65,6 +68,9 @@ USAGE:
                       --in FILE [--index si-bst|mi-bst|sih|mih|hmsearch]
                       [--save SNAP] (write an engine snapshot; si-bst|mi-bst)
                       [--shards N] (snapshot shard count, default 1)
+  bst insert          append saved sketches into an engine snapshot
+                      --index SNAP --in NEW.bin --save OUT.snap
+                      [--merge] (fold deltas into fresh immutable segments)
   bst query           one-off query against saved sketches or a snapshot
                       --in FILE | --index SNAP (serve-from-snapshot)
                       --q c0,c1,... [--tau T]
@@ -73,6 +79,7 @@ USAGE:
                       --dataset D [--scale F] | --index SNAP (cold start)
                       [--addr A] [--shards N]
                       [--index-kind si-bst|mi-bst] [--max-batch N] [--max-delay-us U]
+                      [--merge-threshold N] (delta rows before background merge)
   bst info            print build/runtime information
 ";
 
@@ -327,6 +334,75 @@ fn cmd_build(args: &Args) -> i32 {
     0
 }
 
+/// `bst insert`: the CLI write path — load a snapshot, append a second
+/// sketch file into the delta segments, optionally force-merge, and save
+/// the mutated engine. Cold-starting the result answers byte-identically
+/// to a from-scratch build of the concatenated data (CI proves it).
+fn cmd_insert(args: &Args) -> i32 {
+    let Some(snap) = args.get("index") else {
+        eprintln!("--index SNAP required");
+        return 2;
+    };
+    let Some(save_path) = args.get("save") else {
+        eprintln!("--save OUT.snap required");
+        return 2;
+    };
+    let Some(set) = load_input(args) else { return 1 };
+    let engine = match Engine::load(Path::new(snap)) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("loading snapshot {snap}: {e}");
+            return 1;
+        }
+    };
+    if set.l() != engine.l() || set.b() != engine.b() {
+        eprintln!(
+            "sketch shape b={} L={} does not match the snapshot's b={} L={}",
+            set.b(),
+            set.l(),
+            engine.b(),
+            engine.l()
+        );
+        return 2;
+    }
+    let t = bst::util::timer::Timer::start();
+    let rows: Vec<Vec<u8>> = (0..set.n()).map(|i| set.row(i)).collect();
+    let range = match engine.insert_batch(&rows) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("insert failed: {e}");
+            return 1;
+        }
+    };
+    let insert_ms = t.elapsed_ms();
+    let mut merged = 0usize;
+    if args.has("merge") {
+        let summary = engine.merge();
+        merged = summary.merged;
+        if summary.skipped > 0 {
+            eprintln!(
+                "warning: {} legacy shard(s) kept their deltas (v1 snapshot without raw rows)",
+                summary.skipped
+            );
+        }
+    }
+    if let Err(e) = engine.save(Path::new(save_path)) {
+        eprintln!("saving snapshot {save_path}: {e}");
+        return 1;
+    }
+    let disk = std::fs::metadata(save_path).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "snapshot={save_path} inserted={} first_id={} n={} shards={} merged={merged} \
+         insert_ms={insert_ms:.0} disk_mib={:.1}",
+        rows.len(),
+        range.start,
+        engine.n(),
+        engine.n_shards(),
+        disk as f64 / (1024.0 * 1024.0),
+    );
+    0
+}
+
 fn cmd_query(args: &Args) -> i32 {
     let Some(qspec) = args.get("q") else {
         eprintln!("--q c0,c1,... required");
@@ -450,6 +526,8 @@ fn cmd_serve(args: &Args) -> i32 {
         max_batch: args.get_usize("max-batch", 32),
         max_delay_us: args.get_u64("max-delay-us", 200),
         default_tau: args.get_usize("tau", 2),
+        merge_threshold: args
+            .get_usize("merge-threshold", Engine::DEFAULT_MERGE_THRESHOLD),
     };
 
     // `--index` doubles as the historical kind selector (si-bst/mi-bst)

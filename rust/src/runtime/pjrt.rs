@@ -18,8 +18,9 @@ pub struct Runtime {
 impl Runtime {
     /// Loads `meta.json` from `dir` and connects the PJRT CPU client.
     pub fn load(dir: &Path) -> Result<Self> {
-        let registry = Registry::load(dir)
-            .with_context(|| format!("loading artifact registry from {dir:?} (run `make artifacts`)"))?;
+        let registry = Registry::load(dir).with_context(|| {
+            format!("loading artifact registry from {dir:?} (run `make artifacts`)")
+        })?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Runtime { client, registry })
     }

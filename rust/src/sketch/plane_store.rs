@@ -67,7 +67,12 @@ pub struct PlaneStore {
 impl PlaneStore {
     /// Builds from a field generator: `f(k, i)` returns field `i` of
     /// plane `k` (low `width` bits).
-    pub fn from_fn(b: usize, width: usize, n: usize, mut f: impl FnMut(usize, usize) -> u64) -> Self {
+    pub fn from_fn(
+        b: usize,
+        width: usize,
+        n: usize,
+        mut f: impl FnMut(usize, usize) -> u64,
+    ) -> Self {
         assert!(width <= 64);
         let total_bits = n * b * width;
         // +2 padding words: the branch-free read touches `words[idx + 1]`
@@ -89,6 +94,38 @@ impl PlaneStore {
             }
         }
         PlaneStore { b, width, n, words, mask }
+    }
+
+    /// An empty, appendable store (the delta-segment buffer): items are
+    /// added one at a time with [`PlaneStore::push_fields`] and become
+    /// immediately searchable through the range kernels.
+    pub fn with_dims(b: usize, width: usize) -> Self {
+        Self::from_fn(b, width, 0, |_, _| 0)
+    }
+
+    /// Appends one item (its `b` plane fields, low `width` bits each) at
+    /// index `n`. The tail-padding invariant (`total_bits.div_ceil(64) +
+    /// 2` words) is preserved, so the branch-free reads and the streaming
+    /// kernels — and the snapshot layout — see exactly the store that
+    /// [`PlaneStore::from_fn`] would have built.
+    pub fn push_fields(&mut self, fields: &[u64]) {
+        assert_eq!(fields.len(), self.b, "push_fields: expected {} planes", self.b);
+        let item_bits = self.b * self.width;
+        let mut bit = self.n * item_bits;
+        let need = (bit + item_bits).div_ceil(64) + 2;
+        if self.words.len() < need {
+            self.words.resize(need, 0);
+        }
+        for &f in fields {
+            let v = f & self.mask;
+            let (w, o) = (bit / 64, bit % 64);
+            self.words[w] |= v << o;
+            if o + self.width > 64 {
+                self.words[w + 1] |= v >> (64 - o);
+            }
+            bit += self.width;
+        }
+        self.n += 1;
     }
 
     #[inline]
@@ -525,6 +562,50 @@ mod tests {
             (calls < 5).then_some(width)
         });
         assert_eq!(calls, 5);
+    }
+
+    #[test]
+    fn push_fields_matches_from_fn() {
+        let mut rng = Rng::new(9);
+        for &(b, width) in KERNEL_SHAPES {
+            let n = 77;
+            let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+            let vals: Vec<u64> = (0..b * n).map(|_| rng.next_u64() & mask).collect();
+            let built = PlaneStore::from_fn(b, width, n, |k, i| vals[k * n + i]);
+            let mut grown = PlaneStore::with_dims(b, width);
+            assert_eq!(grown.n(), 0);
+            let mut item = vec![0u64; b];
+            for i in 0..n {
+                for (k, f) in item.iter_mut().enumerate() {
+                    *f = vals[k * n + i];
+                }
+                grown.push_fields(&item);
+            }
+            assert_eq!(grown.n(), n);
+            // Bit-identical to the one-shot construction: same fields,
+            // same words, same snapshot payload.
+            for k in 0..b {
+                for i in 0..n {
+                    assert_eq!(grown.field(k, i), built.field(k, i), "b={b} w={width}");
+                }
+            }
+            assert_eq!(grown.words, built.words, "b={b} w={width}");
+            assert_eq!(
+                crate::store::to_payload(&grown),
+                crate::store::to_payload(&built),
+                "b={b} w={width}"
+            );
+            // ...and the streaming kernels see the appended items.
+            let q: Vec<u64> = (0..b).map(|_| rng.next_u64() & mask).collect();
+            let tau = width / 2;
+            let mut ok = 0usize;
+            grown.ham_range_leq(0, n, &q, tau, |i, verdict| {
+                assert_eq!(verdict, built.ham_leq(i, &q, tau));
+                ok += 1;
+                Some(tau)
+            });
+            assert_eq!(ok, n);
+        }
     }
 
     #[test]

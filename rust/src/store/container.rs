@@ -17,10 +17,15 @@
 //! Compatibility policy: the magic never changes; `FORMAT_VERSION` bumps on
 //! any layout change and readers reject versions they don't know —
 //! snapshots are cheap to regenerate from raw sketches, so there is no
-//! cross-version migration machinery. Opening validates the table (bounds,
-//! alignment, duplicate names) and every section checksum up front, so a
-//! truncated or bit-flipped file fails fast with [`StoreError`] instead of
-//! surfacing as a confusing payload parse error later.
+//! cross-version migration machinery. Version 2 (the write path) is the
+//! one *additive* exception: a v2 reader still accepts v1 files (their
+//! sections are a strict subset of v2's), and [`Snapshot::version`]
+//! exposes which format was read so higher layers can gate the
+//! v2-only sections. Anything newer than [`FORMAT_VERSION`] is rejected
+//! outright. Opening validates the table (bounds, alignment, duplicate
+//! names) and every section checksum up front, so a truncated or
+//! bit-flipped file fails fast with [`StoreError`] instead of surfacing
+//! as a confusing payload parse error later.
 
 use super::{ByteReader, StoreError};
 use std::path::Path;
@@ -28,8 +33,13 @@ use std::path::Path;
 /// File magic: the first 8 bytes of every snapshot.
 pub const MAGIC: u64 = u64::from_le_bytes(*b"bSTSNAP1");
 
-/// Current container format version.
-pub const FORMAT_VERSION: u32 = 1;
+/// Current container format version (v2: adds the engine write-path
+/// sections `rows.N` / `delta.N` / `tombstones.N`).
+pub const FORMAT_VERSION: u32 = 2;
+
+/// The PR 2 read-only format: engine snapshots with only `meta` +
+/// `shard.N` sections. Still readable; loads as an all-immutable engine.
+pub const FORMAT_VERSION_V1: u32 = 1;
 
 /// Maximum section-name length (table entries are fixed-size).
 pub const MAX_NAME_LEN: usize = 24;
@@ -210,6 +220,8 @@ pub struct Snapshot {
     bytes: Vec<u8>,
     /// `(name, payload start, payload len)` per section.
     sections: Vec<(String, usize, usize)>,
+    /// Format version the file declared (v1 or v2).
+    version: u32,
 }
 
 impl Snapshot {
@@ -227,7 +239,7 @@ impl Snapshot {
             return Err(StoreError::BadMagic(magic));
         }
         let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
-        if version != FORMAT_VERSION {
+        if version != FORMAT_VERSION && version != FORMAT_VERSION_V1 {
             return Err(StoreError::UnsupportedVersion(version));
         }
         let n_sections = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
@@ -284,12 +296,18 @@ impl Snapshot {
             }
             sections.push((name, offset, len));
         }
-        Ok(Snapshot { bytes, sections })
+        Ok(Snapshot { bytes, sections, version })
     }
 
     /// Reads and validates a snapshot file.
     pub fn open(path: &Path) -> Result<Self, StoreError> {
         Snapshot::from_bytes(std::fs::read(path)?)
+    }
+
+    /// Format version the file declared ([`FORMAT_VERSION`] or
+    /// [`FORMAT_VERSION_V1`]).
+    pub fn version(&self) -> u32 {
+        self.version
     }
 
     /// Names of all sections, in file order.
@@ -372,6 +390,19 @@ mod tests {
             Snapshot::from_bytes(bytes),
             Err(StoreError::UnsupportedVersion(_))
         ));
+    }
+
+    #[test]
+    fn v1_files_still_open() {
+        // The write-path bump (v2) is additive: a v1 file (same table
+        // layout, fewer section kinds) must keep loading, and report its
+        // version so higher layers can gate the v2-only sections.
+        let mut bytes = sample().to_bytes();
+        assert_eq!(Snapshot::from_bytes(bytes.clone()).unwrap().version(), FORMAT_VERSION);
+        bytes[8..12].copy_from_slice(&FORMAT_VERSION_V1.to_le_bytes());
+        let snap = Snapshot::from_bytes(bytes).unwrap();
+        assert_eq!(snap.version(), FORMAT_VERSION_V1);
+        assert_eq!(snap.section_names().count(), 3);
     }
 
     #[test]

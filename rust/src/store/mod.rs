@@ -24,7 +24,9 @@ pub mod bytes;
 pub mod container;
 
 pub use bytes::{ByteReader, ByteWriter};
-pub use container::{Snapshot, SnapshotBuilder, SnapshotStreamWriter, FORMAT_VERSION, MAGIC};
+pub use container::{
+    Snapshot, SnapshotBuilder, SnapshotStreamWriter, FORMAT_VERSION, FORMAT_VERSION_V1, MAGIC,
+};
 
 use std::fmt;
 
@@ -58,8 +60,12 @@ impl fmt::Display for StoreError {
                 write!(f, "bad magic {m:#018x}: not a bst snapshot file")
             }
             StoreError::UnsupportedVersion(v) => {
-                write!(f, "unsupported snapshot format version {v} (this build reads {})",
-                    container::FORMAT_VERSION)
+                write!(
+                    f,
+                    "unsupported snapshot format version {v} (this build reads {}..={})",
+                    container::FORMAT_VERSION_V1,
+                    container::FORMAT_VERSION
+                )
             }
             StoreError::MissingSection(s) => write!(f, "snapshot is missing section '{s}'"),
             StoreError::Corrupt(msg) => write!(f, "corrupt snapshot: {msg}"),

@@ -101,21 +101,30 @@ impl<C: Collector> Searcher<'_, C> {
         let (lo, hi) = t.sparse.leaf_range(u);
         // One streaming kernel call per sparse node: the cursor walks the
         // contiguous leaves' plane words sequentially (with the b>1
-        // lower-bound early exit) while the collector accounting stays
-        // per-leaf, identical to the per-item path it replaces.
+        // lower-bound early exit). Visit/prune accounting is batched at
+        // the range level — one `on_visit_many` / `on_prune_many` pair
+        // per scanned node instead of two virtual calls per leaf — with
+        // totals identical to the per-leaf hooks this replaces.
         let c = &mut *self.c;
         let mut cur = t.sparse.suffix_scan(lo, hi, &self.ctx.q_planes);
+        let mut visited = 0usize;
+        let mut pruned = 0usize;
         for v in lo..hi {
-            c.on_visit();
+            visited += 1;
             let Some(budget) = c.tau().checked_sub(dist) else {
-                c.on_prune();
-                return;
+                // threshold tightened below this node's running distance
+                // mid-scan: the current leaf counts as pruned, the rest
+                // of the range is abandoned unvisited (as before).
+                pruned += 1;
+                break;
             };
             match cur.next_leq(budget) {
                 Some(sd) => c.emit(t.postings_of(v), dist + sd),
-                None => c.on_prune(),
+                None => pruned += 1,
             }
         }
+        c.on_visit_many(visited);
+        c.on_prune_many(pruned);
     }
 }
 

@@ -217,7 +217,9 @@ mod tests {
 
     #[test]
     fn suffixes_roundtrip() {
-        for &(b, l, ls) in &[(2usize, 10usize, 4usize), (4, 8, 5), (8, 6, 3), (2, 8, 0), (2, 8, 8)] {
+        for &(b, l, ls) in
+            &[(2usize, 10usize, 4usize), (4, 8, 5), (8, 6, 3), (2, 8, 0), (2, 8, 8)]
+        {
             let set = setup(b, l, 200, (b + l + ls) as u64);
             let ss = SortedSketches::build(&set);
             let sp = SparseLayer::build(&ss, ls);

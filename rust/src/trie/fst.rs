@@ -211,7 +211,13 @@ impl SketchTrie for FstTrie {
     }
 
     fn describe(&self) -> String {
-        format!("FST(nodes={}, L={}, dense<{}), R={}", self.t, self.l, self.cutoff, Self::SIZE_RATIO)
+        format!(
+            "FST(nodes={}, L={}, dense<{}), R={}",
+            self.t,
+            self.l,
+            self.cutoff,
+            Self::SIZE_RATIO
+        )
     }
 }
 
@@ -260,6 +266,10 @@ mod tests {
         let ss = SortedSketches::build(&set);
         let fst = FstTrie::build(&ss);
         assert!(fst.cutoff() > 1, "expected a dense top layer: {}", fst.describe());
-        assert!(fst.cutoff() <= 12, "dense budget must not cover the whole trie: {}", fst.describe());
+        assert!(
+            fst.cutoff() <= 12,
+            "dense budget must not cover the whole trie: {}",
+            fst.describe()
+        );
     }
 }

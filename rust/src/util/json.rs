@@ -160,13 +160,21 @@ impl fmt::Display for Json {
     }
 }
 
-/// Parse error with byte offset.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+/// Parse error with byte offset. (Hand-rolled `Display`/`Error` impls —
+/// the crate is dependency-free, so no `thiserror` derive.)
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl JsonError {
     fn at(pos: usize, msg: &str) -> Self {

@@ -192,6 +192,84 @@ fn reload_swaps_in_snapshot_engine() {
 }
 
 #[test]
+fn write_ops_over_tcp() {
+    let (engine, rows) = make_engine(300);
+    let n0 = rows.len();
+    let cfg = ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
+    let handle = server::serve(Arc::clone(&engine), cfg).expect("serve");
+    let mut client = Client::connect(handle.addr);
+    let enc = |r: &[u8]| r.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(",");
+
+    // insert two rows: consecutive global ids starting at n0
+    let resp = client.call(&format!(
+        r#"{{"op":"insert","rows":[[{}],[{}]]}}"#,
+        enc(&rows[0]),
+        enc(&rows[1])
+    ));
+    assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true), "{resp:?}");
+    assert_eq!(resp.get("first_id").and_then(|x| x.as_usize()), Some(n0));
+    assert_eq!(resp.get("inserted").and_then(|x| x.as_usize()), Some(2));
+
+    // the duplicate of row 0 is immediately visible at tau=0
+    let found = client.call(&format!(r#"{{"op":"search","q":[{}],"tau":0}}"#, enc(&rows[0])));
+    let ids: Vec<usize> = found
+        .get("ids")
+        .and_then(|a| a.as_arr())
+        .unwrap()
+        .iter()
+        .map(|x| x.as_usize().unwrap())
+        .collect();
+    assert!(ids.contains(&n0), "inserted row visible: {ids:?}");
+
+    // delete it again; repeated delete reports false
+    let resp = client.call(&format!(r#"{{"op":"delete","id":{n0}}}"#));
+    assert_eq!(resp.get("deleted").and_then(|b| b.as_bool()), Some(true));
+    let resp = client.call(&format!(r#"{{"op":"delete","id":{n0}}}"#));
+    assert_eq!(resp.get("deleted").and_then(|b| b.as_bool()), Some(false));
+    let found = client.call(&format!(r#"{{"op":"search","q":[{}],"tau":0}}"#, enc(&rows[0])));
+    let ids: Vec<usize> = found
+        .get("ids")
+        .and_then(|a| a.as_arr())
+        .unwrap()
+        .iter()
+        .map(|x| x.as_usize().unwrap())
+        .collect();
+    assert!(!ids.contains(&n0), "tombstone respected: {ids:?}");
+
+    // force a merge: all shards fold, none skipped, results unchanged
+    let resp = client.call(r#"{"op":"merge"}"#);
+    assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true));
+    assert_eq!(resp.get("merged").and_then(|x| x.as_usize()), Some(engine.n_shards()));
+    assert_eq!(resp.get("skipped").and_then(|x| x.as_usize()), Some(0));
+    let after = client.call(&format!(r#"{{"op":"search","q":[{}],"tau":0}}"#, enc(&rows[1])));
+    let after_ids: Vec<usize> = after
+        .get("ids")
+        .and_then(|a| a.as_arr())
+        .unwrap()
+        .iter()
+        .map(|x| x.as_usize().unwrap())
+        .collect();
+    assert!(after_ids.contains(&(n0 + 1)), "surviving insert still found post-merge");
+    assert!(!after_ids.contains(&n0), "tombstone survives the merge");
+
+    // malformed writes are rejected without killing the connection
+    let err = client.call(r#"{"op":"insert","rows":[[1,2]]}"#);
+    assert!(err.get("error").is_some(), "wrong row length");
+    let err = client.call(r#"{"op":"insert","rows":[]}"#);
+    assert!(err.get("error").is_some());
+    let pong = client.call(r#"{"op":"ping"}"#);
+    assert_eq!(pong.get("pong").and_then(|b| b.as_bool()), Some(true));
+
+    // stats expose the write counters
+    let stats = client.call(r#"{"op":"stats"}"#);
+    assert_eq!(stats.get("inserts").and_then(|x| x.as_usize()), Some(2));
+    assert_eq!(stats.get("deletes").and_then(|x| x.as_usize()), Some(1));
+    assert!(stats.get("merges").and_then(|x| x.as_usize()).unwrap() >= 1);
+
+    handle.stop();
+}
+
+#[test]
 fn concurrent_clients() {
     let (engine, rows) = make_engine(600);
     let cfg = ServeConfig {

@@ -1,0 +1,290 @@
+//! Property suite for the dynamic-update path (PR 4): base + delta +
+//! tombstone query results must equal a linear-scan oracle across
+//! b ∈ {1, 2, 4, 8} and random insert / delete / merge interleavings,
+//! the mutated engine must roundtrip through the v2 snapshot sections,
+//! and the v1 format must keep loading (all-immutable) while rejecting
+//! files that smuggle delta sections under the old version.
+
+use bst::coordinator::engine::{Engine, MergeSummary, ShardIndexKind};
+use bst::index::{SearchIndex, SingleBst};
+use bst::sketch::hamming::ham_chars;
+use bst::sketch::SketchSet;
+use bst::store::{to_payload, ByteWriter, SnapshotBuilder, FORMAT_VERSION_V1};
+use bst::trie::bst::BstConfig;
+use bst::util::Rng;
+
+/// Shapes exercising every alphabet width (L kept small enough that the
+/// randomized suite stays fast but clusters still form).
+const SHAPES: &[(usize, usize)] = &[(1, 16), (2, 12), (4, 8), (8, 6)];
+
+struct Oracle {
+    rows: Vec<Vec<u8>>,
+    alive: Vec<bool>,
+}
+
+impl Oracle {
+    fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {
+        (0..self.rows.len())
+            .filter(|&i| self.alive[i] && ham_chars(&self.rows[i], q) <= tau)
+            .map(|i| i as u32)
+            .collect()
+    }
+
+    fn top_k(&self, q: &[u8], k: usize, tau: usize) -> Vec<(u32, usize)> {
+        let mut all: Vec<(usize, u32)> = (0..self.rows.len())
+            .filter(|&i| self.alive[i])
+            .map(|i| (ham_chars(&self.rows[i], q), i as u32))
+            .filter(|&(d, _)| d <= tau)
+            .collect();
+        all.sort_unstable();
+        all.truncate(k);
+        all.into_iter().map(|(d, id)| (id, d)).collect()
+    }
+}
+
+fn random_row(rng: &mut Rng, b: usize, l: usize, centers: &[Vec<u8>]) -> Vec<u8> {
+    let mut row = centers[rng.below_usize(centers.len())].clone();
+    for _ in 0..rng.below_usize(3) {
+        let p = rng.below_usize(l);
+        row[p] = rng.below(1 << b) as u8;
+    }
+    row
+}
+
+fn check_engine(engine: &Engine, oracle: &Oracle, rng: &mut Rng, b: usize, l: usize, tag: &str) {
+    for _ in 0..3 {
+        let q: Vec<u8> = if oracle.rows.is_empty() || rng.below(2) == 0 {
+            (0..l).map(|_| rng.below(1 << b) as u8).collect()
+        } else {
+            oracle.rows[rng.below_usize(oracle.rows.len())].clone()
+        };
+        for tau in [0usize, 1, 2, 4] {
+            let mut got = engine.search(&q, tau);
+            got.sort_unstable();
+            assert_eq!(got, oracle.search(&q, tau), "{tag}: search b={b} tau={tau}");
+            assert_eq!(engine.count(&q, tau), got.len(), "{tag}: count b={b} tau={tau}");
+        }
+        for k in [1usize, 5, 100] {
+            assert_eq!(engine.top_k(&q, k, l), oracle.top_k(&q, k, l), "{tag}: topk b={b} k={k}");
+        }
+    }
+}
+
+/// Random insert / delete / merge interleavings against the oracle, with
+/// background merges enabled (tiny threshold) so seal/install races are
+/// exercised, then a force merge, a snapshot roundtrip, and more writes
+/// on the reloaded engine.
+#[test]
+fn prop_dynamic_matches_linear_oracle() {
+    let dir = std::env::temp_dir().join("bst_prop_dynamic");
+    std::fs::create_dir_all(&dir).unwrap();
+    for &(b, l) in SHAPES {
+        let mut rng = Rng::new((0xD1A + b * 131 + l) as u64);
+        let centers: Vec<Vec<u8>> = (0..8)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect();
+        let n0 = 250;
+        let initial: Vec<Vec<u8>> = (0..n0)
+            .map(|_| random_row(&mut rng, b, l, &centers))
+            .collect();
+        let set = SketchSet::from_rows(b, l, &initial);
+        let engine = Engine::build(&set, 3, &ShardIndexKind::Bst(BstConfig::default()));
+        engine.set_merge_threshold(24);
+        let mut oracle = Oracle { rows: initial, alive: vec![true; n0] };
+
+        for step in 0..12 {
+            match rng.below(4) {
+                // insert a batch
+                0 | 1 => {
+                    let m = 1 + rng.below_usize(40);
+                    let batch: Vec<Vec<u8>> =
+                        (0..m).map(|_| random_row(&mut rng, b, l, &centers)).collect();
+                    let range = engine.insert_batch(&batch).unwrap();
+                    assert_eq!(range.start as usize, oracle.rows.len(), "ids are sequential");
+                    assert_eq!(range.end - range.start, m as u32);
+                    oracle.rows.extend(batch);
+                    oracle.alive.resize(oracle.rows.len(), true);
+                }
+                // delete a random id (possibly already dead)
+                2 => {
+                    let id = rng.below_usize(oracle.rows.len() + 5);
+                    let expect = id < oracle.rows.len() && oracle.alive[id];
+                    assert_eq!(engine.delete(id as u32), expect, "delete id={id}");
+                    if expect {
+                        oracle.alive[id] = false;
+                    }
+                }
+                // force merge
+                _ => {
+                    let summary = engine.merge();
+                    assert_eq!(summary, MergeSummary { merged: 3, skipped: 0 });
+                }
+            }
+            check_engine(&engine, &oracle, &mut rng, b, l, &format!("step {step}"));
+        }
+
+        // Snapshot the mutated engine mid-state (deltas + tombstones in
+        // the container), reload, and keep writing.
+        let path = dir.join(format!("dyn_{b}.snap"));
+        engine.save(&path).unwrap();
+        let loaded = Engine::load(&path).unwrap();
+        assert_eq!(loaded.n(), oracle.rows.len());
+        assert_eq!(loaded.b(), b);
+        check_engine(&loaded, &oracle, &mut rng, b, l, "reloaded");
+
+        let extra: Vec<Vec<u8>> = (0..17)
+            .map(|_| random_row(&mut rng, b, l, &centers))
+            .collect();
+        loaded.insert_batch(&extra).unwrap();
+        oracle.rows.extend(extra);
+        oracle.alive.resize(oracle.rows.len(), true);
+        let id = (oracle.rows.len() - 3) as u32;
+        assert!(loaded.delete(id));
+        oracle.alive[id as usize] = false;
+        check_engine(&loaded, &oracle, &mut rng, b, l, "reloaded+written");
+
+        // After a final merge everything is immutable and still equal.
+        assert_eq!(loaded.merge().skipped, 0);
+        check_engine(&loaded, &oracle, &mut rng, b, l, "final merge");
+        loaded.save(&path).unwrap();
+        let cold = Engine::load(&path).unwrap();
+        check_engine(&cold, &oracle, &mut rng, b, l, "cold after merge");
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+/// The mutated snapshot carries the new sections, and byte-level
+/// corruption of the delta payload is caught on load.
+#[test]
+fn mutated_snapshot_sections_and_corruption() {
+    let mut rng = Rng::new(0xD2B);
+    let rows: Vec<Vec<u8>> = (0..200)
+        .map(|_| (0..10).map(|_| rng.below(4) as u8).collect())
+        .collect();
+    let set = SketchSet::from_rows(2, 10, &rows[..150]);
+    let engine = Engine::build(&set, 2, &ShardIndexKind::Bst(BstConfig::default()));
+    engine.insert_batch(&rows[150..]).unwrap();
+    engine.delete(10);
+    let dir = std::env::temp_dir().join("bst_prop_dynamic");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("sections.snap");
+    engine.save(&path).unwrap();
+
+    let snap = bst::store::Snapshot::open(&path).unwrap();
+    assert_eq!(snap.version(), bst::store::FORMAT_VERSION);
+    let expected_sections = [
+        "meta",
+        "shard.0",
+        "shard.1",
+        "rows.0",
+        "rows.1",
+        "delta.0",
+        "delta.1",
+        "tombstones.0",
+        "tombstones.1",
+    ];
+    for name in expected_sections {
+        assert!(snap.has_section(name), "missing section {name}");
+    }
+    drop(snap);
+
+    // Flip bytes across the whole file: every corruption must surface as
+    // Err (checksum or validation), never a panic or a silent misload.
+    let good = std::fs::read(&path).unwrap();
+    let mut ok = 0usize;
+    for pos in (17..good.len()).step_by(good.len() / 23) {
+        let mut bad = good.clone();
+        for b in &mut bad[pos..(pos + 8).min(good.len())] {
+            *b ^= 0x24;
+        }
+        std::fs::write(&path, &bad).unwrap();
+        if Engine::load(&path).is_err() {
+            ok += 1;
+        }
+    }
+    assert!(ok > 0, "at least the payload flips must be rejected");
+    std::fs::write(&path, &good).unwrap();
+    assert!(Engine::load(&path).is_ok(), "pristine bytes load again");
+    std::fs::remove_file(&path).unwrap();
+}
+
+/// Builds a v1-era container byte-for-byte: v1 `meta` layout (L, n,
+/// shard offsets) + `shard.N` payloads, version field patched to 1.
+fn v1_container(set: &SketchSet, extra_sections: &[(&str, Vec<u8>)]) -> Vec<u8> {
+    let index = ShardIndexKind::Bst(BstConfig::default()).build_index(set);
+    let mut meta = ByteWriter::new();
+    meta.put_usize(set.l());
+    meta.put_usize(set.n());
+    meta.put_usize(1); // one shard
+    meta.put_u64(0); // offset 0
+    let mut builder = SnapshotBuilder::new();
+    builder.add_section("meta", meta.into_bytes());
+    builder.add_section("shard.0", to_payload(&index));
+    for (name, payload) in extra_sections {
+        builder.add_section(name, payload.clone());
+    }
+    let mut bytes = builder.to_bytes();
+    bytes[8..12].copy_from_slice(&FORMAT_VERSION_V1.to_le_bytes());
+    bytes
+}
+
+/// v1 snapshots still load — as all-immutable engines: queries work,
+/// inserts/deletes land in deltas/tombstones, but merges are skipped
+/// (no raw rows behind the base) — and a v1 file that smuggles a
+/// `delta.N` section is rejected outright.
+#[test]
+fn v1_loads_all_immutable_and_rejects_smuggled_deltas() {
+    let mut rng = Rng::new(0xD3C);
+    let rows: Vec<Vec<u8>> = (0..120)
+        .map(|_| (0..12).map(|_| rng.below(4) as u8).collect())
+        .collect();
+    let set = SketchSet::from_rows(2, 12, &rows);
+    let dir = std::env::temp_dir().join("bst_prop_dynamic");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let path = dir.join("legacy.snap");
+    std::fs::write(&path, v1_container(&set, &[])).unwrap();
+    let engine = Engine::load(&path).unwrap();
+    assert_eq!(engine.n(), 120);
+    assert_eq!(engine.b(), 2);
+    // read path parity against a from-scratch index
+    let oracle_idx = SingleBst::build(&set, BstConfig::default());
+    for qi in [0usize, 50, 119] {
+        for tau in [0usize, 2] {
+            let mut got = engine.search(&rows[qi], tau);
+            got.sort_unstable();
+            let mut expect = oracle_idx.search(&rows[qi], tau);
+            expect.sort_unstable();
+            assert_eq!(got, expect, "qi={qi} tau={tau}");
+        }
+    }
+    // writes work (delta-only), but merging is skipped: no raw rows
+    let range = engine.insert_batch(&rows[..5]).unwrap();
+    assert_eq!(range, 120..125);
+    assert!(engine.delete(121));
+    let summary = engine.merge();
+    assert_eq!(summary, MergeSummary { merged: 0, skipped: 1 });
+    let mut got = engine.search(&rows[0], 0);
+    got.sort_unstable();
+    assert!(got.contains(&120), "delta row visible after skipped merge");
+    assert!(!got.contains(&121), "tombstone respected");
+    // Re-saving encodes v2, but legacy shards still have no raw rows:
+    // has_rows stays 0 and the reloaded engine remains merge-skipped.
+    let resaved = dir.join("legacy_resaved.snap");
+    engine.save(&resaved).unwrap();
+    let reloaded = Engine::load(&resaved).unwrap();
+    assert_eq!(reloaded.n(), 125);
+    assert_eq!(reloaded.merge().skipped, 1);
+
+    // A "v1" file carrying a delta section must not silently load.
+    let mut w = ByteWriter::new();
+    w.put_u32s(&[1, 2, 3]);
+    let smuggled = v1_container(&set, &[("delta.0", w.into_bytes())]);
+    let bad = dir.join("smuggled.snap");
+    std::fs::write(&bad, smuggled).unwrap();
+    assert!(Engine::load(&bad).is_err(), "v1 with delta sections is rejected");
+
+    for p in [path, resaved, bad] {
+        std::fs::remove_file(p).unwrap();
+    }
+}
