@@ -9,8 +9,14 @@
 //!
 //! All three query modes (id search, count, top-k) flow through the
 //! batcher: a batch is mixed-mode and executes via
-//! [`Engine::run_batch`], so every served query — whatever its mode —
-//! records the same real per-query wall time in the metrics.
+//! [`Engine::run_batch_blocked`], which groups compatible queries (same
+//! τ, same mode; `ServeConfig::block_width` caps the block size) so each
+//! block shares one pass over every shard's trie and plane-word stream.
+//! Results are identical to serial execution, and every served query —
+//! whatever its mode — still records real per-query wall time: a block's
+//! elapsed time is attributed to its queries by share of live work (see
+//! the protocol docs). `block_width = 1` falls back to
+//! [`Engine::run_batch`].
 //!
 //! The engine is read through an [`EngineSlot`] at the start of each
 //! batch, so a `reload` (snapshot swap) takes effect on the next batch
@@ -92,9 +98,10 @@ impl Batcher {
         let (tx, rx) = channel::<Msg>();
         let max_batch = cfg.max_batch.max(1);
         let max_delay = Duration::from_micros(cfg.max_delay_us);
+        let block_width = cfg.block_width.max(1);
         let handle = std::thread::Builder::new()
             .name("bst-batcher".into())
-            .spawn(move || Self::run(slot, rx, max_batch, max_delay))
+            .spawn(move || Self::run(slot, rx, max_batch, max_delay, block_width))
             .expect("spawn batcher");
         Batcher { submitter: BatchSubmitter { tx }, handle: Some(handle) }
     }
@@ -109,7 +116,13 @@ impl Batcher {
         self.submitter.clone()
     }
 
-    fn run(slot: Arc<EngineSlot>, rx: Receiver<Msg>, max_batch: usize, max_delay: Duration) {
+    fn run(
+        slot: Arc<EngineSlot>,
+        rx: Receiver<Msg>,
+        max_batch: usize,
+        max_delay: Duration,
+        block_width: usize,
+    ) {
         loop {
             // Block for the first request (idle: no spinning).
             let first = match rx.recv() {
@@ -142,7 +155,7 @@ impl Batcher {
                 .iter()
                 .map(|p| (Arc::clone(&p.q), p.tau, p.mode))
                 .collect();
-            let results = engine.run_batch(&queries);
+            let results = engine.run_batch_blocked(&queries, block_width);
             for (p, r) in batch.into_iter().zip(results) {
                 let _ = p.reply.send(r);
             }
@@ -239,6 +252,37 @@ mod tests {
         }
         let batches = eng.metrics().batches.load(std::sync::atomic::Ordering::Relaxed);
         assert!(batches >= 1);
+    }
+
+    #[test]
+    fn blocked_and_serial_batchers_agree() {
+        let eng = engine(400);
+        let mut rng = Rng::new(11);
+        let queries: Vec<(Vec<u8>, usize)> = (0..20)
+            .map(|_| {
+                let q: Vec<u8> = (0..8).map(|_| rng.below(4) as u8).collect();
+                (q, rng.below_usize(4))
+            })
+            .collect();
+        let run = |width: usize| {
+            let cfg = ServeConfig {
+                max_batch: 32,
+                max_delay_us: 2000,
+                block_width: width,
+                ..Default::default()
+            };
+            let batcher = Batcher::start_fixed(Arc::clone(&eng), &cfg);
+            let sub = batcher.submitter();
+            queries
+                .iter()
+                .map(|(q, tau)| {
+                    let mut v = sub.search(q.clone(), *tau).unwrap();
+                    v.sort_unstable();
+                    v
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(1), run(8), "blocked batcher must match serial");
     }
 
     /// Regression: dropping the batcher while submitter clones are still

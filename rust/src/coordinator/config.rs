@@ -16,6 +16,12 @@ pub struct ServeConfig {
     /// Active-delta row count that triggers a background shard merge
     /// (`usize::MAX` disables auto-merging; the `merge` op still works).
     pub merge_threshold: usize,
+    /// Block width for multi-query execution: compatible queries (same
+    /// τ, same mode) in a batch are grouped into blocks of at most this
+    /// many and share one pass over each shard's trie and plane-word
+    /// stream. `1` disables blocking (serial per-query execution);
+    /// widths above 64 are clamped to the kernel's 64-query live mask.
+    pub block_width: usize,
 }
 
 impl Default for ServeConfig {
@@ -27,6 +33,7 @@ impl Default for ServeConfig {
             max_delay_us: 200,
             default_tau: 2,
             merge_threshold: 4096,
+            block_width: 8,
         }
     }
 }
@@ -40,5 +47,6 @@ mod tests {
         let c = ServeConfig::default();
         assert!(c.shards >= 1);
         assert!(c.max_batch >= 1);
+        assert!(c.block_width >= 1);
     }
 }

@@ -40,7 +40,7 @@
 use super::metrics::Metrics;
 use super::segment::{DeltaSegment, IdMap, MergeOutcome, SegmentedShard, ShardParts};
 use crate::index::{MultiBst, SearchIndex, SingleBst};
-use crate::query::{Collector, QueryCtx};
+use crate::query::{BlockCollector, Collector, QueryCtx, MAX_BLOCK};
 use crate::sketch::SketchSet;
 use crate::store::{
     ensure, from_payload, to_payload, ByteReader, ByteWriter, Persist, Snapshot,
@@ -89,12 +89,29 @@ pub struct MergeSummary {
     pub skipped: usize,
 }
 
+/// One shard's answer to a [`ShardMsg::QueryBlock`]: per-query replies
+/// plus each query's share of the shard's traversal work (visits +
+/// prunes), used by the engine to attribute the block's wall time.
+struct BlockShardReply {
+    replies: Vec<ShardReply>,
+    work: Vec<u64>,
+}
+
 enum ShardMsg {
     Query {
         q: Arc<[u8]>,
         tau: usize,
         mode: QueryMode,
         reply: Sender<(usize, ShardReply)>,
+        shard_no: usize,
+    },
+    /// A compatible query block (one mode, per-query τ): the shard
+    /// descends its trie / scans its deltas once for the whole block.
+    QueryBlock {
+        qs: Vec<Arc<[u8]>>,
+        taus: Vec<usize>,
+        mode: QueryMode,
+        reply: Sender<(usize, BlockShardReply)>,
         shard_no: usize,
     },
     Insert {
@@ -192,6 +209,13 @@ impl SearchIndex for ShardIndex {
         match self {
             ShardIndex::Bst(idx) => idx.run(q, ctx, c),
             ShardIndex::MultiBst(idx) => idx.run(q, ctx, c),
+        }
+    }
+
+    fn run_block(&self, qs: &[&[u8]], ctx: &mut QueryCtx, bc: &mut BlockCollector) {
+        match self {
+            ShardIndex::Bst(idx) => idx.run_block(qs, ctx, bc),
+            ShardIndex::MultiBst(idx) => idx.run_block(qs, ctx, bc),
         }
     }
 
@@ -336,16 +360,29 @@ impl Engine {
     /// Writes a snapshot: one `meta` section plus `shard.N` / `rows.N` /
     /// `delta.N` / `tombstones.N` per shard (see
     /// [`crate::store::container`] for the file format). Shards are
-    /// serialized and streamed one at a time. Writers should quiesce
-    /// inserts for the duration — ids assigned mid-save can land behind
-    /// the recorded high-water mark and fail validation on load.
+    /// serialized and streamed one at a time.
+    ///
+    /// **Write barrier**: the `Parts` fan-out happens under the insert
+    /// lock, and every write (insert or delete) enqueues on its shards
+    /// under that same lock before returning. Per-shard channels are
+    /// FIFO, so each shard's `Parts` snapshot sits at the *same* point
+    /// of the write stream — a save taken mid-traffic captures exactly
+    /// the writes enqueued before the fence, none after, on every shard
+    /// alike. The recorded id high-water mark is read inside the fence
+    /// for the same reason. Waiting for the parts (and streaming them
+    /// out) happens after the lock is released, so writers only stall
+    /// for the S channel sends, not the serialization.
     pub fn save(&self, path: &Path) -> Result<(), StoreError> {
         let (reply_tx, reply_rx) = channel();
-        for (no, s) in self.shards.iter().enumerate() {
-            s.tx
-                .send(ShardMsg::Parts { reply: reply_tx.clone(), shard_no: no })
-                .expect("shard worker alive");
-        }
+        let next_id = {
+            let _fence = self.insert_lock.lock().unwrap();
+            for (no, s) in self.shards.iter().enumerate() {
+                s.tx
+                    .send(ShardMsg::Parts { reply: reply_tx.clone(), shard_no: no })
+                    .expect("shard worker alive");
+            }
+            self.next_id.load(Ordering::SeqCst)
+        };
         drop(reply_tx);
         let mut parts: Vec<Option<ShardParts>> = (0..self.shards.len()).map(|_| None).collect();
         for (no, p) in reply_rx {
@@ -362,7 +399,7 @@ impl Engine {
         let mut w = ByteWriter::new();
         w.put_usize(self.l);
         w.put_usize(self.b);
-        w.put_u64(self.next_id.load(Ordering::SeqCst) as u64);
+        w.put_u64(next_id as u64);
         w.put_usize(parts.len());
         for p in &parts {
             w.put_u8(u8::from(p.rows.is_some()));
@@ -692,10 +729,16 @@ impl Engine {
             return false;
         }
         let (reply_tx, reply_rx) = channel();
-        for s in &self.shards {
-            s.tx
-                .send(ShardMsg::Delete { id, reply: reply_tx.clone() })
-                .expect("shard worker alive");
+        {
+            // Same write barrier as inserts: broadcast under the insert
+            // lock so a concurrent `save` observes the delete on every
+            // shard or on none (see [`Engine::save`]).
+            let _order = self.insert_lock.lock().unwrap();
+            for s in &self.shards {
+                s.tx
+                    .send(ShardMsg::Delete { id, reply: reply_tx.clone() })
+                    .expect("shard worker alive");
+            }
         }
         drop(reply_tx);
         let deleted = reply_rx.iter().any(|d| d);
@@ -885,6 +928,123 @@ impl Engine {
             .collect()
     }
 
+    /// Blocked batch execution: compatible queries (same τ, same mode)
+    /// are grouped into blocks of at most `block_width` and each block
+    /// fans out as **one** [`ShardMsg::QueryBlock`] per shard — the
+    /// shard descends its trie and streams its delta plane words once
+    /// for the whole block. Results (ids, counts, top-k order by
+    /// `(dist, id)`) and per-query traversal stats are identical to
+    /// [`Engine::run_batch`]; `block_width <= 1` delegates to it
+    /// outright.
+    ///
+    /// Per-query wall time stays real: each block is timed from its own
+    /// fan-out to its last shard reply, and the block's elapsed time is
+    /// attributed to its queries **by share of live work** (each query's
+    /// visited + pruned node count, summed across shards) — an equal
+    /// split when the block did no work at all. Results are returned in
+    /// request order regardless of grouping.
+    pub fn run_batch_blocked(
+        &self,
+        queries: &[(Arc<[u8]>, usize, QueryMode)],
+        block_width: usize,
+    ) -> Vec<QueryResult> {
+        let width = block_width.min(MAX_BLOCK);
+        if width <= 1 || queries.len() <= 1 {
+            return self.run_batch(queries);
+        }
+        self.metrics.batches.fetch_add(1, Ordering::Relaxed);
+        for (q, _, _) in queries {
+            assert_eq!(q.len(), self.l, "query length mismatch");
+        }
+        let blocks = group_blocks(queries, width);
+        // Phase 1: fan out every block before collecting anything.
+        let pending: Vec<_> = blocks
+            .into_iter()
+            .map(|idxs| {
+                let qs: Vec<Arc<[u8]>> =
+                    idxs.iter().map(|&i| Arc::clone(&queries[i].0)).collect();
+                let taus: Vec<usize> = idxs.iter().map(|&i| queries[i].1).collect();
+                let mode = queries[idxs[0]].2;
+                let timer = Timer::start();
+                let (reply_tx, reply_rx) = channel();
+                for (no, shard) in self.shards.iter().enumerate() {
+                    shard
+                        .tx
+                        .send(ShardMsg::QueryBlock {
+                            qs: qs.clone(),
+                            taus: taus.clone(),
+                            mode,
+                            reply: reply_tx.clone(),
+                            shard_no: no,
+                        })
+                        .expect("shard worker alive");
+                }
+                (idxs, mode, timer, reply_rx)
+            })
+            .collect();
+        // Phase 2: collect block by block, merge each query across
+        // shards, and scatter the results back to request order.
+        let n_shards = self.shards.len();
+        let mut results: Vec<Option<QueryResult>> =
+            (0..queries.len()).map(|_| None).collect();
+        for (idxs, mode, timer, rx) in pending {
+            let m = idxs.len();
+            let mut per_shard: Vec<Vec<ShardReply>> = Vec::with_capacity(n_shards);
+            let mut work = vec![0u64; m];
+            for _ in 0..n_shards {
+                let (_no, br) = rx.recv().expect("shard reply");
+                debug_assert_eq!(br.replies.len(), m);
+                for (w, &x) in work.iter_mut().zip(&br.work) {
+                    *w += x;
+                }
+                per_shard.push(br.replies);
+            }
+            let elapsed = timer.elapsed_us() as u64;
+            let total_work: u64 = work.iter().sum();
+            let mut columns: Vec<_> = per_shard.into_iter().map(|v| v.into_iter()).collect();
+            for (j, &qi) in idxs.iter().enumerate() {
+                let replies = columns.iter_mut().map(|it| it.next().expect("reply per query"));
+                let result = match mode {
+                    QueryMode::Ids => {
+                        let mut merged = Vec::new();
+                        for reply in replies {
+                            if let ShardReply::Ids(hits) = reply {
+                                merged.extend(hits);
+                            }
+                        }
+                        QueryResult::Ids(merged)
+                    }
+                    QueryMode::Count => QueryResult::Count(
+                        replies
+                            .map(|r| if let ShardReply::Count(c) = r { c } else { 0 })
+                            .sum(),
+                    ),
+                    QueryMode::TopK(k) => {
+                        QueryResult::TopK(Self::merge_topk(replies.map(|r| (0, r)), k))
+                    }
+                };
+                // wall-time attribution: the block's elapsed time split
+                // by each query's share of the live work
+                let lat = if total_work > 0 {
+                    elapsed.saturating_mul(work[j]) / total_work
+                } else {
+                    elapsed / m as u64
+                };
+                let size = match &result {
+                    QueryResult::Ids(v) => v.len(),
+                    QueryResult::Count(c) => *c,
+                    QueryResult::TopK(v) => v.len(),
+                };
+                self.metrics.record_query(lat, size);
+                results[qi] = Some(result);
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every query answered by exactly one block"))
+            .collect()
+    }
+
     /// Id-search-only batch (compatibility wrapper over
     /// [`Engine::run_batch`]).
     pub fn search_batch(&self, queries: &[(Arc<[u8]>, usize)]) -> Vec<Vec<u32>> {
@@ -900,6 +1060,32 @@ impl Engine {
             })
             .collect()
     }
+}
+
+/// Groups a batch's queries into compatible blocks: queries sharing
+/// `(τ, mode)` — including `k` for top-k — are grouped together in
+/// arrival order, then split into blocks of at most `width`. Every query
+/// lands in exactly one block; a group of one is a block of one.
+fn group_blocks(queries: &[(Arc<[u8]>, usize, QueryMode)], width: usize) -> Vec<Vec<usize>> {
+    let mut groups: Vec<((usize, u8, usize), Vec<usize>)> = Vec::new();
+    for (i, (_, tau, mode)) in queries.iter().enumerate() {
+        let key = match mode {
+            QueryMode::Ids => (*tau, 0u8, 0usize),
+            QueryMode::Count => (*tau, 1, 0),
+            QueryMode::TopK(k) => (*tau, 2, *k),
+        };
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, idxs)) => idxs.push(i),
+            None => groups.push((key, vec![i])),
+        }
+    }
+    let mut blocks = Vec::new();
+    for (_, idxs) in groups {
+        for chunk in idxs.chunks(width.max(1)) {
+            blocks.push(chunk.to_vec());
+        }
+    }
+    blocks
 }
 
 /// One shard worker: owns its [`SegmentedShard`] outright — queries,
@@ -922,6 +1108,11 @@ fn worker_loop(
             ShardMsg::Query { q, tau, mode, reply, shard_no } => {
                 let result = state.query(&q, tau, mode, &mut qctx);
                 let _ = reply.send((shard_no, result));
+            }
+            ShardMsg::QueryBlock { qs, taus, mode, reply, shard_no } => {
+                let qrefs: Vec<&[u8]> = qs.iter().map(|q| &**q).collect();
+                let (replies, work) = state.query_block(&qrefs, &taus, mode, &mut qctx);
+                let _ = reply.send((shard_no, BlockShardReply { replies, work }));
             }
             ShardMsg::Insert { items, merge_threshold, reply } => {
                 let n = items.len();
@@ -1152,6 +1343,88 @@ mod tests {
     }
 
     #[test]
+    fn group_blocks_by_tau_and_mode_in_arrival_order() {
+        let q: Arc<[u8]> = Arc::from(vec![0u8; 4].as_slice());
+        let queries: Vec<(Arc<[u8]>, usize, QueryMode)> = vec![
+            (Arc::clone(&q), 2, QueryMode::Ids),   // 0 ┐ group (2, Ids)
+            (Arc::clone(&q), 1, QueryMode::Ids),   // 1 — group (1, Ids)
+            (Arc::clone(&q), 2, QueryMode::Ids),   // 2 ┘
+            (Arc::clone(&q), 2, QueryMode::Count), // 3 — group (2, Count)
+            (Arc::clone(&q), 2, QueryMode::TopK(3)), // 4 ┐ split by k
+            (Arc::clone(&q), 2, QueryMode::TopK(5)), // 5 ┘
+            (Arc::clone(&q), 2, QueryMode::Ids),   // 6 — back to (2, Ids)
+        ];
+        let blocks = group_blocks(&queries, 8);
+        assert_eq!(
+            blocks,
+            vec![vec![0, 2, 6], vec![1], vec![3], vec![4], vec![5]]
+        );
+        // width caps block size; every index appears exactly once
+        let blocks = group_blocks(&queries, 2);
+        assert_eq!(blocks[0], vec![0, 2]);
+        let mut all: Vec<usize> = blocks.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..queries.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn blocked_batch_matches_serial_all_modes() {
+        let all = rows(900, 101);
+        let set = SketchSet::from_rows(2, 16, &all[..700]);
+        let engine = Engine::build(&set, 3, &ShardIndexKind::Bst(BstConfig::default()));
+        // make the shards dynamic: delta rows + tombstones
+        engine.insert_batch(&all[700..]).unwrap();
+        engine.delete(5);
+        engine.delete(750);
+        let mut rng = Rng::new(102);
+        let queries: Vec<(Arc<[u8]>, usize, QueryMode)> = (0..24)
+            .map(|i| {
+                let q: Arc<[u8]> = Arc::from(all[rng.below_usize(all.len())].as_slice());
+                let tau = i % 4;
+                let mode = match i % 3 {
+                    0 => QueryMode::Ids,
+                    1 => QueryMode::Count,
+                    _ => QueryMode::TopK(5),
+                };
+                (q, tau, mode)
+            })
+            .collect();
+        let serial = engine.run_batch(&queries);
+        for width in [1usize, 4, 8, 64] {
+            let blocked = engine.run_batch_blocked(&queries, width);
+            assert_eq!(blocked.len(), serial.len());
+            for (i, (s, b)) in serial.iter().zip(&blocked).enumerate() {
+                match (s, b) {
+                    (QueryResult::Ids(sv), QueryResult::Ids(bv)) => {
+                        // shard replies merge in arrival order — sort
+                        let mut sv = sv.clone();
+                        let mut bv = bv.clone();
+                        sv.sort_unstable();
+                        bv.sort_unstable();
+                        assert_eq!(sv, bv, "width={width} q={i}");
+                    }
+                    (s, b) => assert_eq!(s, b, "width={width} q={i}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_batch_records_per_query_latency() {
+        let all = rows(400, 103);
+        let set = SketchSet::from_rows(2, 16, &all);
+        let engine = Engine::build(&set, 2, &ShardIndexKind::Bst(BstConfig::default()));
+        let queries: Vec<(Arc<[u8]>, usize, QueryMode)> = (0..6)
+            .map(|i| (Arc::from(all[i * 7].as_slice()), 2usize, QueryMode::Ids))
+            .collect();
+        let out = engine.run_batch_blocked(&queries, 8);
+        assert_eq!(out.len(), 6);
+        let m = engine.metrics();
+        assert_eq!(m.queries.load(Ordering::Relaxed), 6, "one record per query");
+        assert_eq!(m.batches.load(Ordering::Relaxed), 1, "batch counted once");
+    }
+
+    #[test]
     fn multibst_shards_work() {
         let rows = rows(800, 93);
         let set = SketchSet::from_rows(2, 16, &rows);
@@ -1160,6 +1433,24 @@ mod tests {
         let mut got = engine.search(&q, 3);
         got.sort();
         assert_eq!(got, oracle(&rows, &q, 3));
+        // blocked execution routes MI-bST shards through the hoisted-lock
+        // path; results must be unchanged
+        let queries: Vec<(Arc<[u8]>, usize, QueryMode)> = (0..6)
+            .map(|i| (Arc::from(rows[i * 9].as_slice()), 3usize, QueryMode::Ids))
+            .collect();
+        let serial = engine.run_batch(&queries);
+        let blocked = engine.run_batch_blocked(&queries, 8);
+        for (s, b) in serial.iter().zip(&blocked) {
+            match (s, b) {
+                (QueryResult::Ids(sv), QueryResult::Ids(bv)) => {
+                    let (mut sv, mut bv) = (sv.clone(), bv.clone());
+                    sv.sort_unstable();
+                    bv.sort_unstable();
+                    assert_eq!(sv, bv);
+                }
+                _ => panic!("expected ids"),
+            }
+        }
     }
 
     #[test]

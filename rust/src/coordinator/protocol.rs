@@ -34,6 +34,18 @@
 //! Write ops: `insert` appends rows (consecutive global ids, returned
 //! via `first_id`), `delete` tombstones one id, `merge` force-folds
 //! every shard's delta into a fresh immutable segment.
+//!
+//! **Block execution.** The server's batcher groups compatible queries
+//! — same `tau` and the same mode (`search` / `count` / `topk` with the
+//! same `k`) — into blocks of at most `--block-width` (default 8, max
+//! 64) and executes each block as one pass over every shard's trie and
+//! plane-word stream. This is invisible on the wire: results (ids,
+//! counts, top-k order by `(dist, id)`) are byte-identical to serial
+//! execution, and `--block-width 1` disables blocking entirely. The
+//! `latency_us` a blocked query reports is its share of the block's
+//! wall time, attributed by live work: each query's visited + pruned
+//! node count across all shards, an equal split when the block did no
+//! work. The same rule feeds the `stats` op's latency percentiles.
 
 use crate::util::json::Json;
 

@@ -32,7 +32,10 @@
 
 use super::engine::{QueryMode, ShardIndex, ShardIndexKind, ShardReply};
 use crate::index::SearchIndex;
-use crate::query::{CollectIds, Collector, CountOnly, QueryCtx, TopK};
+use crate::query::{
+    live_mask, BlockCollector, CollectIds, Collector, CountOnly, QueryCtx, TopK, MAX_BLOCK,
+};
+use crate::sketch::hamming::ham_chars_leq;
 use crate::sketch::plane_store::PlaneStore;
 use crate::sketch::SketchSet;
 use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
@@ -264,29 +267,107 @@ impl DeltaSegment {
             });
             c.on_prune_many(pruned);
         } else {
-            // L > 64: character scan with the running-distance early exit.
+            // L > 64: character scan through the shared early-exit kernel
+            // (`ham_chars_leq` bails the moment the running mismatch
+            // count exceeds the live threshold — the char-row analogue of
+            // the plane kernels' between-plane early exit).
             c.on_visit_many(self.len());
             let mut pruned = 0usize;
             for (i, &g) in self.ids.iter().enumerate() {
-                let tau = c.tau();
-                let mut d = 0usize;
-                let mut over = false;
-                for (a, b) in self.row(i).iter().zip(q) {
-                    if a != b {
-                        d += 1;
-                        if d > tau {
-                            over = true;
-                            break;
+                match ham_chars_leq(self.row(i), q, c.tau()) {
+                    Some(d) => {
+                        if !tombs.contains(&g) {
+                            c.emit(&[g], d);
                         }
                     }
-                }
-                if over {
-                    pruned += 1;
-                } else if !tombs.contains(&g) {
-                    c.emit(&[g], d);
+                    None => pruned += 1,
                 }
             }
             c.on_prune_many(pruned);
+        }
+    }
+
+    /// Blocked delta scan: one pass over the delta rows serves the whole
+    /// query block. The planes path streams every plane word once through
+    /// the multi-query kernel; the `L > 64` char fallback loads each row
+    /// once and compares it against every query with the same early-exit
+    /// kernel, so hot delta shards do not regress under blocking.
+    /// Per-query results and stats are identical to [`Self::run`].
+    pub fn run_block(
+        &self,
+        qs: &[&[u8]],
+        ctx: &mut QueryCtx,
+        tombs: &HashSet<u32>,
+        bc: &mut BlockCollector,
+    ) {
+        let m = bc.len();
+        assert_eq!(qs.len(), m, "query block / collector slot mismatch");
+        if self.is_empty() {
+            return;
+        }
+        for q in qs {
+            assert_eq!(q.len(), self.l, "query length mismatch");
+        }
+        let n = self.len();
+        let mut pruned = [0usize; MAX_BLOCK];
+        if let Some(planes) = &self.planes {
+            let bq = &mut ctx.block_q;
+            bq.clear();
+            for q in qs {
+                for k in 0..self.b {
+                    let mut field = 0u64;
+                    for (p, &ch) in q.iter().enumerate() {
+                        field |= (((ch >> k) & 1) as u64) << p;
+                    }
+                    bq.push(field);
+                }
+            }
+            let mut taus = [0usize; MAX_BLOCK];
+            for (j, t) in taus.iter_mut().take(m).enumerate() {
+                bc.on_visit_many(j, n);
+                *t = bc.tau(j);
+            }
+            planes.ham_range_leq_multi(
+                0,
+                n,
+                &ctx.block_q,
+                &taus[..m],
+                live_mask(m),
+                |j, i, verdict| {
+                    match verdict {
+                        Some(d) => {
+                            let g = self.ids[i];
+                            if !tombs.contains(&g) {
+                                bc.emit(j, &[g], d);
+                            }
+                        }
+                        None => pruned[j] += 1,
+                    }
+                    // the serial scan never stops early; no query is
+                    // ever dropped from the block's live mask here
+                    Some(bc.tau(j))
+                },
+            );
+        } else {
+            for j in 0..m {
+                bc.on_visit_many(j, n);
+            }
+            for (i, &g) in self.ids.iter().enumerate() {
+                let row = self.row(i);
+                for (j, q) in qs.iter().enumerate() {
+                    match ham_chars_leq(row, q, bc.tau(j)) {
+                        Some(d) => {
+                            if !tombs.contains(&g) {
+                                bc.emit(j, &[g], d);
+                            }
+                        }
+                        None => pruned[j] += 1,
+                    }
+                }
+            }
+        }
+        for (j, &p) in pruned.iter().take(m).enumerate() {
+            bc.on_prune_many(j, p);
         }
     }
 
@@ -580,6 +661,114 @@ impl SegmentedShard {
             sealed.run(q, ctx, &self.tombstones, c);
         }
         self.active.run(q, ctx, &self.tombstones, c);
+    }
+
+    /// Executes a compatible query block (one τ, one mode) across base +
+    /// sealed + active in one pass per segment. Returns one reply per
+    /// query plus each query's share of the traversal work (visits +
+    /// prunes), which the engine uses to attribute the block's wall time.
+    /// Results and per-query stats are identical to calling
+    /// [`Self::query`] once per query.
+    pub fn query_block(
+        &self,
+        qs: &[&[u8]],
+        taus: &[usize],
+        mode: QueryMode,
+        ctx: &mut QueryCtx,
+    ) -> (Vec<ShardReply>, Vec<u64>) {
+        let m = qs.len();
+        assert_eq!(taus.len(), m, "query block / tau mismatch");
+        match mode {
+            QueryMode::Ids => {
+                let mut hits: Vec<Vec<u32>> = vec![Vec::new(); m];
+                let mut colls: Vec<CollectIds> = hits
+                    .iter_mut()
+                    .zip(taus)
+                    .map(|(h, &tau)| CollectIds::new(tau, h))
+                    .collect();
+                let mut slots: Vec<&mut dyn Collector> =
+                    colls.iter_mut().map(|c| c as &mut dyn Collector).collect();
+                let work = self.run_all_block(qs, ctx, &mut slots);
+                drop(slots);
+                drop(colls);
+                (hits.into_iter().map(ShardReply::Ids).collect(), work)
+            }
+            QueryMode::Count => {
+                let mut colls: Vec<CountOnly> =
+                    taus.iter().map(|&tau| CountOnly::new(tau)).collect();
+                let mut slots: Vec<&mut dyn Collector> =
+                    colls.iter_mut().map(|c| c as &mut dyn Collector).collect();
+                let work = self.run_all_block(qs, ctx, &mut slots);
+                drop(slots);
+                (colls.iter().map(|c| ShardReply::Count(c.count())).collect(), work)
+            }
+            QueryMode::TopK(k) => {
+                let mut colls: Vec<TopK> =
+                    taus.iter().map(|&tau| TopK::new(k, tau)).collect();
+                let mut slots: Vec<&mut dyn Collector> =
+                    colls.iter_mut().map(|c| c as &mut dyn Collector).collect();
+                let work = self.run_all_block(qs, ctx, &mut slots);
+                drop(slots);
+                let replies = colls
+                    .into_iter()
+                    .map(|mut c| {
+                        let mut hits = Vec::new();
+                        c.drain_into(&mut hits);
+                        ShardReply::TopK(hits)
+                    })
+                    .collect();
+                (replies, work)
+            }
+        }
+    }
+
+    /// Blocked analogue of [`Self::run_all`]: one base descent, one
+    /// sealed scan, one active scan for the whole block. Returns the
+    /// per-query work totals accumulated across all three passes.
+    fn run_all_block(
+        &self,
+        qs: &[&[u8]],
+        ctx: &mut QueryCtx,
+        slots: &mut [&mut dyn Collector],
+    ) -> Vec<u64> {
+        let m = slots.len();
+        assert_eq!(qs.len(), m, "query block / collector slot mismatch");
+        let mut work = vec![0u64; m];
+        {
+            // Base pass: each slot is wrapped in its own Remap
+            // (local → global ids + tombstone filter), exactly as in the
+            // serial path, then fanned back out through a BlockCollector.
+            let mut remaps: Vec<Remap> = slots
+                .iter_mut()
+                .map(|s| Remap {
+                    inner: &mut **s,
+                    map: &self.map,
+                    tombstones: &self.tombstones,
+                })
+                .collect();
+            let mut rslots: Vec<&mut dyn Collector> =
+                remaps.iter_mut().map(|r| r as &mut dyn Collector).collect();
+            let mut bc = BlockCollector::new(&mut rslots);
+            self.base.run_block(qs, ctx, &mut bc);
+            for (j, w) in work.iter_mut().enumerate() {
+                *w += bc.work(j);
+            }
+        }
+        if let Some(sealed) = &self.sealed {
+            let mut bc = BlockCollector::new(slots);
+            sealed.run_block(qs, ctx, &self.tombstones, &mut bc);
+            for (j, w) in work.iter_mut().enumerate() {
+                *w += bc.work(j);
+            }
+        }
+        {
+            let mut bc = BlockCollector::new(slots);
+            self.active.run_block(qs, ctx, &self.tombstones, &mut bc);
+            for (j, w) in work.iter_mut().enumerate() {
+                *w += bc.work(j);
+            }
+        }
+        work
     }
 
     /// Appends pre-assigned `(global id, row)` pairs to the active delta.

@@ -4,25 +4,35 @@
 //!
 //! Every PR that touches a hot path re-runs this and commits/uploads the
 //! resulting `BENCH_*.json`, so the repo accumulates a comparable series
-//! of perf measurements (schema `bst-bench-v2`): one row per
+//! of perf measurements (schema `bst-bench-v3`): one row per
 //! `(dataset, index, tau)` with `n`, `b`, `L`, p50/p99 latency in µs and
-//! throughput in M queries/s, and one `delta-insert` row per dataset
-//! with per-batch latency percentiles and append throughput in Mops/s
-//! (rows/µs into the engine's delta segments, auto-merge disabled).
-//! Absolute numbers are testbed-specific — the trajectory (and the
-//! bST-vs-linear gap) is the signal.
+//! throughput in M queries/s; one `blocked-vs-serial` row per
+//! `(dataset, block width)` measuring the engine's blocked batch path
+//! at widths 1/4/8/16 (width 1 *is* the serial path, so the width-8 /
+//! width-1 Mq/s ratio is the blocking speedup); and one `delta-insert`
+//! row per dataset with per-batch latency percentiles and append
+//! throughput in Mops/s (rows/µs into the engine's delta segments,
+//! auto-merge disabled). Absolute numbers are testbed-specific — the
+//! trajectory (and the bST-vs-linear gap) is the signal.
 
 use super::EvalOpts;
-use crate::coordinator::engine::{Engine, ShardIndexKind};
+use crate::coordinator::engine::{Engine, QueryMode, ShardIndexKind};
 use crate::data::{self, Dataset, GenConfig};
 use crate::index::{LinearScan, SearchIndex, SingleBst};
 use crate::query::{CollectIds, QueryCtx};
 use crate::trie::bst::BstConfig;
 use crate::util::json::Json;
 use crate::util::timer::{Stats, Timer};
+use std::sync::Arc;
 
 /// Rows appended per `insert_batch` call in the write-path measurement.
 const INSERT_BATCH: usize = 512;
+
+/// Queries per batch in the blocked-vs-serial measurement.
+const BLOCK_BATCH: usize = 32;
+
+/// Block widths swept by the blocked-vs-serial rows (1 = serial).
+const BLOCK_WIDTHS: [usize; 4] = [1, 4, 8, 16];
 
 /// Runs the experiment; returns `(markdown report, json payload)`.
 pub fn bench(opts: &EvalOpts, datasets: &[Dataset]) -> (String, Json) {
@@ -86,6 +96,60 @@ pub fn bench(opts: &EvalOpts, datasets: &[Dataset]) -> (String, Json) {
             }
         }
 
+        // Blocked vs serial: the same engine and query stream executed
+        // through the blocked batch path at increasing block widths.
+        // Width 1 delegates to the serial run_batch, so these rows
+        // measure exactly the blocking speedup (same τ, Ids mode —
+        // a fully compatible batch).
+        {
+            let engine = Engine::build(set, 2, &ShardIndexKind::Bst(BstConfig::default()));
+            let tau = 2usize;
+            let batch: Vec<(Arc<[u8]>, usize, QueryMode)> = (0..BLOCK_BATCH)
+                .map(|i| {
+                    let q = &w.queries[i % w.queries.len()];
+                    (Arc::from(q.as_slice()), tau, QueryMode::Ids)
+                })
+                .collect();
+            for &width in &BLOCK_WIDTHS {
+                let _ = engine.run_batch_blocked(&batch, width); // warm-up
+                let reps = (opts.queries / BLOCK_BATCH).max(1);
+                let mut lat = Stats::new();
+                let mut total_q = 0usize;
+                let t_all = Timer::start();
+                for _ in 0..reps {
+                    let t = Timer::start();
+                    let _ = engine.run_batch_blocked(&batch, width);
+                    lat.push(t.elapsed_us() / batch.len() as f64);
+                    total_q += batch.len();
+                }
+                let total_us = t_all.elapsed_us();
+                let mqps = if total_us > 0.0 { total_q as f64 / total_us } else { 0.0 };
+                md.push_str(&format!(
+                    "| {} | blocked-vs-serial (w={width}) | {} | {} | {} | {tau} | {:.2} | {:.2} | {mqps:.3} | - |\n",
+                    ds.name(),
+                    set.n(),
+                    set.b(),
+                    set.l(),
+                    lat.p50(),
+                    lat.p99(),
+                ));
+                rows.push(Json::obj(vec![
+                    ("dataset", Json::str(ds.name())),
+                    ("index", Json::str("blocked-vs-serial")),
+                    ("block_width", Json::num(width as f64)),
+                    ("n", Json::num(set.n() as f64)),
+                    ("b", Json::num(set.b() as f64)),
+                    ("l", Json::num(set.l() as f64)),
+                    ("tau", Json::num(tau as f64)),
+                    ("queries", Json::num(total_q as f64)),
+                    ("p50_us", Json::num(lat.p50())),
+                    ("p99_us", Json::num(lat.p99())),
+                    ("mean_us", Json::num(lat.mean())),
+                    ("mqps", Json::num(mqps)),
+                ]));
+            }
+        }
+
         // Write path: append throughput into the delta segments. The
         // engine starts from the dataset and re-inserts rotated rows in
         // fixed-size batches; auto-merge is disabled so the measurement
@@ -133,7 +197,7 @@ pub fn bench(opts: &EvalOpts, datasets: &[Dataset]) -> (String, Json) {
     }
 
     let payload = Json::obj(vec![
-        ("schema", Json::str("bst-bench-v2")),
+        ("schema", Json::str("bst-bench-v3")),
         (
             "config",
             Json::obj(vec![
@@ -156,8 +220,13 @@ mod tests {
         let opts = EvalOpts { scale: 0.005, queries: 4, ..Default::default() };
         let (md, payload) = bench(&opts, &[Dataset::Review]);
         assert!(md.contains("si-bst") && md.contains("linear") && md.contains("delta-insert"));
+        assert!(md.contains("blocked-vs-serial"));
         let rows = payload.get("rows").and_then(|r| r.as_arr()).unwrap();
-        assert_eq!(rows.len(), 2 * 3 + 1, "2 indexes x 3 taus + 1 insert row");
+        assert_eq!(
+            rows.len(),
+            2 * 3 + BLOCK_WIDTHS.len() + 1,
+            "2 indexes x 3 taus + blocked widths + 1 insert row"
+        );
         for row in rows {
             assert!(row.get("p50_us").and_then(Json::as_f64).is_some());
         }
@@ -171,6 +240,19 @@ mod tests {
         for row in &query_rows {
             assert!(row.get("mqps").and_then(Json::as_f64).unwrap() >= 0.0);
         }
+        let blocked_rows: Vec<&Json> = rows
+            .iter()
+            .filter(|r| r.get("index").and_then(Json::as_str) == Some("blocked-vs-serial"))
+            .collect();
+        assert_eq!(blocked_rows.len(), BLOCK_WIDTHS.len());
+        let widths: Vec<f64> = blocked_rows
+            .iter()
+            .map(|r| r.get("block_width").and_then(Json::as_f64).unwrap())
+            .collect();
+        assert_eq!(widths, vec![1.0, 4.0, 8.0, 16.0]);
+        for row in &blocked_rows {
+            assert!(row.get("mqps").and_then(Json::as_f64).unwrap() > 0.0);
+        }
         let insert_rows: Vec<&Json> = rows
             .iter()
             .filter(|r| r.get("index").and_then(Json::as_str) == Some("delta-insert"))
@@ -180,7 +262,7 @@ mod tests {
         assert!(insert_rows[0].get("n").and_then(Json::as_f64).unwrap() > 0.0);
         assert_eq!(
             payload.get("schema").and_then(Json::as_str),
-            Some("bst-bench-v2")
+            Some("bst-bench-v3")
         );
     }
 }

@@ -281,8 +281,12 @@ impl Persist for HmSearch {
     }
 }
 
-impl SearchIndex for HmSearch {
-    fn run(&self, q: &[u8], _ctx: &mut QueryCtx, c: &mut dyn Collector) {
+impl HmSearch {
+    /// Lock-free probe core: the caller holds the probe-state guard.
+    /// Blocked execution acquires the lock once per query block; each
+    /// member query probes and verifies its deduplicated candidate
+    /// buffers in exactly the serial order.
+    fn run_locked(&self, state: &mut ProbeState, q: &[u8], c: &mut dyn Collector) {
         let tau = c.tau();
         assert!(
             tau <= self.tau_max,
@@ -290,8 +294,7 @@ impl SearchIndex for HmSearch {
             self.tau_max
         );
         let q_planes = self.vertical.pack_query(q);
-        let mut guard = self.state.lock().unwrap();
-        let ProbeState { epochs, cur, cands } = &mut *guard;
+        let ProbeState { epochs, cur, cands } = state;
         *cur = cur.wrapping_add(1);
         if *cur == 0 {
             epochs.fill(0);
@@ -330,6 +333,29 @@ impl SearchIndex for HmSearch {
                     }
                 }
             }
+        }
+    }
+}
+
+impl SearchIndex for HmSearch {
+    fn run(&self, q: &[u8], _ctx: &mut QueryCtx, c: &mut dyn Collector) {
+        let mut guard = self.state.lock().unwrap();
+        self.run_locked(&mut guard, q, c);
+    }
+
+    fn run_block(
+        &self,
+        qs: &[&[u8]],
+        _ctx: &mut QueryCtx,
+        bc: &mut crate::query::BlockCollector,
+    ) {
+        assert_eq!(qs.len(), bc.len(), "query block / collector slot mismatch");
+        // One lock acquisition for the whole block; every member τ must
+        // fit the bucket this instance was built for.
+        let mut guard = self.state.lock().unwrap();
+        for (j, q) in qs.iter().enumerate() {
+            let mut slot = crate::query::SlotRef::new(bc, j);
+            self.run_locked(&mut guard, q, &mut slot);
         }
     }
 

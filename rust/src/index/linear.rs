@@ -58,6 +58,53 @@ impl SearchIndex for LinearScan {
         c.on_prune_many(pruned);
     }
 
+    fn run_block(
+        &self,
+        qs: &[&[u8]],
+        ctx: &mut QueryCtx,
+        bc: &mut crate::query::BlockCollector,
+    ) {
+        let m = bc.len();
+        assert_eq!(qs.len(), m, "query block / collector slot mismatch");
+        // Pack the whole block back to back, then stream the database
+        // ONCE: each plane word is loaded one time and evaluated against
+        // every query. Per-query accounting mirrors the serial scan
+        // exactly — every row visited, prunes counted, the live tau
+        // re-read per row — so results and stats are byte-identical.
+        ctx.block_q.clear();
+        for q in qs {
+            self.vertical.pack_query_append(q, &mut ctx.block_q);
+        }
+        let n = self.vertical.n();
+        let mut taus = [0usize; crate::query::MAX_BLOCK];
+        for (j, t) in taus.iter_mut().take(m).enumerate() {
+            bc.on_visit_many(j, n);
+            *t = bc.tau(j);
+        }
+        let mut pruned = [0usize; crate::query::MAX_BLOCK];
+        let live0 = crate::query::live_mask(m);
+        self.vertical.ham_range_leq_multi(
+            0,
+            n,
+            &ctx.block_q,
+            &taus[..m],
+            live0,
+            |j, i, verdict| {
+                match verdict {
+                    Some(d) => bc.emit(j, &[i as u32], d),
+                    None => pruned[j] += 1,
+                }
+                // The serial scan never stops early — it re-reads the
+                // live threshold and keeps going, so no query is ever
+                // dropped from the block here either.
+                Some(bc.tau(j))
+            },
+        );
+        for (j, &p) in pruned.iter().take(m).enumerate() {
+            bc.on_prune_many(j, p);
+        }
+    }
+
     fn heap_bytes(&self) -> usize {
         self.vertical.heap_bytes()
     }

@@ -46,7 +46,7 @@ pub use multi::MultiBst;
 pub use sih::Sih;
 pub use single::{SingleBst, SingleFst, SingleLouds};
 
-use crate::query::{CollectIds, Collector, CountOnly, QueryCtx, TopK};
+use crate::query::{BlockCollector, CollectIds, Collector, CountOnly, QueryCtx, SlotRef, TopK};
 
 /// A Hamming-threshold similarity index over a fixed sketch database.
 pub trait SearchIndex {
@@ -54,6 +54,21 @@ pub trait SearchIndex {
     /// to the collector. The collector's `tau()` at entry is the τ the
     /// index plans for; adaptive collectors may tighten it mid-query.
     fn run(&self, q: &[u8], ctx: &mut QueryCtx, c: &mut dyn Collector);
+
+    /// Executes a whole query block (slot `j` of `bc` is query `j`'s
+    /// collector) in one call. Indexes with a native blocked path share
+    /// one pass over their data structures; the default falls back to
+    /// one serial `run` per query, routed through the block collector so
+    /// per-query results, stats and work attribution are uniform either
+    /// way. Results and per-query `TraversalStats` are identical to
+    /// serial execution by contract.
+    fn run_block(&self, qs: &[&[u8]], ctx: &mut QueryCtx, bc: &mut BlockCollector) {
+        assert_eq!(qs.len(), bc.len(), "query block / collector slot mismatch");
+        for (j, q) in qs.iter().enumerate() {
+            let mut slot = SlotRef::new(bc, j);
+            self.run(q, ctx, &mut slot);
+        }
+    }
 
     /// Ids of all sketches with `ham(s_i, q) <= tau`, in unspecified order.
     fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {

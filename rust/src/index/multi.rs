@@ -191,12 +191,28 @@ impl<F: BlockFilter> MultiIndex<F> {
     /// the threshold the block assignment plans for (the collector's tau
     /// at entry); verification prunes against the live `c.tau()`.
     fn run_filtered(&self, q: &[u8], tau: usize, c: &mut dyn Collector, stats: &mut FilterStats) {
+        let mut guard = self.state.lock().unwrap();
+        self.run_filtered_locked(&mut guard, q, tau, c, stats);
+    }
+
+    /// Lock-free core of [`Self::run_filtered`]: the caller holds the
+    /// query-state guard. Blocked execution acquires the lock once per
+    /// query block and drives every member query through this path, so
+    /// per-query filtering/verification order — and therefore results and
+    /// stats — are exactly the serial ones.
+    fn run_filtered_locked(
+        &self,
+        state: &mut QueryState,
+        q: &[u8],
+        tau: usize,
+        c: &mut dyn Collector,
+        stats: &mut FilterStats,
+    ) {
         assert_eq!(q.len(), self.vertical.l());
         let thresholds = block_thresholds(tau, self.m);
         let vertical = &self.vertical;
 
-        let mut guard = self.state.lock().unwrap();
-        let QueryState { visited, scratch, q_planes, cands } = &mut *guard;
+        let QueryState { visited, scratch, q_planes, cands } = state;
         visited.next_query();
         vertical.pack_query_into(q, q_planes);
         for (j, &(lo, hi)) in self.ranges.iter().enumerate() {
@@ -335,6 +351,26 @@ impl<F: BlockFilter> SearchIndex for MultiIndex<F> {
         // epoch array must match this index's database size.
         let mut stats = FilterStats::default();
         self.run_filtered(q, c.tau(), c, &mut stats);
+    }
+
+    fn run_block(
+        &self,
+        qs: &[&[u8]],
+        _ctx: &mut QueryCtx,
+        bc: &mut crate::query::BlockCollector,
+    ) {
+        assert_eq!(qs.len(), bc.len(), "query block / collector slot mismatch");
+        // Hoist the per-query setup the lock protects: one acquisition
+        // serves the whole block, and each member query's dedup'd
+        // candidate buffer is verified with the same batched kernel call
+        // the serial path uses, in the same order.
+        let mut guard = self.state.lock().unwrap();
+        for (j, q) in qs.iter().enumerate() {
+            let mut stats = FilterStats::default();
+            let tau = bc.tau(j);
+            let mut slot = crate::query::SlotRef::new(bc, j);
+            self.run_filtered_locked(&mut guard, q, tau, &mut slot, &mut stats);
+        }
     }
 
     fn heap_bytes(&self) -> usize {

@@ -10,6 +10,12 @@
 //! (GIST: 512 bits) use a 64-bit mixed key plus full verification of the
 //! retrieved candidates (collision-safe, and the extra check is free
 //! relative to enumeration).
+//!
+//! Blocked execution: SIH's cost is signature *enumeration*, whose ball
+//! depends on each query's own sketch and τ — there is no shared data
+//! pass to amortize — so `SearchIndex::run_block` keeps the trait's
+//! per-query fallback (routed through the block collector, which keeps
+//! work attribution and stats uniform with the blocked indexes).
 
 use super::hashdex::HashIndex;
 use super::signature::{for_each_signature, pack_key};

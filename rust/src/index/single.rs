@@ -29,6 +29,17 @@ impl<T: SketchTrie> SearchIndex for SingleIndex<T> {
         self.trie.run(q, ctx, &mut c);
     }
 
+    fn run_block(
+        &self,
+        qs: &[&[u8]],
+        ctx: &mut QueryCtx,
+        bc: &mut crate::query::BlockCollector,
+    ) {
+        // bST descends once for the whole block; the other tries fall
+        // back to the trait's per-query default.
+        self.trie.run_block(qs, ctx, bc);
+    }
+
     fn heap_bytes(&self) -> usize {
         self.trie.heap_bytes()
     }

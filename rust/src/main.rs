@@ -80,6 +80,8 @@ USAGE:
                       [--addr A] [--shards N]
                       [--index-kind si-bst|mi-bst] [--max-batch N] [--max-delay-us U]
                       [--merge-threshold N] (delta rows before background merge)
+                      [--block-width N] (multi-query block size, default 8;
+                       1 = serial per-query execution)
   bst info            print build/runtime information
 ";
 
@@ -528,6 +530,7 @@ fn cmd_serve(args: &Args) -> i32 {
         default_tau: args.get_usize("tau", 2),
         merge_threshold: args
             .get_usize("merge-threshold", Engine::DEFAULT_MERGE_THRESHOLD),
+        block_width: args.get_usize("block-width", 8),
     };
 
     // `--index` doubles as the historical kind selector (si-bst/mi-bst)

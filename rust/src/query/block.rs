@@ -1,0 +1,217 @@
+//! Block execution support: the [`BlockCollector`] fan-out.
+//!
+//! Blocked traversals (trie descent, range scans, candidate
+//! verification) process a whole *query block* — up to
+//! [`MAX_BLOCK`] compatible queries — in one pass over the data. Each
+//! query still owns its own consumption policy (a plain
+//! [`Collector`]); the `BlockCollector` holds one mutable slot per
+//! query and routes every per-query event (`tau` reads, `emit`,
+//! visit/prune accounting) to exactly the collector it belongs to, so
+//! blocked execution stays **byte-identical** to one-at-a-time
+//! execution in both results and [`super::TraversalStats`].
+//!
+//! Besides routing, the block collector tracks per-query *work*
+//! (nodes/items visited): the batcher attributes a block's wall time to
+//! its member queries by share of work, keeping per-query latency
+//! accounting real (documented in `coordinator/protocol.rs`).
+
+use super::Collector;
+pub use crate::sketch::plane_store::{live_mask, MAX_BLOCK};
+
+/// Per-query fan-out for blocked traversals: slot `j` is query `j`'s
+/// own collector. All hooks take an explicit query index; the
+/// traversal decides *which* queries see an event, the block collector
+/// guarantees only those queries' collectors observe it.
+pub struct BlockCollector<'a, 'b> {
+    slots: &'a mut [&'b mut dyn Collector],
+    /// Per-query visited-node counters (wall-time attribution weights).
+    work: [u64; MAX_BLOCK],
+}
+
+impl<'a, 'b> BlockCollector<'a, 'b> {
+    /// Wraps one collector per query. `slots.len()` is the block width
+    /// `m` (`<= MAX_BLOCK`).
+    pub fn new(slots: &'a mut [&'b mut dyn Collector]) -> Self {
+        assert!(
+            slots.len() <= MAX_BLOCK,
+            "query block wider than MAX_BLOCK: {}",
+            slots.len()
+        );
+        BlockCollector { slots, work: [0; MAX_BLOCK] }
+    }
+
+    /// Number of queries in the block.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Query `j`'s live threshold (may shrink between reads — top-k).
+    #[inline]
+    pub fn tau(&self, j: usize) -> usize {
+        self.slots[j].tau()
+    }
+
+    /// Emits a candidate group at exact distance `dist` to query `j`.
+    #[inline]
+    pub fn emit(&mut self, j: usize, ids: &[u32], dist: usize) {
+        self.slots[j].emit(ids, dist);
+    }
+
+    /// Query `j` entered a node / compared a candidate.
+    #[inline]
+    pub fn on_visit(&mut self, j: usize) {
+        self.work[j] += 1;
+        self.slots[j].on_visit();
+    }
+
+    /// Query `j` cut a child/candidate on its distance budget.
+    #[inline]
+    pub fn on_prune(&mut self, j: usize) {
+        self.slots[j].on_prune();
+    }
+
+    /// Batched visit accounting for query `j` (range kernels).
+    #[inline]
+    pub fn on_visit_many(&mut self, j: usize, n: usize) {
+        self.work[j] += n as u64;
+        self.slots[j].on_visit_many(n);
+    }
+
+    /// Batched prune accounting for query `j`.
+    #[inline]
+    pub fn on_prune_many(&mut self, j: usize, n: usize) {
+        self.slots[j].on_prune_many(n);
+    }
+
+    /// Work done on behalf of query `j` so far (visited count). The
+    /// batcher splits block wall time proportionally to these weights.
+    #[inline]
+    pub fn work(&self, j: usize) -> u64 {
+        self.work[j]
+    }
+}
+
+/// Adapter exposing one slot of a [`BlockCollector`] as a plain
+/// [`Collector`]. The serial fallbacks of `run_block` (indexes without
+/// a native blocked path) drive each member query through the ordinary
+/// single-query traversal wearing this adapter, so per-query stats and
+/// work accounting still flow through the block collector.
+pub struct SlotRef<'c, 'a, 'b> {
+    bc: &'c mut BlockCollector<'a, 'b>,
+    j: usize,
+}
+
+impl<'c, 'a, 'b> SlotRef<'c, 'a, 'b> {
+    pub fn new(bc: &'c mut BlockCollector<'a, 'b>, j: usize) -> Self {
+        debug_assert!(j < bc.len());
+        SlotRef { bc, j }
+    }
+}
+
+impl Collector for SlotRef<'_, '_, '_> {
+    #[inline]
+    fn tau(&self) -> usize {
+        self.bc.tau(self.j)
+    }
+
+    #[inline]
+    fn emit(&mut self, ids: &[u32], dist: usize) {
+        self.bc.emit(self.j, ids, dist);
+    }
+
+    #[inline]
+    fn on_visit(&mut self) {
+        self.bc.on_visit(self.j);
+    }
+
+    #[inline]
+    fn on_prune(&mut self) {
+        self.bc.on_prune(self.j);
+    }
+
+    #[inline]
+    fn on_visit_many(&mut self, n: usize) {
+        self.bc.on_visit_many(self.j, n);
+    }
+
+    #[inline]
+    fn on_prune_many(&mut self, n: usize) {
+        self.bc.on_prune_many(self.j, n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::{CollectIds, CountOnly, StatsObserver};
+
+    #[test]
+    fn block_collector_routes_per_query() {
+        let mut out0 = Vec::new();
+        let mut c0 = StatsObserver::new(CollectIds::new(2, &mut out0));
+        let mut c1 = StatsObserver::new(CountOnly::new(5));
+        {
+            let mut slots: [&mut dyn Collector; 2] = [&mut c0, &mut c1];
+            let mut bc = BlockCollector::new(&mut slots);
+            assert_eq!(bc.len(), 2);
+            assert_eq!((bc.tau(0), bc.tau(1)), (2, 5));
+            bc.on_visit(0);
+            bc.on_visit_many(1, 3);
+            bc.on_prune(1);
+            bc.on_prune_many(0, 2);
+            bc.emit(0, &[7, 8], 1);
+            bc.emit(1, &[9], 4);
+            assert_eq!((bc.work(0), bc.work(1)), (1, 3));
+        }
+        assert_eq!(out0, vec![7, 8]);
+        assert_eq!(
+            (c0.stats.visited, c0.stats.pruned, c0.stats.emitted),
+            (1, 2, 2)
+        );
+        assert_eq!(c1.inner.count(), 1);
+        assert_eq!(
+            (c1.stats.visited, c1.stats.pruned, c1.stats.emitted),
+            (3, 1, 1)
+        );
+    }
+
+    #[test]
+    fn slot_ref_is_a_transparent_collector() {
+        let mut out = Vec::new();
+        let mut c0 = StatsObserver::new(CollectIds::new(3, &mut out));
+        let mut c1 = CountOnly::new(1);
+        {
+            let mut slots: [&mut dyn Collector; 2] = [&mut c0, &mut c1];
+            let mut bc = BlockCollector::new(&mut slots);
+            let mut s = SlotRef::new(&mut bc, 0);
+            assert_eq!(s.tau(), 3);
+            s.on_visit();
+            s.on_visit_many(4);
+            s.on_prune();
+            s.on_prune_many(2);
+            s.emit(&[1], 0);
+            assert_eq!(bc.work(0), 5);
+            assert_eq!(bc.work(1), 0);
+        }
+        assert_eq!(out, vec![1]);
+        assert_eq!(
+            (c0.stats.visited, c0.stats.pruned, c0.stats.emitted),
+            (5, 3, 1)
+        );
+        assert_eq!(c1.count(), 0);
+    }
+
+    #[test]
+    fn live_mask_clamps_at_64() {
+        assert_eq!(live_mask(0), 0);
+        assert_eq!(live_mask(3), 0b111);
+        assert_eq!(live_mask(64), u64::MAX);
+        assert_eq!(live_mask(200), u64::MAX);
+    }
+}

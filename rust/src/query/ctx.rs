@@ -16,6 +16,9 @@
 pub struct QueryCtx {
     /// Packed query bit-planes (`b` words).
     pub(crate) q_planes: Vec<u64>,
+    /// Packed block-query planes for blocked execution (`m · b` words;
+    /// query `j`'s planes live at `[j·b, (j+1)·b)`).
+    pub(crate) block_q: Vec<u64>,
     /// Flat child buffer: `levels` segments of `kid_stride` slots each.
     pub(crate) kids: Vec<(u32, u8)>,
     /// Current segment width (`1 << b` of the structure being queried).
@@ -30,6 +33,7 @@ impl QueryCtx {
     pub fn new() -> Self {
         QueryCtx {
             q_planes: Vec::new(),
+            block_q: Vec::new(),
             kids: Vec::new(),
             kid_stride: 0,
             topk_heap: std::collections::BinaryHeap::new(),
@@ -74,6 +78,7 @@ impl QueryCtx {
     /// Heap bytes currently held by the scratch buffers.
     pub fn heap_bytes(&self) -> usize {
         self.q_planes.capacity() * std::mem::size_of::<u64>()
+            + self.block_q.capacity() * std::mem::size_of::<u64>()
             + self.kids.capacity() * std::mem::size_of::<(u32, u8)>()
             + self.topk_heap.capacity() * std::mem::size_of::<(usize, u32)>()
     }

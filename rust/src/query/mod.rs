@@ -29,10 +29,17 @@
 //! and must call `c.emit(ids, dist)` with the **exact** distance for every
 //! surviving candidate group. Because `TopK::tau()` only ever decreases,
 //! pruning against the live threshold is always sound.
+//!
+//! Blocked execution ([`BlockCollector`]) runs up to [`MAX_BLOCK`]
+//! compatible queries through one traversal pass; every per-query event
+//! is routed to that query's own collector, so blocked results and
+//! stats are byte-identical to serial execution.
 
+mod block;
 mod collector;
 mod ctx;
 
+pub use block::{live_mask, BlockCollector, SlotRef, MAX_BLOCK};
 pub use collector::{CollectIds, Collector, CountOnly, StatsObserver, TopK, TraversalStats};
 pub use ctx::QueryCtx;
 

@@ -66,6 +66,26 @@ pub fn ham_vertical(a_planes: &[u64], q_planes: &[u64]) -> usize {
     acc.count_ones() as usize
 }
 
+/// Char-row Hamming with early exit: `Some(d)` iff `d <= tau`, bailing
+/// out the moment the running mismatch count exceeds `tau` — the same
+/// incremental lower-bound discipline the word kernels use, for the raw
+/// character fallback (`L > 64` delta rows, where no vertical layout
+/// exists).
+#[inline]
+pub fn ham_chars_leq(a: &[u8], q: &[u8], tau: usize) -> Option<usize> {
+    debug_assert_eq!(a.len(), q.len());
+    let mut d = 0usize;
+    for (x, y) in a.iter().zip(q) {
+        if x != y {
+            d += 1;
+            if d > tau {
+                return None;
+            }
+        }
+    }
+    Some(d)
+}
+
 /// Vertical Hamming with early-exit threshold: returns `None` if the
 /// distance exceeds `tau`. For `b ∈ {4, 8}` the running popcount of the
 /// OR-accumulator — a lower bound on the final distance, since OR only
@@ -156,6 +176,24 @@ mod tests {
                         "b={b} i={i} j={j}"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn chars_leq_agrees_with_naive_for_every_tau() {
+        let mut rng = Rng::new(31);
+        for _ in 0..100 {
+            let l = 1 + rng.below_usize(100);
+            let a: Vec<u8> = (0..l).map(|_| rng.below(4) as u8).collect();
+            let q: Vec<u8> = (0..l).map(|_| rng.below(4) as u8).collect();
+            let d = ham_chars(&a, &q);
+            for tau in [0usize, d.saturating_sub(1), d, d + 1, l] {
+                assert_eq!(
+                    ham_chars_leq(&a, &q, tau),
+                    (d <= tau).then_some(d),
+                    "d={d} tau={tau}"
+                );
             }
         }
     }

@@ -29,6 +29,15 @@
 //!   candidate list: query-side setup (fast-path dispatch, one-word
 //!   query packing) is hoisted out of the loop, and each item still
 //!   costs only its own one-or-two cache lines.
+//! * [`PlaneStore::ham_range_leq_multi`] / [`PlaneStore::ham_many_leq_multi`]
+//!   — the block-execution twins: one pass evaluates every live query of
+//!   a block (at most [`MAX_BLOCK`]) against each item, staging the
+//!   item's plane words once and folding per query in registers.
+//!   Per-query early exit rides a live-query bitmask: a query whose sink
+//!   returns `None` is dropped from the mask and sees no further items;
+//!   the pass finishes the moment the mask empties. Verdicts are
+//!   bit-identical to the serial kernels at the same live thresholds,
+//!   fast paths included.
 //!
 //! **Contract** (shared by all three):
 //!
@@ -53,6 +62,59 @@
 
 use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
 use crate::util::HeapSize;
+
+/// Widest query block the multi-query kernels accept: the live set is a
+/// single `u64` bitmask, so a block never exceeds 64 queries.
+pub const MAX_BLOCK: usize = 64;
+
+/// Most planes the multi-query kernels stage per item in their stack
+/// buffer (`b <= 8` everywhere sketches exist; wider stores fall back to
+/// per-query streaming reads).
+const MAX_ITEM_PLANES: usize = 8;
+
+/// All-ones mask over the low `m` query slots (`m <= 64`).
+#[inline]
+pub fn live_mask(m: usize) -> u64 {
+    if m >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << m) - 1
+    }
+}
+
+/// Register-only verification fold over pre-fetched item plane words:
+/// `Some(d)` iff the masked Hamming distance `d <= tau`, with the same
+/// between-plane lower-bound early exit (and therefore bit-identical
+/// verdicts) as the per-item kernels. With `mask == u64::MAX` this is
+/// exactly the `width == 64` aligned path.
+#[inline(always)]
+fn fold_leq(item: &[u64], q: &[u64], mask: u64, tau: usize) -> Option<usize> {
+    debug_assert_eq!(item.len(), q.len());
+    let mut acc = 0u64;
+    for (k, (&w, &qk)) in item.iter().zip(q).enumerate() {
+        if k > 0 && (acc & mask).count_ones() as usize > tau {
+            return None;
+        }
+        acc |= w ^ qk;
+    }
+    let d = (acc & mask).count_ones() as usize;
+    (d <= tau).then_some(d)
+}
+
+/// One-word verification fold (`b·width == 64`, `width < 64`): XOR the
+/// item word against the pre-packed query word, then the halving lane
+/// fold — the multi-query twin of [`PlaneStore::ham_leq_word`].
+#[inline(always)]
+fn fold_word_leq(w: u64, q_word: u64, width: usize, mask: u64, tau: usize) -> Option<usize> {
+    let mut f = w ^ q_word;
+    let mut step = 32usize;
+    while step >= width {
+        f |= f >> step;
+        step >>= 1;
+    }
+    let d = (f & mask).count_ones() as usize;
+    (d <= tau).then_some(d)
+}
 
 /// `b` planes × `n` fields of `width` bits.
 #[derive(Debug, Clone)]
@@ -335,6 +397,253 @@ impl PlaneStore {
             }
         }
     }
+
+    /// Fetches all `b` plane words of the item starting at bit offset
+    /// `bit` into `out` (unmasked — the folds mask at popcount time,
+    /// exactly like the streaming per-item path).
+    #[inline(always)]
+    fn load_item_planes(&self, mut bit: usize, out: &mut [u64]) {
+        for slot in out.iter_mut() {
+            let idx = bit >> 6;
+            let o = bit & 63;
+            let w0 = self.words[idx];
+            let w1 = self.words[idx + 1]; // padding keeps this in-bounds
+            *slot = (w0 >> o) | ((w1 << (63 - o)) << 1);
+            bit += self.width;
+        }
+    }
+
+    /// Multi-query streaming range kernel: verifies items `lo..hi` in
+    /// ascending order against a *block* of `m = taus0.len()` queries in
+    /// one pass — each item's plane words are fetched once and folded
+    /// against every live query in registers, so the memory-traffic bill
+    /// is paid once per item instead of once per (item, query).
+    ///
+    /// `qs` holds the packed query planes back to back (`m·b` words,
+    /// query `j` at `qs[j·b .. (j+1)·b]`). `live0` selects the initially
+    /// live queries (bit `j` = query `j`; clamped to the low `m` bits).
+    ///
+    /// `sink(j, i, verdict)` is invoked once per (live query, item) pair
+    /// — queries in ascending `j` within each item — and returns query
+    /// `j`'s threshold for the next item, or `None` to drop query `j`
+    /// from the block's live mask (it sees no further items). The pass
+    /// finishes as soon as the mask empties. Verdicts are bit-identical
+    /// to the serial kernels at the same live threshold, fast paths
+    /// (`width == 64`, `b·width == 64`) included.
+    pub fn ham_range_leq_multi<F>(
+        &self,
+        lo: usize,
+        hi: usize,
+        qs: &[u64],
+        taus0: &[usize],
+        live0: u64,
+        mut sink: F,
+    ) where
+        F: FnMut(usize, usize, Option<usize>) -> Option<usize>,
+    {
+        assert!(lo <= hi && hi <= self.n, "range {lo}..{hi} out of 0..{}", self.n);
+        let b = self.b;
+        let m = taus0.len();
+        assert!(m <= MAX_BLOCK, "block of {m} queries exceeds MAX_BLOCK");
+        assert_eq!(qs.len(), m * b, "expected {m} x {b} packed query planes");
+        let mut taus = [0usize; MAX_BLOCK];
+        taus[..m].copy_from_slice(taus0);
+        let mut live = live0 & live_mask(m);
+        if live == 0 {
+            return;
+        }
+
+        if self.width == 64 {
+            for i in lo..hi {
+                let item = &self.words[i * b..(i + 1) * b];
+                let mut rem = live;
+                while rem != 0 {
+                    let j = rem.trailing_zeros() as usize;
+                    rem &= rem - 1;
+                    let verdict = fold_leq(item, &qs[j * b..(j + 1) * b], u64::MAX, taus[j]);
+                    match sink(j, i, verdict) {
+                        Some(t) => taus[j] = t,
+                        None => live &= !(1u64 << j),
+                    }
+                }
+                if live == 0 {
+                    return;
+                }
+            }
+            return;
+        }
+        let item_bits = b * self.width;
+        if item_bits == 64 {
+            // Hoisted per-query setup: one packed query word per slot.
+            let mut qw = [0u64; MAX_BLOCK];
+            let mut rem = live;
+            while rem != 0 {
+                let j = rem.trailing_zeros() as usize;
+                rem &= rem - 1;
+                qw[j] = self.pack_item_word(&qs[j * b..(j + 1) * b]);
+            }
+            for i in lo..hi {
+                let w = self.words[i];
+                let mut rem = live;
+                while rem != 0 {
+                    let j = rem.trailing_zeros() as usize;
+                    rem &= rem - 1;
+                    let verdict = fold_word_leq(w, qw[j], self.width, self.mask, taus[j]);
+                    match sink(j, i, verdict) {
+                        Some(t) => taus[j] = t,
+                        None => live &= !(1u64 << j),
+                    }
+                }
+                if live == 0 {
+                    return;
+                }
+            }
+            return;
+        }
+        // Generic path: rolling bit cursor, each item's planes staged
+        // once in a stack buffer and folded per live query.
+        let mut bit = lo * item_bits;
+        if b <= MAX_ITEM_PLANES {
+            let mut item = [0u64; MAX_ITEM_PLANES];
+            for i in lo..hi {
+                self.load_item_planes(bit, &mut item[..b]);
+                bit += item_bits;
+                let mut rem = live;
+                while rem != 0 {
+                    let j = rem.trailing_zeros() as usize;
+                    rem &= rem - 1;
+                    let verdict =
+                        fold_leq(&item[..b], &qs[j * b..(j + 1) * b], self.mask, taus[j]);
+                    match sink(j, i, verdict) {
+                        Some(t) => taus[j] = t,
+                        None => live &= !(1u64 << j),
+                    }
+                }
+                if live == 0 {
+                    return;
+                }
+            }
+        } else {
+            // b > 8 never occurs for sketches; keep correctness anyway
+            // with per-query streaming reads (no shared staging).
+            for i in lo..hi {
+                let mut rem = live;
+                while rem != 0 {
+                    let j = rem.trailing_zeros() as usize;
+                    rem &= rem - 1;
+                    let verdict =
+                        self.ham_leq_stream(bit, &qs[j * b..(j + 1) * b], taus[j]);
+                    match sink(j, i, verdict) {
+                        Some(t) => taus[j] = t,
+                        None => live &= !(1u64 << j),
+                    }
+                }
+                bit += item_bits;
+                if live == 0 {
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Multi-query batched candidate kernel: verifies the (possibly
+    /// duplicate-heavy) id list in order against a block of queries,
+    /// fetching each candidate's plane words once. Same block contract
+    /// as [`Self::ham_range_leq_multi`] — `sink(j, id, verdict)` with
+    /// per-query live thresholds and the drop-on-`None` live mask.
+    pub fn ham_many_leq_multi<F>(
+        &self,
+        ids: &[u32],
+        qs: &[u64],
+        taus0: &[usize],
+        live0: u64,
+        mut sink: F,
+    ) where
+        F: FnMut(usize, u32, Option<usize>) -> Option<usize>,
+    {
+        debug_assert!(ids.iter().all(|&id| (id as usize) < self.n));
+        let b = self.b;
+        let m = taus0.len();
+        assert!(m <= MAX_BLOCK, "block of {m} queries exceeds MAX_BLOCK");
+        assert_eq!(qs.len(), m * b, "expected {m} x {b} packed query planes");
+        let mut taus = [0usize; MAX_BLOCK];
+        taus[..m].copy_from_slice(taus0);
+        let mut live = live0 & live_mask(m);
+        if live == 0 {
+            return;
+        }
+
+        if self.width == 64 {
+            for &id in ids {
+                let item = &self.words[id as usize * b..(id as usize + 1) * b];
+                let mut rem = live;
+                while rem != 0 {
+                    let j = rem.trailing_zeros() as usize;
+                    rem &= rem - 1;
+                    let verdict = fold_leq(item, &qs[j * b..(j + 1) * b], u64::MAX, taus[j]);
+                    match sink(j, id, verdict) {
+                        Some(t) => taus[j] = t,
+                        None => live &= !(1u64 << j),
+                    }
+                }
+                if live == 0 {
+                    return;
+                }
+            }
+            return;
+        }
+        let item_bits = b * self.width;
+        if item_bits == 64 {
+            let mut qw = [0u64; MAX_BLOCK];
+            let mut rem = live;
+            while rem != 0 {
+                let j = rem.trailing_zeros() as usize;
+                rem &= rem - 1;
+                qw[j] = self.pack_item_word(&qs[j * b..(j + 1) * b]);
+            }
+            for &id in ids {
+                let w = self.words[id as usize];
+                let mut rem = live;
+                while rem != 0 {
+                    let j = rem.trailing_zeros() as usize;
+                    rem &= rem - 1;
+                    let verdict = fold_word_leq(w, qw[j], self.width, self.mask, taus[j]);
+                    match sink(j, id, verdict) {
+                        Some(t) => taus[j] = t,
+                        None => live &= !(1u64 << j),
+                    }
+                }
+                if live == 0 {
+                    return;
+                }
+            }
+            return;
+        }
+        let mut item = [0u64; MAX_ITEM_PLANES];
+        for &id in ids {
+            let bit = id as usize * item_bits;
+            let mut rem = live;
+            if b <= MAX_ITEM_PLANES {
+                self.load_item_planes(bit, &mut item[..b]);
+            }
+            while rem != 0 {
+                let j = rem.trailing_zeros() as usize;
+                rem &= rem - 1;
+                let verdict = if b <= MAX_ITEM_PLANES {
+                    fold_leq(&item[..b], &qs[j * b..(j + 1) * b], self.mask, taus[j])
+                } else {
+                    self.ham_leq_stream(bit, &qs[j * b..(j + 1) * b], taus[j])
+                };
+                match sink(j, id, verdict) {
+                    Some(t) => taus[j] = t,
+                    None => live &= !(1u64 << j),
+                }
+            }
+            if live == 0 {
+                return;
+            }
+        }
+    }
 }
 
 /// Streaming verification cursor over a contiguous item range, created
@@ -606,6 +915,202 @@ mod tests {
             });
             assert_eq!(ok, n);
         }
+    }
+
+    #[test]
+    fn multi_range_kernel_matches_serial_per_query() {
+        let mut rng = Rng::new(21);
+        for &(b, width) in KERNEL_SHAPES {
+            let n = 130;
+            let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+            let vals: Vec<u64> = (0..b * n).map(|_| rng.next_u64() & mask).collect();
+            let ps = PlaneStore::from_fn(b, width, n, |k, i| vals[k * n + i]);
+            let m = 5usize;
+            let qs: Vec<u64> = (0..m * b).map(|_| rng.next_u64() & mask).collect();
+            let taus: Vec<usize> = (0..m).map(|j| j * width / 4).collect();
+            let (lo, hi) = (n / 6, n - n / 9);
+
+            // Serial oracle: one pass per query, verdicts recorded.
+            let mut expect: Vec<Vec<Option<usize>>> = Vec::new();
+            for j in 0..m {
+                let mut row = Vec::new();
+                ps.ham_range_leq(lo, hi, &qs[j * b..(j + 1) * b], taus[j], |_, v| {
+                    row.push(v);
+                    Some(taus[j])
+                });
+                expect.push(row);
+            }
+
+            let mut got: Vec<Vec<Option<usize>>> = vec![Vec::new(); m];
+            let mut expect_i = lo;
+            let mut expect_j = 0usize;
+            ps.ham_range_leq_multi(lo, hi, &qs, &taus, u64::MAX, |j, i, v| {
+                // queries ascend within each item, items ascend
+                assert_eq!(i, expect_i, "b={b} w={width}");
+                assert_eq!(j, expect_j, "b={b} w={width}");
+                expect_j += 1;
+                if expect_j == m {
+                    expect_j = 0;
+                    expect_i += 1;
+                }
+                got[j].push(v);
+                Some(taus[j])
+            });
+            assert_eq!(expect_i, hi, "b={b} w={width}: block pass must cover the range");
+            assert_eq!(got, expect, "b={b} w={width}");
+        }
+    }
+
+    #[test]
+    fn multi_batch_kernel_matches_serial_per_query() {
+        let mut rng = Rng::new(22);
+        for &(b, width) in KERNEL_SHAPES {
+            let n = 90;
+            let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+            let vals: Vec<u64> = (0..b * n).map(|_| rng.next_u64() & mask).collect();
+            let ps = PlaneStore::from_fn(b, width, n, |k, i| vals[k * n + i]);
+            let m = 4usize;
+            let qs: Vec<u64> = (0..m * b).map(|_| rng.next_u64() & mask).collect();
+            let taus: Vec<usize> = (0..m).map(|j| (j + 1) * width / 3).collect();
+            // duplicate-heavy, unsorted candidate list
+            let ids: Vec<u32> = (0..2 * n).map(|_| rng.below(n as u64) as u32).collect();
+
+            let mut expect: Vec<Vec<Option<usize>>> = Vec::new();
+            for j in 0..m {
+                let mut row = Vec::new();
+                ps.ham_many_leq(&ids, &qs[j * b..(j + 1) * b], taus[j], |_, v| {
+                    row.push(v);
+                    Some(taus[j])
+                });
+                expect.push(row);
+            }
+
+            let mut got: Vec<Vec<Option<usize>>> = vec![Vec::new(); m];
+            let mut seen = 0usize;
+            ps.ham_many_leq_multi(&ids, &qs, &taus, u64::MAX, |j, id, v| {
+                assert_eq!(id, ids[seen / m], "b={b} w={width}");
+                seen += 1;
+                got[j].push(v);
+                Some(taus[j])
+            });
+            assert_eq!(seen, m * ids.len());
+            assert_eq!(got, expect, "b={b} w={width}");
+        }
+    }
+
+    #[test]
+    fn multi_kernels_track_live_taus_drop_queries_and_early_stop() {
+        let mut rng = Rng::new(23);
+        for &(b, width) in &[(2usize, 16usize), (4, 16), (8, 8), (2, 21)] {
+            let n = 80;
+            let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+            let vals: Vec<u64> = (0..b * n).map(|_| rng.next_u64() & mask).collect();
+            let ps = PlaneStore::from_fn(b, width, n, |k, i| vals[k * n + i]);
+            let m = 3usize;
+            let qs: Vec<u64> = (0..m * b).map(|_| rng.next_u64() & mask).collect();
+
+            // Per-query live tau schedules: query j's tau shrinks every
+            // (5 + j) items; verdicts must match serial under the same
+            // schedule.
+            let taus0 = vec![width; m];
+            let mut expect: Vec<Vec<Option<usize>>> = Vec::new();
+            for j in 0..m {
+                let mut tau = width;
+                let mut row = Vec::new();
+                let mut step = 0usize;
+                ps.ham_range_leq(0, n, &qs[j * b..(j + 1) * b], tau, |_, v| {
+                    row.push(v);
+                    step += 1;
+                    if step % (5 + j) == 0 {
+                        tau = tau.saturating_sub(2);
+                    }
+                    Some(tau)
+                });
+                expect.push(row);
+            }
+            let mut live_taus = vec![width; m];
+            let mut steps = vec![0usize; m];
+            let mut got: Vec<Vec<Option<usize>>> = vec![Vec::new(); m];
+            ps.ham_range_leq_multi(0, n, &qs, &taus0, u64::MAX, |j, _i, v| {
+                got[j].push(v);
+                steps[j] += 1;
+                if steps[j] % (5 + j) == 0 {
+                    live_taus[j] = live_taus[j].saturating_sub(2);
+                }
+                Some(live_taus[j])
+            });
+            assert_eq!(got, expect, "b={b} w={width} live-tau schedule");
+
+            // Dropping: query j sees exactly (j+1)*7 items then leaves
+            // the mask; once all are dropped the pass stops entirely.
+            let mut counts = vec![0usize; m];
+            ps.ham_range_leq_multi(0, n, &qs, &taus0, u64::MAX, |j, _i, _v| {
+                counts[j] += 1;
+                (counts[j] < (j + 1) * 7).then_some(width)
+            });
+            for (j, &c) in counts.iter().enumerate() {
+                assert_eq!(c, (j + 1) * 7, "b={b} w={width} query {j} drop point");
+            }
+
+            // live0 subset: excluded queries get zero callbacks; the
+            // included one matches a constant-tau serial pass exactly.
+            let mut expect_j1: Vec<Option<usize>> = Vec::new();
+            ps.ham_range_leq(0, n, &qs[b..2 * b], width, |_, v| {
+                expect_j1.push(v);
+                Some(width)
+            });
+            let mut got_j1: Vec<Option<usize>> = Vec::new();
+            ps.ham_range_leq_multi(0, n, &qs, &taus0, 0b010, |j, _i, v| {
+                assert_eq!(j, 1, "only query 1 is live");
+                got_j1.push(v);
+                Some(width)
+            });
+            assert_eq!(got_j1, expect_j1, "b={b} w={width}");
+
+            // empty mask: no callbacks at all.
+            ps.ham_range_leq_multi(0, n, &qs, &taus0, 0, |_, _, _| {
+                panic!("no query is live");
+            });
+            ps.ham_many_leq_multi(&[0, 1, 2], &qs, &taus0, 0, |_, _, _| {
+                panic!("no query is live");
+            });
+        }
+    }
+
+    #[test]
+    fn multi_batch_kernel_drops_and_subsets() {
+        let mut rng = Rng::new(24);
+        let (b, width, n) = (4usize, 16usize, 60usize);
+        let mask = (1u64 << width) - 1;
+        let vals: Vec<u64> = (0..b * n).map(|_| rng.next_u64() & mask).collect();
+        let ps = PlaneStore::from_fn(b, width, n, |k, i| vals[k * n + i]);
+        let m = 3usize;
+        let qs: Vec<u64> = (0..m * b).map(|_| rng.next_u64() & mask).collect();
+        let taus = vec![width / 2; m];
+        let ids: Vec<u32> = (0..n as u32).collect();
+
+        let mut counts = vec![0usize; m];
+        ps.ham_many_leq_multi(&ids, &qs, &taus, u64::MAX, |j, _id, _v| {
+            counts[j] += 1;
+            (counts[j] < 4 + j).then_some(taus[j])
+        });
+        for (j, &c) in counts.iter().enumerate() {
+            assert_eq!(c, 4 + j, "query {j} drop point");
+        }
+
+        // subset mask: only query 2 runs, and matches serial.
+        let mut expect = Vec::new();
+        ps.ham_many_leq(&ids, &qs[2 * b..3 * b], taus[2], |_, v| {
+            expect.push(v);
+            Some(taus[2])
+        });
+        let mut got = Vec::new();
+        ps.ham_many_leq_multi(&ids, &qs, &taus, 0b100, |j, _id, v| {
+            assert_eq!(j, 2);
+            got.push(v);
+            Some(taus[2])
+        });
+        assert_eq!(got, expect);
     }
 
     #[test]

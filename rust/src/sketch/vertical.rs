@@ -59,8 +59,15 @@ impl VerticalSet {
     /// Packs a raw query row into plane words, reusing the caller's buffer
     /// (the per-query scratch on the verification hot path).
     pub fn pack_query_into(&self, q: &[u8], out: &mut Vec<u64>) {
-        assert_eq!(q.len(), self.l());
         out.clear();
+        self.pack_query_append(q, out);
+    }
+
+    /// Packs a raw query row into plane words *appended* to `out` —
+    /// block execution packs a whole query block back to back into one
+    /// flat `m·b` buffer this way.
+    pub fn pack_query_append(&self, q: &[u8], out: &mut Vec<u64>) {
+        assert_eq!(q.len(), self.l());
         for k in 0..self.b() {
             let mut field = 0u64;
             for (p, &c) in q.iter().enumerate() {
@@ -107,6 +114,39 @@ impl VerticalSet {
         F: FnMut(u32, Option<usize>) -> Option<usize>,
     {
         self.store.ham_many_leq(ids, q_planes, tau0, sink)
+    }
+
+    /// Multi-query streaming range kernel (block execution) — see
+    /// [`PlaneStore::ham_range_leq_multi`] for the block contract.
+    #[inline]
+    pub fn ham_range_leq_multi<F>(
+        &self,
+        lo: usize,
+        hi: usize,
+        qs: &[u64],
+        taus0: &[usize],
+        live0: u64,
+        sink: F,
+    ) where
+        F: FnMut(usize, usize, Option<usize>) -> Option<usize>,
+    {
+        self.store.ham_range_leq_multi(lo, hi, qs, taus0, live0, sink)
+    }
+
+    /// Multi-query batched candidate kernel (block execution) — see
+    /// [`PlaneStore::ham_many_leq_multi`] for the block contract.
+    #[inline]
+    pub fn ham_many_leq_multi<F>(
+        &self,
+        ids: &[u32],
+        qs: &[u64],
+        taus0: &[usize],
+        live0: u64,
+        sink: F,
+    ) where
+        F: FnMut(usize, u32, Option<usize>) -> Option<usize>,
+    {
+        self.store.ham_many_leq_multi(ids, qs, taus0, live0, sink)
     }
 
     /// Full linear scan: ids of all sketches within `tau` of `q`.

@@ -248,6 +248,10 @@ impl SketchTrie for BstTrie {
         search::run(self, q, ctx, c);
     }
 
+    fn run_block(&self, qs: &[&[u8]], ctx: &mut QueryCtx, bc: &mut crate::query::BlockCollector) {
+        search::run_block(self, qs, ctx, bc);
+    }
+
     fn heap_bytes(&self) -> usize {
         self.middle.iter().map(|m| m.heap_bytes()).sum::<usize>()
             + self.sparse.heap_bytes()

@@ -21,7 +21,7 @@
 
 use super::dense::child0;
 use super::BstTrie;
-use crate::query::{Collector, QueryCtx};
+use crate::query::{live_mask, BlockCollector, Collector, QueryCtx, MAX_BLOCK};
 
 struct Searcher<'a, C: Collector> {
     t: &'a BstTrie,
@@ -36,6 +36,207 @@ pub fn run<C: Collector>(t: &BstTrie, q: &[u8], ctx: &mut QueryCtx, c: &mut C) {
     t.sparse.pack_query_into(&q[t.ls..], &mut ctx.q_planes);
     let mut s = Searcher { t, q, ctx, c };
     s.descend(0, 0, 0);
+}
+
+/// Blocked entry point (`SketchTrie::run_block`): one DFS serves the
+/// whole query block. A node is descended if *any* live query admits it;
+/// every per-query event (visit / prune / emit, and the live `tau`
+/// re-reads driving the pruning decisions) is routed through the
+/// [`BlockCollector`], so each member query observes exactly the event
+/// sequence its own serial traversal would produce — query `j`'s
+/// decisions depend only on `j`'s own collector state, and children are
+/// enumerated in the same order as in [`run`].
+pub fn run_block(t: &BstTrie, qs: &[&[u8]], ctx: &mut QueryCtx, bc: &mut BlockCollector) {
+    let m = bc.len();
+    assert_eq!(qs.len(), m, "query block / collector slot mismatch");
+    assert!(m <= MAX_BLOCK);
+    for q in qs {
+        assert_eq!(q.len(), t.l);
+    }
+    ctx.ensure_kids(1usize << t.b, t.middle.len());
+    ctx.block_q.clear();
+    for q in qs {
+        t.sparse.pack_query_append(&q[t.ls..], &mut ctx.block_q);
+    }
+    let mut s = BlockSearcher { t, qs, ctx, bc };
+    let dists = [0usize; MAX_BLOCK];
+    s.descend(0, 0, &dists, live_mask(m));
+}
+
+struct BlockSearcher<'a, 'c, 'd> {
+    t: &'a BstTrie,
+    qs: &'a [&'a [u8]],
+    ctx: &'a mut QueryCtx,
+    bc: &'a mut BlockCollector<'c, 'd>,
+}
+
+impl BlockSearcher<'_, '_, '_> {
+    fn descend(&mut self, level: usize, u: usize, dists: &[usize; MAX_BLOCK], live_in: u64) {
+        // Node-entry accounting, exactly as each serial traversal would
+        // do on its own: a live query whose running distance exceeds its
+        // (possibly tightened) threshold prunes here; the rest visit.
+        let mut live = 0u64;
+        let mut taus = [0usize; MAX_BLOCK];
+        let mut rem = live_in;
+        while rem != 0 {
+            let j = rem.trailing_zeros() as usize;
+            rem &= rem - 1;
+            let tj = self.bc.tau(j);
+            if dists[j] > tj {
+                self.bc.on_prune(j);
+            } else {
+                self.bc.on_visit(j);
+                taus[j] = tj;
+                live |= 1 << j;
+            }
+        }
+        if live == 0 {
+            return;
+        }
+        let t = self.t;
+        if level == t.ls {
+            self.scan_sparse(u, dists, live);
+            return;
+        }
+        if level < t.lm {
+            // Dense layer: implicit complete 2^b-ary node. Serial descends
+            // every child when the budget allows (the child's own entry
+            // check records prunes), and only the query-matching child
+            // when `dist == tau` — per query, the same children are taken
+            // here.
+            let base = child0(u, t.b);
+            let sigma = 1usize << t.b;
+            for ch in 0..sigma {
+                let mut nd = [0usize; MAX_BLOCK];
+                let mut nl = 0u64;
+                let mut r = live;
+                while r != 0 {
+                    let j = r.trailing_zeros() as usize;
+                    r &= r - 1;
+                    let qc = self.qs[j][level] as usize;
+                    if dists[j] == taus[j] {
+                        if ch == qc {
+                            nd[j] = dists[j];
+                            nl |= 1 << j;
+                        }
+                    } else {
+                        nd[j] = dists[j] + usize::from(ch != qc);
+                        nl |= 1 << j;
+                    }
+                }
+                if nl != 0 {
+                    self.descend(level + 1, base + ch, &nd, nl);
+                }
+            }
+        } else {
+            // Middle layer: enumerate the children ONCE for the whole
+            // block into this level's segment of the shared fan-out
+            // buffer, then filter per query. Serial prunes over-budget
+            // children at the parent (live tau re-read), and takes only
+            // the label-matching child when the budget is exhausted — both
+            // reproduced per query below.
+            let ml = &t.middle[level - t.lm];
+            let off = self.ctx.kid_off(level - t.lm);
+            let mut n_kids = 0usize;
+            {
+                let kids = &mut self.ctx.kids;
+                ml.children(u, |child, ch| {
+                    kids[off + n_kids] = (child as u32, ch);
+                    n_kids += 1;
+                });
+            }
+            for i in 0..n_kids {
+                let (child, ch) = self.ctx.kids[off + i];
+                let mut nd = [0usize; MAX_BLOCK];
+                let mut nl = 0u64;
+                let mut r = live;
+                while r != 0 {
+                    let j = r.trailing_zeros() as usize;
+                    r &= r - 1;
+                    let qc = self.qs[j][level];
+                    if dists[j] == taus[j] {
+                        if ch == qc {
+                            nd[j] = dists[j];
+                            nl |= 1 << j;
+                        }
+                    } else {
+                        let d = dists[j] + usize::from(ch != qc);
+                        if d <= self.bc.tau(j) {
+                            nd[j] = d;
+                            nl |= 1 << j;
+                        } else {
+                            self.bc.on_prune(j);
+                        }
+                    }
+                }
+                if nl != 0 {
+                    self.descend(level + 1, child as usize, &nd, nl);
+                }
+            }
+        }
+    }
+
+    /// Blocked sparse-node scan: one multi-query kernel call verifies
+    /// every live query against the node's contiguous leaves. Per-query
+    /// accounting mirrors [`Searcher::scan_sparse`] exactly, including
+    /// the visit-then-prune of the leaf at which a tightening top-k
+    /// threshold drops below the node's running distance.
+    fn scan_sparse(&mut self, u: usize, dists: &[usize; MAX_BLOCK], live: u64) {
+        let t = self.t;
+        let (lo, hi) = t.sparse.leaf_range(u);
+        let m = self.bc.len();
+        let mut budgets = [0usize; MAX_BLOCK];
+        let mut rem = live;
+        while rem != 0 {
+            let j = rem.trailing_zeros() as usize;
+            rem &= rem - 1;
+            // Entry accounting guaranteed dists[j] <= tau(j), and `j` has
+            // not emitted since, so this cannot underflow.
+            budgets[j] = self.bc.tau(j) - dists[j];
+        }
+        let b0 = budgets;
+        let mut vis = [0u32; MAX_BLOCK];
+        let mut prn = [0u32; MAX_BLOCK];
+        let bc = &mut *self.bc;
+        let qs_planes = &self.ctx.block_q;
+        t.sparse
+            .suffix_scan_multi(lo, hi, qs_planes, &b0[..m], live, |j, v, verdict| {
+                vis[j] += 1;
+                match verdict {
+                    Some(sd) => {
+                        bc.emit(j, t.postings_of(v), dists[j] + sd);
+                        match bc.tau(j).checked_sub(dists[j]) {
+                            Some(nb) => {
+                                budgets[j] = nb;
+                                Some(nb)
+                            }
+                            None => {
+                                // Threshold tightened below the node's
+                                // running distance: serial visits and
+                                // prunes the next leaf, then abandons
+                                // the rest of the range.
+                                if v + 1 < hi {
+                                    vis[j] += 1;
+                                    prn[j] += 1;
+                                }
+                                None
+                            }
+                        }
+                    }
+                    None => {
+                        prn[j] += 1;
+                        Some(budgets[j])
+                    }
+                }
+            });
+        let mut rem = live;
+        while rem != 0 {
+            let j = rem.trailing_zeros() as usize;
+            rem &= rem - 1;
+            bc.on_visit_many(j, vis[j] as usize);
+            bc.on_prune_many(j, prn[j] as usize);
+        }
+    }
 }
 
 impl<C: Collector> Searcher<'_, C> {
@@ -227,6 +428,60 @@ mod tests {
             assert!(stats.visited > 0);
             assert_eq!(out.len(), ids.len());
         }
+    }
+
+    #[test]
+    fn blocked_descent_matches_serial_ids_stats_and_topk() {
+        let (bst, rows, q0) = figure1();
+        // A mixed block: ids at different taus, a count and a top-k — one
+        // descent must reproduce every query's serial results AND stats.
+        let qs_owned: Vec<Vec<u8>> = vec![q0.clone(), rows[7].clone(), rows[9].clone(), q0];
+        let taus = [1usize, 2, 0, 5];
+
+        // Serial oracle.
+        let mut ctx = QueryCtx::new();
+        let mut ser_ids: Vec<Vec<u32>> = Vec::new();
+        let mut ser_stats = Vec::new();
+        for (q, &tau) in qs_owned.iter().zip(&taus) {
+            let mut out = Vec::new();
+            let mut obs = StatsObserver::new(CollectIds::new(tau, &mut out));
+            bst.run(q, &mut ctx, &mut obs);
+            ser_stats.push(obs.stats);
+            ser_ids.push(out);
+        }
+        let mut ser_topk = TopK::new(3, qs_owned[0].len());
+        bst.run(&qs_owned[0], &mut ctx, &mut ser_topk);
+        let ser_topk = ser_topk.finish();
+
+        // Blocked run: 4 id-collectors + 1 top-k in one block.
+        let mut outs: Vec<Vec<u32>> = vec![Vec::new(); 4];
+        let mut obs: Vec<StatsObserver<CollectIds>> = outs
+            .iter_mut()
+            .zip(&taus)
+            .map(|(o, &tau)| StatsObserver::new(CollectIds::new(tau, o)))
+            .collect();
+        let mut topk = TopK::new(3, qs_owned[0].len());
+        {
+            let mut slots: Vec<&mut dyn crate::query::Collector> =
+                obs.iter_mut().map(|o| o as &mut dyn crate::query::Collector).collect();
+            slots.push(&mut topk);
+            let mut bc = crate::query::BlockCollector::new(&mut slots);
+            let qs: Vec<&[u8]> = qs_owned
+                .iter()
+                .map(|q| q.as_slice())
+                .chain(std::iter::once(qs_owned[0].as_slice()))
+                .collect();
+            run_block(&bst, &qs, &mut ctx, &mut bc);
+            assert!(bc.work(0) > 0, "attribution weights must be populated");
+        }
+        for (j, o) in obs.iter().enumerate() {
+            assert_eq!(o.stats, ser_stats[j], "stats mismatch for query {j}");
+        }
+        drop(obs);
+        for (j, out) in outs.iter().enumerate() {
+            assert_eq!(out, &ser_ids[j], "ids mismatch for query {j}");
+        }
+        assert_eq!(topk.finish(), ser_topk, "top-k mismatch");
     }
 
     #[test]

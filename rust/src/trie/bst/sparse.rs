@@ -92,8 +92,14 @@ impl SparseLayer {
     /// Packs the query suffix `q[ℓ_s..L)` into plane fields, reusing the
     /// caller's buffer (the per-query scratch in `QueryCtx`).
     pub fn pack_query_into(&self, q_suffix: &[u8], out: &mut Vec<u64>) {
-        debug_assert_eq!(q_suffix.len(), self.s);
         out.clear();
+        self.pack_query_append(q_suffix, out);
+    }
+
+    /// Packs a query suffix *appended* to `out` — block execution packs a
+    /// whole block's suffixes back to back into one flat `m·b` buffer.
+    pub fn pack_query_append(&self, q_suffix: &[u8], out: &mut Vec<u64>) {
+        debug_assert_eq!(q_suffix.len(), self.s);
         for k in 0..self.b {
             let mut field = 0u64;
             for (pos, &c) in q_suffix.iter().enumerate() {
@@ -132,6 +138,25 @@ impl SparseLayer {
         q_planes: &'a [u64],
     ) -> crate::sketch::plane_store::RangeHam<'a> {
         self.planes.range_scan(lo, hi, q_planes)
+    }
+
+    /// Multi-query suffix verification over leaves `[lo, hi)` — the
+    /// blocked-traversal counterpart of [`Self::suffix_scan`]: one pass
+    /// over the plane words evaluates every live query's suffix budget.
+    /// See [`PlaneStore::ham_range_leq_multi`] for the block contract.
+    #[inline]
+    pub fn suffix_scan_multi<F>(
+        &self,
+        lo: usize,
+        hi: usize,
+        qs: &[u64],
+        taus0: &[usize],
+        live0: u64,
+        sink: F,
+    ) where
+        F: FnMut(usize, usize, Option<usize>) -> Option<usize>,
+    {
+        self.planes.ham_range_leq_multi(lo, hi, qs, taus0, live0, sink)
     }
 
     /// Restores the raw suffix characters of leaf `v` (diagnostics/tests).

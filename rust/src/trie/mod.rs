@@ -31,7 +31,7 @@ pub mod pointer;
 
 pub use builder::SortedSketches;
 
-pub use crate::query::{Collector, QueryCtx, TraversalStats};
+pub use crate::query::{BlockCollector, Collector, QueryCtx, TraversalStats};
 
 use crate::store::{ensure, StoreError};
 
@@ -74,6 +74,23 @@ pub trait SketchTrie {
     fn run<C: Collector>(&self, q: &[u8], ctx: &mut QueryCtx, c: &mut C)
     where
         Self: Sized;
+
+    /// Blocked traversal: runs a whole query block (slot `j` of `bc` is
+    /// query `j`'s collector) through the structure. Results and
+    /// per-query stats are identical to `run` per member query; tries
+    /// with a native blocked path descend once for the whole block. The
+    /// default falls back to one serial traversal per query, routed
+    /// through the block collector so work accounting stays uniform.
+    fn run_block(&self, qs: &[&[u8]], ctx: &mut QueryCtx, bc: &mut BlockCollector)
+    where
+        Self: Sized,
+    {
+        assert_eq!(qs.len(), bc.len(), "query block / collector slot mismatch");
+        for (j, q) in qs.iter().enumerate() {
+            let mut slot = crate::query::SlotRef::new(bc, j);
+            self.run(q, ctx, &mut slot);
+        }
+    }
 
     /// Appends all ids `i` with `ham(s_i, q) <= tau` to `out`
     /// (ids appear in lexicographic sketch order, not sorted by id).

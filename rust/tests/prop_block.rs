@@ -1,0 +1,218 @@
+//! Property suite for blocked execution (PR 6): the blocked batch path
+//! (`Engine::run_batch_blocked`) must be result-identical to
+//! one-at-a-time execution across b ∈ {1, 2, 4, 8}, mixed-τ batches,
+//! all three query modes and dynamic shards (post-insert / delete /
+//! merge state, so the blocked path crosses base, sealed and active
+//! delta segments plus tombstones).
+//!
+//! Also the save-under-writes epoch fence: a snapshot taken while
+//! insert threads are hammering the engine must be *exactly*
+//! consistent — it loads cleanly and answers queries identically to a
+//! from-scratch oracle over precisely the first `n` rows of the
+//! serialized write stream.
+
+use bst::coordinator::engine::{Engine, QueryMode, QueryResult, ShardIndexKind};
+use bst::sketch::hamming::ham_chars;
+use bst::sketch::SketchSet;
+use bst::trie::bst::BstConfig;
+use bst::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Shapes exercising every alphabet width.
+const SHAPES: &[(usize, usize)] = &[(1, 16), (2, 12), (4, 8), (8, 6)];
+
+/// Widths swept against the serial baseline (1 delegates to serial; 64
+/// is the kernel live-mask cap, so every batch fits in one block).
+const WIDTHS: &[usize] = &[2, 4, 8, 64];
+
+fn random_row(rng: &mut Rng, b: usize, l: usize, centers: &[Vec<u8>]) -> Vec<u8> {
+    let mut row = centers[rng.below_usize(centers.len())].clone();
+    for _ in 0..rng.below_usize(3) {
+        let p = rng.below_usize(l);
+        row[p] = rng.below(1 << b) as u8;
+    }
+    row
+}
+
+/// Id order inside `Ids` results is shard-arrival order (racy); sort
+/// before comparing. Count and top-k are exact as-is — top-k order by
+/// `(dist, id)` is part of the blocked-execution contract.
+fn canon(r: QueryResult) -> QueryResult {
+    match r {
+        QueryResult::Ids(mut v) => {
+            v.sort_unstable();
+            QueryResult::Ids(v)
+        }
+        other => other,
+    }
+}
+
+#[test]
+fn blocked_execution_matches_serial_across_shapes_and_widths() {
+    for &(b, l) in SHAPES {
+        let mut rng = Rng::new((0xB10C + b * 257 + l) as u64);
+        let centers: Vec<Vec<u8>> = (0..6)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect();
+        let initial: Vec<Vec<u8>> = (0..220)
+            .map(|_| random_row(&mut rng, b, l, &centers))
+            .collect();
+        let set = SketchSet::from_rows(b, l, &initial);
+        let engine = Engine::build(&set, 3, &ShardIndexKind::Bst(BstConfig::default()));
+        engine.set_merge_threshold(usize::MAX);
+
+        // Dynamic shard state: a merged delta, tombstones, and a live
+        // active delta — the blocked scan must cross all of them.
+        let grown: Vec<Vec<u8>> = (0..60).map(|_| random_row(&mut rng, b, l, &centers)).collect();
+        engine.insert_batch(&grown).unwrap();
+        for id in [3u32, 100, 221, 250, 279] {
+            assert!(engine.delete(id), "id {id} exists and is alive");
+        }
+        engine.merge();
+        let tail: Vec<Vec<u8>> = (0..25).map(|_| random_row(&mut rng, b, l, &centers)).collect();
+        engine.insert_batch(&tail).unwrap();
+
+        // Mixed batch: every mode, mixed taus (grouping must split and
+        // re-scatter to request order), queries biased toward real rows.
+        let batch: Vec<(Arc<[u8]>, usize, QueryMode)> = (0..24)
+            .map(|i| {
+                let q: Vec<u8> = if i % 2 == 0 {
+                    initial[rng.below_usize(initial.len())].clone()
+                } else {
+                    (0..l).map(|_| rng.below(1 << b) as u8).collect()
+                };
+                let tau = [0usize, 1, 2, 4][i % 4];
+                let mode = match i % 3 {
+                    0 => QueryMode::Ids,
+                    1 => QueryMode::Count,
+                    _ => QueryMode::TopK(1 + i % 5),
+                };
+                (Arc::from(q.as_slice()), tau, mode)
+            })
+            .collect();
+
+        let serial: Vec<QueryResult> = engine.run_batch(&batch).into_iter().map(canon).collect();
+        for &width in WIDTHS {
+            let blocked: Vec<QueryResult> = engine
+                .run_batch_blocked(&batch, width)
+                .into_iter()
+                .map(canon)
+                .collect();
+            assert_eq!(blocked, serial, "b={b} width={width}");
+        }
+    }
+}
+
+/// Satellite: the save-under-writes fence. Writer threads insert
+/// batches while the main thread snapshots repeatedly; every snapshot
+/// must load cleanly (no id-accounting corruption) and answer exactly
+/// like an oracle over the first `loaded.n()` rows of the write stream
+/// (ids are assigned and enqueued under the same lock the save fences
+/// on, so id order *is* stream order).
+#[test]
+fn save_under_concurrent_inserts_is_exactly_consistent() {
+    let (b, l) = (2usize, 12usize);
+    let mut rng = Rng::new(0xFE11CE);
+    let centers: Vec<Vec<u8>> = (0..6)
+        .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+        .collect();
+    let n0 = 150usize;
+    let initial: Vec<Vec<u8>> = (0..n0).map(|_| random_row(&mut rng, b, l, &centers)).collect();
+    let set = SketchSet::from_rows(b, l, &initial);
+    let engine = Arc::new(Engine::build(&set, 3, &ShardIndexKind::Bst(BstConfig::default())));
+    engine.set_merge_threshold(40); // background merges race the saves too
+
+    let dir = std::env::temp_dir().join("bst_prop_block");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let writers: Vec<_> = (0..3u64)
+        .map(|t| {
+            let eng = Arc::clone(&engine);
+            let mut trng = Rng::new(0x5EED ^ (t * 0x9E37_79B9));
+            let centers = centers.clone();
+            std::thread::spawn(move || {
+                let mut placed: Vec<(u32, Vec<Vec<u8>>)> = Vec::new();
+                for _ in 0..10 {
+                    let m = 1 + trng.below_usize(12);
+                    let batch: Vec<Vec<u8>> = (0..m)
+                        .map(|_| random_row(&mut trng, b, l, &centers))
+                        .collect();
+                    let range = eng.insert_batch(&batch).unwrap();
+                    placed.push((range.start, batch));
+                }
+                placed
+            })
+        })
+        .collect();
+
+    let mut snaps = Vec::new();
+    for i in 0..6 {
+        std::thread::sleep(Duration::from_millis(2));
+        let path = dir.join(format!("under_writes_{i}.snap"));
+        engine.save(&path).unwrap();
+        snaps.push(path);
+    }
+
+    // Reconstruct the id-ordered write stream from what the writers
+    // actually placed. The id space must come out contiguous and
+    // uniquely assigned — the insert lock's own contract.
+    let mut rows_by_id: Vec<Option<Vec<u8>>> = initial.iter().cloned().map(Some).collect();
+    for h in writers {
+        for (start, batch) in h.join().unwrap() {
+            let start = start as usize;
+            if rows_by_id.len() < start + batch.len() {
+                rows_by_id.resize(start + batch.len(), None);
+            }
+            for (k, row) in batch.into_iter().enumerate() {
+                assert!(
+                    rows_by_id[start + k].replace(row).is_none(),
+                    "id {} assigned twice",
+                    start + k
+                );
+            }
+        }
+    }
+    let rows: Vec<Vec<u8>> = rows_by_id
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.unwrap_or_else(|| panic!("hole in the id space at {i}")))
+        .collect();
+
+    // One more snapshot after the writers joined: covers the full stream.
+    let final_path = dir.join("under_writes_final.snap");
+    engine.save(&final_path).unwrap();
+    snaps.push(final_path);
+
+    for (si, path) in snaps.iter().enumerate() {
+        let loaded = Engine::load(path)
+            .unwrap_or_else(|e| panic!("mid-traffic snapshot {si} corrupt: {e:?}"));
+        let n = loaded.n();
+        assert!(n >= n0 && n <= rows.len(), "snapshot {si}: n={n}");
+        if si + 1 == snaps.len() {
+            assert_eq!(n, rows.len(), "post-join snapshot holds everything");
+        }
+        for probe in 0..4usize {
+            let q: Vec<u8> = if probe % 2 == 0 {
+                rows[(probe * 37) % n].clone()
+            } else {
+                (0..l).map(|_| rng.below(1 << b) as u8).collect()
+            };
+            for tau in [0usize, 2] {
+                let mut got = loaded.search(&q, tau);
+                got.sort_unstable();
+                let expect: Vec<u32> = (0..n)
+                    .filter(|&i| ham_chars(&rows[i], &q) <= tau)
+                    .map(|i| i as u32)
+                    .collect();
+                assert_eq!(got, expect, "snapshot {si}: search n={n} tau={tau}");
+                assert_eq!(
+                    loaded.count(&q, tau),
+                    expect.len(),
+                    "snapshot {si}: count n={n} tau={tau}"
+                );
+            }
+        }
+        std::fs::remove_file(path).unwrap();
+    }
+}

@@ -10,7 +10,7 @@
 //! the measurement window.
 
 use bst::index::{LinearScan, SearchIndex, SingleBst};
-use bst::query::{CollectIds, CountOnly, QueryCtx};
+use bst::query::{BlockCollector, CollectIds, Collector, CountOnly, QueryCtx};
 use bst::sketch::SketchSet;
 use bst::trie::bst::{BstConfig, BstTrie};
 use bst::trie::{SketchTrie, SortedSketches};
@@ -167,4 +167,35 @@ fn bst_search_is_allocation_free_after_warmup() {
         "range-kernel linear scan must be allocation-free after warm-up"
     );
     assert!(!out.is_empty(), "last query returned at least itself");
+
+    // --- Blocked execution: a whole query block shares one trie pass.
+    // The packed block planes live in `QueryCtx` (`block_q`), the
+    // per-query work counters sit on the `BlockCollector`'s stack, and
+    // the collectors/slot arrays are stack arrays — after one warm-up
+    // block, re-running the block must not touch the allocator.
+    const W: usize = 8;
+    let block_qs: Vec<&[u8]> = queries.iter().take(W).map(|q| q.as_slice()).collect();
+    let mut blk_ctx = QueryCtx::new();
+    let mut block_outs: [Vec<u32>; W] = std::array::from_fn(|_| Vec::new());
+    let mut run_block = |ctx: &mut QueryCtx, outs: &mut [Vec<u32>; W]| {
+        let mut out_it = outs.iter_mut();
+        let mut colls: [CollectIds; W] = std::array::from_fn(|_| {
+            let o = out_it.next().unwrap();
+            o.clear();
+            CollectIds::new(2, o)
+        });
+        let mut coll_it = colls.iter_mut();
+        let mut slots: [&mut dyn Collector; W] =
+            std::array::from_fn(|_| coll_it.next().unwrap() as &mut dyn Collector);
+        let mut bc = BlockCollector::new(&mut slots);
+        bst.run_block(&block_qs, ctx, &mut bc);
+    };
+    run_block(&mut blk_ctx, &mut block_outs); // warm-up: size block_q + hit vecs
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    for _ in 0..3 {
+        run_block(&mut blk_ctx, &mut block_outs);
+    }
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+    assert_eq!(after - before, 0, "blocked bST execution must be allocation-free after warm-up");
+    assert!(block_outs.iter().all(|o| !o.is_empty()), "every block query is a database row");
 }
