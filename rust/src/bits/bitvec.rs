@@ -1,12 +1,19 @@
 //! Plain word-backed bit vector with unaligned multi-bit reads.
 
-use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError, Words};
 use crate::util::HeapSize;
 
 /// A growable bit vector backed by `u64` words (LSB-first within a word).
+///
+/// The word storage is a [`Words`] dual representation: built or mutated
+/// vectors own their words, while vectors loaded from a mapped snapshot
+/// borrow them from the mapping. Mutators go through `Words::to_mut`, so
+/// a mapped vector transparently converts to owned on first write (only
+/// delta/write-path vectors are ever mutated; mapped base segments stay
+/// borrowed for their whole serving life).
 #[derive(Debug, Clone, Default)]
 pub struct BitVec {
-    words: Vec<u64>,
+    words: Words,
     len: usize,
 }
 
@@ -17,11 +24,11 @@ impl BitVec {
 
     /// All-zero bit vector of `len` bits.
     pub fn zeros(len: usize) -> Self {
-        BitVec { words: vec![0; len.div_ceil(64)], len }
+        BitVec { words: vec![0; len.div_ceil(64)].into(), len }
     }
 
     pub fn with_capacity(bits: usize) -> Self {
-        BitVec { words: Vec::with_capacity(bits.div_ceil(64)), len: 0 }
+        BitVec { words: Vec::with_capacity(bits.div_ceil(64)).into(), len: 0 }
     }
 
     #[inline]
@@ -44,11 +51,12 @@ impl BitVec {
     #[inline]
     pub fn push(&mut self, bit: bool) {
         let (w, o) = (self.len / 64, self.len % 64);
+        let words = self.words.to_mut();
         if o == 0 {
-            self.words.push(0);
+            words.push(0);
         }
         if bit {
-            self.words[w] |= 1u64 << o;
+            words[w] |= 1u64 << o;
         }
         self.len += 1;
     }
@@ -62,12 +70,13 @@ impl BitVec {
         }
         let value = if width == 64 { value } else { value & ((1u64 << width) - 1) };
         let (w, o) = (self.len / 64, self.len % 64);
+        let words = self.words.to_mut();
         if o == 0 {
-            self.words.push(0);
+            words.push(0);
         }
-        self.words[w] |= value << o;
+        words[w] |= value << o;
         if o + width > 64 {
-            self.words.push(value >> (64 - o));
+            words.push(value >> (64 - o));
         }
         self.len += width;
     }
@@ -83,7 +92,7 @@ impl BitVec {
     #[inline]
     pub fn set(&mut self, i: usize) {
         debug_assert!(i < self.len);
-        self.words[i / 64] |= 1u64 << (i % 64);
+        self.words.to_mut()[i / 64] |= 1u64 << (i % 64);
     }
 
     /// Reads `width <= 64` bits starting at bit offset `pos` (unaligned).
@@ -156,7 +165,7 @@ impl Persist for BitVec {
 
     fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
         let len = r.get_usize()?;
-        let words = r.get_u64s()?;
+        let words = r.get_u64s_ref()?;
         ensure(words.len() == len.div_ceil(64), || {
             format!("BitVec: {} words cannot hold {len} bits", words.len())
         })?;
@@ -277,7 +286,7 @@ mod tests {
         assert_eq!(got.words(), bv.words());
         // nonzero bits beyond len must be rejected
         let mut bad = bv.clone();
-        bad.words[777 / 64] |= 1u64 << 63;
+        bad.words.to_mut()[777 / 64] |= 1u64 << 63;
         let bytes = crate::store::to_payload(&bad);
         assert!(
             crate::store::from_payload::<BitVec>(&mut crate::store::ByteReader::new(&bytes))

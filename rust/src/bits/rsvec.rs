@@ -15,7 +15,7 @@
 
 use super::broadword::select64;
 use super::BitVec;
-use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError, U32s};
 use crate::util::HeapSize;
 
 const BLOCK_BITS: usize = 512;
@@ -49,11 +49,11 @@ pub enum SelectMode {
 pub struct RsBitVec {
     bits: BitVec,
     /// Absolute number of ones before each 512-bit block (+ final total).
-    block_ranks: Vec<u32>,
+    block_ranks: U32s,
     /// Sampled positions of every SELECT_SAMPLE-th one.
-    select1_samples: Vec<u32>,
+    select1_samples: U32s,
     /// Sampled positions of every SELECT_SAMPLE-th zero.
-    select0_samples: Vec<u32>,
+    select0_samples: U32s,
     ones: usize,
 }
 
@@ -88,7 +88,13 @@ impl RsBitVec {
                 select0_samples = Self::sample_positions(&bits, false);
             }
         }
-        RsBitVec { bits, block_ranks, select1_samples, select0_samples, ones }
+        RsBitVec {
+            bits,
+            block_ranks: block_ranks.into(),
+            select1_samples: select1_samples.into(),
+            select0_samples: select0_samples.into(),
+            ones,
+        }
     }
 
     fn sample_positions(bits: &BitVec, ones: bool) -> Vec<u32> {
@@ -282,9 +288,9 @@ impl Persist for RsBitVec {
 
     fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
         let bits = BitVec::read_from(r)?;
-        let block_ranks = r.get_u32s()?;
-        let select1_samples = r.get_u32s()?;
-        let select0_samples = r.get_u32s()?;
+        let block_ranks = r.get_u32s_ref()?;
+        let select1_samples = r.get_u32s_ref()?;
+        let select0_samples = r.get_u32s_ref()?;
         let ones = r.get_usize()?;
         let len = bits.len();
         ensure(len < u32::MAX as usize, || "RsBitVec: length >= 2^32".into())?;
@@ -482,7 +488,7 @@ mod tests {
         .is_err());
         // non-monotone rank directory
         let mut bad = rs.clone();
-        bad.block_ranks[1] = u32::MAX;
+        bad.block_ranks.to_mut()[1] = u32::MAX;
         let bytes = crate::store::to_payload(&bad);
         assert!(crate::store::from_payload::<RsBitVec>(
             &mut crate::store::ByteReader::new(&bytes)
@@ -491,7 +497,7 @@ mod tests {
         // select sample pointing at a zero bit
         let mut bad = rs;
         if let Some(first_zero) = (0..bad.len()).find(|&i| !bad.get(i)) {
-            bad.select1_samples[0] = first_zero as u32;
+            bad.select1_samples.to_mut()[0] = first_zero as u32;
             let bytes = crate::store::to_payload(&bad);
             assert!(crate::store::from_payload::<RsBitVec>(
                 &mut crate::store::ByteReader::new(&bytes)

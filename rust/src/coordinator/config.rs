@@ -22,6 +22,12 @@ pub struct ServeConfig {
     /// stream. `1` disables blocking (serial per-query execution);
     /// widths above 64 are clamped to the kernel's 64-query live mask.
     pub block_width: usize,
+    /// Serving load mode for snapshots: when `true`, `reload` ops map
+    /// the snapshot read-only and serve immutable segments zero-copy
+    /// from the mapping ([`super::engine::Engine::load_with`]); when
+    /// `false` (default) snapshots load fully owned. The initial
+    /// engine is loaded by the caller — this field governs reloads.
+    pub mmap: bool,
 }
 
 impl Default for ServeConfig {
@@ -34,6 +40,7 @@ impl Default for ServeConfig {
             default_tau: 2,
             merge_threshold: 4096,
             block_width: 8,
+            mmap: false,
         }
     }
 }

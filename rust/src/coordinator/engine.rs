@@ -433,7 +433,25 @@ impl Engine {
     /// construction, no rank/select re-indexing. v1 snapshots load as
     /// all-immutable engines (no raw rows — see the module docs).
     pub fn load(path: &Path) -> Result<Self, StoreError> {
-        let snap = Snapshot::open(path)?;
+        Self::load_with(path, false)
+    }
+
+    /// [`Engine::load`] with an explicit serving mode. With
+    /// `mapped = true` the snapshot is `mmap`ed read-only and every
+    /// immutable payload array (trie postings, plane words, rank
+    /// directories, …) borrows the mapping instead of copying —
+    /// validation still runs in full. Write-path state (delta rows,
+    /// tombstones, id maps) is always rebuilt owned, and merges fold
+    /// into owned memory, so the engine stays fully writable; the
+    /// mapping is released when the last borrowing structure drops.
+    /// If the platform cannot map the file the open falls back to the
+    /// owned read transparently.
+    pub fn load_with(path: &Path, mapped: bool) -> Result<Self, StoreError> {
+        let snap = if mapped {
+            Snapshot::open_mapped(path)?
+        } else {
+            Snapshot::open(path)?
+        };
         if snap.version() == FORMAT_VERSION_V1 {
             Self::load_v1(&snap)
         } else {
@@ -1654,22 +1672,38 @@ mod tests {
             // single-test binary tests/snapshot_cold_start.rs — the
             // global counters would race with parallel sibling tests)
             let loaded = Engine::load(&path).unwrap();
+            let mapped = Engine::load_with(&path, true).unwrap();
             assert_eq!(loaded.n(), engine.n());
             assert_eq!(loaded.l(), engine.l());
             assert_eq!(loaded.b(), engine.b());
             assert_eq!(loaded.n_shards(), engine.n_shards());
+            assert_eq!(mapped.n(), engine.n());
+            assert_eq!(mapped.n_shards(), engine.n_shards());
+            // Mapped serving borrows the payload arrays, so its
+            // assembly-time heap must come in strictly below owned.
+            assert!(
+                mapped.heap_bytes() < loaded.heap_bytes(),
+                "{name}: mapped heap {} !< owned heap {}",
+                mapped.heap_bytes(),
+                loaded.heap_bytes()
+            );
             let mut rng = Rng::new(77);
             for _ in 0..8 {
                 let q = rows[rng.below_usize(rows.len())].clone();
                 for tau in [0usize, 2, 4] {
                     let mut a = engine.search(&q, tau);
                     let mut b = loaded.search(&q, tau);
+                    let mut m = mapped.search(&q, tau);
                     a.sort();
                     b.sort();
+                    m.sort();
                     assert_eq!(a, b, "{name} tau={tau}");
+                    assert_eq!(a, m, "{name} tau={tau} (mapped)");
                     assert_eq!(engine.count(&q, tau), loaded.count(&q, tau));
+                    assert_eq!(engine.count(&q, tau), mapped.count(&q, tau));
                 }
                 assert_eq!(engine.top_k(&q, 7, 5), loaded.top_k(&q, 7, 5), "{name}");
+                assert_eq!(engine.top_k(&q, 7, 5), mapped.top_k(&q, 7, 5), "{name}");
             }
             std::fs::remove_file(&path).unwrap();
         }

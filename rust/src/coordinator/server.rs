@@ -6,10 +6,12 @@
 //! the returned [`ServerHandle`] is stopped.
 //!
 //! The engine lives behind an [`EngineSlot`]: the `reload` op loads a
-//! snapshot from disk ([`Engine::load`] — no rebuild) and swaps it in;
+//! snapshot from disk ([`Engine::load_with`] — no rebuild, honoring the
+//! configured serving load mode, owned or mapped) and swaps it in;
 //! subsequent batches serve from the new engine. A reload must keep the
-//! sketch length `L` (the serving schema); snapshots of a different
-//! shape are rejected without disturbing the running engine.
+//! sketch shape `L`/`b` (the serving schema); snapshots of a different
+//! shape — and missing or corrupt snapshot files — are rejected with an
+//! error response while the running engine keeps serving untouched.
 //!
 //! Write ops (`insert` / `delete` / `merge`) are control-plane: they hit
 //! the current engine directly rather than riding the batcher, and a
@@ -70,6 +72,7 @@ pub fn serve(engine: Arc<Engine>, cfg: ServeConfig) -> std::io::Result<ServerHan
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = Arc::clone(&stop);
     let default_tau = cfg.default_tau;
+    let mmap = cfg.mmap;
 
     let slot = Arc::new(EngineSlot::new(engine));
     let batcher = Batcher::start(Arc::clone(&slot), &cfg);
@@ -91,7 +94,7 @@ pub fn serve(engine: Arc<Engine>, cfg: ServeConfig) -> std::io::Result<ServerHan
                 let slot = Arc::clone(&slot);
                 let stop3 = Arc::clone(&stop2);
                 std::thread::spawn(move || {
-                    let _ = handle_conn(stream, submitter, slot, stop3, default_tau);
+                    let _ = handle_conn(stream, submitter, slot, stop3, default_tau, mmap);
                 });
             }
         })
@@ -123,6 +126,7 @@ fn handle_conn(
     slot: Arc<EngineSlot>,
     stop: Arc<AtomicBool>,
     default_tau: usize,
+    mmap: bool,
 ) -> std::io::Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -213,7 +217,9 @@ fn handle_conn(
             }
             Ok(Request::Reload { path }) => {
                 let timer = Timer::start();
-                match Engine::load(Path::new(&path)) {
+                // The running engine keeps serving through every error
+                // arm below — a failed reload never swaps the slot.
+                match Engine::load_with(Path::new(&path), mmap) {
                     Err(e) => {
                         engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
                         error_response(&format!("reload failed: {e}"))
@@ -224,6 +230,14 @@ fn handle_conn(
                             "reload rejected: snapshot L={} != serving L={}",
                             new_engine.l(),
                             engine.l()
+                        ))
+                    }
+                    Ok(new_engine) if new_engine.b() != engine.b() => {
+                        engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
+                        error_response(&format!(
+                            "reload rejected: snapshot b={} != serving b={}",
+                            new_engine.b(),
+                            engine.b()
                         ))
                     }
                     Ok(new_engine) => {

@@ -4,16 +4,22 @@
 //!
 //! Every PR that touches a hot path re-runs this and commits/uploads the
 //! resulting `BENCH_*.json`, so the repo accumulates a comparable series
-//! of perf measurements (schema `bst-bench-v3`): one row per
+//! of perf measurements (schema `bst-bench-v4`): one row per
 //! `(dataset, index, tau)` with `n`, `b`, `L`, p50/p99 latency in µs and
 //! throughput in M queries/s; one `blocked-vs-serial` row per
 //! `(dataset, block width)` measuring the engine's blocked batch path
 //! at widths 1/4/8/16 (width 1 *is* the serial path, so the width-8 /
-//! width-1 Mq/s ratio is the blocking speedup); and one `delta-insert`
+//! width-1 Mq/s ratio is the blocking speedup); one `delta-insert`
 //! row per dataset with per-batch latency percentiles and append
 //! throughput in Mops/s (rows/µs into the engine's delta segments,
-//! auto-merge disabled). Absolute numbers are testbed-specific — the
-//! trajectory (and the bST-vs-linear gap) is the signal.
+//! auto-merge disabled); and one `cold-start` row per dataset timing
+//! `Engine::load` in both serving modes (best-of-3, page cache warmed):
+//! `owned_ms` vs `mapped_ms` wall clock plus `owned_rss_mib` /
+//! `mapped_rss_mib` — the engine's tracked assembly-time heap, the
+//! deterministic proxy for resident memory (the mapped figure excludes
+//! the borrowed payload bytes, which stay in the shared page cache).
+//! Absolute numbers are testbed-specific — the trajectory (and the
+//! bST-vs-linear gap) is the signal.
 
 use super::EvalOpts;
 use crate::coordinator::engine::{Engine, QueryMode, ShardIndexKind};
@@ -194,10 +200,59 @@ pub fn bench(opts: &EvalOpts, datasets: &[Dataset]) -> (String, Json) {
             ("mean_us", Json::num(lat.mean())),
             ("mops", Json::num(mops)),
         ]));
+
+        // Cold start: save a snapshot and time both serving load modes.
+        // The mapped load parses and validates the same bytes but skips
+        // every payload-sized copy; CI asserts mapped <= owned. Each
+        // mode takes its best of 3 runs so the row measures the load
+        // path, not scheduler noise.
+        {
+            let engine = Engine::build(set, 2, &ShardIndexKind::Bst(BstConfig::default()));
+            let path =
+                std::env::temp_dir().join(format!("bst_bench_cold_{}.snap", ds.name()));
+            engine.save(&path).expect("bench save");
+            drop(engine);
+            // warm the page cache so both modes read from memory
+            let _ = std::fs::read(&path);
+            let mut best = [f64::MAX; 2];
+            let mut heap_mib = [0.0f64; 2];
+            for (mode, mapped) in [(0usize, false), (1, true)] {
+                for _ in 0..3 {
+                    let t = Timer::start();
+                    let e = Engine::load_with(&path, mapped).expect("bench cold start");
+                    best[mode] = best[mode].min(t.elapsed_ms());
+                    heap_mib[mode] = e.heap_bytes() as f64 / (1024.0 * 1024.0);
+                }
+            }
+            let _ = std::fs::remove_file(&path);
+            md.push_str(&format!(
+                "| {} | cold-start (owned {:.1} ms / mapped {:.1} ms, heap {:.1} -> {:.1} MiB) \
+                 | {} | {} | {} | - | - | - | - | - |\n",
+                ds.name(),
+                best[0],
+                best[1],
+                heap_mib[0],
+                heap_mib[1],
+                set.n(),
+                set.b(),
+                set.l(),
+            ));
+            rows.push(Json::obj(vec![
+                ("dataset", Json::str(ds.name())),
+                ("index", Json::str("cold-start")),
+                ("n", Json::num(set.n() as f64)),
+                ("b", Json::num(set.b() as f64)),
+                ("l", Json::num(set.l() as f64)),
+                ("owned_ms", Json::num(best[0])),
+                ("mapped_ms", Json::num(best[1])),
+                ("owned_rss_mib", Json::num(heap_mib[0])),
+                ("mapped_rss_mib", Json::num(heap_mib[1])),
+            ]));
+        }
     }
 
     let payload = Json::obj(vec![
-        ("schema", Json::str("bst-bench-v3")),
+        ("schema", Json::str("bst-bench-v4")),
         (
             "config",
             Json::obj(vec![
@@ -221,13 +276,17 @@ mod tests {
         let (md, payload) = bench(&opts, &[Dataset::Review]);
         assert!(md.contains("si-bst") && md.contains("linear") && md.contains("delta-insert"));
         assert!(md.contains("blocked-vs-serial"));
+        assert!(md.contains("cold-start"));
         let rows = payload.get("rows").and_then(|r| r.as_arr()).unwrap();
         assert_eq!(
             rows.len(),
-            2 * 3 + BLOCK_WIDTHS.len() + 1,
-            "2 indexes x 3 taus + blocked widths + 1 insert row"
+            2 * 3 + BLOCK_WIDTHS.len() + 1 + 1,
+            "2 indexes x 3 taus + blocked widths + insert row + cold-start row"
         );
         for row in rows {
+            if row.get("index").and_then(Json::as_str) == Some("cold-start") {
+                continue; // reports ms + MiB, not per-query percentiles
+            }
             assert!(row.get("p50_us").and_then(Json::as_f64).is_some());
         }
         let query_rows: Vec<&Json> = rows
@@ -260,9 +319,23 @@ mod tests {
         assert_eq!(insert_rows.len(), 1);
         assert!(insert_rows[0].get("mops").and_then(Json::as_f64).unwrap() > 0.0);
         assert!(insert_rows[0].get("n").and_then(Json::as_f64).unwrap() > 0.0);
+        let cold_rows: Vec<&Json> = rows
+            .iter()
+            .filter(|r| r.get("index").and_then(Json::as_str) == Some("cold-start"))
+            .collect();
+        assert_eq!(cold_rows.len(), 1);
+        let cold = cold_rows[0];
+        assert!(cold.get("owned_ms").and_then(Json::as_f64).unwrap() >= 0.0);
+        assert!(cold.get("mapped_ms").and_then(Json::as_f64).unwrap() >= 0.0);
+        let owned_mib = cold.get("owned_rss_mib").and_then(Json::as_f64).unwrap();
+        let mapped_mib = cold.get("mapped_rss_mib").and_then(Json::as_f64).unwrap();
+        assert!(
+            mapped_mib < owned_mib,
+            "mapped serving must hold less heap: {mapped_mib} !< {owned_mib}"
+        );
         assert_eq!(
             payload.get("schema").and_then(Json::as_str),
-            Some("bst-bench-v3")
+            Some("bst-bench-v4")
         );
     }
 }

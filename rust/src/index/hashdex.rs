@@ -9,21 +9,26 @@
 //! (0 = empty), two-pass construction (count, then fill) so postings of a
 //! key are contiguous in one arena.
 
-use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError, U32s, Words};
 use crate::util::rng::mix64;
 use crate::util::HeapSize;
 
 const EMPTY: u64 = 0;
 
 /// Immutable key → postings-list map built from `(key, id)` pairs.
+///
+/// The two-pass builder iterates pairs id-major, so every posting list is
+/// sorted ascending by construction; `read_from` validates this so loaded
+/// indexes can hand raw lists straight to the monotone-streaming
+/// verification kernels.
 pub struct HashIndex {
     /// Tagged keys (`key + 1`; 0 = empty slot). Power-of-two length.
-    slots: Vec<u64>,
+    slots: Words,
     /// Postings range of slot `s`: `arena[starts[s]..starts[s+1]]` —
     /// `starts` is indexed by *slot*, `u32::MAX` sentinel for empty.
-    offsets: Vec<u32>,
-    lens: Vec<u32>,
-    arena: Vec<u32>,
+    offsets: U32s,
+    lens: U32s,
+    arena: U32s,
     n_keys: usize,
 }
 
@@ -85,7 +90,13 @@ impl HashIndex {
             cursor[s] += 1;
         }
 
-        HashIndex { slots, offsets, lens, arena, n_keys }
+        HashIndex {
+            slots: slots.into(),
+            offsets: offsets.into(),
+            lens: lens.into(),
+            arena: arena.into(),
+            n_keys,
+        }
     }
 
     /// Number of distinct keys.
@@ -134,10 +145,10 @@ impl Persist for HashIndex {
     }
 
     fn read_from(r: &mut ByteReader<'_>) -> Result<Self, StoreError> {
-        let slots = r.get_u64s()?;
-        let offsets = r.get_u32s()?;
-        let lens = r.get_u32s()?;
-        let arena = r.get_u32s()?;
+        let slots = r.get_u64s_ref()?;
+        let offsets = r.get_u32s_ref()?;
+        let lens = r.get_u32s_ref()?;
+        let arena = r.get_u32s_ref()?;
         let n_keys = r.get_usize()?;
         let cap = slots.len();
         ensure(cap >= 1 && cap.is_power_of_two(), || {
@@ -167,6 +178,16 @@ impl Persist for HashIndex {
         for s in 0..cap {
             ensure(slots[s] != EMPTY || lens[s] == 0, || {
                 format!("HashIndex: empty slot {s} has postings")
+            })?;
+        }
+        // Every posting list must be sorted ascending (the builder's
+        // id-major passes guarantee it); query paths stream raw lists
+        // into the verification kernels assuming monotone ids.
+        for s in 0..cap {
+            let lo = offsets[s] as usize;
+            let list = &arena[lo..lo + lens[s] as usize];
+            ensure(list.windows(2).all(|w| w[0] <= w[1]), || {
+                format!("HashIndex: postings of slot {s} are not sorted")
             })?;
         }
         Ok(HashIndex { slots, offsets, lens, arena, n_keys })

@@ -313,6 +313,11 @@ impl HmSearch {
                         cands.push(id);
                     }
                 }
+                // The posting list is sorted and the epoch filter keeps
+                // order, but sort anyway so the kernel's monotone-id
+                // streaming never depends on a filter implementation
+                // detail (near-sorted input makes this pass cheap).
+                cands.sort_unstable();
                 self.vertical.ham_many_leq(cands, &q_planes, c.tau(), |id, verdict| {
                     if let Some(d) = verdict {
                         c.emit(&[id], d);

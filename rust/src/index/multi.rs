@@ -7,8 +7,10 @@
 //!    [`super::blocks`]) reports candidate ids whose block is within
 //!    `θ_j` of the query block;
 //! 2. **verification** — candidates are deduplicated (epoch array — no
-//!    clearing between queries) into a reusable buffer, and each block's
-//!    buffer is verified in **one batched kernel call**
+//!    clearing between queries) into a reusable buffer, sorted ascending
+//!    (the kernel then streams monotone item ids — sequential plane-word
+//!    loads), and each block's buffer is verified in **one batched
+//!    kernel call**
 //!    ([`crate::sketch::VerticalSet::ham_many_leq`]) against the
 //!    collector's *live* threshold, so top-k queries tighten verification
 //!    as the heap fills. (Verification of a block's candidates happens
@@ -234,7 +236,10 @@ impl<F: BlockFilter> MultiIndex<F> {
                 });
             }
             // Verify: one batched bit-parallel kernel call per block,
-            // against the collector's live threshold.
+            // against the collector's live threshold. Candidates are
+            // sorted first so the kernel streams monotone item ids —
+            // sequential plane-word loads instead of random jumps.
+            cands.sort_unstable();
             vertical.ham_many_leq(cands, q_planes, c.tau(), |id, verdict| {
                 if let Some(d) = verdict {
                     c.emit(&[id], d);

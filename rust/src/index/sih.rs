@@ -152,6 +152,8 @@ impl Sih {
             let mut row = q.to_vec();
             self.enumerate_rows_capped(&mut row, 0, tau, &mut |r| {
                 let key = self.key_of(r);
+                // Posting lists are sorted ascending (built id-major,
+                // validated on load), so the kernel streams monotone ids.
                 let ids = self.index.get(key);
                 if !ids.is_empty() {
                     vertical.ham_many_leq(ids, q_planes, c.tau(), |id, verdict| {

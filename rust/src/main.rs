@@ -10,9 +10,9 @@
 //!            [--save SNAP --shards S]                       # engine snapshot
 //! bst insert --index SNAP --in NEW.bin --save OUT.snap      # write path
 //!            [--merge]
-//! bst query  --in FILE | --index SNAP
+//! bst query  --in FILE | --index SNAP [--mmap]
 //!            --q 0,1,2,... [--tau T] [--topk K] [--stats]
-//! bst serve  --dataset D | --index SNAP
+//! bst serve  --dataset D | --index SNAP [--mmap]
 //!            [--addr A] [--shards S] [--scale F]
 //! bst info                                                  # build info
 //! ```
@@ -75,6 +75,9 @@ USAGE:
                       --in FILE | --index SNAP (serve-from-snapshot)
                       --q c0,c1,... [--tau T]
                       [--topk K] (k nearest)  [--stats] (traversal stats)
+                      [--mmap] (map the snapshot read-only and serve the
+                       immutable segments zero-copy; owned load is the
+                       default and the fallback if mapping fails)
   bst serve           start the sharded TCP query service
                       --dataset D [--scale F] | --index SNAP (cold start)
                       [--addr A] [--shards N]
@@ -82,6 +85,9 @@ USAGE:
                       [--merge-threshold N] (delta rows before background merge)
                       [--block-width N] (multi-query block size, default 8;
                        1 = serial per-query execution)
+                      [--mmap] (serve snapshots zero-copy from a read-only
+                       mapping — applies to the --index cold start and to
+                       reload ops; writes still land in owned deltas)
   bst info            print build/runtime information
 ";
 
@@ -479,7 +485,7 @@ fn cmd_query(args: &Args) -> i32 {
 /// the cold-start path (no sketches on hand, no reconstruction).
 fn query_snapshot(args: &Args, snap: &str, q: &[u8]) -> i32 {
     use bst::util::json::Json;
-    let engine = match Engine::load(Path::new(snap)) {
+    let engine = match Engine::load_with(Path::new(snap), args.has("mmap")) {
         Ok(e) => e,
         Err(e) => {
             eprintln!("loading snapshot {snap}: {e}");
@@ -531,6 +537,7 @@ fn cmd_serve(args: &Args) -> i32 {
         merge_threshold: args
             .get_usize("merge-threshold", Engine::DEFAULT_MERGE_THRESHOLD),
         block_width: args.get_usize("block-width", 8),
+        mmap: args.has("mmap"),
     };
 
     // `--index` doubles as the historical kind selector (si-bst/mi-bst)
@@ -558,13 +565,14 @@ fn cmd_serve(args: &Args) -> i32 {
         // Cold start: serve directly from the snapshot — no dataset
         // generation, no sketching, no index construction.
         let t = bst::util::timer::Timer::start();
-        match Engine::load(Path::new(snap)) {
+        match Engine::load_with(Path::new(snap), serve_cfg.mmap) {
             Ok(e) => {
                 eprintln!(
-                    "loaded snapshot {snap} in {:.0} ms (n={}, shards={})",
+                    "loaded snapshot {snap} in {:.0} ms (n={}, shards={}, mode={})",
                     t.elapsed_ms(),
                     e.n(),
-                    e.n_shards()
+                    e.n_shards(),
+                    if serve_cfg.mmap { "mapped" } else { "owned" }
                 );
                 Arc::new(e)
             }

@@ -60,7 +60,7 @@
 //! The kernels change the *access pattern only* — the word layout (and
 //! therefore the snapshot encoding) is untouched.
 
-use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError, Words};
 use crate::util::HeapSize;
 
 /// Widest query block the multi-query kernels accept: the live set is a
@@ -122,7 +122,9 @@ pub struct PlaneStore {
     b: usize,
     width: usize,
     n: usize,
-    words: Vec<u64>,
+    /// Owned when built or appended to (delta buffers), borrowed from the
+    /// snapshot mapping when loaded zero-copy.
+    words: Words,
     mask: u64,
 }
 
@@ -155,7 +157,7 @@ impl PlaneStore {
                 }
             }
         }
-        PlaneStore { b, width, n, words, mask }
+        PlaneStore { b, width, n, words: words.into(), mask }
     }
 
     /// An empty, appendable store (the delta-segment buffer): items are
@@ -175,17 +177,20 @@ impl PlaneStore {
         let item_bits = self.b * self.width;
         let mut bit = self.n * item_bits;
         let need = (bit + item_bits).div_ceil(64) + 2;
-        if self.words.len() < need {
-            self.words.resize(need, 0);
+        let width = self.width;
+        let mask = self.mask;
+        let words = self.words.to_mut();
+        if words.len() < need {
+            words.resize(need, 0);
         }
         for &f in fields {
-            let v = f & self.mask;
+            let v = f & mask;
             let (w, o) = (bit / 64, bit % 64);
-            self.words[w] |= v << o;
-            if o + self.width > 64 {
-                self.words[w + 1] |= v >> (64 - o);
+            words[w] |= v << o;
+            if o + width > 64 {
+                words[w + 1] |= v >> (64 - o);
             }
-            bit += self.width;
+            bit += width;
         }
         self.n += 1;
     }
@@ -707,7 +712,7 @@ impl Persist for PlaneStore {
         let b = r.get_usize()?;
         let width = r.get_usize()?;
         let n = r.get_usize()?;
-        let words = r.get_u64s()?;
+        let words = r.get_u64s_ref()?;
         ensure(width <= 64, || format!("PlaneStore: width {width} > 64"))?;
         let total_bits = n
             .checked_mul(b)

@@ -1,6 +1,6 @@
 //! Packed horizontal sketch storage.
 
-use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError, Words};
 use crate::util::{ceil_div, HeapSize};
 
 /// A database of `n` b-bit sketches of length `l`, packed at `b` bits per
@@ -22,8 +22,9 @@ pub struct SketchSet {
     n: usize,
     /// Words per sketch.
     wps: usize,
-    /// Packed data, `n * wps` words.
-    words: Vec<u64>,
+    /// Packed data, `n * wps` words — owned when built or mutated, borrowed
+    /// from the snapshot mapping when loaded zero-copy.
+    words: Words,
 }
 
 impl SketchSet {
@@ -32,7 +33,7 @@ impl SketchSet {
         assert!(matches!(b, 1 | 2 | 4 | 8), "b must be one of 1,2,4,8");
         assert!(l >= 1 && l * b <= 64 * 64, "unsupported sketch length");
         let wps = ceil_div(l * b, 64);
-        SketchSet { b, l, n, wps, words: vec![0; n * wps] }
+        SketchSet { b, l, n, wps, words: vec![0; n * wps].into() }
     }
 
     /// Builds from explicit character rows (mainly for tests/examples).
@@ -113,7 +114,8 @@ impl SketchSet {
         let idx = i * self.wps + p / self.cpw();
         let sh = self.shift(p);
         let mask = (self.sigma() as u64 - 1) << sh;
-        self.words[idx] = (self.words[idx] & !mask) | ((c as u64) << sh);
+        let words = self.words.to_mut();
+        words[idx] = (words[idx] & !mask) | ((c as u64) << sh);
     }
 
     /// The packed words of sketch `i`.
@@ -198,7 +200,7 @@ impl SketchSet {
     pub fn from_raw(b: usize, l: usize, n: usize, words: Vec<u64>) -> Self {
         let wps = ceil_div(l * b, 64);
         assert_eq!(words.len(), n * wps);
-        SketchSet { b, l, n, wps, words }
+        SketchSet { b, l, n, wps, words: words.into() }
     }
 }
 
@@ -214,7 +216,7 @@ impl Persist for SketchSet {
         let b = r.get_usize()?;
         let l = r.get_usize()?;
         let n = r.get_usize()?;
-        let words = r.get_u64s()?;
+        let words = r.get_u64s_ref()?;
         ensure(matches!(b, 1 | 2 | 4 | 8), || format!("SketchSet: invalid b {b}"))?;
         ensure(l >= 1 && l.checked_mul(b).map_or(false, |x| x <= 64 * 64), || {
             format!("SketchSet: unsupported length L={l} (b={b})")

@@ -1,4 +1,5 @@
-//! Checked little-endian byte cursors for section payloads.
+//! Checked little-endian byte cursors for section payloads, plus the
+//! owned/mapped dual representation behind zero-copy serving.
 //!
 //! [`ByteWriter`] appends into a growable buffer; [`ByteReader`] walks a
 //! borrowed slice and returns [`StoreError::Corrupt`] on any out-of-bounds
@@ -6,18 +7,287 @@
 //! Slice reads validate the declared element count against the bytes that
 //! actually remain *before* allocating, so a corrupted length field cannot
 //! trigger a huge allocation.
+//!
+//! # Alignment and the mapped load path
+//!
+//! In the current container format every slice field (`put_bytes`,
+//! `put_u32s`, `put_u64s`, `put_usizes`) is preceded by zero padding up to
+//! the next 8-byte boundary, so its length prefix *and* its element data
+//! sit 8-aligned relative to the payload start. Section payloads start
+//! 8-aligned in the file and mappings are page-aligned, so on a mapped
+//! snapshot every element array is correctly aligned in memory — the
+//! `*_ref` getters ([`ByteReader::get_u64s_ref`] /
+//! [`ByteReader::get_u32s_ref`] / [`ByteReader::get_bytes_ref`]) can hand
+//! out [`PodVec`]s that *borrow* the mapping instead of copying the
+//! payload. Legacy (pre-v3) payloads are unpadded; readers for them run
+//! with padding disabled ([`ByteReader::legacy`]) and the `*_ref` getters
+//! silently fall back to owned copies, bumping a global counter
+//! ([`mapped_borrow_fallbacks`]) that the cold-start test pins at zero for
+//! current-format mapped loads.
 
+use super::mmap::Mmap;
 use super::StoreError;
+use crate::util::HeapSize;
+use std::ops::{Deref, Range};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
-/// Append-only little-endian encoder.
-#[derive(Debug, Default)]
+/// Global count of `*_ref` reads that *wanted* to borrow from a mapping
+/// but had to copy instead (misaligned element data — a legacy payload —
+/// or a big-endian host). Reads without a backing mapping never count:
+/// owned loads are expected to copy. The zero-copy contract of the mapped
+/// load path is `mapped_borrow_fallbacks()` staying flat across a load,
+/// enforced by `rust/tests/snapshot_cold_start.rs`.
+static MAPPED_BORROW_FALLBACKS: AtomicU64 = AtomicU64::new(0);
+
+/// Reads the global fallback-copy counter. See the module docs; test-only
+/// in spirit but harmless (and cheap) to expose.
+pub fn mapped_borrow_fallbacks() -> u64 {
+    MAPPED_BORROW_FALLBACKS.load(Ordering::Relaxed)
+}
+
+/// A reference-counted, immutable byte region: either an owned heap
+/// buffer or a slice of a read-only file mapping. Cloning and
+/// [`Bytes::slice`] are pointer adjustments — the underlying region is
+/// shared, and the last clone to drop releases it (frees the buffer or
+/// unmaps the file).
+#[derive(Clone)]
+pub struct Bytes {
+    ptr: *const u8,
+    len: usize,
+    region: Region,
+}
+
+#[derive(Clone)]
+enum Region {
+    Heap(Arc<Vec<u8>>),
+    Map(Arc<Mmap>),
+}
+
+// Safety: the region is immutable and pinned for the lifetime of every
+// clone — a `Vec` behind an `Arc` never reallocates, and a mapping is
+// only unmapped when the last `Arc` drops — so the derived pointer stays
+// valid and the bytes can be read from any thread.
+unsafe impl Send for Bytes {}
+unsafe impl Sync for Bytes {}
+
+impl Bytes {
+    /// Takes ownership of a heap buffer.
+    pub fn from_vec(v: Vec<u8>) -> Bytes {
+        let region = Arc::new(v);
+        let (ptr, len) = (region.as_ptr(), region.len());
+        Bytes { ptr, len, region: Region::Heap(region) }
+    }
+
+    /// Wraps a whole file mapping.
+    pub fn from_map(m: Arc<Mmap>) -> Bytes {
+        let s = m.as_slice();
+        let (ptr, len) = (s.as_ptr(), s.len());
+        Bytes { ptr, len, region: Region::Map(m) }
+    }
+
+    /// Whether the region is a file mapping (as opposed to owned heap).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.region, Region::Map(_))
+    }
+
+    /// A sub-range sharing the same region. Panics on out-of-bounds
+    /// ranges, exactly like slice indexing.
+    pub fn slice(&self, range: Range<usize>) -> Bytes {
+        assert!(
+            range.start <= range.end && range.end <= self.len,
+            "Bytes::slice: range {range:?} out of bounds for length {}",
+            self.len
+        );
+        Bytes {
+            // Safety: start <= len, so the offset stays inside (or one
+            // past) the region.
+            ptr: unsafe { self.ptr.add(range.start) },
+            len: range.end - range.start,
+            region: self.region.clone(),
+        }
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        // Safety: `ptr`/`len` delimit live bytes of the pinned region
+        // (see the Send/Sync note above).
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl Deref for Bytes {
+    type Target = [u8];
+
+    #[inline]
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = if self.is_mapped() { "mapped" } else { "heap" };
+        write!(f, "Bytes({kind}, {} bytes)", self.len)
+    }
+}
+
+/// Marker for fixed-size little-endian element types whose arrays can be
+/// borrowed directly from an aligned mapped payload (`u32` / `u64`).
+pub trait Pod: Copy + PartialEq + std::fmt::Debug + 'static {}
+
+impl Pod for u32 {}
+impl Pod for u64 {}
+
+/// A `Vec`-or-mapping array of plain elements: the storage type behind
+/// every payload-sized field of the persistent structures. Reads go
+/// through `Deref<Target = [T]>` (one predictable branch); writers call
+/// [`PodVec::to_mut`], which converts a mapped array into an owned `Vec`
+/// once and then edits in place — the write path never mutates a mapping.
+pub struct PodVec<T: Pod> {
+    repr: Repr<T>,
+}
+
+enum Repr<T> {
+    Owned(Vec<T>),
+    /// Invariants (checked at construction): the byte length is a
+    /// multiple of `size_of::<T>()`, the base pointer is aligned for `T`,
+    /// and the target is little-endian (elements are stored LE).
+    Mapped(Bytes),
+}
+
+/// `PodVec<u64>` — plane words, bit-vector words, hash-table slots.
+pub type Words = PodVec<u64>;
+
+/// `PodVec<u32>` — posting lists, offsets, rank directories.
+pub type U32s = PodVec<u32>;
+
+impl<T: Pod> PodVec<T> {
+    /// Wraps an aligned little-endian byte region without copying.
+    /// Private: only the checked `*_ref` getters construct this.
+    fn mapped(bytes: Bytes) -> PodVec<T> {
+        debug_assert!(cfg!(target_endian = "little"));
+        debug_assert_eq!(bytes.len() % std::mem::size_of::<T>(), 0);
+        debug_assert_eq!(bytes.as_slice().as_ptr() as usize % std::mem::align_of::<T>(), 0);
+        PodVec { repr: Repr::Mapped(bytes) }
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        self
+    }
+
+    /// Whether the elements are served from a file mapping.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.repr, Repr::Mapped(_))
+    }
+
+    /// Mutable access, converting a mapped array into an owned `Vec` on
+    /// first use. Build and write paths call this; serving structures
+    /// loaded from a mapping stay borrowed because nothing mutates them.
+    pub fn to_mut(&mut self) -> &mut Vec<T> {
+        if matches!(self.repr, Repr::Mapped(_)) {
+            let owned: Vec<T> = self.as_slice().to_vec();
+            self.repr = Repr::Owned(owned);
+        }
+        match &mut self.repr {
+            Repr::Owned(v) => v,
+            Repr::Mapped(_) => unreachable!("just converted to owned"),
+        }
+    }
+}
+
+impl<T: Pod> Deref for PodVec<T> {
+    type Target = [T];
+
+    #[inline]
+    fn deref(&self) -> &[T] {
+        match &self.repr {
+            Repr::Owned(v) => v,
+            Repr::Mapped(b) => {
+                // Safety: construction checked alignment, size multiple
+                // and endianness; the region is immutable and pinned.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        b.as_slice().as_ptr() as *const T,
+                        b.len() / std::mem::size_of::<T>(),
+                    )
+                }
+            }
+        }
+    }
+}
+
+impl<T: Pod> From<Vec<T>> for PodVec<T> {
+    fn from(v: Vec<T>) -> Self {
+        PodVec { repr: Repr::Owned(v) }
+    }
+}
+
+impl<T: Pod> Default for PodVec<T> {
+    fn default() -> Self {
+        PodVec { repr: Repr::Owned(Vec::new()) }
+    }
+}
+
+impl<T: Pod> Clone for PodVec<T> {
+    fn clone(&self) -> Self {
+        match &self.repr {
+            Repr::Owned(v) => PodVec { repr: Repr::Owned(v.clone()) },
+            Repr::Mapped(b) => PodVec { repr: Repr::Mapped(b.clone()) },
+        }
+    }
+}
+
+impl<T: Pod> PartialEq for PodVec<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Pod> std::fmt::Debug for PodVec<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+impl<T: Pod> HeapSize for PodVec<T> {
+    fn heap_bytes(&self) -> usize {
+        match &self.repr {
+            Repr::Owned(v) => v.heap_bytes(),
+            // Mapped elements live in the page cache, not the heap —
+            // exactly the RSS the zero-copy mode saves.
+            Repr::Mapped(_) => 0,
+        }
+    }
+}
+
+/// Append-only little-endian encoder. The default writer emits the
+/// current (aligned) format; [`ByteWriter::legacy`] reproduces the
+/// pre-v3 unpadded layout for compatibility tests.
+#[derive(Debug)]
 pub struct ByteWriter {
     buf: Vec<u8>,
+    /// Zero-pad to 8-byte boundaries before slice fields (v3 format).
+    padded: bool,
+}
+
+impl Default for ByteWriter {
+    fn default() -> Self {
+        ByteWriter::new()
+    }
 }
 
 impl ByteWriter {
     pub fn new() -> Self {
-        ByteWriter { buf: Vec::new() }
+        ByteWriter { buf: Vec::new(), padded: true }
+    }
+
+    /// A writer emitting the unpadded pre-v3 slice layout. Only
+    /// compatibility tests build legacy payloads; production writers
+    /// always emit the current format.
+    pub fn legacy() -> Self {
+        ByteWriter { buf: Vec::new(), padded: false }
     }
 
     #[inline]
@@ -32,6 +302,15 @@ impl ByteWriter {
 
     pub fn into_bytes(self) -> Vec<u8> {
         self.buf
+    }
+
+    /// Zero-pads to the next 8-byte boundary (current format only).
+    #[inline]
+    fn pad_align8(&mut self) {
+        if self.padded {
+            let pad = (8 - self.buf.len() % 8) % 8;
+            self.buf.extend_from_slice(&[0u8; 8][..pad]);
+        }
     }
 
     #[inline]
@@ -57,11 +336,13 @@ impl ByteWriter {
     }
 
     pub fn put_bytes(&mut self, v: &[u8]) {
+        self.pad_align8();
         self.put_usize(v.len());
         self.buf.extend_from_slice(v);
     }
 
     pub fn put_u32s(&mut self, v: &[u32]) {
+        self.pad_align8();
         self.put_usize(v.len());
         for &x in v {
             self.buf.extend_from_slice(&x.to_le_bytes());
@@ -69,6 +350,7 @@ impl ByteWriter {
     }
 
     pub fn put_u64s(&mut self, v: &[u64]) {
+        self.pad_align8();
         self.put_usize(v.len());
         for &x in v {
             self.buf.extend_from_slice(&x.to_le_bytes());
@@ -76,6 +358,7 @@ impl ByteWriter {
     }
 
     pub fn put_usizes(&mut self, v: &[usize]) {
+        self.pad_align8();
         self.put_usize(v.len());
         for &x in v {
             self.put_u64(x as u64);
@@ -84,15 +367,42 @@ impl ByteWriter {
 }
 
 /// Checked decoder over a borrowed payload slice.
+///
+/// When the payload comes from a mapped snapshot section, `backing`
+/// carries a [`Bytes`] handle spanning exactly `buf`; the `*_ref` getters
+/// use it to hand out borrows of the mapping. Owned loads leave `backing`
+/// unset, so the same getters copy — one code path per structure serves
+/// both modes.
 #[derive(Debug, Clone)]
 pub struct ByteReader<'a> {
     buf: &'a [u8],
     pos: usize,
+    /// Whether slice fields are 8-aligned with zero padding (v3 format).
+    padded: bool,
+    /// The shared region `buf` was sliced from, when serving mapped.
+    backing: Option<Bytes>,
 }
 
 impl<'a> ByteReader<'a> {
+    /// Reader for a current-format (aligned) payload with no backing
+    /// region — `*_ref` getters copy. Matches [`ByteWriter::new`].
     pub fn new(buf: &'a [u8]) -> Self {
-        ByteReader { buf, pos: 0 }
+        ByteReader { buf, pos: 0, padded: true, backing: None }
+    }
+
+    /// Reader for a pre-v3 unpadded payload. Matches
+    /// [`ByteWriter::legacy`].
+    pub fn legacy(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0, padded: false, backing: None }
+    }
+
+    /// Reader over a snapshot section: `backing`, when present, must span
+    /// exactly `buf`; `padded` reflects the container format version.
+    pub(crate) fn with_backing(buf: &'a [u8], backing: Option<Bytes>, padded: bool) -> Self {
+        debug_assert!(backing
+            .as_ref()
+            .map_or(true, |b| b.len() == buf.len() && b.as_slice().as_ptr() == buf.as_ptr()));
+        ByteReader { buf, pos: 0, padded, backing }
     }
 
     #[inline]
@@ -111,6 +421,23 @@ impl<'a> ByteReader<'a> {
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
+    }
+
+    /// Consumes the zero padding preceding a slice field (current format
+    /// only). Nonzero pad bytes mean writer/reader disagreement.
+    fn consume_pad(&mut self) -> Result<(), StoreError> {
+        if !self.padded {
+            return Ok(());
+        }
+        let pad = (8 - self.pos % 8) % 8;
+        let s = self.take(pad)?;
+        if s.iter().any(|&b| b != 0) {
+            return Err(StoreError::corrupt(format!(
+                "nonzero alignment padding before offset {}",
+                self.pos
+            )));
+        }
+        Ok(())
     }
 
     #[inline]
@@ -154,11 +481,13 @@ impl<'a> ByteReader<'a> {
     }
 
     pub fn get_bytes(&mut self) -> Result<&'a [u8], StoreError> {
+        self.consume_pad()?;
         let n = self.get_len(1)?;
         self.take(n)
     }
 
     pub fn get_u32s(&mut self) -> Result<Vec<u32>, StoreError> {
+        self.consume_pad()?;
         let n = self.get_len(4)?;
         let raw = self.take(n * 4)?;
         Ok(raw
@@ -168,6 +497,7 @@ impl<'a> ByteReader<'a> {
     }
 
     pub fn get_u64s(&mut self) -> Result<Vec<u64>, StoreError> {
+        self.consume_pad()?;
         let n = self.get_len(8)?;
         let raw = self.take(n * 8)?;
         Ok(raw
@@ -177,12 +507,67 @@ impl<'a> ByteReader<'a> {
     }
 
     pub fn get_usizes(&mut self) -> Result<Vec<usize>, StoreError> {
+        self.consume_pad()?;
         let n = self.get_len(8)?;
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             out.push(self.get_usize()?);
         }
         Ok(out)
+    }
+
+    /// Like [`Self::get_u32s`], but borrows the mapping when one backs
+    /// this payload and the element data is aligned — the zero-copy load
+    /// path. Without a backing mapping it copies (owned loads).
+    pub fn get_u32s_ref(&mut self) -> Result<U32s, StoreError> {
+        self.consume_pad()?;
+        let n = self.get_len(4)?;
+        let start = self.pos;
+        let raw = self.take(n * 4)?;
+        if let Some(backing) = &self.backing {
+            if cfg!(target_endian = "little") && raw.as_ptr() as usize % 4 == 0 {
+                return Ok(U32s::mapped(backing.slice(start..start + n * 4)));
+            }
+            MAPPED_BORROW_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect::<Vec<u32>>()
+            .into())
+    }
+
+    /// Like [`Self::get_u64s`], but borrows the mapping when possible.
+    /// See [`Self::get_u32s_ref`].
+    pub fn get_u64s_ref(&mut self) -> Result<Words, StoreError> {
+        self.consume_pad()?;
+        let n = self.get_len(8)?;
+        let start = self.pos;
+        let raw = self.take(n * 8)?;
+        if let Some(backing) = &self.backing {
+            if cfg!(target_endian = "little") && raw.as_ptr() as usize % 8 == 0 {
+                return Ok(Words::mapped(backing.slice(start..start + n * 8)));
+            }
+            MAPPED_BORROW_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect::<Vec<u64>>()
+            .into())
+    }
+
+    /// Like [`Self::get_bytes`], but returns a shared handle that borrows
+    /// the mapping when one backs this payload (bytes need no alignment).
+    pub fn get_bytes_ref(&mut self) -> Result<Bytes, StoreError> {
+        self.consume_pad()?;
+        let n = self.get_len(1)?;
+        let start = self.pos;
+        let raw = self.take(n)?;
+        if let Some(backing) = &self.backing {
+            return Ok(backing.slice(start..start + n));
+        }
+        Ok(Bytes::from_vec(raw.to_vec()))
     }
 
     /// Errors unless the payload was consumed exactly — trailing garbage
@@ -235,6 +620,62 @@ mod tests {
     }
 
     #[test]
+    fn slice_fields_are_8_aligned_after_odd_scalars() {
+        // Tag bytes misalign the cursor; padding must realign every slice
+        // field's length prefix and element data to 8 bytes.
+        let mut w = ByteWriter::new();
+        w.put_u8(1);
+        w.put_u64s(&[10, 20]);
+        w.put_u8(2);
+        w.put_u32(3);
+        w.put_u32s(&[7, 8, 9]);
+        w.put_u8(4);
+        w.put_bytes(b"xyz");
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 1);
+        assert_eq!(r.get_u64s().unwrap(), vec![10, 20]);
+        assert_eq!(r.get_u8().unwrap(), 2);
+        assert_eq!(r.get_u32().unwrap(), 3);
+        assert_eq!(r.get_u32s().unwrap(), vec![7, 8, 9]);
+        assert_eq!(r.get_u8().unwrap(), 4);
+        assert_eq!(r.get_bytes().unwrap(), b"xyz");
+        r.expect_end().unwrap();
+        // The u64 element data (first slice field after a 1-byte tag)
+        // starts at offset 16: 7 pad + 8 count.
+        assert_eq!(&bytes[1..8], &[0u8; 7]);
+        assert_eq!(u64::from_le_bytes(bytes[8..16].try_into().unwrap()), 2);
+        assert_eq!(u64::from_le_bytes(bytes[16..24].try_into().unwrap()), 10);
+    }
+
+    #[test]
+    fn legacy_writer_matches_pre_v3_layout() {
+        // The unpadded layout: count immediately follows the cursor.
+        let mut w = ByteWriter::legacy();
+        w.put_u8(1);
+        w.put_u32s(&[5, 6]);
+        let bytes = w.into_bytes();
+        assert_eq!(bytes.len(), 1 + 8 + 8);
+        assert_eq!(u64::from_le_bytes(bytes[1..9].try_into().unwrap()), 2);
+        let mut r = ByteReader::legacy(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 1);
+        assert_eq!(r.get_u32s().unwrap(), vec![5, 6]);
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn nonzero_padding_rejected() {
+        let mut w = ByteWriter::new();
+        w.put_u8(1);
+        w.put_u64s(&[10]);
+        let mut bytes = w.into_bytes();
+        bytes[3] = 0xAB; // inside the 7 pad bytes after the tag
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 1);
+        assert!(r.get_u64s().is_err());
+    }
+
+    #[test]
     fn truncated_reads_error() {
         let mut w = ByteWriter::new();
         w.put_u64(1);
@@ -262,5 +703,113 @@ mod tests {
         let mut r = ByteReader::new(&bytes);
         let _ = r.get_u32().unwrap();
         assert!(r.expect_end().is_err());
+    }
+
+    #[test]
+    fn ref_getters_copy_without_backing() {
+        let mut w = ByteWriter::new();
+        w.put_u64s(&[1, 2, 3]);
+        w.put_u32s(&[4, 5]);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        let words = r.get_u64s_ref().unwrap();
+        let ids = r.get_u32s_ref().unwrap();
+        assert!(!words.is_mapped() && !ids.is_mapped());
+        assert_eq!(&words[..], &[1, 2, 3]);
+        assert_eq!(&ids[..], &[4, 5]);
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn ref_getters_borrow_with_backing() {
+        let before = mapped_borrow_fallbacks();
+        let mut w = ByteWriter::new();
+        w.put_u8(9); // misaligning tag, absorbed by padding
+        w.put_u64s(&[11, 22, 33]);
+        w.put_u32s(&[44, 55]);
+        w.put_bytes(b"tail");
+        let backing = Bytes::from_vec(w.into_bytes());
+        if backing.as_slice().as_ptr() as usize % 8 != 0 {
+            // Heap-backed `Bytes` stands in for a mapping here; that only
+            // works when the allocator handed back an 8-aligned buffer
+            // (real mappings are page-aligned). Skip on the rare miss.
+            return;
+        }
+        let buf: &[u8] = backing.as_slice();
+        let mut r = ByteReader::with_backing(buf, Some(backing.clone()), true);
+        assert_eq!(r.get_u8().unwrap(), 9);
+        let words = r.get_u64s_ref().unwrap();
+        let ids = r.get_u32s_ref().unwrap();
+        let tail = r.get_bytes_ref().unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(&words[..], &[11, 22, 33]);
+        assert_eq!(&ids[..], &[44, 55]);
+        assert_eq!(&tail[..], b"tail");
+        // Borrowed, not copied: the slices point into the backing region.
+        let range = backing.as_slice().as_ptr() as usize
+            ..backing.as_slice().as_ptr() as usize + backing.len();
+        assert!(range.contains(&(words.as_slice().as_ptr() as usize)));
+        assert!(range.contains(&(ids.as_slice().as_ptr() as usize)));
+        assert!(range.contains(&(tail.as_slice().as_ptr() as usize)));
+        assert_eq!(mapped_borrow_fallbacks(), before, "no fallback copies");
+        assert_eq!(words.heap_bytes(), 0, "borrowed words own no heap");
+    }
+
+    #[test]
+    fn misaligned_backing_falls_back_to_copy_and_counts() {
+        // Legacy (unpadded) layout: after a 1-byte tag the u64 element
+        // data sits at offset 9 — unaligned, so a backed reader must copy
+        // and record the fallback.
+        let mut w = ByteWriter::legacy();
+        w.put_u8(1);
+        w.put_u64s(&[10, 20]);
+        let backing = Bytes::from_vec(w.into_bytes());
+        let buf: &[u8] = backing.as_slice();
+        let before = mapped_borrow_fallbacks();
+        let mut r = ByteReader::with_backing(buf, Some(backing.clone()), false);
+        assert_eq!(r.get_u8().unwrap(), 1);
+        let words = r.get_u64s_ref().unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(&words[..], &[10, 20]);
+        assert!(!words.is_mapped());
+        assert_eq!(mapped_borrow_fallbacks(), before + 1);
+    }
+
+    #[test]
+    fn podvec_to_mut_converts_and_edits() {
+        let backing = Bytes::from_vec(42u64.to_le_bytes().to_vec());
+        if backing.as_slice().as_ptr() as usize % 8 != 0 {
+            return; // see ref_getters_borrow_with_backing
+        }
+        let mut v = Words::mapped(backing);
+        assert!(v.is_mapped());
+        assert_eq!(&v[..], &[42]);
+        v.to_mut().push(43);
+        assert!(!v.is_mapped());
+        assert_eq!(&v[..], &[42, 43]);
+        assert!(v.heap_bytes() >= 16);
+    }
+
+    #[test]
+    fn podvec_semantics_match_vec() {
+        let a: U32s = vec![1, 2, 3].into();
+        let b = a.clone();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[1], 2);
+        assert_eq!(a.iter().sum::<u32>(), 6);
+        let d = U32s::default();
+        assert!(d.is_empty());
+        assert_eq!(format!("{a:?}"), "[1, 2, 3]");
+    }
+
+    #[test]
+    fn bytes_slice_shares_region() {
+        let b = Bytes::from_vec((0u8..32).collect());
+        let s = b.slice(8..16);
+        assert_eq!(&s[..], &(8u8..16).collect::<Vec<u8>>()[..]);
+        assert!(!s.is_mapped());
+        drop(b); // region survives through the slice's Arc
+        assert_eq!(s[0], 8);
     }
 }

@@ -17,25 +17,63 @@
 //! Compatibility policy: the magic never changes; `FORMAT_VERSION` bumps on
 //! any layout change and readers reject versions they don't know —
 //! snapshots are cheap to regenerate from raw sketches, so there is no
-//! cross-version migration machinery. Version 2 (the write path) is the
-//! one *additive* exception: a v2 reader still accepts v1 files (their
-//! sections are a strict subset of v2's), and [`Snapshot::version`]
-//! exposes which format was read so higher layers can gate the
-//! v2-only sections. Anything newer than [`FORMAT_VERSION`] is rejected
+//! cross-version migration machinery. Readers accept the whole
+//! [`FORMAT_VERSION_V1`]`..=`[`FORMAT_VERSION`] range ([`Snapshot::version`]
+//! exposes which format was read so higher layers can gate newer
+//! sections); anything newer than [`FORMAT_VERSION`] is rejected
 //! outright. Opening validates the table (bounds, alignment, duplicate
 //! names) and every section checksum up front, so a truncated or
 //! bit-flipped file fails fast with [`StoreError`] instead of surfacing
 //! as a confusing payload parse error later.
+//!
+//! # Mapped-serving contract (v3)
+//!
+//! [`Snapshot::open_mapped`] serves the container straight from a
+//! read-only file mapping instead of an owned buffer. The guarantees that
+//! make this zero-copy:
+//!
+//! * **Alignment.** Section payloads start 8-aligned in the file (as in
+//!   every prior version), and — new in v3 — every slice field *inside* a
+//!   payload is zero-padded to an 8-byte boundary, so element arrays
+//!   (`u32`/`u64` words, postings, rank directories) are correctly
+//!   aligned in the mapping and can be borrowed in place
+//!   ([`crate::store::PodVec`]). This intra-payload padding is why v3 is
+//!   a version bump and not an access-pattern-only change: tag bytes in
+//!   the persisted layouts made v2 payload interiors unaligned.
+//! * **Validation still runs.** Opening a mapped snapshot checks the
+//!   header, table and every checksum, and `read_from` validation is
+//!   unchanged — only the payload *copies* are skipped.
+//! * **Mapping lifetime.** Section readers hand out `Arc`-shared slices
+//!   of the mapping; the file stays mapped until the last borrowing
+//!   structure drops. Reload/merge installs a fresh engine (owned or
+//!   newly mapped) and the old mapping is released when its last user
+//!   dies — queries in flight keep a valid view throughout.
+//! * **Fallback.** If mapping fails (or the platform has no `mmap`), the
+//!   open falls back to the owned read path; v1/v2 files open mapped too,
+//!   but their unaligned interiors fall back to owned copies per field.
+//!
+//! Mutable state (delta segments, tombstones, id counters) is never
+//! served from a mapping — the write path converts to owned on first
+//! touch ([`crate::store::PodVec::to_mut`]) and merges rebuild into owned
+//! memory.
 
+use super::bytes::Bytes;
+use super::mmap::Mmap;
 use super::{ByteReader, StoreError};
 use std::path::Path;
+use std::sync::Arc;
 
 /// File magic: the first 8 bytes of every snapshot.
 pub const MAGIC: u64 = u64::from_le_bytes(*b"bSTSNAP1");
 
-/// Current container format version (v2: adds the engine write-path
-/// sections `rows.N` / `delta.N` / `tombstones.N`).
-pub const FORMAT_VERSION: u32 = 2;
+/// Current container format version (v3: slice fields inside section
+/// payloads are 8-aligned with zero padding, enabling the zero-copy
+/// mapped load path).
+pub const FORMAT_VERSION: u32 = 3;
+
+/// The PR 4 write-path format: adds the engine sections `rows.N` /
+/// `delta.N` / `tombstones.N`. Payload interiors are unpadded.
+pub const FORMAT_VERSION_V2: u32 = 2;
 
 /// The PR 2 read-only format: engine snapshots with only `meta` +
 /// `shard.N` sections. Still readable; loads as an all-immutable engine.
@@ -215,19 +253,27 @@ impl SnapshotStreamWriter {
     }
 }
 
-/// A validated, loaded snapshot.
+/// A validated, loaded snapshot. The backing region is either an owned
+/// heap buffer ([`Snapshot::open`] / [`Snapshot::from_bytes`]) or a
+/// read-only file mapping ([`Snapshot::open_mapped`]); section readers
+/// over a mapped snapshot hand out zero-copy borrows of the mapping.
 pub struct Snapshot {
-    bytes: Vec<u8>,
+    bytes: Bytes,
     /// `(name, payload start, payload len)` per section.
     sections: Vec<(String, usize, usize)>,
-    /// Format version the file declared (v1 or v2).
+    /// Format version the file declared (v1..=v3).
     version: u32,
 }
 
 impl Snapshot {
-    /// Parses and fully validates a container (header, table bounds and
-    /// alignment, section checksums).
+    /// Parses and fully validates an owned container (header, table
+    /// bounds and alignment, section checksums).
     pub fn from_bytes(bytes: Vec<u8>) -> Result<Self, StoreError> {
+        Snapshot::from_region(Bytes::from_vec(bytes))
+    }
+
+    /// Parses and fully validates a container over any shared region.
+    fn from_region(bytes: Bytes) -> Result<Self, StoreError> {
         if bytes.len() < HEADER_BYTES {
             return Err(StoreError::corrupt(format!(
                 "file too short for a snapshot header: {} bytes",
@@ -239,7 +285,7 @@ impl Snapshot {
             return Err(StoreError::BadMagic(magic));
         }
         let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
-        if version != FORMAT_VERSION && version != FORMAT_VERSION_V1 {
+        if !(FORMAT_VERSION_V1..=FORMAT_VERSION).contains(&version) {
             return Err(StoreError::UnsupportedVersion(version));
         }
         let n_sections = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
@@ -299,13 +345,32 @@ impl Snapshot {
         Ok(Snapshot { bytes, sections, version })
     }
 
-    /// Reads and validates a snapshot file.
+    /// Reads and validates a snapshot file into an owned buffer.
     pub fn open(path: &Path) -> Result<Self, StoreError> {
         Snapshot::from_bytes(std::fs::read(path)?)
     }
 
-    /// Format version the file declared ([`FORMAT_VERSION`] or
-    /// [`FORMAT_VERSION_V1`]).
+    /// Maps and validates a snapshot file — the zero-copy serving mode.
+    /// Table and checksum validation run exactly as in [`Snapshot::open`]
+    /// (one sequential read through the page cache), but no payload bytes
+    /// are copied to the heap; section readers borrow the mapping. Only
+    /// *mapping* failures (unsupported platform, resource limits) fall
+    /// back to the owned read path — validation errors propagate.
+    pub fn open_mapped(path: &Path) -> Result<Self, StoreError> {
+        let file = std::fs::File::open(path)?;
+        match Mmap::map(&file) {
+            Ok(m) => Snapshot::from_region(Bytes::from_map(Arc::new(m))),
+            Err(_) => Snapshot::open(path),
+        }
+    }
+
+    /// Whether this snapshot serves from a file mapping.
+    pub fn is_mapped(&self) -> bool {
+        self.bytes.is_mapped()
+    }
+
+    /// Format version the file declared ([`FORMAT_VERSION_V1`]
+    /// `..=` [`FORMAT_VERSION`]).
     pub fn version(&self) -> u32 {
         self.version
     }
@@ -319,14 +384,23 @@ impl Snapshot {
         self.sections.iter().any(|(n, _, _)| n == name)
     }
 
-    /// A checked reader over the named section's payload.
+    /// A checked reader over the named section's payload. The reader is
+    /// format-aware (v3 payload interiors are aligned, older ones are
+    /// not) and, on a mapped snapshot, carries the backing region so
+    /// `*_ref` reads borrow the mapping instead of copying.
     pub fn section(&self, name: &str) -> Result<ByteReader<'_>, StoreError> {
         let (_, off, len) = self
             .sections
             .iter()
             .find(|(n, _, _)| n == name)
             .ok_or_else(|| StoreError::MissingSection(name.to_string()))?;
-        Ok(ByteReader::new(&self.bytes[*off..*off + *len]))
+        let padded = self.version > FORMAT_VERSION_V2;
+        let backing = if self.bytes.is_mapped() {
+            Some(self.bytes.slice(*off..*off + *len))
+        } else {
+            None
+        };
+        Ok(ByteReader::with_backing(&self.bytes[*off..*off + *len], backing, padded))
     }
 }
 
@@ -475,5 +549,65 @@ mod tests {
         for (_, off, _) in &snap.sections {
             assert_eq!(off % 8, 0);
         }
+    }
+
+    #[test]
+    fn open_mapped_matches_owned_open() {
+        use crate::store::bytes::ByteWriter;
+        let mut b = SnapshotBuilder::new();
+        let mut w = ByteWriter::new();
+        w.put_u8(5);
+        w.put_u64s(&[1, 2, 3]);
+        w.put_u32s(&[7, 8]);
+        b.add_section("payload", w.into_bytes());
+        b.add_section("empty", Vec::new());
+        let dir = std::env::temp_dir().join("bst_container_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mapped.snap");
+        b.write_to(&path).unwrap();
+
+        let owned = Snapshot::open(&path).unwrap();
+        let mapped = Snapshot::open_mapped(&path).unwrap();
+        assert!(!owned.is_mapped());
+        assert_eq!(owned.version(), mapped.version());
+        assert_eq!(
+            owned.section_names().collect::<Vec<_>>(),
+            mapped.section_names().collect::<Vec<_>>()
+        );
+        for snap in [&owned, &mapped] {
+            let mut r = snap.section("payload").unwrap();
+            assert_eq!(r.get_u8().unwrap(), 5);
+            let words = r.get_u64s_ref().unwrap();
+            let ids = r.get_u32s_ref().unwrap();
+            r.expect_end().unwrap();
+            assert_eq!(&words[..], &[1, 2, 3]);
+            assert_eq!(&ids[..], &[7, 8]);
+            // Zero-copy on the mapped side (mappings are page-aligned,
+            // so the aligned v3 interior always borrows), owned copies.
+            assert_eq!(words.is_mapped(), snap.is_mapped());
+            assert_eq!(ids.is_mapped(), snap.is_mapped());
+            assert_eq!(snap.section("empty").unwrap().remaining(), 0);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn v2_sections_read_with_legacy_layout() {
+        use crate::store::bytes::ByteWriter;
+        // A v2 file's payload interiors are unpadded; the section reader
+        // must decode them with padding disabled.
+        let mut w = ByteWriter::legacy();
+        w.put_u8(9);
+        w.put_u32s(&[4, 5, 6]);
+        let mut b = SnapshotBuilder::new();
+        b.add_section("legacy", w.into_bytes());
+        let mut bytes = b.to_bytes();
+        bytes[8..12].copy_from_slice(&FORMAT_VERSION_V2.to_le_bytes());
+        let snap = Snapshot::from_bytes(bytes).unwrap();
+        assert_eq!(snap.version(), FORMAT_VERSION_V2);
+        let mut r = snap.section("legacy").unwrap();
+        assert_eq!(r.get_u8().unwrap(), 9);
+        assert_eq!(r.get_u32s().unwrap(), vec![4, 5, 6]);
+        r.expect_end().unwrap();
     }
 }

@@ -1,0 +1,182 @@
+//! Dependency-free read-only memory mapping.
+//!
+//! The zero-copy serving mode ([`crate::store::container::Snapshot::open_mapped`])
+//! maps the snapshot file instead of reading it into an owned buffer, so
+//! immutable section payloads can be served straight from the page cache.
+//! Rust's standard library has no mmap wrapper and this repo takes no
+//! external dependencies, so the two needed libc entry points (`mmap` /
+//! `munmap`) are declared here directly over [`File::as_raw_fd`].
+//!
+//! Scope is deliberately tiny: whole-file, `PROT_READ`, `MAP_PRIVATE`
+//! (read-only — a private mapping of an immutable snapshot never faults
+//! a dirty page), unmapped on drop. Callers share the mapping through an
+//! `Arc`; the last clone to die runs `munmap`. On non-unix targets
+//! [`Mmap::map`] returns `Err`, and every caller falls back to the owned
+//! (`std::fs::read`) load path.
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+    pub const MAP_FAILED: *mut c_void = !0usize as *mut c_void;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// A read-only mapping of an entire file.
+#[derive(Debug)]
+pub struct Mmap {
+    /// Base address; dangling (never dereferenced, never unmapped) when
+    /// `len == 0` — a zero-length `mmap` is `EINVAL`, so empty files are
+    /// represented without a kernel mapping at all.
+    ptr: *const u8,
+    len: usize,
+}
+
+// The mapping is immutable (PROT_READ) and owned until drop, so shared
+// references to its bytes are valid from any thread.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Maps `file` read-only in its entirety. Errors (platform without
+    /// mmap, exotic file kinds, resource limits) are returned so the
+    /// caller can fall back to an owned read.
+    pub fn map(file: &std::fs::File) -> std::io::Result<Mmap> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let len = file.metadata()?.len();
+            let len = usize::try_from(len).map_err(|_| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidInput,
+                    "file too large to map on this platform",
+                )
+            })?;
+            if len == 0 {
+                return Ok(Mmap { ptr: std::ptr::NonNull::<u8>::dangling().as_ptr(), len: 0 });
+            }
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr == sys::MAP_FAILED {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(Mmap { ptr: ptr as *const u8, len })
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = file;
+            Err(std::io::Error::new(
+                std::io::ErrorKind::Unsupported,
+                "mmap is unavailable on this platform",
+            ))
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The mapped bytes. Valid for the lifetime of the mapping (callers
+    /// keep the `Arc<Mmap>` alive alongside any derived pointer).
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        // Safety: `ptr` is either a live PROT_READ mapping of exactly
+        // `len` bytes or dangling with `len == 0`; both satisfy
+        // `from_raw_parts`.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if self.len > 0 {
+            // Safety: `ptr`/`len` came from a successful mmap and are
+            // unmapped exactly once (Mmap is neither Clone nor Copy).
+            unsafe {
+                sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp(name: &str, contents: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("bst_mmap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(contents).unwrap();
+        path
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn maps_file_contents() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let path = tmp("contents.bin", &data);
+        let m = Mmap::map(&std::fs::File::open(&path).unwrap()).unwrap();
+        assert_eq!(m.len(), data.len());
+        assert_eq!(m.as_slice(), &data[..]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn empty_file_maps_to_empty_slice() {
+        let path = tmp("empty.bin", &[]);
+        let m = Mmap::map(&std::fs::File::open(&path).unwrap()).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.as_slice(), &[] as &[u8]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn mapping_survives_arc_sharing_across_threads() {
+        let data = vec![7u8; 4096 * 3 + 5];
+        let path = tmp("shared.bin", &data);
+        let m = std::sync::Arc::new(Mmap::map(&std::fs::File::open(&path).unwrap()).unwrap());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = std::sync::Arc::clone(&m);
+                std::thread::spawn(move || m.as_slice().iter().map(|&b| b as u64).sum::<u64>())
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 7 * data.len() as u64);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+}

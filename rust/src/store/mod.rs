@@ -12,7 +12,12 @@
 //!
 //! * [`container`] — the file format: magic, format version, 8-byte
 //!   aligned sections with per-section lengths and FNV-1a checksums.
-//! * [`bytes`] — checked little-endian cursors used inside sections.
+//! * [`bytes`] — checked little-endian cursors used inside sections,
+//!   plus the owned/mapped dual representation ([`Bytes`], [`PodVec`])
+//!   behind zero-copy serving.
+//! * [`mmap`] — dependency-free read-only file mapping
+//!   ([`Snapshot::open_mapped`] serves sections straight from the page
+//!   cache; see the mapped-serving contract in [`container`]).
 //! * [`Persist`] — `write_into` / `read_from` implemented by every
 //!   persistent structure ([`crate::bits::BitVec`], [`crate::bits::RsBitVec`],
 //!   [`crate::bits::IntVec`], the sketch stores, all four tries, all six
@@ -22,11 +27,16 @@
 
 pub mod bytes;
 pub mod container;
+pub mod mmap;
 
-pub use bytes::{ByteReader, ByteWriter};
-pub use container::{
-    Snapshot, SnapshotBuilder, SnapshotStreamWriter, FORMAT_VERSION, FORMAT_VERSION_V1, MAGIC,
+pub use bytes::{
+    mapped_borrow_fallbacks, ByteReader, ByteWriter, Bytes, Pod, PodVec, U32s, Words,
 };
+pub use container::{
+    Snapshot, SnapshotBuilder, SnapshotStreamWriter, FORMAT_VERSION, FORMAT_VERSION_V1,
+    FORMAT_VERSION_V2, MAGIC,
+};
+pub use mmap::Mmap;
 
 use std::fmt;
 
@@ -107,6 +117,14 @@ pub trait Persist: Sized {
 /// Serializes one structure into a standalone section payload.
 pub fn to_payload<T: Persist>(x: &T) -> Vec<u8> {
     let mut w = ByteWriter::new();
+    x.write_into(&mut w);
+    w.into_bytes()
+}
+
+/// [`to_payload`] in the legacy pre-v3 (unpadded) layout — for
+/// constructing version-1/2 containers in compatibility tests.
+pub fn to_payload_legacy<T: Persist>(x: &T) -> Vec<u8> {
+    let mut w = ByteWriter::legacy();
     x.write_into(&mut w);
     w.into_bytes()
 }

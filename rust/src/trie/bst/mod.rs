@@ -31,7 +31,7 @@ pub use middle::MiddleRepr;
 use super::builder::SortedSketches;
 use super::SketchTrie;
 use crate::query::{Collector, QueryCtx};
-use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError, U32s};
 use crate::util::HeapSize;
 
 /// The b-bit sketch trie.
@@ -48,8 +48,8 @@ pub struct BstTrie {
     /// Sparse layer: collapsed suffixes + leaf grouping.
     pub(crate) sparse: sparse::SparseLayer,
     /// Leaf postings (leaf k ↔ distinct sketch k).
-    pub(crate) post_offsets: Vec<u32>,
-    pub(crate) post_ids: Vec<u32>,
+    pub(crate) post_offsets: U32s,
+    pub(crate) post_ids: U32s,
     /// Largest posting id, cached at construction (`None` when empty) —
     /// loaders bound ids against the stripe they serve on every snapshot
     /// open, so this must not be an O(n) scan per call.
@@ -91,8 +91,8 @@ impl BstTrie {
             ls,
             middle,
             sparse,
-            post_offsets,
-            post_ids,
+            post_offsets: post_offsets.into(),
+            post_ids: post_ids.into(),
             max_post,
             level_counts: counts.to_vec(),
         }
@@ -197,8 +197,8 @@ impl Persist for BstTrie {
             middle.push(middle::MiddleLevel::read_from(r)?);
         }
         let sparse = sparse::SparseLayer::read_from(r)?;
-        let post_offsets = r.get_u32s()?;
-        let post_ids = r.get_u32s()?;
+        let post_offsets = r.get_u32s_ref()?;
+        let post_ids = r.get_u32s_ref()?;
         let level_counts = r.get_usizes()?;
 
         ensure(level_counts.len() == l + 1 && level_counts[0] == 1, || {

@@ -17,7 +17,7 @@ use super::builder::SortedSketches;
 use super::bst::MiddleRepr;
 use super::SketchTrie;
 use crate::query::{Collector, QueryCtx};
-use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError, U32s};
 use crate::util::HeapSize;
 
 // Reuse the per-level encodings from the bst middle layer.
@@ -32,8 +32,8 @@ pub struct FstTrie {
     b: usize,
     l: usize,
     t: usize,
-    post_offsets: Vec<u32>,
-    post_ids: Vec<u32>,
+    post_offsets: U32s,
+    post_ids: U32s,
 }
 
 impl FstTrie {
@@ -80,8 +80,8 @@ impl FstTrie {
             b,
             l,
             t: ss.total_nodes(),
-            post_offsets,
-            post_ids,
+            post_offsets: post_offsets.into(),
+            post_ids: post_ids.into(),
         }
     }
 
@@ -170,8 +170,8 @@ impl Persist for FstTrie {
         for _ in 0..l {
             levels.push(MiddleLevel::read_from(r)?);
         }
-        let post_offsets = r.get_u32s()?;
-        let post_ids = r.get_u32s()?;
+        let post_offsets = r.get_u32s_ref()?;
+        let post_ids = r.get_u32s_ref()?;
         // Validate the per-level chain: level ℓ's encoding must cover the
         // previous level's node count (the root level has one parent).
         let mut t_prev = 1usize;

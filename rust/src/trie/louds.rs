@@ -22,7 +22,7 @@ use super::SketchTrie;
 use crate::query::{Collector, QueryCtx};
 use crate::bits::rsvec::SelectMode;
 use crate::bits::{BitVec, IntVec, RsBitVec};
-use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError};
+use crate::store::{ensure, ByteReader, ByteWriter, Persist, StoreError, U32s};
 use crate::util::HeapSize;
 
 /// Classic LOUDS representation of a sketch trie.
@@ -36,8 +36,8 @@ pub struct LoudsTrie {
     /// Leaves = last `t_L` nodes in level order.
     n_leaves: usize,
     l: usize,
-    post_offsets: Vec<u32>,
-    post_ids: Vec<u32>,
+    post_offsets: U32s,
+    post_ids: U32s,
 }
 
 impl LoudsTrie {
@@ -98,8 +98,8 @@ impl LoudsTrie {
             t,
             n_leaves,
             l,
-            post_offsets,
-            post_ids,
+            post_offsets: post_offsets.into(),
+            post_ids: post_ids.into(),
         }
     }
 
@@ -167,8 +167,8 @@ impl Persist for LoudsTrie {
         let t = r.get_usize()?;
         let n_leaves = r.get_usize()?;
         let l = r.get_usize()?;
-        let post_offsets = r.get_u32s()?;
-        let post_ids = r.get_u32s()?;
+        let post_offsets = r.get_u32s_ref()?;
+        let post_ids = r.get_u32s_ref()?;
         ensure(l >= 1 && n_leaves >= 1 && n_leaves <= t, || {
             format!("LOUDS: bad shape t={t} leaves={n_leaves} L={l}")
         })?;

@@ -173,6 +173,42 @@ fn reload_swaps_in_snapshot_engine() {
     let still = client.call(&format!(r#"{{"op":"count","q":[{q}],"tau":12}}"#));
     assert_eq!(still.get("count").and_then(|c| c.as_usize()), Some(n1));
 
+    // A corrupt snapshot fails validation — error response, old engine
+    // keeps serving untouched.
+    let corrupt = dir.join("corrupt.snap");
+    let mut bytes = std::fs::read(&snap).unwrap();
+    let mid = bytes.len() / 2;
+    for b in &mut bytes[mid..mid + 8] {
+        *b ^= 0x11;
+    }
+    std::fs::write(&corrupt, &bytes).unwrap();
+    let err = client.call(&format!(
+        r#"{{"op":"reload","path":"{}"}}"#,
+        corrupt.display()
+    ));
+    assert!(err.get("error").is_some(), "{err:?}");
+    let still = client.call(&format!(r#"{{"op":"count","q":[{q}],"tau":12}}"#));
+    assert_eq!(still.get("count").and_then(|c| c.as_usize()), Some(n1));
+
+    // A snapshot with the right L but a different alphabet width is
+    // rejected as a schema mismatch.
+    let rows4: Vec<Vec<u8>> = (0..80)
+        .map(|_| (0..12).map(|_| rng.below(16) as u8).collect())
+        .collect();
+    let set4 = SketchSet::from_rows(4, 12, &rows4);
+    let engine4 = Engine::build(&set4, 1, &ShardIndexKind::Bst(BstConfig::default()));
+    let snap4 = dir.join("wrong_b.snap");
+    engine4.save(&snap4).unwrap();
+    drop(engine4);
+    let err = client.call(&format!(
+        r#"{{"op":"reload","path":"{}"}}"#,
+        snap4.display()
+    ));
+    let msg = err.get("error").and_then(|e| e.as_str()).expect("error response").to_string();
+    assert!(msg.contains("b=4"), "mismatch names the offending width: {msg}");
+    let still = client.call(&format!(r#"{{"op":"count","q":[{q}],"tau":12}}"#));
+    assert_eq!(still.get("count").and_then(|c| c.as_usize()), Some(n1));
+
     // Reload the snapshot: subsequent queries hit the new database.
     let ok = client.call(&format!(
         r#"{{"op":"reload","path":"{}"}}"#,
@@ -186,6 +222,59 @@ fn reload_swaps_in_snapshot_engine() {
     // top-k over the reloaded engine still flows end to end.
     let topk = client.call(&format!(r#"{{"op":"topk","q":[{q}],"k":3}}"#));
     assert_eq!(topk.get("ids").and_then(|a| a.as_arr()).map(|a| a.len()), Some(3));
+
+    handle.stop();
+    for p in [&snap, &corrupt, &snap4] {
+        std::fs::remove_file(p).unwrap();
+    }
+}
+
+/// A server in mapped mode (`--mmap`): the cold-started engine serves
+/// zero-copy from the snapshot mapping, answers over TCP exactly like
+/// the engine it was saved from, and `reload` keeps the mapped mode.
+#[test]
+fn mapped_serving_over_tcp_matches_owned() {
+    let (engine, rows) = make_engine(500);
+    let dir = std::env::temp_dir().join("bst_server_mmap_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let snap = dir.join("serve.snap");
+    engine.save(&snap).unwrap();
+
+    let mapped = Engine::load_with(&snap, true).expect("mapped cold start");
+    let cfg = ServeConfig { addr: "127.0.0.1:0".into(), mmap: true, ..Default::default() };
+    let handle = server::serve(Arc::new(mapped), cfg).expect("serve");
+    let mut client = Client::connect(handle.addr);
+
+    for qi in [0usize, 250, 499] {
+        let q = &rows[qi];
+        let req = format!(
+            r#"{{"op":"search","q":[{}],"tau":2}}"#,
+            q.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(",")
+        );
+        let mut ids: Vec<u32> = client
+            .call(&req)
+            .get("ids")
+            .and_then(|a| a.as_arr())
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as u32)
+            .collect();
+        ids.sort();
+        let mut expect = engine.search(q, 2);
+        expect.sort();
+        assert_eq!(ids, expect, "qi={qi}");
+    }
+
+    // reload under the mapped serving mode swaps in another mapped load
+    let ok = client.call(&format!(
+        r#"{{"op":"reload","path":"{}"}}"#,
+        snap.display()
+    ));
+    assert_eq!(ok.get("ok").and_then(|b| b.as_bool()), Some(true), "{ok:?}");
+    assert_eq!(ok.get("n").and_then(|n| n.as_usize()), Some(rows.len()));
+    let q = "0,".repeat(11) + "0";
+    let after = client.call(&format!(r#"{{"op":"count","q":[{q}],"tau":12}}"#));
+    assert_eq!(after.get("count").and_then(|c| c.as_usize()), Some(rows.len()));
 
     handle.stop();
     std::fs::remove_file(&snap).unwrap();

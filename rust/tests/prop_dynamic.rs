@@ -9,7 +9,7 @@ use bst::coordinator::engine::{Engine, MergeSummary, ShardIndexKind};
 use bst::index::{SearchIndex, SingleBst};
 use bst::sketch::hamming::ham_chars;
 use bst::sketch::SketchSet;
-use bst::store::{to_payload, ByteWriter, SnapshotBuilder, FORMAT_VERSION_V1};
+use bst::store::{to_payload_legacy, ByteWriter, SnapshotBuilder, FORMAT_VERSION_V1};
 use bst::trie::bst::BstConfig;
 use bst::util::Rng;
 
@@ -131,6 +131,13 @@ fn prop_dynamic_matches_linear_oracle() {
         assert_eq!(loaded.n(), oracle.rows.len());
         assert_eq!(loaded.b(), b);
         check_engine(&loaded, &oracle, &mut rng, b, l, "reloaded");
+        // Mapped axis: the same mid-state snapshot (deltas + tombstones
+        // live in the container) served zero-copy from a read-only
+        // mapping must match the oracle exactly like the owned load.
+        let mapped = Engine::load_with(&path, true).unwrap();
+        assert_eq!(mapped.n(), loaded.n());
+        assert_eq!(mapped.b(), b);
+        check_engine(&mapped, &oracle, &mut rng, b, l, "reloaded (mapped)");
 
         let extra: Vec<Vec<u8>> = (0..17)
             .map(|_| random_row(&mut rng, b, l, &centers))
@@ -149,6 +156,27 @@ fn prop_dynamic_matches_linear_oracle() {
         loaded.save(&path).unwrap();
         let cold = Engine::load(&path).unwrap();
         check_engine(&cold, &oracle, &mut rng, b, l, "cold after merge");
+        // A mapped cold start stays fully writable: inserts land in
+        // owned deltas, merges rebuild into owned memory (never into
+        // the read-only mapping), and a save from the mapped engine
+        // reloads identically.
+        let cold_mapped = Engine::load_with(&path, true).unwrap();
+        check_engine(&cold_mapped, &oracle, &mut rng, b, l, "cold after merge (mapped)");
+        let extra: Vec<Vec<u8>> = (0..9)
+            .map(|_| random_row(&mut rng, b, l, &centers))
+            .collect();
+        cold_mapped.insert_batch(&extra).unwrap();
+        oracle.rows.extend(extra);
+        oracle.alive.resize(oracle.rows.len(), true);
+        let id = (oracle.rows.len() - 2) as u32;
+        assert!(cold_mapped.delete(id));
+        oracle.alive[id as usize] = false;
+        check_engine(&cold_mapped, &oracle, &mut rng, b, l, "mapped+written");
+        assert_eq!(cold_mapped.merge().skipped, 0);
+        check_engine(&cold_mapped, &oracle, &mut rng, b, l, "mapped+merged");
+        cold_mapped.save(&path).unwrap();
+        let resaved = Engine::load(&path).unwrap();
+        check_engine(&resaved, &oracle, &mut rng, b, l, "saved from mapped");
         std::fs::remove_file(&path).unwrap();
     }
 }
@@ -198,28 +226,39 @@ fn mutated_snapshot_sections_and_corruption() {
             *b ^= 0x24;
         }
         std::fs::write(&path, &bad).unwrap();
-        if Engine::load(&path).is_err() {
+        let owned_err = Engine::load(&path).is_err();
+        // Validation is identical under both load modes — a mapped load
+        // must reject exactly the files the owned load rejects.
+        assert_eq!(
+            Engine::load_with(&path, true).is_err(),
+            owned_err,
+            "mapped/owned corruption verdicts diverge at pos={pos}"
+        );
+        if owned_err {
             ok += 1;
         }
     }
     assert!(ok > 0, "at least the payload flips must be rejected");
     std::fs::write(&path, &good).unwrap();
     assert!(Engine::load(&path).is_ok(), "pristine bytes load again");
+    assert!(Engine::load_with(&path, true).is_ok(), "pristine bytes map again");
     std::fs::remove_file(&path).unwrap();
 }
 
 /// Builds a v1-era container byte-for-byte: v1 `meta` layout (L, n,
-/// shard offsets) + `shard.N` payloads, version field patched to 1.
+/// shard offsets) + `shard.N` payloads in the legacy unpadded byte
+/// layout, version field patched to 1 (v1/v2 sections carry no interior
+/// alignment padding — the reader keys the layout off the version).
 fn v1_container(set: &SketchSet, extra_sections: &[(&str, Vec<u8>)]) -> Vec<u8> {
     let index = ShardIndexKind::Bst(BstConfig::default()).build_index(set);
-    let mut meta = ByteWriter::new();
+    let mut meta = ByteWriter::legacy();
     meta.put_usize(set.l());
     meta.put_usize(set.n());
     meta.put_usize(1); // one shard
     meta.put_u64(0); // offset 0
     let mut builder = SnapshotBuilder::new();
     builder.add_section("meta", meta.into_bytes());
-    builder.add_section("shard.0", to_payload(&index));
+    builder.add_section("shard.0", to_payload_legacy(&index));
     for (name, payload) in extra_sections {
         builder.add_section(name, payload.clone());
     }
@@ -247,6 +286,11 @@ fn v1_loads_all_immutable_and_rejects_smuggled_deltas() {
     let engine = Engine::load(&path).unwrap();
     assert_eq!(engine.n(), 120);
     assert_eq!(engine.b(), 2);
+    // v1 files also load under the mapped mode (their unpadded interiors
+    // simply fall back to owned copies where alignment demands it).
+    let v1_mapped = Engine::load_with(&path, true).unwrap();
+    assert_eq!(v1_mapped.n(), 120);
+    assert_eq!(v1_mapped.search(&rows[0], 0), engine.search(&rows[0], 0));
     // read path parity against a from-scratch index
     let oracle_idx = SingleBst::build(&set, BstConfig::default());
     for qi in [0usize, 50, 119] {
@@ -277,7 +321,7 @@ fn v1_loads_all_immutable_and_rejects_smuggled_deltas() {
     assert_eq!(reloaded.merge().skipped, 1);
 
     // A "v1" file carrying a delta section must not silently load.
-    let mut w = ByteWriter::new();
+    let mut w = ByteWriter::legacy();
     w.put_u32s(&[1, 2, 3]);
     let smuggled = v1_container(&set, &[("delta.0", w.into_bytes())]);
     let bad = dir.join("smuggled.snap");

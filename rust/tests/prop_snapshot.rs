@@ -5,6 +5,11 @@
 //! even the emission order must match), re-serialization must be
 //! byte-stable, truncated payloads must be rejected, and corrupted
 //! container bytes must be caught by the section checksums.
+//!
+//! Every roundtrip runs on **two axes**: the owned load (payload bytes
+//! copied into fresh allocations) and the mapped load (the container
+//! `mmap`ed read-only, payload arrays borrowing the mapping zero-copy).
+//! Both must answer identically and re-serialize byte-identically.
 
 use bst::index::{
     HmSearch, LinearScan, Mih, MultiBst, SearchIndex, Sih, SingleBst, SingleFst, SingleLouds,
@@ -48,8 +53,9 @@ fn queries(rows: &[Vec<u8>], b: usize, l: usize, seed: u64) -> Vec<Vec<u8>> {
 
 /// Roundtrips `x` through its payload encoding, checks byte-stability,
 /// truncation rejection, and container-checksum corruption rejection,
-/// then hands `(original, loaded)` to the caller's equality check.
-fn check_persist<T: Persist>(x: &T, label: &str, check_equal: impl FnOnce(&T, &T)) {
+/// then hands `(original, loaded)` to the caller's equality check —
+/// once for the owned load and once for the mapped (zero-copy) load.
+fn check_persist<T: Persist>(x: &T, label: &str, check_equal: impl Fn(&T, &T)) {
     let bytes = to_payload(x);
     let loaded: T = from_payload(&mut ByteReader::new(&bytes))
         .unwrap_or_else(|e| panic!("{label}: roundtrip failed: {e}"));
@@ -59,6 +65,34 @@ fn check_persist<T: Persist>(x: &T, label: &str, check_equal: impl FnOnce(&T, &T
         "{label}: re-serialization must be byte-stable"
     );
     check_equal(x, &loaded);
+
+    // Mapped axis: the same payload served from a read-only mapping.
+    // Section payloads are 8-aligned within the page-aligned mapping,
+    // so the wide arrays borrow in place instead of being copied.
+    {
+        let mut builder = SnapshotBuilder::new();
+        builder.add_section("payload", bytes.clone());
+        let dir = std::env::temp_dir().join("bst_prop_snapshot_mmap");
+        std::fs::create_dir_all(&dir).unwrap();
+        let safe: String = label
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        let path = dir.join(format!("{safe}.snap"));
+        std::fs::write(&path, builder.to_bytes()).unwrap();
+        let snap = Snapshot::open_mapped(&path)
+            .unwrap_or_else(|e| panic!("{label}: mapped open failed: {e}"));
+        let mut r = snap.section("payload").unwrap();
+        let mapped: T = from_payload(&mut r)
+            .unwrap_or_else(|e| panic!("{label}: mapped roundtrip failed: {e}"));
+        assert_eq!(
+            to_payload(&mapped),
+            bytes,
+            "{label}: mapped re-serialization must be byte-stable"
+        );
+        check_equal(x, &mapped);
+        let _ = std::fs::remove_file(&path);
+    }
 
     // Truncated payloads must error, never panic.
     for cut in [0usize, 5, bytes.len() / 3, bytes.len() / 2, bytes.len() - 1] {

@@ -3,13 +3,21 @@
 //! over the same sketches, and loading performs **zero** reconstruction —
 //! no `SortedSketches::build`, no rank/select directory builds.
 //!
-//! The no-rebuild proof uses process-global counters, so this file
-//! intentionally contains a single `#[test]` (sibling tests in the same
-//! binary would race the counters).
+//! The mapped cold start (`Engine::load_with(path, true)`) additionally
+//! proves **zero payload-sized heap copies**: every wide array getter
+//! that fails to borrow from the mapping bumps a process-global fallback
+//! counter, and this test asserts the counter does not move — on a
+//! little-endian host every section payload is 8-aligned inside the
+//! page-aligned mapping, so every borrow must succeed.
+//!
+//! The no-rebuild and no-copy proofs use process-global counters, so
+//! this file intentionally contains a single `#[test]` (sibling tests in
+//! the same binary would race the counters).
 
 use bst::bits::rsvec::directory_builds;
 use bst::coordinator::engine::{Engine, ShardIndexKind};
 use bst::sketch::SketchSet;
+use bst::store::mapped_borrow_fallbacks;
 use bst::trie::builder::build_invocations;
 use bst::trie::bst::BstConfig;
 use bst::util::Rng;
@@ -65,22 +73,63 @@ fn engine_load_serves_without_reconstruction() {
         assert!(loaded.heap_bytes() > 0);
         assert!(loaded.heap_bytes() <= built.heap_bytes(), "{name}: loaded is never larger");
 
+        // Mapped cold start: same no-rebuild guarantees, plus zero
+        // payload-sized heap copies — every wide-array read borrows the
+        // mapping (any copy fallback would bump the global counter).
+        let builds_before = build_invocations();
+        let dirs_before = directory_builds();
+        let falls_before = mapped_borrow_fallbacks();
+        let mapped = Engine::load_with(&path, true).unwrap();
+        assert_eq!(
+            build_invocations(),
+            builds_before,
+            "{name}: mapped load must not re-run SortedSketches::build"
+        );
+        assert_eq!(
+            directory_builds(),
+            dirs_before,
+            "{name}: mapped load must not rebuild any rank/select directory"
+        );
+        assert_eq!(
+            mapped_borrow_fallbacks(),
+            falls_before,
+            "{name}: mapped load must not copy any payload array"
+        );
+        assert_eq!(mapped.n(), built.n());
+        // Borrowed arrays report zero owned heap, so the mapped engine's
+        // assembly-time heap must come in strictly below the owned load.
+        assert!(
+            mapped.heap_bytes() < loaded.heap_bytes(),
+            "{name}: mapped heap {} !< owned heap {}",
+            mapped.heap_bytes(),
+            loaded.heap_bytes()
+        );
+
         let mut qrng = Rng::new(0x5EED);
         for _ in 0..10 {
             let q = rows[qrng.below_usize(rows.len())].clone();
             for tau in [0usize, 1, 3, 5] {
                 let mut a = built.search(&q, tau);
                 let mut b = loaded.search(&q, tau);
+                let mut m = mapped.search(&q, tau);
                 a.sort();
                 b.sort();
+                m.sort();
                 assert_eq!(a, b, "{name}: search tau={tau}");
+                assert_eq!(a, m, "{name}: mapped search tau={tau}");
                 assert_eq!(built.count(&q, tau), loaded.count(&q, tau), "{name}: count");
+                assert_eq!(built.count(&q, tau), mapped.count(&q, tau), "{name}: mapped count");
             }
             for k in [1usize, 10, 100] {
                 assert_eq!(
                     built.top_k(&q, k, l),
                     loaded.top_k(&q, k, l),
                     "{name}: topk k={k}"
+                );
+                assert_eq!(
+                    built.top_k(&q, k, l),
+                    mapped.top_k(&q, k, l),
+                    "{name}: mapped topk k={k}"
                 );
             }
         }
