@@ -1,5 +1,7 @@
 //! Serving configuration.
 
+use crate::store::WalSync;
+
 /// Parameters of the query service.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -28,6 +30,19 @@ pub struct ServeConfig {
     /// `false` (default) snapshots load fully owned. The initial
     /// engine is loaded by the caller — this field governs reloads.
     pub mmap: bool,
+    /// Write-ahead-log segment base path (`--wal`). `None` serves
+    /// without durability: acknowledged writes live only in memory
+    /// until an explicit save. The caller attaches the WAL to the
+    /// engine before serving ([`super::engine::Engine::attach_wal`]).
+    pub wal: Option<std::path::PathBuf>,
+    /// Fsync policy for WAL appends (`--wal-sync`); see the durability
+    /// contract in [`crate::store::wal`]. Only meaningful with `wal`.
+    pub wal_sync: WalSync,
+    /// Largest accepted request line in bytes (`--max-request-bytes`).
+    /// Longer lines are answered with an error (and counted in
+    /// `metrics.errors`) without buffering them — one hostile client
+    /// cannot OOM the server — and the connection keeps serving.
+    pub max_request_bytes: usize,
 }
 
 impl Default for ServeConfig {
@@ -41,6 +56,9 @@ impl Default for ServeConfig {
             merge_threshold: 4096,
             block_width: 8,
             mmap: false,
+            wal: None,
+            wal_sync: WalSync::Always,
+            max_request_bytes: 16 << 20,
         }
     }
 }

@@ -36,22 +36,45 @@
 //! engines without raw rows: they serve and accept inserts/deletes, but
 //! cannot merge until rebuilt. Loading stays parse-only — no sorting, no
 //! trie construction, no rank/select re-indexing.
+//!
+//! **Durability** ([`Engine::attach_wal`]): with a write-ahead log
+//! attached, every insert/delete appends one record — fsync'd per the
+//! [`crate::store::wal::WalSync`] policy — *under the insert lock,
+//! before the rows are enqueued on any shard*, so a write is durable
+//! before it is acknowledged and the log's record order equals the
+//! shards' apply order. `Engine::save` rotates the log under the same
+//! lock (the PR 6 save fence): a fresh segment opens before the parts
+//! fan-out and the old segments are deleted only after the snapshot has
+//! durably renamed into place. On the next [`Engine::load`] +
+//! `attach_wal`, records past the snapshot's id high-water mark replay
+//! (torn tails truncate at a record boundary, never error).
+//!
+//! **Failure isolation**: each shard worker runs its message loop under
+//! `catch_unwind`. A panic discards the (possibly half-mutated) shard
+//! state, bumps `worker_restarts`, and rebuilds the shard from the last
+//! snapshot + WAL replay while every other shard keeps serving;
+//! in-flight requests touching the dead shard get an error
+//! ([`QueryResult::Failed`] / `Err`), never a hang. Writes redelivered
+//! from the queue after a rebuild are deduplicated by id, so the
+//! at-least-once channel delivery stays exactly-once in effect.
 
 use super::metrics::Metrics;
 use super::segment::{DeltaSegment, IdMap, MergeOutcome, SegmentedShard, ShardParts};
 use crate::index::{MultiBst, SearchIndex, SingleBst};
 use crate::query::{BlockCollector, Collector, QueryCtx, MAX_BLOCK};
 use crate::sketch::SketchSet;
+use crate::store::wal::{self, Wal, WalRecord, WalSync};
 use crate::store::{
-    ensure, from_payload, to_payload, ByteReader, ByteWriter, Persist, Snapshot,
+    ensure, from_payload, to_payload, ByteReader, ByteWriter, Mmap, Persist, Snapshot,
     SnapshotStreamWriter, StoreError, FORMAT_VERSION_V1,
 };
 use crate::trie::bst::BstConfig;
+use crate::util::failpoint;
 use crate::util::timer::Timer;
-use std::path::Path;
-use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 
 /// How a fanned-out query collects results on each shard.
@@ -78,6 +101,11 @@ pub enum QueryResult {
     Ids(Vec<u32>),
     Count(usize),
     TopK(Vec<(u32, usize)>),
+    /// A shard worker died (panic mid-rebuild or unrecoverable) before
+    /// answering: the query failed rather than hanging or returning a
+    /// silently partial result. The batcher's typed accessors map this
+    /// to `None`, which the server answers as an error line.
+    Failed,
 }
 
 /// Totals of one [`Engine::merge`] sweep.
@@ -257,6 +285,84 @@ impl Persist for ShardIndex {
     }
 }
 
+/// Process-wide engine counter backing [`Engine::instance_tag`].
+static ENGINE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Rides inside the insert lock: the attached WAL (if any) appends
+/// under the very guard that orders id reservation and shard enqueue,
+/// so the log's record order equals the shards' apply order and a
+/// record is durable before its write is acknowledged.
+#[derive(Default)]
+struct WalCell {
+    wal: Option<Wal>,
+}
+
+/// What [`Engine::attach_wal`] recovered.
+#[derive(Debug, Default)]
+pub struct WalReport {
+    /// WAL segment files scanned.
+    pub segments: usize,
+    /// Rows replayed into the engine (records past the snapshot's id
+    /// high-water mark).
+    pub replayed_inserts: usize,
+    /// Tombstones replayed.
+    pub replayed_deletes: usize,
+    /// Records skipped as already covered by the snapshot.
+    pub skipped_records: usize,
+    /// Torn/corrupt bytes truncated off the newest segment.
+    pub truncated_bytes: u64,
+}
+
+/// Where a panicked shard worker rebuilds itself from: the last durable
+/// snapshot plus the WAL. Updated by [`Engine::load_with`] /
+/// [`Engine::attach_wal`] / [`Engine::save`]; read by the worker
+/// supervisor. The generation counter detects a save racing a rebuild
+/// (snapshot renamed / WAL rotated mid-read) — the rebuild retries on a
+/// mismatch instead of trusting a torn view.
+#[derive(Default)]
+struct RecoveryPlan {
+    inner: Mutex<PlanState>,
+}
+
+#[derive(Default, Clone)]
+struct PlanState {
+    /// Last durable snapshot (always reopened owned — a restarted shard
+    /// of a mapped engine serves owned memory until the next reload).
+    snapshot: Option<PathBuf>,
+    /// WAL segment base, when a log is attached.
+    wal: Option<PathBuf>,
+    /// Bumped by every committed save.
+    generation: u64,
+}
+
+impl RecoveryPlan {
+    fn state(&self) -> PlanState {
+        self.inner.lock().unwrap().clone()
+    }
+
+    fn set_snapshot(&self, path: &Path) {
+        self.inner.lock().unwrap().snapshot = Some(path.to_path_buf());
+    }
+
+    fn set_wal(&self, base: &Path) {
+        self.inner.lock().unwrap().wal = Some(base.to_path_buf());
+    }
+
+    /// A save has durably renamed `path` into place (called *before*
+    /// the old WAL segments are deleted, so a rebuild that reads the
+    /// old snapshot still finds the records covering it — or notices
+    /// the generation moved and retries).
+    fn committed_save(&self, path: &Path) {
+        let mut st = self.inner.lock().unwrap();
+        st.snapshot = Some(path.to_path_buf());
+        st.generation += 1;
+    }
+
+    fn generation(&self) -> u64 {
+        self.inner.lock().unwrap().generation
+    }
+}
+
 /// The sharded engine.
 pub struct Engine {
     shards: Vec<Shard>,
@@ -270,9 +376,19 @@ pub struct Engine {
     merge_threshold: AtomicUsize,
     /// Serializes id reservation + per-shard enqueue so concurrent
     /// insert batches reach every shard in global id order (the delta
-    /// segments require strictly increasing ids). Waiting for the shard
-    /// acks happens outside this lock.
-    insert_lock: std::sync::Mutex<()>,
+    /// segments require strictly increasing ids), and carries the
+    /// attached WAL so append-before-ack rides the same ordering.
+    /// Waiting for the shard acks happens outside this lock.
+    insert_lock: Mutex<WalCell>,
+    /// Shared with every worker's supervisor.
+    recovery: Arc<RecoveryPlan>,
+    /// Process-unique engine tag — the failpoint context for this
+    /// engine's worker/merge sites, so concurrent tests can scope
+    /// injected faults to their own engine.
+    instance: u64,
+    /// The snapshot mapping of a `--mmap` load, kept alive so the stats
+    /// endpoint can probe page residency (`mincore`).
+    mapping: Option<Arc<Mmap>>,
     heap_bytes: usize,
 }
 
@@ -329,18 +445,28 @@ impl Engine {
     /// Spawns the shard workers over already-built (or loaded) states.
     fn assemble(l: usize, b: usize, next_id: u32, states: Vec<SegmentedShard>) -> Self {
         let metrics = Arc::new(Metrics::new());
-        let mut shards = Vec::with_capacity(states.len());
+        let recovery = Arc::new(RecoveryPlan::default());
+        let instance = ENGINE_SEQ.fetch_add(1, Ordering::Relaxed);
+        let n_shards = states.len();
+        let mut shards = Vec::with_capacity(n_shards);
         let mut heap_bytes = 0usize;
         for (no, state) in states.into_iter().enumerate() {
             heap_bytes += state.heap_bytes();
             let (tx, rx) = channel::<ShardMsg>();
             // Workers hold a clone of their own sender so background
             // merge threads can message the finished segment back.
-            let self_tx = tx.clone();
-            let worker_metrics = Arc::clone(&metrics);
+            let cfg = WorkerCfg {
+                rx,
+                self_tx: tx.clone(),
+                metrics: Arc::clone(&metrics),
+                shard_no: no,
+                n_shards,
+                plan: Arc::clone(&recovery),
+                ctx: format!("engine-{instance}/shard-{no}"),
+            };
             let handle = std::thread::Builder::new()
                 .name(format!("bst-shard-{no}"))
-                .spawn(move || worker_loop(state, rx, self_tx, worker_metrics, no))
+                .spawn(move || worker_loop(state, cfg))
                 .expect("spawn shard worker");
             shards.push(Shard { tx, handle: Some(handle) });
         }
@@ -352,7 +478,10 @@ impl Engine {
             b,
             next_id: AtomicU32::new(next_id),
             merge_threshold: AtomicUsize::new(Self::DEFAULT_MERGE_THRESHOLD),
-            insert_lock: std::sync::Mutex::new(()),
+            insert_lock: Mutex::new(WalCell::default()),
+            recovery,
+            instance,
+            mapping: None,
             heap_bytes,
         }
     }
@@ -372,14 +501,27 @@ impl Engine {
     /// for the same reason. Waiting for the parts (and streaming them
     /// out) happens after the lock is released, so writers only stall
     /// for the S channel sends, not the serialization.
+    ///
+    /// With a WAL attached the same fence rotates the log: a fresh
+    /// segment opens inside the critical section (so it holds exactly
+    /// the writes after the fence) and the old segments are deleted only
+    /// once the snapshot has durably renamed into place — a crash at any
+    /// point leaves either the old snapshot + full log, or the new
+    /// snapshot plus stale segments whose records replay idempotently
+    /// below the recorded id high-water mark.
     pub fn save(&self, path: &Path) -> Result<(), StoreError> {
         let (reply_tx, reply_rx) = channel();
         let next_id = {
-            let _fence = self.insert_lock.lock().unwrap();
+            let mut fence = self.insert_lock.lock().unwrap();
             for (no, s) in self.shards.iter().enumerate() {
                 s.tx
                     .send(ShardMsg::Parts { reply: reply_tx.clone(), shard_no: no })
-                    .expect("shard worker alive");
+                    .map_err(|_| {
+                        StoreError::corrupt(format!("save: shard {no} worker is gone"))
+                    })?;
+            }
+            if let Some(w) = fence.wal.as_mut() {
+                w.rotate_begin()?;
             }
             self.next_id.load(Ordering::SeqCst)
         };
@@ -390,8 +532,15 @@ impl Engine {
         }
         let parts: Vec<ShardParts> = parts
             .into_iter()
-            .map(|p| p.expect("every shard reports its parts"))
-            .collect();
+            .enumerate()
+            .map(|(no, p)| {
+                p.ok_or_else(|| {
+                    StoreError::corrupt(format!(
+                        "save: shard {no} did not report its parts (worker dead)"
+                    ))
+                })
+            })
+            .collect::<Result<_, _>>()?;
 
         let n_sections =
             1 + parts.len() * 3 + parts.iter().filter(|p| p.rows.is_some()).count();
@@ -425,7 +574,18 @@ impl Engine {
             w.put_u32s(&p.tombstones);
             out.add_section(&format!("tombstones.{i}"), &w.into_bytes())?;
         }
-        out.finish()
+        out.finish()?;
+        // The snapshot is durably in place: publish it to the recovery
+        // plan (bumping the generation so an in-flight shard rebuild
+        // retries) *before* deleting the WAL segments it supersedes.
+        self.recovery.committed_save(path);
+        if let Some(w) = self.insert_lock.lock().unwrap().wal.as_mut() {
+            // A failed cleanup is not a failed save: stale segments only
+            // hold records below the high-water mark, which replay as
+            // no-ops on the next load.
+            let _ = w.rotate_commit();
+        }
+        Ok(())
     }
 
     /// Restores an engine from a snapshot and spawns its workers. The
@@ -452,11 +612,16 @@ impl Engine {
         } else {
             Snapshot::open(path)?
         };
-        if snap.version() == FORMAT_VERSION_V1 {
-            Self::load_v1(&snap)
+        let mut engine = if snap.version() == FORMAT_VERSION_V1 {
+            Self::load_v1(&snap)?
         } else {
-            Self::load_v2(&snap)
-        }
+            Self::load_v2(&snap)?
+        };
+        engine.mapping = snap.mapping().cloned();
+        // The source snapshot doubles as the shard-rebuild source until
+        // the next save supersedes it.
+        engine.recovery.set_snapshot(path);
+        Ok(engine)
     }
 
     /// PR 2 snapshots: `meta` (L, n, shard offsets) + `shard.N`.
@@ -538,67 +703,8 @@ impl Engine {
         let mut states = Vec::with_capacity(n_shards);
         let mut total_rows = 0usize;
         for (i, &with_rows) in has_rows.iter().enumerate() {
-            let mut sr = snap.section(&format!("shard.{i}"))?;
-            let index: ShardIndex = from_payload(&mut sr)?;
-            validate_shard_index(&index, i, l)?;
-            ensure(index.b() == b, || {
-                format!("shard {i}: alphabet b={} != engine b={b}", index.b())
-            })?;
-
-            let rows = if with_rows {
-                let mut rr = snap.section(&format!("rows.{i}"))?;
-                let rows: SketchSet = from_payload(&mut rr)?;
-                ensure(
-                    rows.b() == b && rows.l() == l && rows.n() == index.n_rows(),
-                    || {
-                        format!(
-                            "rows.{i}: shape {}x{} (b={}) != shard's {} rows of L={l} (b={b})",
-                            rows.n(),
-                            rows.l(),
-                            rows.b(),
-                            index.n_rows()
-                        )
-                    },
-                )?;
-                Some(Arc::new(rows))
-            } else {
-                ensure(!snap.has_section(&format!("rows.{i}")), || {
-                    format!("rows.{i}: present but meta declares no rows")
-                })?;
-                None
-            };
-
-            let mut dr = snap.section(&format!("delta.{i}"))?;
-            let map = IdMap::read_from(&mut dr)?;
-            let db = dr.get_usize()?;
-            let dl = dr.get_usize()?;
-            let delta_ids = dr.get_u32s()?;
-            let delta_chars = dr.get_bytes()?.to_vec();
-            dr.expect_end()?;
-            ensure(db == b && dl == l, || {
-                format!("delta.{i}: shape b={db} L={dl} != engine b={b} L={l}")
-            })?;
-            ensure(map.len() == index.n_rows(), || {
-                format!("delta.{i}: id map covers {} rows, shard has {}", map.len(), index.n_rows())
-            })?;
-            ensure(
-                delta_ids.first().is_none()
-                    || map.max().is_none_or(|m| m < delta_ids[0]),
-                || format!("delta.{i}: delta ids must exceed every base id"),
-            )?;
-            let delta = DeltaSegment::from_parts(b, l, delta_ids, delta_chars)?;
-
-            let mut tr = snap.section(&format!("tombstones.{i}"))?;
-            let tombstones = tr.get_u32s()?;
-            tr.expect_end()?;
-            ensure(tombstones.windows(2).all(|w| w[0] < w[1]), || {
-                format!("tombstones.{i}: must be strictly increasing")
-            })?;
-
-            total_rows += map.len() + delta.len();
-            let kind = index.recipe();
-            let shard =
-                SegmentedShard::from_snapshot(kind, Arc::new(index), map, rows, delta, tombstones);
+            let shard = load_shard_state(snap, i, l, b, with_rows)?;
+            total_rows += shard.n_rows();
             states.push(shard);
         }
         ensure(total_rows == next_id as usize, || {
@@ -625,6 +731,140 @@ impl Engine {
         debug_assert!(seen.iter().all(|&s| s), "tiling checked via total_rows");
 
         Ok(Engine::assemble(l, b, next_id, states))
+    }
+
+    /// Attaches a write-ahead log at segment base `base`, replaying any
+    /// surviving records first: inserts past the engine's current id
+    /// high-water mark (everything below it is already in the snapshot
+    /// this engine loaded from) and every delete (tombstoning is
+    /// idempotent). After this returns, all writes append to the log —
+    /// durable per `sync` — before they are applied or acknowledged.
+    ///
+    /// Call this on a freshly loaded (or built) engine, before serving
+    /// traffic; replayed rows keep their originally assigned ids and do
+    /// not count toward the insert metrics.
+    pub fn attach_wal(&self, base: &Path, sync: WalSync) -> Result<WalReport, StoreError> {
+        let mut cell = self.insert_lock.lock().unwrap();
+        ensure(cell.wal.is_none(), || "a WAL is already attached".to_string())?;
+        let (wal, records, open) = Wal::open(base, sync)?;
+        let mut report = WalReport {
+            segments: open.segments,
+            truncated_bytes: open.truncated_bytes,
+            ..WalReport::default()
+        };
+        let n_shards = self.shards.len() as u32;
+        for rec in records {
+            match rec {
+                WalRecord::Insert { start_id, n, chars } => {
+                    let n = n as usize;
+                    ensure(n > 0 && chars.len() == n * self.l, || {
+                        format!(
+                            "wal replay: insert record shape n={n} chars={}, L={}",
+                            chars.len(),
+                            self.l
+                        )
+                    })?;
+                    ensure(chars.iter().all(|&c| (c as usize) < (1 << self.b)), || {
+                        format!("wal replay: char outside the 2^{} alphabet", self.b)
+                    })?;
+                    let end = start_id.checked_add(n as u32).ok_or_else(|| {
+                        StoreError::corrupt("wal replay: id overflow".into())
+                    })?;
+                    let cur = self.next_id.load(Ordering::SeqCst);
+                    if end <= cur {
+                        // Entirely below the high-water mark: a segment
+                        // a crashed rotation left behind.
+                        report.skipped_records += 1;
+                        continue;
+                    }
+                    ensure(start_id <= cur, || {
+                        format!(
+                            "wal replay: record starts at id {start_id}, engine expects {cur} \
+                             (log gap)"
+                        )
+                    })?;
+                    let (reply_tx, reply_rx) = channel();
+                    let mut per_shard: Vec<Vec<(u32, Vec<u8>)>> =
+                        (0..n_shards).map(|_| Vec::new()).collect();
+                    let mut replayed = 0usize;
+                    for (j, row) in chars.chunks_exact(self.l).enumerate() {
+                        let id = start_id + j as u32;
+                        if id < cur {
+                            continue; // already in the snapshot
+                        }
+                        per_shard[(id % n_shards) as usize].push((id, row.to_vec()));
+                        replayed += 1;
+                    }
+                    let mut outstanding = 0usize;
+                    for (s, items) in per_shard.into_iter().enumerate() {
+                        if items.is_empty() {
+                            continue;
+                        }
+                        outstanding += 1;
+                        self.shards[s]
+                            .tx
+                            .send(ShardMsg::Insert {
+                                items,
+                                // deterministic replay: no background
+                                // merges kicked off mid-recovery
+                                merge_threshold: usize::MAX,
+                                reply: reply_tx.clone(),
+                            })
+                            .map_err(|_| {
+                                StoreError::corrupt(format!("wal replay: shard {s} is gone"))
+                            })?;
+                    }
+                    drop(reply_tx);
+                    for _ in 0..outstanding {
+                        reply_rx.recv().map_err(|_| {
+                            StoreError::corrupt("wal replay: shard died mid-replay".into())
+                        })?;
+                    }
+                    self.next_id.store(end, Ordering::SeqCst);
+                    report.replayed_inserts += replayed;
+                }
+                WalRecord::Delete { id } => {
+                    if (id as usize) >= self.n() {
+                        report.skipped_records += 1;
+                        continue;
+                    }
+                    let (reply_tx, reply_rx) = channel();
+                    for s in &self.shards {
+                        s.tx
+                            .send(ShardMsg::Delete { id, reply: reply_tx.clone() })
+                            .map_err(|_| {
+                                StoreError::corrupt("wal replay: shard is gone".into())
+                            })?;
+                    }
+                    drop(reply_tx);
+                    let _ = reply_rx.iter().any(|d| d);
+                    report.replayed_deletes += 1;
+                }
+                WalRecord::MergeMarker => {}
+            }
+        }
+        self.recovery.set_wal(wal.base());
+        cell.wal = Some(wal);
+        Ok(report)
+    }
+
+    /// This engine's process-unique failpoint context prefix; worker
+    /// sites fire under `"{instance_tag}/shard-{no}"`, so tests can
+    /// scope injected faults to one engine (or one shard).
+    pub fn instance_tag(&self) -> String {
+        format!("engine-{}", self.instance)
+    }
+
+    /// Size of the snapshot mapping this engine serves from (`None`
+    /// when loaded owned).
+    pub fn mapped_bytes(&self) -> Option<usize> {
+        self.mapping.as_ref().map(|m| m.len())
+    }
+
+    /// Resident (page-cache-backed) bytes of the mapping, probed via
+    /// `mincore`; `None` when not mapped or unsupported.
+    pub fn resident_bytes(&self) -> Option<usize> {
+        self.mapping.as_ref().and_then(|m| m.resident_bytes())
     }
 
     pub fn n_shards(&self) -> usize {
@@ -696,15 +936,28 @@ impl Engine {
         let (reply_tx, reply_rx) = channel();
         // Reserve the id range and enqueue on the shards under the
         // insert lock: concurrent batches must reach each shard in
-        // global id order. The critical section is id assignment plus
-        // O(n) row *moves* and the channel sends — the byte copies
-        // happened above, and ack-waiting happens after unlock.
+        // global id order. The critical section is id assignment, the
+        // WAL append (when one is attached — durable before any shard
+        // sees the rows, so an acked write survives a crash and an
+        // unacked one is at worst a truncated tail record), plus O(n)
+        // row *moves* and the channel sends — the byte copies happened
+        // above, and ack-waiting happens after unlock.
         let (first, outstanding) = {
-            let _order = self.insert_lock.lock().unwrap();
+            let mut order = self.insert_lock.lock().unwrap();
             let cur = self.next_id.load(Ordering::SeqCst);
             let end = cur
                 .checked_add(n)
                 .ok_or_else(|| format!("id space exhausted: {cur} + {n} exceeds u32"))?;
+            if let Some(w) = order.wal.as_mut() {
+                let mut chars = Vec::with_capacity(owned.len() * self.l);
+                for row in &owned {
+                    chars.extend_from_slice(row);
+                }
+                // On failure the ids stay unreserved and no shard has
+                // seen the batch: the write simply did not happen.
+                w.append(&WalRecord::Insert { start_id: cur, n, chars })
+                    .map_err(|e| format!("wal append failed, write not applied: {e}"))?;
+            }
             self.next_id.store(end, Ordering::SeqCst);
             let n_shards = self.shards.len() as u32;
             let mut per_shard: Vec<Vec<(u32, Vec<u8>)>> =
@@ -733,7 +986,20 @@ impl Engine {
         drop(reply_tx);
         let mut acked = 0usize;
         for _ in 0..outstanding {
-            acked += reply_rx.recv().expect("shard reply");
+            match reply_rx.recv() {
+                Ok(k) => acked += k,
+                // A shard dropped the batch (panic with no rebuild
+                // source). The write is durable if a WAL is attached —
+                // it will surface on the next load — but is not fully
+                // applied to this engine, so report failure.
+                Err(_) => {
+                    self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    return Err(format!(
+                        "shard worker unavailable: batch {first}..{} not fully applied",
+                        first + n
+                    ));
+                }
+            }
         }
         debug_assert_eq!(acked, rows.len());
         self.metrics.record_inserts(rows.len());
@@ -750,8 +1016,15 @@ impl Engine {
         {
             // Same write barrier as inserts: broadcast under the insert
             // lock so a concurrent `save` observes the delete on every
-            // shard or on none (see [`Engine::save`]).
-            let _order = self.insert_lock.lock().unwrap();
+            // shard or on none (see [`Engine::save`]), and the WAL
+            // record lands before any shard applies the tombstone.
+            let mut order = self.insert_lock.lock().unwrap();
+            if let Some(w) = order.wal.as_mut() {
+                if w.append(&WalRecord::Delete { id }).is_err() {
+                    self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    return false;
+                }
+            }
             for s in &self.shards {
                 s.tx
                     .send(ShardMsg::Delete { id, reply: reply_tx.clone() })
@@ -770,6 +1043,15 @@ impl Engine {
     /// absent legacy skips), all deltas are folded and the engine is
     /// entirely immutable — the deterministic pre-save / CI hook.
     pub fn merge(&self) -> MergeSummary {
+        {
+            // Informational marker (explicit merges only — background
+            // merges never touch the insert lock). Replay ignores it;
+            // it exists so a log can be audited against the op history.
+            let mut order = self.insert_lock.lock().unwrap();
+            if let Some(w) = order.wal.as_mut() {
+                let _ = w.append(&WalRecord::MergeMarker);
+            }
+        }
         let (reply_tx, reply_rx) = channel();
         for s in &self.shards {
             s.tx
@@ -909,41 +1191,63 @@ impl Engine {
         pending
             .into_iter()
             .map(|(mode, timer, rx)| {
-                let result = match mode {
-                    QueryMode::Ids => {
-                        let mut merged = Vec::new();
-                        for _ in 0..n_shards {
-                            let (_no, reply) = rx.recv().expect("shard reply");
-                            if let ShardReply::Ids(hits) = reply {
-                                merged.extend(hits);
-                            }
-                        }
-                        QueryResult::Ids(merged)
-                    }
-                    QueryMode::Count => {
-                        let mut total = 0usize;
-                        for _ in 0..n_shards {
-                            let (_, reply) = rx.recv().expect("shard reply");
-                            if let ShardReply::Count(c) = reply {
-                                total += c;
-                            }
-                        }
-                        QueryResult::Count(total)
-                    }
-                    QueryMode::TopK(k) => {
-                        let replies = (0..n_shards).map(|_| rx.recv().expect("shard reply"));
-                        QueryResult::TopK(Self::merge_topk(replies, k))
-                    }
-                };
+                let result = Self::collect_one(&rx, mode, n_shards);
                 let size = match &result {
                     QueryResult::Ids(v) => v.len(),
                     QueryResult::Count(c) => *c,
                     QueryResult::TopK(v) => v.len(),
+                    QueryResult::Failed => 0,
                 };
                 self.metrics.record_query(timer.elapsed_us() as u64, size);
                 result
             })
             .collect()
+    }
+
+    /// Collects one fanned-out query's shard replies. A closed reply
+    /// channel before all `n_shards` answers arrived means a shard
+    /// dropped the query (worker died with no rebuild source): the
+    /// query reports [`QueryResult::Failed`] instead of hanging or
+    /// silently answering from a subset of the data.
+    fn collect_one(
+        rx: &Receiver<(usize, ShardReply)>,
+        mode: QueryMode,
+        n_shards: usize,
+    ) -> QueryResult {
+        match mode {
+            QueryMode::Ids => {
+                let mut merged = Vec::new();
+                for _ in 0..n_shards {
+                    match rx.recv() {
+                        Ok((_no, ShardReply::Ids(hits))) => merged.extend(hits),
+                        Ok(_) => {}
+                        Err(_) => return QueryResult::Failed,
+                    }
+                }
+                QueryResult::Ids(merged)
+            }
+            QueryMode::Count => {
+                let mut total = 0usize;
+                for _ in 0..n_shards {
+                    match rx.recv() {
+                        Ok((_no, ShardReply::Count(c))) => total += c,
+                        Ok(_) => {}
+                        Err(_) => return QueryResult::Failed,
+                    }
+                }
+                QueryResult::Count(total)
+            }
+            QueryMode::TopK(k) => {
+                let mut replies = Vec::with_capacity(n_shards);
+                for _ in 0..n_shards {
+                    match rx.recv() {
+                        Ok(r) => replies.push(r),
+                        Err(_) => return QueryResult::Failed,
+                    }
+                }
+                QueryResult::TopK(Self::merge_topk(replies.into_iter(), k))
+            }
+        }
     }
 
     /// Blocked batch execution: compatible queries (same τ, same mode)
@@ -1009,13 +1313,27 @@ impl Engine {
             let m = idxs.len();
             let mut per_shard: Vec<Vec<ShardReply>> = Vec::with_capacity(n_shards);
             let mut work = vec![0u64; m];
+            let mut dead = false;
             for _ in 0..n_shards {
-                let (_no, br) = rx.recv().expect("shard reply");
+                let Ok((_no, br)) = rx.recv() else {
+                    dead = true;
+                    break;
+                };
                 debug_assert_eq!(br.replies.len(), m);
                 for (w, &x) in work.iter_mut().zip(&br.work) {
                     *w += x;
                 }
                 per_shard.push(br.replies);
+            }
+            if dead {
+                // A shard dropped the whole block: every query in it
+                // fails (see [`Engine::collect_one`]).
+                let elapsed = timer.elapsed_us() as u64;
+                for &qi in &idxs {
+                    self.metrics.record_query(elapsed / m as u64, 0);
+                    results[qi] = Some(QueryResult::Failed);
+                }
+                continue;
             }
             let elapsed = timer.elapsed_us() as u64;
             let total_work: u64 = work.iter().sum();
@@ -1052,6 +1370,7 @@ impl Engine {
                     QueryResult::Ids(v) => v.len(),
                     QueryResult::Count(c) => *c,
                     QueryResult::TopK(v) => v.len(),
+                    QueryResult::Failed => 0,
                 };
                 self.metrics.record_query(lat, size);
                 results[qi] = Some(result);
@@ -1064,7 +1383,9 @@ impl Engine {
     }
 
     /// Id-search-only batch (compatibility wrapper over
-    /// [`Engine::run_batch`]).
+    /// [`Engine::run_batch`]). A failed query (dead shard) collapses to
+    /// an empty hit list here — callers that must distinguish failure
+    /// from no-match should use [`Engine::run_batch`] directly.
     pub fn search_batch(&self, queries: &[(Arc<[u8]>, usize)]) -> Vec<Vec<u32>> {
         let with_mode: Vec<(Arc<[u8]>, usize, QueryMode)> = queries
             .iter()
@@ -1074,6 +1395,7 @@ impl Engine {
             .into_iter()
             .map(|r| match r {
                 QueryResult::Ids(v) => v,
+                QueryResult::Failed => Vec::new(),
                 _ => unreachable!("Ids batch returned a non-Ids result"),
             })
             .collect()
@@ -1106,22 +1428,65 @@ fn group_blocks(queries: &[(Arc<[u8]>, usize, QueryMode)], width: usize) -> Vec<
     blocks
 }
 
-/// One shard worker: owns its [`SegmentedShard`] outright — queries,
-/// inserts, deletes, merges and snapshots all serialize through this
-/// loop, so the state needs no locks. Background merges are spawned from
-/// here and return via `self_tx` as [`ShardMsg::Install`].
-fn worker_loop(
-    mut state: SegmentedShard,
+/// Everything a shard worker thread needs besides its state: its
+/// channel ends, the shared metrics, and the recovery plan + failpoint
+/// context its supervisor rebuilds from.
+struct WorkerCfg {
     rx: Receiver<ShardMsg>,
     self_tx: Sender<ShardMsg>,
     metrics: Arc<Metrics>,
     shard_no: usize,
-) {
-    // One QueryCtx per worker: scratch buffers (including the parked
-    // top-k heap) are warmed by the first query and reused for the
-    // shard's lifetime.
+    n_shards: usize,
+    plan: Arc<RecoveryPlan>,
+    ctx: String,
+}
+
+/// One shard worker: owns its [`SegmentedShard`] outright — queries,
+/// inserts, deletes, merges and snapshots all serialize through this
+/// loop, so the state needs no locks. Background merges are spawned from
+/// here and return via `self_tx` as [`ShardMsg::Install`].
+///
+/// The loop body runs under `catch_unwind`: a panic discards the
+/// (possibly half-mutated) state, bumps `worker_restarts`, and rebuilds
+/// the shard from the recovery plan — the thread (and its channel)
+/// never dies, so the other shards keep serving and queued messages are
+/// answered after the restart. The message being processed at the panic
+/// unwinds with its reply sender, so its caller sees a closed channel,
+/// not a hang. If there is nothing to rebuild from (no snapshot, or a
+/// v1 one) the worker drains its queue as errors until shutdown.
+fn worker_loop(state: SegmentedShard, cfg: WorkerCfg) {
+    let mut state = Some(state);
+    loop {
+        let mut st = match state.take() {
+            Some(s) => s,
+            None => match rebuild_shard(&cfg.plan, cfg.shard_no, cfg.n_shards) {
+                Some(s) => s,
+                None => return drain_dead(&cfg.rx),
+            },
+        };
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            serve_messages(&mut st, &cfg)
+        }));
+        match run {
+            Ok(()) => return, // shutdown / engine dropped
+            Err(_) => {
+                cfg.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                // `st` drops here half-mutated; the next iteration
+                // rebuilds from snapshot + WAL.
+            }
+        }
+    }
+}
+
+/// The worker's message loop proper. Returns on [`ShardMsg::Shutdown`]
+/// or channel close; panics unwind to the supervisor in [`worker_loop`].
+fn serve_messages(state: &mut SegmentedShard, cfg: &WorkerCfg) {
+    // One QueryCtx per worker incarnation: scratch buffers (including
+    // the parked top-k heap) are warmed by the first query and reused
+    // until the worker restarts.
     let mut qctx = QueryCtx::new();
-    while let Ok(msg) = rx.recv() {
+    while let Ok(msg) = cfg.rx.recv() {
+        let _ = failpoint::check("shard.worker", &cfg.ctx);
         match msg {
             ShardMsg::Query { q, tau, mode, reply, shard_no } => {
                 let result = state.query(&q, tau, mode, &mut qctx);
@@ -1132,18 +1497,40 @@ fn worker_loop(
                 let (replies, work) = state.query_block(&qrefs, &taus, mode, &mut qctx);
                 let _ = reply.send((shard_no, BlockShardReply { replies, work }));
             }
-            ShardMsg::Insert { items, merge_threshold, reply } => {
+            ShardMsg::Insert { mut items, merge_threshold, reply } => {
                 let n = items.len();
-                state.insert(&items);
+                // A batch queued before a panic is redelivered after the
+                // rebuild already replayed it from the WAL: apply only
+                // the rows that are missing, ack the original count.
+                items.retain(|(id, _)| !state.owns_id(*id));
+                if !items.is_empty() {
+                    state.insert(&items);
+                }
                 if let Some(job) = state.seal_for_merge(merge_threshold) {
-                    let tx = self_tx.clone();
+                    let tx = cfg.self_tx.clone();
+                    let mctx = cfg.ctx.clone();
+                    let metrics = Arc::clone(&cfg.metrics);
                     std::thread::Builder::new()
-                        .name(format!("bst-merge-{shard_no}"))
+                        .name(format!("bst-merge-{}", cfg.shard_no))
                         .spawn(move || {
-                            let result = job.build();
-                            // The worker may already be gone (engine
-                            // dropped); the finished merge is then moot.
-                            let _ = tx.send(ShardMsg::Install(Box::new(result)));
+                            let built =
+                                std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                                    let _ = failpoint::check("shard.merge", &mctx);
+                                    job.build()
+                                }));
+                            match built {
+                                // The worker may already be gone (engine
+                                // dropped); the finished merge is moot.
+                                Ok(result) => {
+                                    let _ = tx.send(ShardMsg::Install(Box::new(result)));
+                                }
+                                // A panicked merge is simply dropped:
+                                // the sealed delta stays searchable and
+                                // the next merge subsumes it.
+                                Err(_) => {
+                                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
                         })
                         .expect("spawn merge thread");
                 }
@@ -1157,13 +1544,24 @@ fn worker_loop(
             }
             ShardMsg::Install(result) => {
                 if state.install(*result) {
-                    metrics.merges.fetch_add(1, Ordering::Relaxed);
+                    cfg.metrics.merges.fetch_add(1, Ordering::Relaxed);
                 }
             }
             ShardMsg::Parts { reply, shard_no } => {
                 let _ = reply.send((shard_no, state.parts()));
             }
             ShardMsg::Shutdown => break,
+        }
+    }
+}
+
+/// Terminal state for a shard whose rebuild is impossible: every
+/// message is dropped on receipt — its reply sender closes, so callers
+/// observe an error instead of a hang — until the engine shuts down.
+fn drain_dead(rx: &Receiver<ShardMsg>) {
+    while let Ok(msg) = rx.recv() {
+        if matches!(msg, ShardMsg::Shutdown) {
+            return;
         }
     }
 }
@@ -1186,6 +1584,164 @@ fn validate_shard_index(index: &ShardIndex, i: usize, l: usize) -> Result<(), St
         )?;
     }
     Ok(())
+}
+
+/// Parses one shard's sections out of a v2 snapshot — shared by
+/// [`Engine::load_v2`] and the worker supervisor's rebuild path (which
+/// restores a single shard without touching its siblings).
+fn load_shard_state(
+    snap: &Snapshot,
+    i: usize,
+    l: usize,
+    b: usize,
+    with_rows: bool,
+) -> Result<SegmentedShard, StoreError> {
+    let mut sr = snap.section(&format!("shard.{i}"))?;
+    let index: ShardIndex = from_payload(&mut sr)?;
+    validate_shard_index(&index, i, l)?;
+    ensure(index.b() == b, || {
+        format!("shard {i}: alphabet b={} != engine b={b}", index.b())
+    })?;
+
+    let rows = if with_rows {
+        let mut rr = snap.section(&format!("rows.{i}"))?;
+        let rows: SketchSet = from_payload(&mut rr)?;
+        ensure(
+            rows.b() == b && rows.l() == l && rows.n() == index.n_rows(),
+            || {
+                format!(
+                    "rows.{i}: shape {}x{} (b={}) != shard's {} rows of L={l} (b={b})",
+                    rows.n(),
+                    rows.l(),
+                    rows.b(),
+                    index.n_rows()
+                )
+            },
+        )?;
+        Some(Arc::new(rows))
+    } else {
+        ensure(!snap.has_section(&format!("rows.{i}")), || {
+            format!("rows.{i}: present but meta declares no rows")
+        })?;
+        None
+    };
+
+    let mut dr = snap.section(&format!("delta.{i}"))?;
+    let map = IdMap::read_from(&mut dr)?;
+    let db = dr.get_usize()?;
+    let dl = dr.get_usize()?;
+    let delta_ids = dr.get_u32s()?;
+    let delta_chars = dr.get_bytes()?.to_vec();
+    dr.expect_end()?;
+    ensure(db == b && dl == l, || {
+        format!("delta.{i}: shape b={db} L={dl} != engine b={b} L={l}")
+    })?;
+    ensure(map.len() == index.n_rows(), || {
+        format!("delta.{i}: id map covers {} rows, shard has {}", map.len(), index.n_rows())
+    })?;
+    ensure(
+        delta_ids.first().is_none() || map.max().is_none_or(|m| m < delta_ids[0]),
+        || format!("delta.{i}: delta ids must exceed every base id"),
+    )?;
+    let delta = DeltaSegment::from_parts(b, l, delta_ids, delta_chars)?;
+
+    let mut tr = snap.section(&format!("tombstones.{i}"))?;
+    let tombstones = tr.get_u32s()?;
+    tr.expect_end()?;
+    ensure(tombstones.windows(2).all(|w| w[0] < w[1]), || {
+        format!("tombstones.{i}: must be strictly increasing")
+    })?;
+
+    let kind = index.recipe();
+    Ok(SegmentedShard::from_snapshot(kind, Arc::new(index), map, rows, delta, tombstones))
+}
+
+/// Supervisor-side shard rebuild: reopen the recovery plan's snapshot
+/// (owned, never mapped — the dead worker may hold the only other
+/// reference to a mapping), parse this shard's sections, and replay the
+/// WAL records it owns. Retries when a concurrent save bumps the plan
+/// generation mid-read (the snapshot/WAL pair it read may have been
+/// torn by the rotation); gives up — returning `None`, the dead mode —
+/// when there is nothing to rebuild from.
+fn rebuild_shard(plan: &RecoveryPlan, shard_no: usize, n_shards: usize) -> Option<SegmentedShard> {
+    for _attempt in 0..3 {
+        let gen = plan.generation();
+        let st = plan.state();
+        let snapshot = st.snapshot.as_deref()?;
+        match try_rebuild(snapshot, st.wal.as_deref(), shard_no, n_shards) {
+            Ok(state) if plan.generation() == gen => return Some(state),
+            Ok(_) => {} // a save landed mid-rebuild: retry on the new pair
+            Err(_) if plan.generation() != gen => {}
+            Err(_) => return None,
+        }
+    }
+    None
+}
+
+fn try_rebuild(
+    snapshot: &Path,
+    wal_base: Option<&Path>,
+    shard_no: usize,
+    n_shards: usize,
+) -> Result<SegmentedShard, StoreError> {
+    let snap = Snapshot::open(snapshot)?;
+    ensure(snap.version() != FORMAT_VERSION_V1, || {
+        "cannot rebuild a shard from a v1 snapshot (no write-path sections)".to_string()
+    })?;
+    let mut r = snap.section("meta")?;
+    let l = r.get_usize()?;
+    let b = r.get_usize()?;
+    let hwm = r.get_u64()?;
+    let snap_shards = r.get_usize()?;
+    ensure(snap_shards == n_shards, || {
+        format!("snapshot holds {snap_shards} shards, engine runs {n_shards}")
+    })?;
+    let mut has_rows = Vec::with_capacity(n_shards);
+    for _ in 0..n_shards {
+        has_rows.push(r.get_u8()? != 0);
+    }
+    r.expect_end()?;
+    let hwm = u32::try_from(hwm)
+        .map_err(|_| StoreError::corrupt(format!("rebuild: next_id {hwm} exceeds u32")))?;
+
+    let mut state = load_shard_state(&snap, shard_no, l, b, has_rows[shard_no])?;
+    let Some(base) = wal_base else { return Ok(state) };
+    // Replay this shard's share of the log: inserts past the snapshot's
+    // high-water mark striped to this shard (dynamic inserts go to
+    // `id % S`), deletes wherever the shard owns the id. Records below
+    // the mark come from segments a crashed rotation left behind — the
+    // snapshot already holds them.
+    for rec in wal::read_records(base)? {
+        match rec {
+            WalRecord::Insert { start_id, n, chars } => {
+                let n = n as usize;
+                ensure(n > 0 && chars.len() == n * l, || {
+                    format!("rebuild: insert record shape n={n} chars={}, L={l}", chars.len())
+                })?;
+                ensure(chars.iter().all(|&c| (c as usize) < (1 << b)), || {
+                    format!("rebuild: char outside the 2^{b} alphabet")
+                })?;
+                let mut items = Vec::new();
+                for (j, row) in chars.chunks_exact(l).enumerate() {
+                    let id = start_id
+                        .checked_add(j as u32)
+                        .ok_or_else(|| StoreError::corrupt("rebuild: id overflow".into()))?;
+                    if id < hwm || (id as usize) % n_shards != shard_no || state.owns_id(id) {
+                        continue;
+                    }
+                    items.push((id, row.to_vec()));
+                }
+                if !items.is_empty() {
+                    state.insert(&items);
+                }
+            }
+            WalRecord::Delete { id } => {
+                let _ = state.delete(id);
+            }
+            WalRecord::MergeMarker => {}
+        }
+    }
+    Ok(state)
 }
 
 impl Drop for Engine {
@@ -1781,5 +2337,158 @@ mod tests {
         let old = slot.replace(Arc::clone(&b));
         assert_eq!(old.n_shards(), 1);
         assert_eq!(slot.current().n_shards(), 2);
+    }
+
+    fn wal_dir(tag: &str) -> std::path::PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("bst_engwal_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sorted_search(e: &Engine, q: &[u8], tau: usize) -> Vec<u32> {
+        let mut v = e.search(q, tau);
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn wal_replay_roundtrips_without_snapshot() {
+        let all = rows(200, 110);
+        let set = SketchSet::from_rows(2, 16, &all[..100]);
+        let dir = wal_dir("roundtrip");
+        let base = dir.join("wal");
+        let kind = ShardIndexKind::Bst(BstConfig::default());
+        let e1 = Engine::build(&set, 3, &kind);
+        let r = e1.attach_wal(&base, WalSync::Always).unwrap();
+        assert_eq!((r.replayed_inserts, r.replayed_deletes), (0, 0));
+        e1.insert_batch(&all[100..]).unwrap();
+        assert!(e1.delete(5));
+        assert!(e1.delete(150));
+        e1.merge(); // writes a marker record; replay must ignore it
+        let expect: Vec<Vec<u32>> =
+            (0..4).map(|tau| sorted_search(&e1, &all[0], tau)).collect();
+        drop(e1);
+
+        // A second engine over the same base rows recovers every
+        // acknowledged write from the log alone.
+        let e2 = Engine::build(&set, 3, &kind);
+        let r = e2.attach_wal(&base, WalSync::Always).unwrap();
+        assert_eq!(r.replayed_inserts, 100);
+        assert_eq!(r.replayed_deletes, 2);
+        assert_eq!(e2.n(), 200);
+        for (tau, want) in expect.iter().enumerate() {
+            assert_eq!(&sorted_search(&e2, &all[0], tau), want, "tau={tau}");
+        }
+        // replayed rows keep their ids; new writes continue past them
+        assert_eq!(e2.insert_batch(&all[..4]).unwrap(), 200..204);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn save_rotates_wal_and_reload_replays_nothing() {
+        let all = rows(260, 111);
+        let set = SketchSet::from_rows(2, 16, &all[..130]);
+        let dir = wal_dir("rotate");
+        let (base, snap) = (dir.join("wal"), dir.join("engine.snap"));
+        let kind = ShardIndexKind::Bst(BstConfig::default());
+        let e1 = Engine::build(&set, 3, &kind);
+        e1.attach_wal(&base, WalSync::Always).unwrap();
+        e1.insert_batch(&all[130..]).unwrap();
+        e1.delete(7);
+        e1.save(&snap).unwrap();
+        // post-save writes land in the rotated segment only
+        assert!(e1.delete(200));
+        let expect = sorted_search(&e1, &all[0], 4);
+        drop(e1);
+
+        let e2 = Engine::load(&snap).unwrap();
+        let r = e2.attach_wal(&base, WalSync::Always).unwrap();
+        assert_eq!(r.replayed_inserts, 0, "snapshot already covers the inserts");
+        assert_eq!(r.replayed_deletes, 1, "only the post-save delete replays");
+        assert_eq!(r.skipped_records, 0, "rotation deleted the old segments");
+        assert_eq!(sorted_search(&e2, &all[0], 4), expect);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn worker_panic_restarts_and_rejoins() {
+        use crate::util::failpoint::{self, Action};
+        let all = rows(300, 112);
+        let set = SketchSet::from_rows(2, 16, &all[..200]);
+        let dir = wal_dir("panic");
+        let (base, snap) = (dir.join("wal"), dir.join("engine.snap"));
+        let kind = ShardIndexKind::Bst(BstConfig::default());
+        Engine::build(&set, 3, &kind).save(&snap).unwrap();
+
+        let e = Engine::load(&snap).unwrap();
+        e.attach_wal(&base, WalSync::Always).unwrap();
+        e.insert_batch(&all[200..]).unwrap();
+        e.delete(4);
+        e.delete(250);
+
+        // Panic shard 1 on its next message; the supervisor must
+        // rebuild it from snapshot + WAL while shards 0/2 keep serving.
+        let filter = format!("{}/shard-1", e.instance_tag());
+        failpoint::arm_scoped("shard.worker", &filter, 0, 1, Action::Panic);
+        let _ = e.search(&all[0], 2); // sacrificial query trips the panic
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while e.metrics().worker_restarts.load(Ordering::Relaxed) == 0 {
+            assert!(std::time::Instant::now() < deadline, "restart never happened");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        failpoint::clear("shard.worker");
+
+        // The restarted shard answers from rebuilt state: snapshot base
+        // rows + WAL-replayed inserts and tombstones.
+        let alive = |g: u32| g != 4 && g != 250;
+        for qi in [0usize, 210, 250] {
+            for tau in [0usize, 2, 4] {
+                let got = sorted_search(&e, &all[qi], tau);
+                let want: Vec<u32> = oracle(&all, &all[qi], tau)
+                    .into_iter()
+                    .filter(|&g| alive(g))
+                    .collect();
+                assert_eq!(got, want, "qi={qi} tau={tau}");
+            }
+        }
+        // and the shard accepts fresh writes
+        let range = e.insert_batch(&all[..6]).unwrap();
+        assert_eq!(range, 300..306);
+        assert!(e.search(&all[0], 0).contains(&300));
+        assert_eq!(e.metrics().worker_restarts.load(Ordering::Relaxed), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn dead_shard_fails_queries_instead_of_hanging() {
+        use crate::util::failpoint::{self, Action};
+        let all = rows(200, 113);
+        let set = SketchSet::from_rows(2, 16, &all);
+        // Built, never saved: no recovery source, so a panicked shard
+        // goes dead — queries must fail, not hang, and the other shards
+        // must keep answering.
+        let e = Engine::build(&set, 3, &ShardIndexKind::Bst(BstConfig::default()));
+        let filter = format!("{}/shard-2", e.instance_tag());
+        failpoint::arm_scoped("shard.worker", &filter, 0, 1, Action::Panic);
+        let _ = e.search(&all[0], 0);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while e.metrics().worker_restarts.load(Ordering::Relaxed) == 0 {
+            assert!(std::time::Instant::now() < deadline, "panic never registered");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        failpoint::clear("shard.worker");
+        let q: Arc<[u8]> = Arc::from(all[0].as_slice());
+        let out = e.run_batch(&[(Arc::clone(&q), 2, QueryMode::Ids)]);
+        assert_eq!(out, vec![QueryResult::Failed]);
+        let out = e.run_batch_blocked(
+            &[(Arc::clone(&q), 2, QueryMode::Count), (q, 2, QueryMode::Count)],
+            8,
+        );
+        assert_eq!(out, vec![QueryResult::Failed, QueryResult::Failed]);
+        assert!(e.insert_batch(&all[..2]).is_err(), "writes report failure");
+        // dropping the engine shuts the dead shard's drain loop down
+        drop(e);
     }
 }

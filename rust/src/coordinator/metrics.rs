@@ -20,6 +20,10 @@ pub struct Metrics {
     pub deletes: AtomicU64,
     /// Shard merges completed (background installs + force merges).
     pub merges: AtomicU64,
+    /// Shard workers restarted by the supervisor after a panic
+    /// (rebuilt from snapshot + WAL replay). A nonzero value means the
+    /// server kept serving through at least one isolated failure.
+    pub worker_restarts: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
 }
@@ -83,6 +87,10 @@ impl Metrics {
             ("inserts", Json::num(self.inserts.load(Ordering::Relaxed) as f64)),
             ("deletes", Json::num(self.deletes.load(Ordering::Relaxed) as f64)),
             ("merges", Json::num(self.merges.load(Ordering::Relaxed) as f64)),
+            (
+                "worker_restarts",
+                Json::num(self.worker_restarts.load(Ordering::Relaxed) as f64),
+            ),
             ("mean_latency_us", Json::num(self.mean_latency_us())),
             ("p50_latency_us", Json::num(self.latency_percentile_us(50.0) as f64)),
             ("p99_latency_us", Json::num(self.latency_percentile_us(99.0) as f64)),

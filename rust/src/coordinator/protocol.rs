@@ -10,6 +10,7 @@
 //! {"op":"merge"}
 //! {"op":"stats"}
 //! {"op":"ping"}
+//! {"op":"save","path":"/path/to/engine.snap"}
 //! {"op":"reload","path":"/path/to/engine.snap"}
 //! {"op":"shutdown"}
 //! ```
@@ -33,7 +34,25 @@
 //!
 //! Write ops: `insert` appends rows (consecutive global ids, returned
 //! via `first_id`), `delete` tombstones one id, `merge` force-folds
-//! every shard's delta into a fresh immutable segment.
+//! every shard's delta into a fresh immutable segment. `save` writes a
+//! snapshot of the serving engine (atomic: tmp file + fsync + rename).
+//!
+//! **Durability contract.** When the server runs with `--wal <base>`,
+//! every `insert`/`delete` is appended to the write-ahead log — fsync'd
+//! per `--wal-sync` — *before* it is applied or acknowledged: under
+//! `--wal-sync always`, an acknowledged write survives `kill -9` and is
+//! replayed on the next start from snapshot + log; under `batch` the
+//! tail since the last 256 KiB sync boundary may be lost; under `off`
+//! the OS page cache decides. A write that was never acknowledged is at
+//! worst a torn tail record, which replay truncates at a record
+//! boundary — never a parse error, never a partially applied batch.
+//! `save` rotates the log (old segments are deleted only after the
+//! snapshot durably renames into place), bounding replay time. Without
+//! `--wal`, acknowledged writes live in memory until an explicit
+//! `save`. The `stats` op reports `worker_restarts` (shards rebuilt
+//! from snapshot + log after an isolated panic) and, for `--mmap`
+//! engines, `mapped_bytes`/`resident_bytes` (page-cache residency of
+//! the serving snapshot; `null` when not mapped).
 //!
 //! **Block execution.** The server's batcher groups compatible queries
 //! — same `tau` and the same mode (`search` / `count` / `topk` with the
@@ -61,6 +80,8 @@ pub enum Request {
     Delete { id: u32 },
     /// Force-fold every shard's delta into its base segment.
     Merge,
+    /// Write a snapshot of the serving engine (rotates the WAL).
+    Save { path: String },
     /// Swap the serving engine for one loaded from a snapshot file.
     Reload { path: String },
     Stats,
@@ -144,6 +165,14 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             Ok(Request::Delete { id: id as u32 })
         }
         "merge" => Ok(Request::Merge),
+        "save" => {
+            let path = v
+                .get("path")
+                .and_then(|p| p.as_str())
+                .filter(|p| !p.is_empty())
+                .ok_or_else(|| "save requires a non-empty 'path'".to_string())?;
+            Ok(Request::Save { path: path.to_string() })
+        }
         "reload" => {
             let path = v
                 .get("path")
@@ -226,6 +255,16 @@ pub fn merge_response(merged: usize, skipped: usize, latency_us: u64) -> String 
     .to_string()
 }
 
+/// Encodes a save response: the rows captured by the snapshot.
+pub fn save_response(n: usize, latency_us: u64) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("n", Json::num(n as f64)),
+        ("latency_us", Json::num(latency_us as f64)),
+    ])
+    .to_string()
+}
+
 /// Encodes an error response.
 pub fn error_response(msg: &str) -> String {
     Json::obj(vec![("error", Json::str(msg))]).to_string()
@@ -276,6 +315,12 @@ mod tests {
         );
         assert!(parse_request(r#"{"op":"reload"}"#).is_err());
         assert!(parse_request(r#"{"op":"reload","path":""}"#).is_err());
+        assert_eq!(
+            parse_request(r#"{"op":"save","path":"/tmp/e.snap"}"#).unwrap(),
+            Request::Save { path: "/tmp/e.snap".into() }
+        );
+        assert!(parse_request(r#"{"op":"save"}"#).is_err());
+        assert!(parse_request(r#"{"op":"save","path":""}"#).is_err());
     }
 
     #[test]
@@ -339,5 +384,9 @@ mod tests {
         let v = Json::parse(&rl).unwrap();
         assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true));
         assert_eq!(v.get("shards").and_then(|s| s.as_usize()), Some(4));
+        let sv = save_response(1000, 88);
+        let v = Json::parse(&sv).unwrap();
+        assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(v.get("n").and_then(|n| n.as_usize()), Some(1000));
     }
 }

@@ -13,20 +13,27 @@
 //! shape — and missing or corrupt snapshot files — are rejected with an
 //! error response while the running engine keeps serving untouched.
 //!
-//! Write ops (`insert` / `delete` / `merge`) are control-plane: they hit
-//! the current engine directly rather than riding the batcher, and a
-//! reload replaces the engine wholesale — flush mutations with a `merge`
-//! + save before reloading if they must survive.
+//! Write ops (`insert` / `delete` / `merge` / `save`) are control-plane:
+//! they hit the current engine directly rather than riding the batcher,
+//! and a reload replaces the engine wholesale — flush mutations with a
+//! `merge` + `save` before reloading if they must survive.
+//!
+//! Request lines are read through a hard size cap
+//! (`--max-request-bytes`, default 16 MiB): an oversized line is
+//! answered with an error and discarded in bounded chunks — one hostile
+//! client cannot grow a connection buffer until the process dies — and
+//! the connection keeps serving.
 
 use super::batcher::Batcher;
 use super::engine::{Engine, EngineSlot};
 use super::protocol::{
     count_response, delete_response, error_response, insert_response, merge_response,
-    parse_request, reload_response, search_response, topk_response, Request,
+    parse_request, reload_response, save_response, search_response, topk_response, Request,
 };
 use super::ServeConfig;
+use crate::util::json::Json;
 use crate::util::timer::Timer;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -73,6 +80,7 @@ pub fn serve(engine: Arc<Engine>, cfg: ServeConfig) -> std::io::Result<ServerHan
     let stop2 = Arc::clone(&stop);
     let default_tau = cfg.default_tau;
     let mmap = cfg.mmap;
+    let max_request_bytes = cfg.max_request_bytes;
 
     let slot = Arc::new(EngineSlot::new(engine));
     let batcher = Batcher::start(Arc::clone(&slot), &cfg);
@@ -94,7 +102,15 @@ pub fn serve(engine: Arc<Engine>, cfg: ServeConfig) -> std::io::Result<ServerHan
                 let slot = Arc::clone(&slot);
                 let stop3 = Arc::clone(&stop2);
                 std::thread::spawn(move || {
-                    let _ = handle_conn(stream, submitter, slot, stop3, default_tau, mmap);
+                    let _ = handle_conn(
+                        stream,
+                        submitter,
+                        slot,
+                        stop3,
+                        default_tau,
+                        mmap,
+                        max_request_bytes,
+                    );
                 });
             }
         })
@@ -120,6 +136,37 @@ fn check_len(engine: &Engine, q: &[u8]) -> Result<(), String> {
     }
 }
 
+/// Reads one newline-terminated request into `buf`, holding at most
+/// `limit + 1` bytes at any point. Returns `Ok(None)` on clean EOF,
+/// `Ok(Some(true))` for a complete line, and `Ok(Some(false))` for an
+/// oversized line — whose remainder has already been discarded in
+/// bounded chunks, so the next call starts at a fresh request.
+fn read_request_line(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    limit: usize,
+) -> std::io::Result<Option<bool>> {
+    buf.clear();
+    let n = reader.by_ref().take(limit as u64 + 1).read_until(b'\n', buf)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    // Complete when the line terminator arrived (content may be exactly
+    // `limit` bytes) or EOF ended a short final line. The only other way
+    // read_until stops is the `take` cap: `limit + 1` bytes, no newline.
+    if buf.ends_with(b"\n") || buf.len() <= limit {
+        return Ok(Some(true));
+    }
+    let mut scratch = Vec::new();
+    loop {
+        scratch.clear();
+        let k = reader.by_ref().take(65536).read_until(b'\n', &mut scratch)?;
+        if k == 0 || scratch.ends_with(b"\n") {
+            return Ok(Some(false));
+        }
+    }
+}
+
 fn handle_conn(
     stream: TcpStream,
     submitter: super::batcher::BatchSubmitter,
@@ -127,22 +174,53 @@ fn handle_conn(
     stop: Arc<AtomicBool>,
     default_tau: usize,
     mmap: bool,
+    max_request_bytes: usize,
 ) -> std::io::Result<()> {
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let complete = match read_request_line(&mut reader, &mut buf, max_request_bytes)? {
+            None => break,
+            Some(complete) => complete,
+        };
+        if !complete {
+            slot.current().metrics().errors.fetch_add(1, Ordering::Relaxed);
+            let reply = error_response(&format!(
+                "request exceeds max request size ({max_request_bytes} bytes)"
+            ));
+            writer.write_all(reply.as_bytes())?;
+            writer.write_all(b"\n")?;
+            continue;
+        }
+        let line = String::from_utf8_lossy(&buf);
+        let line = line.trim();
+        if line.is_empty() {
             continue;
         }
         let engine = slot.current();
-        let reply = match parse_request(&line) {
+        let reply = match parse_request(line) {
             Err(e) => {
                 engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
                 error_response(&e)
             }
             Ok(Request::Ping) => r#"{"pong":true}"#.to_string(),
-            Ok(Request::Stats) => engine.metrics().snapshot().to_string(),
+            Ok(Request::Stats) => {
+                let mut stats = engine.metrics().snapshot();
+                // Residency gauges for mapped engines: how much of the
+                // snapshot is mapped, and how much of that is page-cache
+                // resident right now (mincore). `null` when the engine
+                // owns its memory (no mapping to measure).
+                if let Json::Obj(map) = &mut stats {
+                    let gauge = |v: Option<usize>| match v {
+                        Some(v) => Json::num(v as f64),
+                        None => Json::Null,
+                    };
+                    map.insert("mapped_bytes".to_string(), gauge(engine.mapped_bytes()));
+                    map.insert("resident_bytes".to_string(), gauge(engine.resident_bytes()));
+                }
+                stats.to_string()
+            }
             Ok(Request::Shutdown) => {
                 stop.store(true, Ordering::SeqCst);
                 writer.write_all(b"{\"ok\":true}\n")?;
@@ -214,6 +292,19 @@ fn handle_conn(
                 let timer = Timer::start();
                 let summary = engine.merge();
                 merge_response(summary.merged, summary.skipped, timer.elapsed_us() as u64)
+            }
+            Ok(Request::Save { path }) => {
+                let timer = Timer::start();
+                // Durable checkpoint: atomic snapshot write (tmp + fsync
+                // + rename), then the WAL rotates — replay-on-load only
+                // covers writes after this point.
+                match engine.save(Path::new(&path)) {
+                    Err(e) => {
+                        engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
+                        error_response(&format!("save failed: {e}"))
+                    }
+                    Ok(()) => save_response(engine.n(), timer.elapsed_us() as u64),
+                }
             }
             Ok(Request::Reload { path }) => {
                 let timer = Timer::start();

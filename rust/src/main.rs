@@ -29,6 +29,11 @@ use std::path::Path;
 use std::sync::Arc;
 
 fn main() {
+    // Deterministic fault injection for crash drills: no-op unless the
+    // binary was built with `--features failpoints` AND BST_FAILPOINTS
+    // is set (e.g. `wal.sync=error@25;shard.worker=panic@100+1`). See
+    // util::failpoint.
+    bst::util::failpoint::init_from_env();
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
@@ -88,6 +93,18 @@ USAGE:
                       [--mmap] (serve snapshots zero-copy from a read-only
                        mapping — applies to the --index cold start and to
                        reload ops; writes still land in owned deltas)
+                      [--wal PATH] (per-server write-ahead log: inserts and
+                       deletes are logged + fsync'd before they are
+                       acknowledged, and replayed past the snapshot's
+                       high-water mark on the next start; a `save` op
+                       rotates the log)
+                      [--wal-sync always|batch|off] (fsync policy for WAL
+                       appends; `always` — the default — survives kill -9
+                       and power loss, `batch` syncs once per batch,
+                       `off` leaves durability to the page cache)
+                      [--max-request-bytes N] (largest accepted request
+                       line, default 16777216; longer lines get an error
+                       reply and the connection keeps serving)
   bst info            print build/runtime information
 ";
 
@@ -528,6 +545,10 @@ fn query_snapshot(args: &Args, snap: &str, q: &[u8]) -> i32 {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
+    let Some(wal_sync) = bst::store::WalSync::parse(args.get_or("wal-sync", "always")) else {
+        eprintln!("--wal-sync must be always|batch|off");
+        return 2;
+    };
     let serve_cfg = ServeConfig {
         addr: args.get_or("addr", "127.0.0.1:7878").to_string(),
         shards: args.get_usize("shards", 4),
@@ -538,6 +559,9 @@ fn cmd_serve(args: &Args) -> i32 {
             .get_usize("merge-threshold", Engine::DEFAULT_MERGE_THRESHOLD),
         block_width: args.get_usize("block-width", 8),
         mmap: args.has("mmap"),
+        wal: args.get("wal").map(std::path::PathBuf::from),
+        wal_sync,
+        max_request_bytes: args.get_usize("max-request-bytes", 16 << 20),
     };
 
     // `--index` doubles as the historical kind selector (si-bst/mi-bst)
@@ -597,6 +621,28 @@ fn cmd_serve(args: &Args) -> i32 {
         eprintln!("building {} shards...", serve_cfg.shards);
         Arc::new(Engine::build(&w.sketches, serve_cfg.shards, &kind))
     };
+    // Attach the WAL before the listener exists: tail records from a
+    // crashed run replay into the engine first, so the very first
+    // connection already sees every write that was ever acknowledged.
+    if let Some(wal) = serve_cfg.wal.clone() {
+        match engine.attach_wal(&wal, serve_cfg.wal_sync) {
+            Ok(rep) => eprintln!(
+                "wal {} attached (sync={}): {} segment(s), replayed {} insert + {} delete \
+                 record(s), skipped {}, truncated {} torn byte(s)",
+                wal.display(),
+                serve_cfg.wal_sync.as_str(),
+                rep.segments,
+                rep.replayed_inserts,
+                rep.replayed_deletes,
+                rep.skipped_records,
+                rep.truncated_bytes
+            ),
+            Err(e) => {
+                eprintln!("attaching wal {}: {e}", wal.display());
+                return 1;
+            }
+        }
+    }
     eprintln!(
         "engine ready: n={} shards={} index_mib={:.1}",
         engine.n(),

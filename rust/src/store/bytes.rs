@@ -91,6 +91,15 @@ impl Bytes {
         matches!(self.region, Region::Map(_))
     }
 
+    /// The backing file mapping, when there is one — the residency
+    /// gauge (`mincore`) probes through this.
+    pub fn mapping(&self) -> Option<&Arc<Mmap>> {
+        match &self.region {
+            Region::Map(m) => Some(m),
+            Region::Heap(_) => None,
+        }
+    }
+
     /// A sub-range sharing the same region. Panics on out-of-bounds
     /// ranges, exactly like slice indexing.
     pub fn slice(&self, range: Range<usize>) -> Bytes {

@@ -156,14 +156,32 @@ impl SnapshotBuilder {
         out
     }
 
-    /// Writes the container to `path`. Convenience for small snapshots
-    /// and tests — the whole file is assembled in memory first; large
-    /// multi-section snapshots should use [`SnapshotStreamWriter`],
-    /// which buffers only one section at a time.
+    /// Writes the container to `path` crash-atomically (via
+    /// `<path>.tmp` + fsync + rename, like the stream writer).
+    /// Convenience for small snapshots and tests — the whole file is
+    /// assembled in memory first; large multi-section snapshots should
+    /// use [`SnapshotStreamWriter`], which buffers only one section at
+    /// a time.
     pub fn write_to(&self, path: &Path) -> Result<(), StoreError> {
-        std::fs::write(path, self.to_bytes())?;
-        Ok(())
+        let tmp = tmp_path(path);
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&self.to_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        super::sync_parent_dir(path)
     }
+}
+
+/// The scratch path a save streams into before renaming over `path`.
+fn tmp_path(path: &Path) -> std::path::PathBuf {
+    let mut name = path
+        .file_name()
+        .map_or_else(String::new, |n| n.to_string_lossy().into_owned());
+    name.push_str(".tmp");
+    path.with_file_name(name)
 }
 
 /// Incremental snapshot writer: sections stream to disk as they are
@@ -177,8 +195,19 @@ impl SnapshotBuilder {
 ///
 /// The section count is fixed at creation (the table is laid out before
 /// payloads); `finish` errors unless exactly that many were added.
+///
+/// Saves are crash-atomic: bytes stream into `<path>.tmp` and
+/// [`SnapshotStreamWriter::finish`] fsyncs the scratch file, renames it
+/// over `path`, and fsyncs the directory — a crash at any earlier point
+/// leaves the previous snapshot untouched and loadable, never a
+/// half-written container under the real name.
 pub struct SnapshotStreamWriter {
     file: std::io::BufWriter<std::fs::File>,
+    /// Final destination; bytes stream into [`SnapshotStreamWriter::tmp`]
+    /// until `finish` renames.
+    path: std::path::PathBuf,
+    /// The `<path>.tmp` scratch file receiving the stream.
+    tmp: std::path::PathBuf,
     /// `(name, offset, len, checksum)` per written section.
     table: Vec<(String, u64, u64, u64)>,
     n_sections: usize,
@@ -186,11 +215,12 @@ pub struct SnapshotStreamWriter {
 }
 
 impl SnapshotStreamWriter {
-    /// Creates the file and reserves header + table space for exactly
-    /// `n_sections` sections.
+    /// Creates the scratch file (`<path>.tmp`) and reserves header +
+    /// table space for exactly `n_sections` sections.
     pub fn create(path: &Path, n_sections: usize) -> Result<Self, StoreError> {
         use std::io::Write;
-        let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
+        let tmp = tmp_path(path);
+        let mut file = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
         file.write_all(&MAGIC.to_le_bytes())?;
         file.write_all(&FORMAT_VERSION.to_le_bytes())?;
         file.write_all(&(n_sections as u32).to_le_bytes())?;
@@ -200,12 +230,25 @@ impl SnapshotStreamWriter {
             file.write_all(&zeros)?;
         }
         let offset = (HEADER_BYTES + n_sections * TABLE_ENTRY_BYTES) as u64;
-        Ok(SnapshotStreamWriter { file, table: Vec::with_capacity(n_sections), n_sections, offset })
+        Ok(SnapshotStreamWriter {
+            file,
+            path: path.to_path_buf(),
+            tmp,
+            table: Vec::with_capacity(n_sections),
+            n_sections,
+            offset,
+        })
     }
 
     /// Streams one section's payload (plus alignment padding) to disk.
     pub fn add_section(&mut self, name: &str, payload: &[u8]) -> Result<(), StoreError> {
         use std::io::Write;
+        // Mid-save fault site: the crash-atomicity tests kill or fail a
+        // save here, between sections, and assert the previous snapshot
+        // still loads.
+        if crate::util::failpoint::check("save.section", &self.tmp.to_string_lossy()).is_some() {
+            return Err(StoreError::Io(crate::util::failpoint::io_error("save.section")));
+        }
         assert!(
             !name.is_empty() && name.len() <= MAX_NAME_LEN && name.is_ascii(),
             "section name must be 1..={MAX_NAME_LEN} ASCII bytes: {name:?}"
@@ -228,7 +271,9 @@ impl SnapshotStreamWriter {
         Ok(())
     }
 
-    /// Seeks back and writes the real section table, then flushes.
+    /// Seeks back and writes the real section table, fsyncs the scratch
+    /// file, renames it over the destination, and fsyncs the directory.
+    /// The snapshot only ever appears under its real name complete.
     pub fn finish(mut self) -> Result<(), StoreError> {
         use std::io::{Seek, SeekFrom, Write};
         if self.table.len() != self.n_sections {
@@ -249,7 +294,9 @@ impl SnapshotStreamWriter {
             self.file.write_all(&sum.to_le_bytes())?;
         }
         self.file.flush()?;
-        Ok(())
+        self.file.get_ref().sync_all()?;
+        std::fs::rename(&self.tmp, &self.path)?;
+        super::sync_parent_dir(&self.path)
     }
 }
 
@@ -367,6 +414,12 @@ impl Snapshot {
     /// Whether this snapshot serves from a file mapping.
     pub fn is_mapped(&self) -> bool {
         self.bytes.is_mapped()
+    }
+
+    /// The backing file mapping of a mapped snapshot (`None` for owned
+    /// loads). The engine keeps this alive to probe page residency.
+    pub fn mapping(&self) -> Option<&std::sync::Arc<Mmap>> {
+        self.bytes.mapping()
     }
 
     /// Format version the file declared ([`FORMAT_VERSION_V1`]
@@ -532,7 +585,43 @@ mod tests {
         let mut w = SnapshotStreamWriter::create(&path, 2).unwrap();
         w.add_section("only", &[9]).unwrap();
         assert!(w.finish().is_err(), "missing section must fail finish");
-        std::fs::remove_file(&path).unwrap();
+        // The failed save never appeared under the real name — only the
+        // scratch file exists.
+        assert!(!path.exists(), "failed finish must not install the snapshot");
+        std::fs::remove_file(tmp_path(&path)).unwrap();
+    }
+
+    #[test]
+    fn crashed_save_preserves_previous_snapshot() {
+        let dir = std::env::temp_dir().join("bst_container_atomic_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("atomic.snap");
+        let good = sample();
+        good.write_to(&path).unwrap();
+
+        // A save that dies between sections (injected I/O failure at
+        // the `save.section` failpoint) must leave the old file intact.
+        let mut w = SnapshotStreamWriter::create(&path, 3).unwrap();
+        w.add_section("meta", &[9, 9, 9]).unwrap();
+        crate::util::failpoint::arm_scoped(
+            "save.section",
+            "bst_container_atomic_test",
+            0,
+            1,
+            crate::util::failpoint::Action::Error,
+        );
+        let err = w.add_section("shard.0", &[1]);
+        crate::util::failpoint::clear("save.section");
+        assert!(err.is_err(), "armed failpoint must fail the section write");
+        drop(w);
+
+        let snap = Snapshot::open(&path).unwrap();
+        assert_eq!(
+            snap.section_names().collect::<Vec<_>>(),
+            good.sections.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+            "previous snapshot must survive a mid-save crash"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

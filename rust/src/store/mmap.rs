@@ -32,6 +32,10 @@ mod sys {
             offset: i64,
         ) -> *mut c_void;
         pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        // `vec` is `unsigned char*` on Linux and `char*` on the BSDs;
+        // `*mut u8` is layout-compatible with both.
+        pub fn mincore(addr: *mut c_void, len: usize, vec: *mut u8) -> c_int;
+        pub fn getpagesize() -> c_int;
     }
 }
 
@@ -112,6 +116,40 @@ impl Mmap {
         // `from_raw_parts`.
         unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
     }
+
+    /// How many of the mapping's bytes are resident in the page cache
+    /// right now (`mincore`), rounded up to whole pages. `None` when the
+    /// platform has no `mincore` or the probe fails — the stats endpoint
+    /// reports that as `null` rather than a fake zero. Operators use
+    /// this to see cold-page risk on a freshly mapped snapshot before
+    /// traffic warms it.
+    pub fn resident_bytes(&self) -> Option<usize> {
+        #[cfg(unix)]
+        {
+            if self.len == 0 {
+                return Some(0);
+            }
+            let page = unsafe { sys::getpagesize() };
+            let page = usize::try_from(page).ok().filter(|&p| p > 0)?;
+            let pages = self.len.div_ceil(page);
+            let mut vec = vec![0u8; pages];
+            // Safety: `ptr` is a live page-aligned mapping of `len`
+            // bytes (mmap returns page-aligned addresses) and `vec`
+            // holds one byte per page of it.
+            let rc = unsafe {
+                sys::mincore(self.ptr as *mut std::os::raw::c_void, self.len, vec.as_mut_ptr())
+            };
+            if rc != 0 {
+                return None;
+            }
+            let resident_pages = vec.iter().filter(|&&v| v & 1 != 0).count();
+            Some((resident_pages * page).min(self.len))
+        }
+        #[cfg(not(unix))]
+        {
+            None
+        }
+    }
 }
 
 impl Drop for Mmap {
@@ -159,6 +197,22 @@ mod tests {
         let m = Mmap::map(&std::fs::File::open(&path).unwrap()).unwrap();
         assert!(m.is_empty());
         assert_eq!(m.as_slice(), &[] as &[u8]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn resident_bytes_probe() {
+        let data = vec![3u8; 4096 * 4];
+        let path = tmp("resident.bin", &data);
+        let m = Mmap::map(&std::fs::File::open(&path).unwrap()).unwrap();
+        // Touch every byte so the pages are resident, then probe.
+        let sum: u64 = m.as_slice().iter().map(|&b| b as u64).sum();
+        assert_eq!(sum, 3 * data.len() as u64);
+        if let Some(r) = m.resident_bytes() {
+            assert!(r <= m.len());
+            assert!(r > 0, "just-touched mapping reports zero resident bytes");
+        }
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -18,6 +18,10 @@
 //! * [`mmap`] — dependency-free read-only file mapping
 //!   ([`Snapshot::open_mapped`] serves sections straight from the page
 //!   cache; see the mapped-serving contract in [`container`]).
+//! * [`wal`] — the per-engine write-ahead log: every acknowledged
+//!   insert/delete is appended (and fsync'd per `--wal-sync`) before
+//!   the engine replies, and replayed past the snapshot's id high-water
+//!   mark on load. See the durability contract in that module.
 //! * [`Persist`] — `write_into` / `read_from` implemented by every
 //!   persistent structure ([`crate::bits::BitVec`], [`crate::bits::RsBitVec`],
 //!   [`crate::bits::IntVec`], the sketch stores, all four tries, all six
@@ -28,6 +32,7 @@
 pub mod bytes;
 pub mod container;
 pub mod mmap;
+pub mod wal;
 
 pub use bytes::{
     mapped_borrow_fallbacks, ByteReader, ByteWriter, Bytes, Pod, PodVec, U32s, Words,
@@ -37,6 +42,7 @@ pub use container::{
     FORMAT_VERSION_V2, MAGIC,
 };
 pub use mmap::Mmap;
+pub use wal::{Wal, WalRecord, WalSync};
 
 use std::fmt;
 
@@ -143,6 +149,27 @@ pub fn persisted_bytes<T: Persist>(x: &T) -> usize {
     let mut w = ByteWriter::new();
     x.write_into(&mut w);
     w.len()
+}
+
+/// Fsyncs the directory containing `path`, making renames and creates
+/// in it durable (crash-atomic snapshot saves and WAL rotation both
+/// need the directory entry on disk, not just the file contents). On
+/// non-unix targets directory handles cannot be fsync'd; the data
+/// fsyncs still hold.
+pub(crate) fn sync_parent_dir(path: &std::path::Path) -> Result<(), StoreError> {
+    let dir = path
+        .parent()
+        .filter(|p| !p.as_os_str().is_empty())
+        .unwrap_or(std::path::Path::new("."));
+    #[cfg(unix)]
+    {
+        std::fs::File::open(dir)?.sync_all()?;
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = dir;
+    }
+    Ok(())
 }
 
 /// Shared validation helper: errors unless `cond` holds.

@@ -1,0 +1,247 @@
+//! Deterministic fault injection for crash-recovery tests.
+//!
+//! A failpoint is a named sequence point (`"wal.sync"`,
+//! `"shard.worker"`, …) checked by production code via
+//! [`check`]. In normal builds `check` is a compiled-out no-op; under
+//! `cfg(test)` or the `failpoints` feature a test can [`arm`] a point
+//! with an [`Action`] — panic, synthesized I/O error, short write, or
+//! process exit — that fires for a configured window of hits. This is
+//! what drives the WAL torn-tail tests, the worker-restart tests, and
+//! the mid-save atomicity tests without any timing dependence: the
+//! fault fires at exactly the `skip`-th hit, every run.
+//!
+//! The registry is process-global, but tests run concurrently in one
+//! process, so every site passes a *context* string (the WAL base
+//! path, the snapshot scratch path, the engine instance tag) and
+//! [`arm_scoped`] restricts firing to contexts containing a filter
+//! substring — a test arming its own uniquely-named engine or temp
+//! directory cannot trip a neighbouring test's site. [`clear`] /
+//! [`clear_all`] disarm.
+//!
+//! Binaries built with `--features failpoints` additionally read the
+//! `BST_FAILPOINTS` environment variable at startup (see
+//! [`init_from_env`]) so the CI crash gate can inject faults into a
+//! real `bst serve` process.
+
+/// What an armed failpoint does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Panic with the failpoint's name (worker-isolation tests).
+    Panic,
+    /// Surface a synthesized `io::Error` (fsync/write failure tests).
+    Error,
+    /// Truncate the write to this many bytes *without* the caller's
+    /// usual cleanup — simulates power loss mid-append (torn tail).
+    ShortWrite(usize),
+    /// `std::process::exit(3)` — a mid-save kill for subprocess tests.
+    Exit,
+}
+
+#[cfg(any(test, feature = "failpoints"))]
+mod imp {
+    use super::Action;
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+
+    struct Armed {
+        /// Fires only for contexts containing this substring.
+        filter: Option<String>,
+        /// Matching hits to let through before firing.
+        skip: u64,
+        /// Fires this many times once reached, then passes again.
+        times: u64,
+        hits: u64,
+        action: Action,
+    }
+
+    fn registry() -> &'static Mutex<HashMap<String, Armed>> {
+        static REG: OnceLock<Mutex<HashMap<String, Armed>>> = OnceLock::new();
+        REG.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    /// Arms `name` for every context: the first `skip` hits pass, the
+    /// next `times` hits fire `action`, later hits pass again.
+    pub fn arm(name: &str, skip: u64, times: u64, action: Action) {
+        arm_entry(name, None, skip, times, action);
+    }
+
+    /// [`arm`], but only hits whose context contains `filter` count or
+    /// fire — scopes the fault to one test's engine/WAL/file.
+    pub fn arm_scoped(name: &str, filter: &str, skip: u64, times: u64, action: Action) {
+        arm_entry(name, Some(filter.to_string()), skip, times, action);
+    }
+
+    fn arm_entry(name: &str, filter: Option<String>, skip: u64, times: u64, action: Action) {
+        registry()
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Armed { filter, skip, times, hits: 0, action });
+    }
+
+    /// Disarms `name` (no-op when not armed).
+    pub fn clear(name: &str) {
+        registry().lock().unwrap().remove(name);
+    }
+
+    /// Disarms everything.
+    pub fn clear_all() {
+        registry().lock().unwrap().clear();
+    }
+
+    /// Called from production sites: `Some(action)` when the point
+    /// fires on this hit. [`Action::Panic`] and [`Action::Exit`] are
+    /// executed here so call sites only need to handle data actions.
+    pub fn check(name: &str, ctx: &str) -> Option<Action> {
+        let action = {
+            let mut reg = registry().lock().unwrap();
+            let armed = reg.get_mut(name)?;
+            if let Some(f) = &armed.filter {
+                if !ctx.contains(f.as_str()) {
+                    return None;
+                }
+            }
+            let hit = armed.hits;
+            armed.hits += 1;
+            if hit < armed.skip || hit >= armed.skip + armed.times {
+                return None;
+            }
+            armed.action
+        };
+        match action {
+            Action::Panic => panic!("failpoint {name} fired at {ctx}: injected panic"),
+            Action::Exit => std::process::exit(3),
+            other => Some(other),
+        }
+    }
+
+    /// Arms failpoints from `BST_FAILPOINTS` (builds with the
+    /// `failpoints` feature call this at startup). Entries are
+    /// `;`-separated: `name=action[(arg)][@skip[+times]]`, with action
+    /// one of `panic` / `error` / `exit` / `short(bytes)`; `skip`
+    /// defaults to 0 and `times` to 1. Example:
+    /// `wal.sync=error@25;shard.worker=panic@100+1`. Malformed entries
+    /// are ignored (the injecting test asserts on observed effects).
+    pub fn init_from_env() {
+        let Ok(spec) = std::env::var("BST_FAILPOINTS") else {
+            return;
+        };
+        for entry in spec.split(';').filter(|e| !e.is_empty()) {
+            let Some((name, rest)) = entry.split_once('=') else {
+                continue;
+            };
+            let (action_str, window) = match rest.split_once('@') {
+                Some((a, w)) => (a, Some(w)),
+                None => (rest, None),
+            };
+            let action = if action_str == "panic" {
+                Action::Panic
+            } else if action_str == "error" {
+                Action::Error
+            } else if action_str == "exit" {
+                Action::Exit
+            } else if let Some(arg) = action_str
+                .strip_prefix("short(")
+                .and_then(|s| s.strip_suffix(')'))
+            {
+                match arg.parse() {
+                    Ok(n) => Action::ShortWrite(n),
+                    Err(_) => continue,
+                }
+            } else {
+                continue;
+            };
+            let (skip, times) = match window {
+                None => (0, 1),
+                Some(w) => match w.split_once('+') {
+                    None => match w.parse() {
+                        Ok(s) => (s, 1),
+                        Err(_) => continue,
+                    },
+                    Some((s, t)) => match (s.parse(), t.parse()) {
+                        (Ok(s), Ok(t)) => (s, t),
+                        _ => continue,
+                    },
+                },
+            };
+            arm(name.trim(), skip, times, action);
+        }
+    }
+
+    /// Synthesized error for [`Action::Error`] sites.
+    pub fn io_error(name: &str) -> std::io::Error {
+        std::io::Error::other(format!("failpoint {name} fired: injected io error"))
+    }
+}
+
+#[cfg(any(test, feature = "failpoints"))]
+pub use imp::{arm, arm_scoped, check, clear, clear_all, init_from_env, io_error};
+
+/// Release builds without the `failpoints` feature compile every site
+/// down to nothing.
+#[cfg(not(any(test, feature = "failpoints")))]
+#[inline(always)]
+pub fn check(_name: &str, _ctx: &str) -> Option<Action> {
+    None
+}
+
+#[cfg(not(any(test, feature = "failpoints")))]
+#[inline(always)]
+pub fn init_from_env() {}
+
+#[cfg(not(any(test, feature = "failpoints")))]
+#[inline(always)]
+pub fn io_error(_name: &str) -> std::io::Error {
+    unreachable!("failpoint actions never fire without the failpoints feature")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_is_silent() {
+        assert_eq!(check("fp.test.unarmed", ""), None);
+    }
+
+    #[test]
+    fn skip_times_window() {
+        arm("fp.test.window", 2, 1, Action::Error);
+        assert_eq!(check("fp.test.window", "x"), None);
+        assert_eq!(check("fp.test.window", "x"), None);
+        assert_eq!(check("fp.test.window", "x"), Some(Action::Error));
+        assert_eq!(check("fp.test.window", "x"), None);
+        clear("fp.test.window");
+    }
+
+    #[test]
+    fn scoped_filter_ignores_other_contexts() {
+        arm_scoped("fp.test.scoped", "mine", 0, 1, Action::Error);
+        // Non-matching contexts neither fire nor consume hits.
+        assert_eq!(check("fp.test.scoped", "theirs"), None);
+        assert_eq!(check("fp.test.scoped", "also-not"), None);
+        assert_eq!(check("fp.test.scoped", "path/mine/wal"), Some(Action::Error));
+        assert_eq!(check("fp.test.scoped", "path/mine/wal"), None);
+        clear("fp.test.scoped");
+    }
+
+    #[test]
+    fn short_write_carries_len() {
+        arm("fp.test.short", 0, 1, Action::ShortWrite(5));
+        assert_eq!(check("fp.test.short", ""), Some(Action::ShortWrite(5)));
+        clear("fp.test.short");
+    }
+
+    #[test]
+    fn clear_disarms() {
+        arm("fp.test.clear", 0, 10, Action::Error);
+        clear("fp.test.clear");
+        assert_eq!(check("fp.test.clear", ""), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "injected panic")]
+    fn panic_action_panics() {
+        arm("fp.test.panic", 0, 1, Action::Panic);
+        check("fp.test.panic", "ctx");
+    }
+}

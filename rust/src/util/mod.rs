@@ -11,7 +11,10 @@
 //! * [`json`] — a minimal JSON encoder/decoder for the wire protocol and
 //!   artifact metadata.
 //! * [`mem`] — heap-size accounting used by the paper's space tables.
+//! * [`failpoint`] — deterministic fault injection (test / `failpoints`
+//!   feature only) behind the crash-recovery gates.
 
+pub mod failpoint;
 pub mod json;
 pub mod mem;
 pub mod pool;

@@ -1,0 +1,296 @@
+//! Property suite for the write-ahead log (PR 8): across b ∈ {1, 2, 4,
+//! 8} and random insert / delete / merge interleavings, *every*
+//! byte-prefix of the WAL — each one a possible power-loss outcome —
+//! must parse to a record-boundary prefix of the full log, and a fresh
+//! engine replaying it must answer exactly like a linear-scan oracle of
+//! the writes that survived the cut. Recovered logs must also stay
+//! appendable: writes after a replay are themselves replayed by the
+//! next recovery.
+//!
+//! Fault-injected tears (short appends, fsync failures, worker panics)
+//! live in the unit suites (`store::wal`, `coordinator::engine`), which
+//! build with the failpoint registry; this integration suite tears the
+//! log byte-by-byte instead, which needs no injection hooks.
+
+use bst::coordinator::engine::{Engine, ShardIndexKind};
+use bst::sketch::hamming::ham_chars;
+use bst::sketch::SketchSet;
+use bst::store::wal::{self, WalRecord, WalSync};
+use bst::trie::bst::BstConfig;
+use bst::util::Rng;
+use std::path::{Path, PathBuf};
+
+/// Shapes exercising every alphabet width.
+const SHAPES: &[(usize, usize)] = &[(1, 16), (2, 12), (4, 8), (8, 6)];
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bst_prop_wal_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The oracle: base rows plus a WAL record sequence applied in order.
+/// Inserts are contiguous by construction (the engine reserves id
+/// ranges under the insert lock, in log order), so any prefix of the
+/// log extends the base without gaps.
+struct Oracle {
+    rows: Vec<Vec<u8>>,
+    alive: Vec<bool>,
+}
+
+impl Oracle {
+    fn new(base: &[Vec<u8>], records: &[WalRecord], l: usize) -> Oracle {
+        let mut o = Oracle { rows: base.to_vec(), alive: vec![true; base.len()] };
+        for rec in records {
+            match rec {
+                WalRecord::Insert { start_id, n, chars } => {
+                    assert_eq!(*start_id as usize, o.rows.len(), "log ids are contiguous");
+                    assert_eq!(chars.len(), *n as usize * l);
+                    for row in chars.chunks_exact(l) {
+                        o.rows.push(row.to_vec());
+                        o.alive.push(true);
+                    }
+                }
+                WalRecord::Delete { id } => {
+                    if (*id as usize) < o.rows.len() {
+                        o.alive[*id as usize] = false;
+                    }
+                }
+                WalRecord::MergeMarker => {}
+            }
+        }
+        o
+    }
+
+    fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {
+        (0..self.rows.len())
+            .filter(|&i| self.alive[i] && ham_chars(&self.rows[i], q) <= tau)
+            .map(|i| i as u32)
+            .collect()
+    }
+
+    fn top_k(&self, q: &[u8], k: usize, tau: usize) -> Vec<(u32, usize)> {
+        let mut all: Vec<(usize, u32)> = (0..self.rows.len())
+            .filter(|&i| self.alive[i])
+            .map(|i| (ham_chars(&self.rows[i], q), i as u32))
+            .filter(|&(d, _)| d <= tau)
+            .collect();
+        all.sort_unstable();
+        all.truncate(k);
+        all.into_iter().map(|(d, id)| (id, d)).collect()
+    }
+}
+
+fn random_row(rng: &mut Rng, b: usize, l: usize, centers: &[Vec<u8>]) -> Vec<u8> {
+    let mut row = centers[rng.below_usize(centers.len())].clone();
+    for _ in 0..rng.below_usize(3) {
+        let p = rng.below_usize(l);
+        row[p] = rng.below(1 << b) as u8;
+    }
+    row
+}
+
+fn check_engine(engine: &Engine, oracle: &Oracle, rng: &mut Rng, b: usize, l: usize, tag: &str) {
+    assert_eq!(engine.n(), oracle.rows.len(), "{tag}: id high-water mark");
+    for _ in 0..2 {
+        let q: Vec<u8> = if oracle.rows.is_empty() || rng.below(2) == 0 {
+            (0..l).map(|_| rng.below(1 << b) as u8).collect()
+        } else {
+            oracle.rows[rng.below_usize(oracle.rows.len())].clone()
+        };
+        for tau in [0usize, 2, 4] {
+            let mut got = engine.search(&q, tau);
+            got.sort_unstable();
+            assert_eq!(got, oracle.search(&q, tau), "{tag}: search b={b} tau={tau}");
+            assert_eq!(engine.count(&q, tau), got.len(), "{tag}: count b={b} tau={tau}");
+        }
+        assert_eq!(engine.top_k(&q, 5, l), oracle.top_k(&q, 5, l), "{tag}: topk b={b}");
+    }
+}
+
+/// Writes `bytes` as the sole segment (`engine.wal.0`) of a fresh log
+/// directory and returns the segment base path.
+fn prefix_log(dir: &Path, bytes: &[u8]) -> PathBuf {
+    let _ = std::fs::remove_dir_all(dir);
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(dir.join("engine.wal.0"), bytes).unwrap();
+    dir.join("engine.wal")
+}
+
+/// Generates a log with a writer engine, then (a) parses every
+/// byte-prefix — each must yield a record-boundary prefix of the full
+/// record sequence — and (b) replays sampled prefixes into fresh
+/// engines, which must match the oracle of exactly the surviving
+/// writes; the full-log replay must additionally stay appendable and
+/// survive a second recovery.
+#[test]
+fn prop_every_wal_prefix_replays_to_acked_state() {
+    for &(b, l) in SHAPES {
+        let mut rng = Rng::new((0x3A1 + b * 131 + l) as u64);
+        let centers: Vec<Vec<u8>> = (0..6)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect();
+        let base: Vec<Vec<u8>> = (0..60)
+            .map(|_| random_row(&mut rng, b, l, &centers))
+            .collect();
+        let set = SketchSet::from_rows(b, l, &base);
+
+        // Writer: every acknowledged op lands in the log first.
+        let gen_dir = fresh_dir(&format!("gen_{b}"));
+        let wal_base = gen_dir.join("engine.wal");
+        let writer = Engine::build(&set, 3, &ShardIndexKind::Bst(BstConfig::default()));
+        let rep = writer.attach_wal(&wal_base, WalSync::Always).unwrap();
+        assert_eq!(rep.replayed_inserts + rep.replayed_deletes, 0, "fresh log is empty");
+        let seed_batch: Vec<Vec<u8>> =
+            (0..5).map(|_| random_row(&mut rng, b, l, &centers)).collect();
+        writer.insert_batch(&seed_batch).unwrap();
+        for _ in 0..9 {
+            match rng.below(5) {
+                0..=2 => {
+                    let m = 1 + rng.below_usize(10);
+                    let batch: Vec<Vec<u8>> =
+                        (0..m).map(|_| random_row(&mut rng, b, l, &centers)).collect();
+                    writer.insert_batch(&batch).unwrap();
+                }
+                3 => {
+                    let _ = writer.delete(rng.below(writer.n() as u64) as u32);
+                }
+                _ => {
+                    writer.merge();
+                }
+            }
+        }
+        drop(writer);
+        let full = std::fs::read(gen_dir.join("engine.wal.0")).unwrap();
+        let all = wal::read_records(&wal_base).unwrap();
+        assert!(all.iter().any(|r| matches!(r, WalRecord::Insert { .. })), "log has inserts");
+
+        // (a) Every byte-prefix — a possible crash point — parses to a
+        // record-boundary prefix of the full sequence, never garbage.
+        let parse_dir = std::env::temp_dir()
+            .join(format!("bst_prop_wal_{}_parse_{b}", std::process::id()));
+        for cut in 0..=full.len() {
+            let base_path = prefix_log(&parse_dir, &full[..cut]);
+            let recs = wal::read_records(&base_path).unwrap();
+            assert_eq!(recs, all[..recs.len()], "prefix {cut} of {}", full.len());
+        }
+
+        // (b) Replay sampled prefixes into fresh engines (a different
+        // shard count than the writer: striping is the replayer's).
+        let mut cuts = vec![0usize, full.len()];
+        cuts.extend((0..10).map(|_| rng.below_usize(full.len() + 1)));
+        let replay_dir = std::env::temp_dir()
+            .join(format!("bst_prop_wal_{}_replay_{b}", std::process::id()));
+        for cut in cuts {
+            let base_path = prefix_log(&replay_dir, &full[..cut]);
+            let recs = wal::read_records(&base_path).unwrap();
+            let oracle = Oracle::new(&base, &recs, l);
+            let engine = Engine::build(&set, 2, &ShardIndexKind::Bst(BstConfig::default()));
+            let rep = engine.attach_wal(&base_path, WalSync::Always).unwrap();
+            // Recovery physically truncated the torn suffix.
+            let seg_len = std::fs::metadata(replay_dir.join("engine.wal.0")).unwrap().len();
+            assert_eq!(seg_len + rep.truncated_bytes, cut as u64, "cut {cut}");
+            check_engine(&engine, &oracle, &mut rng, b, l, &format!("cut {cut}"));
+
+            if cut == full.len() {
+                assert_eq!(rep.truncated_bytes, 0, "clean log has no torn tail");
+                // The recovered engine is a live writer: new ops append
+                // past the replayed tail and survive a second recovery.
+                let extra: Vec<Vec<u8>> =
+                    (0..7).map(|_| random_row(&mut rng, b, l, &centers)).collect();
+                let range = engine.insert_batch(&extra).unwrap();
+                assert_eq!(range.start as usize, oracle.rows.len(), "ids continue");
+                let victim = range.start + 2;
+                assert!(engine.delete(victim));
+                drop(engine);
+                let recs2 = wal::read_records(&base_path).unwrap();
+                assert_eq!(recs2.len(), recs.len() + 2, "replay appended two records");
+                let oracle2 = Oracle::new(&base, &recs2, l);
+                assert!(!oracle2.alive[victim as usize]);
+                let again = Engine::build(&set, 3, &ShardIndexKind::Bst(BstConfig::default()));
+                again.attach_wal(&base_path, WalSync::Always).unwrap();
+                check_engine(&again, &oracle2, &mut rng, b, l, "second recovery");
+            }
+        }
+        for d in [&gen_dir, &parse_dir, &replay_dir] {
+            let _ = std::fs::remove_dir_all(d);
+        }
+    }
+}
+
+/// Replay composes with snapshots: recovering into a *loaded* engine
+/// only applies records past the snapshot's id high-water mark, and a
+/// stale pre-rotation segment (what a crash between `rotate_begin` and
+/// `rotate_commit` leaves behind) is skipped idempotently rather than
+/// double-applied.
+#[test]
+fn replay_past_snapshot_hwm_skips_stale_segments() {
+    let (b, l) = (2, 10);
+    let mut rng = Rng::new(0x3B2);
+    let centers: Vec<Vec<u8>> = (0..6)
+        .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+        .collect();
+    let base: Vec<Vec<u8>> = (0..80)
+        .map(|_| random_row(&mut rng, b, l, &centers))
+        .collect();
+    let set = SketchSet::from_rows(b, l, &base);
+
+    let dir = fresh_dir("hwm");
+    let wal_base = dir.join("engine.wal");
+    let snap = dir.join("engine.snap");
+    let writer = Engine::build(&set, 2, &ShardIndexKind::Bst(BstConfig::default()));
+    writer.attach_wal(&wal_base, WalSync::Always).unwrap();
+    let pre: Vec<Vec<u8>> = (0..15).map(|_| random_row(&mut rng, b, l, &centers)).collect();
+    writer.insert_batch(&pre).unwrap();
+    assert!(writer.delete(3));
+    // Save rotates the log; records covering the snapshot are gone...
+    writer.save(&snap).unwrap();
+    let post: Vec<Vec<u8>> = (0..8).map(|_| random_row(&mut rng, b, l, &centers)).collect();
+    writer.insert_batch(&post).unwrap();
+    assert!(writer.delete(97)); // a post-snapshot row
+    drop(writer);
+
+    // ...but resurrect the pre-save records as a stale older segment, as
+    // a crash between the snapshot rename and the segment cleanup would.
+    let stale = {
+        let probe_dir = fresh_dir("hwm_probe");
+        let probe = Engine::build(&set, 2, &ShardIndexKind::Bst(BstConfig::default()));
+        probe.attach_wal(&probe_dir.join("engine.wal"), WalSync::Always).unwrap();
+        probe.insert_batch(&pre).unwrap();
+        assert!(probe.delete(3));
+        drop(probe);
+        let bytes = std::fs::read(probe_dir.join("engine.wal.0")).unwrap();
+        let _ = std::fs::remove_dir_all(&probe_dir);
+        bytes
+    };
+    std::fs::write(dir.join("engine.wal.0"), &stale).unwrap();
+
+    // 2 stale records (pre insert + delete) + 2 live ones (post insert
+    // + delete), in segment order.
+    assert_eq!(wal::read_records(&wal_base).unwrap().len(), 4);
+    // The stale segment contributes nothing: its writes are already
+    // inside the snapshot (ids below the high-water mark), so the final
+    // state is simply base + pre + post minus the two deletes.
+    let oracle = {
+        let mut rows = base.clone();
+        rows.extend(pre.iter().cloned());
+        rows.extend(post.iter().cloned());
+        let mut alive = vec![true; rows.len()];
+        alive[3] = false;
+        alive[97] = false;
+        Oracle { rows, alive }
+    };
+
+    let engine = Engine::load(&snap).unwrap();
+    let rep = engine.attach_wal(&wal_base, WalSync::Always).unwrap();
+    assert_eq!(rep.segments, 2, "stale + live segments scanned");
+    assert_eq!(rep.replayed_inserts, 8, "only post-snapshot rows replay");
+    assert_eq!(rep.replayed_deletes, 2, "deletes replay idempotently");
+    assert_eq!(rep.skipped_records, 1, "stale insert below the hwm is skipped");
+    check_engine(&engine, &oracle, &mut rng, b, l, "hwm replay");
+    let mut hit = engine.search(&oracle.rows[97], 0);
+    hit.sort_unstable();
+    assert!(!hit.contains(&97), "post-snapshot delete replayed");
+    let _ = std::fs::remove_dir_all(&dir);
+}
