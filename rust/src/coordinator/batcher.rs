@@ -22,19 +22,18 @@
 //! batch, so a `reload` (snapshot swap) takes effect on the next batch
 //! without restarting the batcher.
 
-use super::engine::{Engine, EngineSlot, QueryMode, QueryResult};
+use super::engine::{Engine, EngineSlot, QueryMode, QueryResult, QuerySpec};
 use super::ServeConfig;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// One queued request. The query is held as `Arc<[u8]>` so the engine's
-/// shard fan-out shares the bytes instead of cloning them per shard.
+/// One queued request. The spec holds the query as `Arc<[u8]>` so the
+/// engine's shard fan-out shares the bytes instead of cloning them per
+/// shard.
 struct Pending {
-    q: Arc<[u8]>,
-    tau: usize,
-    mode: QueryMode,
+    spec: QuerySpec,
     reply: Sender<QueryResult>,
 }
 
@@ -53,18 +52,20 @@ pub struct BatchSubmitter {
 }
 
 impl BatchSubmitter {
-    fn submit(&self, q: Vec<u8>, tau: usize, mode: QueryMode) -> Option<QueryResult> {
+    /// Submits a fully specified query and blocks until its result
+    /// arrives — the unified entry point mirroring [`Engine::query`].
+    /// `None` when the batcher has shut down mid-flight.
+    pub fn query(&self, spec: QuerySpec) -> Option<QueryResult> {
         let (reply_tx, reply_rx) = channel();
-        self.tx
-            .send(Msg::Req(Pending { q: q.into(), tau, mode, reply: reply_tx }))
-            .ok()?;
+        self.tx.send(Msg::Req(Pending { spec, reply: reply_tx })).ok()?;
         reply_rx.recv().ok()
     }
 
     /// Submits an id search and blocks until its result arrives. `None`
-    /// when the batcher has shut down.
+    /// when the batcher has shut down or the query failed.
     pub fn search(&self, q: Vec<u8>, tau: usize) -> Option<Vec<u32>> {
-        match self.submit(q, tau, QueryMode::Ids)? {
+        let spec = QuerySpec { q: q.into(), tau, mode: QueryMode::Ids };
+        match self.query(spec)? {
             QueryResult::Ids(ids) => Some(ids),
             _ => None,
         }
@@ -72,7 +73,8 @@ impl BatchSubmitter {
 
     /// Submits a counting query.
     pub fn count(&self, q: Vec<u8>, tau: usize) -> Option<usize> {
-        match self.submit(q, tau, QueryMode::Count)? {
+        let spec = QuerySpec { q: q.into(), tau, mode: QueryMode::Count };
+        match self.query(spec)? {
             QueryResult::Count(c) => Some(c),
             _ => None,
         }
@@ -80,7 +82,8 @@ impl BatchSubmitter {
 
     /// Submits a top-k query (radius `tau`).
     pub fn topk(&self, q: Vec<u8>, k: usize, tau: usize) -> Option<Vec<(u32, usize)>> {
-        match self.submit(q, tau, QueryMode::TopK(k))? {
+        let spec = QuerySpec { q: q.into(), tau, mode: QueryMode::TopK(k) };
+        match self.query(spec)? {
             QueryResult::TopK(hits) => Some(hits),
             _ => None,
         }
@@ -153,7 +156,7 @@ impl Batcher {
             let engine = slot.current();
             let queries: Vec<(Arc<[u8]>, usize, QueryMode)> = batch
                 .iter()
-                .map(|p| (Arc::clone(&p.q), p.tau, p.mode))
+                .map(|p| (Arc::clone(&p.spec.q), p.spec.tau, p.spec.mode))
                 .collect();
             let results = engine.run_batch_blocked(&queries, block_width);
             for (p, r) in batch.into_iter().zip(results) {

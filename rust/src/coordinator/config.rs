@@ -1,6 +1,6 @@
 //! Serving configuration.
 
-use crate::store::WalSync;
+use crate::store::{WalCursor, WalSync};
 
 /// Parameters of the query service.
 #[derive(Debug, Clone)]
@@ -43,6 +43,19 @@ pub struct ServeConfig {
     /// `metrics.errors`) without buffering them — one hostile client
     /// cannot OOM the server — and the connection keeps serving.
     pub max_request_bytes: usize,
+    /// Follower mode (`--follow HOST:PORT`): the primary this server
+    /// replicates from. When set the server is read-only — it answers
+    /// every read op and rejects writes with a `read_only` error — and
+    /// a replication thread tails the primary's WAL. Mutually exclusive
+    /// with `wal` (a follower's durability is its primary's).
+    pub follow: Option<String>,
+    /// How long the replication thread sleeps between `wal.fetch` polls
+    /// that returned no new records (`--follow-poll-ms`).
+    pub follow_poll_ms: u64,
+    /// Where the replication tail starts: the cursor returned by the
+    /// bootstrap snapshot fetch. Set by the `serve --follow` startup
+    /// path, not a CLI flag.
+    pub follow_cursor: Option<WalCursor>,
 }
 
 impl Default for ServeConfig {
@@ -59,6 +72,9 @@ impl Default for ServeConfig {
             wal: None,
             wal_sync: WalSync::Always,
             max_request_bytes: 16 << 20,
+            follow: None,
+            follow_poll_ms: 200,
+            follow_cursor: None,
         }
     }
 }

@@ -63,7 +63,7 @@ use super::segment::{DeltaSegment, IdMap, MergeOutcome, SegmentedShard, ShardPar
 use crate::index::{MultiBst, SearchIndex, SingleBst};
 use crate::query::{BlockCollector, Collector, QueryCtx, MAX_BLOCK};
 use crate::sketch::SketchSet;
-use crate::store::wal::{self, Wal, WalRecord, WalSync};
+use crate::store::wal::{self, Wal, WalCursor, WalRecord, WalSync};
 use crate::store::{
     ensure, from_payload, to_payload, ByteReader, ByteWriter, Mmap, Persist, Snapshot,
     SnapshotStreamWriter, StoreError, FORMAT_VERSION_V1,
@@ -76,6 +76,7 @@ use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// How a fanned-out query collects results on each shard.
 #[derive(Debug, Clone, Copy)]
@@ -107,6 +108,40 @@ pub enum QueryResult {
     /// to `None`, which the server answers as an error line.
     Failed,
 }
+
+/// One fully specified query: sketch, radius and collection mode. This
+/// is the single argument of [`Engine::query`], the unified entry point
+/// the server, the batcher and the CLI all route through; the legacy
+/// per-mode helpers ([`Engine::search`] / [`Engine::count`] /
+/// [`Engine::top_k`]) are thin wrappers kept for compatibility.
+#[derive(Debug, Clone)]
+pub struct QuerySpec {
+    pub q: Arc<[u8]>,
+    pub tau: usize,
+    pub mode: QueryMode,
+}
+
+impl QuerySpec {
+    /// Threshold search collecting matching ids.
+    pub fn ids(q: &[u8], tau: usize) -> QuerySpec {
+        QuerySpec { q: Arc::from(q), tau, mode: QueryMode::Ids }
+    }
+
+    /// Threshold search counting matches only.
+    pub fn count(q: &[u8], tau: usize) -> QuerySpec {
+        QuerySpec { q: Arc::from(q), tau, mode: QueryMode::Count }
+    }
+
+    /// Top-`k` by `(dist, id)` within radius `tau`.
+    pub fn top_k(q: &[u8], k: usize, tau: usize) -> QuerySpec {
+        QuerySpec { q: Arc::from(q), tau, mode: QueryMode::TopK(k) }
+    }
+}
+
+/// What [`Engine::query`] returns. An alias today; named separately so
+/// the output side of the unified API can grow (e.g. per-query stats)
+/// without touching every caller's signature.
+pub type QueryOutput = QueryResult;
 
 /// Totals of one [`Engine::merge`] sweep.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -361,6 +396,10 @@ impl RecoveryPlan {
     fn generation(&self) -> u64 {
         self.inner.lock().unwrap().generation
     }
+
+    fn wal_path(&self) -> Option<PathBuf> {
+        self.inner.lock().unwrap().wal.clone()
+    }
 }
 
 /// The sharded engine.
@@ -510,8 +549,18 @@ impl Engine {
     /// snapshot plus stale segments whose records replay idempotently
     /// below the recorded id high-water mark.
     pub fn save(&self, path: &Path) -> Result<(), StoreError> {
+        self.save_with_cursor(path).map(|_| ())
+    }
+
+    /// [`Engine::save`], additionally reporting the WAL frontier the
+    /// snapshot corresponds to: the cursor of the fresh segment opened
+    /// inside the save fence (`None` without a WAL). Every record at or
+    /// past the cursor post-dates the snapshot — this is exactly the
+    /// `wal.fetch` position a replica should tail from after fetching
+    /// this snapshot, captured atomically with it.
+    pub fn save_with_cursor(&self, path: &Path) -> Result<Option<WalCursor>, StoreError> {
         let (reply_tx, reply_rx) = channel();
-        let next_id = {
+        let (next_id, cursor) = {
             let mut fence = self.insert_lock.lock().unwrap();
             for (no, s) in self.shards.iter().enumerate() {
                 s.tx
@@ -520,10 +569,14 @@ impl Engine {
                         StoreError::corrupt(format!("save: shard {no} worker is gone"))
                     })?;
             }
-            if let Some(w) = fence.wal.as_mut() {
-                w.rotate_begin()?;
-            }
-            self.next_id.load(Ordering::SeqCst)
+            let cursor = match fence.wal.as_mut() {
+                Some(w) => {
+                    w.rotate_begin()?;
+                    Some(w.cursor())
+                }
+                None => None,
+            };
+            (self.next_id.load(Ordering::SeqCst), cursor)
         };
         drop(reply_tx);
         let mut parts: Vec<Option<ShardParts>> = (0..self.shards.len()).map(|_| None).collect();
@@ -585,7 +638,7 @@ impl Engine {
             // no-ops on the next load.
             let _ = w.rotate_commit();
         }
-        Ok(())
+        Ok(cursor)
     }
 
     /// Restores an engine from a snapshot and spawns its workers. The
@@ -752,100 +805,137 @@ impl Engine {
             truncated_bytes: open.truncated_bytes,
             ..WalReport::default()
         };
-        let n_shards = self.shards.len() as u32;
         for rec in records {
-            match rec {
-                WalRecord::Insert { start_id, n, chars } => {
-                    let n = n as usize;
-                    ensure(n > 0 && chars.len() == n * self.l, || {
-                        format!(
-                            "wal replay: insert record shape n={n} chars={}, L={}",
-                            chars.len(),
-                            self.l
-                        )
-                    })?;
-                    ensure(chars.iter().all(|&c| (c as usize) < (1 << self.b)), || {
-                        format!("wal replay: char outside the 2^{} alphabet", self.b)
-                    })?;
-                    let end = start_id.checked_add(n as u32).ok_or_else(|| {
-                        StoreError::corrupt("wal replay: id overflow".into())
-                    })?;
-                    let cur = self.next_id.load(Ordering::SeqCst);
-                    if end <= cur {
-                        // Entirely below the high-water mark: a segment
-                        // a crashed rotation left behind.
-                        report.skipped_records += 1;
-                        continue;
-                    }
-                    ensure(start_id <= cur, || {
-                        format!(
-                            "wal replay: record starts at id {start_id}, engine expects {cur} \
-                             (log gap)"
-                        )
-                    })?;
-                    let (reply_tx, reply_rx) = channel();
-                    let mut per_shard: Vec<Vec<(u32, Vec<u8>)>> =
-                        (0..n_shards).map(|_| Vec::new()).collect();
-                    let mut replayed = 0usize;
-                    for (j, row) in chars.chunks_exact(self.l).enumerate() {
-                        let id = start_id + j as u32;
-                        if id < cur {
-                            continue; // already in the snapshot
-                        }
-                        per_shard[(id % n_shards) as usize].push((id, row.to_vec()));
-                        replayed += 1;
-                    }
-                    let mut outstanding = 0usize;
-                    for (s, items) in per_shard.into_iter().enumerate() {
-                        if items.is_empty() {
-                            continue;
-                        }
-                        outstanding += 1;
-                        self.shards[s]
-                            .tx
-                            .send(ShardMsg::Insert {
-                                items,
-                                // deterministic replay: no background
-                                // merges kicked off mid-recovery
-                                merge_threshold: usize::MAX,
-                                reply: reply_tx.clone(),
-                            })
-                            .map_err(|_| {
-                                StoreError::corrupt(format!("wal replay: shard {s} is gone"))
-                            })?;
-                    }
-                    drop(reply_tx);
-                    for _ in 0..outstanding {
-                        reply_rx.recv().map_err(|_| {
-                            StoreError::corrupt("wal replay: shard died mid-replay".into())
-                        })?;
-                    }
-                    self.next_id.store(end, Ordering::SeqCst);
-                    report.replayed_inserts += replayed;
-                }
-                WalRecord::Delete { id } => {
-                    if (id as usize) >= self.n() {
-                        report.skipped_records += 1;
-                        continue;
-                    }
-                    let (reply_tx, reply_rx) = channel();
-                    for s in &self.shards {
-                        s.tx
-                            .send(ShardMsg::Delete { id, reply: reply_tx.clone() })
-                            .map_err(|_| {
-                                StoreError::corrupt("wal replay: shard is gone".into())
-                            })?;
-                    }
-                    drop(reply_tx);
-                    let _ = reply_rx.iter().any(|d| d);
-                    report.replayed_deletes += 1;
-                }
-                WalRecord::MergeMarker => {}
-            }
+            self.apply_wal_record(rec, usize::MAX, &mut report)?;
         }
         self.recovery.set_wal(wal.base());
         cell.wal = Some(wal);
         Ok(report)
+    }
+
+    /// Applies a stream of WAL records shipped from another engine (the
+    /// replication apply path). Identical idempotent semantics to
+    /// [`Engine::attach_wal`] replay — inserts entirely below the id
+    /// high-water mark are skipped, partial overlaps apply only the new
+    /// suffix, deletes re-tombstone harmlessly — so a follower may
+    /// re-fetch an overlapping WAL span after a reconnect and converge
+    /// anyway. Runs under the insert lock for the whole batch; unlike
+    /// recovery replay, background merges trigger normally so a
+    /// long-running follower compacts like its primary.
+    pub fn apply_replicated(&self, records: Vec<WalRecord>) -> Result<WalReport, StoreError> {
+        let _cell = self.insert_lock.lock().unwrap();
+        let threshold = self.merge_threshold.load(Ordering::Relaxed);
+        let mut report = WalReport::default();
+        for rec in records {
+            self.apply_wal_record(rec, threshold, &mut report)?;
+        }
+        Ok(report)
+    }
+
+    /// The segment base of the attached WAL, if any (what `wal.fetch`
+    /// serves from).
+    pub fn wal_base(&self) -> Option<PathBuf> {
+        self.recovery.wal_path()
+    }
+
+    /// Applies one WAL record to the shards. Caller holds the insert
+    /// lock (replay and replication both order their whole batch under
+    /// it). `merge_threshold` is `usize::MAX` during recovery replay —
+    /// deterministic, no background merges — and the live threshold on
+    /// the replication path.
+    fn apply_wal_record(
+        &self,
+        rec: WalRecord,
+        merge_threshold: usize,
+        report: &mut WalReport,
+    ) -> Result<(), StoreError> {
+        let n_shards = self.shards.len() as u32;
+        match rec {
+            WalRecord::Insert { start_id, n, chars } => {
+                let n = n as usize;
+                ensure(n > 0 && chars.len() == n * self.l, || {
+                    format!(
+                        "wal replay: insert record shape n={n} chars={}, L={}",
+                        chars.len(),
+                        self.l
+                    )
+                })?;
+                ensure(chars.iter().all(|&c| (c as usize) < (1 << self.b)), || {
+                    format!("wal replay: char outside the 2^{} alphabet", self.b)
+                })?;
+                let end = start_id
+                    .checked_add(n as u32)
+                    .ok_or_else(|| StoreError::corrupt("wal replay: id overflow".into()))?;
+                let cur = self.next_id.load(Ordering::SeqCst);
+                if end <= cur {
+                    // Entirely below the high-water mark: a segment a
+                    // crashed rotation left behind, or a replication
+                    // re-fetch of an already-applied span.
+                    report.skipped_records += 1;
+                    return Ok(());
+                }
+                ensure(start_id <= cur, || {
+                    format!(
+                        "wal replay: record starts at id {start_id}, engine expects {cur} \
+                         (log gap)"
+                    )
+                })?;
+                let (reply_tx, reply_rx) = channel();
+                let mut per_shard: Vec<Vec<(u32, Vec<u8>)>> =
+                    (0..n_shards).map(|_| Vec::new()).collect();
+                let mut replayed = 0usize;
+                for (j, row) in chars.chunks_exact(self.l).enumerate() {
+                    let id = start_id + j as u32;
+                    if id < cur {
+                        continue; // already in the snapshot
+                    }
+                    per_shard[(id % n_shards) as usize].push((id, row.to_vec()));
+                    replayed += 1;
+                }
+                let mut outstanding = 0usize;
+                for (s, items) in per_shard.into_iter().enumerate() {
+                    if items.is_empty() {
+                        continue;
+                    }
+                    outstanding += 1;
+                    self.shards[s]
+                        .tx
+                        .send(ShardMsg::Insert {
+                            items,
+                            merge_threshold,
+                            reply: reply_tx.clone(),
+                        })
+                        .map_err(|_| {
+                            StoreError::corrupt(format!("wal replay: shard {s} is gone"))
+                        })?;
+                }
+                drop(reply_tx);
+                for _ in 0..outstanding {
+                    reply_rx.recv().map_err(|_| {
+                        StoreError::corrupt("wal replay: shard died mid-replay".into())
+                    })?;
+                }
+                self.next_id.store(end, Ordering::SeqCst);
+                report.replayed_inserts += replayed;
+            }
+            WalRecord::Delete { id } => {
+                if (id as usize) >= self.n() {
+                    report.skipped_records += 1;
+                    return Ok(());
+                }
+                let (reply_tx, reply_rx) = channel();
+                for s in &self.shards {
+                    s.tx
+                        .send(ShardMsg::Delete { id, reply: reply_tx.clone() })
+                        .map_err(|_| StoreError::corrupt("wal replay: shard is gone".into()))?;
+                }
+                drop(reply_tx);
+                let _ = reply_rx.iter().any(|d| d);
+                report.replayed_deletes += 1;
+            }
+            WalRecord::MergeMarker => {}
+        }
+        Ok(())
     }
 
     /// This engine's process-unique failpoint context prefix; worker
@@ -1096,56 +1186,66 @@ impl Engine {
         }
     }
 
-    /// Fans a query out to every shard and merges global ids.
-    pub fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {
-        assert_eq!(q.len(), self.l, "query length mismatch");
+    /// The unified single-query entry point: fans `spec` out to every
+    /// shard and merges per [`QuerySpec::mode`]. The server, the
+    /// batcher and the CLI all route through here (batches go through
+    /// [`Engine::run_batch`] / [`Engine::run_batch_blocked`], which
+    /// share the same shard protocol). Returns
+    /// [`QueryResult::Failed`] — never a silently partial merge — if a
+    /// shard worker died or was parked.
+    pub fn query(&self, spec: &QuerySpec) -> QueryOutput {
+        assert_eq!(spec.q.len(), self.l, "query length mismatch");
         let timer = Timer::start();
-        let q: Arc<[u8]> = Arc::from(q);
         let (reply_tx, reply_rx) = channel();
-        self.fan_out(&q, tau, QueryMode::Ids, &reply_tx);
+        self.fan_out(&spec.q, spec.tau, spec.mode, &reply_tx);
         drop(reply_tx);
-        let mut out = Vec::new();
-        for (_no, reply) in reply_rx {
-            if let ShardReply::Ids(hits) = reply {
-                out.extend(hits);
-            }
+        let result = Self::collect_one(&reply_rx, spec.mode, self.shards.len());
+        let size = match &result {
+            QueryResult::Ids(v) => v.len(),
+            QueryResult::Count(c) => *c,
+            QueryResult::TopK(v) => v.len(),
+            QueryResult::Failed => 0,
+        };
+        self.metrics.record_query(timer.elapsed_us() as u64, size);
+        result
+    }
+
+    /// Fans a query out to every shard and merges global ids.
+    ///
+    /// Deprecated shim over [`Engine::query`] with
+    /// [`QuerySpec::ids`] — kept so existing callers and tests read
+    /// naturally; a failed query collapses to no hits here, so callers
+    /// that must distinguish failure should use [`Engine::query`].
+    pub fn search(&self, q: &[u8], tau: usize) -> Vec<u32> {
+        match self.query(&QuerySpec::ids(q, tau)) {
+            QueryResult::Ids(hits) => hits,
+            _ => Vec::new(),
         }
-        self.metrics.record_query(timer.elapsed_us() as u64, out.len());
-        out
     }
 
     /// Counts matches across all shards.
+    ///
+    /// Deprecated shim over [`Engine::query`] with
+    /// [`QuerySpec::count`]; failure collapses to 0.
     pub fn count(&self, q: &[u8], tau: usize) -> usize {
-        assert_eq!(q.len(), self.l, "query length mismatch");
-        let timer = Timer::start();
-        let q: Arc<[u8]> = Arc::from(q);
-        let (reply_tx, reply_rx) = channel();
-        self.fan_out(&q, tau, QueryMode::Count, &reply_tx);
-        drop(reply_tx);
-        let mut total = 0usize;
-        for (_no, reply) in reply_rx {
-            if let ShardReply::Count(n) = reply {
-                total += n;
-            }
+        match self.query(&QuerySpec::count(q, tau)) {
+            QueryResult::Count(n) => n,
+            _ => 0,
         }
-        self.metrics.record_query(timer.elapsed_us() as u64, total);
-        total
     }
 
     /// Global top-k within radius `tau`: each shard answers its local
     /// top-k over global ids (per-shard id maps are monotone, so local
-    /// heap order equals global order), merged here by `(dist, id)` —
-    /// the merge is exact. Returns `(id, dist)` pairs.
+    /// heap order equals global order), merged by `(dist, id)` — the
+    /// merge is exact. Returns `(id, dist)` pairs.
+    ///
+    /// Deprecated shim over [`Engine::query`] with
+    /// [`QuerySpec::top_k`]; failure collapses to no hits.
     pub fn top_k(&self, q: &[u8], k: usize, tau: usize) -> Vec<(u32, usize)> {
-        assert_eq!(q.len(), self.l, "query length mismatch");
-        let timer = Timer::start();
-        let q: Arc<[u8]> = Arc::from(q);
-        let (reply_tx, reply_rx) = channel();
-        self.fan_out(&q, tau, QueryMode::TopK(k), &reply_tx);
-        drop(reply_tx);
-        let merged = Self::merge_topk(reply_rx.iter(), k);
-        self.metrics.record_query(timer.elapsed_us() as u64, merged.len());
-        merged
+        match self.query(&QuerySpec::top_k(q, k, tau)) {
+            QueryResult::TopK(hits) => hits,
+            _ => Vec::new(),
+        }
     }
 
     fn merge_topk(
@@ -1454,8 +1554,17 @@ struct WorkerCfg {
 /// unwinds with its reply sender, so its caller sees a closed channel,
 /// not a hang. If there is nothing to rebuild from (no snapshot, or a
 /// v1 one) the worker drains its queue as errors until shutdown.
+///
+/// Restarts are rate-limited: the first restart in a while is
+/// immediate (a one-off panic should not add latency), repeats inside
+/// [`REBUILD_WINDOW`] back off exponentially, and more than
+/// [`MAX_REBUILDS_PER_WINDOW`] of them **parks** the shard — it stops
+/// rebuilding and fails its queries fast (bumping `shards_parked` in
+/// the stats) instead of burning CPU on a rebuild→panic loop a
+/// deterministic poison pill would otherwise cause.
 fn worker_loop(state: SegmentedShard, cfg: WorkerCfg) {
     let mut state = Some(state);
+    let mut restarts: Vec<Instant> = Vec::new();
     loop {
         let mut st = match state.take() {
             Some(s) => s,
@@ -1470,13 +1579,31 @@ fn worker_loop(state: SegmentedShard, cfg: WorkerCfg) {
         match run {
             Ok(()) => return, // shutdown / engine dropped
             Err(_) => {
-                cfg.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
                 // `st` drops here half-mutated; the next iteration
-                // rebuilds from snapshot + WAL.
+                // rebuilds from snapshot + WAL (unless parked).
+                cfg.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                let now = Instant::now();
+                restarts.retain(|t| now.duration_since(*t) < REBUILD_WINDOW);
+                restarts.push(now);
+                if restarts.len() > MAX_REBUILDS_PER_WINDOW {
+                    cfg.metrics.shards_parked.fetch_add(1, Ordering::Relaxed);
+                    return drain_dead(&cfg.rx);
+                }
+                if restarts.len() > 1 {
+                    let exp = (restarts.len() - 2).min(5) as u32;
+                    std::thread::sleep(Duration::from_millis(50u64 << exp));
+                }
             }
         }
     }
 }
+
+/// Sliding window for the supervisor's restart budget.
+const REBUILD_WINDOW: Duration = Duration::from_secs(60);
+
+/// Panic-triggered rebuilds tolerated inside one [`REBUILD_WINDOW`]
+/// before the shard is parked.
+const MAX_REBUILDS_PER_WINDOW: usize = 5;
 
 /// The worker's message loop proper. Returns on [`ShardMsg::Shutdown`]
 /// or channel close; panics unwind to the supervisor in [`worker_loop`].
@@ -2490,5 +2617,128 @@ mod tests {
         assert!(e.insert_batch(&all[..2]).is_err(), "writes report failure");
         // dropping the engine shuts the dead shard's drain loop down
         drop(e);
+    }
+
+    #[test]
+    fn query_spec_routes_all_modes() {
+        let rows = rows(600, 120);
+        let set = SketchSet::from_rows(2, 16, &rows);
+        let engine = Engine::build(&set, 3, &ShardIndexKind::Bst(BstConfig::default()));
+        let q = &rows[3];
+        for tau in [0usize, 2, 4] {
+            let mut ids = match engine.query(&QuerySpec::ids(q, tau)) {
+                QueryResult::Ids(v) => v,
+                other => panic!("expected ids, got {other:?}"),
+            };
+            ids.sort_unstable();
+            assert_eq!(ids, oracle(&rows, q, tau), "tau={tau}");
+            assert_eq!(
+                engine.query(&QuerySpec::count(q, tau)),
+                QueryResult::Count(engine.count(q, tau)),
+                "tau={tau}"
+            );
+        }
+        assert_eq!(
+            engine.query(&QuerySpec::top_k(q, 7, 5)),
+            QueryResult::TopK(engine.top_k(q, 7, 5))
+        );
+    }
+
+    #[test]
+    fn apply_replicated_mirrors_and_is_idempotent() {
+        let all = rows(300, 121);
+        let set = SketchSet::from_rows(2, 16, &all[..200]);
+        let dir = wal_dir("replapply");
+        let base = dir.join("wal");
+        let kind = ShardIndexKind::Bst(BstConfig::default());
+        let primary = Engine::build(&set, 3, &kind);
+        primary.attach_wal(&base, WalSync::Always).unwrap();
+        primary.insert_batch(&all[200..]).unwrap();
+        assert!(primary.delete(7));
+        assert!(primary.delete(250));
+        let records = wal::read_records(&base).unwrap();
+
+        // A follower applies the shipped records and answers like the
+        // primary.
+        let follower = Engine::build(&set, 3, &kind);
+        let rep = follower.apply_replicated(records.clone()).unwrap();
+        assert_eq!(rep.replayed_inserts, 100);
+        assert_eq!(rep.replayed_deletes, 2);
+        assert_eq!(follower.n(), primary.n());
+        // Re-fetching an overlapping span (reconnect) converges: the
+        // insert skips below the high-water mark, deletes re-tombstone.
+        let rep = follower.apply_replicated(records).unwrap();
+        assert_eq!(rep.replayed_inserts, 0);
+        assert_eq!(rep.skipped_records, 1);
+        for qi in [0usize, 7, 250] {
+            for tau in [0usize, 2, 4] {
+                assert_eq!(
+                    sorted_search(&follower, &all[qi], tau),
+                    sorted_search(&primary, &all[qi], tau),
+                    "qi={qi} tau={tau}"
+                );
+            }
+            assert_eq!(follower.top_k(&all[qi], 9, 8), primary.top_k(&all[qi], 9, 8));
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn save_with_cursor_reports_the_rotated_frontier() {
+        let all = rows(120, 122);
+        let set = SketchSet::from_rows(2, 16, &all[..100]);
+        let dir = wal_dir("savecursor");
+        let (base, snap) = (dir.join("wal"), dir.join("engine.snap"));
+        let e = Engine::build(&set, 2, &ShardIndexKind::Bst(BstConfig::default()));
+        assert_eq!(e.save_with_cursor(&snap).unwrap(), None, "no wal attached");
+        assert_eq!(e.wal_base(), None);
+        e.attach_wal(&base, WalSync::Always).unwrap();
+        e.insert_batch(&all[100..]).unwrap();
+        let cur = e.save_with_cursor(&snap).unwrap().expect("wal attached");
+        assert_eq!(cur, WalCursor { seq: 1, off: 0 }, "fresh post-rotation segment");
+        assert_eq!(e.wal_base().as_deref(), Some(base.as_path()));
+        // Records appended after the save are exactly what a fetch from
+        // the cursor returns — the replica bootstrap contract.
+        assert!(e.delete(5));
+        let got = match wal::fetch_frames(&base, cur, 1 << 20).unwrap() {
+            wal::WalFetch::Chunk(c) => wal::scan_frames(&c.frames).0,
+            wal::WalFetch::Gap => panic!("cursor from save must stay fetchable"),
+        };
+        assert_eq!(got, vec![WalRecord::Delete { id: 5 }]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn repeated_panics_park_the_shard() {
+        use crate::util::failpoint::{self, Action};
+        let all = rows(200, 123);
+        let set = SketchSet::from_rows(2, 16, &all[..150]);
+        let dir = wal_dir("park");
+        let (base, snap) = (dir.join("wal"), dir.join("engine.snap"));
+        let kind = ShardIndexKind::Bst(BstConfig::default());
+        Engine::build(&set, 2, &kind).save(&snap).unwrap();
+        let e = Engine::load(&snap).unwrap();
+        e.attach_wal(&base, WalSync::Always).unwrap();
+        // A deterministic poison pill: every message to shard 1 panics.
+        // The supervisor rebuilds with backoff, then parks the shard
+        // once it exhausts its restart budget.
+        let filter = format!("{}/shard-1", e.instance_tag());
+        failpoint::arm_scoped("shard.worker", &filter, 0, 1_000_000, Action::Panic);
+        let q: Arc<[u8]> = Arc::from(all[0].as_slice());
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while e.metrics().shards_parked.load(Ordering::Relaxed) == 0 {
+            assert!(Instant::now() < deadline, "shard never parked");
+            let _ = e.run_batch(&[(Arc::clone(&q), 0, QueryMode::Ids)]);
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        failpoint::clear("shard.worker");
+        assert!(
+            e.metrics().worker_restarts.load(Ordering::Relaxed)
+                > MAX_REBUILDS_PER_WINDOW as u64
+        );
+        // Parked: queries fail fast instead of looping rebuilds.
+        let out = e.run_batch(&[(q, 0, QueryMode::Ids)]);
+        assert_eq!(out, vec![QueryResult::Failed]);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -24,6 +24,11 @@ pub struct Metrics {
     /// (rebuilt from snapshot + WAL replay). A nonzero value means the
     /// server kept serving through at least one isolated failure.
     pub worker_restarts: AtomicU64,
+    /// Shards parked by the supervisor after exhausting their restart
+    /// budget (too many panics inside one window). A parked shard fails
+    /// its queries instead of looping rebuilds; nonzero means the
+    /// engine is serving degraded and needs operator attention.
+    pub shards_parked: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
 }
@@ -90,6 +95,10 @@ impl Metrics {
             (
                 "worker_restarts",
                 Json::num(self.worker_restarts.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "shards_parked",
+                Json::num(self.shards_parked.load(Ordering::Relaxed) as f64),
             ),
             ("mean_latency_us", Json::num(self.mean_latency_us())),
             ("p50_latency_us", Json::num(self.latency_percentile_us(50.0) as f64)),

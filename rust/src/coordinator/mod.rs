@@ -17,8 +17,13 @@
 //!   top-k) queue up to `max_batch` or `max_delay`, then execute as one
 //!   mixed-mode fan-out round (amortizes shard wake-ups under load;
 //!   single requests still cut through on timeout).
-//! * [`server`] — TCP front-end, line-delimited JSON protocol, including
-//!   the `reload` op that swaps in an engine loaded from a snapshot.
+//! * [`server`] — TCP front-end, line-delimited JSON protocol (versioned
+//!   envelope + structured errors; see [`protocol`]), including the
+//!   `reload` op that swaps in an engine loaded from a snapshot and the
+//!   replication ops (`snapshot.fetch` / `wal.fetch` / `repl.status`).
+//! * [`replica`] — WAL-shipping read replicas: a follower bootstraps
+//!   from the primary's snapshot over the wire, then tails its WAL and
+//!   applies records through the engine's idempotent replay path.
 //! * [`engine::Engine::save`] / [`engine::Engine::load`] — snapshot
 //!   persistence: build once, serve many, restart in seconds (see
 //!   [`crate::store`]).
@@ -34,6 +39,7 @@ pub mod config;
 pub mod engine;
 pub mod metrics;
 pub mod protocol;
+pub mod replica;
 pub mod segment;
 pub mod server;
 

@@ -1,36 +1,81 @@
-//! Wire protocol: line-delimited JSON over TCP.
+//! Wire protocol: line-delimited JSON over TCP, versioned.
 //!
-//! Requests:
-//! ```text
-//! {"op":"search","q":[0,1,2,3],"tau":2}
-//! {"op":"count","q":[0,1,2,3],"tau":2}
-//! {"op":"topk","q":[0,1,2,3],"k":5,"tau":4}
-//! {"op":"insert","rows":[[0,1,2,3],[3,2,1,0]]}
-//! {"op":"delete","id":17}
-//! {"op":"merge"}
-//! {"op":"stats"}
-//! {"op":"ping"}
-//! {"op":"save","path":"/path/to/engine.snap"}
-//! {"op":"reload","path":"/path/to/engine.snap"}
-//! {"op":"shutdown"}
-//! ```
-//! Responses (one line each):
-//! ```text
-//! {"ids":[5,17],"latency_us":123}
-//! {"count":2,"latency_us":87}
-//! {"ids":[5,17],"dists":[0,2],"latency_us":140}
-//! {"ok":true,"first_id":1000,"inserted":2,"latency_us":95}
-//! {"ok":true,"deleted":true,"latency_us":12}
-//! {"ok":true,"merged":4,"skipped":0,"latency_us":5100}
-//! {"queries":...,"p50_latency_us":...}
-//! {"pong":true}
-//! {"ok":true}
-//! {"error":"..."}
-//! ```
+//! ## Versioning
+//!
+//! Every request may carry an optional `"v"` field naming the protocol
+//! version it speaks. The negotiation rule:
+//!
+//! * **`v` absent** — the request is treated as version 1 *and* the
+//!   response uses the legacy (pre-versioning) shapes: no `"v"` field
+//!   and errors as a bare string (`{"error":"..."}`). Every client
+//!   written against the original protocol keeps working unchanged.
+//! * **`v` present and equal to [`PROTOCOL_VERSION`]** — the response
+//!   carries `"v"` back and errors are structured objects (see below).
+//! * **`v` present and anything else** — the request is not executed;
+//!   the server answers a structured `unsupported_version` error
+//!   stamped with the version it does speak, so a newer client can
+//!   detect the mismatch and downgrade.
+//!
+//! ## Structured errors
+//!
+//! For `v`-bearing requests, errors are
+//! `{"error":{"code":"...","message":"..."},"v":1}` where `code` is one
+//! of the machine-readable [`ErrorCode`] values:
+//!
+//! | code                  | meaning                                            |
+//! |-----------------------|----------------------------------------------------|
+//! | `bad_request`         | malformed JSON, missing/invalid fields, bad rows   |
+//! | `unsupported_op`      | unknown `"op"`                                     |
+//! | `unsupported_version` | `"v"` names a version this server does not speak   |
+//! | `read_only`           | write op sent to a follower (`--follow`)           |
+//! | `shard_failed`        | a shard worker is dead; the answer would be partial|
+//! | `wal_gap`             | `wal.fetch` cursor was rotated away; re-bootstrap  |
+//! | `no_wal`              | `wal.fetch`/replication op but server has no `--wal`|
+//! | `io`                  | snapshot save/load or log I/O failed               |
+//!
+//! `v`-absent requests get the same message as a bare string.
+//!
+//! ## Wire-API reference
+//!
+//! | op               | request fields                        | success response fields                          | error codes                          | since |
+//! |------------------|---------------------------------------|--------------------------------------------------|--------------------------------------|-------|
+//! | `search`         | `q`, `tau`?                           | `ids`, `latency_us`                              | `bad_request`, `shard_failed`        | 1     |
+//! | `count`          | `q`, `tau`?                           | `count`, `latency_us`                            | `bad_request`, `shard_failed`        | 1     |
+//! | `topk`           | `q`, `k`, `tau`?                      | `ids`, `dists`, `latency_us`                     | `bad_request`, `shard_failed`        | 1     |
+//! | `insert`         | `rows`                                | `ok`, `first_id`, `inserted`, `latency_us`       | `bad_request`, `read_only`           | 1     |
+//! | `delete`         | `id`                                  | `ok`, `deleted`, `latency_us`                    | `bad_request`, `read_only`           | 1     |
+//! | `merge`          |                                       | `ok`, `merged`, `skipped`, `latency_us`          | `read_only`                          | 1     |
+//! | `save`           | `path`                                | `ok`, `n`, `latency_us`                          | `bad_request`, `read_only`, `io`     | 1     |
+//! | `reload`         | `path`                                | `ok`, `n`, `shards`, `latency_us`                | `bad_request`, `read_only`, `io`     | 1     |
+//! | `stats`          |                                       | counters, latency percentiles, `shards_parked`   |                                      | 1     |
+//! | `ping`           |                                       | `pong`                                           |                                      | 1     |
+//! | `shutdown`       |                                       | `ok`                                             |                                      | 1     |
+//! | `snapshot.fetch` |                                       | header `ok`,`len`,`n`,`wal_seq`,`wal_off` + bytes| `read_only`, `io`                    | 1     |
+//! | `wal.fetch`      | `from_seq`?, `from_off`?, `max_bytes`?| header `ok`,`len`,`records`,`next_seq`,`next_off`,`n` + bytes | `bad_request`, `wal_gap`, `no_wal`, `io` | 1 |
+//! | `repl.status`    |                                       | `role`, `applied_id`, `lag_records`, `last_contact_ms` | | 1 |
 //!
 //! `tau` is optional everywhere: `search`/`count` fall back to the
 //! server's default threshold, `topk` to the sketch length (an unbounded
 //! nearest-neighbor query). `topk` results are sorted by `(dist, id)`.
+//!
+//! ## Streaming ops and replication
+//!
+//! `snapshot.fetch` and `wal.fetch` are the only responses that are not
+//! a single JSON line: the server writes one JSON header line whose
+//! `len` field gives an exact byte count, then `len` raw bytes on the
+//! same stream. `snapshot.fetch` streams a complete snapshot container
+//! (written with the same atomic fence as `save`, so it rotates the
+//! primary's WAL and reports the post-rotation cursor in
+//! `wal_seq`/`wal_off`). `wal.fetch` streams raw log frames — length
+//! prefix, FNV-1a checksum, payload, exactly as on disk — from the
+//! cursor `(from_seq, from_off)` forward, plus the cursor for the next
+//! fetch; the receiver re-verifies every checksum before applying. A
+//! follower (`bst serve --follow HOST:PORT`) bootstraps via
+//! `snapshot.fetch`, tails via `wal.fetch`, answers every read op
+//! identically to its primary, rejects writes with `read_only`, and on
+//! `wal_gap` (the primary rotated past its cursor) re-bootstraps from a
+//! fresh snapshot. `repl.status` reports the replication role and lag
+//! on both sides.
 //!
 //! Write ops: `insert` appends rows (consecutive global ids, returned
 //! via `first_id`), `delete` tombstones one id, `merge` force-folds
@@ -50,9 +95,11 @@
 //! snapshot durably renames into place), bounding replay time. Without
 //! `--wal`, acknowledged writes live in memory until an explicit
 //! `save`. The `stats` op reports `worker_restarts` (shards rebuilt
-//! from snapshot + log after an isolated panic) and, for `--mmap`
-//! engines, `mapped_bytes`/`resident_bytes` (page-cache residency of
-//! the serving snapshot; `null` when not mapped).
+//! from snapshot + log after an isolated panic), `shards_parked`
+//! (shards taken out of service after exhausting their restart budget),
+//! and, for `--mmap` engines, `mapped_bytes`/`resident_bytes`
+//! (page-cache residency of the serving snapshot; `null` when not
+//! mapped).
 //!
 //! **Block execution.** The server's batcher groups compatible queries
 //! — same `tau` and the same mode (`search` / `count` / `topk` with the
@@ -67,6 +114,77 @@
 //! work. The same rule feeds the `stats` op's latency percentiles.
 
 use crate::util::json::Json;
+
+/// The protocol version this build speaks (and the only one so far).
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Default `wal.fetch` budget when the client names none.
+pub const DEFAULT_FETCH_BYTES: usize = 1 << 20;
+
+/// Smallest accepted `wal.fetch` budget (smaller values are clamped up;
+/// a single frame always goes through regardless).
+pub const MIN_FETCH_BYTES: usize = 1024;
+
+/// Largest accepted `wal.fetch` budget (larger values are clamped down
+/// so one fetch cannot buffer unbounded bytes server-side).
+pub const MAX_FETCH_BYTES: usize = 64 << 20;
+
+/// Machine-readable error category carried by structured errors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    BadRequest,
+    UnsupportedOp,
+    UnsupportedVersion,
+    ReadOnly,
+    ShardFailed,
+    WalGap,
+    NoWal,
+    Io,
+}
+
+impl ErrorCode {
+    /// Every defined code, in documentation order.
+    pub const ALL: [ErrorCode; 8] = [
+        ErrorCode::BadRequest,
+        ErrorCode::UnsupportedOp,
+        ErrorCode::UnsupportedVersion,
+        ErrorCode::ReadOnly,
+        ErrorCode::ShardFailed,
+        ErrorCode::WalGap,
+        ErrorCode::NoWal,
+        ErrorCode::Io,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnsupportedOp => "unsupported_op",
+            ErrorCode::UnsupportedVersion => "unsupported_version",
+            ErrorCode::ReadOnly => "read_only",
+            ErrorCode::ShardFailed => "shard_failed",
+            ErrorCode::WalGap => "wal_gap",
+            ErrorCode::NoWal => "no_wal",
+            ErrorCode::Io => "io",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        ErrorCode::ALL.iter().copied().find(|c| c.as_str() == s)
+    }
+}
+
+/// A structured wire error: category plus human-readable message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl WireError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> WireError {
+        WireError { code, message: message.into() }
+    }
+}
 
 /// A parsed client request.
 #[derive(Debug, Clone, PartialEq)]
@@ -84,9 +202,26 @@ pub enum Request {
     Save { path: String },
     /// Swap the serving engine for one loaded from a snapshot file.
     Reload { path: String },
+    /// Stream a snapshot of the serving engine to the client
+    /// (replication bootstrap).
+    SnapshotFetch,
+    /// Stream raw WAL frames from a cursor forward (replication tail).
+    WalFetch { from_seq: u64, from_off: u64, max_bytes: usize },
+    /// Report replication role and lag.
+    ReplStatus,
     Stats,
     Ping,
     Shutdown,
+}
+
+/// The outcome of parsing one request line: the version the client
+/// declared (`None` = legacy, pre-versioning shapes) plus the request
+/// or a structured error. The server threads `v` into every response
+/// builder so the reply shape matches what the client speaks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedRequest {
+    pub v: Option<u64>,
+    pub result: Result<Request, WireError>,
 }
 
 /// Decodes one array of sketch characters.
@@ -110,34 +245,97 @@ fn parse_q(v: &Json) -> Result<Vec<u8>, String> {
     parse_chars(arr, "q")
 }
 
-/// Parses one request line.
-pub fn parse_request(line: &str) -> Result<Request, String> {
-    let v = Json::parse(line.trim()).map_err(|e| e.to_string())?;
+/// Reads an optional non-negative integer field.
+fn parse_u64_field(v: &Json, key: &str) -> Result<Option<u64>, WireError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(j) => j
+            .as_f64()
+            .filter(|f| f.fract() == 0.0 && *f >= 0.0 && *f <= u64::MAX as f64)
+            .map(|f| Some(f as u64))
+            .ok_or_else(|| {
+                WireError::new(
+                    ErrorCode::BadRequest,
+                    format!("'{key}' must be a non-negative integer"),
+                )
+            }),
+    }
+}
+
+/// Parses one request line, negotiating the protocol version (see the
+/// module docs for the rule).
+pub fn parse_request_line(line: &str) -> ParsedRequest {
+    let body = match Json::parse(line.trim()) {
+        Ok(v) => v,
+        Err(e) => {
+            return ParsedRequest {
+                v: None,
+                result: Err(WireError::new(ErrorCode::BadRequest, e.to_string())),
+            }
+        }
+    };
+    let v = match body.get("v") {
+        None => None,
+        Some(j) => match j.as_f64().filter(|f| f.fract() == 0.0 && *f >= 0.0) {
+            Some(f) => Some(f as u64),
+            None => {
+                // An unintelligible 'v' gets the legacy error shape:
+                // we cannot tell what the client speaks.
+                return ParsedRequest {
+                    v: None,
+                    result: Err(WireError::new(
+                        ErrorCode::BadRequest,
+                        "'v' must be a non-negative integer",
+                    )),
+                };
+            }
+        },
+    };
+    if let Some(n) = v {
+        if n != PROTOCOL_VERSION {
+            return ParsedRequest {
+                v: Some(n),
+                result: Err(WireError::new(
+                    ErrorCode::UnsupportedVersion,
+                    format!(
+                        "protocol version {n} is not supported \
+                         (this server speaks {PROTOCOL_VERSION})"
+                    ),
+                )),
+            };
+        }
+    }
+    ParsedRequest { v, result: parse_body(&body) }
+}
+
+/// Parses the request body, version questions already settled.
+fn parse_body(v: &Json) -> Result<Request, WireError> {
+    let bad = |m: String| WireError::new(ErrorCode::BadRequest, m);
     let op = v
         .get("op")
         .and_then(|o| o.as_str())
-        .ok_or_else(|| "missing 'op'".to_string())?;
+        .ok_or_else(|| bad("missing 'op'".to_string()))?;
     match op {
         "ping" => Ok(Request::Ping),
         "stats" => Ok(Request::Stats),
         "shutdown" => Ok(Request::Shutdown),
         "search" => {
-            let q = parse_q(&v)?;
+            let q = parse_q(v).map_err(bad)?;
             let tau = v.get("tau").and_then(|t| t.as_usize());
             Ok(Request::Search { q, tau })
         }
         "count" => {
-            let q = parse_q(&v)?;
+            let q = parse_q(v).map_err(bad)?;
             let tau = v.get("tau").and_then(|t| t.as_usize());
             Ok(Request::Count { q, tau })
         }
         "topk" => {
-            let q = parse_q(&v)?;
+            let q = parse_q(v).map_err(bad)?;
             let k = v
                 .get("k")
                 .and_then(|k| k.as_usize())
                 .filter(|&k| k >= 1)
-                .ok_or_else(|| "topk requires 'k' >= 1".to_string())?;
+                .ok_or_else(|| bad("topk requires 'k' >= 1".to_string()))?;
             let tau = v.get("tau").and_then(|t| t.as_usize());
             Ok(Request::TopK { q, k, tau })
         }
@@ -146,14 +344,15 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 .get("rows")
                 .and_then(|r| r.as_arr())
                 .filter(|r| !r.is_empty())
-                .ok_or_else(|| "insert requires a non-empty 'rows' array".to_string())?
+                .ok_or_else(|| bad("insert requires a non-empty 'rows' array".to_string()))?
                 .iter()
                 .map(|row| {
                     row.as_arr()
                         .ok_or_else(|| "insert rows must be arrays".to_string())
                         .and_then(|arr| parse_chars(arr, "rows"))
                 })
-                .collect::<Result<Vec<Vec<u8>>, String>>()?;
+                .collect::<Result<Vec<Vec<u8>>, String>>()
+                .map_err(bad)?;
             Ok(Request::Insert { rows })
         }
         "delete" => {
@@ -161,7 +360,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 .get("id")
                 .and_then(|i| i.as_f64())
                 .filter(|&f| f.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(&f))
-                .ok_or_else(|| "delete requires an 'id' in 0..2^32".to_string())?;
+                .ok_or_else(|| bad("delete requires an 'id' in 0..2^32".to_string()))?;
             Ok(Request::Delete { id: id as u32 })
         }
         "merge" => Ok(Request::Merge),
@@ -170,7 +369,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 .get("path")
                 .and_then(|p| p.as_str())
                 .filter(|p| !p.is_empty())
-                .ok_or_else(|| "save requires a non-empty 'path'".to_string())?;
+                .ok_or_else(|| bad("save requires a non-empty 'path'".to_string()))?;
             Ok(Request::Save { path: path.to_string() })
         }
         "reload" => {
@@ -178,108 +377,253 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 .get("path")
                 .and_then(|p| p.as_str())
                 .filter(|p| !p.is_empty())
-                .ok_or_else(|| "reload requires a non-empty 'path'".to_string())?;
+                .ok_or_else(|| bad("reload requires a non-empty 'path'".to_string()))?;
             Ok(Request::Reload { path: path.to_string() })
         }
-        other => Err(format!("unknown op '{other}'")),
+        "snapshot.fetch" => Ok(Request::SnapshotFetch),
+        "wal.fetch" => {
+            let from_seq = parse_u64_field(v, "from_seq")?.unwrap_or(0);
+            let from_off = parse_u64_field(v, "from_off")?.unwrap_or(0);
+            let max_bytes = parse_u64_field(v, "max_bytes")?
+                .map(|m| (m.min(MAX_FETCH_BYTES as u64) as usize).max(MIN_FETCH_BYTES))
+                .unwrap_or(DEFAULT_FETCH_BYTES);
+            Ok(Request::WalFetch { from_seq, from_off, max_bytes })
+        }
+        "repl.status" => Ok(Request::ReplStatus),
+        other => Err(WireError::new(
+            ErrorCode::UnsupportedOp,
+            format!("unknown op '{other}'"),
+        )),
+    }
+}
+
+/// Legacy entry point: parses a request, flattening structured errors
+/// to their message (the pre-versioning contract).
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    parse_request_line(line).result.map_err(|e| e.message)
+}
+
+/// Serializes a response body, stamping `"v"` for version-bearing
+/// requests (legacy requests get the body untouched).
+pub fn respond(body: Json, v: Option<u64>) -> String {
+    match (body, v) {
+        (Json::Obj(mut m), Some(_)) => {
+            m.insert("v".to_string(), Json::num(PROTOCOL_VERSION as f64));
+            Json::Obj(m).to_string()
+        }
+        (body, _) => body.to_string(),
     }
 }
 
 /// Encodes a search response.
-pub fn search_response(ids: &[u32], latency_us: u64) -> String {
-    Json::obj(vec![
-        ("ids", Json::ids(ids)),
-        ("latency_us", Json::num(latency_us as f64)),
-    ])
-    .to_string()
+pub fn search_response(ids: &[u32], latency_us: u64, v: Option<u64>) -> String {
+    respond(
+        Json::obj(vec![
+            ("ids", Json::ids(ids)),
+            ("latency_us", Json::num(latency_us as f64)),
+        ]),
+        v,
+    )
 }
 
 /// Encodes a count response.
-pub fn count_response(count: usize, latency_us: u64) -> String {
-    Json::obj(vec![
-        ("count", Json::num(count as f64)),
-        ("latency_us", Json::num(latency_us as f64)),
-    ])
-    .to_string()
+pub fn count_response(count: usize, latency_us: u64, v: Option<u64>) -> String {
+    respond(
+        Json::obj(vec![
+            ("count", Json::num(count as f64)),
+            ("latency_us", Json::num(latency_us as f64)),
+        ]),
+        v,
+    )
 }
 
 /// Encodes a top-k response: parallel `ids` / `dists` arrays sorted by
 /// `(dist, id)`.
-pub fn topk_response(hits: &[(u32, usize)], latency_us: u64) -> String {
-    Json::obj(vec![
-        (
-            "ids",
-            Json::Arr(hits.iter().map(|&(id, _)| Json::Num(id as f64)).collect()),
-        ),
-        (
-            "dists",
-            Json::Arr(hits.iter().map(|&(_, d)| Json::Num(d as f64)).collect()),
-        ),
-        ("latency_us", Json::num(latency_us as f64)),
-    ])
-    .to_string()
+pub fn topk_response(hits: &[(u32, usize)], latency_us: u64, v: Option<u64>) -> String {
+    respond(
+        Json::obj(vec![
+            (
+                "ids",
+                Json::Arr(hits.iter().map(|&(id, _)| Json::Num(id as f64)).collect()),
+            ),
+            (
+                "dists",
+                Json::Arr(hits.iter().map(|&(_, d)| Json::Num(d as f64)).collect()),
+            ),
+            ("latency_us", Json::num(latency_us as f64)),
+        ]),
+        v,
+    )
 }
 
 /// Encodes an insert response: the first assigned global id (the batch
 /// gets consecutive ids) and the row count.
-pub fn insert_response(first_id: u32, inserted: usize, latency_us: u64) -> String {
-    Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("first_id", Json::num(first_id as f64)),
-        ("inserted", Json::num(inserted as f64)),
-        ("latency_us", Json::num(latency_us as f64)),
-    ])
-    .to_string()
+pub fn insert_response(first_id: u32, inserted: usize, latency_us: u64, v: Option<u64>) -> String {
+    respond(
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("first_id", Json::num(first_id as f64)),
+            ("inserted", Json::num(inserted as f64)),
+            ("latency_us", Json::num(latency_us as f64)),
+        ]),
+        v,
+    )
 }
 
 /// Encodes a delete response (`deleted` is false for unknown or
 /// already-tombstoned ids).
-pub fn delete_response(deleted: bool, latency_us: u64) -> String {
-    Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("deleted", Json::Bool(deleted)),
-        ("latency_us", Json::num(latency_us as f64)),
-    ])
-    .to_string()
+pub fn delete_response(deleted: bool, latency_us: u64, v: Option<u64>) -> String {
+    respond(
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("deleted", Json::Bool(deleted)),
+            ("latency_us", Json::num(latency_us as f64)),
+        ]),
+        v,
+    )
 }
 
 /// Encodes a merge response: shards now all-immutable vs legacy shards
 /// that had nothing to fold into.
-pub fn merge_response(merged: usize, skipped: usize, latency_us: u64) -> String {
-    Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("merged", Json::num(merged as f64)),
-        ("skipped", Json::num(skipped as f64)),
-        ("latency_us", Json::num(latency_us as f64)),
-    ])
-    .to_string()
+pub fn merge_response(merged: usize, skipped: usize, latency_us: u64, v: Option<u64>) -> String {
+    respond(
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("merged", Json::num(merged as f64)),
+            ("skipped", Json::num(skipped as f64)),
+            ("latency_us", Json::num(latency_us as f64)),
+        ]),
+        v,
+    )
 }
 
 /// Encodes a save response: the rows captured by the snapshot.
-pub fn save_response(n: usize, latency_us: u64) -> String {
-    Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("n", Json::num(n as f64)),
-        ("latency_us", Json::num(latency_us as f64)),
-    ])
-    .to_string()
-}
-
-/// Encodes an error response.
-pub fn error_response(msg: &str) -> String {
-    Json::obj(vec![("error", Json::str(msg))]).to_string()
+pub fn save_response(n: usize, latency_us: u64, v: Option<u64>) -> String {
+    respond(
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("n", Json::num(n as f64)),
+            ("latency_us", Json::num(latency_us as f64)),
+        ]),
+        v,
+    )
 }
 
 /// Encodes a successful reload: the snapshot path now serving plus the
 /// new engine's shape.
-pub fn reload_response(n: usize, shards: usize, latency_us: u64) -> String {
-    Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("n", Json::num(n as f64)),
-        ("shards", Json::num(shards as f64)),
-        ("latency_us", Json::num(latency_us as f64)),
-    ])
-    .to_string()
+pub fn reload_response(n: usize, shards: usize, latency_us: u64, v: Option<u64>) -> String {
+    respond(
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("n", Json::num(n as f64)),
+            ("shards", Json::num(shards as f64)),
+            ("latency_us", Json::num(latency_us as f64)),
+        ]),
+        v,
+    )
+}
+
+/// Encodes a ping response.
+pub fn ping_response(v: Option<u64>) -> String {
+    respond(Json::obj(vec![("pong", Json::Bool(true))]), v)
+}
+
+/// Encodes a bare acknowledgement.
+pub fn ok_response(v: Option<u64>) -> String {
+    respond(Json::obj(vec![("ok", Json::Bool(true))]), v)
+}
+
+/// Encodes an error response: bare string for legacy (`v`-absent)
+/// requests, `{code, message}` for version-bearing ones.
+pub fn error_response(code: ErrorCode, msg: &str, v: Option<u64>) -> String {
+    match v {
+        None => Json::obj(vec![("error", Json::str(msg))]).to_string(),
+        Some(_) => respond(
+            Json::obj(vec![(
+                "error",
+                Json::obj(vec![
+                    ("code", Json::str(code.as_str())),
+                    ("message", Json::str(msg)),
+                ]),
+            )]),
+            v,
+        ),
+    }
+}
+
+/// Encodes the `snapshot.fetch` header line: `len` raw container bytes
+/// follow on the same stream. `wal` is the primary's post-rotation
+/// cursor (`null` fields when the primary serves without `--wal`).
+pub fn snapshot_fetch_header(
+    len: u64,
+    n: usize,
+    wal: Option<(u64, u64)>,
+    v: Option<u64>,
+) -> String {
+    let (seq, off) = match wal {
+        Some((s, o)) => (Json::num(s as f64), Json::num(o as f64)),
+        None => (Json::Null, Json::Null),
+    };
+    respond(
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("len", Json::num(len as f64)),
+            ("n", Json::num(n as f64)),
+            ("wal_seq", seq),
+            ("wal_off", off),
+        ]),
+        v,
+    )
+}
+
+/// Encodes the `wal.fetch` header line: `len` raw frame bytes follow,
+/// holding `records` whole records; the next fetch resumes at
+/// `(next_seq, next_off)`. `n` is the primary's current row count, the
+/// follower's lag denominator.
+pub fn wal_fetch_header(
+    len: u64,
+    records: usize,
+    next_seq: u64,
+    next_off: u64,
+    n: usize,
+    v: Option<u64>,
+) -> String {
+    respond(
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("len", Json::num(len as f64)),
+            ("records", Json::num(records as f64)),
+            ("next_seq", Json::num(next_seq as f64)),
+            ("next_off", Json::num(next_off as f64)),
+            ("n", Json::num(n as f64)),
+        ]),
+        v,
+    )
+}
+
+/// Encodes the `repl.status` response.
+pub fn repl_status_response(
+    role: &str,
+    applied_id: u64,
+    lag_records: u64,
+    last_contact_ms: Option<u64>,
+    v: Option<u64>,
+) -> String {
+    respond(
+        Json::obj(vec![
+            ("role", Json::str(role)),
+            ("applied_id", Json::num(applied_id as f64)),
+            ("lag_records", Json::num(lag_records as f64)),
+            (
+                "last_contact_ms",
+                match last_contact_ms {
+                    Some(ms) => Json::num(ms as f64),
+                    None => Json::Null,
+                },
+            ),
+        ]),
+        v,
+    )
 }
 
 #[cfg(test)]
@@ -340,15 +684,101 @@ mod tests {
     }
 
     #[test]
+    fn parses_replication_ops() {
+        assert_eq!(
+            parse_request(r#"{"op":"snapshot.fetch"}"#).unwrap(),
+            Request::SnapshotFetch
+        );
+        assert_eq!(
+            parse_request(r#"{"op":"repl.status"}"#).unwrap(),
+            Request::ReplStatus
+        );
+        // Cursor fields default to the origin, budget to the default.
+        assert_eq!(
+            parse_request(r#"{"op":"wal.fetch"}"#).unwrap(),
+            Request::WalFetch { from_seq: 0, from_off: 0, max_bytes: DEFAULT_FETCH_BYTES }
+        );
+        assert_eq!(
+            parse_request(r#"{"op":"wal.fetch","from_seq":3,"from_off":128,"max_bytes":4096}"#)
+                .unwrap(),
+            Request::WalFetch { from_seq: 3, from_off: 128, max_bytes: 4096 }
+        );
+        // Budgets clamp into [MIN_FETCH_BYTES, MAX_FETCH_BYTES].
+        assert_eq!(
+            parse_request(r#"{"op":"wal.fetch","max_bytes":1}"#).unwrap(),
+            Request::WalFetch { from_seq: 0, from_off: 0, max_bytes: MIN_FETCH_BYTES }
+        );
+        assert_eq!(
+            parse_request(r#"{"op":"wal.fetch","max_bytes":999999999999}"#).unwrap(),
+            Request::WalFetch { from_seq: 0, from_off: 0, max_bytes: MAX_FETCH_BYTES }
+        );
+        assert!(parse_request(r#"{"op":"wal.fetch","from_seq":-1}"#).is_err());
+        assert!(parse_request(r#"{"op":"wal.fetch","from_off":1.5}"#).is_err());
+    }
+
+    #[test]
+    fn version_negotiation() {
+        // Absent v: legacy — no version recorded, request parses.
+        let p = parse_request_line(r#"{"op":"ping"}"#);
+        assert_eq!(p.v, None);
+        assert_eq!(p.result, Ok(Request::Ping));
+        // v = current: recorded, request parses.
+        let p = parse_request_line(r#"{"op":"ping","v":1}"#);
+        assert_eq!(p.v, Some(1));
+        assert_eq!(p.result, Ok(Request::Ping));
+        // Future version: structured unsupported_version, body unparsed.
+        let p = parse_request_line(r#"{"op":"ping","v":2}"#);
+        assert_eq!(p.v, Some(2));
+        let err = p.result.unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnsupportedVersion);
+        assert!(err.message.contains("speaks 1"), "{}", err.message);
+        // Unintelligible v: legacy-shaped bad_request.
+        let p = parse_request_line(r#"{"op":"ping","v":1.5}"#);
+        assert_eq!(p.v, None);
+        assert_eq!(p.result.unwrap_err().code, ErrorCode::BadRequest);
+        let p = parse_request_line(r#"{"op":"ping","v":"one"}"#);
+        assert_eq!(p.v, None);
+        assert_eq!(p.result.unwrap_err().code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn error_codes_roundtrip_and_shape_follows_version() {
+        for code in ErrorCode::ALL {
+            assert_eq!(ErrorCode::parse(code.as_str()), Some(code), "{}", code.as_str());
+            // Versioned: structured object stamped with the server's v.
+            let s = error_response(code, "boom", Some(1));
+            let v = Json::parse(&s).unwrap();
+            let e = v.get("error").unwrap();
+            assert_eq!(e.get("code").and_then(|c| c.as_str()), Some(code.as_str()));
+            assert_eq!(e.get("message").and_then(|m| m.as_str()), Some("boom"));
+            assert_eq!(v.get("v").and_then(|n| n.as_usize()), Some(1));
+            // Legacy: bare string, no v.
+            let s = error_response(code, "boom", None);
+            let v = Json::parse(&s).unwrap();
+            assert_eq!(v.get("error").and_then(|e| e.as_str()), Some("boom"));
+            assert!(v.get("v").is_none());
+        }
+        assert_eq!(ErrorCode::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn unknown_op_is_unsupported_op() {
+        let p = parse_request_line(r#"{"op":"nope","v":1}"#);
+        assert_eq!(p.result.unwrap_err().code, ErrorCode::UnsupportedOp);
+        // Legacy path flattens to the same message as before.
+        assert_eq!(parse_request(r#"{"op":"nope"}"#).unwrap_err(), "unknown op 'nope'");
+    }
+
+    #[test]
     fn write_responses_are_valid_json() {
-        let i = insert_response(1000, 2, 95);
+        let i = insert_response(1000, 2, 95, None);
         let v = Json::parse(&i).unwrap();
         assert_eq!(v.get("first_id").and_then(|x| x.as_usize()), Some(1000));
         assert_eq!(v.get("inserted").and_then(|x| x.as_usize()), Some(2));
-        let d = delete_response(true, 12);
+        let d = delete_response(true, 12, None);
         let v = Json::parse(&d).unwrap();
         assert_eq!(v.get("deleted").and_then(|x| x.as_bool()), Some(true));
-        let m = merge_response(4, 1, 5100);
+        let m = merge_response(4, 1, 5100, None);
         let v = Json::parse(&m).unwrap();
         assert_eq!(v.get("merged").and_then(|x| x.as_usize()), Some(4));
         assert_eq!(v.get("skipped").and_then(|x| x.as_usize()), Some(1));
@@ -369,24 +799,58 @@ mod tests {
 
     #[test]
     fn responses_are_valid_json() {
-        let s = search_response(&[1, 2, 3], 42);
+        let s = search_response(&[1, 2, 3], 42, None);
         let v = Json::parse(&s).unwrap();
         assert_eq!(v.get("ids").unwrap().as_arr().unwrap().len(), 3);
-        let c = count_response(7, 10);
+        assert!(v.get("v").is_none(), "legacy responses carry no v");
+        let c = count_response(7, 10, None);
         assert_eq!(Json::parse(&c).unwrap().get("count").unwrap().as_usize(), Some(7));
-        let t = topk_response(&[(5, 0), (17, 2)], 140);
+        let t = topk_response(&[(5, 0), (17, 2)], 140, None);
         let tv = Json::parse(&t).unwrap();
         assert_eq!(tv.get("ids").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(tv.get("dists").unwrap().as_arr().unwrap().len(), 2);
-        let e = error_response("bad");
+        let e = error_response(ErrorCode::BadRequest, "bad", None);
         assert!(Json::parse(&e).unwrap().get("error").is_some());
-        let rl = reload_response(1000, 4, 12);
+        let rl = reload_response(1000, 4, 12, None);
         let v = Json::parse(&rl).unwrap();
         assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true));
         assert_eq!(v.get("shards").and_then(|s| s.as_usize()), Some(4));
-        let sv = save_response(1000, 88);
+        let sv = save_response(1000, 88, None);
         let v = Json::parse(&sv).unwrap();
         assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true));
         assert_eq!(v.get("n").and_then(|n| n.as_usize()), Some(1000));
+    }
+
+    #[test]
+    fn versioned_responses_carry_v() {
+        for s in [
+            search_response(&[1], 5, Some(1)),
+            count_response(1, 5, Some(1)),
+            topk_response(&[(1, 0)], 5, Some(1)),
+            insert_response(0, 1, 5, Some(1)),
+            delete_response(true, 5, Some(1)),
+            merge_response(1, 0, 5, Some(1)),
+            save_response(10, 5, Some(1)),
+            reload_response(10, 2, 5, Some(1)),
+            ping_response(Some(1)),
+            ok_response(Some(1)),
+            repl_status_response("follower", 42, 3, Some(17), Some(1)),
+            snapshot_fetch_header(100, 10, Some((2, 0)), Some(1)),
+            wal_fetch_header(64, 2, 3, 128, 12, Some(1)),
+        ] {
+            let v = Json::parse(&s).unwrap();
+            assert_eq!(v.get("v").and_then(|n| n.as_usize()), Some(1), "{s}");
+        }
+        // The fetch headers expose exact byte counts and cursors.
+        let h = Json::parse(&wal_fetch_header(64, 2, 3, 128, 12, None)).unwrap();
+        assert_eq!(h.get("len").and_then(|x| x.as_usize()), Some(64));
+        assert_eq!(h.get("records").and_then(|x| x.as_usize()), Some(2));
+        assert_eq!(h.get("next_seq").and_then(|x| x.as_usize()), Some(3));
+        assert_eq!(h.get("next_off").and_then(|x| x.as_usize()), Some(128));
+        let h = Json::parse(&snapshot_fetch_header(100, 10, None, None)).unwrap();
+        assert_eq!(h.get("wal_seq"), Some(&Json::Null));
+        let st = Json::parse(&repl_status_response("primary", 9, 0, None, None)).unwrap();
+        assert_eq!(st.get("role").and_then(|r| r.as_str()), Some("primary"));
+        assert_eq!(st.get("last_contact_ms"), Some(&Json::Null));
     }
 }

@@ -1,0 +1,497 @@
+//! WAL-shipping replication: the follower side.
+//!
+//! A follower (`bst serve --follow HOST:PORT`) holds no authoritative
+//! state of its own. It bootstraps by fetching the primary's snapshot
+//! over the wire (`snapshot.fetch` — the primary writes it under the
+//! same save fence as a local `save`, so the header's `wal_seq` /
+//! `wal_off` cursor points at the first record *not* covered by the
+//! snapshot), then tails the primary's log with `wal.fetch` and applies
+//! the shipped records through [`Engine::apply_replicated`] — the same
+//! idempotent replay path crash recovery uses, so overlapping re-fetches
+//! after a reconnect converge instead of corrupting.
+//!
+//! Failure handling is cursor-driven:
+//!
+//! * **Connection loss / primary restart** — the tail thread reconnects
+//!   and resumes from its cursor. Idempotent apply makes the overlap
+//!   harmless.
+//! * **`wal_gap`** — the primary rotated (a local `save` deletes old
+//!   segments) past the follower's cursor, or restarted with a fresh
+//!   log the cursor predates. The follower re-bootstraps: fetches a new
+//!   snapshot, swaps it into the serving [`EngineSlot`], and tails from
+//!   the new cursor. Queries keep serving throughout — the swap is the
+//!   same mechanism as the `reload` op.
+//! * **Checksum mismatch on shipped frames** — the connection is
+//!   dropped and the fetch retried; the cursor only advances past
+//!   verified, applied records.
+//!
+//! The follower serves every read op; writes are rejected by the server
+//! with a `read_only` error (see [`super::server`]). Replication state
+//! (primary row count, last contact) lives in [`ReplState`], surfaced
+//! by the `repl.status` op.
+
+use super::engine::{Engine, EngineSlot};
+use crate::store::wal::{self, WalCursor};
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Hard cap on one fetched payload: the largest `wal.fetch` budget the
+/// protocol clamps to, plus one maximal frame (a single frame always
+/// ships whole regardless of budget). A header declaring more is
+/// protocol corruption, not a large database.
+const MAX_PAYLOAD_BYTES: usize = (64 << 20) + (1 << 30) + 64;
+
+/// How long a read from the primary may stall before the tail thread
+/// treats the connection as dead and reconnects (also bounds how long
+/// `Replicator::drop` can block on a wedged primary).
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Shared replication telemetry: written by the tail thread, read by
+/// the server's `repl.status` op.
+pub struct ReplState {
+    start: Instant,
+    /// Milliseconds since `start` of the last successful exchange with
+    /// the primary; `u64::MAX` = never.
+    last_contact_at: AtomicU64,
+    /// The primary's row count from the most recent fetch header — the
+    /// follower's lag denominator.
+    primary_n: AtomicU64,
+}
+
+impl ReplState {
+    pub fn new() -> ReplState {
+        ReplState {
+            start: Instant::now(),
+            last_contact_at: AtomicU64::new(u64::MAX),
+            primary_n: AtomicU64::new(0),
+        }
+    }
+
+    /// Records a successful exchange with the primary.
+    fn contact(&self, primary_n: u64) {
+        self.primary_n.store(primary_n, Ordering::Relaxed);
+        let ms = self.start.elapsed().as_millis() as u64;
+        self.last_contact_at.store(ms, Ordering::Relaxed);
+    }
+
+    /// Milliseconds since the last successful exchange with the primary
+    /// (`None` before the first one).
+    pub fn last_contact_ms(&self) -> Option<u64> {
+        let at = self.last_contact_at.load(Ordering::Relaxed);
+        if at == u64::MAX {
+            return None;
+        }
+        Some((self.start.elapsed().as_millis() as u64).saturating_sub(at))
+    }
+
+    /// The primary's row count as of the last contact.
+    pub fn primary_n(&self) -> u64 {
+        self.primary_n.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for ReplState {
+    fn default() -> Self {
+        ReplState::new()
+    }
+}
+
+/// Where a follower of this process keeps its fetched snapshot.
+pub fn default_local_snapshot() -> PathBuf {
+    std::env::temp_dir().join(format!("bst-follower-{}.snap", std::process::id()))
+}
+
+/// One line-delimited-JSON client connection to the primary.
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Conn {
+    fn connect(addr: &str) -> std::io::Result<Conn> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+        let writer = stream.try_clone()?;
+        Ok(Conn { reader: BufReader::new(stream), writer })
+    }
+
+    /// Sends one request line and reads one reply line.
+    fn call(&mut self, line: &str) -> std::io::Result<Json> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut reply = String::new();
+        if self.reader.read_line(&mut reply)? == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "primary closed the connection",
+            ));
+        }
+        Json::parse(reply.trim())
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+    }
+
+    /// Reads exactly `len` raw payload bytes following a header line.
+    fn read_payload(&mut self, len: usize) -> std::io::Result<Vec<u8>> {
+        if len > MAX_PAYLOAD_BYTES {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("payload length {len} exceeds the protocol maximum"),
+            ));
+        }
+        let mut buf = vec![0u8; len];
+        self.reader.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+}
+
+/// The error payload of a reply, whichever shape it came in: the bare
+/// legacy string or the structured object's `message`.
+fn error_text(err: &Json) -> String {
+    match err.as_str() {
+        Some(s) => s.to_string(),
+        None => err
+            .get("message")
+            .and_then(|m| m.as_str())
+            .unwrap_or("unknown error")
+            .to_string(),
+    }
+}
+
+/// The machine-readable code of a structured error reply, if any.
+fn error_code(err: &Json) -> Option<&str> {
+    err.get("code").and_then(|c| c.as_str())
+}
+
+/// What a completed bootstrap hands the caller.
+pub struct Bootstrap {
+    /// Engine loaded from the fetched snapshot.
+    pub engine: Engine,
+    /// The primary's post-rotation WAL cursor: where tailing starts.
+    /// `None` when the primary serves without `--wal` — nothing to
+    /// tail, the follower would serve a frozen snapshot.
+    pub cursor: Option<WalCursor>,
+    /// The primary's row count at the time of the snapshot.
+    pub primary_n: u64,
+}
+
+/// Fetches the primary's snapshot into `local` (atomically: tmp file +
+/// fsync + rename, same contract as a local `save`) and loads it. This
+/// is the follower's synchronous startup step; the in-server
+/// [`Replicator`] repeats it on a `wal_gap`.
+pub fn bootstrap(primary: &str, local: &Path, mapped: bool) -> Result<Bootstrap, String> {
+    let mut conn =
+        Conn::connect(primary).map_err(|e| format!("connect to primary {primary}: {e}"))?;
+    let (engine, cursor, primary_n) = fetch_snapshot(&mut conn, local, mapped)?;
+    Ok(Bootstrap { engine, cursor, primary_n })
+}
+
+/// The wire half of [`bootstrap`], reusable on an open connection.
+fn fetch_snapshot(
+    conn: &mut Conn,
+    local: &Path,
+    mapped: bool,
+) -> Result<(Engine, Option<WalCursor>, u64), String> {
+    let header = conn
+        .call(r#"{"op":"snapshot.fetch","v":1}"#)
+        .map_err(|e| format!("snapshot.fetch: {e}"))?;
+    if let Some(err) = header.get("error") {
+        return Err(format!("primary refused snapshot.fetch: {}", error_text(err)));
+    }
+    let len = header
+        .get("len")
+        .and_then(|x| x.as_usize())
+        .ok_or_else(|| "snapshot.fetch header lacks 'len'".to_string())?;
+    let primary_n = header
+        .get("n")
+        .and_then(|x| x.as_usize())
+        .ok_or_else(|| "snapshot.fetch header lacks 'n'".to_string())? as u64;
+    let cursor = match (
+        header.get("wal_seq").and_then(|x| x.as_usize()),
+        header.get("wal_off").and_then(|x| x.as_usize()),
+    ) {
+        (Some(s), Some(o)) => Some(WalCursor { seq: s as u64, off: o as u64 }),
+        _ => None,
+    };
+    stream_to_file(conn, len as u64, local)
+        .map_err(|e| format!("snapshot transfer failed: {e}"))?;
+    let engine =
+        Engine::load_with(local, mapped).map_err(|e| format!("fetched snapshot rejected: {e}"))?;
+    Ok((engine, cursor, primary_n))
+}
+
+/// Streams `len` payload bytes into `path` crash-atomically: a sibling
+/// tmp file is written, fsync'd, and renamed into place, so `path` is
+/// only ever absent or a complete container.
+fn stream_to_file(conn: &mut Conn, len: u64, path: &Path) -> std::io::Result<()> {
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".fetch-tmp");
+    let tmp = PathBuf::from(tmp);
+    let mut f = std::fs::File::create(&tmp)?;
+    let mut chunk = [0u8; 65536];
+    let mut remaining = len;
+    while remaining > 0 {
+        let want = (chunk.len() as u64).min(remaining) as usize;
+        conn.reader.read_exact(&mut chunk[..want])?;
+        f.write_all(&chunk[..want])?;
+        remaining -= want as u64;
+    }
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
+    if let Err(e) = crate::store::sync_parent_dir(path) {
+        if let crate::store::StoreError::Io(io) = e {
+            return Err(io);
+        }
+    }
+    Ok(())
+}
+
+/// Everything the tail thread needs.
+pub struct TailCfg {
+    /// The primary's `HOST:PORT`.
+    pub primary: String,
+    /// Serving slot the follower answers queries from; re-bootstraps
+    /// swap a freshly fetched engine in here.
+    pub slot: Arc<EngineSlot>,
+    /// Shared telemetry for `repl.status`.
+    pub state: Arc<ReplState>,
+    /// Where tailing starts (the bootstrap's cursor).
+    pub cursor: WalCursor,
+    /// Sleep between polls that found nothing new.
+    pub poll: Duration,
+    /// Where fetched snapshots land (see [`default_local_snapshot`]).
+    pub local_snapshot: PathBuf,
+    /// Serving load mode for fetched snapshots (`--mmap`).
+    pub mmap: bool,
+}
+
+/// The background replication tail; dropping it stops the thread.
+pub struct Replicator {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Replicator {
+    pub fn start(cfg: TailCfg) -> Replicator {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("bst-replica".into())
+            .spawn(move || tail_loop(cfg, &stop2))
+            .expect("spawn replication tail");
+        Replicator { stop, handle: Some(handle) }
+    }
+}
+
+impl Drop for Replicator {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One fetch round's verdict.
+enum Step {
+    /// Records applied (or the cursor advanced): fetch again at once.
+    Progress,
+    /// At the primary's frontier: sleep one poll interval.
+    CaughtUp,
+    /// Transient trouble (connection, timeout, malformed reply): sleep,
+    /// reconnect if needed, retry from the same cursor.
+    Retry,
+    /// The cursor is unservable (rotated away / predates the primary's
+    /// log): re-bootstrap from a fresh snapshot.
+    Gap,
+}
+
+fn tail_loop(cfg: TailCfg, stop: &AtomicBool) {
+    let mut cursor = cfg.cursor;
+    let mut conn: Option<Conn> = None;
+    while !stop.load(Ordering::SeqCst) {
+        match fetch_and_apply(&cfg, &mut conn, &mut cursor) {
+            Step::Progress => {}
+            Step::CaughtUp | Step::Retry => sleep_until(cfg.poll, stop),
+            Step::Gap => match rebootstrap(&cfg, &mut conn) {
+                Some(c) => cursor = c,
+                // No cursor: the primary (currently) serves without a
+                // WAL, so there is nothing to tail — back off hard
+                // before fetching another full snapshot.
+                None => sleep_until(cfg.poll.saturating_mul(10), stop),
+            },
+        }
+    }
+}
+
+/// Interruptible sleep: checks `stop` every 50 ms.
+fn sleep_until(total: Duration, stop: &AtomicBool) {
+    let deadline = Instant::now() + total;
+    while !stop.load(Ordering::SeqCst) {
+        let now = Instant::now();
+        if now >= deadline {
+            return;
+        }
+        std::thread::sleep((deadline - now).min(Duration::from_millis(50)));
+    }
+}
+
+fn ensure_conn<'a>(conn: &'a mut Option<Conn>, primary: &str) -> Option<&'a mut Conn> {
+    if conn.is_none() {
+        *conn = Conn::connect(primary).ok();
+    }
+    conn.as_mut()
+}
+
+/// Decodes a `wal.fetch` success header.
+fn parse_fetch_header(header: &Json) -> Option<(usize, usize, u64, u64, u64)> {
+    Some((
+        header.get("len")?.as_usize()?,
+        header.get("records")?.as_usize()?,
+        header.get("next_seq")?.as_usize()? as u64,
+        header.get("next_off")?.as_usize()? as u64,
+        header.get("n")?.as_usize()? as u64,
+    ))
+}
+
+/// One `wal.fetch` round: request from `cursor`, verify the shipped
+/// frames, apply, advance. The cursor only moves past records that were
+/// checksum-verified and durably applied to the serving engine.
+fn fetch_and_apply(cfg: &TailCfg, conn: &mut Option<Conn>, cursor: &mut WalCursor) -> Step {
+    let Some(c) = ensure_conn(conn, &cfg.primary) else {
+        return Step::Retry;
+    };
+    let req = format!(
+        r#"{{"op":"wal.fetch","from_seq":{},"from_off":{},"v":1}}"#,
+        cursor.seq, cursor.off
+    );
+    let header = match c.call(&req) {
+        Ok(h) => h,
+        Err(_) => {
+            *conn = None;
+            return Step::Retry;
+        }
+    };
+    if let Some(err) = header.get("error") {
+        // A clean error reply leaves the stream aligned (no payload
+        // follows), so the connection stays usable.
+        return match error_code(err) {
+            Some("wal_gap") => Step::Gap,
+            _ => Step::Retry,
+        };
+    }
+    let Some((len, records, next_seq, next_off, primary_n)) = parse_fetch_header(&header) else {
+        *conn = None;
+        return Step::Retry;
+    };
+    let bytes = match c.read_payload(len) {
+        Ok(b) => b,
+        Err(_) => {
+            *conn = None;
+            return Step::Retry;
+        }
+    };
+    cfg.state.contact(primary_n);
+    let next = WalCursor { seq: next_seq, off: next_off };
+    if records == 0 {
+        // Nothing shipped; the cursor may still hop to a fresh segment
+        // opened by a rotation on the primary.
+        let caught_up = next == *cursor;
+        *cursor = next;
+        return if caught_up { Step::CaughtUp } else { Step::Progress };
+    }
+    // Receiver-side verification: re-parse every frame, re-checking
+    // lengths and FNV-1a checksums, before anything is applied.
+    let (recs, valid) = wal::scan_frames(&bytes);
+    if valid != bytes.len() || recs.len() != records {
+        *conn = None;
+        return Step::Retry;
+    }
+    match cfg.slot.current().apply_replicated(recs) {
+        Ok(_) => {
+            *cursor = next;
+            Step::Progress
+        }
+        // A replay gap (a record starting beyond the local high-water
+        // mark) means this engine predates the cursor — the snapshot
+        // and log diverged, e.g. across a primary wipe. Re-bootstrap.
+        Err(_) => Step::Gap,
+    }
+}
+
+/// Fetches a fresh snapshot and swaps it into the serving slot.
+/// Returns the new tail cursor, or `None` when the bootstrap failed or
+/// the primary serves without a WAL.
+fn rebootstrap(cfg: &TailCfg, conn: &mut Option<Conn>) -> Option<WalCursor> {
+    let c = ensure_conn(conn, &cfg.primary)?;
+    match fetch_snapshot(c, &cfg.local_snapshot, cfg.mmap) {
+        Ok((engine, cursor, primary_n)) => {
+            engine.set_merge_threshold(cfg.slot.current().merge_threshold());
+            cfg.state.contact(primary_n);
+            cfg.slot.replace(Arc::new(engine));
+            cursor
+        }
+        Err(_) => {
+            // A failure mid-payload leaves the stream misaligned; drop
+            // the connection either way and retry from scratch.
+            *conn = None;
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repl_state_tracks_contact_and_lag_denominator() {
+        let st = ReplState::new();
+        assert_eq!(st.last_contact_ms(), None, "no contact yet");
+        assert_eq!(st.primary_n(), 0);
+        st.contact(1234);
+        assert_eq!(st.primary_n(), 1234);
+        let ms = st.last_contact_ms().expect("contact recorded");
+        assert!(ms < 5_000, "fresh contact reads near-zero, got {ms}");
+    }
+
+    #[test]
+    fn error_replies_decode_in_both_shapes() {
+        let legacy = Json::parse(r#"{"error":"boom"}"#).unwrap();
+        let err = legacy.get("error").unwrap();
+        assert_eq!(error_text(err), "boom");
+        assert_eq!(error_code(err), None);
+        let structured =
+            Json::parse(r#"{"error":{"code":"wal_gap","message":"rotated"},"v":1}"#).unwrap();
+        let err = structured.get("error").unwrap();
+        assert_eq!(error_text(err), "rotated");
+        assert_eq!(error_code(err), Some("wal_gap"));
+    }
+
+    #[test]
+    fn fetch_headers_parse_and_reject_malformed() {
+        let h = Json::parse(
+            r#"{"ok":true,"len":64,"records":2,"next_seq":3,"next_off":128,"n":12,"v":1}"#,
+        )
+        .unwrap();
+        assert_eq!(parse_fetch_header(&h), Some((64, 2, 3, 128, 12)));
+        let h = Json::parse(r#"{"ok":true,"len":64}"#).unwrap();
+        assert_eq!(parse_fetch_header(&h), None);
+        let h = Json::parse(r#"{"ok":true,"len":-1,"records":0,"next_seq":0,"next_off":0,"n":0}"#)
+            .unwrap();
+        assert_eq!(parse_fetch_header(&h), None, "negative lengths rejected");
+    }
+
+    #[test]
+    fn local_snapshot_path_is_per_process() {
+        let p = default_local_snapshot();
+        assert!(p.to_string_lossy().contains(&std::process::id().to_string()));
+    }
+}

@@ -5,6 +5,13 @@
 //! listener thread accepts until `shutdown` is requested by any client or
 //! the returned [`ServerHandle`] is stopped.
 //!
+//! Requests ride the versioned envelope defined in [`super::protocol`]:
+//! the server parses with [`parse_request_line`], remembers the client's
+//! declared `v`, and threads it into every response builder — so legacy
+//! (`v`-absent) clients keep their exact pre-versioning shapes while
+//! version-bearing clients get `"v"`-stamped replies and structured
+//! `{code, message}` errors.
+//!
 //! The engine lives behind an [`EngineSlot`]: the `reload` op loads a
 //! snapshot from disk ([`Engine::load_with`] — no rebuild, honoring the
 //! configured serving load mode, owned or mapped) and swaps it in;
@@ -18,27 +25,43 @@
 //! and a reload replaces the engine wholesale — flush mutations with a
 //! `merge` + `save` before reloading if they must survive.
 //!
+//! Replication (see [`super::replica`] for the follower side):
+//!
+//! * A **primary** answers `snapshot.fetch` (write a fenced snapshot,
+//!   stream it raw after the header line) and `wal.fetch` (read-only
+//!   cursor fetch of raw WAL frames — requires `--wal`).
+//! * A **follower** (`--follow`) runs a [`Replicator`] tail thread,
+//!   serves every read op from the replicated engine, and rejects
+//!   writes — and replication-source ops — with a `read_only` error.
+//! * `repl.status` reports `{role, applied_id, lag_records,
+//!   last_contact_ms}` on both roles.
+//!
 //! Request lines are read through a hard size cap
 //! (`--max-request-bytes`, default 16 MiB): an oversized line is
 //! answered with an error and discarded in bounded chunks — one hostile
 //! client cannot grow a connection buffer until the process dies — and
 //! the connection keeps serving.
 
-use super::batcher::Batcher;
+use super::batcher::{BatchSubmitter, Batcher};
 use super::engine::{Engine, EngineSlot};
 use super::protocol::{
-    count_response, delete_response, error_response, insert_response, merge_response,
-    parse_request, reload_response, save_response, search_response, topk_response, Request,
+    count_response, delete_response, error_response, insert_response, merge_response, ok_response,
+    parse_request_line, ping_response, reload_response, repl_status_response, respond,
+    save_response, search_response, snapshot_fetch_header, topk_response, wal_fetch_header,
+    ErrorCode, Request,
 };
+use super::replica::{self, ReplState, Replicator, TailCfg};
 use super::ServeConfig;
+use crate::store::wal::{self, WalCursor, WalFetch};
 use crate::util::json::Json;
 use crate::util::timer::Timer;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// Running server handle; dropping it stops the listener.
 pub struct ServerHandle {
@@ -71,6 +94,22 @@ impl Drop for ServerHandle {
     }
 }
 
+/// Everything a connection thread needs, bundled once per server.
+#[derive(Clone)]
+struct ConnCtx {
+    submitter: BatchSubmitter,
+    slot: Arc<EngineSlot>,
+    stop: Arc<AtomicBool>,
+    /// Present on followers: replication telemetry for `repl.status`.
+    repl: Option<Arc<ReplState>>,
+    default_tau: usize,
+    mmap: bool,
+    max_request_bytes: usize,
+    /// Followers reject write ops (and replication-source ops) with a
+    /// `read_only` error.
+    read_only: bool,
+}
+
 /// Starts serving `engine` per `cfg`; returns immediately.
 pub fn serve(engine: Arc<Engine>, cfg: ServeConfig) -> std::io::Result<ServerHandle> {
     engine.set_merge_threshold(cfg.merge_threshold);
@@ -78,18 +117,45 @@ pub fn serve(engine: Arc<Engine>, cfg: ServeConfig) -> std::io::Result<ServerHan
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = Arc::clone(&stop);
-    let default_tau = cfg.default_tau;
-    let mmap = cfg.mmap;
-    let max_request_bytes = cfg.max_request_bytes;
 
     let slot = Arc::new(EngineSlot::new(engine));
     let batcher = Batcher::start(Arc::clone(&slot), &cfg);
 
+    // Follower mode: spawn the replication tail. The caller (serve
+    // --follow startup) has already bootstrapped the engine from the
+    // primary's snapshot and recorded the tail cursor in the config.
+    let repl_state = cfg.follow.as_ref().map(|_| Arc::new(ReplState::new()));
+    let replicator = match (&cfg.follow, cfg.follow_cursor, &repl_state) {
+        (Some(primary), Some(cursor), Some(state)) => Some(Replicator::start(TailCfg {
+            primary: primary.clone(),
+            slot: Arc::clone(&slot),
+            state: Arc::clone(state),
+            cursor,
+            poll: Duration::from_millis(cfg.follow_poll_ms.max(1)),
+            local_snapshot: replica::default_local_snapshot(),
+            mmap: cfg.mmap,
+        })),
+        _ => None,
+    };
+
+    let ctx = ConnCtx {
+        submitter: batcher.submitter(),
+        slot,
+        stop: Arc::clone(&stop),
+        repl: repl_state,
+        default_tau: cfg.default_tau,
+        mmap: cfg.mmap,
+        max_request_bytes: cfg.max_request_bytes,
+        read_only: cfg.follow.is_some(),
+    };
+
     let handle = std::thread::Builder::new()
         .name("bst-listener".into())
         .spawn(move || {
-            // keep the batcher alive for the server lifetime
-            let batcher = batcher;
+            // keep the batcher and replication tail alive for the
+            // server lifetime
+            let _batcher = batcher;
+            let _replicator = replicator;
             for stream in listener.incoming() {
                 if stop2.load(Ordering::SeqCst) {
                     break;
@@ -98,19 +164,9 @@ pub fn serve(engine: Arc<Engine>, cfg: ServeConfig) -> std::io::Result<ServerHan
                 // Small request/response pairs: Nagle + delayed ACK would
                 // add ~40 ms per round trip (measured; EXPERIMENTS.md §Perf).
                 let _ = stream.set_nodelay(true);
-                let submitter = batcher.submitter();
-                let slot = Arc::clone(&slot);
-                let stop3 = Arc::clone(&stop2);
+                let ctx = ctx.clone();
                 std::thread::spawn(move || {
-                    let _ = handle_conn(
-                        stream,
-                        submitter,
-                        slot,
-                        stop3,
-                        default_tau,
-                        mmap,
-                        max_request_bytes,
-                    );
+                    let _ = handle_conn(stream, ctx);
                 });
             }
         })
@@ -134,6 +190,22 @@ fn check_len(engine: &Engine, q: &[u8]) -> Result<(), String> {
             engine.l()
         ))
     }
+}
+
+/// Ops a read-only follower refuses. `snapshot.fetch` and `wal.fetch`
+/// are included: replicas replicate from the primary, not from each
+/// other (a follower's WAL-less engine has nothing to ship anyway).
+fn is_write_op(req: &Request) -> bool {
+    matches!(
+        req,
+        Request::Insert { .. }
+            | Request::Delete { .. }
+            | Request::Merge
+            | Request::Save { .. }
+            | Request::Reload { .. }
+            | Request::SnapshotFetch
+            | Request::WalFetch { .. }
+    )
 }
 
 /// Reads one newline-terminated request into `buf`, holding at most
@@ -167,28 +239,117 @@ fn read_request_line(
     }
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    submitter: super::batcher::BatchSubmitter,
-    slot: Arc<EngineSlot>,
-    stop: Arc<AtomicBool>,
-    default_tau: usize,
-    mmap: bool,
-    max_request_bytes: usize,
+/// Monotonic tag for concurrent `snapshot.fetch` temp files.
+static SNAP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Answers `snapshot.fetch`: writes a fenced snapshot to a process-local
+/// temp file, streams it raw after the header line, and unlinks it (the
+/// open handle keeps the bytes readable — Unix). The header carries the
+/// post-rotation WAL cursor so the follower knows where to tail from.
+fn stream_snapshot(
+    engine: &Engine,
+    writer: &mut TcpStream,
+    v: Option<u64>,
 ) -> std::io::Result<()> {
+    let tag = SNAP_COUNTER.fetch_add(1, Ordering::Relaxed);
+    let name = format!("bst-serve-snap-{}-{tag}.bin", std::process::id());
+    let path = std::env::temp_dir().join(name);
+    let cursor = match engine.save_with_cursor(&path) {
+        Ok(c) => c,
+        Err(e) => {
+            engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
+            let reply = error_response(ErrorCode::Io, &format!("snapshot failed: {e}"), v);
+            writer.write_all(reply.as_bytes())?;
+            return writer.write_all(b"\n");
+        }
+    };
+    let mut file = std::fs::File::open(&path)?;
+    let len = file.metadata()?.len();
+    // Unlink immediately: the open handle streams the bytes, and a
+    // killed connection leaves nothing behind.
+    let _ = std::fs::remove_file(&path);
+    let header = snapshot_fetch_header(len, engine.n(), cursor.map(|c| (c.seq, c.off)), v);
+    writer.write_all(header.as_bytes())?;
+    writer.write_all(b"\n")?;
+    std::io::copy(&mut file, writer)?;
+    Ok(())
+}
+
+/// Answers `wal.fetch`: a read-only cursor fetch of raw frames from the
+/// engine's log, streamed after the header line. A rotated-away cursor
+/// is a structured `wal_gap` — the follower's signal to re-bootstrap.
+fn stream_wal(
+    engine: &Engine,
+    writer: &mut TcpStream,
+    from_seq: u64,
+    from_off: u64,
+    max_bytes: usize,
+    v: Option<u64>,
+) -> std::io::Result<()> {
+    let Some(base) = engine.wal_base() else {
+        let reply = error_response(
+            ErrorCode::NoWal,
+            "this server has no write-ahead log (started without --wal)",
+            v,
+        );
+        writer.write_all(reply.as_bytes())?;
+        return writer.write_all(b"\n");
+    };
+    let from = WalCursor { seq: from_seq, off: from_off };
+    match wal::fetch_frames(&base, from, max_bytes) {
+        Err(e) => {
+            engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
+            let reply = error_response(ErrorCode::Io, &format!("wal read failed: {e}"), v);
+            writer.write_all(reply.as_bytes())?;
+            writer.write_all(b"\n")
+        }
+        Ok(WalFetch::Gap) => {
+            let reply = error_response(
+                ErrorCode::WalGap,
+                &format!(
+                    "wal position {from_seq}:{from_off} was rotated away; \
+                     re-bootstrap from snapshot.fetch"
+                ),
+                v,
+            );
+            writer.write_all(reply.as_bytes())?;
+            writer.write_all(b"\n")
+        }
+        Ok(WalFetch::Chunk(chunk)) => {
+            let header = wal_fetch_header(
+                chunk.frames.len() as u64,
+                chunk.records,
+                chunk.next.seq,
+                chunk.next.off,
+                engine.n(),
+                v,
+            );
+            writer.write_all(header.as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.write_all(&chunk.frames)
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, ctx: ConnCtx) -> std::io::Result<()> {
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut buf: Vec<u8> = Vec::new();
     loop {
-        let complete = match read_request_line(&mut reader, &mut buf, max_request_bytes)? {
+        let complete = match read_request_line(&mut reader, &mut buf, ctx.max_request_bytes)? {
             None => break,
             Some(complete) => complete,
         };
         if !complete {
-            slot.current().metrics().errors.fetch_add(1, Ordering::Relaxed);
-            let reply = error_response(&format!(
-                "request exceeds max request size ({max_request_bytes} bytes)"
-            ));
+            ctx.slot.current().metrics().errors.fetch_add(1, Ordering::Relaxed);
+            let reply = error_response(
+                ErrorCode::BadRequest,
+                &format!(
+                    "request exceeds max request size ({} bytes)",
+                    ctx.max_request_bytes
+                ),
+                None,
+            );
             writer.write_all(reply.as_bytes())?;
             writer.write_all(b"\n")?;
             continue;
@@ -198,60 +359,105 @@ fn handle_conn(
         if line.is_empty() {
             continue;
         }
-        let engine = slot.current();
-        let reply = match parse_request(line) {
+        let engine = ctx.slot.current();
+        let parsed = parse_request_line(line);
+        let v = parsed.v;
+        let req = match parsed.result {
+            Ok(req) => req,
             Err(e) => {
                 engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
-                error_response(&e)
+                let reply = error_response(e.code, &e.message, v);
+                writer.write_all(reply.as_bytes())?;
+                writer.write_all(b"\n")?;
+                continue;
             }
-            Ok(Request::Ping) => r#"{"pong":true}"#.to_string(),
-            Ok(Request::Stats) => {
+        };
+        if ctx.read_only && is_write_op(&req) {
+            engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
+            let reply = error_response(
+                ErrorCode::ReadOnly,
+                "this server is a read-only follower; send writes to the primary",
+                v,
+            );
+            writer.write_all(reply.as_bytes())?;
+            writer.write_all(b"\n")?;
+            continue;
+        }
+        // Streaming ops write their own header + raw payload.
+        match req {
+            Request::SnapshotFetch => {
+                stream_snapshot(&engine, &mut writer, v)?;
+                continue;
+            }
+            Request::WalFetch { from_seq, from_off, max_bytes } => {
+                stream_wal(&engine, &mut writer, from_seq, from_off, max_bytes, v)?;
+                continue;
+            }
+            _ => {}
+        }
+        let reply = match req {
+            Request::Ping => ping_response(v),
+            Request::Stats => {
                 let mut stats = engine.metrics().snapshot();
                 // Residency gauges for mapped engines: how much of the
                 // snapshot is mapped, and how much of that is page-cache
                 // resident right now (mincore). `null` when the engine
                 // owns its memory (no mapping to measure).
                 if let Json::Obj(map) = &mut stats {
-                    let gauge = |v: Option<usize>| match v {
-                        Some(v) => Json::num(v as f64),
+                    let gauge = |g: Option<usize>| match g {
+                        Some(g) => Json::num(g as f64),
                         None => Json::Null,
                     };
                     map.insert("mapped_bytes".to_string(), gauge(engine.mapped_bytes()));
                     map.insert("resident_bytes".to_string(), gauge(engine.resident_bytes()));
                 }
-                stats.to_string()
+                respond(stats, v)
             }
-            Ok(Request::Shutdown) => {
-                stop.store(true, Ordering::SeqCst);
-                writer.write_all(b"{\"ok\":true}\n")?;
+            Request::ReplStatus => match &ctx.repl {
+                Some(state) => {
+                    let applied = engine.n() as u64;
+                    repl_status_response(
+                        "follower",
+                        applied,
+                        state.primary_n().saturating_sub(applied),
+                        state.last_contact_ms(),
+                        v,
+                    )
+                }
+                None => repl_status_response("primary", engine.n() as u64, 0, None, v),
+            },
+            Request::Shutdown => {
+                ctx.stop.store(true, Ordering::SeqCst);
+                writer.write_all(ok_response(v).as_bytes())?;
+                writer.write_all(b"\n")?;
                 // poke the accept loop so it observes the stop flag
                 let _ = TcpStream::connect(writer.local_addr()?);
                 break;
             }
             // All three query modes ride the batcher, so they share the
             // fan-out amortization and the per-query latency accounting.
-            Ok(Request::Search { q, tau }) => match check_len(&engine, &q) {
-                Err(e) => error_response(&e),
+            Request::Search { q, tau } => match check_len(&engine, &q) {
+                Err(e) => error_response(ErrorCode::BadRequest, &e, v),
                 Ok(()) => {
                     let timer = Timer::start();
-                    match submitter.search(q, tau.unwrap_or(default_tau)) {
-                        Some(ids) => search_response(&ids, timer.elapsed_us() as u64),
-                        None => error_response("engine unavailable"),
+                    match ctx.submitter.search(q, tau.unwrap_or(ctx.default_tau)) {
+                        Some(ids) => search_response(&ids, timer.elapsed_us() as u64, v),
+                        None => error_response(ErrorCode::ShardFailed, "engine unavailable", v),
                     }
                 }
             },
-            Ok(Request::Count { q, tau }) => match check_len(&engine, &q) {
-                Err(e) => error_response(&e),
+            Request::Count { q, tau } => match check_len(&engine, &q) {
+                Err(e) => error_response(ErrorCode::BadRequest, &e, v),
                 Ok(()) => {
                     let timer = Timer::start();
-                    match submitter.count(q, tau.unwrap_or(default_tau)) {
-                        Some(n) => count_response(n, timer.elapsed_us() as u64),
-                        None => error_response("engine unavailable"),
+                    match ctx.submitter.count(q, tau.unwrap_or(ctx.default_tau)) {
+                        Some(n) => count_response(n, timer.elapsed_us() as u64, v),
+                        None => error_response(ErrorCode::ShardFailed, "engine unavailable", v),
                     }
                 }
             },
-            Ok(Request::TopK { q, k, tau }) => match check_len(&engine, &q) {
-                Err(e) => error_response(&e),
+            Request::TopK { q, k, tau } => match check_len(&engine, &q) {
+                Err(e) => error_response(ErrorCode::BadRequest, &e, v),
                 Ok(()) => {
                     let timer = Timer::start();
                     // default radius: unbounded nearest-neighbor (tau = L);
@@ -259,9 +465,9 @@ fn handle_conn(
                     // so untrusted requests stay cheap.
                     let k = k.min(engine.n());
                     let tau = tau.unwrap_or(engine.l());
-                    match submitter.topk(q, k, tau) {
-                        Some(hits) => topk_response(&hits, timer.elapsed_us() as u64),
-                        None => error_response("engine unavailable"),
+                    match ctx.submitter.topk(q, k, tau) {
+                        Some(hits) => topk_response(&hits, timer.elapsed_us() as u64, v),
+                        None => error_response(ErrorCode::ShardFailed, "engine unavailable", v),
                     }
                 }
             },
@@ -269,31 +475,32 @@ fn handle_conn(
             // current engine (not through the batcher). Inserts block
             // until every shard has appended, so a subsequent query on
             // this connection sees the new rows.
-            Ok(Request::Insert { rows }) => {
+            Request::Insert { rows } => {
                 let timer = Timer::start();
                 match engine.insert_batch(&rows) {
                     Err(e) => {
                         engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
-                        error_response(&e)
+                        error_response(ErrorCode::BadRequest, &e, v)
                     }
                     Ok(range) => insert_response(
                         range.start,
                         rows.len(),
                         timer.elapsed_us() as u64,
+                        v,
                     ),
                 }
             }
-            Ok(Request::Delete { id }) => {
+            Request::Delete { id } => {
                 let timer = Timer::start();
                 let deleted = engine.delete(id);
-                delete_response(deleted, timer.elapsed_us() as u64)
+                delete_response(deleted, timer.elapsed_us() as u64, v)
             }
-            Ok(Request::Merge) => {
+            Request::Merge => {
                 let timer = Timer::start();
                 let summary = engine.merge();
-                merge_response(summary.merged, summary.skipped, timer.elapsed_us() as u64)
+                merge_response(summary.merged, summary.skipped, timer.elapsed_us() as u64, v)
             }
-            Ok(Request::Save { path }) => {
+            Request::Save { path } => {
                 let timer = Timer::start();
                 // Durable checkpoint: atomic snapshot write (tmp + fsync
                 // + rename), then the WAL rotates — replay-on-load only
@@ -301,35 +508,43 @@ fn handle_conn(
                 match engine.save(Path::new(&path)) {
                     Err(e) => {
                         engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
-                        error_response(&format!("save failed: {e}"))
+                        error_response(ErrorCode::Io, &format!("save failed: {e}"), v)
                     }
-                    Ok(()) => save_response(engine.n(), timer.elapsed_us() as u64),
+                    Ok(()) => save_response(engine.n(), timer.elapsed_us() as u64, v),
                 }
             }
-            Ok(Request::Reload { path }) => {
+            Request::Reload { path } => {
                 let timer = Timer::start();
                 // The running engine keeps serving through every error
                 // arm below — a failed reload never swaps the slot.
-                match Engine::load_with(Path::new(&path), mmap) {
+                match Engine::load_with(Path::new(&path), ctx.mmap) {
                     Err(e) => {
                         engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
-                        error_response(&format!("reload failed: {e}"))
+                        error_response(ErrorCode::Io, &format!("reload failed: {e}"), v)
                     }
                     Ok(new_engine) if new_engine.l() != engine.l() => {
                         engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
-                        error_response(&format!(
-                            "reload rejected: snapshot L={} != serving L={}",
-                            new_engine.l(),
-                            engine.l()
-                        ))
+                        error_response(
+                            ErrorCode::BadRequest,
+                            &format!(
+                                "reload rejected: snapshot L={} != serving L={}",
+                                new_engine.l(),
+                                engine.l()
+                            ),
+                            v,
+                        )
                     }
                     Ok(new_engine) if new_engine.b() != engine.b() => {
                         engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
-                        error_response(&format!(
-                            "reload rejected: snapshot b={} != serving b={}",
-                            new_engine.b(),
-                            engine.b()
-                        ))
+                        error_response(
+                            ErrorCode::BadRequest,
+                            &format!(
+                                "reload rejected: snapshot b={} != serving b={}",
+                                new_engine.b(),
+                                engine.b()
+                            ),
+                            v,
+                        )
                     }
                     Ok(new_engine) => {
                         // the snapshot engine inherits the serving
@@ -337,11 +552,13 @@ fn handle_conn(
                         new_engine.set_merge_threshold(engine.merge_threshold());
                         let n = new_engine.n();
                         let shards = new_engine.n_shards();
-                        slot.replace(Arc::new(new_engine));
-                        reload_response(n, shards, timer.elapsed_us() as u64)
+                        ctx.slot.replace(Arc::new(new_engine));
+                        reload_response(n, shards, timer.elapsed_us() as u64, v)
                     }
                 }
             }
+            // handled above (streaming)
+            Request::SnapshotFetch | Request::WalFetch { .. } => unreachable!(),
         };
         writer.write_all(reply.as_bytes())?;
         writer.write_all(b"\n")?;

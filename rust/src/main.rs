@@ -12,14 +12,14 @@
 //!            [--merge]
 //! bst query  --in FILE | --index SNAP [--mmap]
 //!            --q 0,1,2,... [--tau T] [--topk K] [--stats]
-//! bst serve  --dataset D | --index SNAP [--mmap]
+//! bst serve  --dataset D | --index SNAP [--mmap] | --follow HOST:PORT
 //!            [--addr A] [--shards S] [--scale F]
 //! bst info                                                  # build info
 //! ```
 
 use bst::cli::Args;
-use bst::coordinator::engine::{Engine, ShardIndexKind};
-use bst::coordinator::{server, ServeConfig};
+use bst::coordinator::engine::{Engine, QueryResult, QuerySpec, ShardIndexKind};
+use bst::coordinator::{replica, server, ServeConfig};
 use bst::data::{self, Dataset};
 use bst::eval::{bench, cost, tables, EvalOpts};
 use bst::index::SearchIndex;
@@ -105,6 +105,13 @@ USAGE:
                       [--max-request-bytes N] (largest accepted request
                        line, default 16777216; longer lines get an error
                        reply and the connection keeps serving)
+                      [--follow HOST:PORT] (read replica: bootstrap from
+                       the primary's snapshot over the wire, then tail
+                       its WAL and apply records as they ship; serves
+                       every read op, rejects writes with a read_only
+                       error; mutually exclusive with --wal)
+                      [--follow-poll-ms N] (replication poll interval
+                       once caught up, default 200)
   bst info            print build/runtime information
 ";
 
@@ -520,7 +527,10 @@ fn query_snapshot(args: &Args, snap: &str, q: &[u8]) -> i32 {
         };
         let tau = args.get_usize("tau", engine.l());
         let t = bst::util::timer::Timer::start();
-        let hits = engine.top_k(q, k, tau);
+        let hits = match engine.query(&QuerySpec::top_k(q, k, tau)) {
+            QueryResult::TopK(h) => h,
+            _ => Vec::new(),
+        };
         let us = t.elapsed_us();
         println!(
             "{}",
@@ -534,7 +544,10 @@ fn query_snapshot(args: &Args, snap: &str, q: &[u8]) -> i32 {
     }
     let tau = args.get_usize("tau", 2);
     let t = bst::util::timer::Timer::start();
-    let mut hits = engine.search(q, tau);
+    let mut hits = match engine.query(&QuerySpec::ids(q, tau)) {
+        QueryResult::Ids(h) => h,
+        _ => Vec::new(),
+    };
     let us = t.elapsed_us();
     hits.sort();
     println!(
@@ -562,7 +575,51 @@ fn cmd_serve(args: &Args) -> i32 {
         wal: args.get("wal").map(std::path::PathBuf::from),
         wal_sync,
         max_request_bytes: args.get_usize("max-request-bytes", 16 << 20),
+        follow: args.get("follow").map(|s| s.to_string()),
+        follow_poll_ms: args.get_u64("follow-poll-ms", 200),
+        follow_cursor: None,
     };
+
+    // Follower mode: no local dataset or snapshot — the engine is
+    // bootstrapped from the primary over the wire, and the replication
+    // tail inside the server keeps it current.
+    if let Some(primary) = serve_cfg.follow.clone() {
+        if serve_cfg.wal.is_some() {
+            eprintln!(
+                "--follow and --wal are mutually exclusive \
+                 (a follower's durability is its primary's)"
+            );
+            return 2;
+        }
+        let local = replica::default_local_snapshot();
+        eprintln!("bootstrapping from primary {primary}...");
+        let t = bst::util::timer::Timer::start();
+        let boot = match replica::bootstrap(&primary, &local, serve_cfg.mmap) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("follower bootstrap failed: {e}");
+                return 1;
+            }
+        };
+        let Some(cursor) = boot.cursor else {
+            eprintln!(
+                "primary {primary} serves without --wal: nothing to tail, \
+                 refusing to serve a frozen snapshot"
+            );
+            return 2;
+        };
+        eprintln!(
+            "bootstrapped in {:.0} ms: n={} shards={}, tailing from {}:{}",
+            t.elapsed_ms(),
+            boot.engine.n(),
+            boot.engine.n_shards(),
+            cursor.seq,
+            cursor.off
+        );
+        let mut cfg = serve_cfg;
+        cfg.follow_cursor = Some(cursor);
+        return run_server(Arc::new(boot.engine), cfg);
+    }
 
     // `--index` doubles as the historical kind selector (si-bst/mi-bst)
     // and the snapshot path; `--index-kind` is the unambiguous spelling.
@@ -649,7 +706,12 @@ fn cmd_serve(args: &Args) -> i32 {
         engine.n_shards(),
         engine.heap_bytes() as f64 / (1024.0 * 1024.0)
     );
-    match server::serve(engine, serve_cfg) {
+    run_server(engine, serve_cfg)
+}
+
+/// Binds the listener and blocks forever (ctrl-c to stop).
+fn run_server(engine: Arc<Engine>, cfg: ServeConfig) -> i32 {
+    match server::serve(engine, cfg) {
         Ok(handle) => {
             eprintln!("listening on {}", handle.addr);
             // Block forever (ctrl-c to stop); the handle joins on drop.

@@ -1,0 +1,346 @@
+//! End-to-end replication tests: a primary and a follower as real TCP
+//! servers in one process. The follower bootstraps over the wire
+//! (`snapshot.fetch`), tails the primary's WAL (`wal.fetch`), and must
+//! answer reads identically to the primary — including across a WAL
+//! rotation gap (re-bootstrap) and a primary stop/restart (reconnect).
+
+use bst::coordinator::engine::{Engine, ShardIndexKind};
+use bst::coordinator::{replica, server, ServeConfig};
+use bst::sketch::SketchSet;
+use bst::store::WalSync;
+use bst::trie::bst::BstConfig;
+use bst::util::json::Json;
+use bst::util::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const L: usize = 12;
+
+fn make_rows(n: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<u8>> = (0..6)
+        .map(|_| (0..L).map(|_| rng.below(4) as u8).collect())
+        .collect();
+    (0..n)
+        .map(|_| {
+            let mut r = centers[rng.below_usize(6)].clone();
+            for _ in 0..rng.below_usize(3) {
+                let p = rng.below_usize(L);
+                r[p] = rng.below(4) as u8;
+            }
+            r
+        })
+        .collect()
+}
+
+fn make_engine(rows: &[Vec<u8>]) -> Engine {
+    let set = SketchSet::from_rows(2, L, rows);
+    Engine::build(&set, 3, &ShardIndexKind::Bst(BstConfig::default()))
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bst_repl_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let _ = stream.set_nodelay(true);
+        Client {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+        }
+    }
+
+    fn call(&mut self, req: &str) -> Json {
+        self.writer.write_all(req.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).expect("valid json response")
+    }
+}
+
+fn enc(r: &[u8]) -> String {
+    r.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(",")
+}
+
+fn search_ids(client: &mut Client, q: &[u8], tau: usize) -> Vec<u32> {
+    let resp = client.call(&format!(r#"{{"op":"search","q":[{}],"tau":{tau}}}"#, enc(q)));
+    let mut ids: Vec<u32> = resp
+        .get("ids")
+        .and_then(|a| a.as_arr())
+        .unwrap_or_else(|| panic!("search reply: {resp:?}"))
+        .iter()
+        .map(|x| x.as_f64().unwrap() as u32)
+        .collect();
+    ids.sort_unstable();
+    ids
+}
+
+fn topk_pairs(client: &mut Client, q: &[u8], k: usize) -> Vec<(u32, usize)> {
+    let resp = client.call(&format!(r#"{{"op":"topk","q":[{}],"k":{k},"tau":{L}}}"#, enc(q)));
+    let ids = resp.get("ids").and_then(|a| a.as_arr()).unwrap();
+    let dists = resp.get("dists").and_then(|a| a.as_arr()).unwrap();
+    let mut pairs: Vec<(u32, usize)> = ids
+        .iter()
+        .zip(dists.iter())
+        .map(|(i, d)| (i.as_f64().unwrap() as u32, d.as_usize().unwrap()))
+        .collect();
+    pairs.sort_unstable();
+    pairs
+}
+
+/// Polls the follower's `repl.status` until `applied_id` reaches `want`
+/// (records apply in log order, so earlier deletes have landed too).
+fn wait_applied(follower: &mut Client, want: usize) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let st = follower.call(r#"{"op":"repl.status","v":1}"#);
+        assert_eq!(st.get("role").and_then(|r| r.as_str()), Some("follower"), "{st:?}");
+        let applied = st.get("applied_id").and_then(|x| x.as_usize()).unwrap_or(0);
+        if applied >= want {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "follower stuck at applied_id={applied}, want {want}: {st:?}"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Asserts read parity between primary and follower: id search at
+/// τ ∈ {0, 2, 4} plus top-k, over a handful of probe rows.
+fn assert_parity(primary: &mut Client, follower: &mut Client, rows: &[Vec<u8>]) {
+    for qi in [0usize, 57, 190] {
+        let q = &rows[qi % rows.len()];
+        for tau in [0usize, 2, 4] {
+            let p = search_ids(primary, q, tau);
+            let f = search_ids(follower, q, tau);
+            assert_eq!(p, f, "search parity qi={qi} tau={tau}");
+        }
+        let p = topk_pairs(primary, q, 5);
+        let f = topk_pairs(follower, q, 5);
+        assert_eq!(p, f, "topk parity qi={qi}");
+    }
+}
+
+/// Boots a follower off a running primary and returns its server handle
+/// plus a connected client.
+fn start_follower(
+    primary_addr: std::net::SocketAddr,
+    local_snap: &std::path::Path,
+    poll_ms: u64,
+) -> (server::ServerHandle, Client) {
+    let boot = replica::bootstrap(&primary_addr.to_string(), local_snap, false)
+        .expect("follower bootstrap");
+    let cursor = boot.cursor.expect("primary runs with --wal");
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        follow: Some(primary_addr.to_string()),
+        follow_poll_ms: poll_ms,
+        follow_cursor: Some(cursor),
+        ..Default::default()
+    };
+    let handle = server::serve(Arc::new(boot.engine), cfg).expect("serve follower");
+    let client = Client::connect(handle.addr);
+    (handle, client)
+}
+
+#[test]
+fn follower_mirrors_primary_and_rejects_writes() {
+    let dir = tmp_dir("mirror");
+    let rows = make_rows(300, 0xf01);
+    let n0 = rows.len();
+    let engine = make_engine(&rows);
+    engine.attach_wal(&dir.join("wal"), WalSync::Always).unwrap();
+    let p_cfg = ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
+    let p_handle = server::serve(Arc::new(engine), p_cfg).expect("serve primary");
+    let mut primary = Client::connect(p_handle.addr);
+
+    let (f_handle, mut follower) = start_follower(p_handle.addr, &dir.join("boot.snap"), 10);
+
+    // Versioned envelope over the wire: v:1 echoes, v:99 is refused
+    // with a structured error, legacy stays unstamped.
+    let pong = follower.call(r#"{"op":"ping","v":1}"#);
+    assert_eq!(pong.get("pong").and_then(|b| b.as_bool()), Some(true));
+    assert_eq!(pong.get("v").and_then(|v| v.as_usize()), Some(1));
+    let err = follower.call(r#"{"op":"ping","v":99}"#);
+    let code = err.get("error").and_then(|e| e.get("code")).and_then(|c| c.as_str());
+    assert_eq!(code, Some("unsupported_version"), "{err:?}");
+    let pong = follower.call(r#"{"op":"ping"}"#);
+    assert!(pong.get("v").is_none(), "legacy replies carry no 'v': {pong:?}");
+
+    // Write burst on the primary: re-insert a slice, delete two ids,
+    // merge, then one more insert so applied_id moves past the deletes.
+    let burst: Vec<String> = rows[..40].iter().map(|r| format!("[{}]", enc(r))).collect();
+    let resp = primary.call(&format!(r#"{{"op":"insert","rows":[{}]}}"#, burst.join(",")));
+    assert_eq!(resp.get("first_id").and_then(|x| x.as_usize()), Some(n0), "{resp:?}");
+    assert_eq!(
+        primary
+            .call(&format!(r#"{{"op":"delete","id":{}}}"#, n0 + 1))
+            .get("deleted")
+            .and_then(|b| b.as_bool()),
+        Some(true)
+    );
+    assert_eq!(
+        primary
+            .call(r#"{"op":"delete","id":7}"#)
+            .get("deleted")
+            .and_then(|b| b.as_bool()),
+        Some(true)
+    );
+    primary.call(r#"{"op":"merge"}"#);
+    primary.call(&format!(r#"{{"op":"insert","rows":[[{}]]}}"#, enc(&rows[5])));
+
+    wait_applied(&mut follower, n0 + 41);
+    assert_parity(&mut primary, &mut follower, &rows);
+    // The tombstones shipped too.
+    assert!(!search_ids(&mut follower, &rows[1], 0).contains(&((n0 + 1) as u32)));
+    assert!(!search_ids(&mut follower, &rows[7], 0).contains(&7u32));
+
+    // Followers are read-only: legacy clients get the bare-string
+    // error, versioned clients get the structured read_only code.
+    let err = follower.call(&format!(r#"{{"op":"insert","rows":[[{}]]}}"#, enc(&rows[0])));
+    assert!(err.get("error").and_then(|e| e.as_str()).is_some(), "{err:?}");
+    for req in [
+        r#"{"op":"delete","id":0,"v":1}"#,
+        r#"{"op":"merge","v":1}"#,
+        r#"{"op":"save","path":"/tmp/x.snap","v":1}"#,
+        r#"{"op":"snapshot.fetch","v":1}"#,
+        r#"{"op":"wal.fetch","from_seq":0,"from_off":0,"v":1}"#,
+    ] {
+        let err = follower.call(req);
+        let code = err.get("error").and_then(|e| e.get("code")).and_then(|c| c.as_str());
+        assert_eq!(code, Some("read_only"), "{req} → {err:?}");
+    }
+
+    // Roles report correctly; a rotated-away cursor is a wal_gap.
+    let st = primary.call(r#"{"op":"repl.status","v":1}"#);
+    assert_eq!(st.get("role").and_then(|r| r.as_str()), Some("primary"));
+    let st = follower.call(r#"{"op":"repl.status","v":1}"#);
+    assert!(st.get("last_contact_ms").and_then(|x| x.as_usize()).is_some(), "{st:?}");
+    let err = primary.call(r#"{"op":"wal.fetch","from_seq":0,"from_off":0,"v":1}"#);
+    let code = err.get("error").and_then(|e| e.get("code")).and_then(|c| c.as_str());
+    assert_eq!(code, Some("wal_gap"), "segment 0 rotated at bootstrap: {err:?}");
+
+    f_handle.stop();
+    p_handle.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn follower_rebootstraps_across_rotation_gap() {
+    let dir = tmp_dir("gap");
+    let rows = make_rows(250, 0xf02);
+    let n0 = rows.len();
+    let engine = make_engine(&rows);
+    engine.attach_wal(&dir.join("wal"), WalSync::Always).unwrap();
+    let p_cfg = ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
+    let p_handle = server::serve(Arc::new(engine), p_cfg).expect("serve primary");
+    let mut primary = Client::connect(p_handle.addr);
+
+    // Take the bootstrap cursor BEFORE the writes, then let a save op
+    // rotate those segments away — the cursor becomes unservable and
+    // the follower must recover by re-bootstrapping, not by error-loop.
+    let boot = replica::bootstrap(&p_handle.addr.to_string(), &dir.join("boot.snap"), false)
+        .expect("bootstrap");
+    let stale_cursor = boot.cursor.expect("primary runs with --wal");
+
+    let burst: Vec<String> = rows[..30].iter().map(|r| format!("[{}]", enc(r))).collect();
+    primary.call(&format!(r#"{{"op":"insert","rows":[{}]}}"#, burst.join(",")));
+    primary.call(&format!(r#"{{"op":"delete","id":{}}}"#, n0 + 2));
+    let saved = primary.call(&format!(
+        r#"{{"op":"save","path":"{}"}}"#,
+        dir.join("rotate.snap").display()
+    ));
+    assert_eq!(saved.get("ok").and_then(|b| b.as_bool()), Some(true), "{saved:?}");
+    let burst2: Vec<String> = rows[30..45].iter().map(|r| format!("[{}]", enc(r))).collect();
+    primary.call(&format!(r#"{{"op":"insert","rows":[{}]}}"#, burst2.join(",")));
+
+    let f_cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        follow: Some(p_handle.addr.to_string()),
+        follow_poll_ms: 10,
+        follow_cursor: Some(stale_cursor),
+        ..Default::default()
+    };
+    let f_handle = server::serve(Arc::new(boot.engine), f_cfg).expect("serve follower");
+    let mut follower = Client::connect(f_handle.addr);
+
+    wait_applied(&mut follower, n0 + 45);
+    assert_parity(&mut primary, &mut follower, &rows);
+    assert!(!search_ids(&mut follower, &rows[2], 0).contains(&((n0 + 2) as u32)));
+
+    f_handle.stop();
+    p_handle.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn follower_reconnects_after_primary_restart() {
+    let dir = tmp_dir("restart");
+    let rows = make_rows(200, 0xf03);
+    let n0 = rows.len();
+    let wal = dir.join("wal");
+    let snap = dir.join("cold.snap");
+    make_engine(&rows).save(&snap).unwrap();
+
+    // Pick a fixed port so the restarted primary comes back at the same
+    // address the follower keeps polling.
+    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let p_addr = probe.local_addr().unwrap();
+    drop(probe);
+
+    let engine_a = Engine::load(&snap).unwrap();
+    engine_a.attach_wal(&wal, WalSync::Always).unwrap();
+    let p_cfg = ServeConfig { addr: p_addr.to_string(), ..Default::default() };
+    let p_handle = server::serve(Arc::new(engine_a), p_cfg).expect("serve primary");
+    let mut primary = Client::connect(p_addr);
+
+    let (f_handle, mut follower) = start_follower(p_addr, &dir.join("boot.snap"), 10);
+
+    let burst: Vec<String> = rows[..25].iter().map(|r| format!("[{}]", enc(r))).collect();
+    primary.call(&format!(r#"{{"op":"insert","rows":[{}]}}"#, burst.join(",")));
+    wait_applied(&mut follower, n0 + 25);
+
+    // Primary goes away mid-stream; the follower keeps serving reads.
+    drop(primary);
+    p_handle.stop();
+    let during = search_ids(&mut follower, &rows[0], 2);
+    assert!(!during.is_empty(), "follower serves while the primary is down");
+
+    // Restart: cold snapshot + WAL replay restores the acknowledged
+    // writes; the follower's cursor is still valid (same segments) so
+    // it reconnects and resumes tailing without a re-bootstrap.
+    let engine_b = Engine::load(&snap).unwrap();
+    let rep = engine_b.attach_wal(&wal, WalSync::Always).unwrap();
+    assert_eq!(rep.replayed_inserts, 25, "restart replays the burst");
+    let p_cfg = ServeConfig { addr: p_addr.to_string(), ..Default::default() };
+    let p_handle = server::serve(Arc::new(engine_b), p_cfg).expect("re-serve primary");
+    let mut primary = Client::connect(p_addr);
+
+    let burst2: Vec<String> = rows[25..40].iter().map(|r| format!("[{}]", enc(r))).collect();
+    primary.call(&format!(r#"{{"op":"insert","rows":[{}]}}"#, burst2.join(",")));
+    primary.call(&format!(r#"{{"op":"delete","id":{}}}"#, n0));
+    primary.call(&format!(r#"{{"op":"insert","rows":[[{}]]}}"#, enc(&rows[9])));
+
+    wait_applied(&mut follower, n0 + 41);
+    assert_parity(&mut primary, &mut follower, &rows);
+    assert!(!search_ids(&mut follower, &rows[0], 0).contains(&(n0 as u32)));
+
+    f_handle.stop();
+    p_handle.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
