@@ -38,6 +38,15 @@ pub struct ServeConfig {
     /// Fsync policy for WAL appends (`--wal-sync`); see the durability
     /// contract in [`crate::store::wal`]. Only meaningful with `wal`.
     pub wal_sync: WalSync,
+    /// Group-commit window (`--wal-group-window`), microseconds the
+    /// group leader waits for more writers before its fsync. `None`
+    /// (auto, the default) enables group commit with no added wait —
+    /// coalescing still happens whenever writers queue behind an
+    /// in-flight fsync; `Some(0)` disables grouping entirely (every
+    /// append fsyncs inline under the insert lock); `Some(us)` trades
+    /// that much single-writer latency for bigger groups. Only
+    /// meaningful with `wal` under `--wal-sync always`.
+    pub wal_group_window: Option<u64>,
     /// Largest accepted request line in bytes (`--max-request-bytes`).
     /// Longer lines are answered with an error (and counted in
     /// `metrics.errors`) without buffering them — one hostile client
@@ -71,6 +80,7 @@ impl Default for ServeConfig {
             mmap: false,
             wal: None,
             wal_sync: WalSync::Always,
+            wal_group_window: None,
             max_request_bytes: 16 << 20,
             follow: None,
             follow_poll_ms: 200,

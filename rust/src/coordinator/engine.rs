@@ -38,16 +38,26 @@
 //! trie construction, no rank/select re-indexing.
 //!
 //! **Durability** ([`Engine::attach_wal`]): with a write-ahead log
-//! attached, every insert/delete appends one record — fsync'd per the
-//! [`crate::store::wal::WalSync`] policy — *under the insert lock,
-//! before the rows are enqueued on any shard*, so a write is durable
-//! before it is acknowledged and the log's record order equals the
-//! shards' apply order. `Engine::save` rotates the log under the same
-//! lock (the PR 6 save fence): a fresh segment opens before the parts
-//! fan-out and the old segments are deleted only after the snapshot has
-//! durably renamed into place. On the next [`Engine::load`] +
-//! `attach_wal`, records past the snapshot's id high-water mark replay
-//! (torn tails truncate at a record boundary, never error).
+//! attached, every insert/delete appends one record *under the insert
+//! lock, before the rows are enqueued on any shard*, so the log's
+//! record order equals the shards' apply order. Under `--wal-sync
+//! always` the fsync itself rides **group commit**
+//! ([`crate::store::wal::GroupCommit`]): the append only buffers, the
+//! writer collects its shard acks, and then blocks on the durable-LSN
+//! watermark — the first blocked writer fsyncs once for every record
+//! buffered so far, so K concurrent writes cost one fsync, and a write
+//! is still acknowledged only after its record is on disk. A failed
+//! group fsync fails every write in the group — the rows stay applied
+//! in memory unacknowledged, and their records stay staged so the next
+//! group's fsync retries them (the id sequence in the log must remain
+//! gap-free for replay; a retried record that later reaches disk is a
+//! false NACK, never a false ack). `Engine::save` rotates the log
+//! under the same lock (the PR 6 save fence), draining the in-flight
+//! group first: a fresh segment opens before the parts fan-out and the
+//! old segments are deleted only after the snapshot has durably
+//! renamed into place. On the next [`Engine::load`] + `attach_wal`,
+//! records past the snapshot's id high-water mark replay (torn tails
+//! truncate at a record boundary, never error).
 //!
 //! **Failure isolation**: each shard worker runs its message loop under
 //! `catch_unwind`. A panic discards the (possibly half-mutated) shard
@@ -332,6 +342,20 @@ struct WalCell {
     wal: Option<Wal>,
 }
 
+/// How a write finishes its durability contract after the insert lock
+/// is released (see [`Engine::settle_commit`]).
+enum WriteCommit {
+    /// No WAL, or a deferred-sync policy (`batch`/`off`): nothing to
+    /// wait for.
+    None,
+    /// Inline `always` fsync already happened inside `Wal::append`;
+    /// only the fsync accounting remains.
+    Inline,
+    /// Group commit: block until the durable-LSN watermark covers this
+    /// write's record (possibly leading the group's single fsync).
+    Group(Arc<wal::GroupCommit>, u64),
+}
+
 /// What [`Engine::attach_wal`] recovered.
 #[derive(Debug, Default)]
 pub struct WalReport {
@@ -428,6 +452,9 @@ pub struct Engine {
     /// The snapshot mapping of a `--mmap` load, kept alive so the stats
     /// endpoint can probe page residency (`mincore`).
     mapping: Option<Arc<Mmap>>,
+    /// Bytes of page-level advice (`madvise`) issued over the mapping at
+    /// load time; `None` when not mapped or the platform has no madvise.
+    advised_bytes: Option<usize>,
     heap_bytes: usize,
 }
 
@@ -521,6 +548,7 @@ impl Engine {
             recovery,
             instance,
             mapping: None,
+            advised_bytes: None,
             heap_bytes,
         }
     }
@@ -671,6 +699,22 @@ impl Engine {
             Self::load_v2(&snap)?
         };
         engine.mapping = snap.mapping().cloned();
+        if let Some(m) = &engine.mapping {
+            // Page-level advice for the cold-start period: trie descent
+            // and plane-word probes touch scattered pages, so readahead
+            // over the whole snapshot only evicts hotter pages
+            // (MADV_RANDOM) — but the shard index sections *are* the hot
+            // set, so pre-fault those (MADV_WILLNEED) to spare the first
+            // queries a cold fault per probe. Best-effort: a failed
+            // advice changes performance, never correctness.
+            let mut advised = m.advise_random().unwrap_or(0);
+            for (name, off, len) in snap.section_ranges() {
+                if name.starts_with("shard.") {
+                    advised += m.advise_willneed(off, len).unwrap_or(0);
+                }
+            }
+            engine.advised_bytes = Some(advised);
+        }
         // The source snapshot doubles as the shard-rebuild source until
         // the next save supersedes it.
         engine.recovery.set_snapshot(path);
@@ -797,9 +841,26 @@ impl Engine {
     /// traffic; replayed rows keep their originally assigned ids and do
     /// not count toward the insert metrics.
     pub fn attach_wal(&self, base: &Path, sync: WalSync) -> Result<WalReport, StoreError> {
+        self.attach_wal_with(base, sync, None)
+    }
+
+    /// [`Engine::attach_wal`] with an explicit group-commit window:
+    /// `None` is auto (group commit on under [`WalSync::Always`], the
+    /// leader fsyncs as soon as it is elected), `Some(0)` disables
+    /// grouping (every append fsyncs inline, under the insert lock —
+    /// the pre-group-commit write path), and `Some(us)` makes the
+    /// leader wait `us` microseconds for more writers to join before
+    /// its fsync. `batch`/`off` never group — their appends already
+    /// defer the fsync.
+    pub fn attach_wal_with(
+        &self,
+        base: &Path,
+        sync: WalSync,
+        group_window_us: Option<u64>,
+    ) -> Result<WalReport, StoreError> {
         let mut cell = self.insert_lock.lock().unwrap();
         ensure(cell.wal.is_none(), || "a WAL is already attached".to_string())?;
-        let (wal, records, open) = Wal::open(base, sync)?;
+        let (mut wal, records, open) = Wal::open(base, sync)?;
         let mut report = WalReport {
             segments: open.segments,
             truncated_bytes: open.truncated_bytes,
@@ -807,6 +868,9 @@ impl Engine {
         };
         for rec in records {
             self.apply_wal_record(rec, usize::MAX, &mut report)?;
+        }
+        if sync == WalSync::Always && group_window_us != Some(0) {
+            wal.enable_group(self.n() as u64, group_window_us.unwrap_or(0));
         }
         self.recovery.set_wal(wal.base());
         cell.wal = Some(wal);
@@ -836,6 +900,38 @@ impl Engine {
     /// serves from).
     pub fn wal_base(&self) -> Option<PathBuf> {
         self.recovery.wal_path()
+    }
+
+    /// The attached WAL's group-commit handle, if group commit is on.
+    /// Takes the insert lock only long enough to clone the `Arc`.
+    fn group_commit(&self) -> Option<Arc<wal::GroupCommit>> {
+        let cell = self.insert_lock.lock().unwrap();
+        cell.wal.as_ref().and_then(|w| w.group().cloned())
+    }
+
+    /// The durable WAL frontier `wal.fetch` must clamp to under group
+    /// commit: frames at or past it sit in the page cache awaiting the
+    /// group fsync, and that fsync can still fail (the span is then
+    /// NACKed and re-staged) — a follower must never apply a record
+    /// its primary has not yet acknowledged as durable.
+    /// `None` means no clamping (no WAL, group commit off, or a
+    /// deferred-sync policy whose contract already tolerates loss).
+    pub fn durable_frontier(&self) -> Option<WalCursor> {
+        self.group_commit().map(|g| g.durable_cursor())
+    }
+
+    /// Row count at the durability watermark: what a primary reports
+    /// to followers (`repl.status` / `wal.fetch` headers). With group
+    /// commit open groups make [`Engine::n`] run ahead of the fsynced
+    /// log; reporting the watermark instead keeps follower lag
+    /// non-negative and measured against state that survives a crash.
+    /// Without group commit the two coincide (inserts publish
+    /// `next_id` only after their durable append returns).
+    pub fn durable_n(&self) -> u64 {
+        match self.group_commit() {
+            Some(g) => g.durable_rows(),
+            None => self.n() as u64,
+        }
     }
 
     /// Applies one WAL record to the shards. Caller holds the insert
@@ -957,6 +1053,13 @@ impl Engine {
         self.mapping.as_ref().and_then(|m| m.resident_bytes())
     }
 
+    /// Bytes of `madvise` advice issued over the mapping at load time
+    /// (`MADV_RANDOM` across the file plus `MADV_WILLNEED` over the
+    /// `shard.N` index sections); `None` when loaded owned.
+    pub fn advised_bytes(&self) -> Option<usize> {
+        self.advised_bytes
+    }
+
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }
@@ -1027,17 +1130,18 @@ impl Engine {
         // Reserve the id range and enqueue on the shards under the
         // insert lock: concurrent batches must reach each shard in
         // global id order. The critical section is id assignment, the
-        // WAL append (when one is attached — durable before any shard
-        // sees the rows, so an acked write survives a crash and an
-        // unacked one is at worst a truncated tail record), plus O(n)
-        // row *moves* and the channel sends — the byte copies happened
-        // above, and ack-waiting happens after unlock.
-        let (first, outstanding) = {
+        // WAL append (when one is attached — the record lands in the
+        // log before any shard sees the rows, so the log's order equals
+        // the shards' apply order), plus O(n) row *moves* and the
+        // channel sends — the byte copies happened above, and both
+        // ack-waiting and the group-commit fsync happen after unlock.
+        let (first, outstanding, commit) = {
             let mut order = self.insert_lock.lock().unwrap();
             let cur = self.next_id.load(Ordering::SeqCst);
             let end = cur
                 .checked_add(n)
                 .ok_or_else(|| format!("id space exhausted: {cur} + {n} exceeds u32"))?;
+            let mut commit = WriteCommit::None;
             if let Some(w) = order.wal.as_mut() {
                 let mut chars = Vec::with_capacity(owned.len() * self.l);
                 for row in &owned {
@@ -1045,8 +1149,17 @@ impl Engine {
                 }
                 // On failure the ids stay unreserved and no shard has
                 // seen the batch: the write simply did not happen.
-                w.append(&WalRecord::Insert { start_id: cur, n, chars })
+                let lsn = w
+                    .append(&WalRecord::Insert { start_id: cur, n, chars })
                     .map_err(|e| format!("wal append failed, write not applied: {e}"))?;
+                commit = match w.group() {
+                    Some(g) => {
+                        g.note_rows(end as u64);
+                        WriteCommit::Group(Arc::clone(g), lsn)
+                    }
+                    None if w.sync_mode() == WalSync::Always => WriteCommit::Inline,
+                    None => WriteCommit::None,
+                };
             }
             self.next_id.store(end, Ordering::SeqCst);
             let n_shards = self.shards.len() as u32;
@@ -1071,9 +1184,11 @@ impl Engine {
                     })
                     .expect("shard worker alive");
             }
-            (cur, outstanding)
+            (cur, outstanding, commit)
         };
         drop(reply_tx);
+        // Collect shard acks *before* blocking on durability: the
+        // in-memory apply overlaps the group leader's fsync.
         let mut acked = 0usize;
         for _ in 0..outstanding {
             match reply_rx.recv() {
@@ -1092,27 +1207,77 @@ impl Engine {
             }
         }
         debug_assert_eq!(acked, rows.len());
+        // Ack on the watermark: under group commit the rows are applied
+        // in memory but the write is acknowledged only once the
+        // durable-LSN watermark covers its record. A failed group fsync
+        // reports failure here — never a false ack — while the record
+        // stays staged for the next group's retry (see
+        // `Wal::group_abort` for why erasing it would corrupt replay).
+        self.settle_commit(commit)
+            .map_err(|e| format!("wal sync failed, write not acknowledged: {e}"))?;
         self.metrics.record_inserts(rows.len());
         Ok(first..first + n)
     }
 
+    /// Finishes a write's durability contract after the shards applied
+    /// it: blocks on the group-commit watermark (possibly leading the
+    /// group's single fsync) or, on the inline `always` path, just
+    /// accounts for the fsync `Wal::append` already performed.
+    fn settle_commit(&self, commit: WriteCommit) -> Result<(), StoreError> {
+        match commit {
+            WriteCommit::None => Ok(()),
+            WriteCommit::Inline => {
+                self.metrics.record_wal_fsync(1, 1);
+                Ok(())
+            }
+            WriteCommit::Group(group, lsn) => {
+                let out = group.wait_durable(lsn, || {
+                    // A group fsync failed: re-stage the un-synced span
+                    // under the insert lock so no append lands while
+                    // the tail is being rewritten.
+                    let mut cell = self.insert_lock.lock().unwrap();
+                    if let Some(w) = cell.wal.as_mut() {
+                        w.group_abort();
+                    }
+                })?;
+                if out.fsyncs > 0 {
+                    self.metrics.record_wal_fsync(out.fsyncs, out.records);
+                }
+                Ok(())
+            }
+        }
+    }
+
     /// Deletes a global id (tombstone). Returns `true` if the id existed
-    /// and was newly deleted; repeated/unknown ids return `false`.
+    /// and was newly deleted; repeated/unknown ids return `false` — as
+    /// does a delete whose WAL record failed to become durable (the
+    /// tombstone may be applied in memory, but it was never
+    /// acknowledged and does not survive a restart).
     pub fn delete(&self, id: u32) -> bool {
         if (id as usize) >= self.n() {
             return false;
         }
         let (reply_tx, reply_rx) = channel();
-        {
+        let commit = {
             // Same write barrier as inserts: broadcast under the insert
             // lock so a concurrent `save` observes the delete on every
             // shard or on none (see [`Engine::save`]), and the WAL
             // record lands before any shard applies the tombstone.
             let mut order = self.insert_lock.lock().unwrap();
+            let mut commit = WriteCommit::None;
             if let Some(w) = order.wal.as_mut() {
-                if w.append(&WalRecord::Delete { id }).is_err() {
-                    self.metrics.errors.fetch_add(1, Ordering::Relaxed);
-                    return false;
+                match w.append(&WalRecord::Delete { id }) {
+                    Ok(lsn) => {
+                        commit = match w.group() {
+                            Some(g) => WriteCommit::Group(Arc::clone(g), lsn),
+                            None if w.sync_mode() == WalSync::Always => WriteCommit::Inline,
+                            None => WriteCommit::None,
+                        };
+                    }
+                    Err(_) => {
+                        self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        return false;
+                    }
                 }
             }
             for s in &self.shards {
@@ -1120,9 +1285,14 @@ impl Engine {
                     .send(ShardMsg::Delete { id, reply: reply_tx.clone() })
                     .expect("shard worker alive");
             }
-        }
+            commit
+        };
         drop(reply_tx);
         let deleted = reply_rx.iter().any(|d| d);
+        if self.settle_commit(commit).is_err() {
+            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
         if deleted {
             self.metrics.deletes.fetch_add(1, Ordering::Relaxed);
         }
@@ -1133,15 +1303,27 @@ impl Engine {
     /// absent legacy skips), all deltas are folded and the engine is
     /// entirely immutable — the deterministic pre-save / CI hook.
     pub fn merge(&self) -> MergeSummary {
-        {
+        let commit = {
             // Informational marker (explicit merges only — background
             // merges never touch the insert lock). Replay ignores it;
             // it exists so a log can be audited against the op history.
             let mut order = self.insert_lock.lock().unwrap();
-            if let Some(w) = order.wal.as_mut() {
-                let _ = w.append(&WalRecord::MergeMarker);
+            match order.wal.as_mut() {
+                Some(w) => match w.append(&WalRecord::MergeMarker) {
+                    Ok(lsn) => match w.group() {
+                        Some(g) => WriteCommit::Group(Arc::clone(g), lsn),
+                        None if w.sync_mode() == WalSync::Always => WriteCommit::Inline,
+                        None => WriteCommit::None,
+                    },
+                    Err(_) => WriteCommit::None,
+                },
+                None => WriteCommit::None,
             }
-        }
+        };
+        // Audit-only record: wait for the watermark (keeping the log's
+        // prompt-fsync cadence) but a failed group does not fail the
+        // merge — replay ignores markers anyway.
+        let _ = self.settle_commit(commit);
         let (reply_tx, reply_rx) = channel();
         for s in &self.shards {
             s.tx
@@ -2700,7 +2882,7 @@ mod tests {
         // Records appended after the save are exactly what a fetch from
         // the cursor returns — the replica bootstrap contract.
         assert!(e.delete(5));
-        let got = match wal::fetch_frames(&base, cur, 1 << 20).unwrap() {
+        let got = match wal::fetch_frames(&base, cur, 1 << 20, e.durable_frontier()).unwrap() {
             wal::WalFetch::Chunk(c) => wal::scan_frames(&c.frames).0,
             wal::WalFetch::Gap => panic!("cursor from save must stay fetchable"),
         };

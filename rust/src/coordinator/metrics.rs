@@ -29,6 +29,15 @@ pub struct Metrics {
     /// its queries instead of looping rebuilds; nonzero means the
     /// engine is serving degraded and needs operator attention.
     pub shards_parked: AtomicU64,
+    /// Fsync syscalls issued to cover write acknowledgements under
+    /// `--wal-sync always`: one per record on the inline path, one per
+    /// *group* under group commit. Stays 0 under `batch`/`off`, whose
+    /// acks never wait on an fsync.
+    pub wal_fsyncs: AtomicU64,
+    /// WAL records those fsyncs made durable. The ratio
+    /// `wal_group_records / wal_fsyncs` is the group-commit coalescing
+    /// factor (1.0 = no grouping happened).
+    pub wal_group_records: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
 }
@@ -50,6 +59,12 @@ impl Metrics {
     /// Records `n` rows inserted.
     pub fn record_inserts(&self, n: usize) {
         self.inserts.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Records write-path fsyncs and the WAL records they covered.
+    pub fn record_wal_fsync(&self, fsyncs: u64, records: u64) {
+        self.wal_fsyncs.fetch_add(fsyncs, Ordering::Relaxed);
+        self.wal_group_records.fetch_add(records, Ordering::Relaxed);
     }
 
     /// Approximate percentile from the histogram (upper bucket bound).
@@ -99,6 +114,11 @@ impl Metrics {
             (
                 "shards_parked",
                 Json::num(self.shards_parked.load(Ordering::Relaxed) as f64),
+            ),
+            ("wal_fsyncs", Json::num(self.wal_fsyncs.load(Ordering::Relaxed) as f64)),
+            (
+                "wal_group_records",
+                Json::num(self.wal_group_records.load(Ordering::Relaxed) as f64),
             ),
             ("mean_latency_us", Json::num(self.mean_latency_us())),
             ("p50_latency_us", Json::num(self.latency_percentile_us(50.0) as f64)),

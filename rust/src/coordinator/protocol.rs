@@ -94,12 +94,30 @@
 //! `save` rotates the log (old segments are deleted only after the
 //! snapshot durably renames into place), bounding replay time. Without
 //! `--wal`, acknowledged writes live in memory until an explicit
-//! `save`. The `stats` op reports `worker_restarts` (shards rebuilt
-//! from snapshot + log after an isolated panic), `shards_parked`
-//! (shards taken out of service after exhausting their restart budget),
-//! and, for `--mmap` engines, `mapped_bytes`/`resident_bytes`
-//! (page-cache residency of the serving snapshot; `null` when not
-//! mapped).
+//! `save`.
+//!
+//! Under `--wal-sync always`, concurrent writers *group-commit*
+//! (`--wal-group-window auto|0|USECS`, default `auto`; `0` reverts to
+//! one fsync per write): records buffer in log order, one writer fsyncs
+//! for the whole group, and every write blocks until the durability
+//! watermark covers its record — so the per-write guarantee above is
+//! unchanged, only the fsync count shrinks. A failed group fsync fails
+//! every write in the group with `wal group fsync failed; write not
+//! acknowledged`, and the failed span is re-staged for the next group's
+//! fsync so the log's id sequence stays replayable: a NACKed write may
+//! still reach disk (a false NACK, which replication and replay
+//! tolerate), but an acknowledged write is always durable. `repl.status`
+//! on a primary reports the durable watermark, not the buffered tail,
+//! and `wal.fetch` never streams past it — a follower cannot apply a
+//! record its primary has not acknowledged. The `stats` op reports
+//! `worker_restarts` (shards rebuilt from snapshot + log after an
+//! isolated panic), `shards_parked` (shards taken out of service after
+//! exhausting their restart budget), `wal_fsyncs`/`wal_group_records`
+//! (write-ack fsyncs and the records they covered; their ratio is the
+//! group-commit coalescing factor), and, for `--mmap` engines,
+//! `mapped_bytes`/`resident_bytes`/`advised_bytes` (page-cache
+//! residency of the serving snapshot and the bytes covered by `madvise`
+//! hints at load; `null` when not mapped).
 //!
 //! **Block execution.** The server's batcher groups compatible queries
 //! — same `tau` and the same mode (`search` / `count` / `topk` with the

@@ -296,7 +296,11 @@ fn stream_wal(
         return writer.write_all(b"\n");
     };
     let from = WalCursor { seq: from_seq, off: from_off };
-    match wal::fetch_frames(&base, from, max_bytes) {
+    // Serve only up to the durable frontier: under group commit the
+    // tail past it is un-fsynced and its group can still fail (NACKed
+    // and re-staged) — a follower must never apply a record its
+    // primary has not yet acknowledged as durable.
+    match wal::fetch_frames(&base, from, max_bytes, engine.durable_frontier()) {
         Err(e) => {
             engine.metrics().errors.fetch_add(1, Ordering::Relaxed);
             let reply = error_response(ErrorCode::Io, &format!("wal read failed: {e}"), v);
@@ -316,12 +320,16 @@ fn stream_wal(
             writer.write_all(b"\n")
         }
         Ok(WalFetch::Chunk(chunk)) => {
+            // Advertise the durable row count, not the buffered tail:
+            // a follower measures its lag against state that survives
+            // the primary crashing, and the gap can never go negative
+            // while a group is open.
             let header = wal_fetch_header(
                 chunk.frames.len() as u64,
                 chunk.records,
                 chunk.next.seq,
                 chunk.next.off,
-                engine.n(),
+                engine.durable_n() as usize,
                 v,
             );
             writer.write_all(header.as_bytes())?;
@@ -410,6 +418,7 @@ fn handle_conn(stream: TcpStream, ctx: ConnCtx) -> std::io::Result<()> {
                     };
                     map.insert("mapped_bytes".to_string(), gauge(engine.mapped_bytes()));
                     map.insert("resident_bytes".to_string(), gauge(engine.resident_bytes()));
+                    map.insert("advised_bytes".to_string(), gauge(engine.advised_bytes()));
                 }
                 respond(stats, v)
             }
@@ -424,7 +433,12 @@ fn handle_conn(stream: TcpStream, ctx: ConnCtx) -> std::io::Result<()> {
                         v,
                     )
                 }
-                None => repl_status_response("primary", engine.n() as u64, 0, None, v),
+                // A primary reports the durability watermark, not the
+                // buffered tail of an open commit group: `applied_id`
+                // is what followers can actually fetch, so an operator
+                // diffing primary vs follower never sees the follower
+                // "ahead" (negative lag) mid-group.
+                None => repl_status_response("primary", engine.durable_n(), 0, None, v),
             },
             Request::Shutdown => {
                 ctx.stop.store(true, Ordering::SeqCst);

@@ -4,7 +4,7 @@
 //!
 //! Every PR that touches a hot path re-runs this and commits/uploads the
 //! resulting `BENCH_*.json`, so the repo accumulates a comparable series
-//! of perf measurements (schema `bst-bench-v4`): one row per
+//! of perf measurements (schema `bst-bench-v5`): one row per
 //! `(dataset, index, tau)` with `n`, `b`, `L`, p50/p99 latency in µs and
 //! throughput in M queries/s; one `blocked-vs-serial` row per
 //! `(dataset, block width)` measuring the engine's blocked batch path
@@ -12,7 +12,12 @@
 //! width-1 Mq/s ratio is the blocking speedup); one `delta-insert`
 //! row per dataset with per-batch latency percentiles and append
 //! throughput in Mops/s (rows/µs into the engine's delta segments,
-//! auto-merge disabled); and one `cold-start` row per dataset timing
+//! auto-merge disabled); one `wal-commit` row per
+//! `(dataset, writer count, grouped)` — acknowledged writes/s through a
+//! `--wal-sync always` log at 1/8/64 concurrent writers, group commit
+//! on (auto window) vs off (inline fsync per append), with the fsync
+//! count so the coalescing factor is visible (CI asserts grouped ≥
+//! ungrouped at 8 writers); and one `cold-start` row per dataset timing
 //! `Engine::load` in both serving modes (best-of-3, page cache warmed):
 //! `owned_ms` vs `mapped_ms` wall clock plus `owned_rss_mib` /
 //! `mapped_rss_mib` — the engine's tracked assembly-time heap, the
@@ -26,6 +31,7 @@ use crate::coordinator::engine::{Engine, QueryMode, ShardIndexKind};
 use crate::data::{self, Dataset, GenConfig};
 use crate::index::{LinearScan, SearchIndex, SingleBst};
 use crate::query::{CollectIds, QueryCtx};
+use crate::store::WalSync;
 use crate::trie::bst::BstConfig;
 use crate::util::json::Json;
 use crate::util::timer::{Stats, Timer};
@@ -39,6 +45,16 @@ const BLOCK_BATCH: usize = 32;
 
 /// Block widths swept by the blocked-vs-serial rows (1 = serial).
 const BLOCK_WIDTHS: [usize; 4] = [1, 4, 8, 16];
+
+/// Concurrent writer counts swept by the wal-commit rows.
+const WAL_WRITERS: [usize; 3] = [1, 8, 64];
+
+/// Rows per acknowledged write in the wal-commit measurement.
+const WAL_COMMIT_BATCH: usize = 8;
+
+/// Acked writes each writer issues per wal-commit cell (kept small:
+/// ungrouped cells pay one fsync per write).
+const WAL_COMMIT_WRITES: usize = 8;
 
 /// Runs the experiment; returns `(markdown report, json payload)`.
 pub fn bench(opts: &EvalOpts, datasets: &[Dataset]) -> (String, Json) {
@@ -201,6 +217,94 @@ pub fn bench(opts: &EvalOpts, datasets: &[Dataset]) -> (String, Json) {
             ("mops", Json::num(mops)),
         ]));
 
+        // Group commit (PR 10): acknowledged-write throughput through a
+        // `--wal-sync always` log under concurrent writers, group
+        // window on (auto: coalesce whenever writers queue behind an
+        // in-flight fsync) vs off (every append fsyncs inline under the
+        // insert lock). The signal is the grouped/ungrouped writes-per-
+        // second ratio as writers grow — CI asserts grouped ≥ ungrouped
+        // at 8 writers — plus the recorded fsync count, which exposes
+        // the coalescing factor directly.
+        for &writers in &WAL_WRITERS {
+            for grouped in [true, false] {
+                let engine = Engine::build(set, 2, &ShardIndexKind::Bst(BstConfig::default()));
+                engine.set_merge_threshold(usize::MAX);
+                let mode = if grouped { "group" } else { "inline" };
+                let dir = std::env::temp_dir().join(format!(
+                    "bst_bench_wal_{}_{}_{writers}_{mode}",
+                    std::process::id(),
+                    ds.name(),
+                ));
+                let _ = std::fs::remove_dir_all(&dir);
+                std::fs::create_dir_all(&dir).expect("bench wal dir");
+                let window = if grouped { None } else { Some(0) };
+                engine
+                    .attach_wal_with(&dir.join("engine.wal"), WalSync::Always, window)
+                    .expect("bench wal attach");
+                let mut lat = Stats::new();
+                let t_all = Timer::start();
+                let per_thread: Vec<Vec<f64>> = std::thread::scope(|s| {
+                    let handles: Vec<_> = (0..writers)
+                        .map(|wi| {
+                            let engine = &engine;
+                            s.spawn(move || {
+                                let mut lats = Vec::with_capacity(WAL_COMMIT_WRITES);
+                                for i in 0..WAL_COMMIT_WRITES {
+                                    let off = (wi * WAL_COMMIT_WRITES + i) * WAL_COMMIT_BATCH;
+                                    let batch: Vec<Vec<u8>> = (0..WAL_COMMIT_BATCH)
+                                        .map(|j| set.row((off + j) % set.n()))
+                                        .collect();
+                                    let t = Timer::start();
+                                    engine.insert_batch(&batch).expect("bench wal insert");
+                                    lats.push(t.elapsed_us());
+                                }
+                                lats
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().expect("wal writer")).collect()
+                });
+                let total_us = t_all.elapsed_us();
+                for l in per_thread.into_iter().flatten() {
+                    lat.push(l);
+                }
+                let writes = (writers * WAL_COMMIT_WRITES) as f64;
+                let wps = if total_us > 0.0 { writes / (total_us / 1e6) } else { 0.0 };
+                let rows_inserted = writes * WAL_COMMIT_BATCH as f64;
+                let mops = if total_us > 0.0 { rows_inserted / total_us } else { 0.0 };
+                let m = engine.metrics();
+                let fsyncs = m.wal_fsyncs.load(std::sync::atomic::Ordering::Relaxed) as f64;
+                drop(engine);
+                let _ = std::fs::remove_dir_all(&dir);
+                md.push_str(&format!(
+                    "| {} | wal-commit (w={writers}, {mode}, {wps:.0} acked writes/s, \
+                     {fsyncs:.0} fsyncs) | {} | {} | {} | - | {:.2} | {:.2} | - | {mops:.3} |\n",
+                    ds.name(),
+                    set.n(),
+                    set.b(),
+                    set.l(),
+                    lat.p50(),
+                    lat.p99(),
+                ));
+                rows.push(Json::obj(vec![
+                    ("dataset", Json::str(ds.name())),
+                    ("index", Json::str("wal-commit")),
+                    ("writers", Json::num(writers as f64)),
+                    ("grouped", Json::Bool(grouped)),
+                    ("batch", Json::num(WAL_COMMIT_BATCH as f64)),
+                    ("writes", Json::num(writes)),
+                    ("b", Json::num(set.b() as f64)),
+                    ("l", Json::num(set.l() as f64)),
+                    ("p50_us", Json::num(lat.p50())),
+                    ("p99_us", Json::num(lat.p99())),
+                    ("mean_us", Json::num(lat.mean())),
+                    ("writes_per_s", Json::num(wps)),
+                    ("mops", Json::num(mops)),
+                    ("fsyncs", Json::num(fsyncs)),
+                ]));
+            }
+        }
+
         // Cold start: save a snapshot and time both serving load modes.
         // The mapped load parses and validates the same bytes but skips
         // every payload-sized copy; CI asserts mapped <= owned. Each
@@ -252,7 +356,7 @@ pub fn bench(opts: &EvalOpts, datasets: &[Dataset]) -> (String, Json) {
     }
 
     let payload = Json::obj(vec![
-        ("schema", Json::str("bst-bench-v4")),
+        ("schema", Json::str("bst-bench-v5")),
         (
             "config",
             Json::obj(vec![
@@ -276,12 +380,13 @@ mod tests {
         let (md, payload) = bench(&opts, &[Dataset::Review]);
         assert!(md.contains("si-bst") && md.contains("linear") && md.contains("delta-insert"));
         assert!(md.contains("blocked-vs-serial"));
+        assert!(md.contains("wal-commit"));
         assert!(md.contains("cold-start"));
         let rows = payload.get("rows").and_then(|r| r.as_arr()).unwrap();
         assert_eq!(
             rows.len(),
-            2 * 3 + BLOCK_WIDTHS.len() + 1 + 1,
-            "2 indexes x 3 taus + blocked widths + insert row + cold-start row"
+            2 * 3 + BLOCK_WIDTHS.len() + 1 + WAL_WRITERS.len() * 2 + 1,
+            "2 indexes x 3 taus + blocked widths + insert row + wal-commit cells + cold-start row"
         );
         for row in rows {
             if row.get("index").and_then(Json::as_str) == Some("cold-start") {
@@ -319,6 +424,24 @@ mod tests {
         assert_eq!(insert_rows.len(), 1);
         assert!(insert_rows[0].get("mops").and_then(Json::as_f64).unwrap() > 0.0);
         assert!(insert_rows[0].get("n").and_then(Json::as_f64).unwrap() > 0.0);
+        let wal_rows: Vec<&Json> = rows
+            .iter()
+            .filter(|r| r.get("index").and_then(Json::as_str) == Some("wal-commit"))
+            .collect();
+        assert_eq!(wal_rows.len(), WAL_WRITERS.len() * 2, "writer counts x (group, inline)");
+        for row in &wal_rows {
+            let writers = row.get("writers").and_then(Json::as_f64).unwrap();
+            assert!(WAL_WRITERS.contains(&(writers as usize)));
+            assert!(row.get("grouped").and_then(Json::as_bool).is_some());
+            assert!(row.get("writes_per_s").and_then(Json::as_f64).unwrap() > 0.0);
+            let fsyncs = row.get("fsyncs").and_then(Json::as_f64).unwrap();
+            let writes = row.get("writes").and_then(Json::as_f64).unwrap();
+            assert!(fsyncs >= 1.0 && fsyncs <= writes, "fsyncs {fsyncs} vs writes {writes}");
+            if row.get("grouped").and_then(Json::as_bool) == Some(false) {
+                // Inline mode accounts exactly one fsync per acked write.
+                assert_eq!(fsyncs, writes, "inline fsync accounting");
+            }
+        }
         let cold_rows: Vec<&Json> = rows
             .iter()
             .filter(|r| r.get("index").and_then(Json::as_str) == Some("cold-start"))
@@ -335,7 +458,7 @@ mod tests {
         );
         assert_eq!(
             payload.get("schema").and_then(Json::as_str),
-            Some("bst-bench-v4")
+            Some("bst-bench-v5")
         );
     }
 }

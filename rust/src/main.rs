@@ -102,6 +102,14 @@ USAGE:
                        appends; `always` — the default — survives kill -9
                        and power loss, `batch` syncs once per batch,
                        `off` leaves durability to the page cache)
+                      [--wal-group-window auto|0|USECS] (group commit
+                       under `always`: concurrent writers share one
+                       fsync and ack on a durability watermark. `auto`
+                       — the default — coalesces whenever writers queue
+                       behind an in-flight fsync; a microsecond value
+                       makes the group leader wait that long for more
+                       writers; `0` disables grouping, restoring the
+                       fsync-per-record path)
                       [--max-request-bytes N] (largest accepted request
                        line, default 16777216; longer lines get an error
                        reply and the connection keeps serving)
@@ -562,6 +570,16 @@ fn cmd_serve(args: &Args) -> i32 {
         eprintln!("--wal-sync must be always|batch|off");
         return 2;
     };
+    let wal_group_window = match args.get_or("wal-group-window", "auto") {
+        "auto" => None,
+        v => match v.parse::<u64>() {
+            Ok(us) => Some(us),
+            Err(_) => {
+                eprintln!("--wal-group-window must be `auto`, `0` (off) or microseconds");
+                return 2;
+            }
+        },
+    };
     let serve_cfg = ServeConfig {
         addr: args.get_or("addr", "127.0.0.1:7878").to_string(),
         shards: args.get_usize("shards", 4),
@@ -574,6 +592,7 @@ fn cmd_serve(args: &Args) -> i32 {
         mmap: args.has("mmap"),
         wal: args.get("wal").map(std::path::PathBuf::from),
         wal_sync,
+        wal_group_window,
         max_request_bytes: args.get_usize("max-request-bytes", 16 << 20),
         follow: args.get("follow").map(|s| s.to_string()),
         follow_poll_ms: args.get_u64("follow-poll-ms", 200),
@@ -682,12 +701,18 @@ fn cmd_serve(args: &Args) -> i32 {
     // crashed run replay into the engine first, so the very first
     // connection already sees every write that was ever acknowledged.
     if let Some(wal) = serve_cfg.wal.clone() {
-        match engine.attach_wal(&wal, serve_cfg.wal_sync) {
+        match engine.attach_wal_with(&wal, serve_cfg.wal_sync, serve_cfg.wal_group_window) {
             Ok(rep) => eprintln!(
-                "wal {} attached (sync={}): {} segment(s), replayed {} insert + {} delete \
-                 record(s), skipped {}, truncated {} torn byte(s)",
+                "wal {} attached (sync={}, group={}): {} segment(s), replayed {} insert + {} \
+                 delete record(s), skipped {}, truncated {} torn byte(s)",
                 wal.display(),
                 serve_cfg.wal_sync.as_str(),
+                match (serve_cfg.wal_sync, serve_cfg.wal_group_window) {
+                    (bst::store::WalSync::Always, None) => "auto".to_string(),
+                    (bst::store::WalSync::Always, Some(0)) => "off".to_string(),
+                    (bst::store::WalSync::Always, Some(us)) => format!("{us}us"),
+                    _ => "n/a".to_string(),
+                },
                 rep.segments,
                 rep.replayed_inserts,
                 rep.replayed_deletes,

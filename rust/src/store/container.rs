@@ -437,6 +437,14 @@ impl Snapshot {
         self.sections.iter().any(|(n, _, _)| n == name)
     }
 
+    /// Byte ranges of all sections as `(name, file_offset, len)`, in
+    /// file order. Offsets address the whole file (header included), so
+    /// a mapped caller can aim page-level advice (`madvise`) at
+    /// individual sections without parsing them.
+    pub fn section_ranges(&self) -> impl Iterator<Item = (&str, usize, usize)> {
+        self.sections.iter().map(|(n, off, len)| (n.as_str(), *off, *len))
+    }
+
     /// A checked reader over the named section's payload. The reader is
     /// format-aware (v3 payload interiors are aligned, older ones are
     /// not) and, on a mapped snapshot, carries the backing region so

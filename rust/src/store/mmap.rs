@@ -4,8 +4,9 @@
 //! maps the snapshot file instead of reading it into an owned buffer, so
 //! immutable section payloads can be served straight from the page cache.
 //! Rust's standard library has no mmap wrapper and this repo takes no
-//! external dependencies, so the two needed libc entry points (`mmap` /
-//! `munmap`) are declared here directly over [`File::as_raw_fd`].
+//! external dependencies, so the needed libc entry points (`mmap`,
+//! `munmap`, `madvise`, `mincore`) are declared here directly over
+//! [`File::as_raw_fd`].
 //!
 //! Scope is deliberately tiny: whole-file, `PROT_READ`, `MAP_PRIVATE`
 //! (read-only — a private mapping of an immutable snapshot never faults
@@ -21,6 +22,10 @@ mod sys {
     pub const PROT_READ: c_int = 1;
     pub const MAP_PRIVATE: c_int = 2;
     pub const MAP_FAILED: *mut c_void = !0usize as *mut c_void;
+    // madvise advice values. These are identical on Linux and the BSDs
+    // (including macOS), the only unix targets this crate maps on.
+    pub const MADV_RANDOM: c_int = 1;
+    pub const MADV_WILLNEED: c_int = 3;
 
     extern "C" {
         pub fn mmap(
@@ -32,6 +37,7 @@ mod sys {
             offset: i64,
         ) -> *mut c_void;
         pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
         // `vec` is `unsigned char*` on Linux and `char*` on the BSDs;
         // `*mut u8` is layout-compatible with both.
         pub fn mincore(addr: *mut c_void, len: usize, vec: *mut u8) -> c_int;
@@ -150,6 +156,74 @@ impl Mmap {
             None
         }
     }
+
+    /// Advises the kernel the whole mapping will be accessed randomly
+    /// (`MADV_RANDOM`), disabling readahead — trie descent and plane-word
+    /// probes touch scattered pages, and sequential readahead on a large
+    /// snapshot only evicts hotter pages. Returns the number of bytes the
+    /// advice covered, `None` when the platform has no `madvise` or the
+    /// call fails (advice is best-effort; the mapping still works).
+    pub fn advise_random(&self) -> Option<usize> {
+        #[cfg(unix)]
+        {
+            if self.len == 0 {
+                return Some(0);
+            }
+            // Safety: `ptr` is a live page-aligned mapping of `len` bytes.
+            let rc = unsafe {
+                sys::madvise(self.ptr as *mut std::os::raw::c_void, self.len, sys::MADV_RANDOM)
+            };
+            if rc == 0 {
+                Some(self.len)
+            } else {
+                None
+            }
+        }
+        #[cfg(not(unix))]
+        {
+            None
+        }
+    }
+
+    /// Advises the kernel to pre-fault `[offset, offset + len)` of the
+    /// mapping (`MADV_WILLNEED`) — used to pre-touch the plane-word
+    /// sections of a freshly mapped snapshot so the first queries do not
+    /// eat a cold-page fault per probe. The range is widened down to a
+    /// page boundary (the mapping base is page-aligned, so any in-range
+    /// page start is too) and clamped to the mapping. Returns the number
+    /// of bytes covered, `None` when unsupported or the call fails.
+    pub fn advise_willneed(&self, offset: usize, len: usize) -> Option<usize> {
+        #[cfg(unix)]
+        {
+            if offset >= self.len || len == 0 {
+                return Some(0);
+            }
+            let page = unsafe { sys::getpagesize() };
+            let page = usize::try_from(page).ok().filter(|&p| p > 0)?;
+            let start = (offset / page) * page;
+            let end = offset.saturating_add(len).min(self.len);
+            let span = end - start;
+            // Safety: `ptr + start` is page-aligned inside a live mapping
+            // and `span` bytes stay within it.
+            let rc = unsafe {
+                sys::madvise(
+                    self.ptr.add(start) as *mut std::os::raw::c_void,
+                    span,
+                    sys::MADV_WILLNEED,
+                )
+            };
+            if rc == 0 {
+                Some(span)
+            } else {
+                None
+            }
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = (offset, len);
+            None
+        }
+    }
 }
 
 impl Drop for Mmap {
@@ -213,6 +287,27 @@ mod tests {
             assert!(r <= m.len());
             assert!(r > 0, "just-touched mapping reports zero resident bytes");
         }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn advice_covers_the_requested_ranges() {
+        let data = vec![9u8; 4096 * 4 + 100];
+        let path = tmp("advice.bin", &data);
+        let m = Mmap::map(&std::fs::File::open(&path).unwrap()).unwrap();
+        if let Some(n) = m.advise_random() {
+            assert_eq!(n, m.len());
+        }
+        // Mid-mapping range is widened down to a page boundary and
+        // clamped to the mapping's end.
+        if let Some(n) = m.advise_willneed(4100, 4096) {
+            assert!(n >= 4096, "willneed span too small: {n}");
+            assert!(n <= m.len());
+        }
+        // Degenerate ranges are a zero-byte no-op, not an error.
+        assert_eq!(m.advise_willneed(m.len(), 1), Some(0));
+        assert_eq!(m.advise_willneed(0, 0), Some(0));
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -42,7 +42,7 @@ pub use container::{
     FORMAT_VERSION_V2, MAGIC,
 };
 pub use mmap::Mmap;
-pub use wal::{Wal, WalCursor, WalRecord, WalSync};
+pub use wal::{GroupCommit, GroupOutcome, Wal, WalCursor, WalRecord, WalSync};
 
 use std::fmt;
 

@@ -53,6 +53,27 @@
 //!   written bytes).
 //! * [`WalSync::Off`] — never fsync: same process-kill guarantee as
 //!   `Batch`, no protection against OS/power failure.
+//!
+//! ## Group commit
+//!
+//! Under `always`, fsyncing inside the insert lock serializes N
+//! concurrent writers behind N fsyncs. [`Wal::enable_group`] moves the
+//! fsync out of the lock: an append assigns a monotone LSN and buffers
+//! its frame (page cache only), and the writer then blocks on
+//! [`GroupCommit::wait_durable`] — the first writer to arrive while no
+//! fsync is in flight becomes the group leader, fsyncs once for every
+//! record appended so far, and publishes a durable-LSN watermark that
+//! releases every writer at or below it. K writes landing in one
+//! window cost one fsync instead of K, and `always` still means
+//! "acknowledged ⇒ survives kill -9": nothing is acknowledged before
+//! the watermark covers it. A failed group fsync fails every write in
+//! the group — no false acks — while the buffered span is re-staged
+//! for the next group's fsync ([`Wal::group_abort`]): the records' ids
+//! are already woven into the engine's id sequence, so keeping them is
+//! what keeps the log replayable (a retried write that later reaches
+//! disk is at worst a false NACK). [`Wal::rotate_begin`] drains the
+//! in-flight group before switching segments, so a snapshot's rotation
+//! fence sees a fully durable log.
 
 use super::container::checksum;
 use super::sync_parent_dir as sync_dir;
@@ -61,6 +82,7 @@ use crate::util::failpoint;
 use std::fs::{File, OpenOptions};
 use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Fsync cadence under [`WalSync::Batch`]: bytes written since the last
 /// sync before the next append forces one.
@@ -195,7 +217,11 @@ pub struct Wal {
     /// `base` as a display string — the failpoint context, so tests
     /// scope injected faults to their own log.
     ctx: String,
-    file: File,
+    /// Shared so the group-commit leader can fsync outside the insert
+    /// lock; writes go through `&File` (the file is opened `O_APPEND`,
+    /// so every write lands atomically at the end regardless of which
+    /// handle clone issued it).
+    file: Arc<File>,
     /// Sequence number of the segment receiving appends.
     seq: u64,
     /// Valid length of the current segment.
@@ -206,6 +232,12 @@ pub struct Wal {
     /// Set when a failed append could not erase its partial bytes: the
     /// tail is untrustworthy, so every further append is refused.
     broken: bool,
+    /// LSN the next append takes. Monotone from 1 and never reused —
+    /// a failed LSN must never compare equal to a later durable one.
+    next_lsn: u64,
+    /// Group-commit state once [`Wal::enable_group`] ran: appends then
+    /// buffer and the fsync moves to [`GroupCommit::wait_durable`].
+    group: Option<Arc<GroupCommit>>,
 }
 
 impl Wal {
@@ -249,12 +281,14 @@ impl Wal {
         let wal = Wal {
             base: base.to_path_buf(),
             ctx: base.to_string_lossy().into_owned(),
-            file,
+            file: Arc::new(file),
             seq,
             len: last_valid,
             sync,
             pending: 0,
             broken: false,
+            next_lsn: 1,
+            group: None,
         };
         Ok((wal, records, report))
     }
@@ -264,11 +298,14 @@ impl Wal {
         &self.base
     }
 
-    /// Appends one record, durable per the sync policy, before the
-    /// caller acknowledges the write. On `Err` the record is guaranteed
-    /// *not* to be replayed later: partial bytes are erased, or the log
-    /// is poisoned so no later record can land after a torn one.
-    pub fn append(&mut self, rec: &WalRecord) -> Result<(), StoreError> {
+    /// Appends one record and returns its LSN. Without group commit
+    /// the record is durable per the sync policy on return; with it
+    /// ([`Wal::enable_group`]) the frame is buffered and the caller
+    /// must block on [`GroupCommit::wait_durable`] before
+    /// acknowledging. On `Err` the record is guaranteed *not* to be
+    /// replayed later: partial bytes are erased, or the log is
+    /// poisoned so no later record can land after a torn one.
+    pub fn append(&mut self, rec: &WalRecord) -> Result<u64, StoreError> {
         if self.broken {
             return Err(StoreError::corrupt(
                 "wal is poisoned after a failed append; restart to recover".into(),
@@ -284,16 +321,29 @@ impl Wal {
             failpoint::check("wal.append.short", &self.ctx)
         {
             let k = k.min(frame.len());
-            let _ = self.file.write_all(&frame[..k]);
+            let _ = (&*self.file).write_all(&frame[..k]);
             let _ = self.file.sync_data();
             self.broken = true;
             return Err(StoreError::Io(failpoint::io_error("wal.append.short")));
         }
 
-        match self.write_durable(&frame) {
+        let res = match &self.group {
+            // Group mode: write through to the page cache only — the
+            // group leader's single fsync covers this record.
+            Some(_) => (&*self.file).write_all(&frame).map_err(StoreError::from),
+            None => self.write_durable(&frame),
+        };
+        match res {
             Ok(()) => {
                 self.len += frame.len() as u64;
-                Ok(())
+                let lsn = self.next_lsn;
+                self.next_lsn += 1;
+                if let Some(group) = &self.group {
+                    let mut g = group.m.lock().unwrap();
+                    g.tail_lsn = lsn;
+                    g.tail_len = self.len;
+                }
+                Ok(lsn)
             }
             Err(e) => {
                 // Erase whatever partially landed so the *next* append
@@ -309,7 +359,7 @@ impl Wal {
     }
 
     fn write_durable(&mut self, frame: &[u8]) -> Result<(), StoreError> {
-        self.file.write_all(frame)?;
+        (&*self.file).write_all(frame)?;
         if failpoint::check("wal.sync", &self.ctx) == Some(failpoint::Action::Error) {
             return Err(StoreError::Io(failpoint::io_error("wal.sync")));
         }
@@ -327,6 +377,101 @@ impl Wal {
         Ok(())
     }
 
+    /// Switches appends to group commit: frames buffer in the page
+    /// cache and durability moves to the returned [`GroupCommit`]'s
+    /// watermark protocol. `rows` seeds the durable row count (the
+    /// engine's size after replay); `window_us` is the extra wait the
+    /// group leader spends letting more writers join before its fsync
+    /// (0 = fsync immediately). Only meaningful under
+    /// [`WalSync::Always`] — the other policies already defer.
+    pub fn enable_group(&mut self, rows: u64, window_us: u64) -> Arc<GroupCommit> {
+        let group = Arc::new(GroupCommit {
+            m: Mutex::new(GroupInner {
+                file: Some(Arc::clone(&self.file)),
+                seq: self.seq,
+                tail_lsn: 0,
+                tail_len: self.len,
+                tail_n: rows,
+                durable_lsn: 0,
+                durable_len: self.len,
+                durable_n: rows,
+                syncing: false,
+                failed_hi: 0,
+            }),
+            cv: Condvar::new(),
+            ctx: self.ctx.clone(),
+            window_us,
+        });
+        self.group = Some(Arc::clone(&group));
+        group
+    }
+
+    /// The group-commit handle, when [`Wal::enable_group`] ran.
+    pub fn group(&self) -> Option<&Arc<GroupCommit>> {
+        self.group.as_ref()
+    }
+
+    /// The configured sync policy.
+    pub fn sync_mode(&self) -> WalSync {
+        self.sync
+    }
+
+    /// Handles a failed group fsync. The buffered bytes past the
+    /// durable frontier are *kept*, not discarded: the records' ids are
+    /// already woven into the engine's id sequence, and erasing them
+    /// would leave a gap that makes every later record unreplayable. A
+    /// failed fsync leaves their page-cache state undefined (Linux can
+    /// mark the pages clean without them reaching disk), so the span is
+    /// read back, truncated off, and rewritten — freshly dirtied pages
+    /// the *next* group's fsync retries. The failed LSNs are marked so
+    /// their waiters error now instead of hanging; if a retry later
+    /// succeeds those records become durable after all, which is at
+    /// worst a false NACK — never a false ack. If the bytes cannot be
+    /// read back or rewritten, the tail is erased to the durable
+    /// frontier and the log refuses further appends (`broken`) — a
+    /// clean durable prefix beats an appendable log with an id gap.
+    /// Must run under the insert lock — it rewrites the append tail.
+    /// If a rotation already drained the group this is a
+    /// wake-up-only no-op.
+    pub fn group_abort(&mut self) {
+        let Some(group) = self.group.clone() else { return };
+        let mut g = group.m.lock().unwrap();
+        if g.tail_lsn > g.durable_lsn {
+            g.failed_hi = g.tail_lsn;
+            if !self.requeue_tail(g.durable_len, g.tail_len) {
+                let _ = self.file.set_len(g.durable_len);
+                self.broken = true;
+                self.len = g.durable_len;
+                g.tail_len = g.durable_len;
+                g.tail_n = g.durable_n;
+            }
+        }
+        g.syncing = false;
+        group.cv.notify_all();
+    }
+
+    /// Re-stages `[from, to)` of the current segment for the next
+    /// fsync: reads the span back, truncates it off, and appends the
+    /// identical bytes (`O_APPEND` — they land exactly at `from`), so
+    /// the kernel sees freshly dirtied pages rather than pages a
+    /// failed fsync may have marked clean. Returns `false` when any
+    /// step fails and the tail must be erased instead.
+    fn requeue_tail(&mut self, from: u64, to: u64) -> bool {
+        use std::io::{Read, Seek, SeekFrom};
+        let Ok(len) = usize::try_from(to.saturating_sub(from)) else {
+            return false;
+        };
+        let mut buf = vec![0u8; len];
+        let mut f = &*self.file;
+        if f.seek(SeekFrom::Start(from)).is_err() || f.read_exact(&mut buf).is_err() {
+            return false;
+        }
+        if self.file.set_len(from).is_err() {
+            return false;
+        }
+        f.write_all(&buf).is_ok()
+    }
+
     /// Forces any deferred fsync ([`WalSync::Batch`]) to disk now.
     pub fn sync(&mut self) -> Result<(), StoreError> {
         if self.pending > 0 {
@@ -339,20 +484,39 @@ impl Wal {
     /// Opens the next segment; subsequent appends go there. Called
     /// under the insert lock *before* a snapshot is written, so every
     /// record covering post-snapshot writes lives in the new segment.
-    /// Old segments stay on disk until [`Wal::rotate_commit`].
+    /// Old segments stay on disk until [`Wal::rotate_commit`]. With
+    /// group commit this is the rotation fence: the in-flight group is
+    /// drained (one unconditional fsync) and published durable before
+    /// the segment switch, so the snapshot never covers un-synced
+    /// records and the new segment starts with nothing pending.
     pub fn rotate_begin(&mut self) -> Result<(), StoreError> {
-        self.sync()?;
+        match &self.group {
+            Some(_) => self.file.sync_data()?,
+            None => self.sync()?,
+        }
         let seq = self.seq + 1;
-        let file = OpenOptions::new()
-            .append(true)
-            .create(true)
-            .open(segment_path(&self.base, seq))?;
+        let file = Arc::new(
+            OpenOptions::new()
+                .append(true)
+                .create(true)
+                .open(segment_path(&self.base, seq))?,
+        );
         sync_dir(&self.base)?;
-        self.file = file;
+        self.file = Arc::clone(&file);
         self.seq = seq;
         self.len = 0;
         self.pending = 0;
         self.broken = false;
+        if let Some(group) = &self.group {
+            let mut g = group.m.lock().unwrap();
+            g.durable_lsn = g.tail_lsn;
+            g.durable_n = g.tail_n;
+            g.file = Some(file);
+            g.seq = seq;
+            g.tail_len = 0;
+            g.durable_len = 0;
+            group.cv.notify_all();
+        }
         Ok(())
     }
 
@@ -381,6 +545,166 @@ impl Wal {
     /// exact position its snapshot covers.
     pub fn cursor(&self) -> WalCursor {
         WalCursor { seq: self.seq, off: self.len }
+    }
+}
+
+/// What one [`GroupCommit::wait_durable`] call did on behalf of the
+/// group: zeros for a pure waiter, the group totals for the leader.
+/// The engine feeds these to the `wal_fsyncs` / `wal_group_records`
+/// counters, making the coalescing ratio observable in `stats`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GroupOutcome {
+    /// Fsync syscalls this call issued (1 when it led a group).
+    pub fsyncs: u64,
+    /// Records that fsync made durable — the whole group's, not just
+    /// the caller's own.
+    pub records: u64,
+}
+
+/// Shared group-commit state: the durability watermark writers block
+/// on, plus leader election. Appends advance the tail under the insert
+/// lock; [`GroupCommit::wait_durable`] elects the first blocked writer
+/// as leader, fsyncs once for everything appended so far, and wakes
+/// the rest.
+pub struct GroupCommit {
+    m: Mutex<GroupInner>,
+    cv: Condvar,
+    /// Failpoint context (the wal base path) so tests scope injected
+    /// `wal.sync` faults to their own log.
+    ctx: String,
+    /// Extra microseconds the leader waits before fsyncing, letting
+    /// more writers join the group (0 = fsync immediately).
+    window_us: u64,
+}
+
+struct GroupInner {
+    /// Handle to the segment holding un-synced appends.
+    file: Option<Arc<File>>,
+    /// Segment seq of `file` — the publish epoch guard: a leader fsync
+    /// that raced a rotation must not clobber the new segment's state.
+    seq: u64,
+    /// Highest LSN appended.
+    tail_lsn: u64,
+    /// Appended byte length of the current segment.
+    tail_len: u64,
+    /// Engine row count as of the latest appended insert.
+    tail_n: u64,
+    /// Highest LSN known durable — the watermark writers ack on.
+    durable_lsn: u64,
+    /// Durable byte length of the current segment: the frontier
+    /// replication fetches are clamped to, because anything past it is
+    /// page-cache-only and a group abort could still erase it.
+    durable_len: u64,
+    /// Engine row count as of the durable watermark.
+    durable_n: u64,
+    /// A leader is currently fsyncing outside the lock.
+    syncing: bool,
+    /// High end of the LSN range hit by failed group fsyncs: an
+    /// `lsn <= failed_hi` that is not durable yet must error instead
+    /// of waiting (its writer is told the write did not commit). The
+    /// bytes stay staged for retry, so a later successful group can
+    /// still carry such an LSN past the watermark — at that point it
+    /// is simply durable (a false NACK already went out, never a
+    /// false ack).
+    failed_hi: u64,
+}
+
+impl GroupCommit {
+    /// Blocks until `lsn` is durable (`Ok`) or its group's fsync
+    /// failed (`Err`). The first caller to arrive while no fsync is in
+    /// flight becomes the leader: it sleeps the group window, fsyncs
+    /// once for every record appended so far, and publishes the
+    /// watermark. On fsync failure the leader invokes `abort`, which
+    /// must take the insert lock and call [`Wal::group_abort`] so the
+    /// failed span is re-staged (or erased and the log poisoned)
+    /// before any further append lands.
+    pub fn wait_durable(
+        &self,
+        lsn: u64,
+        abort: impl FnOnce(),
+    ) -> Result<GroupOutcome, StoreError> {
+        let mut outcome = GroupOutcome::default();
+        let mut g = self.m.lock().unwrap();
+        loop {
+            if g.failed_hi >= lsn && g.durable_lsn < lsn {
+                return Err(StoreError::Io(std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    "wal group fsync failed; write not acknowledged",
+                )));
+            }
+            if g.durable_lsn >= lsn {
+                return Ok(outcome);
+            }
+            if g.syncing {
+                g = self.cv.wait(g).unwrap();
+                continue;
+            }
+            // Leader: fsync everything appended so far, outside both
+            // locks so new appends keep landing meanwhile.
+            g.syncing = true;
+            drop(g);
+            if self.window_us > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(self.window_us));
+            }
+            let (file, up_to, up_len, up_n, epoch) = {
+                let s = self.m.lock().unwrap();
+                (s.file.clone(), s.tail_lsn, s.tail_len, s.tail_n, s.seq)
+            };
+            let synced =
+                if failpoint::check("wal.sync", &self.ctx) == Some(failpoint::Action::Error) {
+                    Err(StoreError::Io(failpoint::io_error("wal.sync")))
+                } else {
+                    match &file {
+                        Some(f) => f.sync_data().map_err(StoreError::from),
+                        None => Ok(()),
+                    }
+                };
+            match synced {
+                Ok(()) => {
+                    g = self.m.lock().unwrap();
+                    // Publish, unless a rotation switched segments
+                    // mid-fsync — its drain already covered us.
+                    if g.seq == epoch && g.durable_lsn < up_to {
+                        outcome.fsyncs += 1;
+                        outcome.records += up_to - g.durable_lsn;
+                        g.durable_lsn = up_to;
+                        g.durable_len = up_len;
+                        g.durable_n = up_n;
+                    }
+                    g.syncing = false;
+                    self.cv.notify_all();
+                    // Loop: the watermark now covers our own lsn
+                    // (directly, or via the rotation that drained it).
+                }
+                Err(e) => {
+                    abort();
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    /// Records the engine row count the latest append brought the log
+    /// to; published to [`GroupCommit::durable_rows`] when that
+    /// append's group commits. Called under the insert lock.
+    pub fn note_rows(&self, n: u64) {
+        self.m.lock().unwrap().tail_n = n;
+    }
+
+    /// The durable frontier: replication fetches must not serve bytes
+    /// at or past this cursor — they are page-cache-only and not yet
+    /// acknowledged to any writer (a failed group fsync NACKs them,
+    /// and the poison fallback of [`Wal::group_abort`] may erase them).
+    pub fn durable_cursor(&self) -> WalCursor {
+        let g = self.m.lock().unwrap();
+        WalCursor { seq: g.seq, off: g.durable_len }
+    }
+
+    /// Engine row count at the durable watermark — what a primary
+    /// reports as applied so follower lag is measured against fsynced
+    /// state, not the buffered tail of an open group.
+    pub fn durable_rows(&self) -> u64 {
+        self.m.lock().unwrap().durable_n
     }
 }
 
@@ -423,10 +747,18 @@ pub enum WalFetch {
 /// record cannot wedge a small budget). Never writes; safe to run
 /// concurrently with an appender — the scan stops at the last complete
 /// frame, which only ever moves forward.
+///
+/// `limit` is the durable frontier under group commit: bytes at or
+/// past it are complete frames in the page cache whose fsync has not
+/// happened yet, so a group abort could still erase them — serving
+/// them would let a follower apply a record the primary later rolls
+/// back. `None` serves to the last complete frame (no group commit:
+/// appends are durable, or the sync policy already tolerates loss).
 pub fn fetch_frames(
     base: &Path,
     from: WalCursor,
     max_bytes: usize,
+    limit: Option<WalCursor>,
 ) -> Result<WalFetch, StoreError> {
     let seqs = list_segments(base)?;
     if seqs.is_empty() {
@@ -445,8 +777,16 @@ pub fn fetch_frames(
     let mut records = 0usize;
     let mut next = from;
     for (i, &seq) in seqs[start..].iter().enumerate() {
+        if limit.is_some_and(|l| seq > l.seq) {
+            break; // entirely past the durable frontier
+        }
         let bytes = std::fs::read(segment_path(base, seq))?;
-        let (_, valid) = scan_segment(&bytes);
+        let (_, mut valid) = scan_segment(&bytes);
+        let clamped = limit.filter(|l| l.seq == seq);
+        if let Some(l) = clamped {
+            // Both bounds are frame boundaries, so the min is too.
+            valid = valid.min(l.off as usize);
+        }
         let off = if i == 0 { from.off as usize } else { 0 };
         if off > valid {
             return Ok(WalFetch::Gap);
@@ -464,6 +804,9 @@ pub fn fetch_frames(
         next = WalCursor { seq, off: (off + consumed) as u64 };
         if consumed < region.len() {
             break; // budget exhausted mid-segment
+        }
+        if clamped.is_some() {
+            break; // drained to the durable frontier — don't cross it
         }
         match seqs.get(start + i + 1) {
             // This segment is drained and a newer one exists: the next
@@ -793,7 +1136,7 @@ mod tests {
         wal.append(&WalRecord::Delete { id: 2 }).unwrap();
         wal.rotate_begin().unwrap();
         wal.append(&WalRecord::Delete { id: 3 }).unwrap();
-        let c = chunk(fetch_frames(&base, WalCursor::default(), 1 << 20).unwrap());
+        let c = chunk(fetch_frames(&base, WalCursor::default(), 1 << 20, None).unwrap());
         assert_eq!(c.records, 3);
         let (recs, used) = scan_frames(&c.frames);
         assert_eq!(used, c.frames.len(), "fetched bytes are whole frames");
@@ -807,7 +1150,7 @@ mod tests {
         );
         assert_eq!(c.next, wal.cursor(), "drained to the write frontier");
         // Re-fetching from the frontier: caught up, cursor unchanged.
-        let c2 = chunk(fetch_frames(&base, c.next, 1 << 20).unwrap());
+        let c2 = chunk(fetch_frames(&base, c.next, 1 << 20, None).unwrap());
         assert!(c2.frames.is_empty());
         assert_eq!(c2.next, c.next);
         cleanup(&base);
@@ -825,13 +1168,13 @@ mod tests {
         let mut cur = WalCursor::default();
         let mut got = Vec::new();
         for _ in 0..sample_records().len() {
-            let c = chunk(fetch_frames(&base, cur, 1).unwrap());
+            let c = chunk(fetch_frames(&base, cur, 1, None).unwrap());
             assert_eq!(c.records, 1, "take_one forces exactly one frame");
             got.extend(scan_frames(&c.frames).0);
             cur = c.next;
         }
         assert_eq!(got, sample_records());
-        assert!(chunk(fetch_frames(&base, cur, 1).unwrap()).frames.is_empty());
+        assert!(chunk(fetch_frames(&base, cur, 1, None).unwrap()).frames.is_empty());
         cleanup(&base);
     }
 
@@ -844,21 +1187,21 @@ mod tests {
         wal.append(&WalRecord::Delete { id: 2 }).unwrap();
         wal.rotate_commit().unwrap(); // segment 0 is gone
         assert!(matches!(
-            fetch_frames(&base, WalCursor { seq: 0, off: 0 }, 1 << 20).unwrap(),
+            fetch_frames(&base, WalCursor { seq: 0, off: 0 }, 1 << 20, None).unwrap(),
             WalFetch::Gap
         ));
         // Offset inside a frame: checksum can't line up → gap.
         assert!(matches!(
-            fetch_frames(&base, WalCursor { seq: 1, off: 1 }, 1 << 20).unwrap(),
+            fetch_frames(&base, WalCursor { seq: 1, off: 1 }, 1 << 20, None).unwrap(),
             WalFetch::Gap
         ));
         // Offset past the valid tail → gap.
         assert!(matches!(
-            fetch_frames(&base, WalCursor { seq: 1, off: 1 << 40 }, 1 << 20).unwrap(),
+            fetch_frames(&base, WalCursor { seq: 1, off: 1 << 40 }, 1 << 20, None).unwrap(),
             WalFetch::Gap
         ));
         // The surviving segment reads fine from its start.
-        let c = chunk(fetch_frames(&base, WalCursor { seq: 1, off: 0 }, 1 << 20).unwrap());
+        let c = chunk(fetch_frames(&base, WalCursor { seq: 1, off: 0 }, 1 << 20, None).unwrap());
         assert_eq!(scan_frames(&c.frames).0, vec![WalRecord::Delete { id: 2 }]);
         cleanup(&base);
     }
@@ -868,11 +1211,117 @@ mod tests {
         let dir = std::env::temp_dir()
             .join(format!("bst_wal_{}_{}_missing", std::process::id(), line!()));
         let base = dir.join("never-created.wal");
-        let c = chunk(fetch_frames(&base, WalCursor::default(), 1024).unwrap());
+        let c = chunk(fetch_frames(&base, WalCursor::default(), 1024, None).unwrap());
         assert!(c.frames.is_empty());
         assert!(matches!(
-            fetch_frames(&base, WalCursor { seq: 3, off: 0 }, 1024).unwrap(),
+            fetch_frames(&base, WalCursor { seq: 3, off: 0 }, 1024, None).unwrap(),
             WalFetch::Gap
         ));
+    }
+
+    #[test]
+    fn group_commit_one_fsync_covers_every_buffered_record() {
+        let base = tmp_base("group");
+        let (mut wal, _, _) = Wal::open(&base, WalSync::Always).unwrap();
+        let group = wal.enable_group(0, 0);
+        let mut last = 0;
+        for r in sample_records() {
+            last = wal.append(&r).unwrap();
+        }
+        // One leader fsync publishes the whole group.
+        let out = group.wait_durable(last, || panic!("no abort expected")).unwrap();
+        assert_eq!((out.fsyncs, out.records), (1, 4));
+        // Earlier LSNs are already under the watermark: no new fsync.
+        let out = group.wait_durable(1, || panic!("no abort expected")).unwrap();
+        assert_eq!((out.fsyncs, out.records), (0, 0));
+        assert_eq!(group.durable_cursor(), wal.cursor());
+        drop(wal);
+        let (_, recs, _) = Wal::open(&base, WalSync::Always).unwrap();
+        assert_eq!(recs, sample_records());
+        cleanup(&base);
+    }
+
+    #[test]
+    fn failed_group_fsync_nacks_the_group_and_retries_on_the_next() {
+        let base = tmp_base("groupfail");
+        let (mut wal, _, _) = Wal::open(&base, WalSync::Always).unwrap();
+        let group = wal.enable_group(0, 0);
+        let a = wal.append(&WalRecord::Delete { id: 1 }).unwrap();
+        group.wait_durable(a, || panic!("no abort expected")).unwrap();
+        let b = wal.append(&WalRecord::Delete { id: 2 }).unwrap();
+        let c = wal.append(&WalRecord::Delete { id: 3 }).unwrap();
+        let scope = base.to_string_lossy().into_owned();
+        failpoint::arm_scoped("wal.sync", &scope, 0, 1, failpoint::Action::Error);
+        let err = group.wait_durable(c, || wal.group_abort());
+        failpoint::clear("wal.sync");
+        assert!(err.is_err(), "leader propagates the fsync failure");
+        // Every LSN in the failed group errors, including ones the
+        // leader did not wait for.
+        assert!(group.wait_durable(b, || panic!("no second abort")).is_err());
+        // The failed frontier is what replication may serve: nothing
+        // past the last successful fsync.
+        assert_eq!(group.durable_cursor().off as usize, FRAME_HEADER + 5);
+        // The log accepts new appends, and the next group's fsync
+        // retries the failed span — the NACKed records become durable
+        // after all (a false NACK, never a false ack).
+        let d = wal.append(&WalRecord::Delete { id: 9 }).unwrap();
+        assert!(d > c, "LSNs are never reused after a failure");
+        let out = group.wait_durable(d, || panic!("no abort expected")).unwrap();
+        assert_eq!((out.fsyncs, out.records), (1, 3), "retry covers b, c and d");
+        assert_eq!(group.durable_cursor(), wal.cursor());
+        drop(wal);
+        let (_, recs, _) = Wal::open(&base, WalSync::Always).unwrap();
+        assert_eq!(
+            recs,
+            vec![
+                WalRecord::Delete { id: 1 },
+                WalRecord::Delete { id: 2 },
+                WalRecord::Delete { id: 3 },
+                WalRecord::Delete { id: 9 },
+            ],
+            "the re-staged span kept the record sequence gap-free"
+        );
+        cleanup(&base);
+    }
+
+    #[test]
+    fn rotation_drains_the_open_group() {
+        let base = tmp_base("groupdrain");
+        let (mut wal, _, _) = Wal::open(&base, WalSync::Always).unwrap();
+        let group = wal.enable_group(0, 0);
+        let a = wal.append(&WalRecord::Delete { id: 1 }).unwrap();
+        wal.rotate_begin().unwrap();
+        // The fence fsynced the old segment: the record is durable
+        // without any leader running.
+        let out = group.wait_durable(a, || panic!("no abort expected")).unwrap();
+        assert_eq!(out.fsyncs, 0);
+        assert_eq!(group.durable_cursor(), WalCursor { seq: 1, off: 0 });
+        wal.rotate_commit().unwrap();
+        drop(wal);
+        let (_, recs, _) = Wal::open(&base, WalSync::Always).unwrap();
+        assert!(recs.is_empty(), "rotation committed past the drained record");
+        cleanup(&base);
+    }
+
+    #[test]
+    fn fetch_frames_clamps_to_the_durable_frontier() {
+        let base = tmp_base("clamp");
+        let (mut wal, _, _) = Wal::open(&base, WalSync::Always).unwrap();
+        let group = wal.enable_group(0, 0);
+        let a = wal.append(&WalRecord::Delete { id: 1 }).unwrap();
+        group.wait_durable(a, || panic!("no abort expected")).unwrap();
+        let durable = group.durable_cursor();
+        let _ = wal.append(&WalRecord::Delete { id: 2 }).unwrap();
+        // Unclamped, the buffered record is visible; clamped, the
+        // fetch stops exactly at the watermark and reports caught-up.
+        let all = chunk(fetch_frames(&base, WalCursor::default(), 1 << 20, None).unwrap());
+        assert_eq!(all.records, 2);
+        let c = chunk(fetch_frames(&base, WalCursor::default(), 1 << 20, Some(durable)).unwrap());
+        assert_eq!(c.records, 1);
+        assert_eq!(c.next, durable);
+        let c2 = chunk(fetch_frames(&base, durable, 1 << 20, Some(durable)).unwrap());
+        assert!(c2.frames.is_empty());
+        assert_eq!(c2.next, durable);
+        cleanup(&base);
     }
 }

@@ -219,6 +219,170 @@ fn prop_every_wal_prefix_replays_to_acked_state() {
     }
 }
 
+/// Group commit (PR 10) under concurrent writers: every acknowledged
+/// batch must be durable at exactly the ids its ack returned, the
+/// record stream must stay gap-free (ids are reserved under the insert
+/// lock in log order even when the fsyncs coalesce), and every
+/// byte-prefix of the log — a crash mid-group — must still replay to a
+/// record-boundary prefix. One fsync may cover many records, but never
+/// fewer records than were acknowledged.
+#[test]
+fn prop_concurrent_group_commit_acks_are_durable_and_prefixes_replay() {
+    const WRITERS: usize = 4;
+    const BATCHES: usize = 6;
+    for &(b, l) in SHAPES {
+        let mut rng = Rng::new((0x4C7 + b * 131 + l) as u64);
+        let centers: Vec<Vec<u8>> = (0..6)
+            .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+            .collect();
+        let base: Vec<Vec<u8>> = (0..40)
+            .map(|_| random_row(&mut rng, b, l, &centers))
+            .collect();
+        let set = SketchSet::from_rows(b, l, &base);
+
+        let gen_dir = fresh_dir(&format!("group_{b}"));
+        let wal_base = gen_dir.join("engine.wal");
+        let writer = Engine::build(&set, 3, &ShardIndexKind::Bst(BstConfig::default()));
+        // `attach_wal` under `always` enables group commit by default.
+        writer.attach_wal(&wal_base, WalSync::Always).unwrap();
+
+        // Concurrent writers, each recording the id range every ack
+        // returned alongside the rows it wrote.
+        let acked: Vec<(u32, Vec<Vec<u8>>)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..WRITERS)
+                .map(|w| {
+                    let writer = &writer;
+                    let centers = &centers;
+                    let mut trng = Rng::new((0x9100 + w * 17 + b * 3 + l) as u64);
+                    s.spawn(move || {
+                        let mut acks = Vec::new();
+                        for _ in 0..BATCHES {
+                            let m = 1 + trng.below_usize(5);
+                            let batch: Vec<Vec<u8>> = (0..m)
+                                .map(|_| random_row(&mut trng, b, l, centers))
+                                .collect();
+                            let range = writer.insert_batch(&batch).unwrap();
+                            assert_eq!(range.len(), batch.len());
+                            acks.push((range.start, batch));
+                            if w == 0 && trng.below(3) == 0 {
+                                // One writer mixes in deletes so the log
+                                // interleaves record kinds mid-group.
+                                let _ = writer.delete(trng.below(writer.n() as u64) as u32);
+                            }
+                        }
+                        acks
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        let metrics = writer.metrics();
+        let fsyncs = metrics.wal_fsyncs.load(std::sync::atomic::Ordering::Relaxed);
+        let covered = metrics.wal_group_records.load(std::sync::atomic::Ordering::Relaxed);
+        drop(writer);
+
+        // The full log is a gap-free record sequence (Oracle::new
+        // asserts insert-id contiguity) containing every acked batch at
+        // exactly its acked ids.
+        let all = wal::read_records(&wal_base).unwrap();
+        let oracle = Oracle::new(&base, &all, l);
+        let inserted: usize = acked.iter().map(|(_, rows)| rows.len()).sum();
+        assert_eq!(oracle.rows.len(), base.len() + inserted, "every acked row is in the log");
+        for (start, batch) in &acked {
+            for (j, row) in batch.iter().enumerate() {
+                assert_eq!(&oracle.rows[*start as usize + j], row, "acked id is durable");
+            }
+        }
+        // Acks never outran the watermark: the fsyncs the engine
+        // accounted for cover every record in the log, in fewer (or
+        // equal) syscalls than records.
+        assert_eq!(covered, all.len() as u64, "watermark publishes covered the whole log");
+        assert!((1..=covered).contains(&fsyncs), "fsyncs={fsyncs} records={covered}");
+
+        // Sampled byte-prefixes (crashes mid-group) replay to exactly
+        // the surviving record prefix.
+        let full = std::fs::read(gen_dir.join("engine.wal.0")).unwrap();
+        let replay_dir = std::env::temp_dir()
+            .join(format!("bst_prop_wal_{}_group_replay_{b}", std::process::id()));
+        let mut cuts = vec![0usize, full.len()];
+        cuts.extend((0..6).map(|_| rng.below_usize(full.len() + 1)));
+        for cut in cuts {
+            let base_path = prefix_log(&replay_dir, &full[..cut]);
+            let recs = wal::read_records(&base_path).unwrap();
+            assert_eq!(recs, all[..recs.len()], "concurrent log cut {cut} is a prefix");
+            let cut_oracle = Oracle::new(&base, &recs, l);
+            let engine = Engine::build(&set, 2, &ShardIndexKind::Bst(BstConfig::default()));
+            engine.attach_wal(&base_path, WalSync::Always).unwrap();
+            check_engine(&engine, &cut_oracle, &mut rng, b, l, &format!("group cut {cut}"));
+        }
+        for d in [&gen_dir, &replay_dir] {
+            let _ = std::fs::remove_dir_all(d);
+        }
+    }
+}
+
+/// A mid-group fsync failure (injected at the `wal.sync` failpoint)
+/// must fail the write — no false acks — while the log stays
+/// appendable and gap-free: the failed span is re-staged and the next
+/// group's successful fsync carries it to disk, so replay sees every
+/// record in id order. Needs the failpoint registry, so this test only
+/// builds with `--features failpoints`.
+#[cfg(feature = "failpoints")]
+#[test]
+fn group_fsync_failure_nacks_the_write_and_log_stays_appendable() {
+    use bst::util::failpoint::{self, Action};
+    let (b, l) = (2, 12);
+    let mut rng = Rng::new(0x5D3);
+    let centers: Vec<Vec<u8>> = (0..6)
+        .map(|_| (0..l).map(|_| rng.below(1 << b) as u8).collect())
+        .collect();
+    let base: Vec<Vec<u8>> = (0..30)
+        .map(|_| random_row(&mut rng, b, l, &centers))
+        .collect();
+    let set = SketchSet::from_rows(b, l, &base);
+
+    let dir = fresh_dir("groupfail");
+    let wal_base = dir.join("engine.wal");
+    let writer = Engine::build(&set, 3, &ShardIndexKind::Bst(BstConfig::default()));
+    writer.attach_wal(&wal_base, WalSync::Always).unwrap();
+
+    let a: Vec<Vec<u8>> = (0..4).map(|_| random_row(&mut rng, b, l, &centers)).collect();
+    writer.insert_batch(&a).unwrap();
+
+    // The next group's leader fsync fails exactly once.
+    let scope = wal_base.to_string_lossy().into_owned();
+    failpoint::arm_scoped("wal.sync", &scope, 0, 1, Action::Error);
+    let bad: Vec<Vec<u8>> = (0..3).map(|_| random_row(&mut rng, b, l, &centers)).collect();
+    let err = writer.insert_batch(&bad).expect_err("failed group fsync must NACK the write");
+    failpoint::clear("wal.sync");
+    assert!(err.contains("not acknowledged"), "unexpected error: {err}");
+
+    // The log is still a live writer: the next write groups with the
+    // re-staged span and both reach disk.
+    let c: Vec<Vec<u8>> = (0..2).map(|_| random_row(&mut rng, b, l, &centers)).collect();
+    let range = writer.insert_batch(&c).expect("log stays appendable after a failed group");
+    assert_eq!(range.start as usize, base.len() + a.len() + bad.len(), "ids stay gap-free");
+    drop(writer);
+
+    // Replay: acked batches are all present; the NACKed batch rode the
+    // retry to disk (a false NACK — allowed; a missing acked row would
+    // be a false ack — never allowed). The record stream is gap-free
+    // (Oracle::new asserts contiguity).
+    let recs = wal::read_records(&wal_base).unwrap();
+    let oracle = Oracle::new(&base, &recs, l);
+    assert_eq!(oracle.rows.len(), base.len() + a.len() + bad.len() + c.len());
+    for (i, row) in a.iter().enumerate() {
+        assert_eq!(&oracle.rows[base.len() + i], row, "acked pre-failure row durable");
+    }
+    for (i, row) in c.iter().enumerate() {
+        assert_eq!(&oracle.rows[range.start as usize + i], row, "acked post-failure row durable");
+    }
+    let engine = Engine::build(&set, 2, &ShardIndexKind::Bst(BstConfig::default()));
+    engine.attach_wal(&wal_base, WalSync::Always).unwrap();
+    check_engine(&engine, &oracle, &mut rng, b, l, "post-failure replay");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Replay composes with snapshots: recovering into a *loaded* engine
 /// only applies records past the snapshot's id high-water mark, and a
 /// stale pre-rotation segment (what a crash between `rotate_begin` and
